@@ -1,0 +1,63 @@
+//! §4.2 "Add a CPU or a GPU?" — the paper's system-builder decision
+//! table, regenerated from the calibrated models: given a machine with
+//! one quad-core CPU, which upgrade buys more hashing throughput for a
+//! storage workload — a second CPU socket or a GPU card?
+//!
+//!     cargo run --release --example add_cpu_or_gpu
+
+use gpustore::crystal::model::CpuModel;
+use gpustore::metrics::Table;
+use gpustore::sim::{GpuOpts, GpuPipeline};
+use gpustore::util::human_bytes;
+
+fn main() {
+    let cpu = CpuModel::xeon_2008();
+    let gpu = GpuPipeline::default();
+    let mb = 1024.0 * 1024.0;
+
+    println!("== Add a CPU or a GPU? (paper section 4.2) ==\n");
+    println!("baseline: single core of the 2.33 GHz quad-core Xeon\n");
+
+    for (name, sliding) in [("sliding-window hashing", true), ("direct hashing", false)] {
+        let mut t = Table::new(&[
+            "block",
+            "1-core MB/s",
+            "dual-socket MB/s (16t)",
+            "GPU MB/s (CrystalGPU)",
+            "dual-CPU speedup",
+            "GPU speedup",
+            "GPU : dual-CPU",
+        ]);
+        for block in [64 << 10, 1 << 20, 16 << 20, 64 << 20, 96 << 20usize] {
+            let single = if sliding {
+                cpu.scaled_bps(cpu.window_md5_bps, 1)
+            } else {
+                cpu.scaled_bps(cpu.md5_bps, 1)
+            };
+            let dual = if sliding {
+                cpu.scaled_bps(cpu.window_md5_bps, 16)
+            } else {
+                cpu.scaled_bps(cpu.md5_bps, 16)
+            };
+            let g = gpu.stream_bps(sliding, block, GpuOpts::OVERLAP);
+            t.row(vec![
+                human_bytes(block as u64),
+                format!("{:.0}", single / mb),
+                format!("{:.0}", dual / mb),
+                format!("{:.0}", g / mb),
+                format!("{:.1}x", dual / single),
+                format!("{:.0}x", g / single),
+                format!("{:.1}x", g / dual),
+            ]);
+        }
+        println!("-- {name} --\n{}\n", t.markdown());
+    }
+
+    println!(
+        "Paper's conclusion, reproduced: the dual-socket upgrade caps \
+         sliding-window hashing near the 1 Gbps wire (~129 MB/s) while \
+         the GPU clears it by an order of magnitude — for hashing-based \
+         storage workloads the GPU is the better spend at comparable \
+         market price."
+    );
+}

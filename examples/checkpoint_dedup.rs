@@ -1,0 +1,138 @@
+//! END-TO-END driver (DESIGN.md deliverable): run the paper's checkpoint
+//! workload through the FULL stack — checkpoint-stream generator ->
+//! SAI write buffering -> content-based chunking with sliding-window
+//! hashes computed by the AOT-compiled Pallas kernel on PJRT ->
+//! parallel Merkle–Damgård block hashing on the same device -> dedup
+//! against the previous image's block-map -> striped, bandwidth-shaped
+//! transfer to 4 storage nodes -> manager commit.
+//!
+//! Reports the paper's Fig-11 metrics (write throughput + detected
+//! similarity) for fixed-block and content-based chunking, CPU and
+//! accelerator engines.  Results are recorded in EXPERIMENTS.md.
+//!
+//!     make artifacts && cargo run --release --example checkpoint_dedup
+//!     (args: [images] [image-MB])
+
+use std::sync::Arc;
+
+use gpustore::config::{CaMode, ClientConfig, ClusterConfig};
+use gpustore::hashgpu::{build_engine, CpuEngine, WindowHashMode};
+use gpustore::metrics::Table;
+use gpustore::store::Cluster;
+use gpustore::util::human_bytes;
+use gpustore::workload::{CheckpointStream, MutationProfile};
+
+fn cfg_for(mode: CaMode, gpu: bool) -> ClientConfig {
+    let mut cfg = match (mode, gpu) {
+        (CaMode::Fixed, false) => ClientConfig::ca_cpu_fixed(8),
+        (CaMode::Fixed, true) => ClientConfig::ca_gpu_fixed(),
+        (CaMode::Cdc, false) => ClientConfig::ca_cpu_cdc(8),
+        (CaMode::Cdc, true) => ClientConfig::ca_gpu_cdc(),
+        _ => ClientConfig::non_ca(),
+    };
+    // Test-scale chunk geometry: ~64 KB average chunks on ~32 MB images
+    // keeps the same chunks-per-image regime as the paper's 1.2 MB
+    // chunks on 264.7 MB images.
+    cfg.block_size = 64 * 1024;
+    cfg.cdc_min = 16 * 1024;
+    cfg.cdc_max = 256 * 1024;
+    cfg.cdc_mask = (1 << 16) - 1;
+    cfg.write_buffer = 1 << 20;
+    cfg
+}
+
+fn main() -> gpustore::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let images: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(8);
+    let image_mb: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(8);
+
+    println!(
+        "== checkpoint_dedup: {} images x {} MB through the full stack ==",
+        images, image_mb
+    );
+    let cluster = Cluster::spawn(ClusterConfig::default())?;
+    let imgs: Vec<Vec<u8>> = CheckpointStream::new(
+        images,
+        image_mb << 20,
+        MutationProfile::paper_default(),
+        0xBEEF,
+    )
+    .collect();
+    let total: u64 = imgs.iter().map(|i| i.len() as u64).sum();
+    println!(
+        "generated {} of checkpoint data ({} images)",
+        human_bytes(total),
+        imgs.len()
+    );
+
+    let mut table = Table::new(&[
+        "config",
+        "engine",
+        "tput MB/s",
+        "similarity %",
+        "blocks",
+        "hash s",
+    ]);
+
+    for (label, mode, gpu) in [
+        ("non-CA", CaMode::None, false),
+        ("fixed", CaMode::Fixed, false),
+        ("fixed", CaMode::Fixed, true),
+        ("CBC", CaMode::Cdc, false),
+        ("CBC", CaMode::Cdc, true),
+    ] {
+        let cfg = cfg_for(mode, gpu);
+        let engine: Arc<dyn gpustore::hashgpu::HashEngine> = if gpu {
+            build_engine(&cfg, None)? // PJRT-backed crystal runtime
+        } else if mode == CaMode::Cdc {
+            // CPU CDC baseline: the paper's MD5-per-window implementation
+            // is the honest (slow) comparator.
+            Arc::new(CpuEngine::new(8, cfg.segment_bytes, WindowHashMode::PaperMd5))
+        } else {
+            Arc::new(CpuEngine::new(8, cfg.segment_bytes, WindowHashMode::Rolling))
+        };
+        let sai = cluster.client(cfg, engine)?;
+
+        let file = format!("ckpt-{label}-{}", if gpu { "gpu" } else { "cpu" });
+        let mut bytes = 0u64;
+        let mut secs = 0.0;
+        let mut hash_secs = 0.0;
+        let mut sims = Vec::new();
+        let mut blocks = 0;
+        for (i, img) in imgs.iter().enumerate() {
+            let r = sai.write_file(&file, img)?;
+            bytes += r.bytes;
+            secs += r.elapsed.as_secs_f64();
+            hash_secs += r.hash_secs;
+            blocks = r.blocks;
+            if i > 0 {
+                sims.push(r.similarity);
+            }
+        }
+        let sim = 100.0 * sims.iter().sum::<f64>() / sims.len().max(1) as f64;
+        let tput = bytes as f64 / (1024.0 * 1024.0) / secs;
+        let engine_name = if gpu { "pjrt-gpu" } else { "cpu" };
+        println!(
+            "{label:>6}/{engine_name:<8}  {tput:7.1} MB/s   sim {sim:5.1}%   hash {hash_secs:6.2}s"
+        );
+        table.row(vec![
+            label.into(),
+            engine_name.into(),
+            format!("{tput:.1}"),
+            format!("{sim:.1}"),
+            blocks.to_string(),
+            format!("{hash_secs:.2}"),
+        ]);
+
+        // Read-back integrity spot check on the last version.
+        let back = sai.read_file(&file)?;
+        assert_eq!(back, *imgs.last().unwrap(), "read-back mismatch");
+    }
+
+    println!("\n{}", table.markdown());
+    println!(
+        "\nShape checks (paper Fig 11): CBC detects 3-4x the similarity of \
+         fixed blocks; the accelerator removes the CBC hashing bottleneck."
+    );
+    Ok(())
+}

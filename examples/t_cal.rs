@@ -1,0 +1,18 @@
+use gpustore::workload::checkpoint::*;
+use gpustore::chunking::ChunkParams;
+fn main() {
+    for (ins, del, ow, frac) in [(2usize,1usize,20usize,0.004f64),(1,1,10,0.002),(2,1,10,0.002),(1,1,6,0.0015),(2,0,8,0.002)] {
+        let prof = MutationProfile { insertions: ins, insert_max: 512, deletions: del, delete_max: 512, overwrites: ow, overwrite_frac: frac };
+        let mut ftot=0.0; let mut ctot=0.0; let mut n=0.0;
+        for seed in [4u64,5,6] {
+            let imgs: Vec<_> = CheckpointStream::new(4, 8<<20, prof, seed).collect();
+            let params = ChunkParams::with_avg_size(64<<10);
+            for w in imgs.windows(2) {
+                ftot += fixed_similarity(&w[0], &w[1], 64<<10);
+                ctot += cdc_similarity(&w[0], &w[1], params);
+                n += 1.0;
+            }
+        }
+        println!("ins={ins} del={del} ow={ow} frac={frac}: fixed={:.3} cdc={:.3}", ftot/n, ctot/n);
+    }
+}

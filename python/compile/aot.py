@@ -1,0 +1,121 @@
+# AOT compile path: lower every (graph, shape-bucket) variant to HLO TEXT
+# and write artifacts/ + manifest.json.  Runs once at build time
+# (`make artifacts`); the rust runtime (rust/src/runtime/) loads the text
+# via HloModuleProto::from_text_file and compiles it on the PJRT CPU
+# client.  Python is never on the request path.
+#
+# Emit HLO text, NOT .serialize(): the image's xla_extension 0.5.1
+# rejects jax>=0.5's 64-bit-id protos (see /opt/xla-example/README.md).
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import model
+from .kernels.md5 import pad_message
+from .kernels.rolling import DEFAULT_P, DEFAULT_WINDOW
+
+# ---------------------------------------------------------------------------
+# Shape buckets.  A direct-hash job of B bytes with segment size S uses the
+# smallest lane bucket >= ceil(B/S); a sliding-window job uses the smallest
+# n_bytes bucket >= buffer size.  The rust side (runtime/artifacts.rs)
+# mirrors this bucketing logic and splits oversized jobs.
+# ---------------------------------------------------------------------------
+SEGMENT_BUCKETS = {
+    256: [16, 64, 256],          # small blocks: 4 KB .. 64 KB per job
+    4096: [16, 64, 256, 1024],   # large blocks: 64 KB .. 4 MB per job
+}
+ROLLING_BYTES = [65536, 262144, 1048576, 4194304]
+
+
+def padded_words(seg_bytes: int) -> int:
+    """Words per segment after RFC1321 padding (host pre-pads)."""
+    return len(pad_message(b"\x00" * seg_bytes)) // 4
+
+
+def build_manifest():
+    arts = []
+    for seg, lane_list in SEGMENT_BUCKETS.items():
+        words = padded_words(seg)
+        n_blocks = words // 16
+        for lanes in lane_list:
+            arts.append(
+                dict(
+                    name=f"md5_seg{seg}_l{lanes}",
+                    kind="direct",
+                    seg_bytes=seg,
+                    lanes=lanes,
+                    n_blocks=n_blocks,
+                    in_words=[lanes, words],
+                )
+            )
+    for n in ROLLING_BYTES:
+        arts.append(
+            dict(
+                name=f"roll_{n}_w{DEFAULT_WINDOW}",
+                kind="sliding",
+                n_bytes=n,
+                window=DEFAULT_WINDOW,
+                p=DEFAULT_P,
+                in_words=[n // 4],
+                out_len=n - DEFAULT_WINDOW + 1,
+            )
+        )
+    return arts
+
+
+def lower_one(art: dict) -> str:
+    u32 = jnp.uint32
+    if art["kind"] == "direct":
+        spec = jax.ShapeDtypeStruct(tuple(art["in_words"]), u32)
+        nblk_spec = jax.ShapeDtypeStruct((art["lanes"],), u32)
+        fn = functools.partial(model.direct_hash, n_blocks=art["n_blocks"])
+        return model.lower_to_hlo_text(fn, spec, nblk_spec)
+    elif art["kind"] == "sliding":
+        spec = jax.ShapeDtypeStruct(tuple(art["in_words"]), u32)
+        fn = functools.partial(
+            model.sliding_window, window=art["window"], p=art["p"]
+        )
+        return model.lower_to_hlo_text(fn, spec)
+    raise ValueError(art["kind"])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    arts = build_manifest()
+    only = set(args.only.split(",")) if args.only else None
+
+    for art in arts:
+        if only is not None and art["name"] not in only:
+            art["path"] = art["name"] + ".hlo.txt"  # keep manifest complete
+            continue
+        path = os.path.join(args.outdir, art["name"] + ".hlo.txt")
+        text = lower_one(art)
+        with open(path, "w") as f:
+            f.write(text)
+        art["path"] = art["name"] + ".hlo.txt"
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = dict(
+        version=1,
+        window=DEFAULT_WINDOW,
+        p=DEFAULT_P,
+        segment_buckets={str(k): v for k, v in SEGMENT_BUCKETS.items()},
+        rolling_bytes=ROLLING_BYTES,
+        artifacts=arts,
+    )
+    with open(os.path.join(args.outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(arts)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+# L1 Pallas kernel: batched MD5 (parallel Merkle-Damgard construction).
+#
+# The paper's HashGPU "direct hashing" primitive splits a large data block
+# into fixed-size segments and hashes every segment concurrently (one CUDA
+# thread per segment); the CPU then hashes the concatenation of the
+# intermediate digests (Damgard's parallel construction).  On TPU the
+# natural mapping is one *vector lane* per segment: the MD5 state
+# (a, b, c, d) is a u32 vector across the segment axis and the 64 rounds
+# are unrolled as lane-parallel u32 ops.  The block loop is a fori_loop,
+# so the lowered HLO is a While over a fully-vectorised body.
+#
+# Input is HOST-PRE-PADDED: each segment is already padded per RFC 1321
+# (0x80, zeros, 64-bit bit-length) to `n_blocks * 16` little-endian u32
+# words.  The kernel is therefore shape-static: u32[lanes, n_blocks*16]
+# -> u32[lanes, 4] (the digest words A, B, C, D, little-endian).
+#
+# interpret=True everywhere: real-TPU lowering emits a Mosaic custom-call
+# the CPU PJRT plugin cannot execute (see /opt/xla-example/README.md).
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# RFC 1321 round constants: K[i] = floor(2^32 * abs(sin(i + 1))).
+K = tuple(int(abs(math.sin(i + 1)) * 2**32) & 0xFFFFFFFF for i in range(64))
+
+# Per-round left-rotate amounts.
+S = (
+    7, 12, 17, 22, 7, 12, 17, 22, 7, 12, 17, 22, 7, 12, 17, 22,
+    5, 9, 14, 20, 5, 9, 14, 20, 5, 9, 14, 20, 5, 9, 14, 20,
+    4, 11, 16, 23, 4, 11, 16, 23, 4, 11, 16, 23, 4, 11, 16, 23,
+    6, 10, 15, 21, 6, 10, 15, 21, 6, 10, 15, 21, 6, 10, 15, 21,
+)
+
+INIT = (0x67452301, 0xEFCDAB89, 0x98BADCFE, 0x10325476)
+
+
+def _rotl(x, s):
+    return (x << jnp.uint32(s)) | (x >> jnp.uint32(32 - s))
+
+
+def _compress(state, block):
+    """One MD5 compression over a [lanes, 16] u32 block. state: 4x[lanes]."""
+    a0, b0, c0, d0 = state
+    a, b, c, d = a0, b0, c0, d0
+    for i in range(64):
+        if i < 16:
+            f = (b & c) | (~b & d)
+            g = i
+        elif i < 32:
+            f = (d & b) | (~d & c)
+            g = (5 * i + 1) % 16
+        elif i < 48:
+            f = b ^ c ^ d
+            g = (3 * i + 5) % 16
+        else:
+            f = c ^ (b | ~d)
+            g = (7 * i) % 16
+        tmp = d
+        d = c
+        c = b
+        sum_ = a + f + jnp.uint32(K[i]) + block[:, g]
+        b = b + _rotl(sum_, S[i])
+        a = tmp
+    return (a0 + a, b0 + b, c0 + c, d0 + d)
+
+
+def _md5_kernel(x_ref, nblk_ref, o_ref, *, n_blocks):
+    x = x_ref[...]  # [lanes, n_blocks * 16] u32, pre-padded
+    nblk = nblk_ref[...]  # u32[lanes]: active block count per lane
+    lanes = x.shape[0]
+    init = tuple(jnp.full((lanes,), jnp.uint32(v)) for v in INIT)
+
+    def body(blk, state):
+        block = jax.lax.dynamic_slice_in_dim(x, blk * 16, 16, axis=1)
+        new = _compress(state, block)
+        # Lanes whose message ended before this block keep their state:
+        # this is how one fixed-shape artifact hashes variable-length
+        # segments (the last segment of a data block is usually short).
+        active = blk.astype(jnp.uint32) < nblk
+        return tuple(jnp.where(active, n, s) for n, s in zip(new, state))
+
+    a, b, c, d = jax.lax.fori_loop(0, n_blocks, body, init)
+    o_ref[...] = jnp.stack([a, b, c, d], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("n_blocks",))
+def md5_batch(x, nblk, *, n_blocks):
+    """MD5 digests of a batch of pre-padded segments.
+
+    x: u32[lanes, n_blocks * 16] little-endian words; each lane holds one
+    RFC1321-padded message occupying its first `nblk[lane]` 64-byte
+    blocks (the rest must be zero).  Returns u32[lanes, 4] digest words
+    (A, B, C, D); serialising each word little-endian yields the standard
+    16-byte MD5 digest.
+    """
+    lanes, words = x.shape
+    assert words == n_blocks * 16, (words, n_blocks)
+    assert nblk.shape == (lanes,)
+    return pl.pallas_call(
+        functools.partial(_md5_kernel, n_blocks=n_blocks),
+        out_shape=jax.ShapeDtypeStruct((lanes, 4), jnp.uint32),
+        interpret=True,
+    )(x, nblk)
+
+
+def pad_message(data: bytes) -> bytes:
+    """RFC 1321 padding (host side; mirrors rust/src/hash/md5.rs)."""
+    bit_len = 8 * len(data)
+    data = data + b"\x80"
+    data = data + b"\x00" * ((56 - len(data)) % 64)
+    return data + bit_len.to_bytes(8, "little")
+
+
+def pack_segments(segments, n_blocks=None):
+    """Pad each segment and pack into (u32[lanes, n_blocks*16] words,
+    u32[lanes] active block counts).  `n_blocks` defaults to the largest
+    segment's padded block count (segments may have different lengths)."""
+    import numpy as np
+
+    padded = [pad_message(s) for s in segments]
+    if n_blocks is None:
+        n_blocks = max(len(p) for p in padded) // 64
+    lanes = len(segments)
+    arr = np.zeros((lanes, n_blocks * 16), dtype=np.uint32)
+    nblk = np.zeros(lanes, dtype=np.uint32)
+    for i, p in enumerate(padded):
+        assert len(p) <= n_blocks * 64, "segment exceeds artifact capacity"
+        w = np.frombuffer(p, dtype="<u4")
+        arr[i, : len(w)] = w
+        nblk[i] = len(p) // 64
+    return jnp.asarray(arr), jnp.asarray(nblk)

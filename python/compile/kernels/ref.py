@@ -1,0 +1,46 @@
+# Pure-python/numpy correctness oracles for the Pallas kernels.
+#
+# md5_ref      — hashlib, the ground truth for kernels/md5.py.
+# rolling_ref  — direct O(n*W) wrapping-u32 evaluation of the polynomial
+#                fingerprint, ground truth for kernels/rolling.py (and for
+#                rust/src/hash/rolling.rs via shared test vectors).
+import hashlib
+
+import numpy as np
+
+from .rolling import DEFAULT_P, DEFAULT_WINDOW
+
+
+def md5_ref(segment: bytes) -> bytes:
+    return hashlib.md5(segment).digest()
+
+
+def md5_batch_ref(segments) -> np.ndarray:
+    """Digests as u32[lanes, 4] little-endian words (kernel layout)."""
+    out = [np.frombuffer(md5_ref(s), dtype="<u4") for s in segments]
+    return np.stack(out)
+
+
+def rolling_ref(data: bytes, window: int = DEFAULT_WINDOW, p: int = DEFAULT_P) -> np.ndarray:
+    """H(i) = sum b[i+j] * p^(W-1-j) mod 2^32 for every window start."""
+    b = np.frombuffer(data, dtype=np.uint8).astype(np.uint64)
+    n = len(b)
+    out = np.zeros(n - window + 1, dtype=np.uint64)
+    for i in range(n - window + 1):
+        h = np.uint64(0)
+        for j in range(window):
+            h = (h * np.uint64(p) + b[i + j]) & np.uint64(0xFFFFFFFF)
+        out[i] = h
+    return out.astype(np.uint32)
+
+
+def rolling_ref_fast(data: bytes, window: int = DEFAULT_WINDOW, p: int = DEFAULT_P) -> np.ndarray:
+    """Vectorised oracle (still independent of the kernel's prefix-scan
+    formulation): Horner evaluation across all windows at once."""
+    b = np.frombuffer(data, dtype=np.uint8).astype(np.uint32)
+    n = len(b)
+    n_out = n - window + 1
+    h = np.zeros(n_out, dtype=np.uint32)
+    for j in range(window):
+        h = h * np.uint32(p) + b[j : j + n_out]
+    return h

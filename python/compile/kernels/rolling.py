@@ -1,0 +1,138 @@
+# L1 Pallas kernel: sliding-window rolling fingerprint (content-based
+# chunking's hot loop).
+#
+# The paper's HashGPU "sliding window hashing" hashes every overlapping
+# W-byte window of a buffer and declares a chunk boundary where
+# (hash & mask) == magic (the LBFS construction).  CUDA's formulation is
+# one thread per window with shared-memory staging; the TPU-natural
+# formulation (DESIGN.md par.4 Hardware-Adaptation) is a prefix-scan
+# polynomial fingerprint:
+#
+#     H(i) = sum_{j=0..W-1} b[i+j] * p^(W-1-j)            (mod 2^32)
+#          = p^(i+W-1) * (S(i+W) - S(i))                  (mod 2^32)
+#     S(k) = sum_{j<k} b[j] * p^(-j)                      (mod 2^32)
+#
+# with p odd so p^(-1) mod 2^32 exists.  One cumsum + two elementwise
+# passes replace the paper's ~100K scalar GPU threads; all arithmetic is
+# natural wrapping u32.  Boundary selection (mask/magic compare, min/max
+# chunk bounds, leftover carry) stays on the host — exactly like the
+# paper, where "the CPU is used to check the hash values and decide on
+# block boundaries".
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default polynomial base: odd, randomly-chosen constant, shared with
+# rust/src/hash/rolling.rs (must match bit-for-bit).
+DEFAULT_P = 0x01000193  # FNV prime; odd => invertible mod 2^32
+DEFAULT_WINDOW = 48
+
+
+def mod_inverse_pow2(p: int, bits: int = 32) -> int:
+    """Inverse of odd p modulo 2^bits (Newton iteration)."""
+    assert p % 2 == 1, "p must be odd"
+    x = p  # correct to 3 bits
+    for _ in range(6):  # doubles correct bits each round: 3->6->...->96
+        x = (x * (2 - p * x)) % (1 << bits)
+    return x % (1 << bits)
+
+
+def _unpack_bytes(words):
+    """u32[n] little-endian words -> u32[4n] byte values (still u32)."""
+    shifts = jnp.uint32(8) * jnp.arange(4, dtype=jnp.uint32)
+    b = (words[:, None] >> shifts[None, :]) & jnp.uint32(0xFF)
+    return b.reshape(-1)
+
+
+def _pow_table(base: int, n: int):
+    """u32[n] with out[j] = base^j mod 2^32, computed with numpy at TRACE
+    time so it lowers to an HLO *constant* (zero runtime cost).  NOT
+    jnp.cumprod: that lowers to an O(n^2) reduce-window on the
+    xla_extension 0.5.1 CPU backend the rust runtime executes; and not an
+    on-device pow-by-index either — its log2(n) select passes were ~40%
+    of kernel runtime (EXPERIMENTS.md section Perf)."""
+    import numpy as np
+
+    out = np.empty(n, dtype=np.uint32)
+    acc = 1
+    b = base & 0xFFFFFFFF
+    for j in range(n):
+        out[j] = acc
+        acc = (acc * b) & 0xFFFFFFFF
+    return out
+
+
+def _prefix_sum_2level(x, row=512):
+    """Inclusive prefix sum via a two-level (blocked) Hillis–Steele scan:
+    log2(row) full-width passes + a tiny scan over row totals, instead of
+    log2(n) full-width passes.  On the unfused xla_extension 0.5.1 CPU
+    backend every pass materializes, so pass count ~ runtime."""
+    n = x.shape[0]
+    if n <= row:
+        k = 1
+        while k < n:
+            x = x + jnp.concatenate([jnp.zeros((k,), x.dtype), x[:-k]])
+            k *= 2
+        return x
+    assert n % row == 0, "bucket sizes are row-aligned"
+    rows = n // row
+    m = x.reshape(rows, row)
+    # Intra-row scan: log2(row) passes over the full array.
+    k = 1
+    while k < row:
+        shifted = jnp.pad(m[:, :-k], ((0, 0), (k, 0)))
+        m = m + shifted
+        k *= 2
+    # Row offsets: exclusive scan of row totals (tiny: n/row elements).
+    totals = m[:, -1]
+    k = 1
+    t = totals
+    while k < rows:
+        t = t + jnp.concatenate([jnp.zeros((k,), t.dtype), t[:-k]])
+        k *= 2
+    offsets = jnp.concatenate([jnp.zeros((1,), t.dtype), t[:-1]])
+    return (m + offsets[:, None]).reshape(n)
+
+
+def _rolling_kernel(x_ref, pinvpow_ref, ppow_ref, o_ref, *, window):
+    b = _unpack_bytes(x_ref[...])  # u32[n_bytes]
+    n = b.shape[0]
+    # pinvpow[j] = p^-j ; ppow[k] = p^k (compile-time constant tables,
+    # passed as inputs: pallas forbids captured array constants).
+    pinvpow = pinvpow_ref[...]
+    ppow = ppow_ref[...]
+    # S[k] = sum_{j<k} b[j] * p^-j, with S[0] = 0 (exclusive prefix).
+    s = jnp.concatenate(
+        [jnp.zeros((1,), jnp.uint32), _prefix_sum_2level(b * pinvpow)]
+    )
+    n_out = n - window + 1
+    win = s[window : window + n_out] - s[:n_out]  # S(i+W) - S(i)
+    o_ref[...] = ppow[window - 1 : window - 1 + n_out] * win
+
+
+@functools.partial(jax.jit, static_argnames=("window", "p"))
+def rolling_hash(x, *, window=DEFAULT_WINDOW, p=DEFAULT_P):
+    """Fingerprints of every overlapping `window`-byte window.
+
+    x: u32[n_words] little-endian packed bytes (n_bytes = 4 * n_words).
+    Returns u32[n_bytes - window + 1]: H(i) for each window start i.
+    """
+    n_bytes = 4 * x.shape[0]
+    assert n_bytes >= window
+    pinvpow = jnp.asarray(_pow_table(mod_inverse_pow2(p), n_bytes))
+    ppow = jnp.asarray(_pow_table(p, n_bytes))
+    return pl.pallas_call(
+        functools.partial(_rolling_kernel, window=window),
+        out_shape=jax.ShapeDtypeStruct((n_bytes - window + 1,), jnp.uint32),
+        interpret=True,
+    )(x, pinvpow, ppow)
+
+
+def pack_bytes(data: bytes):
+    """bytes -> u32[n/4] little-endian words (len must be 4-aligned)."""
+    import numpy as np
+
+    assert len(data) % 4 == 0, "pad to 4-byte multiple on the host"
+    return jnp.asarray(np.frombuffer(data, dtype="<u4"))

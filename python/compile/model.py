@@ -1,0 +1,60 @@
+# L2: the HashGPU compute graphs, as jax functions over the L1 Pallas
+# kernels.  These are what aot.py lowers to HLO; the rust coordinator
+# executes one compiled artifact per (graph, shape-bucket).
+#
+# Mirroring the paper's design, the graphs stop where the GPU stage stops:
+#   * direct_hash   — per-segment MD5 digests; the *final* hash of the
+#                     concatenated digests is computed on the host (rust),
+#                     exactly as HashGPU uses the CPU for its last stage.
+#   * sliding_window— per-offset rolling fingerprints; boundary selection
+#                     (mask/magic, min/max, leftover carry) is host-side.
+#   * sliding_window_flags — fused variant that also folds the boundary
+#                     predicate into the device graph (ablation: moves the
+#                     compare off the host at the cost of a fixed mask).
+import jax
+import jax.numpy as jnp
+
+from .kernels.md5 import md5_batch
+from .kernels.rolling import DEFAULT_P, DEFAULT_WINDOW, rolling_hash
+
+
+def direct_hash(x, nblk, *, n_blocks):
+    """(u32[lanes, n_blocks*16] padded segments, u32[lanes] active block
+    counts) -> u32[lanes, 4] digests."""
+    return (md5_batch(x, nblk, n_blocks=n_blocks),)
+
+
+def sliding_window(x, *, window=DEFAULT_WINDOW, p=DEFAULT_P):
+    """u32[n_words] packed bytes -> u32[4*n_words - window + 1] hashes."""
+    return (rolling_hash(x, window=window, p=p),)
+
+
+def sliding_window_flags(x, *, window=DEFAULT_WINDOW, p=DEFAULT_P,
+                         mask=0x0FFF, magic=0x78):
+    """Fused boundary predicate: returns hashes AND a u32 0/1 flag vector.
+
+    The paper keeps the compare on the CPU; this fused variant is the
+    ablation bench `ablate-fused-flags` (the flags output compresses the
+    host-side scan to a flag sweep but pins mask/magic at compile time).
+    """
+    h = rolling_hash(x, window=window, p=p)
+    flags = ((h & jnp.uint32(mask)) == jnp.uint32(magic)).astype(jnp.uint32)
+    return (h, flags)
+
+
+def lower_to_hlo_text(fn, *specs) -> str:
+    """jit(fn).lower(specs) -> HLO text via the stablehlo->XlaComputation
+    bridge.  Text (NOT .serialize()) is the interchange format: jax>=0.5
+    emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+    text parser reassigns ids (see /opt/xla-example/README.md)."""
+    from jax._src.lib import xla_client as xc
+
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the rolling kernel embeds its power tables
+    # as constants; the default printer elides them as "{...}", which
+    # does not round-trip through the rust-side text parser.
+    return comp.as_hlo_text(True)

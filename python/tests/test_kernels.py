@@ -1,0 +1,149 @@
+# Kernel-vs-oracle correctness: the CORE L1 signal.
+#
+# md5_batch   must be bit-exact vs hashlib for every lane.
+# rolling_hash must be bit-exact vs the Horner oracle for every offset.
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.md5 import md5_batch, pack_segments, pad_message
+from compile.kernels.rolling import (
+    DEFAULT_P,
+    DEFAULT_WINDOW,
+    mod_inverse_pow2,
+    pack_bytes,
+    rolling_hash,
+)
+
+RNG = np.random.default_rng(0xC0FFEE)
+
+
+def rand_bytes(n, seed=None):
+    rng = np.random.default_rng(seed) if seed is not None else RNG
+    return bytes(rng.integers(0, 256, n, dtype=np.uint8))
+
+
+# ---------------------------------------------------------------- MD5 ----
+class TestMd5Padding:
+    def test_pad_length_multiple_of_64(self):
+        for n in [0, 1, 55, 56, 57, 63, 64, 65, 256, 4096]:
+            assert len(pad_message(b"x" * n)) % 64 == 0
+
+    def test_pad_appends_0x80(self):
+        p = pad_message(b"abc")
+        assert p[3] == 0x80
+
+    def test_pad_encodes_bit_length(self):
+        p = pad_message(b"a" * 10)
+        assert int.from_bytes(p[-8:], "little") == 80
+
+
+class TestMd5Kernel:
+    @pytest.mark.parametrize("seg_bytes", [64, 256, 4096])
+    @pytest.mark.parametrize("lanes", [1, 3, 16])
+    def test_matches_hashlib(self, seg_bytes, lanes):
+        segs = [rand_bytes(seg_bytes, seed=1000 + i) for i in range(lanes)]
+        x, nblk = pack_segments(segs)
+        got = np.asarray(md5_batch(x, nblk, n_blocks=x.shape[1] // 16))
+        assert np.array_equal(got, ref.md5_batch_ref(segs))
+
+    def test_known_vector_empty_block(self):
+        # md5("") through the padded path: a single all-padding segment.
+        segs = [b""]
+        x, nblk = pack_segments(segs)
+        got = np.asarray(md5_batch(x, nblk, n_blocks=x.shape[1] // 16))
+        want = np.frombuffer(
+            bytes.fromhex("d41d8cd98f00b204e9800998ecf8427e"), dtype="<u4"
+        )
+        assert np.array_equal(got[0], want)
+
+    def test_known_vector_abc(self):
+        x, nblk = pack_segments([b"abc"])
+        got = np.asarray(md5_batch(x, nblk, n_blocks=x.shape[1] // 16))
+        want = np.frombuffer(ref.md5_ref(b"abc"), dtype="<u4")
+        assert np.array_equal(got[0], want)
+
+    def test_lanes_independent(self):
+        """Digest of lane i must not depend on other lanes."""
+        segs = [rand_bytes(256, seed=i) for i in range(8)]
+        x_all, nblk_all = pack_segments(segs)
+        full = np.asarray(md5_batch(x_all, nblk_all, n_blocks=x_all.shape[1] // 16))
+        for i in [0, 3, 7]:
+            x1, nblk1 = pack_segments([segs[i]])
+            one = np.asarray(md5_batch(x1, nblk1, n_blocks=x1.shape[1] // 16))
+            assert np.array_equal(full[i], one[0])
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.binary(min_size=0, max_size=200), st.integers(1, 4))
+    def test_hypothesis_sweep(self, blob, lanes):
+        segs = [blob for _ in range(lanes)]
+        x, nblk = pack_segments(segs)
+        got = np.asarray(md5_batch(x, nblk, n_blocks=x.shape[1] // 16))
+        assert np.array_equal(got, ref.md5_batch_ref(segs))
+
+
+# ------------------------------------------------------------ rolling ----
+class TestModInverse:
+    @settings(max_examples=50, deadline=None)
+    @given(st.integers(1, 2**32 - 1).filter(lambda p: p % 2 == 1))
+    def test_inverse(self, p):
+        assert (p * mod_inverse_pow2(p)) % (1 << 32) == 1
+
+
+class TestRollingKernel:
+    @pytest.mark.parametrize("n", [64, 256, 4096])
+    def test_matches_oracle(self, n):
+        data = rand_bytes(n, seed=n)
+        got = np.asarray(rolling_hash(pack_bytes(data)))
+        assert np.array_equal(got, ref.rolling_ref_fast(data))
+
+    def test_slow_and_fast_oracles_agree(self):
+        data = rand_bytes(128, seed=5)
+        assert np.array_equal(ref.rolling_ref(data), ref.rolling_ref_fast(data))
+
+    @pytest.mark.parametrize("window", [16, 32, 48, 64])
+    def test_window_sizes(self, window):
+        data = rand_bytes(512, seed=window)
+        got = np.asarray(rolling_hash(pack_bytes(data), window=window))
+        assert np.array_equal(got, ref.rolling_ref_fast(data, window=window))
+
+    def test_nonstandard_p(self):
+        p = 0x9E3779B1  # odd
+        data = rand_bytes(256, seed=9)
+        got = np.asarray(rolling_hash(pack_bytes(data), p=p))
+        assert np.array_equal(got, ref.rolling_ref_fast(data, p=p))
+
+    def test_shift_invariance(self):
+        """H over data[k:] must equal the tail of H over data (window
+        hashes depend only on window content)."""
+        data = rand_bytes(512, seed=11)
+        full = np.asarray(rolling_hash(pack_bytes(data)))
+        shifted = np.asarray(rolling_hash(pack_bytes(data[4:])))
+        assert np.array_equal(full[4:], shifted)
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(0, 2**32 - 1), st.integers(16, 96))
+    def test_hypothesis_sweep(self, seed, nwords):
+        data = rand_bytes(4 * nwords, seed=seed)
+        got = np.asarray(rolling_hash(pack_bytes(data)))
+        assert np.array_equal(got, ref.rolling_ref_fast(data))
+
+    def test_boundary_rate_statistics(self):
+        """(h & mask) == magic should fire ~ 1/(mask+1) of the time on
+        random data -- the property that sets the expected chunk size."""
+        data = rand_bytes(1 << 18, seed=42)
+        h = np.asarray(rolling_hash(pack_bytes(data)))
+        mask = 0x0FFF
+        rate = float(np.mean((h & mask) == 0x78))
+        expected = 1.0 / (mask + 1)
+        assert 0.5 * expected < rate < 2.0 * expected
+
+    def test_unequal_segment_lengths(self):
+        """One artifact shape hashes variable-length segments via the
+        per-lane active-block-count input (rust planner relies on this:
+        the last segment of a data block is usually short)."""
+        segs = [rand_bytes(4096, seed=1), rand_bytes(100, seed=2), b"", rand_bytes(257, seed=3)]
+        x, nblk = pack_segments(segs, n_blocks=65)
+        got = np.asarray(md5_batch(x, nblk, n_blocks=65))
+        assert np.array_equal(got, ref.md5_batch_ref(segs))

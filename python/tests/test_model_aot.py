@@ -1,0 +1,85 @@
+# L2/AOT tests: graph shapes, fused-flags variant, HLO text emission and
+# manifest consistency.
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+from compile.kernels.md5 import pack_segments
+from compile.kernels.rolling import DEFAULT_P, DEFAULT_WINDOW, pack_bytes
+
+
+def rand_bytes(n, seed):
+    return bytes(np.random.default_rng(seed).integers(0, 256, n, dtype=np.uint8))
+
+
+class TestModelGraphs:
+    def test_direct_hash_tuple(self):
+        segs = [rand_bytes(256, seed=i) for i in range(4)]
+        x, nblk = pack_segments(segs)
+        (out,) = model.direct_hash(x, nblk, n_blocks=x.shape[1] // 16)
+        assert out.shape == (4, 4)
+        assert np.array_equal(np.asarray(out), ref.md5_batch_ref(segs))
+
+    def test_sliding_window_tuple(self):
+        data = rand_bytes(1024, seed=3)
+        (h,) = model.sliding_window(pack_bytes(data))
+        assert h.shape == (1024 - DEFAULT_WINDOW + 1,)
+
+    def test_fused_flags_consistent(self):
+        data = rand_bytes(4096, seed=4)
+        h, flags = model.sliding_window_flags(pack_bytes(data), mask=0xFF, magic=0x12)
+        h, flags = np.asarray(h), np.asarray(flags)
+        assert np.array_equal(flags, ((h & 0xFF) == 0x12).astype(np.uint32))
+
+
+class TestAot:
+    def test_padded_words(self):
+        # 256-byte msg -> 320 padded bytes -> 80 words -> 5 blocks
+        assert aot.padded_words(256) == 80
+        assert aot.padded_words(4096) == 1040
+
+    def test_manifest_complete(self):
+        arts = aot.build_manifest()
+        names = {a["name"] for a in arts}
+        assert len(names) == len(arts), "duplicate artifact names"
+        kinds = {a["kind"] for a in arts}
+        assert kinds == {"direct", "sliding"}
+        for a in arts:
+            if a["kind"] == "direct":
+                assert a["in_words"] == [a["lanes"], a["n_blocks"] * 16]
+            else:
+                assert a["out_len"] == a["n_bytes"] - a["window"] + 1
+
+    def test_lower_one_emits_hlo_text(self):
+        art = dict(
+            name="t", kind="direct", seg_bytes=64, lanes=2,
+            n_blocks=aot.padded_words(64) // 16, in_words=[2, aot.padded_words(64)],
+        )
+        text = aot.lower_one(art)
+        assert "HloModule" in text
+        assert "u32[2,32]" in text.replace(" ", "") or "u32[2,32]" in text
+
+    def test_lower_sliding_emits_hlo_text(self):
+        art = dict(
+            name="t", kind="sliding", n_bytes=256, window=DEFAULT_WINDOW,
+            p=DEFAULT_P, in_words=[64], out_len=256 - DEFAULT_WINDOW + 1,
+        )
+        text = aot.lower_one(art)
+        assert "HloModule" in text
+
+    def test_built_artifacts_match_manifest(self):
+        """If `make artifacts` has run, every manifest entry must exist."""
+        mpath = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")
+        if not os.path.exists(mpath):
+            pytest.skip("artifacts not built")
+        with open(mpath) as f:
+            manifest = json.load(f)
+        base = os.path.dirname(mpath)
+        for a in manifest["artifacts"]:
+            assert os.path.exists(os.path.join(base, a["path"])), a["name"]

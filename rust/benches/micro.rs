@@ -1,0 +1,181 @@
+//! Micro-benchmarks of the rust hot paths (no criterion in this offline
+//! environment; simple calibrated timing loops).  These feed the §Perf
+//! iteration log in EXPERIMENTS.md.
+//!
+//!     cargo bench --bench micro            # everything
+//!     cargo bench --bench micro -- md5 pjrt
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use gpustore::chunking::{ChunkParams, ContentChunker};
+use gpustore::crystal::{BackendKind, CrystalOpts, DeviceOp, Master};
+use gpustore::hash::{direct_hash_cpu_mt, md5, window_hashes, DEFAULT_P, DEFAULT_WINDOW};
+use gpustore::runtime::artifacts::Manifest;
+use gpustore::store::proto::Msg;
+use gpustore::util::Rng;
+
+const MB: f64 = 1024.0 * 1024.0;
+
+/// Run `f` until ~0.5 s elapsed; return seconds per iteration.
+fn time_it<F: FnMut()>(mut f: F) -> f64 {
+    // Warmup.
+    f();
+    let mut iters = 1u64;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        if dt > 0.3 {
+            return dt / iters as f64;
+        }
+        iters = (iters as f64 * (0.5 / dt.max(1e-9)).clamp(2.0, 64.0)) as u64;
+    }
+}
+
+fn report_bw(name: &str, bytes: usize, secs: f64) {
+    println!("{name:<44} {:>10.1} MB/s   ({:.3} ms)", bytes as f64 / secs / MB, secs * 1e3);
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    let want = |k: &str| args.is_empty() || args.iter().any(|a| a == k);
+    let data1m = Rng::new(1).bytes(1 << 20);
+    let data4m = Rng::new(2).bytes(4 << 20);
+
+    println!("== micro benchmarks (release, this host) ==\n");
+
+    if want("md5") {
+        let s = time_it(|| {
+            std::hint::black_box(md5(&data1m));
+        });
+        report_bw("md5 1MB (1 thread)", 1 << 20, s);
+        for threads in [4, 8] {
+            let s = time_it(|| {
+                std::hint::black_box(direct_hash_cpu_mt(&data4m, 4096, threads));
+            });
+            report_bw(&format!("direct-hash 4MB seg4096 ({threads} threads)"), 4 << 20, s);
+        }
+    }
+
+    if want("rolling") {
+        let s = time_it(|| {
+            std::hint::black_box(window_hashes(&data1m, DEFAULT_WINDOW, DEFAULT_P));
+        });
+        report_bw("rolling window-hashes 1MB", 1 << 20, s);
+    }
+
+    if want("chunker") {
+        let params = ChunkParams::with_avg_size(64 << 10);
+        let s = time_it(|| {
+            std::hint::black_box(ContentChunker::chunk_all(params, &data4m));
+        });
+        report_bw("cdc chunk_all 4MB (~64KB chunks)", 4 << 20, s);
+    }
+
+    if want("proto") {
+        let msg = Msg::PutBlock {
+            hash: [7; 16],
+            data: data1m.clone(),
+        };
+        let s = time_it(|| {
+            std::hint::black_box(msg.encode());
+        });
+        report_bw("proto encode PutBlock(1MB)", 1 << 20, s);
+        let frame = msg.encode();
+        let s = time_it(|| {
+            let mut r = &frame[..];
+            std::hint::black_box(Msg::read_from(&mut r).unwrap());
+        });
+        report_bw("proto decode PutBlock(1MB)", 1 << 20, s);
+    }
+
+    if want("pjrt") {
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.json").exists() {
+            let master = Master::new(CrystalOpts::optimized(BackendKind::Pjrt {
+                artifact_dir: dir,
+            }))
+            .unwrap();
+            let d = Arc::new(data1m.clone());
+            // Warm the executable caches.
+            master.run(DeviceOp::SlidingWindow, d.clone()).unwrap();
+            master
+                .run(DeviceOp::DirectHash { seg_bytes: 4096 }, d.clone())
+                .unwrap();
+            let s = time_it(|| {
+                std::hint::black_box(master.run(DeviceOp::SlidingWindow, d.clone()).unwrap());
+            });
+            report_bw("pjrt sliding-window 1MB (e2e job)", 1 << 20, s);
+            let s = time_it(|| {
+                std::hint::black_box(
+                    master
+                        .run(DeviceOp::DirectHash { seg_bytes: 4096 }, d.clone())
+                        .unwrap(),
+                );
+            });
+            report_bw("pjrt direct-hash 1MB (e2e job)", 1 << 20, s);
+            let stats = master.stats();
+            let (hits, misses) = stats.pool;
+            println!("  (staging pool: {hits} hits / {misses} misses)");
+        } else {
+            println!("pjrt: artifacts not built, skipping (run `make artifacts`)");
+        }
+    }
+
+    if want("store") {
+        // L3 end-to-end: loopback cluster, unshaped, CPU rolling engine —
+        // isolates the coordinator + wire path from kernel cost.
+        use gpustore::config::{CaMode, ClientConfig, ClusterConfig};
+        use gpustore::hashgpu::{CpuEngine, WindowHashMode};
+        use gpustore::store::Cluster;
+        let cluster = Cluster::spawn(ClusterConfig {
+            nodes: 4,
+            link_bps: 1e9,
+            shape: false,
+        })
+        .unwrap();
+        for (label, mode) in [("non-CA", CaMode::None), ("fixed", CaMode::Fixed), ("cdc", CaMode::Cdc)] {
+            let cfg = ClientConfig {
+                ca_mode: mode,
+                block_size: 256 * 1024,
+                cdc_min: 64 * 1024,
+                cdc_max: 1 << 20,
+                cdc_mask: (1 << 18) - 1,
+                write_buffer: 1 << 20,
+                ..ClientConfig::default()
+            };
+            let sai = cluster
+                .client(
+                    cfg,
+                    Arc::new(CpuEngine::new(1, 4096, WindowHashMode::Rolling)),
+                )
+                .unwrap();
+            let mut seq = 0u64;
+            let s = time_it(|| {
+                seq += 1;
+                let r = sai
+                    .write_file(&format!("m-{label}-{seq}"), &data4m)
+                    .unwrap();
+                std::hint::black_box(r);
+            });
+            report_bw(&format!("store write 4MB ({label}, loopback)"), 4 << 20, s);
+        }
+    }
+
+    if want("pool") {
+        let pool = gpustore::crystal::BufferPool::new(true, 8);
+        pool.prewarm(1 << 18, 4);
+        let s = time_it(|| {
+            std::hint::black_box(pool.acquire(1 << 18));
+        });
+        report_bw("buffer pool acquire 1MB (reuse)", 1 << 20, s);
+        let pool = gpustore::crystal::BufferPool::new(false, 8);
+        let s = time_it(|| {
+            std::hint::black_box(pool.acquire(1 << 18));
+        });
+        report_bw("buffer pool acquire 1MB (alloc)", 1 << 20, s);
+    }
+}

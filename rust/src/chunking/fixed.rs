@@ -1,0 +1,115 @@
+//! Fixed-size block splitting (the paper's "fixed size blocks"
+//! configuration; 1 MB is MosaStore's default block size).
+
+use std::ops::Range;
+
+/// Byte ranges of each block of a `len`-byte object split at `block` bytes.
+/// The final block may be short. Empty input yields no blocks.
+pub fn split_fixed(len: usize, block: usize) -> Vec<Range<usize>> {
+    assert!(block > 0);
+    let mut out = Vec::with_capacity(len.div_ceil(block));
+    let mut lo = 0;
+    while lo < len {
+        let hi = (lo + block).min(len);
+        out.push(lo..hi);
+        lo = hi;
+    }
+    out
+}
+
+/// Streaming fixed-size chunker with the same push/finish shape as
+/// [`super::ContentChunker`], so the SAI write path is chunker-agnostic.
+#[derive(Debug)]
+pub struct FixedChunker {
+    block: usize,
+    cur: Vec<u8>,
+}
+
+impl FixedChunker {
+    /// New chunker emitting `block`-byte chunks.
+    pub fn new(block: usize) -> Self {
+        assert!(block > 0);
+        FixedChunker {
+            block,
+            cur: Vec::with_capacity(block),
+        }
+    }
+
+    /// Feed bytes; returns every completed block.
+    pub fn push(&mut self, mut data: &[u8]) -> Vec<Vec<u8>> {
+        let mut out = Vec::new();
+        while !data.is_empty() {
+            let take = (self.block - self.cur.len()).min(data.len());
+            self.cur.extend_from_slice(&data[..take]);
+            data = &data[take..];
+            if self.cur.len() == self.block {
+                out.push(std::mem::replace(
+                    &mut self.cur,
+                    Vec::with_capacity(self.block),
+                ));
+            }
+        }
+        out
+    }
+
+    /// Flush the trailing partial block, if any.
+    pub fn finish(&mut self) -> Option<Vec<u8>> {
+        (!self.cur.is_empty()).then(|| std::mem::take(&mut self.cur))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn split_exact() {
+        let r = split_fixed(4096, 1024);
+        assert_eq!(r.len(), 4);
+        assert_eq!(r[3], 3072..4096);
+    }
+
+    #[test]
+    fn split_with_remainder() {
+        let r = split_fixed(4100, 1024);
+        assert_eq!(r.len(), 5);
+        assert_eq!(r[4], 4096..4100);
+    }
+
+    #[test]
+    fn split_empty() {
+        assert!(split_fixed(0, 1024).is_empty());
+    }
+
+    #[test]
+    fn split_smaller_than_block() {
+        assert_eq!(split_fixed(10, 1024), vec![0..10]);
+    }
+
+    #[test]
+    fn streaming_matches_split() {
+        let data = Rng::new(1).bytes(10_000);
+        for bufsize in [1usize, 7, 1024, 4096, 10_000] {
+            let mut ch = FixedChunker::new(1024);
+            let mut blocks = Vec::new();
+            for buf in data.chunks(bufsize) {
+                blocks.extend(ch.push(buf));
+            }
+            blocks.extend(ch.finish());
+            let want: Vec<Vec<u8>> = split_fixed(data.len(), 1024)
+                .into_iter()
+                .map(|r| data[r].to_vec())
+                .collect();
+            assert_eq!(blocks, want, "bufsize={bufsize}");
+        }
+    }
+
+    #[test]
+    fn finish_empty_is_none() {
+        let mut ch = FixedChunker::new(8);
+        assert!(ch.finish().is_none());
+        ch.push(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        assert!(ch.finish().is_none());
+    }
+}

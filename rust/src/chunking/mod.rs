@@ -1,0 +1,10 @@
+//! Block-boundary detection: fixed-size splitting and content-based
+//! chunking (CDC).  CDC's boundary *selection* is host-side (CPU) in both
+//! the CPU and accelerator configurations — only the window-hash
+//! computation moves to the device — exactly mirroring the paper.
+
+pub mod cdc;
+pub mod fixed;
+
+pub use cdc::{Chunk, ChunkParams, ContentChunker};
+pub use fixed::{split_fixed, FixedChunker};

@@ -1,0 +1,254 @@
+//! Typed configuration for the storage system and its experiments,
+//! mirroring the paper's evaluated setups (§4).
+
+use crate::chunking::ChunkParams;
+
+/// Content-addressability mode of the client SAI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CaMode {
+    /// `non-CA`: no hashing, data written straight to storage nodes.
+    None,
+    /// Fixed-size blocks + direct hashing (MosaStore default: 1 MB).
+    Fixed,
+    /// Content-based chunking via sliding-window hashing.
+    Cdc,
+}
+
+/// Where the hashing work runs — the paper's CPU / GPU / oracle configs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HashEngineKind {
+    /// Single- or multi-threaded host CPU ("CA-CPU"; 16 threads on the
+    /// dual-socket machine is the paper's best CPU config).
+    Cpu {
+        /// Hashing worker threads.
+        threads: usize,
+    },
+    /// Accelerator offload through crystal ("CA-GPU").
+    Gpu {
+        /// Number of devices (the paper evaluates 1 and 2).
+        devices: usize,
+        /// Reuse pinned buffers (CrystalGPU optimization 1).
+        buffer_reuse: bool,
+        /// Overlap transfer with compute (CrystalGPU optimization 2).
+        overlap: bool,
+    },
+    /// "CA-Infinite": instant hashing oracle, the upper bound of §4.4.
+    Oracle,
+}
+
+impl HashEngineKind {
+    /// The paper's single-GPU fully-optimized configuration.
+    pub fn gpu_default() -> Self {
+        HashEngineKind::Gpu {
+            devices: 1,
+            buffer_reuse: true,
+            overlap: true,
+        }
+    }
+}
+
+/// Client (SAI) configuration.
+#[derive(Debug, Clone)]
+pub struct ClientConfig {
+    /// Content addressability mode.
+    pub ca_mode: CaMode,
+    /// Hash engine selection.
+    pub engine: HashEngineKind,
+    /// Fixed-block size (CaMode::Fixed). Paper default: 1 MB.
+    pub block_size: usize,
+    /// CDC parameters (CaMode::Cdc).
+    pub cdc_min: usize,
+    /// CDC maximum chunk size.
+    pub cdc_max: usize,
+    /// CDC boundary mask (expected spacing = mask+1 past min).
+    pub cdc_mask: u32,
+    /// Write-buffer size: data accumulated before a chunk+hash batch is
+    /// submitted (the batching the paper adds for CBC offload).
+    pub write_buffer: usize,
+    /// Direct-hash segment size for the parallel Merkle–Damgård split.
+    pub segment_bytes: usize,
+    /// Number of storage nodes a write is striped across (paper: 4).
+    pub stripe_width: usize,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        ClientConfig {
+            ca_mode: CaMode::Fixed,
+            engine: HashEngineKind::Cpu { threads: 1 },
+            block_size: 1024 * 1024,
+            cdc_min: 256 * 1024,
+            cdc_max: 4 * 1024 * 1024,
+            cdc_mask: (1 << 20) - 1,
+            write_buffer: 4 * 1024 * 1024,
+            segment_bytes: 4096,
+            stripe_width: 4,
+        }
+    }
+}
+
+impl ClientConfig {
+    /// CDC parameters derived from this config.
+    pub fn chunk_params(&self) -> ChunkParams {
+        ChunkParams {
+            window: crate::hash::DEFAULT_WINDOW,
+            p: crate::hash::DEFAULT_P,
+            mask: self.cdc_mask,
+            magic: 0x0007_8A1D & self.cdc_mask,
+            min_size: self.cdc_min,
+            max_size: self.cdc_max,
+        }
+    }
+
+    /// Validate cross-field invariants.
+    pub fn validate(&self) -> crate::Result<()> {
+        if self.block_size == 0 || self.write_buffer == 0 || self.stripe_width == 0 {
+            return Err(crate::Error::Config("zero-sized config field".into()));
+        }
+        if self.ca_mode == CaMode::Cdc {
+            self.chunk_params().validate()?;
+            if self.write_buffer < self.cdc_max {
+                return Err(crate::Error::Config(
+                    "write_buffer must be >= cdc_max so a chunk fits a batch".into(),
+                ));
+            }
+        }
+        if let HashEngineKind::Cpu { threads } = self.engine {
+            if threads == 0 {
+                return Err(crate::Error::Config("cpu threads must be > 0".into()));
+            }
+        }
+        if let HashEngineKind::Gpu { devices, .. } = self.engine {
+            if devices == 0 {
+                return Err(crate::Error::Config("gpu devices must be > 0".into()));
+            }
+        }
+        Ok(())
+    }
+
+    /// Paper preset: `non-CA`.
+    pub fn non_ca() -> Self {
+        ClientConfig {
+            ca_mode: CaMode::None,
+            ..Default::default()
+        }
+    }
+
+    /// Paper preset: `CA-CPU` fixed blocks, `threads` hashing threads.
+    pub fn ca_cpu_fixed(threads: usize) -> Self {
+        ClientConfig {
+            ca_mode: CaMode::Fixed,
+            engine: HashEngineKind::Cpu { threads },
+            ..Default::default()
+        }
+    }
+
+    /// Paper preset: `CA-GPU` fixed blocks.
+    pub fn ca_gpu_fixed() -> Self {
+        ClientConfig {
+            ca_mode: CaMode::Fixed,
+            engine: HashEngineKind::gpu_default(),
+            ..Default::default()
+        }
+    }
+
+    /// Paper preset: `CA-CPU` content-based chunking.
+    pub fn ca_cpu_cdc(threads: usize) -> Self {
+        ClientConfig {
+            ca_mode: CaMode::Cdc,
+            engine: HashEngineKind::Cpu { threads },
+            ..Default::default()
+        }
+    }
+
+    /// Paper preset: `CA-GPU` content-based chunking.
+    pub fn ca_gpu_cdc() -> Self {
+        ClientConfig {
+            ca_mode: CaMode::Cdc,
+            engine: HashEngineKind::gpu_default(),
+            ..Default::default()
+        }
+    }
+
+    /// Paper preset: `CA-Infinite` (oracle hashing).
+    pub fn ca_infinite(ca_mode: CaMode) -> Self {
+        ClientConfig {
+            ca_mode,
+            engine: HashEngineKind::Oracle,
+            ..Default::default()
+        }
+    }
+}
+
+/// Cluster-wide experiment configuration.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Number of storage nodes (paper testbed: up to 22-node cluster,
+    /// stripes of 4).
+    pub nodes: usize,
+    /// Link bandwidth in bits/sec (paper: 1 Gbps; §4.2 discusses 10 Gbps).
+    pub link_bps: f64,
+    /// Whether to shape in-proc links at `link_bps`.
+    pub shape: bool,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            nodes: 4,
+            link_bps: 1e9,
+            shape: true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_validates() {
+        ClientConfig::default().validate().unwrap();
+        ClientConfig::non_ca().validate().unwrap();
+        ClientConfig::ca_cpu_fixed(16).validate().unwrap();
+        ClientConfig::ca_gpu_fixed().validate().unwrap();
+        ClientConfig::ca_cpu_cdc(8).validate().unwrap();
+        ClientConfig::ca_gpu_cdc().validate().unwrap();
+        ClientConfig::ca_infinite(CaMode::Cdc).validate().unwrap();
+    }
+
+    #[test]
+    fn zero_threads_rejected() {
+        assert!(ClientConfig::ca_cpu_fixed(0).validate().is_err());
+    }
+
+    #[test]
+    fn small_write_buffer_rejected_for_cdc() {
+        let mut c = ClientConfig::ca_cpu_cdc(1);
+        c.write_buffer = 1024 * 1024; // < cdc_max
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn chunk_params_coherent() {
+        let c = ClientConfig::ca_gpu_cdc();
+        let p = c.chunk_params();
+        assert_eq!(p.min_size, c.cdc_min);
+        assert_eq!(p.max_size, c.cdc_max);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn presets_differ_where_expected() {
+        assert_eq!(ClientConfig::non_ca().ca_mode, CaMode::None);
+        assert_eq!(ClientConfig::ca_gpu_cdc().ca_mode, CaMode::Cdc);
+        assert_eq!(
+            ClientConfig::ca_gpu_fixed().engine,
+            HashEngineKind::gpu_default()
+        );
+        assert_eq!(
+            ClientConfig::ca_infinite(CaMode::Fixed).engine,
+            HashEngineKind::Oracle
+        );
+    }
+}

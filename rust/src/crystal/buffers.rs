@@ -1,0 +1,199 @@
+//! Staging-buffer pool — the paper's non-pageable (pinned) memory reuse.
+//!
+//! Allocating pinned memory per job dominated HashGPU-alone's runtime
+//! (Fig 4: up to 80–96 % together with copy-in); CrystalGPU pre-allocates
+//! and recycles.  Our stand-in for "pinned alloc" is the u32 staging
+//! vector a job packs its input into: with reuse on, buffers are
+//! recycled through a free list; with reuse off, every acquisition
+//! allocates *and touches* fresh memory (so the cost is physical, not
+//! just allocator bookkeeping) — letting the Fig 4/5/6 harnesses measure
+//! the optimization the way the paper did.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// A recyclable u32 staging buffer.  Returns itself to the pool on drop.
+pub struct PooledBuf {
+    buf: Option<Vec<u32>>,
+    home: Option<std::sync::Arc<PoolShared>>,
+}
+
+impl PooledBuf {
+    /// Read access.
+    pub fn as_slice(&self) -> &[u32] {
+        self.buf.as_ref().unwrap()
+    }
+
+    /// Write access.
+    pub fn as_mut_slice(&mut self) -> &mut [u32] {
+        self.buf.as_mut().unwrap()
+    }
+
+    /// Length in words.
+    pub fn len(&self) -> usize {
+        self.buf.as_ref().unwrap().len()
+    }
+
+    /// True if zero-length.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Drop for PooledBuf {
+    fn drop(&mut self) {
+        if let (Some(buf), Some(home)) = (self.buf.take(), self.home.take()) {
+            let mut free = home.free.lock().unwrap();
+            let list = free.entry(buf.len()).or_default();
+            if list.len() < home.max_per_size {
+                list.push(buf);
+            }
+        }
+    }
+}
+
+struct PoolShared {
+    free: Mutex<HashMap<usize, Vec<Vec<u32>>>>,
+    max_per_size: usize,
+}
+
+/// Size-keyed buffer pool.
+pub struct BufferPool {
+    shared: std::sync::Arc<PoolShared>,
+    reuse: bool,
+    hits: std::sync::atomic::AtomicU64,
+    misses: std::sync::atomic::AtomicU64,
+}
+
+impl BufferPool {
+    /// `reuse = false` reproduces the unoptimized HashGPU-alone behaviour
+    /// (fresh allocation per job).
+    pub fn new(reuse: bool, max_per_size: usize) -> Self {
+        BufferPool {
+            shared: std::sync::Arc::new(PoolShared {
+                free: Mutex::new(HashMap::new()),
+                max_per_size,
+            }),
+            reuse,
+            hits: Default::default(),
+            misses: Default::default(),
+        }
+    }
+
+    /// Acquire a zeroed buffer of exactly `words` words.
+    pub fn acquire(&self, words: usize) -> PooledBuf {
+        use std::sync::atomic::Ordering;
+        if self.reuse {
+            let recycled = {
+                let mut free = self.shared.free.lock().unwrap();
+                free.get_mut(&words).and_then(Vec::pop)
+            };
+            if let Some(mut buf) = recycled {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                buf.iter_mut().for_each(|w| *w = 0);
+                return PooledBuf {
+                    buf: Some(buf),
+                    home: Some(self.shared.clone()),
+                };
+            }
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return PooledBuf {
+                buf: Some(vec![0u32; words]),
+                home: Some(self.shared.clone()),
+            };
+        }
+        // No reuse: fresh allocation, touched page-by-page so the cost
+        // (page faults + zeroing) is paid like a pinned cudaMallocHost.
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut buf = vec![0u32; words];
+        for w in buf.iter_mut().step_by(1024) {
+            std::hint::black_box(*w);
+        }
+        PooledBuf {
+            buf: Some(buf),
+            home: None, // dropped, not recycled
+        }
+    }
+
+    /// Pre-populate the pool (the paper allocates at init).
+    pub fn prewarm(&self, words: usize, count: usize) {
+        if !self.reuse {
+            return;
+        }
+        let mut free = self.shared.free.lock().unwrap();
+        let list = free.entry(words).or_default();
+        while list.len() < count.min(self.shared.max_per_size) {
+            list.push(vec![0u32; words]);
+        }
+    }
+
+    /// (hits, misses) so far.
+    pub fn stats(&self) -> (u64, u64) {
+        use std::sync::atomic::Ordering;
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reuse_recycles() {
+        let pool = BufferPool::new(true, 8);
+        {
+            let mut b = pool.acquire(100);
+            b.as_mut_slice()[0] = 42;
+        } // returned
+        let b = pool.acquire(100);
+        assert_eq!(b.as_slice()[0], 0, "recycled buffer must be zeroed");
+        let (hits, misses) = pool.stats();
+        assert_eq!((hits, misses), (1, 1));
+    }
+
+    #[test]
+    fn no_reuse_never_recycles() {
+        let pool = BufferPool::new(false, 8);
+        drop(pool.acquire(64));
+        drop(pool.acquire(64));
+        let (hits, misses) = pool.stats();
+        assert_eq!(hits, 0);
+        assert_eq!(misses, 2);
+    }
+
+    #[test]
+    fn sizes_are_segregated() {
+        let pool = BufferPool::new(true, 8);
+        drop(pool.acquire(10));
+        let _a = pool.acquire(20); // different size: miss
+        let (hits, misses) = pool.stats();
+        assert_eq!(hits, 0);
+        assert_eq!(misses, 2);
+    }
+
+    #[test]
+    fn prewarm_gives_hits() {
+        let pool = BufferPool::new(true, 8);
+        pool.prewarm(256, 4);
+        drop(pool.acquire(256));
+        let (hits, _) = pool.stats();
+        assert_eq!(hits, 1);
+    }
+
+    #[test]
+    fn pool_caps_retained_buffers() {
+        let pool = BufferPool::new(true, 2);
+        let bufs: Vec<_> = (0..4).map(|_| pool.acquire(8)).collect();
+        drop(bufs); // only 2 retained
+        for _ in 0..2 {
+            drop(pool.acquire(8));
+        }
+        let (hits, misses) = pool.stats();
+        // 4 initial misses; then 2 hits (retained) is the best case.
+        assert_eq!(misses, 4);
+        assert_eq!(hits, 2);
+    }
+}

@@ -1,0 +1,638 @@
+//! Device backends: planning (host-side staging, `Send`) and execution
+//! (device-side, thread-confined), split so the overlap optimization can
+//! stage job *i+1* while job *i* runs — the paper's CUDA-stream overlap.
+//!
+//! * [`Planner`] — picks shape buckets from the artifact manifest and
+//!   packs/pads input bytes into pooled staging buffers.
+//! * [`PjrtExecutor`] — runs the AOT artifacts on the PJRT CPU client
+//!   (one instance per manager thread; the xla wrappers are not `Send`).
+//! * [`MockExecutor`] — recomputes the kernels' results on the host from
+//!   the *packed representation* (so it also validates the packing),
+//!   with injectable delays and failures for queue tests.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use super::buffers::{BufferPool, PooledBuf};
+use super::task::{DeviceOp, JobOut};
+use crate::hash::{md5, Digest};
+use crate::runtime::artifacts::{ArtifactKind, Manifest};
+use crate::runtime::pjrt::{pad_segment_into, ExecTiming, PjrtContext};
+use crate::{Error, Result};
+
+/// Alias: a device operation's output (re-exported as crystal::DeviceOut).
+pub type DeviceOut = JobOut;
+
+/// One packed execution step of a job.
+pub struct PlanStep {
+    /// Artifact to run.
+    pub artifact: String,
+    /// Packed input words (artifact's exact input width).
+    pub buf: PooledBuf,
+    /// Auxiliary input (direct: per-lane active block counts).
+    pub aux: Vec<u32>,
+    /// How to interpret the output.
+    pub meta: StepMeta,
+}
+
+/// Output interpretation of a step.
+#[derive(Debug, Clone)]
+pub enum StepMeta {
+    /// Direct hash: first `n_segs` lane digests are valid.
+    Direct {
+        /// Valid lanes.
+        n_segs: usize,
+    },
+    /// Batched direct hash: consecutive lane runs belong to blocks
+    /// `(block_index, n_segs)`.
+    DirectBatch {
+        /// Lane runs in order.
+        groups: Vec<(usize, usize)>,
+    },
+    /// Sliding window: first `valid` hashes are valid.
+    Sliding {
+        /// Valid output count.
+        valid: usize,
+    },
+}
+
+/// A fully staged job.
+pub struct Plan {
+    /// Execution steps in order.
+    pub steps: Vec<PlanStep>,
+    /// The operation (for assembly).
+    pub op: DeviceOp,
+    /// Input length in bytes.
+    pub input_len: usize,
+    /// Time spent packing (stage 1 part 2; buffer acquisition included).
+    pub prep: Duration,
+}
+
+/// Shape-bucket selection + packing.  `Send + Sync`; shared by stagers.
+#[derive(Clone)]
+pub struct Planner {
+    manifest: Manifest,
+}
+
+impl Planner {
+    /// Build from a loaded manifest.
+    pub fn new(manifest: Manifest) -> Self {
+        Planner { manifest }
+    }
+
+    /// The manifest in use.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Stage `data` for `op`, drawing staging buffers from `pool`.
+    pub fn plan(&self, op: DeviceOp, data: &[u8], pool: &BufferPool) -> Result<Plan> {
+        let t0 = Instant::now();
+        let steps = match op {
+            DeviceOp::DirectHash { seg_bytes } => self.plan_direct(seg_bytes, data, pool)?,
+            DeviceOp::SlidingWindow => self.plan_sliding(data, pool)?,
+        };
+        Ok(Plan {
+            steps,
+            op,
+            input_len: data.len(),
+            prep: t0.elapsed(),
+        })
+    }
+
+    fn plan_direct(
+        &self,
+        seg_bytes: usize,
+        data: &[u8],
+        pool: &BufferPool,
+    ) -> Result<Vec<PlanStep>> {
+        let mut steps = Vec::new();
+        let mut rest = data;
+        // Empty input still hashes one (empty) segment.
+        loop {
+            let art = self.manifest.pick_direct(seg_bytes, rest.len())?;
+            let take = rest.len().min(art.capacity());
+            let (cur, next) = rest.split_at(take);
+            let n_segs = crate::hash::segment_count(cur.len(), seg_bytes);
+            let lane_words = art.n_blocks * 16;
+            let mut buf = pool.acquire(art.in_words);
+            let mut aux = vec![0u32; art.lanes];
+            {
+                let words = buf.as_mut_slice();
+                for (lane, seg) in cur.chunks(seg_bytes.max(1)).enumerate() {
+                    aux[lane] = pad_segment_into(
+                        seg,
+                        &mut words[lane * lane_words..(lane + 1) * lane_words],
+                    );
+                }
+                if cur.is_empty() {
+                    aux[0] = pad_segment_into(&[], &mut words[..lane_words]);
+                }
+                // Unused lanes stay zero (nblk 0: the kernel never
+                // touches their state); their digests are discarded.
+            }
+            steps.push(PlanStep {
+                artifact: art.name.clone(),
+                buf,
+                aux,
+                meta: StepMeta::Direct { n_segs },
+            });
+            if next.is_empty() {
+                break;
+            }
+            rest = next;
+        }
+        Ok(steps)
+    }
+
+    /// Stage a batch of blocks for direct hashing: blocks' segments are
+    /// packed back-to-back into as few artifact executions as possible
+    /// (vs one execution per block), which is what makes small-block
+    /// workloads (1 MB fixed blocks = 256 segments) amortize the
+    /// per-execution overhead.
+    pub fn plan_direct_batch(
+        &self,
+        seg_bytes: usize,
+        blocks: &[Vec<u8>],
+        pool: &BufferPool,
+    ) -> Result<Plan> {
+        let t0 = Instant::now();
+        let total: usize = blocks.iter().map(|b| b.len()).sum();
+        // Per-block segment slices, in order.
+        struct SegRef<'a> {
+            block: usize,
+            seg: &'a [u8],
+        }
+        let mut segs: Vec<SegRef> = Vec::new();
+        for (bi, b) in blocks.iter().enumerate() {
+            if b.is_empty() {
+                segs.push(SegRef { block: bi, seg: &[] });
+                continue;
+            }
+            for seg in b.chunks(seg_bytes.max(1)) {
+                segs.push(SegRef { block: bi, seg });
+            }
+        }
+        let mut steps = Vec::new();
+        let mut i = 0;
+        while i < segs.len() {
+            let remaining_bytes = total.min((segs.len() - i) * seg_bytes);
+            let art = self.manifest.pick_direct(seg_bytes, remaining_bytes)?;
+            let lane_words = art.n_blocks * 16;
+            let take = (segs.len() - i).min(art.lanes);
+            let mut buf = pool.acquire(art.in_words);
+            let mut aux = vec![0u32; art.lanes];
+            let mut groups: Vec<(usize, usize)> = Vec::new();
+            {
+                let words = buf.as_mut_slice();
+                for (lane, sr) in segs[i..i + take].iter().enumerate() {
+                    aux[lane] = pad_segment_into(
+                        sr.seg,
+                        &mut words[lane * lane_words..(lane + 1) * lane_words],
+                    );
+                    match groups.last_mut() {
+                        Some((b, n)) if *b == sr.block => *n += 1,
+                        _ => groups.push((sr.block, 1)),
+                    }
+                }
+            }
+            steps.push(PlanStep {
+                artifact: art.name.clone(),
+                buf,
+                aux,
+                meta: StepMeta::DirectBatch { groups },
+            });
+            i += take;
+        }
+        Ok(Plan {
+            steps,
+            op: DeviceOp::DirectHash { seg_bytes },
+            input_len: total,
+            prep: t0.elapsed(),
+        })
+    }
+
+    fn plan_sliding(&self, data: &[u8], pool: &BufferPool) -> Result<Vec<PlanStep>> {
+        let window = self.manifest.window;
+        if data.len() < window {
+            return Ok(Vec::new()); // no full window: nothing to run
+        }
+        let mut steps = Vec::new();
+        let mut off = 0usize;
+        while off + window <= data.len() {
+            let art = self.manifest.pick_sliding(data.len() - off)?;
+            let take = (data.len() - off).min(art.n_bytes);
+            let chunk = &data[off..off + take];
+            let valid = take - window + 1;
+            let mut buf = pool.acquire(art.in_words);
+            {
+                let words = buf.as_mut_slice();
+                let mut it = chunk.chunks_exact(4);
+                let mut i = 0;
+                for c in &mut it {
+                    words[i] = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                    i += 1;
+                }
+                let rem = it.remainder();
+                if !rem.is_empty() {
+                    let mut b = [0u8; 4];
+                    b[..rem.len()].copy_from_slice(rem);
+                    words[i] = u32::from_le_bytes(b);
+                }
+                // Tail words beyond the chunk stay zero; outputs past
+                // `valid` are discarded.
+            }
+            steps.push(PlanStep {
+                artifact: art.name.clone(),
+                buf,
+                aux: Vec::new(),
+                meta: StepMeta::Sliding { valid },
+            });
+            // Next chunk re-covers the last window-1 bytes.
+            off += valid;
+        }
+        Ok(steps)
+    }
+}
+
+fn lane_digest(words: &[u32], lane: usize) -> Digest {
+    let mut d = [0u8; 16];
+    for w in 0..4 {
+        d[4 * w..4 * w + 4].copy_from_slice(&words[lane * 4 + w].to_le_bytes());
+    }
+    d
+}
+
+/// Assemble step outputs into the job's output.
+pub fn assemble(op: DeviceOp, steps: &[(StepMeta, Vec<u32>)]) -> JobOut {
+    // Batched plans are detected by their step metadata.
+    if steps
+        .iter()
+        .any(|(m, _)| matches!(m, StepMeta::DirectBatch { .. }))
+    {
+        let n_blocks = steps
+            .iter()
+            .filter_map(|(m, _)| match m {
+                StepMeta::DirectBatch { groups } => groups.iter().map(|(b, _)| b + 1).max(),
+                _ => None,
+            })
+            .max()
+            .unwrap_or(0);
+        let mut out: Vec<Vec<Digest>> = vec![Vec::new(); n_blocks];
+        for (meta, words) in steps {
+            let StepMeta::DirectBatch { groups } = meta else {
+                continue;
+            };
+            let mut lane = 0;
+            for (block, n) in groups {
+                for _ in 0..*n {
+                    out[*block].push(lane_digest(words, lane));
+                    lane += 1;
+                }
+            }
+        }
+        return JobOut::DigestGroups(out);
+    }
+    match op {
+        DeviceOp::DirectHash { .. } => {
+            let mut digests: Vec<Digest> = Vec::new();
+            for (meta, words) in steps {
+                let StepMeta::Direct { n_segs } = meta else {
+                    continue;
+                };
+                for lane in 0..*n_segs {
+                    digests.push(lane_digest(words, lane));
+                }
+            }
+            JobOut::Digests(digests)
+        }
+        DeviceOp::SlidingWindow => {
+            let mut hashes = Vec::new();
+            for (meta, words) in steps {
+                let StepMeta::Sliding { valid } = meta else {
+                    continue;
+                };
+                hashes.extend_from_slice(&words[..*valid]);
+            }
+            JobOut::Hashes(hashes)
+        }
+    }
+}
+
+/// Executes planned steps on a concrete device.  NOT `Send`: built on
+/// the manager thread via [`BackendKind::build_executor`].
+pub trait Executor {
+    /// Run one artifact over packed words (plus the direct-hash aux
+    /// lane-count input); returns raw output words and per-stage timing.
+    fn run_step(
+        &mut self,
+        artifact: &str,
+        words: &[u32],
+        aux: &[u32],
+    ) -> Result<(Vec<u32>, ExecTiming)>;
+
+    /// Device label for diagnostics.
+    fn label(&self) -> String;
+}
+
+/// Executor selection, sendable to manager threads.
+#[derive(Debug, Clone)]
+pub enum BackendKind {
+    /// Real PJRT execution of the AOT artifacts.
+    Pjrt {
+        /// Artifact directory (manifest + HLO text files).
+        artifact_dir: PathBuf,
+    },
+    /// Host recomputation with injectable behaviour.
+    Mock {
+        /// Artifact directory (for the manifest; HLO not needed).
+        artifact_dir: PathBuf,
+        /// Delay/failure tuning.
+        tuning: MockTuning,
+    },
+}
+
+/// Mock behaviour knobs.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MockTuning {
+    /// Fixed delay per step.
+    pub fixed_delay: Duration,
+    /// Additional delay per input byte (ns/B).
+    pub ns_per_byte: f64,
+    /// Fail every Nth step (1-based) with a Crystal error, if set.
+    pub fail_every: Option<u64>,
+}
+
+impl BackendKind {
+    /// Load the manifest this backend will use (for the shared planner).
+    pub fn load_manifest(&self) -> Result<Manifest> {
+        match self {
+            BackendKind::Pjrt { artifact_dir } | BackendKind::Mock { artifact_dir, .. } => {
+                Manifest::load(artifact_dir)
+            }
+        }
+    }
+
+    /// Construct the thread-confined executor (call on the manager
+    /// thread).
+    pub fn build_executor(&self, device_id: usize) -> Result<Box<dyn Executor>> {
+        match self {
+            BackendKind::Pjrt { artifact_dir } => Ok(Box::new(PjrtExecutor {
+                ctx: PjrtContext::new(artifact_dir)?,
+                device_id,
+            })),
+            BackendKind::Mock {
+                artifact_dir,
+                tuning,
+            } => Ok(Box::new(MockExecutor {
+                manifest: Manifest::load(artifact_dir)?,
+                tuning: *tuning,
+                device_id,
+                steps_run: 0,
+            })),
+        }
+    }
+}
+
+/// PJRT-backed executor.
+pub struct PjrtExecutor {
+    ctx: PjrtContext,
+    device_id: usize,
+}
+
+impl Executor for PjrtExecutor {
+    fn run_step(
+        &mut self,
+        artifact: &str,
+        words: &[u32],
+        aux: &[u32],
+    ) -> Result<(Vec<u32>, ExecTiming)> {
+        let kind = self
+            .ctx
+            .manifest()
+            .artifacts
+            .iter()
+            .find(|a| a.name == artifact)
+            .map(|a| a.kind)
+            .ok_or_else(|| Error::Artifact(format!("unknown artifact {artifact}")))?;
+        match kind {
+            ArtifactKind::Direct => self.ctx.run_direct(artifact, words, aux),
+            ArtifactKind::Sliding => self.ctx.run_sliding(artifact, words),
+        }
+    }
+
+    fn label(&self) -> String {
+        format!("pjrt:{} dev{}", self.ctx.platform(), self.device_id)
+    }
+}
+
+/// Host-recompute executor used by queue/integration tests.
+pub struct MockExecutor {
+    manifest: Manifest,
+    tuning: MockTuning,
+    device_id: usize,
+    steps_run: u64,
+}
+
+impl Executor for MockExecutor {
+    fn run_step(
+        &mut self,
+        artifact: &str,
+        words: &[u32],
+        aux: &[u32],
+    ) -> Result<(Vec<u32>, ExecTiming)> {
+        self.steps_run += 1;
+        if let Some(n) = self.tuning.fail_every {
+            if self.steps_run % n == 0 {
+                return Err(Error::Crystal(format!(
+                    "injected failure on step {}",
+                    self.steps_run
+                )));
+            }
+        }
+        let spec = self
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| a.name == artifact)
+            .ok_or_else(|| Error::Artifact(format!("unknown artifact {artifact}")))?;
+        let t0 = Instant::now();
+        let out = match spec.kind {
+            ArtifactKind::Direct => {
+                // Recompute per-lane MD5 from the packed+padded lanes:
+                // the active block count (aux) locates the length words.
+                let lane_words = spec.n_blocks * 16;
+                let mut out = Vec::with_capacity(spec.lanes * 4);
+                for lane in 0..spec.lanes {
+                    let lw = &words[lane * lane_words..(lane + 1) * lane_words];
+                    let used = (aux.get(lane).copied().unwrap_or(0) as usize) * 16;
+                    let d = if used == 0 {
+                        // Inactive lane: digest is discarded; emit zeros.
+                        [0u8; 16]
+                    } else {
+                        let bit_len = (lw[used - 2] as u64) | ((lw[used - 1] as u64) << 32);
+                        let n = (bit_len / 8) as usize;
+                        let bytes: Vec<u8> =
+                            lw.iter().flat_map(|w| w.to_le_bytes()).collect();
+                        md5(&bytes[..n.min(bytes.len())])
+                    };
+                    for w in 0..4 {
+                        out.push(u32::from_le_bytes(d[4 * w..4 * w + 4].try_into().unwrap()));
+                    }
+                }
+                out
+            }
+            ArtifactKind::Sliding => {
+                let bytes: Vec<u8> = words.iter().flat_map(|w| w.to_le_bytes()).collect();
+                crate::hash::window_hashes(&bytes, spec.window, self.manifest.p)
+            }
+        };
+        let kernel = t0.elapsed();
+        let delay = self.tuning.fixed_delay
+            + Duration::from_nanos((self.tuning.ns_per_byte * (words.len() * 4) as f64) as u64);
+        if !delay.is_zero() {
+            std::thread::sleep(delay);
+        }
+        Ok((
+            out,
+            ExecTiming {
+                kernel: kernel + delay,
+                ..Default::default()
+            },
+        ))
+    }
+
+    fn label(&self) -> String {
+        format!("mock dev{}", self.device_id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn mock_setup() -> (Planner, MockExecutor, BufferPool) {
+        // Reuse the synthetic-manifest trick from runtime::artifacts by
+        // loading the real manifest if built, else building a tiny one.
+        let dir = Manifest::default_dir();
+        let manifest = if dir.join("manifest.json").exists() {
+            Manifest::load(&dir).unwrap()
+        } else {
+            panic!("artifacts not built; run `make artifacts`");
+        };
+        let planner = Planner::new(manifest.clone());
+        let exec = MockExecutor {
+            manifest,
+            tuning: MockTuning::default(),
+            device_id: 0,
+            steps_run: 0,
+        };
+        (planner, exec, BufferPool::new(true, 16))
+    }
+
+    fn run_plan(plan: Plan, exec: &mut MockExecutor) -> JobOut {
+        let mut outs = Vec::new();
+        for step in &plan.steps {
+            let (words, _) = exec
+                .run_step(&step.artifact, step.buf.as_slice(), &step.aux)
+                .unwrap();
+            outs.push((step.meta.clone(), words));
+        }
+        assemble(plan.op, &outs)
+    }
+
+    #[test]
+    fn direct_plan_matches_cpu_construction() {
+        let (planner, mut exec, pool) = mock_setup();
+        for len in [100usize, 4096, 5000, 70_000] {
+            let data = Rng::new(len as u64).bytes(len);
+            let plan = planner
+                .plan(DeviceOp::DirectHash { seg_bytes: 4096 }, &data, &pool)
+                .unwrap();
+            let JobOut::Digests(digests) = run_plan(plan, &mut exec) else {
+                panic!("wrong out kind");
+            };
+            let want: Vec<Digest> = data.chunks(4096).map(md5).collect();
+            assert_eq!(digests, want, "len={len}");
+        }
+    }
+
+    #[test]
+    fn sliding_plan_matches_cpu_hashes() {
+        let (planner, mut exec, pool) = mock_setup();
+        let w = planner.manifest().window;
+        let p = planner.manifest().p;
+        for len in [64usize, 4096, 70_000, 200_000] {
+            let data = Rng::new(len as u64).bytes(len);
+            let plan = planner.plan(DeviceOp::SlidingWindow, &data, &pool).unwrap();
+            let JobOut::Hashes(hashes) = run_plan(plan, &mut exec) else {
+                panic!("wrong out kind");
+            };
+            let want = crate::hash::window_hashes(&data, w, p);
+            assert_eq!(hashes.len(), want.len(), "len={len}");
+            assert_eq!(hashes, want, "len={len}");
+        }
+    }
+
+    #[test]
+    fn sliding_short_input_empty_plan() {
+        let (planner, _, pool) = mock_setup();
+        let plan = planner
+            .plan(DeviceOp::SlidingWindow, &[1, 2, 3], &pool)
+            .unwrap();
+        assert!(plan.steps.is_empty());
+        assert!(matches!(
+            assemble(DeviceOp::SlidingWindow, &[]),
+            JobOut::Hashes(h) if h.is_empty()
+        ));
+    }
+
+    #[test]
+    fn direct_empty_input_single_empty_digest() {
+        let (planner, mut exec, pool) = mock_setup();
+        let plan = planner
+            .plan(DeviceOp::DirectHash { seg_bytes: 4096 }, &[], &pool)
+            .unwrap();
+        let JobOut::Digests(d) = run_plan(plan, &mut exec) else {
+            panic!()
+        };
+        assert_eq!(d, vec![md5(&[])]);
+    }
+
+    #[test]
+    fn mock_failure_injection() {
+        let (planner, _, pool) = mock_setup();
+        let mut exec = MockExecutor {
+            manifest: planner.manifest().clone(),
+            tuning: MockTuning {
+                fail_every: Some(2),
+                ..Default::default()
+            },
+            device_id: 0,
+            steps_run: 0,
+        };
+        let data = Rng::new(1).bytes(4096);
+        let plan = planner
+            .plan(DeviceOp::DirectHash { seg_bytes: 4096 }, &data, &pool)
+            .unwrap();
+        let step = &plan.steps[0];
+        assert!(exec
+            .run_step(&step.artifact, step.buf.as_slice(), &step.aux)
+            .is_ok());
+        assert!(exec
+            .run_step(&step.artifact, step.buf.as_slice(), &step.aux)
+            .is_err());
+    }
+
+    #[test]
+    fn oversized_direct_job_splits() {
+        let (planner, _, pool) = mock_setup();
+        // Largest 4096-seg artifact is 1024 lanes = 4 MB; 10 MB splits.
+        let data = vec![7u8; 10 << 20];
+        let plan = planner
+            .plan(DeviceOp::DirectHash { seg_bytes: 4096 }, &data, &pool)
+            .unwrap();
+        assert!(plan.steps.len() >= 3, "steps={}", plan.steps.len());
+    }
+}

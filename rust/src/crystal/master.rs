@@ -1,0 +1,579 @@
+//! The crystal master: shared outstanding queue, one manager per device
+//! (stager + executor threads when overlap is on), callback delivery,
+//! and runtime statistics — the paper's §3.2.3 design.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender, SyncSender};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::buffers::BufferPool;
+use super::device::{assemble, BackendKind, Plan, Planner};
+use super::task::{DeviceOp, JobResult, StageTimings};
+use crate::metrics::StageBreakdown;
+use crate::{Error, Result};
+
+/// Crystal runtime options (the paper's optimization toggles).
+#[derive(Debug, Clone)]
+pub struct CrystalOpts {
+    /// Number of devices (manager pairs).
+    pub devices: usize,
+    /// Executor backend.
+    pub backend: BackendKind,
+    /// Recycle staging buffers (CrystalGPU optimization 1).
+    pub buffer_reuse: bool,
+    /// Stage next job while current executes (optimization 2).
+    pub overlap: bool,
+    /// Max staged-but-unexecuted jobs per device (pipeline depth).
+    pub pipeline_depth: usize,
+    /// Outstanding-queue bound; submit blocks when full (backpressure).
+    /// 0 = unbounded.
+    pub queue_cap: usize,
+    /// Buffers retained per size class in the pool.
+    pub pool_max_per_size: usize,
+}
+
+impl CrystalOpts {
+    /// Fully-optimized single-device configuration over the given backend.
+    pub fn optimized(backend: BackendKind) -> Self {
+        CrystalOpts {
+            devices: 1,
+            backend,
+            buffer_reuse: true,
+            overlap: true,
+            pipeline_depth: 2,
+            queue_cap: 64,
+            pool_max_per_size: 8,
+        }
+    }
+
+    /// HashGPU-alone configuration: no reuse, no overlap.
+    pub fn unoptimized(backend: BackendKind) -> Self {
+        CrystalOpts {
+            buffer_reuse: false,
+            overlap: false,
+            ..Self::optimized(backend)
+        }
+    }
+}
+
+/// Aggregate runtime statistics.
+#[derive(Debug, Clone, Default)]
+pub struct CrystalStats {
+    /// Jobs completed per device.
+    pub per_device: Vec<u64>,
+    /// Stage breakdown across all completed jobs.
+    pub stages: StageBreakdown,
+    /// Staging-pool (hits, misses).
+    pub pool: (u64, u64),
+    /// Jobs that failed.
+    pub failures: u64,
+}
+
+/// Handle to an in-flight job.
+pub struct JobHandle {
+    rx: Receiver<Result<JobResult>>,
+}
+
+impl JobHandle {
+    /// Block until the job completes.
+    pub fn wait(self) -> Result<JobResult> {
+        self.rx
+            .recv()
+            .map_err(|_| Error::Crystal("runtime shut down".into()))?
+    }
+
+    /// Non-blocking poll.
+    pub fn try_wait(&self) -> Option<Result<JobResult>> {
+        self.rx.try_recv().ok()
+    }
+}
+
+enum Payload {
+    /// One input buffer.
+    Single(Arc<Vec<u8>>),
+    /// A batch of blocks for packed direct hashing.
+    Batch {
+        seg_bytes: usize,
+        blocks: Arc<Vec<Vec<u8>>>,
+    },
+}
+
+struct QueueItem {
+    op: DeviceOp,
+    payload: Payload,
+    submitted: Instant,
+    reply: Sender<Result<JobResult>>,
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<QueueItem>>,
+    nonempty: Condvar,
+    space: Condvar,
+    shutdown: AtomicBool,
+    pool: BufferPool,
+    planner: Planner,
+    stats: Mutex<CrystalStats>,
+    inflight: AtomicU64,
+    idle: Condvar,
+    queue_cap: usize,
+}
+
+/// The crystal runtime.
+pub struct Master {
+    shared: Arc<Shared>,
+    managers: Vec<JoinHandle<()>>,
+}
+
+impl Master {
+    /// Start manager threads per `opts`.
+    pub fn new(opts: CrystalOpts) -> Result<Master> {
+        if opts.devices == 0 {
+            return Err(Error::Crystal("need at least one device".into()));
+        }
+        let manifest = opts.backend.load_manifest()?;
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            nonempty: Condvar::new(),
+            space: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            pool: BufferPool::new(opts.buffer_reuse, opts.pool_max_per_size),
+            planner: Planner::new(manifest),
+            stats: Mutex::new(CrystalStats {
+                per_device: vec![0; opts.devices],
+                ..Default::default()
+            }),
+            inflight: AtomicU64::new(0),
+            idle: Condvar::new(),
+            queue_cap: opts.queue_cap,
+        });
+
+        let mut managers = Vec::new();
+        for dev in 0..opts.devices {
+            let sh = shared.clone();
+            let backend = opts.backend.clone();
+            let overlap = opts.overlap;
+            let depth = opts.pipeline_depth.max(1);
+            managers.push(
+                std::thread::Builder::new()
+                    .name(format!("crystal-mgr-{dev}"))
+                    .spawn(move || manager_loop(sh, backend, dev, overlap, depth))
+                    .map_err(|e| Error::Crystal(format!("spawn manager: {e}")))?,
+            );
+        }
+        Ok(Master { shared, managers })
+    }
+
+    /// Submit a job; returns a handle for the callback.
+    pub fn submit(&self, op: DeviceOp, data: Arc<Vec<u8>>) -> JobHandle {
+        self.enqueue(op, Payload::Single(data))
+    }
+
+    /// Submit a batch of blocks for packed direct hashing: the planner
+    /// packs all blocks' segments into as few device executions as
+    /// possible and the result groups digests per block.
+    pub fn submit_batch(&self, seg_bytes: usize, blocks: Arc<Vec<Vec<u8>>>) -> JobHandle {
+        self.enqueue(
+            DeviceOp::DirectHash { seg_bytes },
+            Payload::Batch { seg_bytes, blocks },
+        )
+    }
+
+    fn enqueue(&self, op: DeviceOp, payload: Payload) -> JobHandle {
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            while self.shared.queue_cap > 0
+                && q.len() >= self.shared.queue_cap
+                && !self.shared.shutdown.load(Ordering::Relaxed)
+            {
+                q = self.shared.space.wait(q).unwrap();
+            }
+            self.shared.inflight.fetch_add(1, Ordering::Relaxed);
+            q.push_back(QueueItem {
+                op,
+                payload,
+                submitted: Instant::now(),
+                reply: tx,
+            });
+        }
+        self.shared.nonempty.notify_one();
+        JobHandle { rx }
+    }
+
+    /// Convenience: submit and wait.
+    pub fn run(&self, op: DeviceOp, data: Arc<Vec<u8>>) -> Result<JobResult> {
+        self.submit(op, data).wait()
+    }
+
+    /// Block until every submitted job has completed.
+    pub fn drain(&self) {
+        let mut q = self.shared.queue.lock().unwrap();
+        while self.shared.inflight.load(Ordering::Relaxed) > 0 {
+            let (guard, _) = self
+                .shared
+                .idle
+                .wait_timeout(q, std::time::Duration::from_millis(50))
+                .unwrap();
+            q = guard;
+        }
+    }
+
+    /// Snapshot of runtime statistics.
+    pub fn stats(&self) -> CrystalStats {
+        let mut s = self.shared.stats.lock().unwrap().clone();
+        s.pool = self.shared.pool.stats();
+        s
+    }
+
+    /// Number of devices.
+    pub fn devices(&self) -> usize {
+        self.managers.len()
+    }
+}
+
+impl Drop for Master {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+        self.shared.nonempty.notify_all();
+        self.shared.space.notify_all();
+        for m in self.managers.drain(..) {
+            let _ = m.join();
+        }
+    }
+}
+
+/// Pull the next queue item, or None on shutdown.
+fn next_item(sh: &Shared) -> Option<QueueItem> {
+    let mut q = sh.queue.lock().unwrap();
+    loop {
+        if let Some(item) = q.pop_front() {
+            sh.space.notify_one();
+            return Some(item);
+        }
+        if sh.shutdown.load(Ordering::Relaxed) {
+            return None;
+        }
+        q = sh.nonempty.wait(q).unwrap();
+    }
+}
+
+struct Staged {
+    plan: Plan,
+    queued: std::time::Duration,
+    reply: Sender<Result<JobResult>>,
+}
+
+/// Stage (pack) one queue item via the shared planner.
+fn stage(sh: &Shared, item: &QueueItem) -> Result<Plan> {
+    match &item.payload {
+        Payload::Single(data) => sh.planner.plan(item.op, data, &sh.pool),
+        Payload::Batch { seg_bytes, blocks } => {
+            sh.planner.plan_direct_batch(*seg_bytes, blocks, &sh.pool)
+        }
+    }
+}
+
+fn manager_loop(
+    sh: Arc<Shared>,
+    backend: BackendKind,
+    dev: usize,
+    overlap: bool,
+    depth: usize,
+) {
+    let mut executor = match backend.build_executor(dev) {
+        Ok(e) => e,
+        Err(e) => {
+            // Device failed to initialize: fail jobs as they arrive.
+            while let Some(item) = next_item(&sh) {
+                let _ = item
+                    .reply
+                    .send(Err(Error::Crystal(format!("device {dev} init failed: {e}"))));
+                job_done(&sh);
+            }
+            return;
+        }
+    };
+
+    if overlap {
+        // Stager thread: plan (pack/pad) while the executor runs.
+        let (tx, rx): (SyncSender<Staged>, _) = mpsc::sync_channel(depth);
+        let sh2 = sh.clone();
+        let stager = std::thread::Builder::new()
+            .name(format!("crystal-stage-{dev}"))
+            .spawn(move || {
+                while let Some(item) = next_item(&sh2) {
+                    let queued = item.submitted.elapsed();
+                    match stage(&sh2, &item) {
+                        Ok(plan) => {
+                            if tx
+                                .send(Staged {
+                                    plan,
+                                    queued,
+                                    reply: item.reply,
+                                })
+                                .is_err()
+                            {
+                                return;
+                            }
+                        }
+                        Err(e) => {
+                            let _ = item.reply.send(Err(e));
+                            job_done(&sh2);
+                        }
+                    }
+                }
+            })
+            .expect("spawn stager");
+
+        while let Ok(staged) = rx.recv() {
+            execute_staged(&sh, &mut *executor, dev, staged);
+        }
+        let _ = stager.join();
+    } else {
+        while let Some(item) = next_item(&sh) {
+            let queued = item.submitted.elapsed();
+            match stage(&sh, &item) {
+                Ok(plan) => execute_staged(
+                    &sh,
+                    &mut *executor,
+                    dev,
+                    Staged {
+                        plan,
+                        queued,
+                        reply: item.reply,
+                    },
+                ),
+                Err(e) => {
+                    let _ = item.reply.send(Err(e));
+                    job_done(&sh);
+                }
+            }
+        }
+    }
+}
+
+fn execute_staged(
+    sh: &Shared,
+    executor: &mut dyn super::device::Executor,
+    dev: usize,
+    staged: Staged,
+) {
+    let Staged {
+        plan,
+        queued,
+        reply,
+    } = staged;
+    let mut timing = StageTimings {
+        preprocess: plan.prep,
+        queued,
+        ..Default::default()
+    };
+    let mut outs = Vec::with_capacity(plan.steps.len());
+    let mut failed = None;
+    for step in &plan.steps {
+        match executor.run_step(&step.artifact, step.buf.as_slice(), &step.aux) {
+            Ok((words, t)) => {
+                timing.copy_in += t.copy_in;
+                timing.kernel += t.kernel;
+                timing.copy_out += t.copy_out;
+                outs.push((step.meta.clone(), words));
+            }
+            Err(e) => {
+                failed = Some(e);
+                break;
+            }
+        }
+    }
+    let result = match failed {
+        Some(e) => Err(e),
+        None => {
+            let out = assemble(plan.op, &outs);
+            Ok(JobResult {
+                out,
+                timing,
+                device: dev,
+                input_len: plan.input_len,
+            })
+        }
+    };
+    {
+        let mut stats = sh.stats.lock().unwrap();
+        match &result {
+            Ok(r) => {
+                stats.per_device[dev] += 1;
+                r.timing.record(&mut stats.stages);
+            }
+            Err(_) => stats.failures += 1,
+        }
+    }
+    let _ = reply.send(result);
+    job_done(sh);
+}
+
+fn job_done(sh: &Shared) {
+    sh.inflight.fetch_sub(1, Ordering::Relaxed);
+    sh.idle.notify_all();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crystal::device::MockTuning;
+    use crate::crystal::task::JobOut;
+    use crate::hash::md5;
+    use crate::runtime::artifacts::Manifest;
+    use crate::util::Rng;
+
+    fn mock_backend(tuning: MockTuning) -> BackendKind {
+        BackendKind::Mock {
+            artifact_dir: Manifest::default_dir(),
+            tuning,
+        }
+    }
+
+    #[test]
+    fn submit_and_wait_direct() {
+        let m = Master::new(CrystalOpts::optimized(mock_backend(Default::default()))).unwrap();
+        let data = Arc::new(Rng::new(1).bytes(10_000));
+        let r = m
+            .run(DeviceOp::DirectHash { seg_bytes: 4096 }, data.clone())
+            .unwrap();
+        let JobOut::Digests(d) = r.out else { panic!() };
+        let want: Vec<_> = data.chunks(4096).map(md5).collect();
+        assert_eq!(d, want);
+        assert_eq!(r.input_len, 10_000);
+    }
+
+    #[test]
+    fn stream_of_jobs_all_complete() {
+        let m = Master::new(CrystalOpts::optimized(mock_backend(Default::default()))).unwrap();
+        let handles: Vec<_> = (0..20)
+            .map(|i| {
+                let data = Arc::new(Rng::new(i).bytes(4096 + i as usize * 100));
+                m.submit(DeviceOp::SlidingWindow, data)
+            })
+            .collect();
+        for h in handles {
+            let r = h.wait().unwrap();
+            let JobOut::Hashes(h) = r.out else { panic!() };
+            assert_eq!(h.len(), r.input_len - 48 + 1);
+        }
+        let stats = m.stats();
+        assert_eq!(stats.per_device.iter().sum::<u64>(), 20);
+        assert_eq!(stats.failures, 0);
+    }
+
+    #[test]
+    fn multi_device_balances() {
+        let opts = CrystalOpts {
+            devices: 2,
+            ..CrystalOpts::optimized(mock_backend(MockTuning {
+                fixed_delay: std::time::Duration::from_millis(2),
+                ..Default::default()
+            }))
+        };
+        let m = Master::new(opts).unwrap();
+        let handles: Vec<_> = (0..16)
+            .map(|i| m.submit(DeviceOp::SlidingWindow, Arc::new(Rng::new(i).bytes(4096))))
+            .collect();
+        for h in handles {
+            h.wait().unwrap();
+        }
+        let stats = m.stats();
+        assert_eq!(stats.per_device.len(), 2);
+        // Both devices did work (shared queue balances under delay).
+        assert!(stats.per_device[0] > 0, "{:?}", stats.per_device);
+        assert!(stats.per_device[1] > 0, "{:?}", stats.per_device);
+    }
+
+    #[test]
+    fn failure_injection_reported() {
+        let m = Master::new(CrystalOpts::optimized(mock_backend(MockTuning {
+            fail_every: Some(2),
+            ..Default::default()
+        })))
+        .unwrap();
+        let mut errs = 0;
+        for i in 0..6 {
+            let r = m.run(
+                DeviceOp::SlidingWindow,
+                Arc::new(Rng::new(i).bytes(4096)),
+            );
+            if r.is_err() {
+                errs += 1;
+            }
+        }
+        assert!(errs >= 2, "errs={errs}");
+        assert_eq!(m.stats().failures as usize, errs);
+    }
+
+    #[test]
+    fn drain_waits_for_inflight() {
+        let m = Master::new(CrystalOpts::optimized(mock_backend(MockTuning {
+            fixed_delay: std::time::Duration::from_millis(5),
+            ..Default::default()
+        })))
+        .unwrap();
+        let handles: Vec<_> = (0..4)
+            .map(|i| m.submit(DeviceOp::SlidingWindow, Arc::new(Rng::new(i).bytes(4096))))
+            .collect();
+        m.drain();
+        for h in handles {
+            assert!(h.try_wait().is_some(), "job not finished after drain");
+        }
+    }
+
+    #[test]
+    fn backpressure_blocks_at_cap() {
+        let opts = CrystalOpts {
+            queue_cap: 2,
+            ..CrystalOpts::optimized(mock_backend(MockTuning {
+                fixed_delay: std::time::Duration::from_millis(10),
+                ..Default::default()
+            }))
+        };
+        let m = Master::new(opts).unwrap();
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..8)
+            .map(|i| m.submit(DeviceOp::SlidingWindow, Arc::new(Rng::new(i).bytes(4096))))
+            .collect();
+        // With cap 2 and 10 ms jobs, submitting 8 must have blocked.
+        assert!(t0.elapsed().as_millis() >= 20);
+        for h in handles {
+            h.wait().unwrap();
+        }
+    }
+
+    #[test]
+    fn overlap_off_still_correct() {
+        let mut opts = CrystalOpts::optimized(mock_backend(Default::default()));
+        opts.overlap = false;
+        opts.buffer_reuse = false;
+        let m = Master::new(opts).unwrap();
+        let data = Arc::new(Rng::new(9).bytes(66_000));
+        let r = m.run(DeviceOp::SlidingWindow, data.clone()).unwrap();
+        let JobOut::Hashes(h) = r.out else { panic!() };
+        assert_eq!(
+            h,
+            crate::hash::window_hashes(&data, 48, crate::hash::DEFAULT_P)
+        );
+    }
+
+    #[test]
+    fn queue_wait_recorded() {
+        let m = Master::new(CrystalOpts::optimized(mock_backend(MockTuning {
+            fixed_delay: std::time::Duration::from_millis(5),
+            ..Default::default()
+        })))
+        .unwrap();
+        let handles: Vec<_> = (0..4)
+            .map(|i| m.submit(DeviceOp::SlidingWindow, Arc::new(Rng::new(i).bytes(4096))))
+            .collect();
+        let last = handles.into_iter().last().unwrap().wait().unwrap();
+        // The last of 4 serialized 5 ms jobs waited in queue.
+        assert!(last.timing.queued.as_millis() >= 5);
+    }
+}

@@ -1,0 +1,33 @@
+//! crystal — the CrystalGPU analog: a task-management runtime between the
+//! storage system and the accelerator(s).
+//!
+//! The metaphor is the paper's (§3.2.3): the application submits *jobs*
+//! to a shared **outstanding queue** and waits for callbacks; a
+//! **manager thread per device** pulls jobs, executes the device
+//! operation, and notifies the submitter.  The runtime transparently
+//! provides the paper's three optimizations:
+//!
+//! 1. **buffer reuse** — staging buffers come from a recycling pool
+//!    instead of being allocated per job (the paper's non-pageable
+//!    memory reuse);
+//! 2. **transfer/compute overlap** — each device gets a *stager* thread
+//!    that packs/pads the next job's input while the executor thread
+//!    runs the current kernel (the paper's CUDA-stream overlap);
+//! 3. **transparent multi-device** — one manager (stager+executor pair)
+//!    per device, all pulling from the shared outstanding queue.
+//!
+//! The backend is pluggable: [`device::PjrtBackend`] runs the real
+//! AOT-compiled artifacts through PJRT; [`device::MockBackend`] computes
+//! the same results on the CPU with injectable delays/failures for
+//! deterministic queue testing.
+
+pub mod buffers;
+pub mod device;
+pub mod master;
+pub mod model;
+pub mod task;
+
+pub use buffers::BufferPool;
+pub use device::{BackendKind, DeviceOut, MockTuning};
+pub use master::{CrystalOpts, CrystalStats, JobHandle, Master};
+pub use task::{DeviceOp, JobOut, JobResult, StageTimings};

@@ -1,0 +1,265 @@
+//! Calibrated analytic device model — the performance stand-in for the
+//! paper's GPUs (DESIGN.md §Substitutions).
+//!
+//! We cannot run a 2010 GTX 480; the figure harnesses instead use an
+//! analytic cost model of the five task stages, with constants anchored
+//! to the paper's *measured* end-points:
+//!
+//! * Fig 5 labels: dual-socket CPU (16 threads) sliding-window hashing
+//!   peaks at 129 MBps => single core ~16 MBps (8x claim);
+//! * Fig 5: GTX 480 full-stack sliding-window speedup ~125x on large
+//!   blocks => kernel+overlapped-transfer throughput ~2 GBps;
+//! * Fig 4: alloc+copy-in = 80–96 % of unoptimized time on large blocks;
+//! * PCIe 2.0 x16 ~ 8 GB/s raw, ~5.5 GB/s effective for pinned DMA,
+//!   ~2.5 GB/s effective for pageable (extra host copy);
+//! * pinned allocation ~ 0.5 ms/MB + 0.2 ms fixed (CUDA-era numbers).
+//!
+//! The CrystalGPU optimization *gains* (buffer reuse, overlap, dual-GPU)
+//! are NOT hard-coded: they emerge from how `sim::pipeline` composes
+//! these stage costs.
+
+/// Analytic per-stage cost model of one accelerator device.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceModel {
+    /// Fixed per-job driver/launch overhead (s).
+    pub launch_overhead: f64,
+    /// Staging-buffer (pinned) allocation: fixed (s) + per-byte (s/B).
+    pub alloc_fixed: f64,
+    /// Per-byte allocation cost (s/B).
+    pub alloc_per_byte: f64,
+    /// Host->device bandwidth with pinned buffers (B/s).
+    pub h2d_pinned: f64,
+    /// Host->device bandwidth with pageable buffers (B/s) — the 1-copy
+    /// penalty when buffer reuse is off.
+    pub h2d_pageable: f64,
+    /// Device->host bandwidth (B/s).
+    pub d2h: f64,
+    /// Sliding-window kernel throughput (input B/s).
+    pub sliding_bps: f64,
+    /// Direct-hash kernel throughput (input B/s).
+    pub direct_bps: f64,
+    /// Output bytes per input byte for sliding window (4 B hash/byte).
+    pub sliding_out_ratio: f64,
+    /// Output bytes per input byte for direct hash (16 B per segment).
+    pub direct_out_ratio: f64,
+}
+
+impl DeviceModel {
+    /// NVIDIA GeForce GTX 480 (480 cores @ 1.4 GHz), the paper's primary
+    /// device, behind PCIe 2.0 x16.  Constants solved from the paper's
+    /// anchor points (module docs): sliding kernel 2.0 GB/s gives the
+    /// ~125x fully-optimized speedup over the 16 MBps single-core CPU;
+    /// direct kernel 4.2 GB/s gives the ~28x direct-hash speedup over a
+    /// 150 MBps single-core MD5.
+    pub fn gtx480() -> Self {
+        DeviceModel {
+            launch_overhead: 60e-6,
+            alloc_fixed: 0.2e-3,
+            alloc_per_byte: 0.5e-3 / 1e6, // 0.5 ms per MB (pinned)
+            h2d_pinned: 5.5e9,
+            h2d_pageable: 2.5e9,
+            d2h: 12.0e9,
+            sliding_bps: 2.0e9,
+            direct_bps: 4.2e9,
+            sliding_out_ratio: 4.0,
+            direct_out_ratio: 16.0 / 4096.0,
+        }
+    }
+
+    /// NVIDIA Tesla C2050 (448 cores @ 1.1 GHz), the paper's second
+    /// device in the dual-GPU experiments — ~0.73x the GTX 480's rate.
+    pub fn tesla_c2050() -> Self {
+        let g = Self::gtx480();
+        DeviceModel {
+            sliding_bps: g.sliding_bps * 0.73,
+            direct_bps: g.direct_bps * 0.73,
+            ..g
+        }
+    }
+
+    /// Kernel seconds for `bytes` of input.
+    pub fn kernel_secs(&self, op_sliding: bool, bytes: usize) -> f64 {
+        let bps = if op_sliding {
+            self.sliding_bps
+        } else {
+            self.direct_bps
+        };
+        self.launch_overhead + bytes as f64 / bps
+    }
+
+    /// Host->device seconds for `bytes` (pinned or pageable path).
+    pub fn h2d_secs(&self, bytes: usize, pinned: bool) -> f64 {
+        let bw = if pinned {
+            self.h2d_pinned
+        } else {
+            self.h2d_pageable
+        };
+        bytes as f64 / bw
+    }
+
+    /// Device->host seconds for the op's output on `bytes` of input.
+    pub fn d2h_secs(&self, op_sliding: bool, bytes: usize) -> f64 {
+        let ratio = if op_sliding {
+            self.sliding_out_ratio
+        } else {
+            self.direct_out_ratio
+        };
+        bytes as f64 * ratio / self.d2h
+    }
+
+    /// Allocation seconds for the job's pinned staging buffers.  Both
+    /// the input and the output buffer must be pinned, so the cost
+    /// covers `in + out` bytes (for sliding-window ops the output is 4x
+    /// the input — a large part of why Fig 4's alloc share is so high).
+    pub fn alloc_secs_op(&self, op_sliding: bool, in_bytes: usize) -> f64 {
+        let ratio = if op_sliding {
+            self.sliding_out_ratio
+        } else {
+            self.direct_out_ratio
+        };
+        let total = in_bytes as f64 * (1.0 + ratio);
+        self.alloc_fixed + total * self.alloc_per_byte
+    }
+
+    /// Allocation seconds for a plain `bytes` staging buffer.
+    pub fn alloc_secs(&self, bytes: usize) -> f64 {
+        self.alloc_fixed + bytes as f64 * self.alloc_per_byte
+    }
+}
+
+/// CPU-side hashing cost model, anchored to the paper's measured CPU
+/// baselines (window hashing = MD5 per overlapping window).
+#[derive(Debug, Clone, Copy)]
+pub struct CpuModel {
+    /// Single-core direct (MD5) hashing throughput (B/s).
+    pub md5_bps: f64,
+    /// Single-core sliding-window (MD5-per-window) throughput (B/s).
+    pub window_md5_bps: f64,
+    /// Parallel-efficiency factor per extra thread (1.0 = linear).
+    pub smp_efficiency: f64,
+    /// Cores available.
+    pub cores: usize,
+}
+
+impl CpuModel {
+    /// Intel Xeon E5345-era quad core (paper's 2.33 GHz Xeon): one core.
+    /// Fig 5 labels give dual-socket (16 threads) window hashing at
+    /// 129 MBps => ~16 MBps per core with their MD5-per-window code.
+    pub fn xeon_2008() -> Self {
+        CpuModel {
+            md5_bps: 150e6,       // one-core MD5 of the era (Fig 6 anchor)
+            window_md5_bps: 16e6, // Fig 5 anchor (129 MBps / 8x @ dual)
+            smp_efficiency: 0.95,
+            cores: 4,
+        }
+    }
+
+    /// Effective throughput using `threads` threads on `self.cores`+ CPU.
+    pub fn scaled_bps(&self, single: f64, threads: usize) -> f64 {
+        let t = threads.max(1) as f64;
+        single * t * self.smp_efficiency.powf(t - 1.0)
+    }
+
+    /// Direct hashing seconds for `bytes` with `threads` threads.
+    pub fn direct_secs(&self, bytes: usize, threads: usize) -> f64 {
+        bytes as f64 / self.scaled_bps(self.md5_bps, threads)
+    }
+
+    /// Window hashing seconds for `bytes` with `threads` threads.
+    pub fn window_secs(&self, bytes: usize, threads: usize) -> f64 {
+        bytes as f64 / self.scaled_bps(self.window_md5_bps, threads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dual_socket_window_rate_matches_fig5_label() {
+        // 16 threads on the dual-socket machine: paper label 129 MBps.
+        let cpu = CpuModel::xeon_2008();
+        let bps = cpu.scaled_bps(cpu.window_md5_bps, 16);
+        let mbps = bps / (1024.0 * 1024.0);
+        assert!((110.0..160.0).contains(&mbps), "{mbps} MBps");
+    }
+
+    #[test]
+    fn kernel_dominates_only_for_large_blocks() {
+        let m = DeviceModel::gtx480();
+        // 4 KB: overheads dominate the kernel.
+        let small_kernel = m.kernel_secs(true, 4096);
+        let small_over = m.alloc_secs(4096) + m.h2d_secs(4096, false);
+        assert!(small_over > small_kernel);
+    }
+
+    #[test]
+    fn alloc_plus_copyin_dominate_unoptimized_large_blocks() {
+        // Fig 4's 80-96 % claim at large block sizes.
+        let m = DeviceModel::gtx480();
+        let b = 64 << 20;
+        let alloc = m.alloc_secs_op(true, b);
+        let h2d = m.h2d_secs(b, false);
+        let kernel = m.kernel_secs(true, b);
+        let d2h = m.d2h_secs(true, b);
+        let frac = (alloc + h2d) / (alloc + h2d + kernel + d2h);
+        assert!(frac > 0.70, "alloc+copyin fraction {frac}");
+    }
+
+    #[test]
+    fn unoptimized_gpu_beats_cpu_only_above_crossover() {
+        // Fig 5: HashGPU-alone loses to the CPU below ~64 KB blocks.
+        let m = DeviceModel::gtx480();
+        let cpu = CpuModel::xeon_2008();
+        let t_unopt = |b: usize| {
+            m.alloc_secs_op(true, b)
+                + m.h2d_secs(b, false)
+                + m.kernel_secs(true, b)
+                + m.d2h_secs(true, b)
+        };
+        assert!(t_unopt(4 << 10) > cpu.window_secs(4 << 10, 1), "4KB");
+        assert!(t_unopt(1 << 20) < cpu.window_secs(1 << 20, 1), "1MB");
+    }
+
+    #[test]
+    fn optimization_ladder_ordering() {
+        // alone < +reuse < +overlap < dual-GPU, as in Fig 5.
+        let m = DeviceModel::gtx480();
+        let b = 64 << 20;
+        let alone = m.alloc_secs_op(true, b)
+            + m.h2d_secs(b, false)
+            + m.kernel_secs(true, b)
+            + m.d2h_secs(true, b);
+        let reuse =
+            m.h2d_secs(b, true) + m.kernel_secs(true, b) + m.d2h_secs(true, b);
+        // Overlap pipelines the three stages across a stream: steady-
+        // state per-job time is the max stage.
+        let overlap = m
+            .h2d_secs(b, true)
+            .max(m.kernel_secs(true, b))
+            .max(m.d2h_secs(true, b));
+        let dual = overlap / (1.0 + 0.73);
+        assert!(alone > reuse && reuse > overlap && overlap > dual);
+    }
+
+    #[test]
+    fn gpu_sliding_speedup_band() {
+        // Full-stack (pinned, overlapped => kernel-bound) large-block
+        // speedup vs one CPU core should land in the paper's ~100-190x
+        // region before dual-GPU scaling.
+        let m = DeviceModel::gtx480();
+        let cpu = CpuModel::xeon_2008();
+        let b = 64 << 20;
+        let gpu = m.kernel_secs(true, b); // overlap hides transfers
+        let host = cpu.window_secs(b, 1);
+        let speedup = host / gpu;
+        assert!((80.0..260.0).contains(&speedup), "{speedup}x");
+    }
+
+    #[test]
+    fn c2050_slower_than_gtx480() {
+        assert!(
+            DeviceModel::tesla_c2050().sliding_bps < DeviceModel::gtx480().sliding_bps
+        );
+    }
+}

@@ -1,0 +1,106 @@
+//! Job types flowing through the crystal runtime.
+
+use std::time::Duration;
+
+use crate::hash::Digest;
+use crate::metrics::{Stage, StageBreakdown};
+
+/// The device operations HashGPU offloads (the paper's two kernels).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceOp {
+    /// Parallel Merkle–Damgård: per-segment MD5 digests of the input.
+    DirectHash {
+        /// Segment size in bytes (must match a compiled artifact family).
+        seg_bytes: usize,
+    },
+    /// Sliding-window rolling fingerprints of every window of the input.
+    SlidingWindow,
+}
+
+/// Per-stage wall-clock timings of one job (paper Table 1).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageTimings {
+    /// Stage 1: staging-buffer acquisition + pack/pad.
+    pub preprocess: Duration,
+    /// Stage 2: host -> device transfer.
+    pub copy_in: Duration,
+    /// Stage 3: kernel execution.
+    pub kernel: Duration,
+    /// Stage 4: device -> host transfer.
+    pub copy_out: Duration,
+    /// Stage 5: host post-processing (filled by the hashgpu layer).
+    pub postprocess: Duration,
+    /// Time spent waiting in the outstanding queue.
+    pub queued: Duration,
+}
+
+impl StageTimings {
+    /// Total across stages (excluding queue wait).
+    pub fn total(&self) -> Duration {
+        self.preprocess + self.copy_in + self.kernel + self.copy_out + self.postprocess
+    }
+
+    /// Fold into a [`StageBreakdown`].
+    pub fn record(&self, b: &mut StageBreakdown) {
+        b.add(Stage::Preprocess, self.preprocess);
+        b.add(Stage::CopyIn, self.copy_in);
+        b.add(Stage::Kernel, self.kernel);
+        b.add(Stage::CopyOut, self.copy_out);
+        b.add(Stage::Postprocess, self.postprocess);
+        b.end_task();
+    }
+}
+
+/// Output of a completed device job.
+#[derive(Debug, Clone)]
+pub enum JobOut {
+    /// Per-segment digests (DirectHash).  The *final* hash-of-hashes is
+    /// computed by the hashgpu layer on the host, per the paper.
+    Digests(Vec<Digest>),
+    /// Per-block groups of per-segment digests (batched direct hashing:
+    /// many blocks packed into each artifact execution so a whole
+    /// write-buffer costs one or two device calls instead of one per
+    /// block — EXPERIMENTS.md section Perf).
+    DigestGroups(Vec<Vec<Digest>>),
+    /// Window fingerprints (SlidingWindow), truncated to the valid
+    /// `len - window + 1` prefix.
+    Hashes(Vec<u32>),
+}
+
+/// A completed job: output + accounting.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    /// Device operation output.
+    pub out: JobOut,
+    /// Per-stage timings.
+    pub timing: StageTimings,
+    /// Device that executed the job.
+    pub device: usize,
+    /// Bytes of input covered.
+    pub input_len: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timings_total() {
+        let t = StageTimings {
+            preprocess: Duration::from_millis(1),
+            copy_in: Duration::from_millis(2),
+            kernel: Duration::from_millis(3),
+            copy_out: Duration::from_millis(4),
+            postprocess: Duration::from_millis(5),
+            queued: Duration::from_millis(100),
+        };
+        assert_eq!(t.total(), Duration::from_millis(15));
+    }
+
+    #[test]
+    fn record_counts_task() {
+        let mut b = StageBreakdown::new();
+        StageTimings::default().record(&mut b);
+        assert_eq!(b.tasks(), 1);
+    }
+}

@@ -1,0 +1,66 @@
+//! Unified error type for the crate.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Unified error enumeration across all subsystems.
+#[derive(Debug)]
+pub enum Error {
+    /// I/O error (files, sockets).
+    Io(std::io::Error),
+    /// XLA / PJRT error from the `xla` crate.
+    Xla(String),
+    /// Artifact registry problems (missing manifest, no bucket fits, ...).
+    Artifact(String),
+    /// Wire-protocol violations.
+    Proto(String),
+    /// Metadata-manager level errors (unknown file, version conflict, ...).
+    Manager(String),
+    /// Storage-node level errors (unknown block, ...).
+    Node(String),
+    /// Accelerator runtime errors (queue shut down, device failure, ...).
+    Crystal(String),
+    /// Configuration errors.
+    Config(String),
+    /// Anything else.
+    Other(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Xla(e) => write!(f, "xla: {e}"),
+            Error::Artifact(e) => write!(f, "artifact: {e}"),
+            Error::Proto(e) => write!(f, "proto: {e}"),
+            Error::Manager(e) => write!(f, "manager: {e}"),
+            Error::Node(e) => write!(f, "node: {e}"),
+            Error::Crystal(e) => write!(f, "crystal: {e}"),
+            Error::Config(e) => write!(f, "config: {e}"),
+            Error::Other(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+impl Error {
+    /// Shorthand constructor for ad-hoc errors.
+    pub fn msg(s: impl Into<String>) -> Self {
+        Error::Other(s.into())
+    }
+}

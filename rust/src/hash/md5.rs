@@ -1,0 +1,212 @@
+//! RFC 1321 MD5, incremental.  This is the CPU baseline primitive (the
+//! paper uses MD5 "in all our experiments") and the host-side final stage
+//! of the parallel Merkle–Damgård construction.  Bit-compatible with the
+//! Pallas kernel in `python/compile/kernels/md5.py`.
+
+/// A 16-byte MD5 digest.
+pub type Digest = [u8; 16];
+
+/// Per-round shift amounts.
+const S: [u32; 64] = [
+    7, 12, 17, 22, 7, 12, 17, 22, 7, 12, 17, 22, 7, 12, 17, 22, //
+    5, 9, 14, 20, 5, 9, 14, 20, 5, 9, 14, 20, 5, 9, 14, 20, //
+    4, 11, 16, 23, 4, 11, 16, 23, 4, 11, 16, 23, 4, 11, 16, 23, //
+    6, 10, 15, 21, 6, 10, 15, 21, 6, 10, 15, 21, 6, 10, 15, 21,
+];
+
+/// K[i] = floor(2^32 * |sin(i+1)|) — generated once at first use to keep
+/// the table out of the source (and provably identical to the kernel's).
+fn k_table() -> &'static [u32; 64] {
+    use std::sync::OnceLock;
+    static K: OnceLock<[u32; 64]> = OnceLock::new();
+    K.get_or_init(|| {
+        let mut k = [0u32; 64];
+        for (i, ki) in k.iter_mut().enumerate() {
+            *ki = (((i as f64) + 1.0).sin().abs() * 4294967296.0) as u64 as u32;
+        }
+        k
+    })
+}
+
+/// Incremental MD5 context.
+#[derive(Clone)]
+pub struct Md5 {
+    state: [u32; 4],
+    /// Total message bytes consumed so far.
+    len: u64,
+    /// Partially-filled block.
+    buf: [u8; 64],
+    buf_len: usize,
+}
+
+impl Default for Md5 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Md5 {
+    /// Fresh context with the RFC 1321 initialization vector.
+    pub fn new() -> Self {
+        Md5 {
+            state: [0x67452301, 0xEFCDAB89, 0x98BADCFE, 0x10325476],
+            len: 0,
+            buf: [0u8; 64],
+            buf_len: 0,
+        }
+    }
+
+    /// Absorb message bytes.
+    pub fn update(&mut self, mut data: &[u8]) {
+        self.len = self.len.wrapping_add(data.len() as u64);
+        if self.buf_len > 0 {
+            let take = (64 - self.buf_len).min(data.len());
+            self.buf[self.buf_len..self.buf_len + take].copy_from_slice(&data[..take]);
+            self.buf_len += take;
+            data = &data[take..];
+            if self.buf_len == 64 {
+                let block = self.buf;
+                self.compress(&block);
+                self.buf_len = 0;
+            }
+            if data.is_empty() {
+                return; // all input absorbed into the partial buffer
+            }
+        }
+        let mut chunks = data.chunks_exact(64);
+        for block in &mut chunks {
+            let mut b = [0u8; 64];
+            b.copy_from_slice(block);
+            self.compress(&b);
+        }
+        let rem = chunks.remainder();
+        self.buf[..rem.len()].copy_from_slice(rem);
+        self.buf_len = rem.len();
+    }
+
+    /// Finish and produce the digest.
+    pub fn finalize(mut self) -> Digest {
+        let bit_len = self.len.wrapping_mul(8);
+        self.update(&[0x80]);
+        while self.buf_len != 56 {
+            self.update(&[0]);
+        }
+        // Length block: write directly (update would re-count it).
+        self.buf[56..64].copy_from_slice(&bit_len.to_le_bytes());
+        let block = self.buf;
+        self.compress(&block);
+        let mut out = [0u8; 16];
+        for (i, s) in self.state.iter().enumerate() {
+            out[4 * i..4 * i + 4].copy_from_slice(&s.to_le_bytes());
+        }
+        out
+    }
+
+    fn compress(&mut self, block: &[u8; 64]) {
+        let k = k_table();
+        let mut m = [0u32; 16];
+        for (i, mi) in m.iter_mut().enumerate() {
+            *mi = u32::from_le_bytes([
+                block[4 * i],
+                block[4 * i + 1],
+                block[4 * i + 2],
+                block[4 * i + 3],
+            ]);
+        }
+        let [mut a, mut b, mut c, mut d] = self.state;
+        for i in 0..64 {
+            let (f, g) = match i {
+                0..=15 => ((b & c) | (!b & d), i),
+                16..=31 => ((d & b) | (!d & c), (5 * i + 1) % 16),
+                32..=47 => (b ^ c ^ d, (3 * i + 5) % 16),
+                _ => (c ^ (b | !d), (7 * i) % 16),
+            };
+            let tmp = d;
+            d = c;
+            c = b;
+            b = b.wrapping_add(
+                a.wrapping_add(f)
+                    .wrapping_add(k[i])
+                    .wrapping_add(m[g])
+                    .rotate_left(S[i]),
+            );
+            a = tmp;
+        }
+        self.state[0] = self.state[0].wrapping_add(a);
+        self.state[1] = self.state[1].wrapping_add(b);
+        self.state[2] = self.state[2].wrapping_add(c);
+        self.state[3] = self.state[3].wrapping_add(d);
+    }
+}
+
+/// One-shot MD5.
+pub fn md5(data: &[u8]) -> Digest {
+    let mut ctx = Md5::new();
+    ctx.update(data);
+    ctx.finalize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::hex;
+
+    // RFC 1321 appendix A.5 test suite.
+    #[test]
+    fn rfc1321_vectors() {
+        let cases: [(&[u8], &str); 7] = [
+            (b"", "d41d8cd98f00b204e9800998ecf8427e"),
+            (b"a", "0cc175b9c0f1b6a831c399e269772661"),
+            (b"abc", "900150983cd24fb0d6963f7d28e17f72"),
+            (b"message digest", "f96b697d7cb7938d525a2f31aaf161d0"),
+            (
+                b"abcdefghijklmnopqrstuvwxyz",
+                "c3fcd3d76192e4007dfb496cca67e13b",
+            ),
+            (
+                b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789",
+                "d174ab98d277d9f5a5611c2c9f419d9f",
+            ),
+            (
+                b"12345678901234567890123456789012345678901234567890123456789012345678901234567890",
+                "57edf4a22be3c955ac49da2e2107b67a",
+            ),
+        ];
+        for (input, want) in cases {
+            assert_eq!(hex(&md5(input)), want, "input {input:?}");
+        }
+    }
+
+    #[test]
+    fn incremental_equals_oneshot() {
+        let data: Vec<u8> = (0..1000u32).map(|i| (i * 7 + 3) as u8).collect();
+        for splits in [1usize, 3, 17, 64, 999] {
+            let mut ctx = Md5::new();
+            for chunk in data.chunks(splits) {
+                ctx.update(chunk);
+            }
+            assert_eq!(ctx.finalize(), md5(&data), "split {splits}");
+        }
+    }
+
+    #[test]
+    fn boundary_lengths() {
+        // Around padding boundaries: 55/56/57, 63/64/65 bytes.
+        for n in [0usize, 1, 55, 56, 57, 63, 64, 65, 119, 120, 121, 127, 128] {
+            let data = vec![0xABu8; n];
+            let d1 = md5(&data);
+            let mut ctx = Md5::new();
+            for b in &data {
+                ctx.update(std::slice::from_ref(b));
+            }
+            assert_eq!(ctx.finalize(), d1, "len {n}");
+        }
+    }
+
+    #[test]
+    fn million_a() {
+        // Classic long-message vector.
+        let data = vec![b'a'; 1_000_000];
+        assert_eq!(hex(&md5(&data)), "7707d6ae4e027c70eea2a935c2296f21");
+    }
+}

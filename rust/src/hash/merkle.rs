@@ -1,0 +1,144 @@
+//! Parallel Merkle–Damgård construction — the system's block hash.
+//!
+//! A data block is split into fixed-size segments; each segment is MD5'd
+//! (in parallel, on the accelerator or across CPU threads) and the block
+//! digest is the MD5 of the concatenated segment digests.  Damgård [26]
+//! shows the construction is as strong as the underlying hash.
+//!
+//! Exactly as in the paper's HashGPU, the final hash-of-hashes runs on the
+//! host CPU ("efficiently synchronizing all running GPU threads is not
+//! possible"), so this module is the *shared last stage* of both the CPU
+//! and the accelerator paths — guaranteeing they agree on block identity.
+
+use super::md5::{md5, Digest, Md5};
+
+/// Number of segments a block of `len` bytes splits into.
+pub fn segment_count(len: usize, seg_bytes: usize) -> usize {
+    len.div_ceil(seg_bytes).max(1)
+}
+
+/// Host-side final stage: MD5 over the concatenated segment digests.
+///
+/// A single-segment block short-circuits to its segment digest so that
+/// small blocks hash identically to plain MD5 (and avoid a pointless
+/// second pass).
+pub fn finalize_digests(digests: &[Digest]) -> Digest {
+    assert!(!digests.is_empty());
+    if digests.len() == 1 {
+        return digests[0];
+    }
+    let mut ctx = Md5::new();
+    for d in digests {
+        ctx.update(d);
+    }
+    ctx.finalize()
+}
+
+/// Reference CPU implementation of the full construction (single thread).
+/// The accelerator path must produce the same digest for the same
+/// `seg_bytes` — asserted by unit and integration tests.
+pub fn direct_hash_cpu(data: &[u8], seg_bytes: usize) -> Digest {
+    if data.is_empty() {
+        return md5(data);
+    }
+    let digests: Vec<Digest> = data.chunks(seg_bytes).map(md5).collect();
+    finalize_digests(&digests)
+}
+
+/// Multi-threaded CPU implementation — the paper's "dual socket CPU"
+/// baseline.  Splits segments across `threads` OS threads.
+pub fn direct_hash_cpu_mt(data: &[u8], seg_bytes: usize, threads: usize) -> Digest {
+    if data.is_empty() {
+        return md5(data);
+    }
+    let n_segs = segment_count(data.len(), seg_bytes);
+    if threads <= 1 || n_segs < 2 * threads {
+        return direct_hash_cpu(data, seg_bytes);
+    }
+    let mut digests = vec![[0u8; 16]; n_segs];
+    let per = n_segs.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (t, out) in digests.chunks_mut(per).enumerate() {
+            let start_seg = t * per;
+            s.spawn(move || {
+                for (k, d) in out.iter_mut().enumerate() {
+                    let seg = start_seg + k;
+                    let lo = seg * seg_bytes;
+                    let hi = ((seg + 1) * seg_bytes).min(data.len());
+                    *d = md5(&data[lo..hi]);
+                }
+            });
+        }
+    });
+    finalize_digests(&digests)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn single_segment_is_plain_md5() {
+        let data = Rng::new(1).bytes(100);
+        assert_eq!(direct_hash_cpu(&data, 4096), md5(&data));
+    }
+
+    #[test]
+    fn multi_segment_differs_from_plain() {
+        let data = Rng::new(2).bytes(10_000);
+        assert_ne!(direct_hash_cpu(&data, 4096), md5(&data));
+    }
+
+    #[test]
+    fn deterministic() {
+        let data = Rng::new(3).bytes(9_999);
+        assert_eq!(direct_hash_cpu(&data, 256), direct_hash_cpu(&data, 256));
+    }
+
+    #[test]
+    fn segment_size_is_part_of_identity() {
+        let data = Rng::new(4).bytes(10_000);
+        assert_ne!(direct_hash_cpu(&data, 256), direct_hash_cpu(&data, 4096));
+    }
+
+    #[test]
+    fn mt_matches_single_thread() {
+        let data = Rng::new(5).bytes(100_000);
+        for threads in [1, 2, 4, 8, 16] {
+            assert_eq!(
+                direct_hash_cpu_mt(&data, 4096, threads),
+                direct_hash_cpu(&data, 4096),
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn mt_small_input_falls_back() {
+        let data = Rng::new(6).bytes(300);
+        assert_eq!(
+            direct_hash_cpu_mt(&data, 256, 8),
+            direct_hash_cpu(&data, 256)
+        );
+    }
+
+    #[test]
+    fn segment_count_math() {
+        assert_eq!(segment_count(0, 256), 1);
+        assert_eq!(segment_count(1, 256), 1);
+        assert_eq!(segment_count(256, 256), 1);
+        assert_eq!(segment_count(257, 256), 2);
+        assert_eq!(segment_count(1 << 20, 4096), 256);
+    }
+
+    #[test]
+    fn finalize_matches_manual() {
+        let d1 = md5(b"one");
+        let d2 = md5(b"two");
+        let mut cat = Vec::new();
+        cat.extend_from_slice(&d1);
+        cat.extend_from_slice(&d2);
+        assert_eq!(finalize_digests(&[d1, d2]), md5(&cat));
+    }
+}

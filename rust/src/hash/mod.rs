@@ -1,0 +1,12 @@
+//! Hashing substrates: RFC 1321 MD5 (the paper's hash in all experiments),
+//! the polynomial rolling fingerprint shared bit-for-bit with the Pallas
+//! kernel, and the host-side final stage of the parallel Merkle–Damgård
+//! construction.
+
+pub mod md5;
+pub mod merkle;
+pub mod rolling;
+
+pub use md5::{md5, Digest, Md5};
+pub use merkle::{direct_hash_cpu, direct_hash_cpu_mt, finalize_digests, segment_count};
+pub use rolling::{window_hashes, RollingHasher, DEFAULT_P, DEFAULT_WINDOW};

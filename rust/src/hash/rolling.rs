@@ -1,0 +1,187 @@
+//! Polynomial rolling fingerprint — the sliding-window hash.
+//!
+//! `H(i) = sum_{j=0..W-1} b[i+j] * p^(W-1-j)  (mod 2^32)`
+//!
+//! Must stay bit-for-bit identical to the Pallas kernel
+//! (`python/compile/kernels/rolling.py`): the storage system's chunk
+//! boundaries must not depend on whether the window hashes were produced
+//! on the CPU or on the accelerator, otherwise CA-CPU and CA-GPU nodes
+//! would disagree on block identity.
+
+/// Default polynomial base (FNV prime; odd so it is invertible mod 2^32).
+/// Shared with the Python kernel.
+pub const DEFAULT_P: u32 = 0x0100_0193;
+
+/// Default window width in bytes. Shared with the Python kernel.
+pub const DEFAULT_WINDOW: usize = 48;
+
+/// Incremental rolling hasher: O(1) per byte once primed.
+///
+/// `roll` maintains `H(i)` for the window ending at the last pushed byte:
+/// `H' = (H - b_out * p^(W-1)) * p + b_in`.
+#[derive(Debug, Clone)]
+pub struct RollingHasher {
+    p: u32,
+    window: usize,
+    /// p^(W-1) mod 2^32, precomputed.
+    p_pow_w1: u32,
+    /// Circular buffer of the current window's bytes.
+    buf: Vec<u8>,
+    pos: usize,
+    filled: usize,
+    h: u32,
+}
+
+impl RollingHasher {
+    /// New hasher with explicit parameters.
+    pub fn with_params(window: usize, p: u32) -> Self {
+        assert!(window >= 1);
+        assert!(p % 2 == 1, "p must be odd (invertible mod 2^32)");
+        let mut p_pow_w1 = 1u32;
+        for _ in 0..window - 1 {
+            p_pow_w1 = p_pow_w1.wrapping_mul(p);
+        }
+        RollingHasher {
+            p,
+            window,
+            p_pow_w1,
+            buf: vec![0; window],
+            pos: 0,
+            filled: 0,
+            h: 0,
+        }
+    }
+
+    /// New hasher with the kernel-shared defaults.
+    pub fn new() -> Self {
+        Self::with_params(DEFAULT_WINDOW, DEFAULT_P)
+    }
+
+    /// Window width.
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// Push one byte; returns `Some(H)` once a full window is present.
+    #[inline]
+    pub fn roll(&mut self, b: u8) -> Option<u32> {
+        if self.filled == self.window {
+            let out = self.buf[self.pos] as u32;
+            self.h = self
+                .h
+                .wrapping_sub(out.wrapping_mul(self.p_pow_w1))
+                .wrapping_mul(self.p)
+                .wrapping_add(b as u32);
+        } else {
+            self.h = self.h.wrapping_mul(self.p).wrapping_add(b as u32);
+            self.filled += 1;
+        }
+        self.buf[self.pos] = b;
+        self.pos = (self.pos + 1) % self.window;
+        (self.filled == self.window).then_some(self.h)
+    }
+
+    /// Reset to the empty state (reusing the allocation).
+    pub fn reset(&mut self) {
+        self.pos = 0;
+        self.filled = 0;
+        self.h = 0;
+    }
+}
+
+impl Default for RollingHasher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// All window hashes of `data`: `out[i] = H(i)` for every window start
+/// `i in 0 ..= data.len() - window`.  Matches the Pallas kernel's output
+/// layout exactly.  Returns an empty vec if `data.len() < window`.
+pub fn window_hashes(data: &[u8], window: usize, p: u32) -> Vec<u32> {
+    if data.len() < window {
+        return Vec::new();
+    }
+    let mut out = Vec::with_capacity(data.len() - window + 1);
+    let mut rh = RollingHasher::with_params(window, p);
+    for &b in data {
+        if let Some(h) = rh.roll(b) {
+            out.push(h);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// O(W) reference for one window (independent of the rolling update).
+    fn horner(win: &[u8], p: u32) -> u32 {
+        win.iter()
+            .fold(0u32, |h, &b| h.wrapping_mul(p).wrapping_add(b as u32))
+    }
+
+    #[test]
+    fn rolling_equals_horner() {
+        let data = Rng::new(1).bytes(4096);
+        let hashes = window_hashes(&data, DEFAULT_WINDOW, DEFAULT_P);
+        assert_eq!(hashes.len(), 4096 - DEFAULT_WINDOW + 1);
+        for (i, &h) in hashes.iter().enumerate().step_by(97) {
+            assert_eq!(h, horner(&data[i..i + DEFAULT_WINDOW], DEFAULT_P), "i={i}");
+        }
+    }
+
+    #[test]
+    fn short_input_empty() {
+        assert!(window_hashes(&[1, 2, 3], 48, DEFAULT_P).is_empty());
+    }
+
+    #[test]
+    fn exact_window_single_hash() {
+        let data = Rng::new(2).bytes(48);
+        let h = window_hashes(&data, 48, DEFAULT_P);
+        assert_eq!(h.len(), 1);
+        assert_eq!(h[0], horner(&data, DEFAULT_P));
+    }
+
+    #[test]
+    fn window_1() {
+        let data = [5u8, 6, 7];
+        assert_eq!(window_hashes(&data, 1, DEFAULT_P), vec![5, 6, 7]);
+    }
+
+    #[test]
+    fn reset_reuses_state() {
+        let data = Rng::new(3).bytes(100);
+        let mut rh = RollingHasher::new();
+        let a: Vec<u32> = data.iter().filter_map(|&b| rh.roll(b)).collect();
+        rh.reset();
+        let b: Vec<u32> = data.iter().filter_map(|&b| rh.roll(b)).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn hash_depends_only_on_window_content() {
+        // The same 48 bytes embedded at different stream positions must
+        // produce the same hash (the content-defined-chunking property).
+        let win = Rng::new(4).bytes(48);
+        let mut s1 = Rng::new(5).bytes(100);
+        s1.extend_from_slice(&win);
+        let mut s2 = Rng::new(6).bytes(37);
+        s2.extend_from_slice(&win);
+        let h1 = window_hashes(&s1, 48, DEFAULT_P);
+        let h2 = window_hashes(&s2, 48, DEFAULT_P);
+        assert_eq!(h1[100], h2[37]);
+    }
+
+    /// Cross-check against the Python kernel's test vector generation:
+    /// same constants, same math. (The authoritative cross-language check
+    /// lives in tests/cross_language.rs using artifact execution.)
+    #[test]
+    fn matches_kernel_constants() {
+        assert_eq!(DEFAULT_P, 0x0100_0193);
+        assert_eq!(DEFAULT_WINDOW, 48);
+    }
+}

@@ -1,0 +1,471 @@
+//! Hash engine implementations.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::config::{ClientConfig, HashEngineKind};
+use crate::crystal::{BackendKind, CrystalOpts, DeviceOp, Master};
+use crate::crystal::task::JobOut;
+use crate::hash::{finalize_digests, window_hashes, Digest, Md5};
+use crate::metrics::{Stage, StageBreakdown};
+use crate::{Error, Result};
+
+/// How a CPU engine computes window hashes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WindowHashMode {
+    /// MD5 of every overlapping window, low 4 digest bytes as the hash —
+    /// the paper's CPU implementation (7–51 MBps on 2008 hardware, the
+    /// bottleneck that motivates GPU offloading).
+    PaperMd5,
+    /// The rolling polynomial fingerprint (what the accelerator runs).
+    /// Ablation mode: shows how a modern CPU CDC implementation shifts
+    /// the crossover points.
+    Rolling,
+}
+
+/// A provider of the two hashing primitives.
+pub trait HashEngine: Send + Sync {
+    /// Block digest via the parallel Merkle–Damgård construction.
+    fn direct_hash(&self, data: &[u8]) -> Result<Digest>;
+
+    /// Digest a batch of blocks (the SAI submits one write-buffer's
+    /// blocks at once — the batching the paper adds for GPU offload).
+    fn direct_hash_batch(&self, blocks: &[&[u8]]) -> Result<Vec<Digest>> {
+        blocks.iter().map(|b| self.direct_hash(b)).collect()
+    }
+
+    /// Hashes of every overlapping window of `data` (window width is the
+    /// engine's compiled/configured width).
+    fn window_hashes(&self, data: &[u8]) -> Result<Vec<u32>>;
+
+    /// Window width used by [`window_hashes`](Self::window_hashes).
+    fn window(&self) -> usize;
+
+    /// Engine label ("cpu", "gpu", "oracle").
+    fn name(&self) -> &'static str;
+
+    /// Per-stage timing breakdown accumulated so far (GPU engines).
+    fn stage_breakdown(&self) -> Option<StageBreakdown> {
+        None
+    }
+}
+
+// ---------------------------------------------------------------- CPU ----
+
+/// CPU engine: the paper's CA-CPU configuration.
+pub struct CpuEngine {
+    threads: usize,
+    seg_bytes: usize,
+    window: usize,
+    p: u32,
+    mode: WindowHashMode,
+}
+
+impl CpuEngine {
+    /// `threads` hashing threads; `seg_bytes` is the Merkle–Damgård
+    /// segment size (must match the accelerator artifacts for identity).
+    pub fn new(threads: usize, seg_bytes: usize, mode: WindowHashMode) -> Self {
+        CpuEngine {
+            threads: threads.max(1),
+            seg_bytes,
+            window: crate::hash::DEFAULT_WINDOW,
+            p: crate::hash::DEFAULT_P,
+            mode,
+        }
+    }
+
+    fn window_md5(&self, data: &[u8]) -> Vec<u32> {
+        let w = self.window;
+        if data.len() < w {
+            return Vec::new();
+        }
+        let n_out = data.len() - w + 1;
+        let mut out = vec![0u32; n_out];
+        let threads = self.threads.min(n_out.max(1));
+        if threads <= 1 {
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = md5_window_value(&data[i..i + w]);
+            }
+            return out;
+        }
+        let per = n_out.div_ceil(threads);
+        std::thread::scope(|s| {
+            for (t, chunk) in out.chunks_mut(per).enumerate() {
+                let start = t * per;
+                s.spawn(move || {
+                    for (k, o) in chunk.iter_mut().enumerate() {
+                        let i = start + k;
+                        *o = md5_window_value(&data[i..i + w]);
+                    }
+                });
+            }
+        });
+        out
+    }
+}
+
+/// Low 4 bytes (LE) of the window's MD5 — the paper's window hash value.
+fn md5_window_value(win: &[u8]) -> u32 {
+    let mut ctx = Md5::new();
+    ctx.update(win);
+    let d = ctx.finalize();
+    u32::from_le_bytes([d[0], d[1], d[2], d[3]])
+}
+
+impl HashEngine for CpuEngine {
+    fn direct_hash(&self, data: &[u8]) -> Result<Digest> {
+        Ok(crate::hash::merkle::direct_hash_cpu_mt(
+            data,
+            self.seg_bytes,
+            self.threads,
+        ))
+    }
+
+    fn window_hashes(&self, data: &[u8]) -> Result<Vec<u32>> {
+        Ok(match self.mode {
+            WindowHashMode::PaperMd5 => self.window_md5(data),
+            WindowHashMode::Rolling => window_hashes(data, self.window, self.p),
+        })
+    }
+
+    fn window(&self) -> usize {
+        self.window
+    }
+
+    fn name(&self) -> &'static str {
+        "cpu"
+    }
+}
+
+// ---------------------------------------------------------------- GPU ----
+
+/// Accelerator engine: submits jobs to the crystal runtime and finishes
+/// the host-side stage (hash-of-hashes) itself — CA-GPU.
+pub struct GpuEngine {
+    master: Arc<Master>,
+    seg_bytes: usize,
+    window: usize,
+    breakdown: Mutex<StageBreakdown>,
+}
+
+impl GpuEngine {
+    /// Wrap an existing crystal runtime.
+    pub fn new(master: Arc<Master>, seg_bytes: usize, window: usize) -> Self {
+        GpuEngine {
+            master,
+            seg_bytes,
+            window,
+            breakdown: Mutex::new(StageBreakdown::new()),
+        }
+    }
+
+    /// The underlying crystal runtime (stats, drain).
+    pub fn master(&self) -> &Arc<Master> {
+        &self.master
+    }
+
+    fn record(&self, timing: &crate::crystal::StageTimings, post: std::time::Duration) {
+        let mut b = self.breakdown.lock().unwrap();
+        timing.record(&mut b);
+        b.add(Stage::Postprocess, post);
+    }
+}
+
+impl HashEngine for GpuEngine {
+    fn direct_hash(&self, data: &[u8]) -> Result<Digest> {
+        Ok(self.direct_hash_batch(&[data])?[0])
+    }
+
+    fn direct_hash_batch(&self, blocks: &[&[u8]]) -> Result<Vec<Digest>> {
+        if blocks.is_empty() {
+            return Ok(Vec::new());
+        }
+        // One crystal job for the whole batch: the planner packs every
+        // block's segments into as few device executions as possible
+        // (per-block submission paid one execution per block —
+        // EXPERIMENTS.md section Perf).
+        let owned: Arc<Vec<Vec<u8>>> = Arc::new(blocks.iter().map(|b| b.to_vec()).collect());
+        let r = self.master.submit_batch(self.seg_bytes, owned).wait()?;
+        let JobOut::DigestGroups(groups) = &r.out else {
+            return Err(Error::Crystal("wrong output kind".into()));
+        };
+        if groups.len() != blocks.len() {
+            return Err(Error::Crystal(format!(
+                "batch returned {} groups for {} blocks",
+                groups.len(),
+                blocks.len()
+            )));
+        }
+        // Host-side final stage (paper: the CPU computes the final hash
+        // of the intermediate hashes).
+        let t0 = Instant::now();
+        let out: Vec<Digest> = groups.iter().map(|g| finalize_digests(g)).collect();
+        self.record(&r.timing, t0.elapsed());
+        Ok(out)
+    }
+
+    fn window_hashes(&self, data: &[u8]) -> Result<Vec<u32>> {
+        let r = self
+            .master
+            .run(DeviceOp::SlidingWindow, Arc::new(data.to_vec()))?;
+        let JobOut::Hashes(h) = r.out else {
+            return Err(Error::Crystal("wrong output kind".into()));
+        };
+        self.record(&r.timing, std::time::Duration::ZERO);
+        Ok(h)
+    }
+
+    fn window(&self) -> usize {
+        self.window
+    }
+
+    fn name(&self) -> &'static str {
+        "gpu"
+    }
+
+    fn stage_breakdown(&self) -> Option<StageBreakdown> {
+        Some(self.breakdown.lock().unwrap().clone())
+    }
+}
+
+// ------------------------------------------------------------- Oracle ----
+
+/// CA-Infinite: "computes the hash function instantly" (paper §4.4).
+/// Uses a cheap 128-bit mixing fingerprint instead of MD5 — collision-
+/// safe for dedup experiments, near-free to compute — and the rolling
+/// fingerprint for windows.
+pub struct OracleEngine {
+    window: usize,
+    p: u32,
+}
+
+impl OracleEngine {
+    /// Default-window oracle.
+    pub fn new() -> Self {
+        OracleEngine {
+            window: crate::hash::DEFAULT_WINDOW,
+            p: crate::hash::DEFAULT_P,
+        }
+    }
+}
+
+impl Default for OracleEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Fast 128-bit fingerprint (two independent 64-bit lanes of
+/// multiply-xor mixing over 8-byte words).
+fn oracle_fingerprint(data: &[u8]) -> Digest {
+    const M1: u64 = 0x9E37_79B9_7F4A_7C15;
+    const M2: u64 = 0xC2B2_AE3D_27D4_EB4F;
+    let mut h1 = 0x8422_2325_CBF2_9CE4u64 ^ (data.len() as u64).wrapping_mul(M1);
+    let mut h2 = 0xCBF2_9CE4_8422_2325u64 ^ (data.len() as u64).wrapping_mul(M2);
+    let mut chunks = data.chunks_exact(8);
+    for c in &mut chunks {
+        let w = u64::from_le_bytes(c.try_into().unwrap());
+        h1 = (h1 ^ w).wrapping_mul(M1).rotate_left(31);
+        h2 = (h2 ^ w.rotate_left(17)).wrapping_mul(M2).rotate_left(29);
+    }
+    let rem = chunks.remainder();
+    if !rem.is_empty() {
+        let mut b = [0u8; 8];
+        b[..rem.len()].copy_from_slice(rem);
+        let w = u64::from_le_bytes(b);
+        h1 = (h1 ^ w).wrapping_mul(M1).rotate_left(31);
+        h2 = (h2 ^ w.rotate_left(17)).wrapping_mul(M2).rotate_left(29);
+    }
+    h1 ^= h1 >> 33;
+    h1 = h1.wrapping_mul(M2);
+    h1 ^= h1 >> 29;
+    h2 ^= h2 >> 31;
+    h2 = h2.wrapping_mul(M1);
+    h2 ^= h2 >> 27;
+    let mut out = [0u8; 16];
+    out[..8].copy_from_slice(&h1.to_le_bytes());
+    out[8..].copy_from_slice(&h2.to_le_bytes());
+    out
+}
+
+impl HashEngine for OracleEngine {
+    fn direct_hash(&self, data: &[u8]) -> Result<Digest> {
+        Ok(oracle_fingerprint(data))
+    }
+
+    fn window_hashes(&self, data: &[u8]) -> Result<Vec<u32>> {
+        Ok(window_hashes(data, self.window, self.p))
+    }
+
+    fn window(&self) -> usize {
+        self.window
+    }
+
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+}
+
+// ------------------------------------------------------------ factory ----
+
+/// Build the engine a [`ClientConfig`] asks for.  GPU engines get a
+/// dedicated crystal runtime over the PJRT backend with artifacts from
+/// `artifact_dir` (None = default directory).
+pub fn build_engine(
+    cfg: &ClientConfig,
+    artifact_dir: Option<std::path::PathBuf>,
+) -> Result<Arc<dyn HashEngine>> {
+    let dir =
+        artifact_dir.unwrap_or_else(crate::runtime::artifacts::Manifest::default_dir);
+    Ok(match cfg.engine {
+        HashEngineKind::Cpu { threads } => Arc::new(CpuEngine::new(
+            threads,
+            cfg.segment_bytes,
+            WindowHashMode::PaperMd5,
+        )),
+        HashEngineKind::Gpu {
+            devices,
+            buffer_reuse,
+            overlap,
+        } => {
+            let opts = CrystalOpts {
+                devices,
+                buffer_reuse,
+                overlap,
+                ..CrystalOpts::optimized(BackendKind::Pjrt { artifact_dir: dir })
+            };
+            let master = Arc::new(Master::new(opts)?);
+            Arc::new(GpuEngine::new(
+                master,
+                cfg.segment_bytes,
+                crate::hash::DEFAULT_WINDOW,
+            ))
+        }
+        HashEngineKind::Oracle => Arc::new(OracleEngine::new()),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crystal::MockTuning;
+    use crate::hash::direct_hash_cpu;
+    use crate::runtime::artifacts::Manifest;
+    use crate::util::Rng;
+
+    fn gpu_engine_mock() -> GpuEngine {
+        let opts = CrystalOpts::optimized(BackendKind::Mock {
+            artifact_dir: Manifest::default_dir(),
+            tuning: MockTuning::default(),
+        });
+        GpuEngine::new(Arc::new(Master::new(opts).unwrap()), 4096, 48)
+    }
+
+    #[test]
+    fn cpu_direct_uses_construction() {
+        let e = CpuEngine::new(2, 4096, WindowHashMode::Rolling);
+        let data = Rng::new(1).bytes(50_000);
+        assert_eq!(e.direct_hash(&data).unwrap(), direct_hash_cpu(&data, 4096));
+    }
+
+    #[test]
+    fn gpu_and_cpu_direct_agree() {
+        let gpu = gpu_engine_mock();
+        let cpu = CpuEngine::new(1, 4096, WindowHashMode::Rolling);
+        for len in [0usize, 100, 4096, 70_000] {
+            let data = Rng::new(len as u64).bytes(len);
+            assert_eq!(
+                gpu.direct_hash(&data).unwrap(),
+                cpu.direct_hash(&data).unwrap(),
+                "len={len}"
+            );
+        }
+    }
+
+    #[test]
+    fn gpu_batch_matches_individual() {
+        let gpu = gpu_engine_mock();
+        let blocks: Vec<Vec<u8>> = (0..5).map(|i| Rng::new(i).bytes(10_000)).collect();
+        let refs: Vec<&[u8]> = blocks.iter().map(|b| b.as_slice()).collect();
+        let batch = gpu.direct_hash_batch(&refs).unwrap();
+        for (b, d) in blocks.iter().zip(&batch) {
+            assert_eq!(gpu.direct_hash(b).unwrap(), *d);
+        }
+    }
+
+    #[test]
+    fn gpu_window_hashes_match_rolling_cpu() {
+        let gpu = gpu_engine_mock();
+        let cpu = CpuEngine::new(1, 4096, WindowHashMode::Rolling);
+        let data = Rng::new(3).bytes(70_000);
+        assert_eq!(
+            gpu.window_hashes(&data).unwrap(),
+            cpu.window_hashes(&data).unwrap()
+        );
+    }
+
+    #[test]
+    fn paper_md5_window_mode_differs_but_same_len() {
+        let md5e = CpuEngine::new(2, 4096, WindowHashMode::PaperMd5);
+        let rolle = CpuEngine::new(2, 4096, WindowHashMode::Rolling);
+        let data = Rng::new(4).bytes(1000);
+        let a = md5e.window_hashes(&data).unwrap();
+        let b = rolle.window_hashes(&data).unwrap();
+        assert_eq!(a.len(), b.len());
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn md5_window_mode_thread_invariant() {
+        let e1 = CpuEngine::new(1, 4096, WindowHashMode::PaperMd5);
+        let e8 = CpuEngine::new(8, 4096, WindowHashMode::PaperMd5);
+        let data = Rng::new(5).bytes(2000);
+        assert_eq!(
+            e1.window_hashes(&data).unwrap(),
+            e8.window_hashes(&data).unwrap()
+        );
+    }
+
+    #[test]
+    fn oracle_deterministic_and_distinct() {
+        let o = OracleEngine::new();
+        let a = Rng::new(6).bytes(1000);
+        let b = Rng::new(7).bytes(1000);
+        assert_eq!(o.direct_hash(&a).unwrap(), o.direct_hash(&a).unwrap());
+        assert_ne!(o.direct_hash(&a).unwrap(), o.direct_hash(&b).unwrap());
+    }
+
+    #[test]
+    fn oracle_fingerprint_avalanche() {
+        // Flipping one bit should change the fingerprint.
+        let mut data = Rng::new(8).bytes(256);
+        let d1 = oracle_fingerprint(&data);
+        data[100] ^= 1;
+        let d2 = oracle_fingerprint(&data);
+        assert_ne!(d1, d2);
+        let diff: u32 = d1
+            .iter()
+            .zip(&d2)
+            .map(|(a, b)| (a ^ b).count_ones())
+            .sum();
+        assert!(diff > 20, "weak avalanche: {diff} bits");
+    }
+
+    #[test]
+    fn stage_breakdown_accumulates() {
+        let gpu = gpu_engine_mock();
+        let data = Rng::new(9).bytes(10_000);
+        gpu.direct_hash(&data).unwrap();
+        gpu.window_hashes(&data).unwrap();
+        let b = gpu.stage_breakdown().unwrap();
+        assert_eq!(b.tasks(), 2);
+    }
+
+    #[test]
+    fn factory_builds_cpu_and_oracle() {
+        let cfg = ClientConfig::ca_cpu_fixed(2);
+        assert_eq!(build_engine(&cfg, None).unwrap().name(), "cpu");
+        let cfg = ClientConfig::ca_infinite(crate::config::CaMode::Fixed);
+        assert_eq!(build_engine(&cfg, None).unwrap().name(), "oracle");
+    }
+}

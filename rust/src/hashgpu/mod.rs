@@ -1,0 +1,22 @@
+//! hashgpu — the HashGPU analog: the two hashing primitives storage
+//! systems need (direct hashing, sliding-window hashing) behind a common
+//! [`HashEngine`] trait, with CPU, accelerator (crystal), and oracle
+//! implementations — the paper's CA-CPU / CA-GPU / CA-Infinite configs.
+//!
+//! Identity guarantees:
+//! * **Direct hashing** uses the parallel Merkle–Damgård construction on
+//!   *every* engine (CPU and GPU paths produce identical block digests,
+//!   so mixed deployments agree on block identity).  The final
+//!   hash-of-hashes always runs on the host CPU, as in the paper.
+//! * **Window hashing** is engine-specific by design: the CPU baseline
+//!   reproduces the paper's implementation (MD5 of every overlapping
+//!   window — the cost that motivates offloading), while the
+//!   accelerator runs the TPU-adapted rolling fingerprint
+//!   (DESIGN.md §Hardware-Adaptation).  Each configuration is
+//!   self-consistent; expected chunk-size statistics are identical.
+
+pub mod engine;
+
+pub use engine::{
+    build_engine, CpuEngine, GpuEngine, HashEngine, OracleEngine, WindowHashMode,
+};

@@ -1,0 +1,35 @@
+//! # gpustore — "GPUs as Storage System Accelerators" (TPDS 2012), reproduced
+//!
+//! A content-addressable distributed storage system (the paper's MosaStore)
+//! whose hashing hot path — direct hashing for fixed-size blocks and
+//! sliding-window hashing for content-based chunking — can be offloaded to
+//! an accelerator through AOT-compiled XLA executables (authored as
+//! JAX/Pallas kernels, lowered once at build time, executed from rust via
+//! the PJRT C API).
+//!
+//! Layer map (see DESIGN.md):
+//! - [`store`] — MosaStore analog: metadata manager, storage nodes, client SAI.
+//! - [`crystal`] — CrystalGPU analog: accelerator task runtime (queues,
+//!   buffer reuse, transfer/compute overlap, multi-device).
+//! - [`hashgpu`] — HashGPU analog: the two hashing primitives over crystal.
+//! - [`runtime`] — PJRT artifact loading/execution (`xla` crate).
+//! - [`hash`], [`chunking`] — CPU baselines + host-side final stages.
+//! - [`sim`] — discrete-event performance model used by the figure benches.
+//! - [`workload`] — paper workload generators (different/similar/checkpoint,
+//!   competing compute- and I/O-bound applications).
+
+pub mod chunking;
+pub mod config;
+pub mod crystal;
+pub mod error;
+pub mod hash;
+pub mod hashgpu;
+pub mod metrics;
+pub mod net;
+pub mod runtime;
+pub mod sim;
+pub mod store;
+pub mod util;
+pub mod workload;
+
+pub use error::{Error, Result};

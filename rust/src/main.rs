@@ -1,0 +1,339 @@
+//! gpustore CLI — launcher for the distributed storage system.
+//!
+//! Components (multi-process deployment):
+//!   gpustore manager --listen 0.0.0.0:7070
+//!   gpustore node    --listen 0.0.0.0:7071
+//!   gpustore write   --manager H:P --nodes H:P,H:P --mode cdc --engine gpu \
+//!                    --file f --size 64M --count 10
+//!   gpustore read    --manager H:P --nodes H:P,... --file f --out path
+//!   gpustore demo    (single-process cluster + one write/read cycle)
+//!
+//! Benchmarks regenerating the paper's figures live in `cargo bench`
+//! (rust/benches/figures.rs); runnable scenarios in examples/.
+
+use std::collections::HashMap;
+
+use gpustore::config::{CaMode, ClientConfig, ClusterConfig, HashEngineKind};
+use gpustore::hashgpu::build_engine;
+use gpustore::store::{Cluster, Manager, Sai, StorageNode};
+use gpustore::util::{human_bytes, Rng};
+use gpustore::{Error, Result};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let flags = parse_flags(&args[1..])?;
+    match cmd.as_str() {
+        "manager" => cmd_manager(&flags),
+        "node" => cmd_node(&flags),
+        "write" => cmd_write(&flags),
+        "read" => cmd_read(&flags),
+        "verify" => cmd_verify(&flags),
+        "ls" => cmd_ls(&flags),
+        "trace" => cmd_trace(&flags),
+        "demo" => cmd_demo(),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => Err(Error::Config(format!("unknown command `{other}`"))),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "gpustore — GPU-accelerated content-addressable storage \
+         (TPDS'12 reproduction)\n\n\
+         USAGE:\n  gpustore manager --listen ADDR\n  \
+         gpustore node --listen ADDR [--disk DIR]\n  \
+         gpustore write --manager ADDR --nodes A,B,.. [--mode fixed|cdc|none]\n\
+         \x20                [--engine cpu|gpu|oracle] [--threads N]\n\
+         \x20                [--file NAME] [--size BYTES|K|M|G] [--count N] [--seed N]\n  \
+         gpustore read --manager ADDR --nodes A,B,.. --file NAME [--out PATH]\n  \
+         gpustore verify --manager ADDR --nodes A,B,.. --file NAME\n  \
+         gpustore ls --manager ADDR --nodes A,B,..\n  \
+         gpustore trace --manager ADDR --nodes A,B,.. --trace FILE [--seed N]\n  \
+         gpustore demo\n\n\
+         `make artifacts` must have produced artifacts/ for --engine gpu."
+    );
+}
+
+fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        let Some(key) = a.strip_prefix("--") else {
+            return Err(Error::Config(format!("unexpected argument `{a}`")));
+        };
+        let val = args
+            .get(i + 1)
+            .filter(|v| !v.starts_with("--"))
+            .cloned()
+            .unwrap_or_else(|| "true".into());
+        let consumed = if val == "true" && args.get(i + 1).map(|v| v.starts_with("--")).unwrap_or(true) {
+            1
+        } else {
+            2
+        };
+        m.insert(key.to_string(), val);
+        i += consumed;
+    }
+    Ok(m)
+}
+
+fn parse_size(s: &str) -> Result<usize> {
+    let s = s.trim();
+    let (num, mult) = match s.chars().last() {
+        Some('K') | Some('k') => (&s[..s.len() - 1], 1024),
+        Some('M') | Some('m') => (&s[..s.len() - 1], 1024 * 1024),
+        Some('G') | Some('g') => (&s[..s.len() - 1], 1024 * 1024 * 1024),
+        _ => (s, 1),
+    };
+    num.parse::<usize>()
+        .map(|n| n * mult)
+        .map_err(|_| Error::Config(format!("bad size `{s}`")))
+}
+
+fn client_config(flags: &HashMap<String, String>) -> Result<ClientConfig> {
+    let mode = match flags.get("mode").map(String::as_str).unwrap_or("fixed") {
+        "fixed" => CaMode::Fixed,
+        "cdc" | "cbc" => CaMode::Cdc,
+        "none" | "non-ca" => CaMode::None,
+        m => return Err(Error::Config(format!("bad --mode `{m}`"))),
+    };
+    let threads: usize = flags
+        .get("threads")
+        .map(|t| t.parse().unwrap_or(1))
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        });
+    let engine = match flags.get("engine").map(String::as_str).unwrap_or("cpu") {
+        "cpu" => HashEngineKind::Cpu { threads },
+        "gpu" => HashEngineKind::gpu_default(),
+        "oracle" | "infinite" => HashEngineKind::Oracle,
+        e => return Err(Error::Config(format!("bad --engine `{e}`"))),
+    };
+    let cfg = ClientConfig {
+        ca_mode: mode,
+        engine,
+        ..ClientConfig::default()
+    };
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn connect_sai(flags: &HashMap<String, String>) -> Result<Sai> {
+    let manager = flags
+        .get("manager")
+        .ok_or_else(|| Error::Config("--manager required".into()))?;
+    let nodes: Vec<String> = flags
+        .get("nodes")
+        .ok_or_else(|| Error::Config("--nodes required".into()))?
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    let cfg = client_config(flags)?;
+    let engine = build_engine(&cfg, None)?;
+    Sai::connect(manager, &nodes, cfg, engine, None)
+}
+
+fn cmd_manager(flags: &HashMap<String, String>) -> Result<()> {
+    let listen = flags.get("listen").map(String::as_str).unwrap_or("0.0.0.0:7070");
+    let mgr = Manager::spawn(listen)?;
+    println!("metadata manager listening on {}", mgr.addr());
+    loop {
+        std::thread::park();
+    }
+}
+
+fn cmd_node(flags: &HashMap<String, String>) -> Result<()> {
+    let listen = flags.get("listen").map(String::as_str).unwrap_or("0.0.0.0:7071");
+    let disk = flags.get("disk").map(std::path::PathBuf::from);
+    let node = StorageNode::spawn_with(listen, disk)?;
+    println!("storage node listening on {}", node.addr());
+    loop {
+        std::thread::park();
+    }
+}
+
+fn cmd_write(flags: &HashMap<String, String>) -> Result<()> {
+    let sai = connect_sai(flags)?;
+    let size = parse_size(flags.get("size").map(String::as_str).unwrap_or("16M"))?;
+    let count: usize = flags
+        .get("count")
+        .map(|c| c.parse().unwrap_or(1))
+        .unwrap_or(1);
+    let seed: u64 = flags.get("seed").map(|s| s.parse().unwrap_or(1)).unwrap_or(1);
+    let name = flags.get("file").cloned().unwrap_or_else(|| "bench.bin".into());
+
+    let mut total = 0u64;
+    let mut secs = 0.0;
+    for i in 0..count {
+        let data = Rng::new(seed ^ i as u64).bytes(size);
+        let r = sai.write_file(&name, &data)?;
+        println!(
+            "write {}/{count}: {} in {:?} -> {:.1} MB/s ({} blocks, {} new, sim {:.0}%)",
+            i + 1,
+            human_bytes(r.bytes),
+            r.elapsed,
+            r.mbps(),
+            r.blocks,
+            r.new_blocks,
+            100.0 * r.similarity
+        );
+        total += r.bytes;
+        secs += r.elapsed.as_secs_f64();
+    }
+    println!(
+        "total: {} in {:.2}s -> {:.1} MB/s",
+        human_bytes(total),
+        secs,
+        total as f64 / (1024.0 * 1024.0) / secs
+    );
+    Ok(())
+}
+
+fn cmd_read(flags: &HashMap<String, String>) -> Result<()> {
+    let sai = connect_sai(flags)?;
+    let name = flags
+        .get("file")
+        .ok_or_else(|| Error::Config("--file required".into()))?;
+    let data = sai.read_file(name)?;
+    match flags.get("out") {
+        Some(path) => {
+            std::fs::write(path, &data)?;
+            println!("read {} -> {path}", human_bytes(data.len() as u64));
+        }
+        None => println!("read {} (integrity-verified)", human_bytes(data.len() as u64)),
+    }
+    Ok(())
+}
+
+fn cmd_verify(flags: &HashMap<String, String>) -> Result<()> {
+    let sai = connect_sai(flags)?;
+    let name = flags
+        .get("file")
+        .ok_or_else(|| Error::Config("--file required".into()))?;
+    let (ok, bad) = sai.verify_file(name)?;
+    println!("{name}: {ok} blocks ok, {bad} corrupt");
+    if bad > 0 {
+        return Err(Error::Node(format!("{bad} corrupt blocks")));
+    }
+    Ok(())
+}
+
+fn cmd_ls(flags: &HashMap<String, String>) -> Result<()> {
+    let sai = connect_sai(flags)?;
+    for (name, version) in sai.list_files()? {
+        let (_, blocks) = sai.get_block_map(&name)?;
+        let bytes: u64 = blocks.iter().map(|b| b.len as u64).sum();
+        println!("{name}\tv{version}\t{} blocks\t{}", blocks.len(), human_bytes(bytes));
+    }
+    Ok(())
+}
+
+fn cmd_trace(flags: &HashMap<String, String>) -> Result<()> {
+    let sai = connect_sai(flags)?;
+    let path = flags
+        .get("trace")
+        .ok_or_else(|| Error::Config("--trace FILE required".into()))?;
+    let seed: u64 = flags.get("seed").map(|s| s.parse().unwrap_or(1)).unwrap_or(1);
+    let text = std::fs::read_to_string(path)?;
+    let trace = gpustore::workload::Trace::parse(&text)?;
+    let reports = trace.replay(&sai, seed)?;
+    let mut total = 0u64;
+    let mut secs = 0.0;
+    for (i, r) in reports.iter().enumerate() {
+        println!(
+            "write {}: {} -> {:.1} MB/s (sim {:.0}%)",
+            i + 1,
+            human_bytes(r.bytes),
+            r.mbps(),
+            100.0 * r.similarity
+        );
+        total += r.bytes;
+        secs += r.elapsed.as_secs_f64();
+    }
+    println!(
+        "trace done: {} in {:.2}s -> {:.1} MB/s",
+        human_bytes(total),
+        secs,
+        total as f64 / (1024.0 * 1024.0) / secs.max(1e-9)
+    );
+    Ok(())
+}
+
+fn cmd_demo() -> Result<()> {
+    let cluster = Cluster::spawn(ClusterConfig::default())?;
+    println!(
+        "demo cluster: manager {} nodes {:?}",
+        cluster.manager_addr(),
+        cluster.node_addrs()
+    );
+    let cfg = ClientConfig::ca_cpu_fixed(4);
+    let engine = build_engine(&cfg, None)?;
+    let sai = cluster.client(cfg, engine)?;
+    let data = Rng::new(1).bytes(8 << 20);
+    let r = sai.write_file("demo", &data)?;
+    println!("write: {:.1} MB/s", r.mbps());
+    let r = sai.write_file("demo", &data)?;
+    println!("rewrite: {:.1} MB/s, similarity {:.0}%", r.mbps(), 100.0 * r.similarity);
+    assert_eq!(sai.read_file("demo")?, data);
+    println!("read-back OK");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_size_suffixes() {
+        assert_eq!(parse_size("10").unwrap(), 10);
+        assert_eq!(parse_size("4K").unwrap(), 4096);
+        assert_eq!(parse_size("2M").unwrap(), 2 << 20);
+        assert_eq!(parse_size("1G").unwrap(), 1 << 30);
+        assert!(parse_size("x").is_err());
+    }
+
+    #[test]
+    fn parse_flags_pairs_and_bools() {
+        let args: Vec<String> = ["--a", "1", "--flag", "--b", "x"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let f = parse_flags(&args).unwrap();
+        assert_eq!(f.get("a").unwrap(), "1");
+        assert_eq!(f.get("flag").unwrap(), "true");
+        assert_eq!(f.get("b").unwrap(), "x");
+    }
+
+    #[test]
+    fn client_config_modes() {
+        let mut flags = HashMap::new();
+        flags.insert("mode".into(), "cdc".into());
+        flags.insert("engine".into(), "oracle".into());
+        let cfg = client_config(&flags).unwrap();
+        assert_eq!(cfg.ca_mode, CaMode::Cdc);
+        assert_eq!(cfg.engine, HashEngineKind::Oracle);
+        flags.insert("mode".into(), "bogus".into());
+        assert!(client_config(&flags).is_err());
+    }
+}

@@ -1,0 +1,339 @@
+//! Measurement plumbing: stage timers (Table 1 / Fig 4), throughput
+//! meters, simple histograms, and table rendering for the figure benches.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// The five processing stages of an accelerator task (paper Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Stage {
+    /// Device init, memory allocation, host-side preprocessing.
+    Preprocess,
+    /// Host -> device input transfer.
+    CopyIn,
+    /// Kernel execution.
+    Kernel,
+    /// Device -> host output transfer.
+    CopyOut,
+    /// Host-side postprocess (final hash, boundary scan) + release.
+    Postprocess,
+}
+
+impl Stage {
+    /// All stages in pipeline order.
+    pub const ALL: [Stage; 5] = [
+        Stage::Preprocess,
+        Stage::CopyIn,
+        Stage::Kernel,
+        Stage::CopyOut,
+        Stage::Postprocess,
+    ];
+
+    /// Short label for tables.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Stage::Preprocess => "prep/alloc",
+            Stage::CopyIn => "copy-in",
+            Stage::Kernel => "kernel",
+            Stage::CopyOut => "copy-out",
+            Stage::Postprocess => "post",
+        }
+    }
+}
+
+/// Accumulates per-stage durations across tasks (Fig 4's input).
+#[derive(Debug, Default, Clone)]
+pub struct StageBreakdown {
+    totals: BTreeMap<Stage, Duration>,
+    tasks: u64,
+}
+
+impl StageBreakdown {
+    /// Empty breakdown.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add one stage observation.
+    pub fn add(&mut self, stage: Stage, d: Duration) {
+        *self.totals.entry(stage).or_default() += d;
+    }
+
+    /// Mark one task complete (for averaging).
+    pub fn end_task(&mut self) {
+        self.tasks += 1;
+    }
+
+    /// Merge another breakdown in.
+    pub fn merge(&mut self, other: &StageBreakdown) {
+        for (s, d) in &other.totals {
+            *self.totals.entry(*s).or_default() += *d;
+        }
+        self.tasks += other.tasks;
+    }
+
+    /// Total across stages.
+    pub fn total(&self) -> Duration {
+        self.totals.values().sum()
+    }
+
+    /// Fraction of total time spent in `stage` (0..1).
+    pub fn fraction(&self, stage: Stage) -> f64 {
+        let tot = self.total().as_secs_f64();
+        if tot == 0.0 {
+            return 0.0;
+        }
+        self.totals.get(&stage).copied().unwrap_or_default().as_secs_f64() / tot
+    }
+
+    /// Stage total.
+    pub fn get(&self, stage: Stage) -> Duration {
+        self.totals.get(&stage).copied().unwrap_or_default()
+    }
+
+    /// Number of completed tasks.
+    pub fn tasks(&self) -> u64 {
+        self.tasks
+    }
+}
+
+/// Wall-clock throughput meter.
+#[derive(Debug)]
+pub struct Throughput {
+    start: Instant,
+    bytes: u64,
+}
+
+impl Throughput {
+    /// Start measuring now.
+    pub fn start() -> Self {
+        Throughput {
+            start: Instant::now(),
+            bytes: 0,
+        }
+    }
+
+    /// Record processed bytes.
+    pub fn add(&mut self, bytes: u64) {
+        self.bytes += bytes;
+    }
+
+    /// Bytes recorded so far.
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// Elapsed seconds.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// MB/s so far.
+    pub fn mbps(&self) -> f64 {
+        crate::util::mbps(self.bytes, self.secs())
+    }
+}
+
+/// Fixed-bucket latency/size histogram (power-of-two buckets).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// Empty histogram (64 power-of-two buckets).
+    pub fn new() -> Self {
+        Histogram {
+            buckets: vec![0; 64],
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    /// Record a value.
+    pub fn record(&mut self, v: u64) {
+        let b = (64 - v.leading_zeros()).min(63) as usize;
+        self.buckets[b] += 1;
+        self.count += 1;
+        self.sum += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Mean value.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Smallest sample (0 if empty).
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest sample.
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (b, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= target {
+                return if b == 0 { 0 } else { 1u64 << b };
+            }
+        }
+        self.max
+    }
+}
+
+/// Markdown table builder used by the figure harnesses.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with the given column headers.
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (must match header arity).
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    /// Render as GitHub-flavoured markdown.
+    pub fn markdown(&self) -> String {
+        let mut w: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<width$} |", c, width = w[i]));
+            }
+            s
+        };
+        let mut out = fmt_row(&self.header);
+        out.push('\n');
+        out.push('|');
+        for wi in &w {
+            out.push_str(&format!("{:-<width$}|", "", width = wi + 2));
+        }
+        for row in &self.rows {
+            out.push('\n');
+            out.push_str(&fmt_row(row));
+        }
+        out
+    }
+
+    /// Render as CSV.
+    pub fn csv(&self) -> String {
+        let mut out = self.header.join(",");
+        for row in &self.rows {
+            out.push('\n');
+            out.push_str(&row.join(","));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_breakdown_fractions() {
+        let mut b = StageBreakdown::new();
+        b.add(Stage::CopyIn, Duration::from_millis(80));
+        b.add(Stage::Kernel, Duration::from_millis(20));
+        b.end_task();
+        assert!((b.fraction(Stage::CopyIn) - 0.8).abs() < 1e-9);
+        assert!((b.fraction(Stage::Kernel) - 0.2).abs() < 1e-9);
+        assert_eq!(b.fraction(Stage::CopyOut), 0.0);
+        assert_eq!(b.tasks(), 1);
+    }
+
+    #[test]
+    fn stage_breakdown_merge() {
+        let mut a = StageBreakdown::new();
+        a.add(Stage::Kernel, Duration::from_millis(10));
+        a.end_task();
+        let mut b = StageBreakdown::new();
+        b.add(Stage::Kernel, Duration::from_millis(30));
+        b.end_task();
+        a.merge(&b);
+        assert_eq!(a.get(Stage::Kernel), Duration::from_millis(40));
+        assert_eq!(a.tasks(), 2);
+    }
+
+    #[test]
+    fn histogram_stats() {
+        let mut h = Histogram::new();
+        for v in [1u64, 2, 4, 8, 1024] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.min(), 1);
+        assert_eq!(h.max(), 1024);
+        assert!((h.mean() - 207.8).abs() < 0.1);
+        assert!(h.quantile(0.5) <= 8);
+        assert!(h.quantile(1.0) >= 1024);
+    }
+
+    #[test]
+    fn table_markdown_shape() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.markdown();
+        assert!(md.contains("| a | b |"));
+        assert!(md.lines().count() == 3);
+    }
+
+    #[test]
+    fn table_csv() {
+        let mut t = Table::new(&["x", "y"]);
+        t.row(vec!["1".into(), "2".into()]);
+        assert_eq!(t.csv(), "x,y\n1,2");
+    }
+}

@@ -1,0 +1,9 @@
+//! Network substrate: bandwidth shaping (to reproduce the paper's 1 Gbps
+//! cluster fabric on one host) and a transport abstraction so the storage
+//! system runs identically over real TCP and in-process duplex pipes.
+
+pub mod shaper;
+pub mod transport;
+
+pub use shaper::{RateLimiter, Shaper};
+pub use transport::{Conn, Listener};

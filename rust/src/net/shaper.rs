@@ -1,0 +1,162 @@
+//! Token-bucket bandwidth shaping.
+//!
+//! The paper's cluster connects nodes at 1 Gbps; running everything on one
+//! host would otherwise let the "network" move data at memcpy speed and
+//! hide the compute-vs-network crossovers Figures 7–11 are about.  The
+//! shaper enforces a byte rate on each logical link.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Pure token-bucket state machine (no clock).  Used directly by the
+/// discrete-event simulator and wrapped by [`Shaper`] for wall-clock use.
+#[derive(Debug, Clone)]
+pub struct RateLimiter {
+    /// Bytes per second.
+    rate: f64,
+    /// Maximum burst (bucket depth) in bytes.
+    burst: f64,
+    /// Tokens at `last` time.
+    tokens: f64,
+    /// Timestamp of last update, in seconds (caller-defined epoch).
+    last: f64,
+}
+
+impl RateLimiter {
+    /// New limiter at `rate` bytes/sec with `burst` bytes of depth.
+    pub fn new(rate: f64, burst: f64) -> Self {
+        assert!(rate > 0.0 && burst > 0.0);
+        RateLimiter {
+            rate,
+            burst,
+            tokens: burst,
+            last: 0.0,
+        }
+    }
+
+    /// Convenience: rate in bits/sec (the paper quotes 1 Gbps links).
+    pub fn from_bits_per_sec(bps: f64) -> Self {
+        let rate = bps / 8.0;
+        Self::new(rate, (rate / 100.0).max(64.0 * 1024.0)) // 10 ms burst
+    }
+
+    /// Configured rate, bytes/sec.
+    pub fn rate(&self) -> f64 {
+        self.rate
+    }
+
+    /// Earliest time (same epoch as `now`) at which `bytes` may complete,
+    /// consuming the tokens.  Returns `now` if the bucket covers it.
+    pub fn reserve(&mut self, now: f64, bytes: u64) -> f64 {
+        // Refill.
+        let elapsed = (now - self.last).max(0.0);
+        self.tokens = (self.tokens + elapsed * self.rate).min(self.burst);
+        self.last = now;
+        let need = bytes as f64;
+        if self.tokens >= need {
+            self.tokens -= need;
+            now
+        } else {
+            let wait = (need - self.tokens) / self.rate;
+            self.tokens = 0.0;
+            self.last = now + wait;
+            now + wait
+        }
+    }
+}
+
+/// Wall-clock token bucket shared across threads.
+#[derive(Debug)]
+pub struct Shaper {
+    inner: Mutex<RateLimiter>,
+    epoch: Instant,
+}
+
+impl Shaper {
+    /// New shaper at `bps` bits/sec.
+    pub fn from_bits_per_sec(bps: f64) -> Self {
+        Shaper {
+            inner: Mutex::new(RateLimiter::from_bits_per_sec(bps)),
+            epoch: Instant::now(),
+        }
+    }
+
+    /// New shaper at `rate` bytes/sec.
+    pub fn new(rate: f64, burst: f64) -> Self {
+        Shaper {
+            inner: Mutex::new(RateLimiter::new(rate, burst)),
+            epoch: Instant::now(),
+        }
+    }
+
+    /// Configured rate, bytes/sec.
+    pub fn rate(&self) -> f64 {
+        self.inner.lock().unwrap().rate()
+    }
+
+    /// Block the calling thread until `bytes` may pass.
+    pub fn consume(&self, bytes: u64) {
+        let wait = {
+            let now = self.epoch.elapsed().as_secs_f64();
+            let ready = self.inner.lock().unwrap().reserve(now, bytes);
+            ready - now
+        };
+        if wait > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(wait));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reserve_within_burst_is_immediate() {
+        let mut rl = RateLimiter::new(1000.0, 500.0);
+        assert_eq!(rl.reserve(0.0, 500), 0.0);
+    }
+
+    #[test]
+    fn reserve_beyond_burst_waits() {
+        let mut rl = RateLimiter::new(1000.0, 500.0);
+        rl.reserve(0.0, 500); // drain
+        let t = rl.reserve(0.0, 1000);
+        assert!((t - 1.0).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn refill_over_time() {
+        let mut rl = RateLimiter::new(1000.0, 500.0);
+        rl.reserve(0.0, 500);
+        // After 0.5 s, 500 tokens refilled.
+        assert_eq!(rl.reserve(0.5, 500), 0.5);
+    }
+
+    #[test]
+    fn sustained_rate_is_enforced() {
+        let mut rl = RateLimiter::new(1_000_000.0, 10_000.0);
+        let mut t = 0.0;
+        for _ in 0..100 {
+            t = rl.reserve(t, 100_000);
+        }
+        // 10 MB at 1 MB/s ~ 10 s (minus one burst).
+        assert!(t > 9.9 && t < 10.1, "t={t}");
+    }
+
+    #[test]
+    fn gbps_conversion() {
+        let rl = RateLimiter::from_bits_per_sec(1e9);
+        assert!((rl.rate() - 1.25e8).abs() < 1.0);
+    }
+
+    #[test]
+    fn shaper_throttles() {
+        let s = Shaper::new(1_000_000.0, 1000.0);
+        let t0 = Instant::now();
+        s.consume(1000); // burst
+        s.consume(100_000); // ~0.1 s
+        let dt = t0.elapsed().as_secs_f64();
+        assert!(dt >= 0.09, "dt={dt}");
+    }
+}

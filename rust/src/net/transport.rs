@@ -1,0 +1,169 @@
+//! Transport: blocking TCP streams, optionally wrapped by a bandwidth
+//! [`Shaper`](super::Shaper) so a single-host deployment reproduces the
+//! paper's 1 Gbps cluster fabric.  The storage system is thread-per-
+//! connection (like MosaStore itself); every component binds
+//! `127.0.0.1:0` in tests and real ports in multi-process deployments.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use super::shaper::Shaper;
+use crate::Result;
+
+/// A connection whose writes are paced by an optional token bucket.
+///
+/// Shaping on the *write* side models the sender's NIC; readers drain at
+/// whatever rate data arrives.
+pub struct Conn {
+    stream: TcpStream,
+    shaper: Option<Arc<Shaper>>,
+}
+
+/// Shaping granularity: tokens are claimed per segment so large writes
+/// smear over time instead of bursting.
+const SEG: usize = 64 * 1024;
+
+impl Conn {
+    /// Wrap an accepted/connected stream.
+    pub fn new(stream: TcpStream) -> Self {
+        stream.set_nodelay(true).ok();
+        Conn {
+            stream,
+            shaper: None,
+        }
+    }
+
+    /// Attach a bandwidth shaper to this connection's writes.
+    pub fn with_shaper(mut self, shaper: Arc<Shaper>) -> Self {
+        self.shaper = Some(shaper);
+        self
+    }
+
+    /// Connect to `addr` ("host:port").
+    pub fn connect(addr: &str) -> Result<Conn> {
+        Ok(Conn::new(TcpStream::connect(addr)?))
+    }
+
+    /// Clone the underlying socket (for split read/write threads).
+    pub fn try_clone(&self) -> Result<Conn> {
+        Ok(Conn {
+            stream: self.stream.try_clone()?,
+            shaper: self.shaper.clone(),
+        })
+    }
+
+    /// Shut down both directions.
+    pub fn shutdown(&self) {
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        self.stream.read(buf)
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match &self.shaper {
+            Some(sh) => {
+                let n = buf.len().min(SEG);
+                sh.consume(n as u64);
+                self.stream.write(&buf[..n])
+            }
+            None => self.stream.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.stream.flush()
+    }
+}
+
+/// Listener bound to an address; `accept` yields [`Conn`]s.
+pub struct Listener {
+    inner: TcpListener,
+}
+
+impl Listener {
+    /// Bind `addr` (use "127.0.0.1:0" for an ephemeral port).
+    pub fn bind(addr: &str) -> Result<Listener> {
+        Ok(Listener {
+            inner: TcpListener::bind(addr)?,
+        })
+    }
+
+    /// The bound address (resolves ephemeral ports).
+    pub fn local_addr(&self) -> Result<String> {
+        Ok(self.inner.local_addr()?.to_string())
+    }
+
+    /// Accept the next connection.
+    pub fn accept(&self) -> Result<Conn> {
+        let (s, _) = self.inner.accept()?;
+        Ok(Conn::new(s))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn tcp_roundtrip() {
+        let l = Listener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let srv = std::thread::spawn(move || {
+            let mut c = l.accept().unwrap();
+            let mut buf = [0u8; 4];
+            c.read_exact(&mut buf).unwrap();
+            assert_eq!(&buf, b"ping");
+            c.write_all(b"pong").unwrap();
+        });
+        let mut c = Conn::connect(&addr).unwrap();
+        c.write_all(b"ping").unwrap();
+        let mut buf = [0u8; 4];
+        c.read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, b"pong");
+        srv.join().unwrap();
+    }
+
+    #[test]
+    fn shaped_write_throttles() {
+        let l = Listener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let srv = std::thread::spawn(move || {
+            let mut c = l.accept().unwrap();
+            let mut sink = vec![0u8; 1 << 20];
+            let _ = c.read_exact(&mut sink);
+        });
+        // 10 MB/s, small burst: 1 MB should take around 100 ms.
+        let shaper = Arc::new(Shaper::new(10e6, 64.0 * 1024.0));
+        let mut c = Conn::connect(&addr).unwrap().with_shaper(shaper);
+        let t0 = Instant::now();
+        c.write_all(&vec![0u8; 1 << 20]).unwrap();
+        assert!(t0.elapsed().as_secs_f64() > 0.05);
+        srv.join().unwrap();
+    }
+
+    #[test]
+    fn try_clone_shares_socket() {
+        let l = Listener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let srv = std::thread::spawn(move || {
+            let mut c = l.accept().unwrap();
+            let mut b = [0u8; 2];
+            c.read_exact(&mut b).unwrap();
+            assert_eq!(&b, b"ab");
+        });
+        let c = Conn::connect(&addr).unwrap();
+        let mut w1 = c.try_clone().unwrap();
+        let mut w2 = c.try_clone().unwrap();
+        w1.write_all(b"a").unwrap();
+        w2.write_all(b"b").unwrap();
+        srv.join().unwrap();
+    }
+}

@@ -1,0 +1,286 @@
+//! Artifact registry: parses `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`) and answers "which compiled executable do I
+//! run for this job?" — mirroring the shape-bucketing logic in aot.py.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Kind of compute graph an artifact implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// Batched per-segment MD5 (`md5_seg{S}_l{L}`): u32[lanes, words] ->
+    /// u32[lanes, 4].
+    Direct,
+    /// Sliding-window rolling fingerprint (`roll_{N}_w{W}`):
+    /// u32[N/4] -> u32[N - W + 1].
+    Sliding,
+}
+
+/// One manifest entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    /// Unique name (also the HLO file stem).
+    pub name: String,
+    /// Graph kind.
+    pub kind: ArtifactKind,
+    /// Absolute path to the HLO text.
+    pub path: PathBuf,
+    /// Direct: segment size in bytes (pre-padding).
+    pub seg_bytes: usize,
+    /// Direct: number of parallel lanes (segments per execution).
+    pub lanes: usize,
+    /// Direct: MD5 blocks per padded segment.
+    pub n_blocks: usize,
+    /// Sliding: input size in bytes.
+    pub n_bytes: usize,
+    /// Sliding: window width.
+    pub window: usize,
+    /// Input element count (u32 words).
+    pub in_words: usize,
+    /// Input dims.
+    pub in_dims: Vec<usize>,
+}
+
+impl ArtifactSpec {
+    /// Payload capacity in bytes: how much raw data one execution covers.
+    pub fn capacity(&self) -> usize {
+        match self.kind {
+            ArtifactKind::Direct => self.seg_bytes * self.lanes,
+            ArtifactKind::Sliding => self.n_bytes,
+        }
+    }
+}
+
+/// Parsed manifest with bucket-selection logic.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// All artifacts.
+    pub artifacts: Vec<ArtifactSpec>,
+    /// CDC window width shared by all sliding artifacts.
+    pub window: usize,
+    /// Rolling-hash base.
+    pub p: u32,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .map_err(|e| Error::Artifact(format!("read {}: {e}", mpath.display())))?;
+        let j = Json::parse(&text)?;
+        let window = j.req_usize("window")?;
+        let p = j.req_usize("p")? as u32;
+        let mut artifacts = Vec::new();
+        for a in j
+            .req("artifacts")?
+            .as_arr()
+            .ok_or_else(|| Error::Artifact("artifacts not an array".into()))?
+        {
+            let kind = match a.req_str("kind")? {
+                "direct" => ArtifactKind::Direct,
+                "sliding" => ArtifactKind::Sliding,
+                k => return Err(Error::Artifact(format!("unknown kind {k}"))),
+            };
+            let in_dims: Vec<usize> = a
+                .req("in_words")?
+                .as_arr()
+                .ok_or_else(|| Error::Artifact("in_words not an array".into()))?
+                .iter()
+                .map(|v| v.as_usize().unwrap_or(0))
+                .collect();
+            artifacts.push(ArtifactSpec {
+                name: a.req_str("name")?.to_string(),
+                kind,
+                path: dir.join(a.req_str("path")?),
+                seg_bytes: a.get("seg_bytes").and_then(Json::as_usize).unwrap_or(0),
+                lanes: a.get("lanes").and_then(Json::as_usize).unwrap_or(0),
+                n_blocks: a.get("n_blocks").and_then(Json::as_usize).unwrap_or(0),
+                n_bytes: a.get("n_bytes").and_then(Json::as_usize).unwrap_or(0),
+                window: a.get("window").and_then(Json::as_usize).unwrap_or(window),
+                in_words: in_dims.iter().product(),
+                in_dims,
+            });
+        }
+        if artifacts.is_empty() {
+            return Err(Error::Artifact("empty manifest".into()));
+        }
+        Ok(Manifest {
+            artifacts,
+            window,
+            p,
+        })
+    }
+
+    /// Default artifact directory: `$GPUSTORE_ARTIFACTS` or
+    /// `<crate root>/artifacts`.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("GPUSTORE_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// Smallest direct-hash artifact with `seg_bytes` segments that fits
+    /// `data_len` bytes in one execution; falls back to the
+    /// largest-capacity bucket (caller splits the job).
+    pub fn pick_direct(&self, seg_bytes: usize, data_len: usize) -> Result<&ArtifactSpec> {
+        let need_lanes = data_len.div_ceil(seg_bytes).max(1);
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Direct && a.seg_bytes == seg_bytes)
+            .filter(|a| a.lanes >= need_lanes)
+            .min_by_key(|a| a.lanes)
+            .or_else(|| {
+                self.artifacts
+                    .iter()
+                    .filter(|a| a.kind == ArtifactKind::Direct && a.seg_bytes == seg_bytes)
+                    .max_by_key(|a| a.lanes)
+            })
+            .ok_or_else(|| {
+                Error::Artifact(format!("no direct artifact for seg_bytes={seg_bytes}"))
+            })
+    }
+
+    /// Sliding-window artifact for the next step over `data_len`
+    /// remaining bytes.  Work-minimizing policy: an exactly-covering
+    /// bucket is used only if it wastes < 50 % of its capacity;
+    /// otherwise the largest bucket <= data_len is used and the caller
+    /// iterates (splitting costs only a window-1 overlap, while padding
+    /// a 1 MB+eps job into a 4 MB bucket costs 4x the kernel work —
+    /// EXPERIMENTS.md section Perf).
+    pub fn pick_sliding(&self, data_len: usize) -> Result<&ArtifactSpec> {
+        let sliding = || {
+            self.artifacts
+                .iter()
+                .filter(|a| a.kind == ArtifactKind::Sliding)
+        };
+        if let Some(tight) = sliding()
+            .filter(|a| a.n_bytes >= data_len && data_len * 2 > a.n_bytes)
+            .min_by_key(|a| a.n_bytes)
+        {
+            return Ok(tight);
+        }
+        sliding()
+            .filter(|a| a.n_bytes <= data_len)
+            .max_by_key(|a| a.n_bytes)
+            .or_else(|| sliding().min_by_key(|a| a.n_bytes))
+            .ok_or_else(|| Error::Artifact("no sliding artifacts".into()))
+    }
+
+    /// Segment sizes available for direct hashing.
+    pub fn direct_seg_sizes(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Direct)
+            .map(|a| a.seg_bytes)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_manifest() -> Manifest {
+        // A synthetic manifest mirroring aot.py's bucket structure.
+        let dir = std::env::temp_dir().join(format!("gpustore-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let json = r#"{
+            "version": 1, "window": 48, "p": 16777619,
+            "artifacts": [
+stub
+            ]
+        }"#;
+        let mut entries = Vec::new();
+        for (seg, lanes, blocks) in [(256, 16, 5), (256, 64, 5), (4096, 16, 65), (4096, 256, 65)] {
+            entries.push(format!(
+                r#"{{"name":"md5_seg{seg}_l{lanes}","kind":"direct","seg_bytes":{seg},"lanes":{lanes},"n_blocks":{blocks},"in_words":[{lanes},{w}],"path":"x.hlo.txt"}}"#,
+                w = blocks * 16
+            ));
+        }
+        for n in [65536usize, 262144] {
+            entries.push(format!(
+                r#"{{"name":"roll_{n}_w48","kind":"sliding","n_bytes":{n},"window":48,"p":16777619,"in_words":[{}],"out_len":{},"path":"y.hlo.txt"}}"#,
+                n / 4,
+                n - 47
+            ));
+        }
+        let json = json.replace("stub", &entries.join(",\n"));
+        std::fs::write(dir.join("manifest.json"), json).unwrap();
+        Manifest::load(&dir).unwrap()
+    }
+
+    #[test]
+    fn parses_synthetic_manifest() {
+        let m = test_manifest();
+        assert_eq!(m.window, 48);
+        assert_eq!(m.p, 16777619);
+        assert_eq!(m.artifacts.len(), 6);
+        assert_eq!(m.direct_seg_sizes(), vec![256, 4096]);
+    }
+
+    #[test]
+    fn pick_direct_smallest_fit() {
+        let m = test_manifest();
+        // 4 KB over 256-byte segments -> 16 lanes.
+        let a = m.pick_direct(256, 4096).unwrap();
+        assert_eq!(a.lanes, 16);
+        // 5 KB -> needs 20 segments -> 64-lane bucket.
+        let a = m.pick_direct(256, 5 * 1024).unwrap();
+        assert_eq!(a.lanes, 64);
+    }
+
+    #[test]
+    fn pick_direct_oversized_falls_back_to_largest() {
+        let m = test_manifest();
+        let a = m.pick_direct(4096, 64 << 20).unwrap();
+        assert_eq!(a.lanes, 256);
+    }
+
+    #[test]
+    fn pick_direct_unknown_seg_errors() {
+        let m = test_manifest();
+        assert!(m.pick_direct(1024, 4096).is_err());
+    }
+
+    #[test]
+    fn pick_sliding_buckets() {
+        let m = test_manifest();
+        // Below the smallest bucket: pad into it.
+        assert_eq!(m.pick_sliding(10_000).unwrap().n_bytes, 65536);
+        assert_eq!(m.pick_sliding(65536).unwrap().n_bytes, 65536);
+        // Slightly over a bucket: SPLIT (fill the smaller bucket and
+        // iterate) rather than waste 3/4 of the next one.
+        assert_eq!(m.pick_sliding(65537).unwrap().n_bytes, 65536);
+        // Over half of the next bucket: use it in one shot.
+        assert_eq!(m.pick_sliding(200_000).unwrap().n_bytes, 262144);
+        // Oversized -> largest (caller iterates).
+        assert_eq!(m.pick_sliding(1 << 24).unwrap().n_bytes, 262144);
+    }
+
+    #[test]
+    fn capacity() {
+        let m = test_manifest();
+        let a = m.pick_direct(4096, 1).unwrap();
+        assert_eq!(a.capacity(), 4096 * 16);
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.artifacts.is_empty());
+            for a in &m.artifacts {
+                assert!(a.path.exists(), "missing {}", a.path.display());
+            }
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts (built once by
+//! `make artifacts` from the JAX/Pallas sources) and execute them from
+//! the rust hot path.  Python is never on the request path.
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::{ArtifactSpec, Manifest};
+pub use pjrt::{Executable, PjrtContext};

@@ -1,0 +1,250 @@
+//! Competing-application contention model (Figures 12–17, §4.5):
+//! a proportional-share CPU plus fixed I/O-path interference terms.
+//!
+//! Shape anchors from the paper:
+//! * non-CA imposes 80–225 % slowdown on a compute-bound app — TCP
+//!   processing of a 1 Gbps write stream eats CPU even without hashing;
+//! * CA-CPU adds hashing threads on top of that;
+//! * CA-GPU frees the hashing CPU, halving the competitor slowdown on
+//!   the `different` workload;
+//! * storage throughput loses <= 18 % (compute competitor) / <= 6 %
+//!   (I/O competitor) vs a dedicated client.
+
+use super::write::{EngineModel, SystemSim, WriteConfig};
+
+/// Competing application kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompetitorKind {
+    /// Multithreaded prime search: wants every core.
+    ComputeBound,
+    /// Build-like file churn: disk + some CPU.
+    IoBound,
+}
+
+/// Client-node contention model.
+#[derive(Debug, Clone)]
+pub struct ContentionModel {
+    /// Client cores (paper: quad-core for §4.5).
+    pub cores: f64,
+    /// CPU cores consumed by TCP/kernel processing per GB/s of network
+    /// traffic (drives the paper's surprising non-CA slowdown).
+    pub tcp_cores_per_gbps: f64,
+    /// Cores used by SAI bookkeeping (buffering, metadata).
+    pub sai_cores: f64,
+    /// Cores used by GPU management (crystal manager threads).
+    pub gpu_mgmt_cores: f64,
+    /// Compute app parallelism (threads).
+    pub app_threads: f64,
+    /// I/O app CPU demand (cores) — compile bursts.
+    pub io_app_cores: f64,
+    /// Fraction of storage write time that contends with the I/O app's
+    /// disk channel (the paper's nodes are remote: only local buffering).
+    pub disk_overlap: f64,
+}
+
+impl Default for ContentionModel {
+    fn default() -> Self {
+        ContentionModel {
+            cores: 4.0,
+            tcp_cores_per_gbps: 2.2,
+            sai_cores: 0.3,
+            gpu_mgmt_cores: 0.4,
+            app_threads: 4.0,
+            io_app_cores: 1.0,
+            disk_overlap: 0.15,
+        }
+    }
+}
+
+/// Result of a contention evaluation.
+#[derive(Debug, Clone, Copy)]
+pub struct ContentionResult {
+    /// Storage write throughput under competition (B/s).
+    pub storage_bps: f64,
+    /// Storage throughput on a dedicated node (B/s).
+    pub storage_dedicated_bps: f64,
+    /// Competitor slowdown (0.5 = 50 % longer runtime).
+    pub app_slowdown: f64,
+}
+
+impl ContentionModel {
+    /// Cores the storage client consumes while writing at `net_bps`,
+    /// hashing with `engine` (`hash_cores` at full demand).
+    fn storage_core_demand(&self, engine: &EngineModel, net_bps: f64) -> f64 {
+        let tcp = self.tcp_cores_per_gbps * (net_bps * 8.0 / 1e9);
+        let hash = match engine {
+            EngineModel::None => 0.0,
+            EngineModel::Infinite => 0.0,
+            EngineModel::Cpu { threads } => *threads as f64,
+            EngineModel::Gpu { .. } => self.gpu_mgmt_cores,
+        };
+        self.sai_cores + tcp + hash
+    }
+
+    /// Evaluate storage-vs-app interference for one configuration.
+    ///
+    /// `sim`/`cfg`/`size`/`blocks` describe the write stream exactly as
+    /// in [`SystemSim::write_bps`]; the competitor runs continuously.
+    pub fn evaluate(
+        &self,
+        sim: &SystemSim,
+        cfg: &WriteConfig,
+        size: usize,
+        blocks: usize,
+        kind: CompetitorKind,
+    ) -> ContentionResult {
+        let dedicated_bps = sim.write_bps(cfg, size, blocks, 10);
+        let net_bps = dedicated_bps * (1.0 - cfg.similarity);
+
+        let storage_demand = self.storage_core_demand(&cfg.engine, net_bps);
+        let app_demand = match kind {
+            CompetitorKind::ComputeBound => self.app_threads,
+            CompetitorKind::IoBound => self.io_app_cores,
+        };
+
+        // Proportional share of the cores under overload.
+        let total = storage_demand + app_demand;
+        let (storage_share, app_share) = if total <= self.cores {
+            (storage_demand, app_demand)
+        } else {
+            let f = self.cores / total;
+            (storage_demand * f, app_demand * f)
+        };
+
+        // Storage slows with its CPU share (hash-bound configs suffer
+        // most; network-bound configs barely notice).
+        let storage_scale = (storage_share / storage_demand).min(1.0);
+        // How CPU-bound is this storage config?  Ratio of CPU work to
+        // total write time decides sensitivity.
+        let hash = sim.hash_secs(cfg, size);
+        let t_write = sim.write_secs(cfg, size, blocks);
+        let cpu_sensitivity = match cfg.engine {
+            EngineModel::Cpu { .. } => (hash / t_write).min(1.0),
+            _ => 0.25, // TCP + bookkeeping only
+        };
+        let storage_bps =
+            dedicated_bps * (1.0 - cpu_sensitivity * (1.0 - storage_scale));
+
+        // Competitor slowdown: CPU share loss + I/O-path interference.
+        let cpu_slow = app_demand / app_share - 1.0;
+        let io_slow = match kind {
+            CompetitorKind::IoBound => self.disk_overlap * (net_bps * 8.0 / 1e9),
+            CompetitorKind::ComputeBound => 0.0,
+        };
+        ContentionResult {
+            storage_bps,
+            storage_dedicated_bps: dedicated_bps,
+            app_slowdown: cpu_slow + io_slow,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::gpu::GpuOpts;
+
+    fn cfg(engine: EngineModel, similarity: f64) -> WriteConfig {
+        WriteConfig {
+            engine,
+            cdc: false,
+            write_buffer: 4 << 20,
+            similarity,
+        }
+    }
+
+    const GB: usize = 1 << 30;
+
+    fn model() -> (ContentionModel, SystemSim) {
+        (ContentionModel::default(), SystemSim::default())
+    }
+
+    #[test]
+    fn gpu_offload_halves_compute_app_slowdown_on_different() {
+        // Paper Fig 12: CA-GPU reduces the competitor slowdown by ~half
+        // vs CA-CPU under the `different` workload.
+        let (m, s) = model();
+        let cpu = m.evaluate(
+            &s,
+            &cfg(EngineModel::Cpu { threads: 4 }, 0.0),
+            GB,
+            1024,
+            CompetitorKind::ComputeBound,
+        );
+        let gpu = m.evaluate(
+            &s,
+            &cfg(EngineModel::Gpu { opts: GpuOpts::OVERLAP }, 0.0),
+            GB,
+            1024,
+            CompetitorKind::ComputeBound,
+        );
+        assert!(
+            gpu.app_slowdown < 0.7 * cpu.app_slowdown,
+            "gpu {} vs cpu {}",
+            gpu.app_slowdown,
+            cpu.app_slowdown
+        );
+    }
+
+    #[test]
+    fn nonca_still_slows_compute_app_via_tcp() {
+        // Paper's surprise: non-CA imposes 80-225 % slowdown.
+        let (m, s) = model();
+        let non = m.evaluate(
+            &s,
+            &cfg(EngineModel::None, 0.0),
+            GB,
+            1024,
+            CompetitorKind::ComputeBound,
+        );
+        assert!(
+            non.app_slowdown > 0.3,
+            "tcp processing must hurt: {}",
+            non.app_slowdown
+        );
+    }
+
+    #[test]
+    fn gpu_storage_tput_loss_small_under_compute_competitor() {
+        // Paper: <= 18 % loss vs dedicated.
+        let (m, s) = model();
+        let gpu = m.evaluate(
+            &s,
+            &cfg(EngineModel::Gpu { opts: GpuOpts::OVERLAP }, 0.5),
+            GB,
+            1024,
+            CompetitorKind::ComputeBound,
+        );
+        let loss = 1.0 - gpu.storage_bps / gpu.storage_dedicated_bps;
+        assert!(loss <= 0.20, "loss {loss}");
+    }
+
+    #[test]
+    fn io_competitor_hurts_less_than_compute() {
+        let (m, s) = model();
+        let c = cfg(EngineModel::Gpu { opts: GpuOpts::OVERLAP }, 0.5);
+        let comp = m.evaluate(&s, &c, GB, 1024, CompetitorKind::ComputeBound);
+        let io = m.evaluate(&s, &c, GB, 1024, CompetitorKind::IoBound);
+        let loss_c = 1.0 - comp.storage_bps / comp.storage_dedicated_bps;
+        let loss_io = 1.0 - io.storage_bps / io.storage_dedicated_bps;
+        assert!(loss_io <= loss_c + 1e-9, "io {loss_io} compute {loss_c}");
+    }
+
+    #[test]
+    fn gpu_beats_cpu_storage_tput_under_similar_competition() {
+        // Paper: ~2.5x better storage throughput under `similar` load.
+        let (m, s) = model();
+        let mut c_cpu = cfg(EngineModel::Cpu { threads: 4 }, 1.0);
+        let mut c_gpu = cfg(EngineModel::Gpu { opts: GpuOpts::OVERLAP }, 1.0);
+        c_cpu.cdc = false;
+        c_gpu.cdc = false;
+        let cpu = m.evaluate(&s, &c_cpu, GB, 1024, CompetitorKind::ComputeBound);
+        let gpu = m.evaluate(&s, &c_gpu, GB, 1024, CompetitorKind::ComputeBound);
+        assert!(
+            gpu.storage_bps > 1.5 * cpu.storage_bps,
+            "gpu {:.2e} cpu {:.2e}",
+            gpu.storage_bps,
+            cpu.storage_bps
+        );
+    }
+}

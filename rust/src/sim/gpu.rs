@@ -1,0 +1,251 @@
+//! GPU stream-pipeline timing: how long a stream of hashing jobs takes
+//! on the modeled device(s) under each CrystalGPU optimization level —
+//! the engine behind Figures 4, 5 and 6.
+
+use crate::crystal::model::DeviceModel;
+use crate::metrics::Stage;
+
+/// Optimization toggles (the paper's ladder in Figs 5/6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GpuOpts {
+    /// Reuse pinned staging buffers (skip per-job allocation, pinned DMA).
+    pub buffer_reuse: bool,
+    /// Overlap transfers with kernels across the job stream.
+    pub overlap: bool,
+    /// Use the second device (GTX 480 + Tesla C2050, round-robin).
+    pub dual_gpu: bool,
+}
+
+impl GpuOpts {
+    /// HashGPU alone (paper's unoptimized baseline).
+    pub const ALONE: GpuOpts = GpuOpts {
+        buffer_reuse: false,
+        overlap: false,
+        dual_gpu: false,
+    };
+    /// + buffer reuse.
+    pub const REUSE: GpuOpts = GpuOpts {
+        buffer_reuse: true,
+        overlap: false,
+        dual_gpu: false,
+    };
+    /// + overlap (the full single-GPU CrystalGPU stack).
+    pub const OVERLAP: GpuOpts = GpuOpts {
+        buffer_reuse: true,
+        overlap: true,
+        dual_gpu: false,
+    };
+    /// + second GPU.
+    pub const DUAL: GpuOpts = GpuOpts {
+        buffer_reuse: true,
+        overlap: true,
+        dual_gpu: true,
+    };
+}
+
+/// Per-job stage seconds on one device.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageSecs {
+    /// Stage 1: pinned allocation (zero when buffers are reused).
+    pub alloc: f64,
+    /// Stage 2: host->device copy.
+    pub h2d: f64,
+    /// Stage 3: kernel.
+    pub kernel: f64,
+    /// Stage 4: device->host copy.
+    pub d2h: f64,
+    /// Stage 5: host post-processing (boundary scan / final hash).
+    pub post: f64,
+}
+
+impl StageSecs {
+    /// Serial total.
+    pub fn total(&self) -> f64 {
+        self.alloc + self.h2d + self.kernel + self.d2h + self.post
+    }
+
+    /// Largest pipelineable stage (alloc is gone under reuse; post runs
+    /// on the host concurrently with the next job's device stages).
+    pub fn bottleneck(&self) -> f64 {
+        self.h2d.max(self.kernel).max(self.d2h).max(self.post)
+    }
+
+    /// Stage fractions of the serial total, in paper-Table-1 order.
+    pub fn fractions(&self) -> [(Stage, f64); 5] {
+        let t = self.total().max(1e-30);
+        [
+            (Stage::Preprocess, self.alloc / t),
+            (Stage::CopyIn, self.h2d / t),
+            (Stage::Kernel, self.kernel / t),
+            (Stage::CopyOut, self.d2h / t),
+            (Stage::Postprocess, self.post / t),
+        ]
+    }
+}
+
+/// Stream-of-jobs pipeline over one or two modeled devices.
+#[derive(Debug, Clone)]
+pub struct GpuPipeline {
+    /// Primary device (GTX 480).
+    pub dev0: DeviceModel,
+    /// Secondary device (Tesla C2050), used when `dual_gpu`.
+    pub dev1: DeviceModel,
+    /// Host scan rate over returned window hashes (B/s of *hash* data;
+    /// sliding-window stage 5 scans 4 B per input byte).
+    pub scan_bps: f64,
+    /// Host hash-of-hashes rate for direct hashing, expressed per input
+    /// byte (digests are 16 B per 4 KB segment, so this is huge).
+    pub direct_post_bps: f64,
+}
+
+impl Default for GpuPipeline {
+    fn default() -> Self {
+        GpuPipeline {
+            dev0: DeviceModel::gtx480(),
+            dev1: DeviceModel::tesla_c2050(),
+            scan_bps: 10e9,
+            direct_post_bps: 4e10,
+        }
+    }
+}
+
+impl GpuPipeline {
+    /// Per-job stage seconds for a `bytes` job on `dev`.
+    pub fn stages(&self, dev: &DeviceModel, sliding: bool, bytes: usize, opts: GpuOpts) -> StageSecs {
+        let post = if sliding {
+            bytes as f64 * dev.sliding_out_ratio / self.scan_bps
+        } else {
+            bytes as f64 / self.direct_post_bps
+        };
+        StageSecs {
+            alloc: if opts.buffer_reuse {
+                0.0
+            } else {
+                dev.alloc_secs_op(sliding, bytes)
+            },
+            h2d: dev.h2d_secs(bytes, opts.buffer_reuse),
+            kernel: dev.kernel_secs(sliding, bytes),
+            d2h: dev.d2h_secs(sliding, bytes),
+            post,
+        }
+    }
+
+    /// Seconds for a stream of `jobs` jobs of `bytes` each on one device.
+    fn stream_one(&self, dev: &DeviceModel, sliding: bool, bytes: usize, jobs: usize, opts: GpuOpts) -> f64 {
+        if jobs == 0 {
+            return 0.0;
+        }
+        let s = self.stages(dev, sliding, bytes, opts);
+        if opts.overlap {
+            // Fill + steady state at the bottleneck stage.
+            s.total() + (jobs - 1) as f64 * s.bottleneck()
+        } else {
+            jobs as f64 * s.total()
+        }
+    }
+
+    /// Seconds for a stream of `jobs` jobs of `bytes` each under `opts`.
+    /// Dual-GPU splits the stream round-robin (the paper's scheme).
+    pub fn stream_secs(&self, sliding: bool, bytes: usize, jobs: usize, opts: GpuOpts) -> f64 {
+        if opts.dual_gpu {
+            let j0 = jobs.div_ceil(2);
+            let j1 = jobs / 2;
+            self.stream_one(&self.dev0, sliding, bytes, j0, opts)
+                .max(self.stream_one(&self.dev1, sliding, bytes, j1, opts))
+        } else {
+            self.stream_one(&self.dev0, sliding, bytes, jobs, opts)
+        }
+    }
+
+    /// Throughput (input B/s) for the standard 10-job stream.
+    pub fn stream_bps(&self, sliding: bool, bytes: usize, opts: GpuOpts) -> f64 {
+        let jobs = 10;
+        (bytes * jobs) as f64 / self.stream_secs(sliding, bytes, jobs, opts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn optimization_ladder_is_monotonic() {
+        let p = GpuPipeline::default();
+        for sliding in [true, false] {
+            for bytes in [1 << 20, 16 << 20, 64 << 20] {
+                let alone = p.stream_bps(sliding, bytes, GpuOpts::ALONE);
+                let reuse = p.stream_bps(sliding, bytes, GpuOpts::REUSE);
+                let over = p.stream_bps(sliding, bytes, GpuOpts::OVERLAP);
+                let dual = p.stream_bps(sliding, bytes, GpuOpts::DUAL);
+                assert!(
+                    alone < reuse && reuse < over && over < dual,
+                    "ladder violated at sliding={sliding} bytes={bytes}: \
+                     {alone:.2e} {reuse:.2e} {over:.2e} {dual:.2e}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fig4_alloc_copyin_share_grows_large() {
+        // Unoptimized sliding-window: alloc+copy-in dominates (80-96 %).
+        let p = GpuPipeline::default();
+        let s = p.stages(&p.dev0, true, 64 << 20, GpuOpts::ALONE);
+        let f = s.fractions();
+        let share = f[0].1 + f[1].1;
+        assert!(share > 0.7, "share {share}");
+    }
+
+    #[test]
+    fn fig5_single_gpu_speedup_band() {
+        // Fully-optimized single GPU vs one CPU core: paper ~125x for
+        // large sliding-window blocks.
+        let p = GpuPipeline::default();
+        let cpu = crate::crystal::model::CpuModel::xeon_2008();
+        let bytes = 64 << 20;
+        let gpu_bps = p.stream_bps(true, bytes, GpuOpts::OVERLAP);
+        let speedup = gpu_bps / cpu.scaled_bps(cpu.window_md5_bps, 1);
+        assert!(
+            (80.0..200.0).contains(&speedup),
+            "sliding speedup {speedup}"
+        );
+    }
+
+    #[test]
+    fn fig6_direct_speedup_band() {
+        // Paper: ~28x single-GPU direct hashing vs one core.
+        let p = GpuPipeline::default();
+        let cpu = crate::crystal::model::CpuModel::xeon_2008();
+        let bytes = 64 << 20;
+        let gpu_bps = p.stream_bps(false, bytes, GpuOpts::OVERLAP);
+        let speedup = gpu_bps / cpu.scaled_bps(cpu.md5_bps, 1);
+        assert!((15.0..45.0).contains(&speedup), "direct speedup {speedup}");
+    }
+
+    #[test]
+    fn small_blocks_slower_than_cpu() {
+        // Fig 5: below ~64 KB the unoptimized GPU loses to the CPU.
+        let p = GpuPipeline::default();
+        let cpu = crate::crystal::model::CpuModel::xeon_2008();
+        let bytes = 4 << 10;
+        let gpu_bps = p.stream_bps(true, bytes, GpuOpts::ALONE);
+        assert!(gpu_bps < cpu.scaled_bps(cpu.window_md5_bps, 1));
+    }
+
+    #[test]
+    fn dual_gpu_sublinear() {
+        // Round-robin over asymmetric devices: > 1.2x, < 2x.
+        let p = GpuPipeline::default();
+        let b = 64 << 20;
+        let one = p.stream_bps(true, b, GpuOpts::OVERLAP);
+        let two = p.stream_bps(true, b, GpuOpts::DUAL);
+        let gain = two / one;
+        assert!((1.2..2.0).contains(&gain), "dual gain {gain}");
+    }
+
+    #[test]
+    fn zero_jobs_zero_time() {
+        let p = GpuPipeline::default();
+        assert_eq!(p.stream_secs(true, 1 << 20, 0, GpuOpts::DUAL), 0.0);
+    }
+}

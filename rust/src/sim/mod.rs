@@ -1,0 +1,23 @@
+//! sim — the performance model that regenerates the paper's figures.
+//!
+//! We cannot time a 2010 GTX 480 + 22-node 1 Gbps cluster in wall-clock;
+//! instead the figure harnesses combine
+//!
+//! * **measured functional behaviour** from the real implementation
+//!   (chunk layouts, dedup ratios from the actual chunker/workloads), and
+//! * **modeled stage timing** from [`crate::crystal::model`]
+//!   (calibrated to the paper's anchor numbers, DESIGN.md §Substitutions),
+//!
+//! composed through the same pipeline structure the real crystal/SAI
+//! code uses.  The CrystalGPU optimization *gains* (buffer reuse,
+//! overlap, dual-GPU) are emergent from the pipeline algebra, not
+//! hard-coded; the workloads are deterministic back-to-back streams, so
+//! closed-form pipeline composition is exact (no event queue needed).
+
+pub mod contention;
+pub mod gpu;
+pub mod write;
+
+pub use contention::{CompetitorKind, ContentionModel};
+pub use gpu::{GpuOpts, GpuPipeline};
+pub use write::{EngineModel, SystemSim, WriteConfig};

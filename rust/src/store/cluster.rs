@@ -1,0 +1,86 @@
+//! Single-process cluster bring-up: manager + N storage nodes on
+//! loopback TCP, with an optional shared client-NIC shaper — the paper's
+//! 22-node/1 Gbps testbed in one process.
+
+use std::sync::Arc;
+
+use super::manager::Manager;
+use super::node::StorageNode;
+use super::sai::Sai;
+use crate::config::{ClientConfig, ClusterConfig};
+use crate::hashgpu::HashEngine;
+use crate::net::Shaper;
+use crate::Result;
+
+/// A running cluster.
+pub struct Cluster {
+    manager: Manager,
+    nodes: Vec<StorageNode>,
+    cfg: ClusterConfig,
+}
+
+impl Cluster {
+    /// Spawn a manager and `cfg.nodes` storage nodes on ephemeral ports.
+    pub fn spawn(cfg: ClusterConfig) -> Result<Cluster> {
+        let manager = Manager::spawn("127.0.0.1:0")?;
+        let nodes = (0..cfg.nodes)
+            .map(|_| StorageNode::spawn("127.0.0.1:0"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Cluster {
+            manager,
+            nodes,
+            cfg,
+        })
+    }
+
+    /// Manager address.
+    pub fn manager_addr(&self) -> &str {
+        self.manager.addr()
+    }
+
+    /// Node addresses.
+    pub fn node_addrs(&self) -> Vec<String> {
+        self.nodes.iter().map(|n| n.addr().to_string()).collect()
+    }
+
+    /// The client-side NIC shaper implied by the cluster config
+    /// (None if shaping is disabled).
+    pub fn client_shaper(&self) -> Option<Arc<Shaper>> {
+        self.cfg
+            .shape
+            .then(|| Arc::new(Shaper::from_bits_per_sec(self.cfg.link_bps)))
+    }
+
+    /// Connect a SAI client with the given config and engine.
+    pub fn client(&self, cfg: ClientConfig, engine: Arc<dyn HashEngine>) -> Result<Sai> {
+        Sai::connect(
+            self.manager_addr(),
+            &self.node_addrs(),
+            cfg,
+            engine,
+            self.client_shaper(),
+        )
+    }
+
+    /// Kill one storage node (failure injection for tests): stops its
+    /// accept loop and severs existing connections.
+    pub fn kill_node(&mut self, idx: usize) {
+        if idx < self.nodes.len() {
+            self.nodes[idx].shutdown();
+        }
+    }
+
+    /// Total (blocks, bytes) across storage nodes.
+    pub fn storage_stats(&self) -> (u64, u64) {
+        use super::proto::Msg;
+        let mut blocks = 0;
+        let mut bytes = 0;
+        for n in &self.nodes {
+            if let Msg::Stats { blocks: b, bytes: by } = n.state().handle(Msg::NodeStats) {
+                blocks += b;
+                bytes += by;
+            }
+        }
+        (blocks, bytes)
+    }
+}

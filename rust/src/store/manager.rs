@@ -1,0 +1,275 @@
+//! The centralized metadata manager (paper §3.2.1): keeps a block-map
+//! per file — the ordered list of (hash, len, node) entries — and the
+//! file's version.  Thread-per-connection over the shared protocol.
+
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use super::proto::{BlockMeta, Msg};
+use crate::net::{Conn, Listener};
+use crate::Result;
+
+#[derive(Debug, Default)]
+struct FileEntry {
+    version: u64,
+    blocks: Vec<BlockMeta>,
+}
+
+/// Manager state shared across connection threads.
+#[derive(Debug, Default)]
+pub struct ManagerState {
+    files: Mutex<HashMap<String, FileEntry>>,
+}
+
+impl ManagerState {
+    /// Handle one request message.
+    pub fn handle(&self, msg: Msg) -> Msg {
+        match msg {
+            Msg::GetBlockMap { file } => {
+                let files = self.files.lock().unwrap();
+                match files.get(&file) {
+                    Some(e) => Msg::BlockMap {
+                        version: e.version,
+                        blocks: e.blocks.clone(),
+                    },
+                    None => Msg::BlockMap {
+                        version: 0,
+                        blocks: Vec::new(),
+                    },
+                }
+            }
+            Msg::CommitBlockMap { file, blocks } => {
+                let mut files = self.files.lock().unwrap();
+                let e = files.entry(file).or_default();
+                e.version += 1;
+                e.blocks = blocks;
+                Msg::Ok
+            }
+            Msg::ListFiles => {
+                let files = self.files.lock().unwrap();
+                let mut list: Vec<(String, u64)> = files
+                    .iter()
+                    .map(|(k, v)| (k.clone(), v.version))
+                    .collect();
+                list.sort();
+                Msg::Files { files: list }
+            }
+            other => Msg::Err(format!("manager: unexpected message {other:?}")),
+        }
+    }
+}
+
+/// A running manager server.
+pub struct Manager {
+    addr: String,
+    state: Arc<ManagerState>,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl Manager {
+    /// Bind and serve on `addr` ("127.0.0.1:0" for ephemeral).
+    pub fn spawn(addr: &str) -> Result<Manager> {
+        let listener = Listener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        let state = Arc::new(ManagerState::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let (st, sp) = (state.clone(), stop.clone());
+        let accept_thread = std::thread::Builder::new()
+            .name("mosa-manager".into())
+            .spawn(move || accept_loop(listener, st, sp))
+            .map_err(crate::Error::Io)?;
+        Ok(Manager {
+            addr,
+            state,
+            stop,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    /// The bound address.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Direct (in-process) access for tests.
+    pub fn state(&self) -> &Arc<ManagerState> {
+        &self.state
+    }
+
+    /// Stop accepting (existing connections finish their current call).
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Poke the accept loop.
+        let _ = Conn::connect(&self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Manager {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: Listener, state: Arc<ManagerState>, stop: Arc<AtomicBool>) {
+    loop {
+        let conn = match listener.accept() {
+            Ok(c) => c,
+            Err(_) => break,
+        };
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        let st = state.clone();
+        let _ = std::thread::Builder::new()
+            .name("mosa-manager-conn".into())
+            .spawn(move || serve_conn(conn, st));
+    }
+}
+
+fn serve_conn(conn: Conn, state: Arc<ManagerState>) {
+    let reader = match conn.try_clone() {
+        Ok(c) => c,
+        Err(_) => return,
+    };
+    let mut r = BufReader::new(reader);
+    let mut w = BufWriter::new(conn);
+    while let Ok(Some(msg)) = Msg::read_from(&mut r) {
+        let reply = state.handle(msg);
+        if reply.write_to(&mut w).is_err() {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(i: u8) -> BlockMeta {
+        BlockMeta {
+            hash: [i; 16],
+            len: 100,
+            node: 0,
+        }
+    }
+
+    #[test]
+    fn state_commit_and_get() {
+        let s = ManagerState::default();
+        let r = s.handle(Msg::GetBlockMap { file: "f".into() });
+        assert_eq!(
+            r,
+            Msg::BlockMap {
+                version: 0,
+                blocks: vec![]
+            }
+        );
+        s.handle(Msg::CommitBlockMap {
+            file: "f".into(),
+            blocks: vec![meta(1)],
+        });
+        let r = s.handle(Msg::GetBlockMap { file: "f".into() });
+        assert_eq!(
+            r,
+            Msg::BlockMap {
+                version: 1,
+                blocks: vec![meta(1)]
+            }
+        );
+    }
+
+    #[test]
+    fn state_versions_increment() {
+        let s = ManagerState::default();
+        for i in 1..=3 {
+            s.handle(Msg::CommitBlockMap {
+                file: "f".into(),
+                blocks: vec![meta(i)],
+            });
+            let Msg::BlockMap { version, .. } = s.handle(Msg::GetBlockMap { file: "f".into() })
+            else {
+                panic!()
+            };
+            assert_eq!(version, i as u64);
+        }
+    }
+
+    #[test]
+    fn state_list_files_sorted() {
+        let s = ManagerState::default();
+        for f in ["b", "a"] {
+            s.handle(Msg::CommitBlockMap {
+                file: f.into(),
+                blocks: vec![],
+            });
+        }
+        let Msg::Files { files } = s.handle(Msg::ListFiles) else {
+            panic!()
+        };
+        assert_eq!(files, vec![("a".into(), 1), ("b".into(), 1)]);
+    }
+
+    #[test]
+    fn state_rejects_wrong_message() {
+        let s = ManagerState::default();
+        assert!(matches!(s.handle(Msg::Ok), Msg::Err(_)));
+    }
+
+    #[test]
+    fn tcp_serving_works() {
+        let mgr = Manager::spawn("127.0.0.1:0").unwrap();
+        let mut c = Conn::connect(mgr.addr()).unwrap();
+        Msg::CommitBlockMap {
+            file: "x".into(),
+            blocks: vec![meta(5)],
+        }
+        .write_to(&mut c)
+        .unwrap();
+        let r = Msg::read_from(&mut c).unwrap().unwrap();
+        assert_eq!(r, Msg::Ok);
+        Msg::GetBlockMap { file: "x".into() }.write_to(&mut c).unwrap();
+        let r = Msg::read_from(&mut c).unwrap().unwrap();
+        assert_eq!(
+            r,
+            Msg::BlockMap {
+                version: 1,
+                blocks: vec![meta(5)]
+            }
+        );
+    }
+
+    #[test]
+    fn multiple_clients() {
+        let mgr = Manager::spawn("127.0.0.1:0").unwrap();
+        let addr = mgr.addr().to_string();
+        let threads: Vec<_> = (0..4)
+            .map(|i| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let mut c = Conn::connect(&addr).unwrap();
+                    Msg::CommitBlockMap {
+                        file: format!("f{i}"),
+                        blocks: vec![meta(i as u8)],
+                    }
+                    .write_to(&mut c)
+                    .unwrap();
+                    assert_eq!(Msg::read_from(&mut c).unwrap().unwrap(), Msg::Ok);
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let Msg::Files { files } = mgr.state().handle(Msg::ListFiles) else {
+            panic!()
+        };
+        assert_eq!(files.len(), 4);
+    }
+}

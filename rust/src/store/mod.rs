@@ -1,0 +1,25 @@
+//! store — the MosaStore analog: an object-based, content-addressable
+//! distributed storage system (GoogleFS-like topology, paper §3.2.1).
+//!
+//! * [`manager`] — centralized metadata manager: per-file block-maps
+//!   (with every block's hash), versioning, commit protocol.
+//! * [`node`] — storage nodes: hash-addressed block stores.
+//! * [`sai`] — the client System Access Interface: write buffering,
+//!   chunking (fixed or content-based), hashing through a pluggable
+//!   [`crate::hashgpu::HashEngine`], similarity detection against the
+//!   previous version's block-map, and striped transfer to the nodes.
+//! * [`proto`] — the length-prefixed wire protocol shared by all three.
+//! * [`cluster`] — spawn a full single-process cluster (manager + nodes)
+//!   on loopback TCP for tests, benches and examples.
+
+pub mod cluster;
+pub mod manager;
+pub mod node;
+pub mod proto;
+pub mod sai;
+
+pub use cluster::Cluster;
+pub use manager::Manager;
+pub use node::StorageNode;
+pub use proto::{BlockMeta, Msg};
+pub use sai::{Sai, WriteReport};

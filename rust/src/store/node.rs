@@ -1,0 +1,289 @@
+//! Storage node: a hash-addressed block store (paper §3.2.1).  Blocks
+//! are kept in memory by default (the paper's nodes are RAM-backed for
+//! the evaluated workloads) with an optional spill directory.
+
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use super::proto::Msg;
+use crate::hash::Digest;
+use crate::net::{Conn, Listener};
+use crate::Result;
+
+/// Node state shared across connection threads.
+#[derive(Debug, Default)]
+pub struct NodeState {
+    blocks: Mutex<HashMap<Digest, Vec<u8>>>,
+    disk_dir: Option<PathBuf>,
+}
+
+impl NodeState {
+    fn disk_path(&self, hash: &Digest) -> Option<PathBuf> {
+        self.disk_dir
+            .as_ref()
+            .map(|d| d.join(crate::util::hex(hash)))
+    }
+
+    /// Handle one request.
+    pub fn handle(&self, msg: Msg) -> Msg {
+        match msg {
+            Msg::PutBlock { hash, data } => {
+                if let Some(p) = self.disk_path(&hash) {
+                    if let Err(e) = std::fs::write(&p, &data) {
+                        return Msg::Err(format!("disk write: {e}"));
+                    }
+                }
+                self.blocks.lock().unwrap().insert(hash, data);
+                Msg::Ok
+            }
+            Msg::HasBlock { hash } => {
+                Msg::Bool(self.blocks.lock().unwrap().contains_key(&hash))
+            }
+            Msg::GetBlock { hash } => {
+                let mem = self.blocks.lock().unwrap().get(&hash).cloned();
+                match mem {
+                    Some(data) => Msg::Data { data },
+                    None => match self.disk_path(&hash) {
+                        Some(p) => match std::fs::read(&p) {
+                            Ok(data) => Msg::Data { data },
+                            Err(_) => Msg::Err("unknown block".into()),
+                        },
+                        None => Msg::Err("unknown block".into()),
+                    },
+                }
+            }
+            Msg::NodeStats => {
+                let b = self.blocks.lock().unwrap();
+                Msg::Stats {
+                    blocks: b.len() as u64,
+                    bytes: b.values().map(|v| v.len() as u64).sum(),
+                }
+            }
+            other => Msg::Err(format!("node: unexpected message {other:?}")),
+        }
+    }
+}
+
+/// A running storage node server.
+pub struct StorageNode {
+    addr: String,
+    state: Arc<NodeState>,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    /// Live connections (for failure injection: `shutdown` severs them).
+    conns: Arc<Mutex<Vec<Conn>>>,
+}
+
+impl StorageNode {
+    /// Bind and serve on `addr` with in-memory storage.
+    pub fn spawn(addr: &str) -> Result<StorageNode> {
+        Self::spawn_with(addr, None)
+    }
+
+    /// Bind and serve, optionally spilling blocks to `disk_dir`.
+    pub fn spawn_with(addr: &str, disk_dir: Option<PathBuf>) -> Result<StorageNode> {
+        if let Some(d) = &disk_dir {
+            std::fs::create_dir_all(d)?;
+        }
+        let listener = Listener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        let state = Arc::new(NodeState {
+            blocks: Mutex::new(HashMap::new()),
+            disk_dir,
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<Conn>>> = Arc::new(Mutex::new(Vec::new()));
+        let (st, sp, cn) = (state.clone(), stop.clone(), conns.clone());
+        let accept_thread = std::thread::Builder::new()
+            .name("mosa-node".into())
+            .spawn(move || accept_loop(listener, st, sp, cn))
+            .map_err(crate::Error::Io)?;
+        Ok(StorageNode {
+            addr,
+            state,
+            stop,
+            accept_thread: Some(accept_thread),
+            conns,
+        })
+    }
+
+    /// The bound address.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Direct state access for tests.
+    pub fn state(&self) -> &Arc<NodeState> {
+        &self.state
+    }
+
+    /// Stop accepting and sever every live connection (failure
+    /// injection: in-flight client requests observe errors, not hangs).
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        let _ = Conn::connect(&self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        for c in self.conns.lock().unwrap().drain(..) {
+            c.shutdown();
+        }
+    }
+}
+
+impl Drop for StorageNode {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(
+    listener: Listener,
+    state: Arc<NodeState>,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<Conn>>>,
+) {
+    loop {
+        let conn = match listener.accept() {
+            Ok(c) => c,
+            Err(_) => break,
+        };
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        if let Ok(clone) = conn.try_clone() {
+            conns.lock().unwrap().push(clone);
+        }
+        let st = state.clone();
+        let _ = std::thread::Builder::new()
+            .name("mosa-node-conn".into())
+            .spawn(move || serve_conn(conn, st));
+    }
+}
+
+fn serve_conn(conn: Conn, state: Arc<NodeState>) {
+    let reader = match conn.try_clone() {
+        Ok(c) => c,
+        Err(_) => return,
+    };
+    let mut r = BufReader::new(reader);
+    let mut w = BufWriter::new(conn);
+    while let Ok(Some(msg)) = Msg::read_from(&mut r) {
+        let reply = state.handle(msg);
+        if reply.write_to(&mut w).is_err() {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_has_get() {
+        let s = NodeState::default();
+        let h = [1u8; 16];
+        assert_eq!(s.handle(Msg::HasBlock { hash: h }), Msg::Bool(false));
+        assert_eq!(
+            s.handle(Msg::PutBlock {
+                hash: h,
+                data: vec![1, 2, 3]
+            }),
+            Msg::Ok
+        );
+        assert_eq!(s.handle(Msg::HasBlock { hash: h }), Msg::Bool(true));
+        assert_eq!(
+            s.handle(Msg::GetBlock { hash: h }),
+            Msg::Data {
+                data: vec![1, 2, 3]
+            }
+        );
+    }
+
+    #[test]
+    fn get_unknown_errors() {
+        let s = NodeState::default();
+        assert!(matches!(
+            s.handle(Msg::GetBlock { hash: [9; 16] }),
+            Msg::Err(_)
+        ));
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let s = NodeState::default();
+        for i in 0..3u8 {
+            s.handle(Msg::PutBlock {
+                hash: [i; 16],
+                data: vec![0; 100],
+            });
+        }
+        assert_eq!(
+            s.handle(Msg::NodeStats),
+            Msg::Stats {
+                blocks: 3,
+                bytes: 300
+            }
+        );
+    }
+
+    #[test]
+    fn put_is_idempotent_by_key() {
+        let s = NodeState::default();
+        let h = [2u8; 16];
+        s.handle(Msg::PutBlock {
+            hash: h,
+            data: vec![1],
+        });
+        s.handle(Msg::PutBlock {
+            hash: h,
+            data: vec![1],
+        });
+        assert_eq!(
+            s.handle(Msg::NodeStats),
+            Msg::Stats { blocks: 1, bytes: 1 }
+        );
+    }
+
+    #[test]
+    fn disk_spill_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("gpustore-node-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut node = StorageNode::spawn_with("127.0.0.1:0", Some(dir.clone())).unwrap();
+        let mut c = Conn::connect(node.addr()).unwrap();
+        Msg::PutBlock {
+            hash: [7; 16],
+            data: vec![9; 50],
+        }
+        .write_to(&mut c)
+        .unwrap();
+        assert_eq!(Msg::read_from(&mut c).unwrap().unwrap(), Msg::Ok);
+        // Block landed on disk.
+        assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 1);
+        node.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let node = StorageNode::spawn("127.0.0.1:0").unwrap();
+        let mut c = Conn::connect(node.addr()).unwrap();
+        Msg::PutBlock {
+            hash: [3; 16],
+            data: vec![5; 10],
+        }
+        .write_to(&mut c)
+        .unwrap();
+        assert_eq!(Msg::read_from(&mut c).unwrap().unwrap(), Msg::Ok);
+        Msg::GetBlock { hash: [3; 16] }.write_to(&mut c).unwrap();
+        assert_eq!(
+            Msg::read_from(&mut c).unwrap().unwrap(),
+            Msg::Data { data: vec![5; 10] }
+        );
+    }
+}

@@ -1,0 +1,425 @@
+//! Wire protocol: length-prefixed, hand-serialized frames (the
+//! environment is offline — no serde — and the data path wants zero
+//! surprises anyway).
+//!
+//! Frame layout: `u32 payload_len (LE) | u8 tag | payload`.
+
+use std::io::{Read, Write};
+
+use crate::hash::Digest;
+use crate::{Error, Result};
+
+/// Maximum accepted frame (defensive bound; blocks are <= 4 MB + slack).
+pub const MAX_FRAME: usize = 64 * 1024 * 1024;
+
+/// A block's metadata entry in a file's block-map.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BlockMeta {
+    /// Content hash (or synthetic key in non-CA mode).
+    pub hash: Digest,
+    /// Payload length.
+    pub len: u32,
+    /// Index of the storage node holding the block.
+    pub node: u32,
+}
+
+/// Protocol messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    // ---- client -> manager ----
+    /// Fetch a file's current block-map.
+    GetBlockMap {
+        /// File name.
+        file: String,
+    },
+    /// Commit a new version's block-map (replaces the old one).
+    CommitBlockMap {
+        /// File name.
+        file: String,
+        /// Ordered block list.
+        blocks: Vec<BlockMeta>,
+    },
+    /// List stored files.
+    ListFiles,
+
+    // ---- manager -> client ----
+    /// Block-map reply; `version == 0` means the file does not exist.
+    BlockMap {
+        /// Version of the returned map (0 = absent).
+        version: u64,
+        /// Ordered block list.
+        blocks: Vec<BlockMeta>,
+    },
+    /// File listing reply.
+    Files {
+        /// Names and current versions.
+        files: Vec<(String, u64)>,
+    },
+
+    // ---- client -> node ----
+    /// Store a block.
+    PutBlock {
+        /// Content hash (storage key).
+        hash: Digest,
+        /// Payload.
+        data: Vec<u8>,
+    },
+    /// Does the node hold this block?
+    HasBlock {
+        /// Storage key.
+        hash: Digest,
+    },
+    /// Fetch a block.
+    GetBlock {
+        /// Storage key.
+        hash: Digest,
+    },
+    /// Node statistics request.
+    NodeStats,
+
+    // ---- node -> client ----
+    /// Block payload reply.
+    Data {
+        /// Payload.
+        data: Vec<u8>,
+    },
+    /// Statistics reply.
+    Stats {
+        /// Number of blocks held.
+        blocks: u64,
+        /// Total payload bytes held.
+        bytes: u64,
+    },
+
+    // ---- shared ----
+    /// Success acknowledgement.
+    Ok,
+    /// Boolean reply.
+    Bool(bool),
+    /// Error reply with message.
+    Err(String),
+}
+
+impl Msg {
+    fn tag(&self) -> u8 {
+        match self {
+            Msg::GetBlockMap { .. } => 1,
+            Msg::CommitBlockMap { .. } => 2,
+            Msg::ListFiles => 3,
+            Msg::BlockMap { .. } => 4,
+            Msg::Files { .. } => 5,
+            Msg::PutBlock { .. } => 6,
+            Msg::HasBlock { .. } => 7,
+            Msg::GetBlock { .. } => 8,
+            Msg::NodeStats => 9,
+            Msg::Data { .. } => 10,
+            Msg::Stats { .. } => 11,
+            Msg::Ok => 12,
+            Msg::Bool(_) => 13,
+            Msg::Err(_) => 14,
+        }
+    }
+
+    /// Serialize to a frame (including the length prefix).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut p = Vec::new();
+        match self {
+            Msg::GetBlockMap { file } => put_str(&mut p, file),
+            Msg::CommitBlockMap { file, blocks } => {
+                put_str(&mut p, file);
+                put_blocks(&mut p, blocks);
+            }
+            Msg::ListFiles | Msg::NodeStats | Msg::Ok => {}
+            Msg::BlockMap { version, blocks } => {
+                p.extend_from_slice(&version.to_le_bytes());
+                put_blocks(&mut p, blocks);
+            }
+            Msg::Files { files } => {
+                p.extend_from_slice(&(files.len() as u32).to_le_bytes());
+                for (name, v) in files {
+                    put_str(&mut p, name);
+                    p.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Msg::PutBlock { hash, data } => {
+                p.extend_from_slice(hash);
+                p.extend_from_slice(&(data.len() as u32).to_le_bytes());
+                p.extend_from_slice(data);
+            }
+            Msg::HasBlock { hash } | Msg::GetBlock { hash } => p.extend_from_slice(hash),
+            Msg::Data { data } => {
+                p.extend_from_slice(&(data.len() as u32).to_le_bytes());
+                p.extend_from_slice(data);
+            }
+            Msg::Stats { blocks, bytes } => {
+                p.extend_from_slice(&blocks.to_le_bytes());
+                p.extend_from_slice(&bytes.to_le_bytes());
+            }
+            Msg::Bool(b) => p.push(*b as u8),
+            Msg::Err(e) => put_str(&mut p, e),
+        }
+        let mut frame = Vec::with_capacity(5 + p.len());
+        frame.extend_from_slice(&(p.len() as u32 + 1).to_le_bytes());
+        frame.push(self.tag());
+        frame.extend_from_slice(&p);
+        frame
+    }
+
+    /// Deserialize one frame's payload.
+    pub fn decode(tag: u8, p: &[u8]) -> Result<Msg> {
+        let mut c = Cursor { b: p, i: 0 };
+        let msg = match tag {
+            1 => Msg::GetBlockMap { file: c.str()? },
+            2 => Msg::CommitBlockMap {
+                file: c.str()?,
+                blocks: c.blocks()?,
+            },
+            3 => Msg::ListFiles,
+            4 => Msg::BlockMap {
+                version: c.u64()?,
+                blocks: c.blocks()?,
+            },
+            5 => {
+                let n = c.u32()? as usize;
+                let mut files = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    let name = c.str()?;
+                    let v = c.u64()?;
+                    files.push((name, v));
+                }
+                Msg::Files { files }
+            }
+            6 => Msg::PutBlock {
+                hash: c.digest()?,
+                data: c.bytes()?,
+            },
+            7 => Msg::HasBlock { hash: c.digest()? },
+            8 => Msg::GetBlock { hash: c.digest()? },
+            9 => Msg::NodeStats,
+            10 => Msg::Data { data: c.bytes()? },
+            11 => Msg::Stats {
+                blocks: c.u64()?,
+                bytes: c.u64()?,
+            },
+            12 => Msg::Ok,
+            13 => Msg::Bool(c.u8()? != 0),
+            14 => Msg::Err(c.str()?),
+            t => return Err(Error::Proto(format!("unknown tag {t}"))),
+        };
+        if c.i != p.len() {
+            return Err(Error::Proto(format!(
+                "trailing {} bytes in tag {tag}",
+                p.len() - c.i
+            )));
+        }
+        Ok(msg)
+    }
+
+    /// Write one frame to a stream.
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
+        w.write_all(&self.encode())?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Read one frame from a stream. `Ok(None)` on clean EOF.
+    pub fn read_from<R: Read>(r: &mut R) -> Result<Option<Msg>> {
+        let mut lenb = [0u8; 4];
+        match r.read_exact(&mut lenb) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+            Err(e) => return Err(e.into()),
+        }
+        let len = u32::from_le_bytes(lenb) as usize;
+        if len == 0 || len > MAX_FRAME {
+            return Err(Error::Proto(format!("bad frame length {len}")));
+        }
+        let mut body = vec![0u8; len];
+        r.read_exact(&mut body)?;
+        Msg::decode(body[0], &body[1..]).map(Some)
+    }
+
+    /// Turn an `Err` reply into a rust error.
+    pub fn into_result(self) -> Result<Msg> {
+        match self {
+            Msg::Err(e) => Err(Error::Proto(format!("remote: {e}"))),
+            m => Ok(m),
+        }
+    }
+}
+
+fn put_str(p: &mut Vec<u8>, s: &str) {
+    p.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    p.extend_from_slice(s.as_bytes());
+}
+
+fn put_blocks(p: &mut Vec<u8>, blocks: &[BlockMeta]) {
+    p.extend_from_slice(&(blocks.len() as u32).to_le_bytes());
+    for b in blocks {
+        p.extend_from_slice(&b.hash);
+        p.extend_from_slice(&b.len.to_le_bytes());
+        p.extend_from_slice(&b.node.to_le_bytes());
+    }
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            return Err(Error::Proto("truncated frame".into()));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn digest(&mut self) -> Result<Digest> {
+        Ok(self.take(16)?.try_into().unwrap())
+    }
+
+    fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let b = self.bytes()?;
+        String::from_utf8(b).map_err(|_| Error::Proto("bad utf-8 string".into()))
+    }
+
+    fn blocks(&mut self) -> Result<Vec<BlockMeta>> {
+        let n = self.u32()? as usize;
+        if n > MAX_FRAME / 24 {
+            return Err(Error::Proto(format!("block list too long: {n}")));
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(BlockMeta {
+                hash: self.digest()?,
+                len: self.u32()?,
+                node: self.u32()?,
+            });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(m: Msg) {
+        let f = m.encode();
+        let len = u32::from_le_bytes(f[..4].try_into().unwrap()) as usize;
+        assert_eq!(len, f.len() - 4);
+        let got = Msg::decode(f[4], &f[5..]).unwrap();
+        assert_eq!(got, m);
+    }
+
+    fn meta(i: u8) -> BlockMeta {
+        BlockMeta {
+            hash: [i; 16],
+            len: 1000 + i as u32,
+            node: i as u32 % 4,
+        }
+    }
+
+    #[test]
+    fn roundtrip_all_variants() {
+        roundtrip(Msg::GetBlockMap { file: "a/b.txt".into() });
+        roundtrip(Msg::CommitBlockMap {
+            file: "f".into(),
+            blocks: vec![meta(1), meta(2)],
+        });
+        roundtrip(Msg::ListFiles);
+        roundtrip(Msg::BlockMap {
+            version: 7,
+            blocks: vec![meta(3)],
+        });
+        roundtrip(Msg::Files {
+            files: vec![("x".into(), 1), ("y".into(), 2)],
+        });
+        roundtrip(Msg::PutBlock {
+            hash: [9; 16],
+            data: vec![1, 2, 3],
+        });
+        roundtrip(Msg::HasBlock { hash: [8; 16] });
+        roundtrip(Msg::GetBlock { hash: [7; 16] });
+        roundtrip(Msg::NodeStats);
+        roundtrip(Msg::Data { data: vec![0; 100] });
+        roundtrip(Msg::Stats {
+            blocks: 5,
+            bytes: 12345,
+        });
+        roundtrip(Msg::Ok);
+        roundtrip(Msg::Bool(true));
+        roundtrip(Msg::Bool(false));
+        roundtrip(Msg::Err("boom".into()));
+    }
+
+    #[test]
+    fn stream_roundtrip() {
+        let msgs = vec![
+            Msg::Ok,
+            Msg::PutBlock {
+                hash: [1; 16],
+                data: vec![42; 1000],
+            },
+            Msg::Bool(true),
+        ];
+        let mut buf = Vec::new();
+        for m in &msgs {
+            m.write_to(&mut buf).unwrap();
+        }
+        let mut r = &buf[..];
+        for m in &msgs {
+            assert_eq!(&Msg::read_from(&mut r).unwrap().unwrap(), m);
+        }
+        assert!(Msg::read_from(&mut r).unwrap().is_none()); // clean EOF
+    }
+
+    #[test]
+    fn rejects_oversized_frame() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(u32::MAX).to_le_bytes());
+        buf.push(1);
+        assert!(Msg::read_from(&mut &buf[..]).is_err());
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let mut f = Msg::Ok.encode();
+        // Append a byte to the payload and fix the length.
+        f.push(0xAB);
+        let len = (f.len() - 4) as u32;
+        f[..4].copy_from_slice(&len.to_le_bytes());
+        assert!(Msg::decode(f[4], &f[5..]).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_tag() {
+        assert!(Msg::decode(200, &[]).is_err());
+    }
+
+    #[test]
+    fn into_result_maps_err() {
+        assert!(Msg::Err("x".into()).into_result().is_err());
+        assert!(Msg::Ok.into_result().is_ok());
+    }
+}

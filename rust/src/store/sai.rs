@@ -1,0 +1,461 @@
+//! The client System Access Interface (SAI) — the paper's Figure 3.
+//!
+//! Write path: application data is accumulated in a write buffer; when
+//! the buffer fills, the content-addressability module (a) detects block
+//! boundaries (fixed-size or content-based via sliding-window hashes),
+//! (b) computes each block's hash through the configured
+//! [`HashEngine`] (CPU, accelerator, or oracle), (c) compares against
+//! the file's previous-version block-map, and (d) transfers only new
+//! blocks, striped across `stripe_width` storage nodes in parallel.
+//! On close, the new block-map is committed to the metadata manager.
+//!
+//! All node links share one bandwidth [`Shaper`] — the client's NIC.
+
+use std::io::{BufReader, BufWriter, Write as _};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::proto::{BlockMeta, Msg};
+use crate::config::{CaMode, ClientConfig};
+use crate::chunking::{ChunkParams, ContentChunker};
+use crate::hash::{md5, Digest};
+use crate::hashgpu::HashEngine;
+use crate::net::{Conn, Shaper};
+use crate::{Error, Result};
+
+/// Outcome of one file write.
+#[derive(Debug, Clone, Default)]
+pub struct WriteReport {
+    /// Total payload bytes written by the application.
+    pub bytes: u64,
+    /// Total blocks in the new version.
+    pub blocks: usize,
+    /// Blocks actually transferred to storage nodes.
+    pub new_blocks: usize,
+    /// Blocks deduplicated (hash already known).
+    pub dup_blocks: usize,
+    /// Bytes actually transferred.
+    pub new_bytes: u64,
+    /// Wall-clock duration of the write.
+    pub elapsed: Duration,
+    /// Time inside the hash engine (window + direct hashing).
+    pub hash_secs: f64,
+    /// Fraction of bytes deduplicated (similarity detected).
+    pub similarity: f64,
+}
+
+impl WriteReport {
+    /// Application-observed write throughput, MB/s.
+    pub fn mbps(&self) -> f64 {
+        crate::util::mbps(self.bytes, self.elapsed.as_secs_f64())
+    }
+}
+
+enum NodeCmd {
+    Put {
+        hash: Digest,
+        data: Vec<u8>,
+        done: Sender<Result<()>>,
+    },
+    Get {
+        hash: Digest,
+        done: Sender<Result<Vec<u8>>>,
+    },
+}
+
+/// One storage node's client: a worker thread owning the (shaped)
+/// connection, fed through a channel so puts to different nodes proceed
+/// in parallel while the SAI keeps hashing.
+struct NodeClient {
+    tx: Sender<NodeCmd>,
+}
+
+impl NodeClient {
+    fn connect(addr: &str, shaper: Option<Arc<Shaper>>) -> Result<NodeClient> {
+        let mut conn = Conn::connect(addr)?;
+        if let Some(s) = shaper {
+            conn = conn.with_shaper(s);
+        }
+        let (tx, rx): (Sender<NodeCmd>, Receiver<NodeCmd>) = mpsc::channel();
+        std::thread::Builder::new()
+            .name(format!("sai-node-{addr}"))
+            .spawn(move || node_worker(conn, rx))
+            .map_err(Error::Io)?;
+        Ok(NodeClient { tx })
+    }
+
+    fn put(&self, hash: Digest, data: Vec<u8>) -> Receiver<Result<()>> {
+        let (done, rx) = mpsc::channel();
+        let _ = self.tx.send(NodeCmd::Put { hash, data, done });
+        rx
+    }
+
+    fn get(&self, hash: Digest) -> Receiver<Result<Vec<u8>>> {
+        let (done, rx) = mpsc::channel();
+        let _ = self.tx.send(NodeCmd::Get { hash, done });
+        rx
+    }
+}
+
+fn node_worker(conn: Conn, rx: Receiver<NodeCmd>) {
+    let reader = match conn.try_clone() {
+        Ok(c) => c,
+        Err(_) => return,
+    };
+    let mut r = BufReader::new(reader);
+    let mut w = BufWriter::with_capacity(256 * 1024, conn);
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            NodeCmd::Put { hash, data, done } => {
+                let res = (|| -> Result<()> {
+                    Msg::PutBlock { hash, data }.write_to(&mut w)?;
+                    w.flush()?;
+                    match Msg::read_from(&mut r)?.ok_or_else(closed)?.into_result()? {
+                        Msg::Ok => Ok(()),
+                        m => Err(Error::Proto(format!("unexpected put reply {m:?}"))),
+                    }
+                })();
+                let _ = done.send(res);
+            }
+            NodeCmd::Get { hash, done } => {
+                let res = (|| -> Result<Vec<u8>> {
+                    Msg::GetBlock { hash }.write_to(&mut w)?;
+                    w.flush()?;
+                    match Msg::read_from(&mut r)?.ok_or_else(closed)?.into_result()? {
+                        Msg::Data { data } => Ok(data),
+                        m => Err(Error::Proto(format!("unexpected get reply {m:?}"))),
+                    }
+                })();
+                let _ = done.send(res);
+            }
+        }
+    }
+}
+
+fn closed() -> Error {
+    Error::Node("connection closed".into())
+}
+
+/// The SAI client.
+pub struct Sai {
+    cfg: ClientConfig,
+    engine: Arc<dyn HashEngine>,
+    manager: Mutex<(BufReader<Conn>, BufWriter<Conn>)>,
+    nodes: Vec<NodeClient>,
+}
+
+impl Sai {
+    /// Connect to a manager and a set of storage nodes.  `shaper`, if
+    /// given, paces ALL node links together (the client's NIC).
+    pub fn connect(
+        manager_addr: &str,
+        node_addrs: &[String],
+        cfg: ClientConfig,
+        engine: Arc<dyn HashEngine>,
+        shaper: Option<Arc<Shaper>>,
+    ) -> Result<Sai> {
+        cfg.validate()?;
+        if node_addrs.is_empty() {
+            return Err(Error::Config("need at least one storage node".into()));
+        }
+        if cfg.ca_mode != CaMode::Cdc && cfg.write_buffer % cfg.block_size != 0 {
+            return Err(Error::Config(
+                "write_buffer must be a multiple of block_size".into(),
+            ));
+        }
+        let conn = Conn::connect(manager_addr)?;
+        let manager = Mutex::new((BufReader::new(conn.try_clone()?), BufWriter::new(conn)));
+        let nodes = node_addrs
+            .iter()
+            .map(|a| NodeClient::connect(a, shaper.clone()))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Sai {
+            cfg,
+            engine,
+            manager,
+            nodes,
+        })
+    }
+
+    /// The active configuration.
+    pub fn config(&self) -> &ClientConfig {
+        &self.cfg
+    }
+
+    /// The hash engine in use.
+    pub fn engine(&self) -> &Arc<dyn HashEngine> {
+        &self.engine
+    }
+
+    fn manager_call(&self, msg: Msg) -> Result<Msg> {
+        let mut g = self.manager.lock().unwrap();
+        let (r, w) = &mut *g;
+        msg.write_to(w)?;
+        w.flush()?;
+        Msg::read_from(r)?.ok_or_else(closed)?.into_result()
+    }
+
+    /// Fetch a file's current block-map (version 0 = absent).
+    pub fn get_block_map(&self, file: &str) -> Result<(u64, Vec<BlockMeta>)> {
+        match self.manager_call(Msg::GetBlockMap { file: file.into() })? {
+            Msg::BlockMap { version, blocks } => Ok((version, blocks)),
+            m => Err(Error::Proto(format!("unexpected reply {m:?}"))),
+        }
+    }
+
+    /// List files known to the manager.
+    pub fn list_files(&self) -> Result<Vec<(String, u64)>> {
+        match self.manager_call(Msg::ListFiles)? {
+            Msg::Files { files } => Ok(files),
+            m => Err(Error::Proto(format!("unexpected reply {m:?}"))),
+        }
+    }
+
+    /// Write a complete file (the paper's workloads write whole files
+    /// back-to-back; `release` semantics = commit on return).
+    pub fn write_file(&self, name: &str, data: &[u8]) -> Result<WriteReport> {
+        let t0 = Instant::now();
+        let mut report = WriteReport {
+            bytes: data.len() as u64,
+            ..Default::default()
+        };
+
+        // 1. Previous version's block-map: hash -> node.
+        let (_, old_blocks) = self.get_block_map(name)?;
+        let mut known: std::collections::HashMap<Digest, u32> = old_blocks
+            .iter()
+            .map(|b| (b.hash, b.node))
+            .collect();
+
+        // 2. Chunk + hash + dedup + transfer, buffer by buffer.
+        let mut metas: Vec<BlockMeta> = Vec::new();
+        let mut pending: Vec<Receiver<Result<()>>> = Vec::new();
+        let mut hash_secs = 0.0f64;
+
+        match self.cfg.ca_mode {
+            CaMode::None => {
+                // No hashing: blocks are addressed by (file, index).
+                for (i, blk) in data.chunks(self.cfg.block_size).enumerate() {
+                    let mut key = Vec::with_capacity(name.len() + 8);
+                    key.extend_from_slice(name.as_bytes());
+                    key.extend_from_slice(&(i as u64).to_le_bytes());
+                    let hash = md5(&key);
+                    let node = (i % self.stripe()) as u32;
+                    pending.push(self.nodes[node as usize].put(hash, blk.to_vec()));
+                    report.new_blocks += 1;
+                    report.new_bytes += blk.len() as u64;
+                    metas.push(BlockMeta {
+                        hash,
+                        len: blk.len() as u32,
+                        node,
+                    });
+                    self.collect_window(&mut pending, 2 * self.stripe())?;
+                }
+            }
+            CaMode::Fixed => {
+                for buffer in data.chunks(self.cfg.write_buffer) {
+                    let blocks: Vec<&[u8]> = buffer.chunks(self.cfg.block_size).collect();
+                    let th = Instant::now();
+                    let digests = self.engine.direct_hash_batch(&blocks)?;
+                    hash_secs += th.elapsed().as_secs_f64();
+                    for (blk, digest) in blocks.iter().zip(digests) {
+                        self.place_block(
+                            blk,
+                            digest,
+                            &mut known,
+                            &mut metas,
+                            &mut pending,
+                            &mut report,
+                        )?;
+                    }
+                    self.collect_window(&mut pending, 2 * self.stripe())?;
+                }
+            }
+            CaMode::Cdc => {
+                let params: ChunkParams = self.cfg.chunk_params();
+                let mut chunker = ContentChunker::new(params);
+                let mut finished: Vec<crate::chunking::Chunk> = Vec::new();
+                for buffer in data.chunks(self.cfg.write_buffer) {
+                    let ext = chunker.extended(buffer);
+                    let th = Instant::now();
+                    let hashes = self.engine.window_hashes(&ext)?;
+                    hash_secs += th.elapsed().as_secs_f64();
+                    finished.extend(chunker.push_with_hashes(buffer, &hashes));
+                    // Hash + ship the completed chunks of this buffer.
+                    let chunk_refs: Vec<&[u8]> =
+                        finished.iter().map(|c| c.data.as_slice()).collect();
+                    let th = Instant::now();
+                    let digests = self.engine.direct_hash_batch(&chunk_refs)?;
+                    hash_secs += th.elapsed().as_secs_f64();
+                    for (chunk, digest) in finished.drain(..).zip(digests) {
+                        self.place_block(
+                            &chunk.data,
+                            digest,
+                            &mut known,
+                            &mut metas,
+                            &mut pending,
+                            &mut report,
+                        )?;
+                    }
+                    self.collect_window(&mut pending, 2 * self.stripe())?;
+                }
+                if let Some(chunk) = chunker.finish() {
+                    let th = Instant::now();
+                    let digest = self.engine.direct_hash(&chunk.data)?;
+                    hash_secs += th.elapsed().as_secs_f64();
+                    self.place_block(
+                        &chunk.data,
+                        digest,
+                        &mut known,
+                        &mut metas,
+                        &mut pending,
+                        &mut report,
+                    )?;
+                }
+            }
+        }
+
+        // 3. Wait for all outstanding transfers.
+        self.collect_window(&mut pending, 0)?;
+
+        // 4. Commit the new block-map (the POSIX `release` step).
+        match self.manager_call(Msg::CommitBlockMap {
+            file: name.into(),
+            blocks: metas.clone(),
+        })? {
+            Msg::Ok => {}
+            m => return Err(Error::Proto(format!("unexpected commit reply {m:?}"))),
+        }
+
+        report.blocks = metas.len();
+        report.hash_secs = hash_secs;
+        report.elapsed = t0.elapsed();
+        report.similarity = if report.bytes == 0 {
+            0.0
+        } else {
+            1.0 - report.new_bytes as f64 / report.bytes as f64
+        };
+        Ok(report)
+    }
+
+    /// Read a complete file and verify block integrity (CA modes).
+    pub fn read_file(&self, name: &str) -> Result<Vec<u8>> {
+        let (version, blocks) = self.get_block_map(name)?;
+        if version == 0 {
+            return Err(Error::Manager(format!("no such file: {name}")));
+        }
+        // Issue all fetches, then collect in order.
+        let rxs: Vec<_> = blocks
+            .iter()
+            .map(|b| self.nodes[b.node as usize].get(b.hash))
+            .collect();
+        let mut out = Vec::new();
+        for (meta, rx) in blocks.iter().zip(rxs) {
+            let data = rx
+                .recv()
+                .map_err(|_| closed())??;
+            if data.len() != meta.len as usize {
+                return Err(Error::Node(format!(
+                    "block length mismatch: got {}, expected {}",
+                    data.len(),
+                    meta.len
+                )));
+            }
+            if self.cfg.ca_mode != CaMode::None {
+                // Integrity check: recompute the content hash.
+                let th = self.engine.direct_hash(&data)?;
+                if th != meta.hash {
+                    return Err(Error::Node("block integrity check failed".into()));
+                }
+            }
+            out.extend_from_slice(&data);
+        }
+        Ok(out)
+    }
+
+    /// Integrity scrub: fetch every block of `name` and recompute its
+    /// content hash (the paper's "traditional system that uses hashing
+    /// to preserve data integrity").  Returns (ok, corrupt) counts.
+    pub fn verify_file(&self, name: &str) -> Result<(usize, usize)> {
+        let (version, blocks) = self.get_block_map(name)?;
+        if version == 0 {
+            return Err(Error::Manager(format!("no such file: {name}")));
+        }
+        if self.cfg.ca_mode == CaMode::None {
+            return Err(Error::Config(
+                "non-CA mode stores no content hashes to verify".into(),
+            ));
+        }
+        let rxs: Vec<_> = blocks
+            .iter()
+            .map(|b| self.nodes[b.node as usize].get(b.hash))
+            .collect();
+        let mut ok = 0;
+        let mut bad = 0;
+        for (meta, rx) in blocks.iter().zip(rxs) {
+            match rx.recv().map_err(|_| closed())? {
+                Ok(data) => {
+                    if data.len() == meta.len as usize
+                        && self.engine.direct_hash(&data)? == meta.hash
+                    {
+                        ok += 1;
+                    } else {
+                        bad += 1;
+                    }
+                }
+                Err(_) => bad += 1,
+            }
+        }
+        Ok((ok, bad))
+    }
+
+    fn stripe(&self) -> usize {
+        self.cfg.stripe_width.min(self.nodes.len())
+    }
+
+    /// Dedup decision + transfer for one block.
+    fn place_block(
+        &self,
+        data: &[u8],
+        digest: Digest,
+        known: &mut std::collections::HashMap<Digest, u32>,
+        metas: &mut Vec<BlockMeta>,
+        pending: &mut Vec<Receiver<Result<()>>>,
+        report: &mut WriteReport,
+    ) -> Result<()> {
+        if let Some(&node) = known.get(&digest) {
+            report.dup_blocks += 1;
+            metas.push(BlockMeta {
+                hash: digest,
+                len: data.len() as u32,
+                node,
+            });
+            return Ok(());
+        }
+        let node = (metas.len() % self.stripe()) as u32;
+        pending.push(self.nodes[node as usize].put(digest, data.to_vec()));
+        known.insert(digest, node);
+        report.new_blocks += 1;
+        report.new_bytes += data.len() as u64;
+        metas.push(BlockMeta {
+            hash: digest,
+            len: data.len() as u32,
+            node,
+        });
+        Ok(())
+    }
+
+    /// Await acks until at most `max_left` puts remain outstanding.
+    fn collect_window(
+        &self,
+        pending: &mut Vec<Receiver<Result<()>>>,
+        max_left: usize,
+    ) -> Result<()> {
+        while pending.len() > max_left {
+            let rx = pending.remove(0);
+            rx.recv().map_err(|_| closed())??;
+        }
+        Ok(())
+    }
+}

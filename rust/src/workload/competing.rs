@@ -1,0 +1,207 @@
+//! Competing applications for the §4.5 interference study.
+//!
+//! * [`ComputeBoundApp`] — multithreaded prime search (the paper's
+//!   compute-bound competitor).
+//! * [`IoBoundApp`] — metadata-heavy file churn standing in for the
+//!   Apache httpd compile (the paper's I/O-bound competitor): bursts of
+//!   small reads/writes interleaved with short compute.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::util::Rng;
+
+/// Multithreaded prime counting by trial division.
+#[derive(Debug, Clone)]
+pub struct ComputeBoundApp {
+    /// Search numbers in `[2, limit)`.
+    pub limit: u64,
+    /// Worker threads.
+    pub threads: usize,
+}
+
+impl ComputeBoundApp {
+    /// Default sizing: a few hundred ms of work on one core.
+    pub fn new(limit: u64, threads: usize) -> Self {
+        ComputeBoundApp { limit, threads }
+    }
+
+    /// Run to completion; returns (elapsed, primes found).
+    pub fn run(&self) -> (Duration, u64) {
+        let t0 = Instant::now();
+        let count = Arc::new(AtomicU64::new(0));
+        let next = Arc::new(AtomicU64::new(2));
+        std::thread::scope(|s| {
+            for _ in 0..self.threads.max(1) {
+                let count = count.clone();
+                let next = next.clone();
+                let limit = self.limit;
+                s.spawn(move || {
+                    const STRIDE: u64 = 256;
+                    loop {
+                        let lo = next.fetch_add(STRIDE, Ordering::Relaxed);
+                        if lo >= limit {
+                            break;
+                        }
+                        let hi = (lo + STRIDE).min(limit);
+                        let mut local = 0;
+                        for n in lo..hi {
+                            if is_prime(n) {
+                                local += 1;
+                            }
+                        }
+                        count.fetch_add(local, Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        (t0.elapsed(), count.load(Ordering::Relaxed))
+    }
+
+    /// Run repeatedly until `stop` flips; returns completed iterations
+    /// and total elapsed (for slowdown-under-load measurements).
+    pub fn run_until(&self, stop: &AtomicBool) -> (u64, Duration) {
+        let t0 = Instant::now();
+        let mut iters = 0;
+        while !stop.load(Ordering::Relaxed) {
+            self.run();
+            iters += 1;
+        }
+        (iters, t0.elapsed())
+    }
+}
+
+fn is_prime(n: u64) -> bool {
+    if n < 2 {
+        return false;
+    }
+    if n % 2 == 0 {
+        return n == 2;
+    }
+    let mut d = 3;
+    while d * d <= n {
+        if n % d == 0 {
+            return false;
+        }
+        d += 2;
+    }
+    true
+}
+
+/// File-churn workload emulating a software build: create, read, rewrite
+/// and delete many small files under a scratch directory.
+#[derive(Debug)]
+pub struct IoBoundApp {
+    /// Scratch directory (caller-owned; created if missing).
+    pub dir: PathBuf,
+    /// Number of files per pass.
+    pub files: usize,
+    /// Bytes per file.
+    pub file_size: usize,
+    /// Passes per run.
+    pub passes: usize,
+}
+
+impl IoBoundApp {
+    /// Default sizing comparable to a small compile tree.
+    pub fn new(dir: PathBuf) -> Self {
+        IoBoundApp {
+            dir,
+            files: 128,
+            file_size: 64 * 1024,
+            passes: 2,
+        }
+    }
+
+    /// Run to completion; returns elapsed.
+    pub fn run(&self) -> std::io::Result<Duration> {
+        let t0 = Instant::now();
+        std::fs::create_dir_all(&self.dir)?;
+        let mut rng = Rng::new(0x10B0);
+        for pass in 0..self.passes {
+            // "Compile": write object files.
+            for i in 0..self.files {
+                let path = self.dir.join(format!("obj_{pass}_{i}.o"));
+                std::fs::write(&path, rng.bytes(self.file_size))?;
+            }
+            // "Link": read everything back.
+            let mut total = 0usize;
+            for i in 0..self.files {
+                let path = self.dir.join(format!("obj_{pass}_{i}.o"));
+                total += std::fs::read(&path)?.len();
+            }
+            assert_eq!(total, self.files * self.file_size);
+            // "Clean": remove.
+            for i in 0..self.files {
+                let path = self.dir.join(format!("obj_{pass}_{i}.o"));
+                std::fs::remove_file(&path)?;
+            }
+        }
+        Ok(t0.elapsed())
+    }
+
+    /// Run repeatedly until `stop` flips; returns completed passes and
+    /// elapsed.
+    pub fn run_until(&self, stop: &AtomicBool) -> std::io::Result<(u64, Duration)> {
+        let t0 = Instant::now();
+        let mut iters = 0;
+        while !stop.load(Ordering::Relaxed) {
+            self.run()?;
+            iters += 1;
+        }
+        Ok((iters, t0.elapsed()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prime_counts_correct() {
+        assert!(is_prime(2));
+        assert!(is_prime(97));
+        assert!(!is_prime(1));
+        assert!(!is_prime(91)); // 7*13
+        let (_, n) = ComputeBoundApp::new(100, 2).run();
+        assert_eq!(n, 25); // pi(100)
+    }
+
+    #[test]
+    fn compute_app_thread_invariant() {
+        let (_, a) = ComputeBoundApp::new(10_000, 1).run();
+        let (_, b) = ComputeBoundApp::new(10_000, 4).run();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn run_until_stops() {
+        let app = ComputeBoundApp::new(1_000, 2);
+        let stop = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            let h = s.spawn(|| app.run_until(&stop));
+            std::thread::sleep(Duration::from_millis(20));
+            stop.store(true, Ordering::Relaxed);
+            let (iters, _) = h.join().unwrap();
+            assert!(iters > 0);
+        });
+    }
+
+    #[test]
+    fn io_app_runs_and_cleans() {
+        let dir = std::env::temp_dir().join(format!("gpustore-io-test-{}", std::process::id()));
+        let app = IoBoundApp {
+            dir: dir.clone(),
+            files: 8,
+            file_size: 1024,
+            passes: 1,
+        };
+        app.run().unwrap();
+        // All files deleted.
+        let left = std::fs::read_dir(&dir).unwrap().count();
+        assert_eq!(left, 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

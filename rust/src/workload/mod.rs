@@ -1,0 +1,14 @@
+//! Workload generators reproducing the paper's evaluation inputs:
+//! the `different` / `similar` synthetic spectra (§4.3), the BLAST+BLCR
+//! checkpoint trace analog, and the competing compute-/IO-bound
+//! applications of §4.5.
+
+pub mod checkpoint;
+pub mod competing;
+pub mod synthetic;
+pub mod trace;
+
+pub use checkpoint::{CheckpointStream, MutationProfile};
+pub use competing::{ComputeBoundApp, IoBoundApp};
+pub use synthetic::{different_files, similar_files, Workload, WorkloadKind};
+pub use trace::{Trace, TraceOp};

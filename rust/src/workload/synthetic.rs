@@ -1,0 +1,93 @@
+//! The two ends of the similarity spectrum (§4.3):
+//!
+//! * `different` — every file completely distinct: exposes all hashing
+//!   overheads, zero dedup opportunity (also proxies integrity-only use).
+//! * `similar`   — the same file written repeatedly: upper-bounds the
+//!   gains of content addressability; only hashing + lookup remain.
+
+use crate::util::Rng;
+
+/// Which end of the spectrum a generated stream represents.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkloadKind {
+    /// All-distinct files.
+    Different,
+    /// Identical files.
+    Similar,
+    /// Successive checkpoint images (see [`super::checkpoint`]).
+    Checkpoint,
+}
+
+/// A generated sequence of file contents to write back-to-back.
+#[derive(Debug)]
+pub struct Workload {
+    /// Kind tag (for reports).
+    pub kind: WorkloadKind,
+    /// File payloads in write order.
+    pub files: Vec<Vec<u8>>,
+}
+
+impl Workload {
+    /// Total bytes across all files.
+    pub fn total_bytes(&self) -> u64 {
+        self.files.iter().map(|f| f.len() as u64).sum()
+    }
+}
+
+/// `count` completely different files of `size` bytes (seeded).
+pub fn different_files(count: usize, size: usize, seed: u64) -> Workload {
+    let mut files = Vec::with_capacity(count);
+    for i in 0..count {
+        let mut rng = Rng::new(seed ^ (0xD1F + i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        files.push(rng.bytes(size));
+    }
+    Workload {
+        kind: WorkloadKind::Different,
+        files,
+    }
+}
+
+/// `count` copies of one random `size`-byte file (seeded).
+pub fn similar_files(count: usize, size: usize, seed: u64) -> Workload {
+    let mut rng = Rng::new(seed);
+    let f = rng.bytes(size);
+    Workload {
+        kind: WorkloadKind::Similar,
+        files: vec![f; count],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn different_are_different() {
+        let w = different_files(4, 1024, 7);
+        assert_eq!(w.files.len(), 4);
+        for i in 0..4 {
+            for j in i + 1..4 {
+                assert_ne!(w.files[i], w.files[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn similar_are_identical() {
+        let w = similar_files(5, 2048, 7);
+        for f in &w.files[1..] {
+            assert_eq!(f, &w.files[0]);
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        assert_eq!(different_files(2, 128, 9).files, different_files(2, 128, 9).files);
+        assert_ne!(different_files(2, 128, 9).files, different_files(2, 128, 10).files);
+    }
+
+    #[test]
+    fn total_bytes() {
+        assert_eq!(similar_files(3, 100, 1).total_bytes(), 300);
+    }
+}

@@ -1,0 +1,313 @@
+//! Workload traces: record real write streams and replay them — the
+//! mechanism a downstream user needs to run *their* workload through the
+//! system (the paper's checkpoint trace was exactly such a recording).
+//!
+//! Format: one op per line, `#` comments.
+//!
+//! ```text
+//! # op  file        size_or_src
+//! write ckpt.img    26214400      # synthetic random payload of N bytes
+//! mutate ckpt.img   overwrite=12,insert=1,delete=1   # next version
+//! write ckpt.img    -             # re-write current version buffer
+//! read  ckpt.img    -
+//! ```
+
+use std::collections::HashMap;
+
+use crate::util::Rng;
+use crate::{Error, Result};
+
+/// One trace operation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceOp {
+    /// Write `file` with `size` fresh random bytes (or the current
+    /// buffer if `size` is None).
+    Write {
+        /// Target file.
+        file: String,
+        /// Payload size; None = current buffer.
+        size: Option<usize>,
+    },
+    /// Mutate `file`'s buffer in place (checkpoint-style evolution).
+    Mutate {
+        /// Target file.
+        file: String,
+        /// In-place overwrite spots.
+        overwrites: usize,
+        /// Insertions.
+        inserts: usize,
+        /// Deletions.
+        deletes: usize,
+    },
+    /// Read `file` back (and verify length).
+    Read {
+        /// Target file.
+        file: String,
+    },
+}
+
+/// A parsed trace.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trace {
+    /// Operations in order.
+    pub ops: Vec<TraceOp>,
+}
+
+impl Trace {
+    /// Parse the text format above.
+    pub fn parse(text: &str) -> Result<Trace> {
+        let mut ops = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let op = parts.next().unwrap();
+            let file = parts
+                .next()
+                .ok_or_else(|| Error::Config(format!("trace line {}: missing file", ln + 1)))?
+                .to_string();
+            let arg = parts.next().unwrap_or("-");
+            match op {
+                "write" => {
+                    let size = if arg == "-" {
+                        None
+                    } else {
+                        Some(parse_size(arg).ok_or_else(|| {
+                            Error::Config(format!("trace line {}: bad size `{arg}`", ln + 1))
+                        })?)
+                    };
+                    ops.push(TraceOp::Write { file, size });
+                }
+                "mutate" => {
+                    let mut overwrites = 0;
+                    let mut inserts = 0;
+                    let mut deletes = 0;
+                    for kv in arg.split(',') {
+                        let (k, v) = kv
+                            .split_once('=')
+                            .ok_or_else(|| Error::Config(format!("trace line {}: bad kv", ln + 1)))?;
+                        let v: usize = v.parse().map_err(|_| {
+                            Error::Config(format!("trace line {}: bad count", ln + 1))
+                        })?;
+                        match k {
+                            "overwrite" => overwrites = v,
+                            "insert" => inserts = v,
+                            "delete" => deletes = v,
+                            _ => {
+                                return Err(Error::Config(format!(
+                                    "trace line {}: unknown key `{k}`",
+                                    ln + 1
+                                )))
+                            }
+                        }
+                    }
+                    ops.push(TraceOp::Mutate {
+                        file,
+                        overwrites,
+                        inserts,
+                        deletes,
+                    });
+                }
+                "read" => ops.push(TraceOp::Read { file }),
+                other => {
+                    return Err(Error::Config(format!(
+                        "trace line {}: unknown op `{other}`",
+                        ln + 1
+                    )))
+                }
+            }
+        }
+        Ok(Trace { ops })
+    }
+
+    /// Replay against a SAI client; returns per-op write reports.
+    pub fn replay(
+        &self,
+        sai: &crate::store::Sai,
+        seed: u64,
+    ) -> Result<Vec<crate::store::WriteReport>> {
+        let mut rng = Rng::new(seed);
+        let mut buffers: HashMap<String, Vec<u8>> = HashMap::new();
+        let mut reports = Vec::new();
+        for op in &self.ops {
+            match op {
+                TraceOp::Write { file, size } => {
+                    if let Some(n) = size {
+                        let data = rng.bytes(*n);
+                        buffers.insert(file.clone(), data);
+                    }
+                    let data = buffers
+                        .get(file)
+                        .ok_or_else(|| Error::Config(format!("write {file}: no buffer")))?;
+                    reports.push(sai.write_file(file, data)?);
+                }
+                TraceOp::Mutate {
+                    file,
+                    overwrites,
+                    inserts,
+                    deletes,
+                } => {
+                    let buf = buffers
+                        .get_mut(file)
+                        .ok_or_else(|| Error::Config(format!("mutate {file}: no buffer")))?;
+                    let profile = super::MutationProfile {
+                        insertions: *inserts,
+                        insert_max: 512,
+                        deletions: *deletes,
+                        delete_max: 512,
+                        overwrites: *overwrites,
+                        overwrite_frac: 0.002,
+                    };
+                    mutate_buffer(buf, profile, &mut rng);
+                }
+                TraceOp::Read { file } => {
+                    let data = sai.read_file(file)?;
+                    if let Some(expect) = buffers.get(file) {
+                        if &data != expect {
+                            return Err(Error::Other(format!(
+                                "trace read {file}: payload mismatch"
+                            )));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(reports)
+    }
+}
+
+fn parse_size(s: &str) -> Option<usize> {
+    let (num, mult) = match s.chars().last()? {
+        'K' | 'k' => (&s[..s.len() - 1], 1024),
+        'M' | 'm' => (&s[..s.len() - 1], 1024 * 1024),
+        'G' | 'g' => (&s[..s.len() - 1], 1024 * 1024 * 1024),
+        _ => (s, 1),
+    };
+    num.parse::<usize>().ok().map(|n| n * mult)
+}
+
+/// Apply a mutation profile to a buffer in place (shared with the
+/// checkpoint generator's semantics).
+pub fn mutate_buffer(buf: &mut Vec<u8>, p: super::MutationProfile, rng: &mut Rng) {
+    let n0 = buf.len();
+    let spot = ((n0 as f64 * p.overwrite_frac) as usize).max(64);
+    for _ in 0..p.overwrites {
+        let n = buf.len();
+        if n <= spot {
+            break;
+        }
+        let at = rng.range(0, n - spot);
+        let mut patch = vec![0u8; spot];
+        rng.fill(&mut patch);
+        buf[at..at + spot].copy_from_slice(&patch);
+    }
+    for _ in 0..p.deletions {
+        let n = buf.len();
+        if n < 4 {
+            break;
+        }
+        let len = rng.range(1, p.delete_max + 1).min(n / 2);
+        let at = rng.range(0, n - len);
+        buf.drain(at..at + len);
+    }
+    for _ in 0..p.insertions {
+        let n = buf.len();
+        let len = rng.range(1, p.insert_max + 1);
+        let at = rng.range(0, n + 1).min(n);
+        let ins = rng.bytes(len);
+        buf.splice(at..at, ins);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# checkpoint-style trace
+write ckpt 256K
+mutate ckpt overwrite=4,insert=1,delete=1
+write ckpt -
+read ckpt -
+"#;
+
+    #[test]
+    fn parse_sample() {
+        let t = Trace::parse(SAMPLE).unwrap();
+        assert_eq!(t.ops.len(), 4);
+        assert_eq!(
+            t.ops[0],
+            TraceOp::Write {
+                file: "ckpt".into(),
+                size: Some(256 * 1024)
+            }
+        );
+        assert_eq!(
+            t.ops[1],
+            TraceOp::Mutate {
+                file: "ckpt".into(),
+                overwrites: 4,
+                inserts: 1,
+                deletes: 1
+            }
+        );
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Trace::parse("frobnicate x y").is_err());
+        assert!(Trace::parse("write").is_err());
+        assert!(Trace::parse("mutate f overwrite?4").is_err());
+        assert!(Trace::parse("write f 12Q").is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let t = Trace::parse("# nothing\n\n  \n").unwrap();
+        assert!(t.ops.is_empty());
+    }
+
+    #[test]
+    fn replay_against_cluster() {
+        use crate::config::{CaMode, ClientConfig, ClusterConfig};
+        use crate::hashgpu::{CpuEngine, WindowHashMode};
+        use std::sync::Arc;
+        let cluster = crate::store::Cluster::spawn(ClusterConfig {
+            nodes: 2,
+            link_bps: 1e9,
+            shape: false,
+        })
+        .unwrap();
+        let cfg = ClientConfig {
+            ca_mode: CaMode::Fixed,
+            block_size: 16 * 1024,
+            write_buffer: 64 * 1024,
+            stripe_width: 2,
+            ..ClientConfig::default()
+        };
+        let sai = cluster
+            .client(cfg, Arc::new(CpuEngine::new(2, 4096, WindowHashMode::Rolling)))
+            .unwrap();
+        let t = Trace::parse(SAMPLE).unwrap();
+        let reports = t.replay(&sai, 7).unwrap();
+        assert_eq!(reports.len(), 2); // two writes
+        // The second (mutated) write dedups the aligned prefix (fixed
+        // blocks: everything past the first indel re-transfers).
+        assert!(reports[1].similarity > 0.05, "{}", reports[1].similarity);
+    }
+
+    #[test]
+    fn mutate_buffer_changes_content() {
+        let mut rng = Rng::new(1);
+        let mut buf = rng.bytes(10_000);
+        let orig = buf.clone();
+        mutate_buffer(
+            &mut buf,
+            crate::workload::MutationProfile::paper_default(),
+            &mut rng,
+        );
+        assert_ne!(buf, orig);
+    }
+}

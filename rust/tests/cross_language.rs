@@ -1,0 +1,140 @@
+//! Cross-language correctness: the AOT-compiled Pallas artifacts,
+//! executed through PJRT from rust, must agree bit-for-bit with the
+//! rust CPU implementations (which are themselves verified against
+//! hashlib / Horner oracles in the python suite).  This closes the loop:
+//! python oracle == Pallas kernel == compiled HLO on PJRT == rust CPU.
+//!
+//! Requires `make artifacts`.
+
+use std::sync::Arc;
+
+use gpustore::crystal::{BackendKind, CrystalOpts, DeviceOp, JobOut, Master};
+use gpustore::hash::{direct_hash_cpu, md5, window_hashes, DEFAULT_P, DEFAULT_WINDOW};
+use gpustore::hashgpu::{CpuEngine, GpuEngine, HashEngine, WindowHashMode};
+use gpustore::runtime::artifacts::Manifest;
+use gpustore::runtime::pjrt::{pack_words, PjrtContext};
+use gpustore::util::Rng;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    let dir = Manifest::default_dir();
+    assert!(
+        dir.join("manifest.json").exists(),
+        "artifacts not built; run `make artifacts`"
+    );
+    dir
+}
+
+#[test]
+fn direct_artifact_matches_cpu_md5() {
+    let mut ctx = PjrtContext::new(&artifacts_dir()).unwrap();
+    // Smallest direct artifact: md5_seg256_l16.
+    let m = ctx.manifest().clone();
+    let art = m.pick_direct(256, 16 * 256).unwrap().clone();
+    let lanes = art.lanes;
+    let lane_words = art.n_blocks * 16;
+
+    let mut rng = Rng::new(42);
+    let segs: Vec<Vec<u8>> = (0..lanes).map(|_| rng.bytes(256)).collect();
+    let mut words = vec![0u32; art.in_words];
+    let mut nblk = vec![0u32; lanes];
+    for (i, seg) in segs.iter().enumerate() {
+        nblk[i] = gpustore::runtime::pjrt::pad_segment_into(
+            seg,
+            &mut words[i * lane_words..(i + 1) * lane_words],
+        );
+    }
+    let (out, timing) = ctx.run_direct(&art.name, &words, &nblk).unwrap();
+    assert_eq!(out.len(), lanes * 4);
+    for (i, seg) in segs.iter().enumerate() {
+        let want = md5(seg);
+        let mut got = [0u8; 16];
+        for w in 0..4 {
+            got[4 * w..4 * w + 4].copy_from_slice(&out[i * 4 + w].to_le_bytes());
+        }
+        assert_eq!(got, want, "lane {i}");
+    }
+    assert!(timing.kernel.as_nanos() > 0);
+}
+
+#[test]
+fn sliding_artifact_matches_cpu_rolling() {
+    let mut ctx = PjrtContext::new(&artifacts_dir()).unwrap();
+    let m = ctx.manifest().clone();
+    let art = m.pick_sliding(65536).unwrap().clone();
+
+    let data = Rng::new(7).bytes(art.n_bytes);
+    let words = pack_words(&data, art.in_words);
+    let (out, _) = ctx.run_sliding(&art.name, &words).unwrap();
+    let want = window_hashes(&data, art.window, m.p);
+    assert_eq!(out.len(), want.len());
+    assert_eq!(out, want);
+}
+
+#[test]
+fn sliding_artifact_partial_fill() {
+    // Data shorter than the bucket: the valid prefix must still match.
+    let mut ctx = PjrtContext::new(&artifacts_dir()).unwrap();
+    let m = ctx.manifest().clone();
+    let art = m.pick_sliding(65536).unwrap().clone();
+
+    let data = Rng::new(8).bytes(10_000);
+    let mut padded = data.clone();
+    padded.resize(art.n_bytes, 0);
+    let words = pack_words(&padded, art.in_words);
+    let (out, _) = ctx.run_sliding(&art.name, &words).unwrap();
+    let want = window_hashes(&data, art.window, m.p);
+    assert_eq!(&out[..want.len()], &want[..]);
+}
+
+#[test]
+fn gpu_engine_pjrt_end_to_end() {
+    // Full stack: GpuEngine -> crystal master -> PJRT executor.
+    let opts = CrystalOpts::optimized(BackendKind::Pjrt {
+        artifact_dir: artifacts_dir(),
+    });
+    let gpu = GpuEngine::new(
+        Arc::new(Master::new(opts).unwrap()),
+        4096,
+        DEFAULT_WINDOW,
+    );
+    let cpu = CpuEngine::new(2, 4096, WindowHashMode::Rolling);
+
+    for len in [100usize, 4096, 70_000, 300_000] {
+        let data = Rng::new(len as u64).bytes(len);
+        assert_eq!(
+            gpu.direct_hash(&data).unwrap(),
+            direct_hash_cpu(&data, 4096),
+            "direct len={len}"
+        );
+        assert_eq!(
+            gpu.window_hashes(&data).unwrap(),
+            cpu.window_hashes(&data).unwrap(),
+            "sliding len={len}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_multi_device_stream() {
+    // Two "devices" (= two PJRT manager threads) sharing the queue.
+    let opts = CrystalOpts {
+        devices: 2,
+        ..CrystalOpts::optimized(BackendKind::Pjrt {
+            artifact_dir: artifacts_dir(),
+        })
+    };
+    let master = Master::new(opts).unwrap();
+    let mut rng = Rng::new(3);
+    let inputs: Vec<Arc<Vec<u8>>> = (0..10).map(|_| Arc::new(rng.bytes(50_000))).collect();
+    let handles: Vec<_> = inputs
+        .iter()
+        .map(|d| master.submit(DeviceOp::SlidingWindow, d.clone()))
+        .collect();
+    for (d, h) in inputs.iter().zip(handles) {
+        let r = h.wait().unwrap();
+        let JobOut::Hashes(hs) = r.out else { panic!() };
+        assert_eq!(hs, window_hashes(d, DEFAULT_WINDOW, DEFAULT_P));
+    }
+    let stats = master.stats();
+    assert_eq!(stats.per_device.iter().sum::<u64>(), 10);
+}

@@ -1,0 +1,319 @@
+//! Property-based tests over the coordinator's invariants (randomized
+//! with the in-tree deterministic PRNG — the offline environment has no
+//! proptest crate; each property sweeps many seeded cases and prints the
+//! failing seed on assert).
+
+use std::sync::Arc;
+
+use gpustore::chunking::{ChunkParams, ContentChunker, FixedChunker};
+use gpustore::crystal::{BackendKind, CrystalOpts, DeviceOp, JobOut, Master, MockTuning};
+use gpustore::hash::{
+    direct_hash_cpu, md5, window_hashes, Md5, DEFAULT_P, DEFAULT_WINDOW,
+};
+use gpustore::runtime::artifacts::Manifest;
+use gpustore::store::proto::{BlockMeta, Msg};
+use gpustore::util::Rng;
+
+const CASES: u64 = 40;
+
+fn params_from(rng: &mut Rng) -> ChunkParams {
+    let window = [16usize, 32, 48][rng.range(0, 3)];
+    let mask_bits = rng.range(8, 13);
+    let mask = (1u32 << mask_bits) - 1;
+    let mut p = ChunkParams {
+        window,
+        p: DEFAULT_P,
+        mask,
+        magic: (rng.next_u64() as u32) & mask,
+        min_size: window.max(1 << rng.range(6, 9)),
+        max_size: 1 << rng.range(12, 15),
+    };
+    if p.min_size >= p.max_size {
+        p.max_size = p.min_size * 4;
+    }
+    p.validate().unwrap();
+    p
+}
+
+/// PROPERTY: chunking any stream under any buffering reproduces the
+/// stream and matches single-shot chunking.
+#[test]
+fn prop_cdc_buffering_invariance() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let p = params_from(&mut rng);
+        let len = rng.range(0, 60_000);
+        let data = rng.bytes(len);
+        let whole = ContentChunker::chunk_all(p, &data);
+        // Reassembly.
+        let cat: Vec<u8> = whole.iter().flat_map(|c| c.data.clone()).collect();
+        assert_eq!(cat, data, "seed={seed}");
+        // Random re-buffering.
+        let mut c = ContentChunker::new(p);
+        let mut got = Vec::new();
+        let mut off = 0;
+        while off < data.len() {
+            let take = rng.range(1, 5000).min(data.len() - off);
+            got.extend(c.push(&data[off..off + take]));
+            off += take;
+        }
+        got.extend(c.finish());
+        assert_eq!(got, whole, "seed={seed}");
+    }
+}
+
+/// PROPERTY: all non-final chunks respect [min, max]; boundaries are
+/// content-defined (same data -> same chunks regardless of history).
+#[test]
+fn prop_cdc_size_bounds_and_determinism() {
+    for seed in 100..100 + CASES {
+        let mut rng = Rng::new(seed);
+        let p = params_from(&mut rng);
+        let len = rng.range(p.max_size, 4 * p.max_size);
+        let data = rng.bytes(len);
+        let a = ContentChunker::chunk_all(p, &data);
+        let b = ContentChunker::chunk_all(p, &data);
+        assert_eq!(a, b, "seed={seed}");
+        for (i, ch) in a.iter().enumerate() {
+            assert!(ch.data.len() <= p.max_size, "seed={seed} chunk {i}");
+            if i + 1 != a.len() {
+                assert!(ch.data.len() >= p.min_size, "seed={seed} chunk {i}");
+            }
+        }
+    }
+}
+
+/// PROPERTY: incremental MD5 over arbitrary splits == one-shot MD5.
+#[test]
+fn prop_md5_incremental_any_split() {
+    for seed in 200..200 + CASES {
+        let mut rng = Rng::new(seed);
+        let len = rng.range(0, 5000);
+        let data = rng.bytes(len);
+        let want = md5(&data);
+        let mut ctx = Md5::new();
+        let mut off = 0;
+        while off < data.len() {
+            let take = rng.range(1, 257).min(data.len() - off);
+            ctx.update(&data[off..off + take]);
+            off += take;
+        }
+        assert_eq!(ctx.finalize(), want, "seed={seed} len={}", data.len());
+    }
+}
+
+/// PROPERTY: rolling window hashes are position-independent functions of
+/// window content (splice the same window into two streams).
+#[test]
+fn prop_rolling_content_defined() {
+    for seed in 300..300 + CASES {
+        let mut rng = Rng::new(seed);
+        let win = rng.bytes(DEFAULT_WINDOW);
+        let n1 = rng.range(0, 400);
+        let pre1 = rng.bytes(n1);
+        let n2 = rng.range(0, 400);
+        let pre2 = rng.bytes(n2);
+        let mut s1 = pre1.clone();
+        s1.extend_from_slice(&win);
+        let mut s2 = pre2.clone();
+        s2.extend_from_slice(&win);
+        let h1 = window_hashes(&s1, DEFAULT_WINDOW, DEFAULT_P);
+        let h2 = window_hashes(&s2, DEFAULT_WINDOW, DEFAULT_P);
+        assert_eq!(h1[pre1.len()], h2[pre2.len()], "seed={seed}");
+    }
+}
+
+/// PROPERTY: the wire protocol round-trips arbitrary messages.
+#[test]
+fn prop_proto_roundtrip() {
+    for seed in 400..400 + CASES {
+        let mut rng = Rng::new(seed);
+        let n_blocks = rng.range(0, 50);
+        let blocks: Vec<BlockMeta> = (0..n_blocks)
+            .map(|_| {
+                let mut hash = [0u8; 16];
+                rng.fill(&mut hash);
+                BlockMeta {
+                    hash,
+                    len: rng.next_u64() as u32,
+                    node: rng.range(0, 8) as u32,
+                }
+            })
+            .collect();
+        let msgs = vec![
+            Msg::CommitBlockMap {
+                file: format!("file-{seed}"),
+                blocks: blocks.clone(),
+            },
+            Msg::BlockMap {
+                version: rng.next_u64(),
+                blocks,
+            },
+            Msg::PutBlock {
+                hash: [seed as u8; 16],
+                data: {
+                    let n = rng.range(0, 3000);
+                    rng.bytes(n)
+                },
+            },
+            Msg::Err(format!("err-{seed}")),
+        ];
+        let mut buf = Vec::new();
+        for m in &msgs {
+            m.write_to(&mut buf).unwrap();
+        }
+        let mut r = &buf[..];
+        for m in &msgs {
+            assert_eq!(&Msg::read_from(&mut r).unwrap().unwrap(), m, "seed={seed}");
+        }
+    }
+}
+
+/// PROPERTY (coordinator): any interleaving of direct/sliding jobs of
+/// any size through crystal yields exactly the CPU-reference results,
+/// regardless of device count, overlap, reuse, or queue pressure.
+#[test]
+fn prop_crystal_routing_correctness() {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        panic!("artifacts not built; run `make artifacts`");
+    }
+    for seed in 500..505 {
+        let mut rng = Rng::new(seed);
+        let opts = CrystalOpts {
+            devices: rng.range(1, 3),
+            buffer_reuse: rng.next_u64() % 2 == 0,
+            overlap: rng.next_u64() % 2 == 0,
+            queue_cap: [0usize, 4, 64][rng.range(0, 3)],
+            ..CrystalOpts::optimized(BackendKind::Mock {
+                artifact_dir: dir.clone(),
+                tuning: MockTuning::default(),
+            })
+        };
+        let master = Master::new(opts).unwrap();
+        let jobs: Vec<(DeviceOp, Arc<Vec<u8>>)> = (0..20)
+            .map(|_| {
+                let len = rng.range(0, 70_000);
+                let data = Arc::new(rng.bytes(len));
+                let op = if rng.next_u64() % 2 == 0 {
+                    DeviceOp::DirectHash { seg_bytes: 4096 }
+                } else {
+                    DeviceOp::SlidingWindow
+                };
+                (op, data)
+            })
+            .collect();
+        let handles: Vec<_> = jobs
+            .iter()
+            .map(|(op, d)| master.submit(*op, d.clone()))
+            .collect();
+        for ((op, data), h) in jobs.iter().zip(handles) {
+            let r = h.wait().unwrap();
+            match (op, r.out) {
+                (DeviceOp::DirectHash { .. }, JobOut::Digests(d)) => {
+                    let want: Vec<_> = if data.is_empty() {
+                        vec![md5(&[])]
+                    } else {
+                        data.chunks(4096).map(md5).collect()
+                    };
+                    assert_eq!(d, want, "seed={seed}");
+                }
+                (DeviceOp::SlidingWindow, JobOut::Hashes(h)) => {
+                    assert_eq!(
+                        h,
+                        window_hashes(data, DEFAULT_WINDOW, DEFAULT_P),
+                        "seed={seed}"
+                    );
+                }
+                _ => panic!("wrong output kind, seed={seed}"),
+            }
+        }
+    }
+}
+
+/// PROPERTY: fixed chunker under any buffering == split_fixed.
+#[test]
+fn prop_fixed_chunker_buffering() {
+    for seed in 600..600 + CASES {
+        let mut rng = Rng::new(seed);
+        let block = 1 << rng.range(6, 12);
+        let len = rng.range(0, 30_000);
+        let data = rng.bytes(len);
+        let mut ch = FixedChunker::new(block);
+        let mut got = Vec::new();
+        let mut off = 0;
+        while off < data.len() {
+            let take = rng.range(1, 4000).min(data.len() - off);
+            got.extend(ch.push(&data[off..off + take]));
+            off += take;
+        }
+        got.extend(ch.finish());
+        let want: Vec<Vec<u8>> = data.chunks(block).map(|c| c.to_vec()).collect();
+        assert_eq!(got, want, "seed={seed}");
+    }
+}
+
+/// PROPERTY: the parallel Merkle-Damgard construction is stable across
+/// thread counts and sensitive to the segment size.
+#[test]
+fn prop_merkle_construction() {
+    for seed in 700..700 + CASES / 4 {
+        let mut rng = Rng::new(seed);
+        let len = rng.range(8192, 40_000);
+        let data = rng.bytes(len);
+        let d1 = direct_hash_cpu(&data, 4096);
+        for threads in [2, 5, 9] {
+            assert_eq!(
+                gpustore::hash::direct_hash_cpu_mt(&data, 4096, threads),
+                d1,
+                "seed={seed}"
+            );
+        }
+        assert_ne!(d1, direct_hash_cpu(&data, 256), "seed={seed}");
+    }
+}
+
+/// PROPERTY (dedup safety): the SAI never loses data — any sequence of
+/// writes of random files under random configs reads back exactly.
+#[test]
+fn prop_store_write_read_fuzz() {
+    use gpustore::config::{CaMode, ClientConfig, ClusterConfig};
+    use gpustore::hashgpu::{CpuEngine, WindowHashMode};
+    let cluster = gpustore::store::Cluster::spawn(ClusterConfig {
+        nodes: 3,
+        link_bps: 1e9,
+        shape: false,
+    })
+    .unwrap();
+    for seed in 800..806 {
+        let mut rng = Rng::new(seed);
+        let mode = [CaMode::None, CaMode::Fixed, CaMode::Cdc][rng.range(0, 3)];
+        let cfg = ClientConfig {
+            ca_mode: mode,
+            block_size: 16 * 1024,
+            cdc_min: 2 * 1024,
+            cdc_max: 32 * 1024,
+            cdc_mask: (1 << 13) - 1,
+            write_buffer: 64 * 1024,
+            stripe_width: rng.range(1, 4),
+            ..ClientConfig::default()
+        };
+        let engine = Arc::new(CpuEngine::new(2, 4096, WindowHashMode::Rolling));
+        let sai = cluster.client(cfg, engine).unwrap();
+        // A few versions of the same file with partial mutations.
+        let len = rng.range(1, 300_000);
+        let mut data = rng.bytes(len);
+        for v in 0..3 {
+            let name = format!("fuzz-{seed}");
+            sai.write_file(&name, &data).unwrap();
+            assert_eq!(sai.read_file(&name).unwrap(), data, "seed={seed} v={v}");
+            // Mutate for next version.
+            if !data.is_empty() {
+                let at = rng.range(0, data.len());
+                let n = rng.range(0, 200);
+                let ins = rng.bytes(n);
+                data.splice(at..at, ins);
+            }
+        }
+    }
+}

@@ -1,0 +1,349 @@
+//! End-to-end storage-system integration: full write/read round trips
+//! through manager + nodes over loopback TCP, dedup behaviour across the
+//! paper's three CA configurations, and failure handling.
+
+use std::sync::Arc;
+
+use gpustore::config::{CaMode, ClientConfig, ClusterConfig};
+use gpustore::hashgpu::{CpuEngine, OracleEngine, WindowHashMode};
+use gpustore::store::Cluster;
+use gpustore::util::Rng;
+use gpustore::workload::{different_files, similar_files, CheckpointStream, MutationProfile};
+
+fn small_cluster() -> Cluster {
+    Cluster::spawn(ClusterConfig {
+        nodes: 4,
+        link_bps: 1e9,
+        shape: false, // wall-clock tests don't want pacing
+    })
+    .unwrap()
+}
+
+fn cpu_engine() -> Arc<CpuEngine> {
+    Arc::new(CpuEngine::new(4, 4096, WindowHashMode::Rolling))
+}
+
+/// Small-chunk CDC config so tests exercise multi-chunk paths.
+fn cdc_cfg() -> ClientConfig {
+    ClientConfig {
+        ca_mode: CaMode::Cdc,
+        cdc_min: 4 * 1024,
+        cdc_max: 64 * 1024,
+        cdc_mask: (1 << 14) - 1,
+        write_buffer: 256 * 1024,
+        block_size: 64 * 1024,
+        ..ClientConfig::default()
+    }
+}
+
+fn fixed_cfg() -> ClientConfig {
+    ClientConfig {
+        ca_mode: CaMode::Fixed,
+        block_size: 64 * 1024,
+        write_buffer: 256 * 1024,
+        ..ClientConfig::default()
+    }
+}
+
+#[test]
+fn write_read_roundtrip_fixed() {
+    let cluster = small_cluster();
+    let sai = cluster.client(fixed_cfg(), cpu_engine()).unwrap();
+    let data = Rng::new(1).bytes(1_000_000);
+    let rep = sai.write_file("a.bin", &data).unwrap();
+    assert_eq!(rep.bytes, 1_000_000);
+    assert_eq!(rep.blocks, 16); // ceil(1e6 / 64KB)
+    assert_eq!(rep.new_blocks, 16);
+    assert_eq!(sai.read_file("a.bin").unwrap(), data);
+}
+
+#[test]
+fn write_read_roundtrip_cdc() {
+    let cluster = small_cluster();
+    let sai = cluster.client(cdc_cfg(), cpu_engine()).unwrap();
+    let data = Rng::new(2).bytes(1_000_000);
+    let rep = sai.write_file("c.bin", &data).unwrap();
+    assert!(rep.blocks > 5, "expected multiple chunks, got {}", rep.blocks);
+    assert_eq!(sai.read_file("c.bin").unwrap(), data);
+}
+
+#[test]
+fn write_read_roundtrip_non_ca() {
+    let cluster = small_cluster();
+    let sai = cluster
+        .client(
+            ClientConfig {
+                block_size: 64 * 1024,
+                write_buffer: 256 * 1024,
+                ..ClientConfig::non_ca()
+            },
+            cpu_engine(),
+        )
+        .unwrap();
+    let data = Rng::new(3).bytes(300_000);
+    let rep = sai.write_file("n.bin", &data).unwrap();
+    assert_eq!(rep.dup_blocks, 0);
+    assert_eq!(rep.similarity, 0.0);
+    assert_eq!(rep.hash_secs, 0.0, "non-CA must not hash");
+    assert_eq!(sai.read_file("n.bin").unwrap(), data);
+}
+
+#[test]
+fn empty_and_tiny_files() {
+    let cluster = small_cluster();
+    let sai = cluster.client(fixed_cfg(), cpu_engine()).unwrap();
+    assert_eq!(sai.write_file("empty", &[]).unwrap().blocks, 0);
+    assert_eq!(sai.read_file("empty").unwrap(), Vec::<u8>::new());
+    let tiny = vec![7u8; 10];
+    sai.write_file("tiny", &tiny).unwrap();
+    assert_eq!(sai.read_file("tiny").unwrap(), tiny);
+}
+
+#[test]
+fn identical_rewrite_fully_dedups() {
+    // The `similar` workload property: the second write of the same file
+    // transfers nothing.
+    let cluster = small_cluster();
+    let sai = cluster.client(fixed_cfg(), cpu_engine()).unwrap();
+    let w = similar_files(2, 500_000, 7);
+    let r1 = sai.write_file("s.bin", &w.files[0]).unwrap();
+    let r2 = sai.write_file("s.bin", &w.files[1]).unwrap();
+    assert!(r1.new_blocks > 0);
+    assert_eq!(r2.new_blocks, 0, "identical rewrite must transfer nothing");
+    assert_eq!(r2.new_bytes, 0);
+    assert!((r2.similarity - 1.0).abs() < 1e-9);
+    assert_eq!(sai.read_file("s.bin").unwrap(), w.files[1]);
+}
+
+#[test]
+fn different_files_no_dedup() {
+    let cluster = small_cluster();
+    let sai = cluster.client(fixed_cfg(), cpu_engine()).unwrap();
+    let w = different_files(2, 300_000, 9);
+    sai.write_file("f", &w.files[0]).unwrap();
+    let r2 = sai.write_file("f", &w.files[1]).unwrap();
+    assert_eq!(r2.dup_blocks, 0);
+    assert_eq!(sai.read_file("f").unwrap(), w.files[1]);
+}
+
+#[test]
+fn dedup_within_single_write() {
+    // A file of repeated identical blocks stores one copy.
+    let cluster = small_cluster();
+    let sai = cluster.client(fixed_cfg(), cpu_engine()).unwrap();
+    let block = Rng::new(10).bytes(64 * 1024);
+    let mut data = Vec::new();
+    for _ in 0..8 {
+        data.extend_from_slice(&block);
+    }
+    let rep = sai.write_file("rep.bin", &data).unwrap();
+    assert_eq!(rep.blocks, 8);
+    assert_eq!(rep.new_blocks, 1);
+    assert_eq!(rep.dup_blocks, 7);
+    assert_eq!(sai.read_file("rep.bin").unwrap(), data);
+    let (blocks, bytes) = cluster.storage_stats();
+    assert_eq!(blocks, 1);
+    assert_eq!(bytes, 64 * 1024);
+}
+
+#[test]
+fn cdc_detects_more_checkpoint_similarity_than_fixed() {
+    // The paper's core Fig-11 contrast, at test scale.
+    let cluster = small_cluster();
+    let imgs: Vec<Vec<u8>> =
+        CheckpointStream::new(3, 2 << 20, MutationProfile::paper_default(), 11).collect();
+
+    let fixed = cluster.client(fixed_cfg(), cpu_engine()).unwrap();
+    let cdc = cluster.client(cdc_cfg(), cpu_engine()).unwrap();
+    let mut sim_fixed = Vec::new();
+    let mut sim_cdc = Vec::new();
+    for (i, img) in imgs.iter().enumerate() {
+        let rf = fixed.write_file("ckpt-fixed", img).unwrap();
+        let rc = cdc.write_file("ckpt-cdc", img).unwrap();
+        if i > 0 {
+            sim_fixed.push(rf.similarity);
+            sim_cdc.push(rc.similarity);
+        }
+    }
+    let f: f64 = sim_fixed.iter().sum::<f64>() / sim_fixed.len() as f64;
+    let c: f64 = sim_cdc.iter().sum::<f64>() / sim_cdc.len() as f64;
+    assert!(c > f, "cdc {c} should beat fixed {f}");
+    assert!(c > 0.5, "cdc similarity {c} too low");
+}
+
+#[test]
+fn oracle_engine_storage_roundtrip() {
+    let cluster = small_cluster();
+    let sai = cluster
+        .client(fixed_cfg(), Arc::new(OracleEngine::new()))
+        .unwrap();
+    let data = Rng::new(12).bytes(500_000);
+    sai.write_file("o.bin", &data).unwrap();
+    assert_eq!(sai.read_file("o.bin").unwrap(), data);
+    // Oracle still dedups identical rewrites.
+    let r2 = sai.write_file("o.bin", &data).unwrap();
+    assert_eq!(r2.new_blocks, 0);
+}
+
+#[test]
+fn versioning_visible_in_manager() {
+    let cluster = small_cluster();
+    let sai = cluster.client(fixed_cfg(), cpu_engine()).unwrap();
+    let data = Rng::new(13).bytes(100_000);
+    sai.write_file("v.bin", &data).unwrap();
+    sai.write_file("v.bin", &data).unwrap();
+    let files = sai.list_files().unwrap();
+    assert_eq!(files, vec![("v.bin".to_string(), 2)]);
+}
+
+#[test]
+fn read_missing_file_errors() {
+    let cluster = small_cluster();
+    let sai = cluster.client(fixed_cfg(), cpu_engine()).unwrap();
+    assert!(sai.read_file("nope").is_err());
+}
+
+#[test]
+fn striping_spreads_blocks_across_nodes() {
+    let cluster = small_cluster();
+    let sai = cluster.client(fixed_cfg(), cpu_engine()).unwrap();
+    let data = Rng::new(14).bytes(1_000_000); // 16 distinct blocks
+    sai.write_file("stripe.bin", &data).unwrap();
+    let (_, map) = sai.get_block_map("stripe.bin").unwrap();
+    let mut nodes: Vec<u32> = map.iter().map(|b| b.node).collect();
+    nodes.sort_unstable();
+    nodes.dedup();
+    assert_eq!(nodes, vec![0, 1, 2, 3], "all 4 stripe nodes used");
+}
+
+#[test]
+fn multiple_files_coexist() {
+    let cluster = small_cluster();
+    let sai = cluster.client(cdc_cfg(), cpu_engine()).unwrap();
+    let mut rng = Rng::new(15);
+    let files: Vec<(String, Vec<u8>)> = (0..5)
+        .map(|i| (format!("f{i}"), rng.bytes(200_000 + i * 1000)))
+        .collect();
+    for (n, d) in &files {
+        sai.write_file(n, d).unwrap();
+    }
+    for (n, d) in &files {
+        assert_eq!(&sai.read_file(n).unwrap(), d, "{n}");
+    }
+}
+
+#[test]
+fn shaped_cluster_still_correct() {
+    // With the 1 Gbps shaper on, writes still round-trip (slower).
+    let cluster = Cluster::spawn(ClusterConfig {
+        nodes: 4,
+        link_bps: 1e9,
+        shape: true,
+    })
+    .unwrap();
+    let sai = cluster.client(fixed_cfg(), cpu_engine()).unwrap();
+    let data = Rng::new(16).bytes(2_000_000);
+    let rep = sai.write_file("shaped.bin", &data).unwrap();
+    // 2 MB at 1 Gbps ~ 16 ms minimum.
+    assert!(rep.elapsed.as_secs_f64() > 0.010, "{:?}", rep.elapsed);
+    assert_eq!(sai.read_file("shaped.bin").unwrap(), data);
+}
+
+#[test]
+fn verify_file_detects_corruption() {
+    use gpustore::store::proto::Msg;
+    let cluster = small_cluster();
+    let sai = cluster.client(fixed_cfg(), cpu_engine()).unwrap();
+    let data = Rng::new(20).bytes(300_000);
+    sai.write_file("scrub.bin", &data).unwrap();
+    let (ok, bad) = sai.verify_file("scrub.bin").unwrap();
+    assert_eq!(bad, 0);
+    assert_eq!(ok, 5); // ceil(300_000 / 64KB)
+
+    // Corrupt one block in place on its node (simulated bit rot).
+    let (_, map) = sai.get_block_map("scrub.bin").unwrap();
+    let victim = &map[2];
+    // Overwrite the stored payload under the same key.
+    let node = &cluster.node_addrs()[victim.node as usize];
+    let mut c = gpustore::net::Conn::connect(node).unwrap();
+    Msg::PutBlock {
+        hash: victim.hash,
+        data: vec![0xEE; victim.len as usize],
+    }
+    .write_to(&mut c)
+    .unwrap();
+    assert!(matches!(
+        Msg::read_from(&mut c).unwrap().unwrap(),
+        Msg::Ok
+    ));
+
+    let (ok, bad) = sai.verify_file("scrub.bin").unwrap();
+    assert_eq!(bad, 1, "corruption must be detected");
+    assert_eq!(ok, 4);
+    // And the read path refuses the corrupt block.
+    assert!(sai.read_file("scrub.bin").is_err());
+}
+
+#[test]
+fn verify_rejects_non_ca() {
+    let cluster = small_cluster();
+    let sai = cluster
+        .client(
+            ClientConfig {
+                block_size: 64 * 1024,
+                write_buffer: 256 * 1024,
+                ..ClientConfig::non_ca()
+            },
+            cpu_engine(),
+        )
+        .unwrap();
+    sai.write_file("x", &[1, 2, 3]).unwrap();
+    assert!(sai.verify_file("x").is_err());
+}
+
+#[test]
+fn node_failure_mid_stream_surfaces_error() {
+    // Kill a storage node, then write: the striped put must error, not
+    // hang or silently drop data.
+    let mut cluster = Cluster::spawn(ClusterConfig {
+        nodes: 4,
+        link_bps: 1e9,
+        shape: false,
+    })
+    .unwrap();
+    let sai = cluster.client(fixed_cfg(), cpu_engine()).unwrap();
+    let data = Rng::new(21).bytes(512 * 1024);
+    sai.write_file("pre.bin", &data).unwrap();
+    cluster.kill_node(1);
+    // Give the TCP teardown a moment.
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    let res = sai.write_file("post.bin", &Rng::new(22).bytes(512 * 1024));
+    assert!(res.is_err(), "write must fail when a stripe node is down");
+}
+
+#[test]
+fn gpu_engine_full_storage_roundtrip() {
+    // The real PJRT-backed engine through the real cluster (small data).
+    use gpustore::hashgpu::build_engine;
+    let cluster = small_cluster();
+    let cfg = ClientConfig {
+        ca_mode: CaMode::Cdc,
+        cdc_min: 4 * 1024,
+        cdc_max: 64 * 1024,
+        cdc_mask: (1 << 14) - 1,
+        write_buffer: 256 * 1024,
+        block_size: 64 * 1024,
+        engine: gpustore::config::HashEngineKind::gpu_default(),
+        ..ClientConfig::default()
+    };
+    let engine = build_engine(&cfg, None).unwrap();
+    let sai = cluster.client(cfg, engine).unwrap();
+    let data = Rng::new(23).bytes(700_000);
+    let r = sai.write_file("gpu.bin", &data).unwrap();
+    assert!(r.blocks > 3);
+    assert_eq!(sai.read_file("gpu.bin").unwrap(), data);
+    let r2 = sai.write_file("gpu.bin", &data).unwrap();
+    assert_eq!(r2.new_blocks, 0, "identical rewrite dedups via GPU hashes");
+    let (ok, bad) = sai.verify_file("gpu.bin").unwrap();
+    assert_eq!((ok > 0, bad), (true, 0));
+}
