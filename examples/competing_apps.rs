@@ -6,14 +6,24 @@
 //!     make artifacts && cargo run --release --example competing_apps
 //!     (args: [file-MB] [files])
 
+use std::io::Write;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use gpustore::config::{ClientConfig, ClusterConfig};
 use gpustore::hashgpu::{build_engine, CpuEngine, WindowHashMode};
 use gpustore::metrics::Table;
-use gpustore::store::Cluster;
+use gpustore::store::{Cluster, Sai, WriteReport};
 use gpustore::workload::{different_files, ComputeBoundApp, IoBoundApp};
+
+/// Stream one file through a write session in 1 MB app-sized writes.
+fn stream_write(sai: &Sai, name: &str, data: &[u8]) -> gpustore::Result<WriteReport> {
+    let mut w = sai.create(name)?;
+    for chunk in data.chunks(1 << 20) {
+        w.write_all(chunk)?;
+    }
+    w.close()
+}
 
 fn main() -> gpustore::Result<()> {
     let args: Vec<String> = std::env::args().collect();
@@ -56,13 +66,13 @@ fn main() -> gpustore::Result<()> {
         let sai = cluster.client(cfg, engine)?;
 
         // Warm the engine (PJRT executable compilation is one-time).
-        sai.write_file(&format!("{label}-warmup"), &workload.files[0])?;
+        stream_write(&sai, &format!("{label}-warmup"), &workload.files[0])?;
 
         // Dedicated (no competitor) throughput.
         let mut bytes = 0u64;
         let mut secs = 0.0;
         for (i, f) in workload.files.iter().enumerate() {
-            let r = sai.write_file(&format!("{label}-warm-{i}"), f)?;
+            let r = stream_write(&sai, &format!("{label}-warm-{i}"), f)?;
             bytes += r.bytes;
             secs += r.elapsed.as_secs_f64();
         }
@@ -92,7 +102,7 @@ fn main() -> gpustore::Result<()> {
             let mut bytes = 0u64;
             let mut secs = 0.0;
             for (i, f) in workload.files.iter().enumerate() {
-                let r = sai.write_file(&format!("{label}-{comp}-{i}"), f)?;
+                let r = stream_write(&sai, &format!("{label}-{comp}-{i}"), f)?;
                 bytes += r.bytes;
                 secs += r.elapsed.as_secs_f64();
             }

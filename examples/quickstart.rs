@@ -1,11 +1,17 @@
-//! Quickstart: bring up a single-process MosaStore cluster, write a file
-//! through the content-addressable SAI with the hash workload offloaded
-//! to the accelerator (AOT Pallas artifacts via PJRT), rewrite it to see
-//! dedup, and read it back.
+//! Quickstart: bring up a single-process MosaStore cluster, stream a
+//! file through the content-addressable SAI with the hash workload
+//! offloaded to the accelerator (AOT Pallas artifacts via PJRT),
+//! rewrite it to see dedup, and stream it back.
+//!
+//! The write path uses the session API: `Sai::create` returns a
+//! `FileWriter` implementing `std::io::Write`, so data is chunked,
+//! hashed (asynchronously on the accelerator — buffer N hashes while
+//! buffer N-1 transfers) and striped as it is produced, without ever
+//! materializing the whole file on the client.
 //!
 //!     make artifacts && cargo run --release --example quickstart
 
-use std::sync::Arc;
+use std::io::{Read, Write};
 
 use gpustore::config::{ClientConfig, ClusterConfig};
 use gpustore::hashgpu::build_engine;
@@ -28,20 +34,32 @@ fn main() -> gpustore::Result<()> {
     let sai = cluster.client(cfg, engine)?;
     println!("client: engine={}", sai.engine().name());
 
-    // 3. Write a 16 MB file.
+    // 3. Stream a 16 MB file through a write session, 1 MB at a time —
+    //    the way an application would issue write(2) calls.
     let data = Rng::new(42).bytes(16 << 20);
-    let r1 = sai.write_file("demo.bin", &data)?;
+    let mut w = sai.create("demo.bin")?;
+    for app_write in data.chunks(1 << 20) {
+        w.write_all(app_write)?;
+    }
+    let r1 = w.close()?; // commit the block-map (POSIX release)
     println!(
-        "write #1: {} in {:?} -> {:.1} MB/s, {} blocks, {} new",
+        "write #1: {} in {:?} -> {:.1} MB/s, {} blocks, {} new, \
+         hash {:.3}s exposed + {:.3}s hidden behind transfers",
         human_bytes(r1.bytes),
         r1.elapsed,
         r1.mbps(),
         r1.blocks,
-        r1.new_blocks
+        r1.new_blocks,
+        r1.hash_secs,
+        r1.hash_hidden_secs
     );
 
     // 4. Rewrite the same content: everything dedups, nothing moves.
-    let r2 = sai.write_file("demo.bin", &data)?;
+    let mut w = sai.create("demo.bin")?;
+    for app_write in data.chunks(1 << 20) {
+        w.write_all(app_write)?;
+    }
+    let r2 = w.close()?;
     println!(
         "write #2 (identical): {:.1} MB/s, similarity {:.0}%, {} bytes sent",
         r2.mbps(),
@@ -50,8 +68,11 @@ fn main() -> gpustore::Result<()> {
     );
     assert_eq!(r2.new_blocks, 0);
 
-    // 5. Read back and verify (every block passes an integrity check).
-    let back = sai.read_file("demo.bin")?;
+    // 5. Stream it back through a read session: blocks are prefetched
+    //    from the stripe nodes and hash-verified before they are served.
+    let mut reader = sai.open("demo.bin")?;
+    let mut back = Vec::with_capacity(reader.len() as usize);
+    reader.read_to_end(&mut back)?;
     assert_eq!(back, data);
     println!("read back {} OK (hash-verified)", human_bytes(back.len() as u64));
 

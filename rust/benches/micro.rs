@@ -137,7 +137,12 @@ fn main() {
             shape: false,
         })
         .unwrap();
-        for (label, mode) in [("non-CA", CaMode::None), ("fixed", CaMode::Fixed), ("cdc", CaMode::Cdc)] {
+        let modes = [
+            ("non-CA", CaMode::None),
+            ("fixed", CaMode::Fixed),
+            ("cdc", CaMode::Cdc),
+        ];
+        for (label, mode) in modes {
             let cfg = ClientConfig {
                 ca_mode: mode,
                 block_size: 256 * 1024,
@@ -156,9 +161,12 @@ fn main() {
             let mut seq = 0u64;
             let s = time_it(|| {
                 seq += 1;
-                let r = sai
-                    .write_file(&format!("m-{label}-{seq}"), &data4m)
-                    .unwrap();
+                // Streaming session, fed in 256 KB app-sized writes.
+                let mut w = sai.create(&format!("m-{label}-{seq}")).unwrap();
+                for chunk in data4m.chunks(256 * 1024) {
+                    w.push_bytes(chunk).unwrap();
+                }
+                let r = w.close().unwrap();
                 std::hint::black_box(r);
             });
             report_bw(&format!("store write 4MB ({label}, loopback)"), 4 << 20, s);

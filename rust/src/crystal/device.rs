@@ -365,10 +365,15 @@ pub struct MockTuning {
 
 impl BackendKind {
     /// Load the manifest this backend will use (for the shared planner).
+    /// The Mock backend recomputes on the host and needs only shapes, so
+    /// it falls back to the built-in synthetic manifest when
+    /// `make artifacts` has not been run; real PJRT execution always
+    /// requires the compiled artifacts.
     pub fn load_manifest(&self) -> Result<Manifest> {
         match self {
-            BackendKind::Pjrt { artifact_dir } | BackendKind::Mock { artifact_dir, .. } => {
-                Manifest::load(artifact_dir)
+            BackendKind::Pjrt { artifact_dir } => Manifest::load(artifact_dir),
+            BackendKind::Mock { artifact_dir, .. } => {
+                Manifest::load_or_synthetic(artifact_dir)
             }
         }
     }
@@ -385,7 +390,7 @@ impl BackendKind {
                 artifact_dir,
                 tuning,
             } => Ok(Box::new(MockExecutor {
-                manifest: Manifest::load(artifact_dir)?,
+                manifest: Manifest::load_or_synthetic(artifact_dir)?,
                 tuning: *tuning,
                 device_id,
                 steps_run: 0,
@@ -513,14 +518,8 @@ mod tests {
     use crate::util::Rng;
 
     fn mock_setup() -> (Planner, MockExecutor, BufferPool) {
-        // Reuse the synthetic-manifest trick from runtime::artifacts by
-        // loading the real manifest if built, else building a tiny one.
-        let dir = Manifest::default_dir();
-        let manifest = if dir.join("manifest.json").exists() {
-            Manifest::load(&dir).unwrap()
-        } else {
-            panic!("artifacts not built; run `make artifacts`");
-        };
+        // Real manifest when built, synthetic (same shapes) otherwise.
+        let manifest = Manifest::load_or_synthetic(&Manifest::default_dir()).unwrap();
         let planner = Planner::new(manifest.clone());
         let exec = MockExecutor {
             manifest,

@@ -52,9 +52,22 @@ impl From<std::io::Error> for Error {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
+    }
+}
+
+/// Storage sessions implement `std::io::{Read, Write}`; their internal
+/// errors cross the trait boundary as `io::Error` (the original
+/// [`Error`] is preserved as the source, or unwrapped if it was I/O).
+impl From<Error> for std::io::Error {
+    fn from(e: Error) -> Self {
+        match e {
+            Error::Io(io) => io,
+            other => std::io::Error::other(other),
+        }
     }
 }
 

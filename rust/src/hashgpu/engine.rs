@@ -1,14 +1,163 @@
 //! Hash engine implementations.
+//!
+//! Besides the blocking primitives, every engine offers *non-blocking
+//! submission* ([`HashEngine::submit_direct_batch`] /
+//! [`HashEngine::submit_window_hashes`]): the caller gets a ticket
+//! immediately and redeems it later, so hashing of write-buffer N can
+//! overlap the transfers of buffer N-1 — the paper's pipeline, surfaced
+//! in the API.  CPU and oracle engines default to the synchronous path
+//! (the work happens at submit time, nothing is hidden); the GPU engine
+//! rides the crystal `submit*`/[`JobHandle`] machinery so the device
+//! works while the client keeps moving data.
 
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::config::{ClientConfig, HashEngineKind};
-use crate::crystal::{BackendKind, CrystalOpts, DeviceOp, Master};
+use crate::crystal::{BackendKind, CrystalOpts, DeviceOp, JobHandle, Master};
 use crate::crystal::task::JobOut;
 use crate::hash::{finalize_digests, window_hashes, Digest, Md5};
 use crate::metrics::{Stage, StageBreakdown};
 use crate::{Error, Result};
+
+// ------------------------------------------------------------- tickets ----
+
+/// How much hash-engine time a redeemed ticket cost the caller, split
+/// into the part that stalled the pipeline and the part that ran while
+/// the caller was doing something else (the paper's hidden hashing).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HashTiming {
+    /// Engine time the caller actually blocked on (submit-side compute
+    /// for sync engines, `wait` + host postprocess for async ones).
+    pub exposed: Duration,
+    /// Engine time that overlapped the caller's other work.  Always zero
+    /// for synchronous engines.
+    pub hidden: Duration,
+}
+
+impl HashTiming {
+    fn sync(cost: Duration) -> Self {
+        HashTiming {
+            exposed: cost,
+            hidden: Duration::ZERO,
+        }
+    }
+
+    /// Split `engine_time` between exposed (`blocked`) and hidden.
+    fn split(engine_time: Duration, blocked: Duration) -> Self {
+        HashTiming {
+            exposed: blocked,
+            hidden: engine_time.saturating_sub(blocked),
+        }
+    }
+}
+
+enum DigestsInner {
+    /// Result computed at submit time (sync engines).
+    Ready(Result<Vec<Digest>>),
+    /// In-flight crystal batch job; finalized on redeem.
+    Crystal {
+        handle: JobHandle,
+        n_blocks: usize,
+        breakdown: Arc<Mutex<StageBreakdown>>,
+    },
+}
+
+/// In-flight batch of block digests (from
+/// [`HashEngine::submit_direct_batch`]).
+pub struct DigestsTicket {
+    inner: DigestsInner,
+    sync_cost: Duration,
+}
+
+impl DigestsTicket {
+    /// A ticket whose work already happened at submit time.
+    pub fn ready(result: Result<Vec<Digest>>, cost: Duration) -> Self {
+        DigestsTicket {
+            inner: DigestsInner::Ready(result),
+            sync_cost: cost,
+        }
+    }
+
+    /// Block until the digests are available.
+    pub fn wait(self) -> Result<(Vec<Digest>, HashTiming)> {
+        match self.inner {
+            DigestsInner::Ready(r) => Ok((r?, HashTiming::sync(self.sync_cost))),
+            DigestsInner::Crystal {
+                handle,
+                n_blocks,
+                breakdown,
+            } => {
+                let t0 = Instant::now();
+                let r = handle.wait()?;
+                let blocked = t0.elapsed();
+                let JobOut::DigestGroups(groups) = &r.out else {
+                    return Err(Error::Crystal("wrong output kind".into()));
+                };
+                if groups.len() != n_blocks {
+                    return Err(Error::Crystal(format!(
+                        "batch returned {} groups for {} blocks",
+                        groups.len(),
+                        n_blocks
+                    )));
+                }
+                // Host-side final stage (paper: the CPU computes the
+                // final hash of the intermediate hashes).
+                let t1 = Instant::now();
+                let out: Vec<Digest> = groups.iter().map(|g| finalize_digests(g)).collect();
+                let post = t1.elapsed();
+                {
+                    let mut b = breakdown.lock().unwrap();
+                    r.timing.record(&mut b);
+                    b.add(Stage::Postprocess, post);
+                }
+                Ok((out, HashTiming::split(r.timing.total() + post, blocked + post)))
+            }
+        }
+    }
+}
+
+enum WindowInner {
+    Ready(Result<Vec<u32>>),
+    Crystal {
+        handle: JobHandle,
+        breakdown: Arc<Mutex<StageBreakdown>>,
+    },
+}
+
+/// In-flight sliding-window hash job (from
+/// [`HashEngine::submit_window_hashes`]).
+pub struct WindowTicket {
+    inner: WindowInner,
+    sync_cost: Duration,
+}
+
+impl WindowTicket {
+    /// A ticket whose work already happened at submit time.
+    pub fn ready(result: Result<Vec<u32>>, cost: Duration) -> Self {
+        WindowTicket {
+            inner: WindowInner::Ready(result),
+            sync_cost: cost,
+        }
+    }
+
+    /// Block until the window hashes are available.
+    pub fn wait(self) -> Result<(Vec<u32>, HashTiming)> {
+        match self.inner {
+            WindowInner::Ready(r) => Ok((r?, HashTiming::sync(self.sync_cost))),
+            WindowInner::Crystal { handle, breakdown } => {
+                let t0 = Instant::now();
+                let r = handle.wait()?;
+                let blocked = t0.elapsed();
+                let JobOut::Hashes(h) = r.out else {
+                    return Err(Error::Crystal("wrong output kind".into()));
+                };
+                r.timing.record(&mut breakdown.lock().unwrap());
+                Ok((h, HashTiming::split(r.timing.total(), blocked)))
+            }
+        }
+    }
+}
 
 /// How a CPU engine computes window hashes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -37,6 +186,26 @@ pub trait HashEngine: Send + Sync {
     /// Hashes of every overlapping window of `data` (window width is the
     /// engine's compiled/configured width).
     fn window_hashes(&self, data: &[u8]) -> Result<Vec<u32>>;
+
+    /// Non-blocking digest submission: hash a batch of blocks, returning
+    /// a ticket the caller redeems later.  The default implementation is
+    /// the synchronous path (the work happens here and the ticket is
+    /// already resolved); async engines override it so the caller can
+    /// overlap hashing with transfers.
+    fn submit_direct_batch(&self, blocks: Arc<Vec<Vec<u8>>>) -> Result<DigestsTicket> {
+        let t0 = Instant::now();
+        let refs: Vec<&[u8]> = blocks.iter().map(|b| b.as_slice()).collect();
+        let r = self.direct_hash_batch(&refs);
+        Ok(DigestsTicket::ready(r, t0.elapsed()))
+    }
+
+    /// Non-blocking window-hash submission (see
+    /// [`submit_direct_batch`](Self::submit_direct_batch)).
+    fn submit_window_hashes(&self, data: Vec<u8>) -> Result<WindowTicket> {
+        let t0 = Instant::now();
+        let r = self.window_hashes(&data);
+        Ok(WindowTicket::ready(r, t0.elapsed()))
+    }
 
     /// Window width used by [`window_hashes`](Self::window_hashes).
     fn window(&self) -> usize;
@@ -145,7 +314,7 @@ pub struct GpuEngine {
     master: Arc<Master>,
     seg_bytes: usize,
     window: usize,
-    breakdown: Mutex<StageBreakdown>,
+    breakdown: Arc<Mutex<StageBreakdown>>,
 }
 
 impl GpuEngine {
@@ -155,19 +324,13 @@ impl GpuEngine {
             master,
             seg_bytes,
             window,
-            breakdown: Mutex::new(StageBreakdown::new()),
+            breakdown: Arc::new(Mutex::new(StageBreakdown::new())),
         }
     }
 
     /// The underlying crystal runtime (stats, drain).
     pub fn master(&self) -> &Arc<Master> {
         &self.master
-    }
-
-    fn record(&self, timing: &crate::crystal::StageTimings, post: std::time::Duration) {
-        let mut b = self.breakdown.lock().unwrap();
-        timing.record(&mut b);
-        b.add(Stage::Postprocess, post);
     }
 }
 
@@ -177,42 +340,46 @@ impl HashEngine for GpuEngine {
     }
 
     fn direct_hash_batch(&self, blocks: &[&[u8]]) -> Result<Vec<Digest>> {
+        let owned: Arc<Vec<Vec<u8>>> = Arc::new(blocks.iter().map(|b| b.to_vec()).collect());
+        let (digests, _) = self.submit_direct_batch(owned)?.wait()?;
+        Ok(digests)
+    }
+
+    fn window_hashes(&self, data: &[u8]) -> Result<Vec<u32>> {
+        let (hashes, _) = self.submit_window_hashes(data.to_vec())?.wait()?;
+        Ok(hashes)
+    }
+
+    fn submit_direct_batch(&self, blocks: Arc<Vec<Vec<u8>>>) -> Result<DigestsTicket> {
         if blocks.is_empty() {
-            return Ok(Vec::new());
+            return Ok(DigestsTicket::ready(Ok(Vec::new()), Duration::ZERO));
         }
         // One crystal job for the whole batch: the planner packs every
         // block's segments into as few device executions as possible
         // (per-block submission paid one execution per block —
-        // EXPERIMENTS.md section Perf).
-        let owned: Arc<Vec<Vec<u8>>> = Arc::new(blocks.iter().map(|b| b.to_vec()).collect());
-        let r = self.master.submit_batch(self.seg_bytes, owned).wait()?;
-        let JobOut::DigestGroups(groups) = &r.out else {
-            return Err(Error::Crystal("wrong output kind".into()));
-        };
-        if groups.len() != blocks.len() {
-            return Err(Error::Crystal(format!(
-                "batch returned {} groups for {} blocks",
-                groups.len(),
-                blocks.len()
-            )));
-        }
-        // Host-side final stage (paper: the CPU computes the final hash
-        // of the intermediate hashes).
-        let t0 = Instant::now();
-        let out: Vec<Digest> = groups.iter().map(|g| finalize_digests(g)).collect();
-        self.record(&r.timing, t0.elapsed());
-        Ok(out)
+        // EXPERIMENTS.md section Perf).  Submission is non-blocking; the
+        // device hashes while the caller keeps chunking/transferring.
+        let n_blocks = blocks.len();
+        let handle = self.master.submit_batch(self.seg_bytes, blocks);
+        Ok(DigestsTicket {
+            inner: DigestsInner::Crystal {
+                handle,
+                n_blocks,
+                breakdown: self.breakdown.clone(),
+            },
+            sync_cost: Duration::ZERO,
+        })
     }
 
-    fn window_hashes(&self, data: &[u8]) -> Result<Vec<u32>> {
-        let r = self
-            .master
-            .run(DeviceOp::SlidingWindow, Arc::new(data.to_vec()))?;
-        let JobOut::Hashes(h) = r.out else {
-            return Err(Error::Crystal("wrong output kind".into()));
-        };
-        self.record(&r.timing, std::time::Duration::ZERO);
-        Ok(h)
+    fn submit_window_hashes(&self, data: Vec<u8>) -> Result<WindowTicket> {
+        let handle = self.master.submit(DeviceOp::SlidingWindow, Arc::new(data));
+        Ok(WindowTicket {
+            inner: WindowInner::Crystal {
+                handle,
+                breakdown: self.breakdown.clone(),
+            },
+            sync_cost: Duration::ZERO,
+        })
     }
 
     fn window(&self) -> usize {
@@ -459,6 +626,74 @@ mod tests {
         gpu.window_hashes(&data).unwrap();
         let b = gpu.stage_breakdown().unwrap();
         assert_eq!(b.tasks(), 2);
+    }
+
+    #[test]
+    fn sync_tickets_match_blocking_path() {
+        let e = CpuEngine::new(2, 4096, WindowHashMode::Rolling);
+        let blocks: Vec<Vec<u8>> = (0..4).map(|i| Rng::new(i).bytes(5000)).collect();
+        let refs: Vec<&[u8]> = blocks.iter().map(|b| b.as_slice()).collect();
+        let want = e.direct_hash_batch(&refs).unwrap();
+        let (got, t) = e
+            .submit_direct_batch(Arc::new(blocks.clone()))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(got, want);
+        // Sync path: all engine time is exposed, nothing hidden.
+        assert_eq!(t.hidden, Duration::ZERO);
+
+        let data = Rng::new(11).bytes(20_000);
+        let want = e.window_hashes(&data).unwrap();
+        let (got, t) = e.submit_window_hashes(data).unwrap().wait().unwrap();
+        assert_eq!(got, want);
+        assert_eq!(t.hidden, Duration::ZERO);
+    }
+
+    #[test]
+    fn gpu_tickets_match_blocking_path() {
+        let gpu = gpu_engine_mock();
+        let cpu = CpuEngine::new(1, 4096, WindowHashMode::Rolling);
+        let blocks: Vec<Vec<u8>> = (0..3).map(|i| Rng::new(i + 50).bytes(9000)).collect();
+        let (got, _) = gpu
+            .submit_direct_batch(Arc::new(blocks.clone()))
+            .unwrap()
+            .wait()
+            .unwrap();
+        for (b, d) in blocks.iter().zip(&got) {
+            assert_eq!(cpu.direct_hash(b).unwrap(), *d);
+        }
+        let data = Rng::new(60).bytes(70_000);
+        let (got, _) = gpu
+            .submit_window_hashes(data.clone())
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(got, cpu.window_hashes(&data).unwrap());
+    }
+
+    #[test]
+    fn gpu_ticket_hides_hash_time_behind_other_work() {
+        // A mock device with a fixed per-step delay: if the caller does
+        // 20 ms of "other work" between submit and wait, the ~5 ms of
+        // device time must show up as hidden, not exposed.
+        let opts = CrystalOpts::optimized(BackendKind::Mock {
+            artifact_dir: Manifest::default_dir(),
+            tuning: MockTuning {
+                fixed_delay: std::time::Duration::from_millis(5),
+                ..Default::default()
+            },
+        });
+        let gpu = GpuEngine::new(Arc::new(Master::new(opts).unwrap()), 4096, 48);
+        let blocks: Vec<Vec<u8>> = vec![Rng::new(1).bytes(8192)];
+        let ticket = gpu.submit_direct_batch(Arc::new(blocks)).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let (_, t) = ticket.wait().unwrap();
+        assert!(
+            t.hidden >= Duration::from_millis(2),
+            "hidden {:?} should cover the device delay",
+            t.hidden
+        );
     }
 
     #[test]

@@ -18,5 +18,6 @@
 pub mod engine;
 
 pub use engine::{
-    build_engine, CpuEngine, GpuEngine, HashEngine, OracleEngine, WindowHashMode,
+    build_engine, CpuEngine, DigestsTicket, GpuEngine, HashEngine, HashTiming,
+    OracleEngine, WindowHashMode, WindowTicket,
 };

@@ -7,14 +7,30 @@
 //! JAX/Pallas kernels, lowered once at build time, executed from rust via
 //! the PJRT C API).
 //!
+//! The client-facing storage API is session-based: `Sai::create` opens a
+//! streaming `FileWriter` (implements `std::io::Write`) whose incremental
+//! writes feed the chunk→hash→dedup→stripe pipeline as data arrives, with
+//! block digests *submitted asynchronously* to the accelerator so buffer
+//! N's hashing overlaps buffer N-1's transfers; `close()` commits the
+//! block-map and returns a `WriteReport` with exposed-vs-hidden hash-time
+//! accounting.  `Sai::open` returns a `FileReader` (implements
+//! `std::io::Read`) that prefetches striped blocks and verifies each
+//! block's integrity before serving it.  Whole-buffer
+//! `write_file`/`read_file` remain as thin wrappers.
+//!
 //! Layer map (see DESIGN.md):
-//! - [`store`] — MosaStore analog: metadata manager, storage nodes, client SAI.
+//! - [`store`] — MosaStore analog: metadata manager, storage nodes, client
+//!   SAI, and the streaming write/read sessions (`store::session`).
 //! - [`crystal`] — CrystalGPU analog: accelerator task runtime (queues,
 //!   buffer reuse, transfer/compute overlap, multi-device).
-//! - [`hashgpu`] — HashGPU analog: the two hashing primitives over crystal.
-//! - [`runtime`] — PJRT artifact loading/execution (`xla` crate).
+//! - [`hashgpu`] — HashGPU analog: the two hashing primitives over crystal,
+//!   with blocking calls plus non-blocking submit/ticket pairs
+//!   (`submit_direct_batch` / `submit_window_hashes`).
+//! - [`runtime`] — PJRT artifact loading/execution (`xla` crate behind the
+//!   `pjrt` feature; a synthetic manifest serves host-recompute backends).
 //! - [`hash`], [`chunking`] — CPU baselines + host-side final stages.
-//! - [`sim`] — discrete-event performance model used by the figure benches.
+//! - [`sim`] — discrete-event performance model used by the figure benches
+//!   (models the session pipeline's hash/transfer overlap).
 //! - [`workload`] — paper workload generators (different/similar/checkpoint,
 //!   competing compute- and I/O-bound applications).
 

@@ -12,12 +12,18 @@
 //! (rust/benches/figures.rs); runnable scenarios in examples/.
 
 use std::collections::HashMap;
+use std::io::{Read as _, Write as _};
 
 use gpustore::config::{CaMode, ClientConfig, ClusterConfig, HashEngineKind};
 use gpustore::hashgpu::build_engine;
 use gpustore::store::{Cluster, Manager, Sai, StorageNode};
 use gpustore::util::{human_bytes, Rng};
 use gpustore::{Error, Result};
+
+/// Application-side streaming granularity for the CLI's writes: the
+/// session API re-buffers internally, so this only shapes how the CLI
+/// feeds data in (like an app issuing 1 MB `write(2)` calls).
+const CLI_IO_CHUNK: usize = 1 << 20;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -85,11 +91,8 @@ fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
             .filter(|v| !v.starts_with("--"))
             .cloned()
             .unwrap_or_else(|| "true".into());
-        let consumed = if val == "true" && args.get(i + 1).map(|v| v.starts_with("--")).unwrap_or(true) {
-            1
-        } else {
-            2
-        };
+        let next_is_flag = args.get(i + 1).map(|v| v.starts_with("--")).unwrap_or(true);
+        let consumed = if val == "true" && next_is_flag { 1 } else { 2 };
         m.insert(key.to_string(), val);
         i += consumed;
     }
@@ -187,16 +190,25 @@ fn cmd_write(flags: &HashMap<String, String>) -> Result<()> {
     let mut secs = 0.0;
     for i in 0..count {
         let data = Rng::new(seed ^ i as u64).bytes(size);
-        let r = sai.write_file(&name, &data)?;
+        // Streaming session: feed the pipeline in app-sized chunks, then
+        // commit on close.
+        let mut w = sai.create(&name)?;
+        for chunk in data.chunks(CLI_IO_CHUNK) {
+            w.write_all(chunk)?;
+        }
+        let r = w.close()?;
         println!(
-            "write {}/{count}: {} in {:?} -> {:.1} MB/s ({} blocks, {} new, sim {:.0}%)",
+            "write {}/{count}: {} in {:?} -> {:.1} MB/s ({} blocks, {} new, sim {:.0}%, \
+             hash {:.2}s exposed + {:.2}s hidden)",
             i + 1,
             human_bytes(r.bytes),
             r.elapsed,
             r.mbps(),
             r.blocks,
             r.new_blocks,
-            100.0 * r.similarity
+            100.0 * r.similarity,
+            r.hash_secs,
+            r.hash_hidden_secs
         );
         total += r.bytes;
         secs += r.elapsed.as_secs_f64();
@@ -215,13 +227,20 @@ fn cmd_read(flags: &HashMap<String, String>) -> Result<()> {
     let name = flags
         .get("file")
         .ok_or_else(|| Error::Config("--file required".into()))?;
-    let data = sai.read_file(name)?;
+    // Streaming session: blocks are prefetched + integrity-verified and
+    // never all resident at once when writing to a file.
+    let mut r = sai.open(name)?;
     match flags.get("out") {
         Some(path) => {
-            std::fs::write(path, &data)?;
-            println!("read {} -> {path}", human_bytes(data.len() as u64));
+            let mut f = std::fs::File::create(path)?;
+            let n = std::io::copy(&mut r, &mut f)?;
+            println!("read {} -> {path}", human_bytes(n));
         }
-        None => println!("read {} (integrity-verified)", human_bytes(data.len() as u64)),
+        None => {
+            let mut data = Vec::with_capacity(r.len() as usize);
+            r.read_to_end(&mut data)?;
+            println!("read {} (integrity-verified)", human_bytes(data.len() as u64));
+        }
     }
     Ok(())
 }
@@ -291,11 +310,20 @@ fn cmd_demo() -> Result<()> {
     let engine = build_engine(&cfg, None)?;
     let sai = cluster.client(cfg, engine)?;
     let data = Rng::new(1).bytes(8 << 20);
-    let r = sai.write_file("demo", &data)?;
+    let write_streaming = |name: &str| -> Result<gpustore::store::WriteReport> {
+        let mut w = sai.create(name)?;
+        for chunk in data.chunks(CLI_IO_CHUNK) {
+            w.write_all(chunk)?;
+        }
+        w.close()
+    };
+    let r = write_streaming("demo")?;
     println!("write: {:.1} MB/s", r.mbps());
-    let r = sai.write_file("demo", &data)?;
+    let r = write_streaming("demo")?;
     println!("rewrite: {:.1} MB/s, similarity {:.0}%", r.mbps(), 100.0 * r.similarity);
-    assert_eq!(sai.read_file("demo")?, data);
+    let mut back = Vec::with_capacity(data.len());
+    sai.open("demo")?.read_to_end(&mut back)?;
+    assert_eq!(back, data);
     println!("read-back OK");
     Ok(())
 }

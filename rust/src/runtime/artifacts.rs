@@ -123,6 +123,65 @@ impl Manifest {
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
     }
 
+    /// A built-in manifest mirroring aot.py's shape buckets exactly
+    /// (same names, lane/segment buckets and rolling sizes).  Backends
+    /// that recompute on the host — the Mock executor — need only the
+    /// *shapes*, not the compiled HLO, so they can run in environments
+    /// where `make artifacts` has never been invoked.
+    pub fn synthetic() -> Manifest {
+        use crate::hash::{DEFAULT_P, DEFAULT_WINDOW};
+        let mut artifacts = Vec::new();
+        let buckets: [(usize, &[usize]); 2] =
+            [(256, &[16, 64, 256]), (4096, &[16, 64, 256, 1024])];
+        for (seg, lane_list) in buckets {
+            let words = crate::runtime::pjrt::padded_words(seg);
+            for &lanes in lane_list {
+                artifacts.push(ArtifactSpec {
+                    name: format!("md5_seg{seg}_l{lanes}"),
+                    kind: ArtifactKind::Direct,
+                    path: PathBuf::new(),
+                    seg_bytes: seg,
+                    lanes,
+                    n_blocks: words / 16,
+                    n_bytes: 0,
+                    window: DEFAULT_WINDOW,
+                    in_words: lanes * words,
+                    in_dims: vec![lanes, words],
+                });
+            }
+        }
+        for n in [65536usize, 262144, 1048576, 4194304] {
+            artifacts.push(ArtifactSpec {
+                name: format!("roll_{n}_w{DEFAULT_WINDOW}"),
+                kind: ArtifactKind::Sliding,
+                path: PathBuf::new(),
+                seg_bytes: 0,
+                lanes: 0,
+                n_blocks: 0,
+                n_bytes: n,
+                window: DEFAULT_WINDOW,
+                in_words: n / 4,
+                in_dims: vec![n / 4],
+            });
+        }
+        Manifest {
+            artifacts,
+            window: DEFAULT_WINDOW,
+            p: DEFAULT_P,
+        }
+    }
+
+    /// Load `dir/manifest.json` if it exists, otherwise fall back to the
+    /// [`synthetic`](Self::synthetic) manifest.  Used by host-recompute
+    /// backends; the PJRT backend always requires real artifacts.
+    pub fn load_or_synthetic(dir: &Path) -> Result<Manifest> {
+        if dir.join("manifest.json").exists() {
+            Self::load(dir)
+        } else {
+            Ok(Self::synthetic())
+        }
+    }
+
     /// Smallest direct-hash artifact with `seg_bytes` segments that fits
     /// `data_len` bytes in one execution; falls back to the
     /// largest-capacity bucket (caller splits the job).
@@ -270,6 +329,30 @@ stub
         let m = test_manifest();
         let a = m.pick_direct(4096, 1).unwrap();
         assert_eq!(a.capacity(), 4096 * 16);
+    }
+
+    #[test]
+    fn synthetic_manifest_mirrors_aot_buckets() {
+        let m = Manifest::synthetic();
+        assert_eq!(m.window, crate::hash::DEFAULT_WINDOW);
+        assert_eq!(m.p, crate::hash::DEFAULT_P);
+        assert_eq!(m.direct_seg_sizes(), vec![256, 4096]);
+        // Largest 4096-seg bucket is 1024 lanes = 4 MB per execution.
+        assert_eq!(m.pick_direct(4096, 64 << 20).unwrap().lanes, 1024);
+        assert_eq!(m.pick_direct(256, 4096).unwrap().lanes, 16);
+        assert_eq!(m.pick_sliding(65536).unwrap().n_bytes, 65536);
+        assert_eq!(m.pick_sliding(1 << 30).unwrap().n_bytes, 4194304);
+        // Direct specs carry consistent packing geometry.
+        for a in m.artifacts.iter().filter(|a| a.kind == ArtifactKind::Direct) {
+            assert_eq!(a.in_words, a.lanes * a.n_blocks * 16);
+        }
+    }
+
+    #[test]
+    fn load_or_synthetic_falls_back() {
+        let dir = std::env::temp_dir().join("gpustore-definitely-missing");
+        let m = Manifest::load_or_synthetic(&dir).unwrap();
+        assert!(!m.artifacts.is_empty());
     }
 
     #[test]

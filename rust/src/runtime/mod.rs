@@ -6,4 +6,4 @@ pub mod artifacts;
 pub mod pjrt;
 
 pub use artifacts::{ArtifactSpec, Manifest};
-pub use pjrt::{Executable, PjrtContext};
+pub use pjrt::{pjrt_available, Executable, PjrtContext};

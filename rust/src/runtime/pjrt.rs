@@ -8,19 +8,45 @@
 //! `Send`, so a [`PjrtContext`] (client + its compiled executables) is
 //! owned by exactly one thread — crystal's per-device manager thread,
 //! mirroring the paper's one-manager-thread-per-GPU design.
+//!
+//! Feature gating: real execution needs the `xla` crate, which is only
+//! available where it has been vendored.  Without the `pjrt` cargo
+//! feature this module compiles a stub [`PjrtContext`] whose
+//! constructor reports the missing backend — the Mock backend and every
+//! CPU path stay fully functional, and crystal surfaces the error as a
+//! per-device init failure.
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
-use std::time::{Duration, Instant};
+use std::time::Duration;
+#[cfg(feature = "pjrt")]
+use std::time::Instant;
 
-use super::artifacts::{ArtifactKind, ArtifactSpec, Manifest};
+#[cfg(feature = "pjrt")]
+use super::artifacts::ArtifactKind;
+use super::artifacts::{ArtifactSpec, Manifest};
 use crate::metrics::{Stage, StageBreakdown};
 use crate::{Error, Result};
 
 /// A compiled artifact plus its spec.
+#[cfg(feature = "pjrt")]
 pub struct Executable {
     /// Manifest entry this was compiled from.
     pub spec: ArtifactSpec,
     exe: xla::PjRtLoadedExecutable,
+}
+
+/// Stub of the compiled-artifact handle (built without the `pjrt`
+/// feature; never constructed).
+#[cfg(not(feature = "pjrt"))]
+pub struct Executable {
+    /// Manifest entry this was compiled from.
+    pub spec: ArtifactSpec,
+}
+
+/// Whether this build can execute PJRT artifacts at all.
+pub fn pjrt_available() -> bool {
+    cfg!(feature = "pjrt")
 }
 
 /// Timing for one execution, split per paper-Table-1 stage.
@@ -47,12 +73,66 @@ impl ExecTiming {
 }
 
 /// One thread's PJRT client and executable cache.
+#[cfg(feature = "pjrt")]
 pub struct PjrtContext {
     client: xla::PjRtClient,
     manifest: Manifest,
     cache: HashMap<String, Executable>,
 }
 
+/// Stub PJRT context (built without the `pjrt` feature): construction
+/// fails with a clear error, so the Pjrt backend degrades to a
+/// per-device init failure while everything else keeps working.
+#[cfg(not(feature = "pjrt"))]
+pub struct PjrtContext {
+    manifest: Manifest,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl PjrtContext {
+    /// Always fails: this build has no PJRT runtime.
+    pub fn new(dir: &std::path::Path) -> Result<PjrtContext> {
+        // Validate the manifest anyway so errors stay informative.
+        let _ = Manifest::load(dir)?;
+        Err(Error::Xla(
+            "built without the `pjrt` feature: PJRT execution unavailable \
+             (rebuild with --features pjrt and the vendored xla crate)"
+            .into(),
+        ))
+    }
+
+    /// Create with the default artifact directory.
+    pub fn with_default_dir() -> Result<PjrtContext> {
+        Self::new(&Manifest::default_dir())
+    }
+
+    /// The manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        "pjrt-unavailable".into()
+    }
+
+    /// Unavailable in this build.
+    pub fn run_direct(
+        &mut self,
+        _name: &str,
+        _words: &[u32],
+        _nblk: &[u32],
+    ) -> Result<(Vec<u32>, ExecTiming)> {
+        Err(Error::Xla("PJRT execution unavailable".into()))
+    }
+
+    /// Unavailable in this build.
+    pub fn run_sliding(&mut self, _name: &str, _words: &[u32]) -> Result<(Vec<u32>, ExecTiming)> {
+        Err(Error::Xla("PJRT execution unavailable".into()))
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl PjrtContext {
     /// Create a CPU PJRT client and load the manifest from `dir`.
     pub fn new(dir: &std::path::Path) -> Result<PjrtContext> {

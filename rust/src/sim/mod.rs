@@ -20,4 +20,4 @@ pub mod write;
 
 pub use contention::{CompetitorKind, ContentionModel};
 pub use gpu::{GpuOpts, GpuPipeline};
-pub use write::{EngineModel, SystemSim, WriteConfig};
+pub use write::{pipelined_secs, EngineModel, SystemSim, WriteConfig};

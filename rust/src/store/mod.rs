@@ -8,6 +8,10 @@
 //!   chunking (fixed or content-based), hashing through a pluggable
 //!   [`crate::hashgpu::HashEngine`], similarity detection against the
 //!   previous version's block-map, and striped transfer to the nodes.
+//! * [`session`] — streaming sessions over the SAI: [`FileWriter`]
+//!   (`std::io::Write`, pipelined chunk→hash→dedup→stripe, commit on
+//!   close) and [`FileReader`] (`std::io::Read`, prefetching +
+//!   integrity-verified block streaming).
 //! * [`proto`] — the length-prefixed wire protocol shared by all three.
 //! * [`cluster`] — spawn a full single-process cluster (manager + nodes)
 //!   on loopback TCP for tests, benches and examples.
@@ -17,9 +21,11 @@ pub mod manager;
 pub mod node;
 pub mod proto;
 pub mod sai;
+pub mod session;
 
 pub use cluster::Cluster;
 pub use manager::Manager;
 pub use node::StorageNode;
 pub use proto::{BlockMeta, Msg};
 pub use sai::{Sai, WriteReport};
+pub use session::{FileReader, FileWriter};

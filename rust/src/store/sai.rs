@@ -1,25 +1,35 @@
 //! The client System Access Interface (SAI) — the paper's Figure 3.
 //!
-//! Write path: application data is accumulated in a write buffer; when
-//! the buffer fills, the content-addressability module (a) detects block
+//! The primary API is session-based: [`Sai::create`] returns a
+//! [`FileWriter`](super::FileWriter) that implements [`std::io::Write`]
+//! and feeds the chunk→hash→dedup→stripe pipeline incrementally as data
+//! arrives; [`Sai::open`] returns a [`FileReader`](super::FileReader)
+//! that implements [`std::io::Read`] and streams blocks back with
+//! integrity verification.  Whole-buffer [`Sai::write_file`] /
+//! [`Sai::read_file`] are thin wrappers over the sessions.
+//!
+//! Write path: application data accumulates in a write buffer; when the
+//! buffer fills, the content-addressability module (a) detects block
 //! boundaries (fixed-size or content-based via sliding-window hashes),
-//! (b) computes each block's hash through the configured
-//! [`HashEngine`] (CPU, accelerator, or oracle), (c) compares against
-//! the file's previous-version block-map, and (d) transfers only new
-//! blocks, striped across `stripe_width` storage nodes in parallel.
-//! On close, the new block-map is committed to the metadata manager.
+//! (b) submits the blocks' hashes to the configured
+//! [`HashEngine`] — *asynchronously* on accelerator engines, so buffer
+//! N's hashing overlaps buffer N-1's transfers — then (c) compares
+//! digests against the file's previous-version block-map and
+//! (d) transfers only new blocks, striped across `stripe_width` storage
+//! nodes in parallel.  On close, the new block-map is committed to the
+//! metadata manager.
 //!
 //! All node links share one bandwidth [`Shaper`] — the client's NIC.
 
 use std::io::{BufReader, BufWriter, Write as _};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use super::proto::{BlockMeta, Msg};
+use super::session::{FileReader, FileWriter};
 use crate::config::{CaMode, ClientConfig};
-use crate::chunking::{ChunkParams, ContentChunker};
-use crate::hash::{md5, Digest};
+use crate::hash::Digest;
 use crate::hashgpu::HashEngine;
 use crate::net::{Conn, Shaper};
 use crate::{Error, Result};
@@ -39,16 +49,37 @@ pub struct WriteReport {
     pub new_bytes: u64,
     /// Wall-clock duration of the write.
     pub elapsed: Duration,
-    /// Time inside the hash engine (window + direct hashing).
+    /// Hash-engine time that stalled the write pipeline (window + direct
+    /// hashing the client actually waited on).
     pub hash_secs: f64,
+    /// Hash-engine time hidden behind transfers/chunking by asynchronous
+    /// submission (zero for synchronous CPU/oracle engines).
+    pub hash_hidden_secs: f64,
     /// Fraction of bytes deduplicated (similarity detected).
     pub similarity: f64,
 }
 
 impl WriteReport {
-    /// Application-observed write throughput, MB/s.
+    /// Application-observed write throughput, MB/s (0.0 if no time has
+    /// elapsed).
     pub fn mbps(&self) -> f64 {
         crate::util::mbps(self.bytes, self.elapsed.as_secs_f64())
+    }
+
+    /// Total hash-engine time: exposed + hidden.
+    pub fn hash_total_secs(&self) -> f64 {
+        self.hash_secs + self.hash_hidden_secs
+    }
+
+    /// Fraction of hash-engine time hidden behind the rest of the
+    /// pipeline (0..1; 0.0 when no hashing happened).
+    pub fn overlap_fraction(&self) -> f64 {
+        let total = self.hash_total_secs();
+        if total <= 0.0 {
+            0.0
+        } else {
+            self.hash_hidden_secs / total
+        }
     }
 }
 
@@ -67,7 +98,7 @@ enum NodeCmd {
 /// One storage node's client: a worker thread owning the (shaped)
 /// connection, fed through a channel so puts to different nodes proceed
 /// in parallel while the SAI keeps hashing.
-struct NodeClient {
+pub(super) struct NodeClient {
     tx: Sender<NodeCmd>,
 }
 
@@ -85,13 +116,13 @@ impl NodeClient {
         Ok(NodeClient { tx })
     }
 
-    fn put(&self, hash: Digest, data: Vec<u8>) -> Receiver<Result<()>> {
+    pub(super) fn put(&self, hash: Digest, data: Vec<u8>) -> Receiver<Result<()>> {
         let (done, rx) = mpsc::channel();
         let _ = self.tx.send(NodeCmd::Put { hash, data, done });
         rx
     }
 
-    fn get(&self, hash: Digest) -> Receiver<Result<Vec<u8>>> {
+    pub(super) fn get(&self, hash: Digest) -> Receiver<Result<Vec<u8>>> {
         let (done, rx) = mpsc::channel();
         let _ = self.tx.send(NodeCmd::Get { hash, done });
         rx
@@ -133,16 +164,16 @@ fn node_worker(conn: Conn, rx: Receiver<NodeCmd>) {
     }
 }
 
-fn closed() -> Error {
+pub(super) fn closed() -> Error {
     Error::Node("connection closed".into())
 }
 
 /// The SAI client.
 pub struct Sai {
-    cfg: ClientConfig,
-    engine: Arc<dyn HashEngine>,
+    pub(super) cfg: ClientConfig,
+    pub(super) engine: Arc<dyn HashEngine>,
     manager: Mutex<(BufReader<Conn>, BufWriter<Conn>)>,
-    nodes: Vec<NodeClient>,
+    pub(super) nodes: Vec<NodeClient>,
 }
 
 impl Sai {
@@ -188,7 +219,7 @@ impl Sai {
         &self.engine
     }
 
-    fn manager_call(&self, msg: Msg) -> Result<Msg> {
+    pub(super) fn manager_call(&self, msg: Msg) -> Result<Msg> {
         let mut g = self.manager.lock().unwrap();
         let (r, w) = &mut *g;
         msg.write_to(w)?;
@@ -204,172 +235,52 @@ impl Sai {
         }
     }
 
-    /// List files known to the manager.
+    /// List files known to the manager, sorted by name.  The sort is
+    /// applied client-side so callers never depend on a manager
+    /// implementation's map iteration order.
     pub fn list_files(&self) -> Result<Vec<(String, u64)>> {
         match self.manager_call(Msg::ListFiles)? {
-            Msg::Files { files } => Ok(files),
+            Msg::Files { mut files } => {
+                files.sort();
+                Ok(files)
+            }
             m => Err(Error::Proto(format!("unexpected reply {m:?}"))),
         }
     }
 
+    /// Open a streaming write session: returns a [`FileWriter`] that
+    /// implements [`std::io::Write`].  Data is chunked, hashed,
+    /// deduplicated and striped as it arrives; call
+    /// [`FileWriter::close`] to commit the new version (the POSIX
+    /// `release` step) and obtain the [`WriteReport`].
+    pub fn create(&self, name: &str) -> Result<FileWriter<'_>> {
+        FileWriter::new(self, name)
+    }
+
+    /// Open a streaming read session: returns a [`FileReader`] that
+    /// implements [`std::io::Read`], prefetching blocks from the stripe
+    /// nodes ahead of the consumer and verifying each block's integrity
+    /// (CA modes).
+    pub fn open(&self, name: &str) -> Result<FileReader<'_>> {
+        FileReader::new(self, name)
+    }
+
     /// Write a complete file (the paper's workloads write whole files
-    /// back-to-back; `release` semantics = commit on return).
+    /// back-to-back; `release` semantics = commit on return).  Thin
+    /// wrapper over [`Sai::create`].
     pub fn write_file(&self, name: &str, data: &[u8]) -> Result<WriteReport> {
-        let t0 = Instant::now();
-        let mut report = WriteReport {
-            bytes: data.len() as u64,
-            ..Default::default()
-        };
-
-        // 1. Previous version's block-map: hash -> node.
-        let (_, old_blocks) = self.get_block_map(name)?;
-        let mut known: std::collections::HashMap<Digest, u32> = old_blocks
-            .iter()
-            .map(|b| (b.hash, b.node))
-            .collect();
-
-        // 2. Chunk + hash + dedup + transfer, buffer by buffer.
-        let mut metas: Vec<BlockMeta> = Vec::new();
-        let mut pending: Vec<Receiver<Result<()>>> = Vec::new();
-        let mut hash_secs = 0.0f64;
-
-        match self.cfg.ca_mode {
-            CaMode::None => {
-                // No hashing: blocks are addressed by (file, index).
-                for (i, blk) in data.chunks(self.cfg.block_size).enumerate() {
-                    let mut key = Vec::with_capacity(name.len() + 8);
-                    key.extend_from_slice(name.as_bytes());
-                    key.extend_from_slice(&(i as u64).to_le_bytes());
-                    let hash = md5(&key);
-                    let node = (i % self.stripe()) as u32;
-                    pending.push(self.nodes[node as usize].put(hash, blk.to_vec()));
-                    report.new_blocks += 1;
-                    report.new_bytes += blk.len() as u64;
-                    metas.push(BlockMeta {
-                        hash,
-                        len: blk.len() as u32,
-                        node,
-                    });
-                    self.collect_window(&mut pending, 2 * self.stripe())?;
-                }
-            }
-            CaMode::Fixed => {
-                for buffer in data.chunks(self.cfg.write_buffer) {
-                    let blocks: Vec<&[u8]> = buffer.chunks(self.cfg.block_size).collect();
-                    let th = Instant::now();
-                    let digests = self.engine.direct_hash_batch(&blocks)?;
-                    hash_secs += th.elapsed().as_secs_f64();
-                    for (blk, digest) in blocks.iter().zip(digests) {
-                        self.place_block(
-                            blk,
-                            digest,
-                            &mut known,
-                            &mut metas,
-                            &mut pending,
-                            &mut report,
-                        )?;
-                    }
-                    self.collect_window(&mut pending, 2 * self.stripe())?;
-                }
-            }
-            CaMode::Cdc => {
-                let params: ChunkParams = self.cfg.chunk_params();
-                let mut chunker = ContentChunker::new(params);
-                let mut finished: Vec<crate::chunking::Chunk> = Vec::new();
-                for buffer in data.chunks(self.cfg.write_buffer) {
-                    let ext = chunker.extended(buffer);
-                    let th = Instant::now();
-                    let hashes = self.engine.window_hashes(&ext)?;
-                    hash_secs += th.elapsed().as_secs_f64();
-                    finished.extend(chunker.push_with_hashes(buffer, &hashes));
-                    // Hash + ship the completed chunks of this buffer.
-                    let chunk_refs: Vec<&[u8]> =
-                        finished.iter().map(|c| c.data.as_slice()).collect();
-                    let th = Instant::now();
-                    let digests = self.engine.direct_hash_batch(&chunk_refs)?;
-                    hash_secs += th.elapsed().as_secs_f64();
-                    for (chunk, digest) in finished.drain(..).zip(digests) {
-                        self.place_block(
-                            &chunk.data,
-                            digest,
-                            &mut known,
-                            &mut metas,
-                            &mut pending,
-                            &mut report,
-                        )?;
-                    }
-                    self.collect_window(&mut pending, 2 * self.stripe())?;
-                }
-                if let Some(chunk) = chunker.finish() {
-                    let th = Instant::now();
-                    let digest = self.engine.direct_hash(&chunk.data)?;
-                    hash_secs += th.elapsed().as_secs_f64();
-                    self.place_block(
-                        &chunk.data,
-                        digest,
-                        &mut known,
-                        &mut metas,
-                        &mut pending,
-                        &mut report,
-                    )?;
-                }
-            }
-        }
-
-        // 3. Wait for all outstanding transfers.
-        self.collect_window(&mut pending, 0)?;
-
-        // 4. Commit the new block-map (the POSIX `release` step).
-        match self.manager_call(Msg::CommitBlockMap {
-            file: name.into(),
-            blocks: metas.clone(),
-        })? {
-            Msg::Ok => {}
-            m => return Err(Error::Proto(format!("unexpected commit reply {m:?}"))),
-        }
-
-        report.blocks = metas.len();
-        report.hash_secs = hash_secs;
-        report.elapsed = t0.elapsed();
-        report.similarity = if report.bytes == 0 {
-            0.0
-        } else {
-            1.0 - report.new_bytes as f64 / report.bytes as f64
-        };
-        Ok(report)
+        let mut w = self.create(name)?;
+        w.push_bytes(data)?;
+        w.close()
     }
 
     /// Read a complete file and verify block integrity (CA modes).
+    /// Thin wrapper over [`Sai::open`].
     pub fn read_file(&self, name: &str) -> Result<Vec<u8>> {
-        let (version, blocks) = self.get_block_map(name)?;
-        if version == 0 {
-            return Err(Error::Manager(format!("no such file: {name}")));
-        }
-        // Issue all fetches, then collect in order.
-        let rxs: Vec<_> = blocks
-            .iter()
-            .map(|b| self.nodes[b.node as usize].get(b.hash))
-            .collect();
-        let mut out = Vec::new();
-        for (meta, rx) in blocks.iter().zip(rxs) {
-            let data = rx
-                .recv()
-                .map_err(|_| closed())??;
-            if data.len() != meta.len as usize {
-                return Err(Error::Node(format!(
-                    "block length mismatch: got {}, expected {}",
-                    data.len(),
-                    meta.len
-                )));
-            }
-            if self.cfg.ca_mode != CaMode::None {
-                // Integrity check: recompute the content hash.
-                let th = self.engine.direct_hash(&data)?;
-                if th != meta.hash {
-                    return Err(Error::Node("block integrity check failed".into()));
-                }
-            }
-            out.extend_from_slice(&data);
+        let mut r = self.open(name)?;
+        let mut out = Vec::with_capacity(r.len() as usize);
+        while let Some(block) = r.next_block()? {
+            out.extend_from_slice(&block);
         }
         Ok(out)
     }
@@ -410,52 +321,8 @@ impl Sai {
         Ok((ok, bad))
     }
 
-    fn stripe(&self) -> usize {
+    /// Number of stripe nodes in use.
+    pub(super) fn stripe(&self) -> usize {
         self.cfg.stripe_width.min(self.nodes.len())
-    }
-
-    /// Dedup decision + transfer for one block.
-    fn place_block(
-        &self,
-        data: &[u8],
-        digest: Digest,
-        known: &mut std::collections::HashMap<Digest, u32>,
-        metas: &mut Vec<BlockMeta>,
-        pending: &mut Vec<Receiver<Result<()>>>,
-        report: &mut WriteReport,
-    ) -> Result<()> {
-        if let Some(&node) = known.get(&digest) {
-            report.dup_blocks += 1;
-            metas.push(BlockMeta {
-                hash: digest,
-                len: data.len() as u32,
-                node,
-            });
-            return Ok(());
-        }
-        let node = (metas.len() % self.stripe()) as u32;
-        pending.push(self.nodes[node as usize].put(digest, data.to_vec()));
-        known.insert(digest, node);
-        report.new_blocks += 1;
-        report.new_bytes += data.len() as u64;
-        metas.push(BlockMeta {
-            hash: digest,
-            len: data.len() as u32,
-            node,
-        });
-        Ok(())
-    }
-
-    /// Await acks until at most `max_left` puts remain outstanding.
-    fn collect_window(
-        &self,
-        pending: &mut Vec<Receiver<Result<()>>>,
-        max_left: usize,
-    ) -> Result<()> {
-        while pending.len() > max_left {
-            let rx = pending.remove(0);
-            rx.recv().map_err(|_| closed())??;
-        }
-        Ok(())
     }
 }

@@ -1,0 +1,478 @@
+//! Streaming sessions over the SAI: [`FileWriter`] (incremental write →
+//! chunk → hash → dedup → stripe pipeline, commit on close) and
+//! [`FileReader`] (prefetching, integrity-verified block streaming).
+//!
+//! The writer is the paper's pipeline made visible in the API: each
+//! filled write buffer's block digests are *submitted* to the hash
+//! engine (non-blocking on accelerator engines) and redeemed one buffer
+//! later, so buffer N's hashing overlaps buffer N-1's block placement
+//! and transfers, and buffer N+1's accumulation/chunking — CrystalGPU's
+//! transfer/compute overlap, end to end.  Synchronous engines
+//! (CPU/oracle) degrade gracefully to the serial path through the same
+//! code.
+//!
+//! Buffering is caller-split-invariant: the writer re-buffers incoming
+//! bytes to exactly `write_buffer`-sized batches internally, so a file
+//! streamed in arbitrary splits produces a block-map byte-identical to
+//! a one-shot [`super::Sai::write_file`] (property-tested).
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{Read, Write};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::proto::{BlockMeta, Msg};
+use super::sai::{closed, Sai, WriteReport};
+use crate::chunking::ContentChunker;
+use crate::config::CaMode;
+use crate::hash::{md5, Digest};
+use crate::hashgpu::{DigestsTicket, HashTiming};
+use crate::{Error, Result};
+
+/// Mode-specific chunking state of a write session.
+enum ModeState {
+    /// Non-CA: blocks addressed by (file, index); `index` is the global
+    /// block counter across the whole stream.
+    None { index: u64 },
+    /// Fixed-size blocks.
+    Fixed,
+    /// Content-defined chunking (stream-continuous across buffers).
+    Cdc { chunker: ContentChunker },
+}
+
+/// A submitted-but-unredeemed digest batch: the payloads it covers ride
+/// along so blocks can be placed once the digests arrive.
+struct Inflight {
+    blocks: Arc<Vec<Vec<u8>>>,
+    ticket: DigestsTicket,
+}
+
+/// Streaming write session (from [`Sai::create`]).  Implements
+/// [`std::io::Write`]; call [`close`](FileWriter::close) to commit the
+/// block-map and obtain the [`WriteReport`].  Dropping the writer
+/// without closing abandons the write: nothing is committed (already
+/// transferred blocks remain on the nodes as unreferenced garbage, as
+/// with any aborted write).
+pub struct FileWriter<'a> {
+    sai: &'a Sai,
+    name: String,
+    mode: ModeState,
+    /// Bytes accumulated toward the next `write_buffer`-sized batch.
+    buf: Vec<u8>,
+    /// hash -> node of every block known to dedup against (previous
+    /// version + blocks placed by this write).
+    known: HashMap<Digest, u32>,
+    metas: Vec<BlockMeta>,
+    /// Outstanding node-put acknowledgements.
+    pending: Vec<Receiver<Result<()>>>,
+    /// The previous buffer's digest batch, still being hashed.
+    inflight: Option<Inflight>,
+    report: WriteReport,
+    t0: Instant,
+}
+
+impl<'a> FileWriter<'a> {
+    pub(super) fn new(sai: &'a Sai, name: &str) -> Result<FileWriter<'a>> {
+        let t0 = Instant::now();
+        // Previous version's block-map: hash -> node.
+        let (_, old_blocks) = sai.get_block_map(name)?;
+        let known = old_blocks.iter().map(|b| (b.hash, b.node)).collect();
+        let mode = match sai.cfg.ca_mode {
+            CaMode::None => ModeState::None { index: 0 },
+            CaMode::Fixed => ModeState::Fixed,
+            CaMode::Cdc => ModeState::Cdc {
+                chunker: ContentChunker::new(sai.cfg.chunk_params()),
+            },
+        };
+        Ok(FileWriter {
+            sai,
+            name: name.to_string(),
+            mode,
+            buf: Vec::with_capacity(sai.cfg.write_buffer),
+            known,
+            metas: Vec::new(),
+            pending: Vec::new(),
+            inflight: None,
+            report: WriteReport::default(),
+            t0,
+        })
+    }
+
+    /// The file being written.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Bytes accepted so far.
+    pub fn bytes_written(&self) -> u64 {
+        self.report.bytes
+    }
+
+    /// Feed payload bytes into the pipeline (the [`std::io::Write`]
+    /// impl routes here).  Processes a batch whenever the internal
+    /// buffer reaches `write_buffer` bytes.
+    pub fn push_bytes(&mut self, mut data: &[u8]) -> Result<()> {
+        self.report.bytes += data.len() as u64;
+        let cap = self.sai.cfg.write_buffer;
+        while self.buf.len() + data.len() >= cap {
+            let take = cap - self.buf.len();
+            self.buf.extend_from_slice(&data[..take]);
+            data = &data[take..];
+            self.process_buffer()?;
+        }
+        self.buf.extend_from_slice(data);
+        Ok(())
+    }
+
+    /// Commit the new block-map (the POSIX `release` step) after
+    /// flushing the tail of the stream, and return the write report.
+    pub fn close(mut self) -> Result<WriteReport> {
+        if !self.buf.is_empty() {
+            self.process_buffer()?;
+        }
+        // Drain the pipeline: redeem the last buffer's digests...
+        let prev = self.inflight.take();
+        self.resolve(prev)?;
+        // ...then the final partial CDC chunk, if any.
+        let final_chunk = match &mut self.mode {
+            ModeState::Cdc { chunker } => chunker.finish(),
+            _ => None,
+        };
+        if let Some(chunk) = final_chunk {
+            let blocks = Arc::new(vec![chunk.data]);
+            let ticket = self.sai.engine.submit_direct_batch(blocks.clone())?;
+            self.resolve(Some(Inflight { blocks, ticket }))?;
+        }
+        // Wait for all outstanding transfers.
+        self.collect_window(0)?;
+
+        match self.sai.manager_call(Msg::CommitBlockMap {
+            file: self.name.clone(),
+            blocks: self.metas.clone(),
+        })? {
+            Msg::Ok => {}
+            m => return Err(Error::Proto(format!("unexpected commit reply {m:?}"))),
+        }
+
+        self.report.blocks = self.metas.len();
+        self.report.elapsed = self.t0.elapsed();
+        self.report.similarity = if self.report.bytes == 0 {
+            0.0
+        } else {
+            1.0 - self.report.new_bytes as f64 / self.report.bytes as f64
+        };
+        Ok(self.report)
+    }
+
+    /// Process one accumulated batch (exactly `write_buffer` bytes,
+    /// except the final partial batch at close).
+    fn process_buffer(&mut self) -> Result<()> {
+        let buf = std::mem::take(&mut self.buf);
+        if buf.is_empty() {
+            return Ok(());
+        }
+        let result = match self.sai.cfg.ca_mode {
+            CaMode::None => self.process_non_ca(&buf),
+            CaMode::Fixed => {
+                let blocks: Vec<Vec<u8>> = buf
+                    .chunks(self.sai.cfg.block_size)
+                    .map(|b| b.to_vec())
+                    .collect();
+                self.submit_and_rotate(blocks)
+            }
+            CaMode::Cdc => self.process_cdc(&buf),
+        };
+        // Hand the (now drained) allocation back so the next batch does
+        // not re-grow a fresh write buffer.
+        self.buf = buf;
+        self.buf.clear();
+        result
+    }
+
+    /// Non-CA: no hashing, blocks addressed by (file, index) and shipped
+    /// straight out.
+    fn process_non_ca(&mut self, buf: &[u8]) -> Result<()> {
+        for blk in buf.chunks(self.sai.cfg.block_size) {
+            let ModeState::None { index } = &mut self.mode else {
+                return Err(Error::Other("mode state mismatch".into()));
+            };
+            let i = *index;
+            *index += 1;
+            let mut key = Vec::with_capacity(self.name.len() + 8);
+            key.extend_from_slice(self.name.as_bytes());
+            key.extend_from_slice(&i.to_le_bytes());
+            let hash = md5(&key);
+            let node = (i as usize % self.sai.stripe()) as u32;
+            self.pending
+                .push(self.sai.nodes[node as usize].put(hash, blk.to_vec()));
+            self.report.new_blocks += 1;
+            self.report.new_bytes += blk.len() as u64;
+            self.metas.push(BlockMeta {
+                hash,
+                len: blk.len() as u32,
+                node,
+            });
+            self.collect_window(2 * self.sai.stripe())?;
+        }
+        Ok(())
+    }
+
+    /// CDC: window-hash this buffer (async where the engine allows),
+    /// overlap the wait with placement of the previous buffer's chunks,
+    /// then cut boundaries and submit the finished chunks' digests.
+    fn process_cdc(&mut self, buf: &[u8]) -> Result<()> {
+        let ext = match &self.mode {
+            ModeState::Cdc { chunker } => chunker.extended(buf),
+            _ => return Err(Error::Other("mode state mismatch".into())),
+        };
+        let wticket = self.sai.engine.submit_window_hashes(ext)?;
+        // While the engine hashes windows, place the previous buffer's
+        // chunks (their digests were submitted a buffer ago).
+        let prev = self.inflight.take();
+        self.resolve(prev)?;
+        let (hashes, t) = wticket.wait()?;
+        self.add_hash_timing(t);
+        let finished = match &mut self.mode {
+            ModeState::Cdc { chunker } => chunker.push_with_hashes(buf, &hashes),
+            _ => return Err(Error::Other("mode state mismatch".into())),
+        };
+        if finished.is_empty() {
+            return Ok(());
+        }
+        let blocks: Vec<Vec<u8>> = finished.into_iter().map(|c| c.data).collect();
+        let blocks = Arc::new(blocks);
+        let ticket = self.sai.engine.submit_direct_batch(blocks.clone())?;
+        debug_assert!(self.inflight.is_none());
+        self.inflight = Some(Inflight { blocks, ticket });
+        Ok(())
+    }
+
+    /// Submit a batch's digests (non-blocking on async engines), then
+    /// redeem and place the *previous* batch — the pipeline's rotation.
+    fn submit_and_rotate(&mut self, blocks: Vec<Vec<u8>>) -> Result<()> {
+        if blocks.is_empty() {
+            return Ok(());
+        }
+        let blocks = Arc::new(blocks);
+        let ticket = self.sai.engine.submit_direct_batch(blocks.clone())?;
+        let prev = self.inflight.replace(Inflight { blocks, ticket });
+        self.resolve(prev)
+    }
+
+    /// Redeem an in-flight digest batch and place its blocks.
+    fn resolve(&mut self, inflight: Option<Inflight>) -> Result<()> {
+        let Some(Inflight { blocks, ticket }) = inflight else {
+            return Ok(());
+        };
+        let (digests, t) = ticket.wait()?;
+        self.add_hash_timing(t);
+        if digests.len() != blocks.len() {
+            return Err(Error::Other(format!(
+                "engine returned {} digests for {} blocks",
+                digests.len(),
+                blocks.len()
+            )));
+        }
+        for (blk, digest) in blocks.iter().zip(digests) {
+            self.place_block(blk, digest);
+        }
+        self.collect_window(2 * self.sai.stripe())
+    }
+
+    fn add_hash_timing(&mut self, t: HashTiming) {
+        self.report.hash_secs += t.exposed.as_secs_f64();
+        self.report.hash_hidden_secs += t.hidden.as_secs_f64();
+    }
+
+    /// Dedup decision + transfer for one block.
+    fn place_block(&mut self, data: &[u8], digest: Digest) {
+        if let Some(&node) = self.known.get(&digest) {
+            self.report.dup_blocks += 1;
+            self.metas.push(BlockMeta {
+                hash: digest,
+                len: data.len() as u32,
+                node,
+            });
+            return;
+        }
+        let node = (self.metas.len() % self.sai.stripe()) as u32;
+        self.pending
+            .push(self.sai.nodes[node as usize].put(digest, data.to_vec()));
+        self.known.insert(digest, node);
+        self.report.new_blocks += 1;
+        self.report.new_bytes += data.len() as u64;
+        self.metas.push(BlockMeta {
+            hash: digest,
+            len: data.len() as u32,
+            node,
+        });
+    }
+
+    /// Await acks until at most `max_left` puts remain outstanding.
+    fn collect_window(&mut self, max_left: usize) -> Result<()> {
+        while self.pending.len() > max_left {
+            let rx = self.pending.remove(0);
+            rx.recv().map_err(|_| closed())??;
+        }
+        Ok(())
+    }
+}
+
+impl Write for FileWriter<'_> {
+    fn write(&mut self, data: &[u8]) -> std::io::Result<usize> {
+        self.push_bytes(data)?;
+        Ok(data.len())
+    }
+
+    /// No-op: blocks are pipelined internally and the block-map only
+    /// becomes visible at [`close`](FileWriter::close), so there is no
+    /// meaningful intermediate flush point.
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Streaming read session (from [`Sai::open`]).  Implements
+/// [`std::io::Read`]: blocks are prefetched from the stripe nodes ahead
+/// of the consumer and each block's content hash is re-verified before
+/// its bytes are served (CA modes).
+pub struct FileReader<'a> {
+    sai: &'a Sai,
+    blocks: Vec<BlockMeta>,
+    version: u64,
+    /// Next block index to request from its node.
+    next_fetch: usize,
+    /// Next block index to hand to the consumer.
+    next_read: usize,
+    /// Outstanding fetches, in block order.
+    rxs: VecDeque<Receiver<Result<Vec<u8>>>>,
+    /// Current block being drained by `read`.
+    cur: Vec<u8>,
+    cur_off: usize,
+    /// Once any block fails (transport, length, integrity), the session
+    /// is poisoned: fetch/read bookkeeping is no longer aligned, so all
+    /// further reads fail instead of serving misattributed blocks.
+    failed: bool,
+}
+
+impl<'a> FileReader<'a> {
+    pub(super) fn new(sai: &'a Sai, name: &str) -> Result<FileReader<'a>> {
+        let (version, blocks) = sai.get_block_map(name)?;
+        if version == 0 {
+            return Err(Error::Manager(format!("no such file: {name}")));
+        }
+        let mut r = FileReader {
+            sai,
+            blocks,
+            version,
+            next_fetch: 0,
+            next_read: 0,
+            rxs: VecDeque::new(),
+            cur: Vec::new(),
+            cur_off: 0,
+            failed: false,
+        };
+        r.prefetch()?;
+        Ok(r)
+    }
+
+    /// Total file size in bytes.
+    pub fn len(&self) -> u64 {
+        self.blocks.iter().map(|b| b.len as u64).sum()
+    }
+
+    /// Whether the file is empty.
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+
+    /// The file version this session reads.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Number of blocks in the file.
+    pub fn block_count(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Keep up to `2 * stripe` fetches outstanding ahead of the reader.
+    fn prefetch(&mut self) -> Result<()> {
+        let window = 2 * self.sai.stripe().max(1);
+        while self.next_fetch < self.blocks.len() && self.rxs.len() < window {
+            let b = &self.blocks[self.next_fetch];
+            let node = self
+                .sai
+                .nodes
+                .get(b.node as usize)
+                .ok_or_else(|| Error::Node(format!("block maps to unknown node {}", b.node)))?;
+            self.rxs.push_back(node.get(b.hash));
+            self.next_fetch += 1;
+        }
+        Ok(())
+    }
+
+    /// Fetch, verify and return the next whole block (None at EOF).
+    /// Any error poisons the session: subsequent calls keep failing
+    /// rather than serving blocks misaligned with their metadata.
+    pub fn next_block(&mut self) -> Result<Option<Vec<u8>>> {
+        if self.failed {
+            return Err(Error::Node("read session failed earlier".into()));
+        }
+        match self.next_block_inner() {
+            Ok(v) => Ok(v),
+            Err(e) => {
+                self.failed = true;
+                Err(e)
+            }
+        }
+    }
+
+    fn next_block_inner(&mut self) -> Result<Option<Vec<u8>>> {
+        if self.next_read >= self.blocks.len() {
+            return Ok(None);
+        }
+        let rx = self.rxs.pop_front().expect("prefetch invariant");
+        let data = rx.recv().map_err(|_| closed())??;
+        let meta = &self.blocks[self.next_read];
+        if data.len() != meta.len as usize {
+            return Err(Error::Node(format!(
+                "block length mismatch: got {}, expected {}",
+                data.len(),
+                meta.len
+            )));
+        }
+        if self.sai.cfg.ca_mode != CaMode::None {
+            // Integrity check: recompute the content hash.
+            let th = self.sai.engine.direct_hash(&data)?;
+            if th != meta.hash {
+                return Err(Error::Node("block integrity check failed".into()));
+            }
+        }
+        self.next_read += 1;
+        self.prefetch()?;
+        Ok(Some(data))
+    }
+}
+
+impl Read for FileReader<'_> {
+    fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+        if out.is_empty() {
+            return Ok(0);
+        }
+        while self.cur_off >= self.cur.len() {
+            match self.next_block()? {
+                Some(b) => {
+                    self.cur = b;
+                    self.cur_off = 0;
+                }
+                None => return Ok(0),
+            }
+        }
+        let n = (self.cur.len() - self.cur_off).min(out.len());
+        out[..n].copy_from_slice(&self.cur[self.cur_off..self.cur_off + n]);
+        self.cur_off += n;
+        Ok(n)
+    }
+}

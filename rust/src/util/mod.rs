@@ -108,10 +108,13 @@ pub fn human_bytes(n: u64) -> String {
     }
 }
 
-/// Render a rate in MB/s.
+/// Render a rate in MB/s.  Zero (or negative, or NaN) elapsed time
+/// yields 0.0 rather than a division blow-up: an instantaneous
+/// measurement carries no rate information, and 0.0 keeps report
+/// aggregation (sums, averages, tables) finite.
 pub fn mbps(bytes: u64, seconds: f64) -> f64 {
-    if seconds <= 0.0 {
-        return f64::INFINITY;
+    if seconds.is_nan() || seconds <= 0.0 {
+        return 0.0;
     }
     bytes as f64 / (1024.0 * 1024.0) / seconds
 }
@@ -185,5 +188,13 @@ mod tests {
     #[test]
     fn hex_roundtrip() {
         assert_eq!(hex(&[0xde, 0xad, 0x01]), "dead01");
+    }
+
+    #[test]
+    fn mbps_guards_degenerate_elapsed() {
+        assert_eq!(mbps(1 << 20, 0.0), 0.0);
+        assert_eq!(mbps(1 << 20, -1.0), 0.0);
+        assert_eq!(mbps(1 << 20, f64::NAN), 0.0);
+        assert!((mbps(1 << 20, 1.0) - 1.0).abs() < 1e-12);
     }
 }

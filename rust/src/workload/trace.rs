@@ -85,9 +85,9 @@ impl Trace {
                     let mut inserts = 0;
                     let mut deletes = 0;
                     for kv in arg.split(',') {
-                        let (k, v) = kv
-                            .split_once('=')
-                            .ok_or_else(|| Error::Config(format!("trace line {}: bad kv", ln + 1)))?;
+                        let (k, v) = kv.split_once('=').ok_or_else(|| {
+                            Error::Config(format!("trace line {}: bad kv", ln + 1))
+                        })?;
                         let v: usize = v.parse().map_err(|_| {
                             Error::Config(format!("trace line {}: bad count", ln + 1))
                         })?;
@@ -123,11 +123,19 @@ impl Trace {
     }
 
     /// Replay against a SAI client; returns per-op write reports.
+    /// Writes stream through a [`crate::store::FileWriter`] session in
+    /// application-sized chunks (a recorded trace replays the way the
+    /// original application wrote: incrementally, not as one giant
+    /// buffer); reads stream back through a
+    /// [`crate::store::FileReader`].
     pub fn replay(
         &self,
         sai: &crate::store::Sai,
         seed: u64,
     ) -> Result<Vec<crate::store::WriteReport>> {
+        use std::io::Read as _;
+        /// Replay granularity of one application write call.
+        const REPLAY_IO_CHUNK: usize = 1 << 20;
         let mut rng = Rng::new(seed);
         let mut buffers: HashMap<String, Vec<u8>> = HashMap::new();
         let mut reports = Vec::new();
@@ -141,7 +149,11 @@ impl Trace {
                     let data = buffers
                         .get(file)
                         .ok_or_else(|| Error::Config(format!("write {file}: no buffer")))?;
-                    reports.push(sai.write_file(file, data)?);
+                    let mut w = sai.create(file)?;
+                    for chunk in data.chunks(REPLAY_IO_CHUNK) {
+                        w.push_bytes(chunk)?;
+                    }
+                    reports.push(w.close()?);
                 }
                 TraceOp::Mutate {
                     file,
@@ -163,7 +175,9 @@ impl Trace {
                     mutate_buffer(buf, profile, &mut rng);
                 }
                 TraceOp::Read { file } => {
-                    let data = sai.read_file(file)?;
+                    let mut r = sai.open(file)?;
+                    let mut data = Vec::with_capacity(r.len() as usize);
+                    r.read_to_end(&mut data).map_err(Error::Io)?;
                     if let Some(expect) = buffers.get(file) {
                         if &data != expect {
                             return Err(Error::Other(format!(

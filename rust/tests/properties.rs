@@ -174,10 +174,9 @@ fn prop_proto_roundtrip() {
 /// regardless of device count, overlap, reuse, or queue pressure.
 #[test]
 fn prop_crystal_routing_correctness() {
+    // The Mock backend falls back to the synthetic manifest when
+    // `make artifacts` has not been run, so this runs everywhere.
     let dir = Manifest::default_dir();
-    if !dir.join("manifest.json").exists() {
-        panic!("artifacts not built; run `make artifacts`");
-    }
     for seed in 500..505 {
         let mut rng = Rng::new(seed);
         let opts = CrystalOpts {
@@ -270,6 +269,106 @@ fn prop_merkle_construction() {
             );
         }
         assert_ne!(d1, direct_hash_cpu(&data, 256), "seed={seed}");
+    }
+}
+
+/// PROPERTY (streaming/one-shot equivalence): writing a file through a
+/// `FileWriter` session in arbitrary split sizes yields a byte-identical
+/// block-map, identical dedup accounting, and identical read-back as the
+/// one-shot `write_file`, across all three `CaMode`s and the CPU,
+/// oracle, and (mock-backed, asynchronously submitting) GPU engines.
+#[test]
+fn prop_streaming_oneshot_equivalence() {
+    use gpustore::config::{CaMode, ClientConfig, ClusterConfig};
+    use gpustore::hashgpu::{CpuEngine, GpuEngine, HashEngine, OracleEngine, WindowHashMode};
+    use gpustore::store::Cluster;
+    use std::io::Write as _;
+
+    let cluster = Cluster::spawn(ClusterConfig {
+        nodes: 3,
+        link_bps: 1e9,
+        shape: false,
+    })
+    .unwrap();
+    let gpu_master = {
+        let opts = CrystalOpts::optimized(BackendKind::Mock {
+            artifact_dir: Manifest::default_dir(),
+            tuning: MockTuning::default(),
+        });
+        Arc::new(Master::new(opts).unwrap())
+    };
+
+    for seed in 900..918 {
+        let mut rng = Rng::new(seed);
+        let mode = [CaMode::None, CaMode::Fixed, CaMode::Cdc][rng.range(0, 3)];
+        let engine: Arc<dyn HashEngine> = match rng.range(0, 3) {
+            0 => Arc::new(CpuEngine::new(2, 4096, WindowHashMode::Rolling)),
+            1 => Arc::new(OracleEngine::new()),
+            _ => Arc::new(GpuEngine::new(gpu_master.clone(), 4096, 48)),
+        };
+        let cfg = ClientConfig {
+            ca_mode: mode,
+            block_size: 16 * 1024,
+            cdc_min: 2 * 1024,
+            cdc_max: 32 * 1024,
+            cdc_mask: (1 << 13) - 1,
+            write_buffer: 64 * 1024,
+            stripe_width: rng.range(1, 4),
+            ..ClientConfig::default()
+        };
+        let sai = cluster.client(cfg, engine.clone()).unwrap();
+
+        // Two versions, so the second write exercises dedup against the
+        // previous block-map on both paths.
+        let len = rng.range(1, 300_000);
+        let mut data = rng.bytes(len);
+        for version in 0..2 {
+            let one_name = format!("eq-{seed}-one");
+            let str_name = format!("eq-{seed}-str");
+            let r_one = sai.write_file(&one_name, &data).unwrap();
+
+            let mut w = sai.create(&str_name).unwrap();
+            let mut off = 0;
+            while off < data.len() {
+                let take = rng.range(1, 80_000).min(data.len() - off);
+                w.write_all(&data[off..off + take]).unwrap();
+                off += take;
+            }
+            let r_str = w.close().unwrap();
+
+            let ctx = format!(
+                "seed={seed} v={version} mode={mode:?} engine={}",
+                engine.name()
+            );
+            assert_eq!(r_one.bytes, r_str.bytes, "{ctx}");
+            assert_eq!(r_one.blocks, r_str.blocks, "{ctx}");
+            assert_eq!(r_one.new_blocks, r_str.new_blocks, "{ctx}");
+            assert_eq!(r_one.dup_blocks, r_str.dup_blocks, "{ctx}");
+            assert_eq!(r_one.new_bytes, r_str.new_bytes, "{ctx}");
+            assert!((r_one.similarity - r_str.similarity).abs() < 1e-12, "{ctx}");
+
+            let (_, m_one) = sai.get_block_map(&one_name).unwrap();
+            let (_, m_str) = sai.get_block_map(&str_name).unwrap();
+            if mode == CaMode::None {
+                // Non-CA block keys embed the file name; compare layout.
+                assert_eq!(m_one.len(), m_str.len(), "{ctx}");
+                for (a, b) in m_one.iter().zip(&m_str) {
+                    assert_eq!((a.len, a.node), (b.len, b.node), "{ctx}");
+                }
+            } else {
+                // Content-addressed: maps must be byte-identical.
+                assert_eq!(m_one, m_str, "{ctx}");
+            }
+
+            assert_eq!(sai.read_file(&one_name).unwrap(), data, "{ctx}");
+            assert_eq!(sai.read_file(&str_name).unwrap(), data, "{ctx}");
+
+            // Mutate for the next version (insert keeps most content).
+            let at = rng.range(0, data.len());
+            let n = rng.range(1, 500);
+            let ins = rng.bytes(n);
+            data.splice(at..at, ins);
+        }
     }
 }
 
