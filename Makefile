@@ -1,0 +1,36 @@
+# gpustore build orchestration.
+#
+# `artifacts` needs a Python environment with JAX (see
+# python/compile/aot.py); everything else is pure cargo.
+
+.PHONY: all artifacts test bench smoke clean
+
+all: test
+
+# AOT-compile the Pallas kernels to XLA artifacts for the PJRT runtime.
+# Without this, the Mock backend's synthetic manifest keeps the full
+# test suite meaningful.
+artifacts:
+	python3 python/compile/aot.py --out artifacts
+
+# The tier-1 gate.
+test:
+	cargo build --release
+	cargo test -q
+
+# Figure-regeneration harness (writes BENCH_pr2.json) + hot-path
+# microbenchmarks.
+bench:
+	cargo bench --bench figures
+	cargo bench --bench micro
+
+# Fast end-to-end smoke: build benches and run the runnable examples
+# (checkpoint_dedup at reduced size: 4 images x 2 MB).
+smoke:
+	cargo build --release --benches --examples
+	cargo run --release --example quickstart
+	cargo run --release --example checkpoint_dedup -- 4 2
+
+clean:
+	cargo clean
+	rm -f BENCH_pr2.json

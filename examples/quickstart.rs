@@ -81,5 +81,32 @@ fn main() -> gpustore::Result<()> {
         "cluster stores {blocks} unique blocks, {}",
         human_bytes(bytes)
     );
+
+    // 6. Control-plane v2 bonus round: the same write against a
+    //    2-way-replicated cluster — the manager places every block on
+    //    two nodes, and the file survives losing either one.
+    let mut rcluster = Cluster::spawn(ClusterConfig {
+        replication: 2,
+        shape: false,
+        ..ClusterConfig::default()
+    })?;
+    let cfg = ClientConfig::ca_gpu_fixed();
+    let engine = build_engine(&cfg, None)?;
+    let rsai = rcluster.client(cfg, engine)?;
+    let r3 = rsai.write_file("demo.bin", &data)?;
+    println!(
+        "replicated write (r=2): {} payload, {} transferred",
+        human_bytes(r3.bytes),
+        human_bytes(r3.new_bytes)
+    );
+    rcluster.kill_node(0);
+    let mut reader = rsai.open("demo.bin")?;
+    let mut back2 = Vec::with_capacity(reader.len() as usize);
+    reader.read_to_end(&mut back2)?;
+    assert_eq!(back2, data);
+    println!(
+        "read back after killing node 0: OK ({} blocks failed over)",
+        reader.failover_count()
+    );
     Ok(())
 }

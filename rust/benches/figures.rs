@@ -8,6 +8,8 @@
 //!
 //! Shape expectations (paper vs ours) are recorded in EXPERIMENTS.md.
 
+use std::sync::Mutex;
+
 use gpustore::chunking::ChunkParams;
 use gpustore::crystal::model::CpuModel;
 use gpustore::metrics::{Stage, Table};
@@ -19,6 +21,46 @@ use gpustore::workload::checkpoint::{cdc_similarity, fixed_similarity};
 use gpustore::workload::{CheckpointStream, MutationProfile};
 
 const MB: f64 = 1024.0 * 1024.0;
+
+/// Machine-readable results accumulated by the figure harness and
+/// flushed to `BENCH_pr2.json`: (figure, engine, config, MB/s).
+static RECORDS: Mutex<Vec<(String, String, String, f64)>> = Mutex::new(Vec::new());
+
+fn record(figure: &str, engine: &str, config: &str, mbps: f64) {
+    RECORDS
+        .lock()
+        .unwrap()
+        .push((figure.into(), engine.into(), config.into(), mbps));
+}
+
+/// Minimal JSON escaping for the label strings we emit (they are plain
+/// ASCII, but stay defensive).
+fn jstr(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn flush_records() {
+    let recs = RECORDS.lock().unwrap();
+    if recs.is_empty() {
+        return;
+    }
+    let mut out = String::from("{\n  \"bench\": \"figures\",\n  \"unit\": \"MB/s\",\n  \"results\": [\n");
+    for (i, (fig, engine, cfg, mbps)) in recs.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"figure\": \"{}\", \"engine\": \"{}\", \"config\": \"{}\", \"mbps\": {:.2}}}{}\n",
+            jstr(fig),
+            jstr(engine),
+            jstr(cfg),
+            mbps,
+            if i + 1 == recs.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_pr2.json", &out) {
+        Ok(()) => println!("\nwrote BENCH_pr2.json ({} results)", recs.len()),
+        Err(e) => eprintln!("could not write BENCH_pr2.json: {e}"),
+    }
+}
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
@@ -63,9 +105,13 @@ fn main() {
     if want("ablate-10g") {
         ablate_10g();
     }
+    if want("ablate-replication") {
+        ablate_replication();
+    }
     if want("ablate-window-mode") {
         ablate_window_mode();
     }
+    flush_records();
 }
 
 fn block_sizes() -> Vec<usize> {
@@ -194,6 +240,7 @@ fn file_sizes() -> Vec<usize> {
 
 /// Figs 7-10: integrated-system write throughput, 40 files back-to-back.
 fn fig7_10(cdc: bool, similar: bool, title: &str) {
+    let fig_key = title.split(':').next().unwrap_or(title);
     println!("\n== {title} ==");
     if similar {
         println!("paper fig9: CA-GPU ~= CA-Infinite, >2x CA-CPU for >=64MB files");
@@ -226,6 +273,7 @@ fn fig7_10(cdc: bool, similar: bool, title: &str) {
                 cdc,
                 write_buffer: 4 << 20,
                 similarity: sim,
+                replication: 1,
             };
             let secs = if similar && dedup_able {
                 s.write_secs(&mk(0.0), size, blocks)
@@ -234,6 +282,12 @@ fn fig7_10(cdc: bool, similar: bool, title: &str) {
                 files as f64 * s.write_secs(&mk(0.0), size, blocks)
             };
             let bps = (files * size) as f64 / secs;
+            record(
+                fig_key,
+                name,
+                &format!("size={}", human_bytes(size as u64)),
+                bps / MB,
+            );
             row.push(format!("{:.0}", bps / MB));
         }
         t.row(row);
@@ -291,6 +345,7 @@ fn fig11() {
                 cdc,
                 write_buffer: 4 << 20,
                 similarity: sim,
+                replication: 1,
             };
             // First image transfers fully; the rest dedup at `sim`.
             let cfg0 = WriteConfig { similarity: 0.0, ..cfg };
@@ -298,15 +353,26 @@ fn fig11() {
                 + (files - 1) as f64 * s.write_secs(&cfg, size, blocks);
             (files * size) as f64 / secs / MB
         };
+        let block_label = format!("block={}", human_bytes(paper_block as u64));
+        let cells: [(&str, f64); 5] = [
+            ("non-CA", bps(EngineModel::None, false, 0.0)),
+            ("fixed-CPU", bps(EngineModel::Cpu { threads: 16 }, false, fixed_sim)),
+            ("fixed-GPU", bps(EngineModel::Gpu { opts: GpuOpts::OVERLAP }, false, fixed_sim)),
+            ("CBC-CPU", bps(EngineModel::Cpu { threads: 16 }, true, cdc_sim)),
+            ("CBC-GPU", bps(EngineModel::Gpu { opts: GpuOpts::OVERLAP }, true, cdc_sim)),
+        ];
+        for (engine, mbps) in &cells {
+            record("fig11", engine, &block_label, *mbps);
+        }
         t.row(vec![
             human_bytes(paper_block as u64),
             format!("{:.1}", 100.0 * fixed_sim),
             format!("{:.1}", 100.0 * cdc_sim),
-            format!("{:.0}", bps(EngineModel::None, false, 0.0)),
-            format!("{:.0}", bps(EngineModel::Cpu { threads: 16 }, false, fixed_sim)),
-            format!("{:.0}", bps(EngineModel::Gpu { opts: GpuOpts::OVERLAP }, false, fixed_sim)),
-            format!("{:.0}", bps(EngineModel::Cpu { threads: 16 }, true, cdc_sim)),
-            format!("{:.0}", bps(EngineModel::Gpu { opts: GpuOpts::OVERLAP }, true, cdc_sim)),
+            format!("{:.0}", cells[0].1),
+            format!("{:.0}", cells[1].1),
+            format!("{:.0}", cells[2].1),
+            format!("{:.0}", cells[3].1),
+            format!("{:.0}", cells[4].1),
         ]);
     }
     println!("{}", t.markdown());
@@ -347,6 +413,7 @@ fn contention(kind: CompetitorKind, title: &str) {
                 cdc: false,
                 write_buffer: 4 << 20,
                 similarity: if name == "non-CA" { 0.0 } else { sim },
+                replication: 1,
             };
             let r = m.evaluate(&s, &cfg, size, blocks, kind);
             t.row(vec![
@@ -389,24 +456,53 @@ fn ablate_10g() {
             ..SystemSim::default()
         };
         let size = 64 << 20;
-        let row = |e: EngineModel| {
+        let cell = |name: &str, e: EngineModel| {
             let cfg = WriteConfig {
                 engine: e,
                 cdc: false,
                 write_buffer: 4 << 20,
                 similarity: 0.0,
+                replication: 1,
             };
-            format!("{:.0}", s.write_bps(&cfg, size, 64, 10) / MB)
+            let mbps = s.write_bps(&cfg, size, 64, 10) / MB;
+            record("ablate-10g", name, &format!("link={label}"), mbps);
+            format!("{mbps:.0}")
         };
         t.row(vec![
             label.into(),
-            row(EngineModel::None),
-            row(EngineModel::Cpu { threads: 16 }),
-            row(EngineModel::Gpu { opts: GpuOpts::OVERLAP }),
+            cell("non-CA", EngineModel::None),
+            cell("CA-CPU", EngineModel::Cpu { threads: 16 }),
+            cell("CA-GPU", EngineModel::Gpu { opts: GpuOpts::OVERLAP }),
         ]);
     }
     println!("{}", t.markdown());
     println!("(10 Gbps: CPU hashing becomes the bottleneck everywhere; offload keeps up)");
+}
+
+/// Ablation (control-plane v2): replication factor vs write throughput.
+/// Every new byte crosses the client NIC once per copy, so `different`
+/// workloads pay ~1/r while fully-dedup'd `similar` workloads are free.
+fn ablate_replication() {
+    println!("\n== ablation: replication factor (manager-driven placement) ==\n");
+    let s = SystemSim::default();
+    let size = 64 << 20;
+    let mut t = Table::new(&["replication", "different MB/s", "similar MB/s"]);
+    for r in [1usize, 2, 3] {
+        let mk = |sim: f64| WriteConfig {
+            engine: EngineModel::Gpu { opts: GpuOpts::OVERLAP },
+            cdc: false,
+            write_buffer: 4 << 20,
+            similarity: sim,
+            replication: r,
+        };
+        let diff = s.write_bps(&mk(0.0), size, 64, 10) / MB;
+        let simi = s.write_bps(&mk(1.0), size, 64, 10) / MB;
+        record("ablate-replication", "CA-GPU", &format!("r={r} different"), diff);
+        record("ablate-replication", "CA-GPU", &format!("r={r} similar"), simi);
+        t.row(vec![r.to_string(), format!("{diff:.0}"), format!("{simi:.0}")]);
+    }
+    println!("{}", t.markdown());
+    println!("(reliability costs bandwidth only for cold data; dedup'd bytes replicate for free)");
 }
 
 /// Ablation: CPU window-hash implementation (paper MD5-per-window vs a

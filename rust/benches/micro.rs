@@ -135,6 +135,7 @@ fn main() {
             nodes: 4,
             link_bps: 1e9,
             shape: false,
+            replication: 1,
         })
         .unwrap();
         let modes = [

@@ -67,7 +67,9 @@ pub struct ClientConfig {
     pub write_buffer: usize,
     /// Direct-hash segment size for the parallel Merkle–Damgård split.
     pub segment_bytes: usize,
-    /// Number of storage nodes a write is striped across (paper: 4).
+    /// Client transfer-parallelism window (paper: stripes of 4).
+    /// Placement itself is manager-driven (control-plane v2); this only
+    /// bounds how many puts/prefetches the client keeps in flight.
     pub stripe_width: usize,
 }
 
@@ -190,6 +192,10 @@ pub struct ClusterConfig {
     pub link_bps: f64,
     /// Whether to shape in-proc links at `link_bps`.
     pub shape: bool,
+    /// Copies per block placed by the manager (control-plane v2:
+    /// `ReplicatedStripe` when > 1, classic round-robin when 1).
+    /// Must be `1 <= replication <= nodes`.
+    pub replication: usize,
 }
 
 impl Default for ClusterConfig {
@@ -198,6 +204,17 @@ impl Default for ClusterConfig {
             nodes: 4,
             link_bps: 1e9,
             shape: true,
+            replication: 1,
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// Default cluster with an n-way replication factor.
+    pub fn replicated(replication: usize) -> Self {
+        ClusterConfig {
+            replication,
+            ..Default::default()
         }
     }
 }

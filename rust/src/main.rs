@@ -1,11 +1,12 @@
 //! gpustore CLI — launcher for the distributed storage system.
 //!
-//! Components (multi-process deployment):
-//!   gpustore manager --listen 0.0.0.0:7070
-//!   gpustore node    --listen 0.0.0.0:7071
-//!   gpustore write   --manager H:P --nodes H:P,H:P --mode cdc --engine gpu \
+//! Components (multi-process deployment, control-plane v2: nodes join
+//! the manager and clients bootstrap from the manager alone):
+//!   gpustore manager --listen 0.0.0.0:7070 [--replication 2]
+//!   gpustore node    --listen 0.0.0.0:7071 --manager H:7070 [--advertise H:7071]
+//!   gpustore write   --manager H:P --mode cdc --engine gpu \
 //!                    --file f --size 64M --count 10
-//!   gpustore read    --manager H:P --nodes H:P,... --file f --out path
+//!   gpustore read    --manager H:P --file f --out path
 //!   gpustore demo    (single-process cluster + one write/read cycle)
 //!
 //! Benchmarks regenerating the paper's figures live in `cargo bench`
@@ -16,7 +17,8 @@ use std::io::{Read as _, Write as _};
 
 use gpustore::config::{CaMode, ClientConfig, ClusterConfig, HashEngineKind};
 use gpustore::hashgpu::build_engine;
-use gpustore::store::{Cluster, Manager, Sai, StorageNode};
+use gpustore::store::proto::MAX_REPLICAS;
+use gpustore::store::{policy_for, Cluster, Manager, Sai, StorageNode};
 use gpustore::util::{human_bytes, Rng};
 use gpustore::{Error, Result};
 
@@ -51,7 +53,7 @@ fn run(args: &[String]) -> Result<()> {
         "verify" => cmd_verify(&flags),
         "ls" => cmd_ls(&flags),
         "trace" => cmd_trace(&flags),
-        "demo" => cmd_demo(),
+        "demo" => cmd_demo(&flags),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -64,17 +66,19 @@ fn print_usage() {
     println!(
         "gpustore — GPU-accelerated content-addressable storage \
          (TPDS'12 reproduction)\n\n\
-         USAGE:\n  gpustore manager --listen ADDR\n  \
-         gpustore node --listen ADDR [--disk DIR]\n  \
-         gpustore write --manager ADDR --nodes A,B,.. [--mode fixed|cdc|none]\n\
+         USAGE:\n  gpustore manager --listen ADDR [--replication N]\n  \
+         gpustore node --listen ADDR --manager ADDR [--advertise ADDR] [--disk DIR]\n  \
+         gpustore write --manager ADDR [--mode fixed|cdc|none]\n\
          \x20                [--engine cpu|gpu|oracle] [--threads N]\n\
          \x20                [--file NAME] [--size BYTES|K|M|G] [--count N] [--seed N]\n  \
-         gpustore read --manager ADDR --nodes A,B,.. --file NAME [--out PATH]\n  \
-         gpustore verify --manager ADDR --nodes A,B,.. --file NAME\n  \
-         gpustore ls --manager ADDR --nodes A,B,..\n  \
-         gpustore trace --manager ADDR --nodes A,B,.. --trace FILE [--seed N]\n  \
-         gpustore demo\n\n\
-         `make artifacts` must have produced artifacts/ for --engine gpu."
+         gpustore read --manager ADDR --file NAME [--out PATH]\n  \
+         gpustore verify --manager ADDR --file NAME\n  \
+         gpustore ls --manager ADDR\n  \
+         gpustore trace --manager ADDR --trace FILE [--seed N]\n  \
+         gpustore demo [--replication N]\n\n\
+         Nodes register with the manager; clients discover them from it\n\
+         (no --nodes flag).  `make artifacts` must have produced\n\
+         artifacts/ for --engine gpu."
     );
 }
 
@@ -146,21 +150,38 @@ fn connect_sai(flags: &HashMap<String, String>) -> Result<Sai> {
     let manager = flags
         .get("manager")
         .ok_or_else(|| Error::Config("--manager required".into()))?;
-    let nodes: Vec<String> = flags
-        .get("nodes")
-        .ok_or_else(|| Error::Config("--nodes required".into()))?
-        .split(',')
-        .map(|s| s.trim().to_string())
-        .collect();
+    if flags.contains_key("nodes") {
+        eprintln!("note: --nodes is obsolete; storage nodes are discovered via the manager");
+    }
     let cfg = client_config(flags)?;
     let engine = build_engine(&cfg, None)?;
-    Sai::connect(manager, &nodes, cfg, engine, None)
+    Sai::connect(manager, cfg, engine, None)
+}
+
+/// Parse `--replication` strictly: a malformed or out-of-range value
+/// must fail loudly, not be silently coerced.
+fn parse_replication(flags: &HashMap<String, String>) -> Result<usize> {
+    match flags.get("replication") {
+        None => Ok(1),
+        Some(r) => match r.parse::<usize>() {
+            Ok(n) if (1..=MAX_REPLICAS).contains(&n) => Ok(n),
+            _ => Err(Error::Config(format!(
+                "bad --replication `{r}` (need an integer in 1..={MAX_REPLICAS})"
+            ))),
+        },
+    }
 }
 
 fn cmd_manager(flags: &HashMap<String, String>) -> Result<()> {
     let listen = flags.get("listen").map(String::as_str).unwrap_or("0.0.0.0:7070");
-    let mgr = Manager::spawn(listen)?;
-    println!("metadata manager listening on {}", mgr.addr());
+    let replication = parse_replication(flags)?;
+    let policy = policy_for(replication);
+    let name = policy.name();
+    let mgr = Manager::spawn_with_policy(listen, policy)?;
+    println!(
+        "metadata manager listening on {} (policy {name}, replication {replication})",
+        mgr.addr()
+    );
     loop {
         std::thread::park();
     }
@@ -169,8 +190,17 @@ fn cmd_manager(flags: &HashMap<String, String>) -> Result<()> {
 fn cmd_node(flags: &HashMap<String, String>) -> Result<()> {
     let listen = flags.get("listen").map(String::as_str).unwrap_or("0.0.0.0:7071");
     let disk = flags.get("disk").map(std::path::PathBuf::from);
-    let node = StorageNode::spawn_with(listen, disk)?;
-    println!("storage node listening on {}", node.addr());
+    // When binding a wildcard address, --advertise tells the manager
+    // (and thus clients) how to reach this node.
+    let advertise = flags.get("advertise").map(String::as_str);
+    let node = match flags.get("manager") {
+        Some(m) => StorageNode::spawn_advertised(listen, disk, m, advertise)?,
+        None => StorageNode::spawn_with(listen, disk)?,
+    };
+    match node.node_id() {
+        Some(id) => println!("storage node {id} listening on {} (joined manager)", node.addr()),
+        None => println!("storage node listening on {} (standalone, no manager)", node.addr()),
+    }
     loop {
         std::thread::park();
     }
@@ -299,10 +329,15 @@ fn cmd_trace(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
-fn cmd_demo() -> Result<()> {
-    let cluster = Cluster::spawn(ClusterConfig::default())?;
+fn cmd_demo(flags: &HashMap<String, String>) -> Result<()> {
+    // Cluster::spawn validates replication against the node count.
+    let replication = parse_replication(flags)?;
+    let cluster = Cluster::spawn(ClusterConfig {
+        replication,
+        ..ClusterConfig::default()
+    })?;
     println!(
-        "demo cluster: manager {} nodes {:?}",
+        "demo cluster: manager {} nodes {:?} (replication {replication})",
         cluster.manager_addr(),
         cluster.node_addrs()
     );

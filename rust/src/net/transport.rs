@@ -45,6 +45,24 @@ impl Conn {
         Ok(Conn::new(TcpStream::connect(addr)?))
     }
 
+    /// Connect with a bounded timeout (control-plane retry paths: a
+    /// black-holed peer must not stall the caller for the OS's default
+    /// SYN timeout).
+    pub fn connect_timeout(addr: &str, timeout: std::time::Duration) -> Result<Conn> {
+        use std::net::ToSocketAddrs;
+        let mut last: Option<std::io::Error> = None;
+        for sa in addr.to_socket_addrs()? {
+            match TcpStream::connect_timeout(&sa, timeout) {
+                Ok(s) => return Ok(Conn::new(s)),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(match last {
+            Some(e) => crate::Error::Io(e),
+            None => crate::Error::Other(format!("no addresses for {addr}")),
+        })
+    }
+
     /// Clone the underlying socket (for split read/write threads).
     pub fn try_clone(&self) -> Result<Conn> {
         Ok(Conn {

@@ -150,6 +150,7 @@ mod tests {
             cdc: false,
             write_buffer: 4 << 20,
             similarity,
+            replication: 1,
         }
     }
 

@@ -47,6 +47,9 @@ pub struct WriteConfig {
     /// (0 = `different`, 1 = `similar`; checkpoint values are measured
     /// from the real generator by the bench harness).
     pub similarity: f64,
+    /// Copies per block (control-plane v2 replication): every new byte
+    /// crosses the client NIC once per replica.
+    pub replication: usize,
 }
 
 /// The modeled system: client CPU/GPU + network.
@@ -123,11 +126,12 @@ impl SystemSim {
         }
     }
 
-    /// Transfer seconds for one file: only non-duplicate bytes cross the
-    /// network.
+    /// Transfer seconds for one file: only non-duplicate bytes cross
+    /// the network, once per replica copy (the client NIC pays for
+    /// replication, as in the real `FileWriter`).
     pub fn net_secs(&self, cfg: &WriteConfig, size: usize) -> f64 {
         let new_bytes = size as f64 * (1.0 - cfg.similarity);
-        new_bytes / self.net_bps
+        new_bytes * cfg.replication.max(1) as f64 / self.net_bps
     }
 
     /// Seconds to write one file of `size` bytes.
@@ -242,7 +246,20 @@ mod tests {
             cdc,
             write_buffer: 4 << 20,
             similarity,
+            replication: 1,
         }
+    }
+
+    #[test]
+    fn replication_scales_transfer_time() {
+        let s = SystemSim::default();
+        let c1 = cfg(EngineModel::None, false, 0.0);
+        let c2 = WriteConfig { replication: 2, ..c1 };
+        assert!((s.net_secs(&c2, MB64) - 2.0 * s.net_secs(&c1, MB64)).abs() < 1e-12);
+        // Fully deduplicated writes transfer nothing regardless of r.
+        let d2 = WriteConfig { similarity: 1.0, ..c2 };
+        assert_eq!(s.net_secs(&d2, MB64), 0.0);
+        assert!(s.write_secs(&c2, MB64, 64) > s.write_secs(&c1, MB64, 64));
     }
 
     fn blocks_for(size: usize) -> usize {

@@ -1,16 +1,22 @@
 //! Single-process cluster bring-up: manager + N storage nodes on
 //! loopback TCP, with an optional shared client-NIC shaper — the paper's
 //! 22-node/1 Gbps testbed in one process.
+//!
+//! Control-plane v2: nodes register with the manager at spawn (join +
+//! heartbeat), the manager owns placement via a
+//! [`PlacementPolicy`](super::manager::PlacementPolicy) derived from
+//! [`ClusterConfig::replication`], and clients bootstrap from the
+//! manager address alone.
 
 use std::sync::Arc;
 
-use super::manager::Manager;
+use super::manager::{policy_for, Manager};
 use super::node::StorageNode;
 use super::sai::Sai;
 use crate::config::{ClientConfig, ClusterConfig};
 use crate::hashgpu::HashEngine;
 use crate::net::Shaper;
-use crate::Result;
+use crate::{Error, Result};
 
 /// A running cluster.
 pub struct Cluster {
@@ -20,11 +26,22 @@ pub struct Cluster {
 }
 
 impl Cluster {
-    /// Spawn a manager and `cfg.nodes` storage nodes on ephemeral ports.
+    /// Spawn a manager and `cfg.nodes` storage nodes on ephemeral
+    /// ports.  The nodes join the manager's registry; the manager
+    /// places blocks with `cfg.replication` copies each.
     pub fn spawn(cfg: ClusterConfig) -> Result<Cluster> {
-        let manager = Manager::spawn("127.0.0.1:0")?;
+        if cfg.replication == 0 {
+            return Err(Error::Config("replication must be >= 1".into()));
+        }
+        if cfg.replication > cfg.nodes {
+            return Err(Error::Config(format!(
+                "replication {} exceeds node count {}",
+                cfg.replication, cfg.nodes
+            )));
+        }
+        let manager = Manager::spawn_with_policy("127.0.0.1:0", policy_for(cfg.replication))?;
         let nodes = (0..cfg.nodes)
-            .map(|_| StorageNode::spawn("127.0.0.1:0"))
+            .map(|_| StorageNode::spawn_full("127.0.0.1:0", None, Some(manager.addr())))
             .collect::<Result<Vec<_>>>()?;
         Ok(Cluster {
             manager,
@@ -33,12 +50,17 @@ impl Cluster {
         })
     }
 
-    /// Manager address.
+    /// Manager address (the client bootstrap address).
     pub fn manager_addr(&self) -> &str {
         self.manager.addr()
     }
 
-    /// Node addresses.
+    /// The manager itself (registry/refcount introspection in tests).
+    pub fn manager(&self) -> &Manager {
+        &self.manager
+    }
+
+    /// Node addresses, by node id.
     pub fn node_addrs(&self) -> Vec<String> {
         self.nodes.iter().map(|n| n.addr().to_string()).collect()
     }
@@ -51,36 +73,41 @@ impl Cluster {
             .then(|| Arc::new(Shaper::from_bits_per_sec(self.cfg.link_bps)))
     }
 
-    /// Connect a SAI client with the given config and engine.
+    /// Connect a SAI client with the given config and engine (nodes are
+    /// discovered through the manager).
     pub fn client(&self, cfg: ClientConfig, engine: Arc<dyn HashEngine>) -> Result<Sai> {
-        Sai::connect(
-            self.manager_addr(),
-            &self.node_addrs(),
-            cfg,
-            engine,
-            self.client_shaper(),
-        )
+        Sai::connect(self.manager_addr(), cfg, engine, self.client_shaper())
     }
 
     /// Kill one storage node (failure injection for tests): stops its
-    /// accept loop and severs existing connections.
+    /// accept loop, its heartbeats, and severs existing connections.
     pub fn kill_node(&mut self, idx: usize) {
         if idx < self.nodes.len() {
             self.nodes[idx].shutdown();
         }
     }
 
-    /// Total (blocks, bytes) across storage nodes.
+    /// Total (blocks, bytes) across storage nodes, counting each
+    /// replica copy.
     pub fn storage_stats(&self) -> (u64, u64) {
-        use super::proto::Msg;
         let mut blocks = 0;
         let mut bytes = 0;
-        for n in &self.nodes {
-            if let Msg::Stats { blocks: b, bytes: by } = n.state().handle(Msg::NodeStats) {
-                blocks += b;
-                bytes += by;
-            }
+        for (b, by) in self.per_node_stats() {
+            blocks += b;
+            bytes += by;
         }
         (blocks, bytes)
+    }
+
+    /// Per-node (blocks, bytes), by node id.
+    pub fn per_node_stats(&self) -> Vec<(u64, u64)> {
+        use super::proto::Msg;
+        self.nodes
+            .iter()
+            .map(|n| match n.state().handle(Msg::NodeStats) {
+                Msg::Stats { blocks, bytes } => (blocks, bytes),
+                _ => (0, 0),
+            })
+            .collect()
     }
 }

@@ -1,16 +1,116 @@
-//! The centralized metadata manager (paper §3.2.1): keeps a block-map
-//! per file — the ordered list of (hash, len, node) entries — and the
-//! file's version.  Thread-per-connection over the shared protocol.
+//! The centralized metadata manager (paper §3.2.1), control-plane v2:
+//! besides per-file block-maps and versions it now owns *placement* —
+//! clients ask where blocks go ([`Msg::AllocPlacement`]) and a pluggable
+//! [`PlacementPolicy`] answers with an n-way replica set — plus a node
+//! registry fed by [`Msg::NodeJoin`]/[`Msg::Heartbeat`], per-block
+//! reference counting across file versions, and commit-time garbage
+//! collection: blocks orphaned by a version overwrite are deleted from
+//! their owning nodes.  Thread-per-connection over the shared protocol.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::io::{BufReader, BufWriter};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
-use super::proto::{BlockMeta, Msg};
+use super::proto::{Assignment, BlockMeta, BlockSpec, Msg, NodeEntry, MAX_REPLICAS};
+use crate::hash::Digest;
 use crate::net::{Conn, Listener};
 use crate::Result;
+
+/// How a placement policy chooses nodes for a new block.
+///
+/// Policies are deliberately tiny state machines: the manager hands them
+/// the current *alive* node ids (sorted) and they answer with a replica
+/// set, one call per fresh block, in request order.  This is the plug
+/// point CrystalGPU used for GPU task scheduling and GNStor for
+/// recovery placement — new policies (locality-, load- or
+/// capacity-aware) implement this trait and slot into
+/// [`Manager::spawn_with_policy`].
+pub trait PlacementPolicy: Send + std::fmt::Debug {
+    /// Human-readable policy name (surfaced in logs/CLI).
+    fn name(&self) -> &'static str;
+    /// Target replication factor (what the policy aims for when enough
+    /// nodes are alive).
+    fn replication(&self) -> usize;
+    /// Choose the replica set for one new block.  `alive` is non-empty
+    /// and sorted by node id.
+    fn place(&mut self, alive: &[u32]) -> Vec<u32>;
+}
+
+/// Today's behaviour as a policy: blocks round-robin across the alive
+/// nodes, one copy each (replication = 1).
+#[derive(Debug, Default)]
+pub struct RoundRobinStripe {
+    next: usize,
+}
+
+impl PlacementPolicy for RoundRobinStripe {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn replication(&self) -> usize {
+        1
+    }
+
+    fn place(&mut self, alive: &[u32]) -> Vec<u32> {
+        let id = alive[self.next % alive.len()];
+        self.next = self.next.wrapping_add(1);
+        vec![id]
+    }
+}
+
+/// n-way replication over a rotating stripe: block `i` goes to `r`
+/// consecutive alive nodes starting at the rotating cursor, so both the
+/// primaries and the replica sets spread evenly.
+#[derive(Debug)]
+pub struct ReplicatedStripe {
+    /// Target copies per block (clamped to the alive node count).
+    pub replicas: usize,
+    next: usize,
+}
+
+impl ReplicatedStripe {
+    /// Policy with a target replication factor (clamped to
+    /// `1..=MAX_REPLICAS`, the wire format's bound).
+    pub fn new(replicas: usize) -> Self {
+        ReplicatedStripe {
+            replicas: replicas.clamp(1, MAX_REPLICAS),
+            next: 0,
+        }
+    }
+}
+
+impl PlacementPolicy for ReplicatedStripe {
+    fn name(&self) -> &'static str {
+        "replicated-stripe"
+    }
+
+    fn replication(&self) -> usize {
+        self.replicas
+    }
+
+    fn place(&mut self, alive: &[u32]) -> Vec<u32> {
+        let r = self.replicas.min(alive.len()).max(1);
+        let start = self.next;
+        self.next = self.next.wrapping_add(1);
+        (0..r).map(|k| alive[(start + k) % alive.len()]).collect()
+    }
+}
+
+/// The policy implied by a replication factor: classic single-copy
+/// round-robin striping for `r == 1`, n-way [`ReplicatedStripe`]
+/// otherwise.  Single source of truth for every entry point (in-process
+/// clusters, the manager CLI).
+pub fn policy_for(replication: usize) -> Box<dyn PlacementPolicy> {
+    if replication > 1 {
+        Box::new(ReplicatedStripe::new(replication))
+    } else {
+        Box::new(RoundRobinStripe::default())
+    }
+}
 
 #[derive(Debug, Default)]
 struct FileEntry {
@@ -18,46 +118,452 @@ struct FileEntry {
     blocks: Vec<BlockMeta>,
 }
 
-/// Manager state shared across connection threads.
-#[derive(Debug, Default)]
-pub struct ManagerState {
-    files: Mutex<HashMap<String, FileEntry>>,
+/// Global (cross-file, cross-version) bookkeeping for one stored block.
+#[derive(Debug)]
+struct BlockInfo {
+    /// Where the block lives (decided once, at first allocation).
+    replicas: Vec<u32>,
+    /// Payload length (for stats / future rebalancing).
+    len: u32,
+    /// Occurrences in committed block-maps.
+    refs: u64,
+    /// Provisional claims: allocated by a writer that has not committed
+    /// or released yet.  Blocks with `refs == 0 && pending == 0` are
+    /// garbage and get deleted from their nodes.
+    pending: u64,
+    /// While `refs == 0`, the claim tag of the session that first
+    /// allocated the block (clients send a unique per-session token as
+    /// `AllocPlacement.file`).  Dedup against a merely-pending block is
+    /// only safe for that same session (a commit proves the bytes
+    /// landed, a pending claim does not); everyone else transfers too.
+    placed_by: String,
 }
 
+#[derive(Debug)]
+struct NodeSlot {
+    addr: String,
+    last_beat: Instant,
+}
+
+#[derive(Debug)]
+struct Inner {
+    files: HashMap<String, FileEntry>,
+    blocks: HashMap<Digest, BlockInfo>,
+    nodes: Vec<NodeSlot>,
+    policy: Box<dyn PlacementPolicy>,
+}
+
+/// Manager state shared across connection threads.
+#[derive(Debug)]
+pub struct ManagerState {
+    inner: Mutex<Inner>,
+    /// A node is considered alive if it joined or heartbeated within
+    /// this window.
+    heartbeat_timeout: Duration,
+    /// Hashes whose on-node copies are being deleted by an in-flight GC
+    /// batch.  Allocations of these hashes wait until the deletes have
+    /// landed, so a stale `DeleteBlock` can never destroy a copy a
+    /// client re-uploaded after re-allocating the hash.
+    gc_inflight: Mutex<HashSet<Digest>>,
+    gc_done: Condvar,
+}
+
+impl Default for ManagerState {
+    fn default() -> Self {
+        ManagerState::new(Box::new(RoundRobinStripe::default()))
+    }
+}
+
+/// Default liveness window: generous relative to the nodes' ~250 ms
+/// heartbeat interval, so a few dropped beats don't flap placement.
+const HEARTBEAT_TIMEOUT: Duration = Duration::from_secs(3);
+
+/// Upper bound on how long an allocation waits for an in-flight GC
+/// batch covering one of its hashes (best effort beyond that).
+const GC_WAIT: Duration = Duration::from_secs(2);
+
 impl ManagerState {
+    /// State with an explicit placement policy.
+    pub fn new(policy: Box<dyn PlacementPolicy>) -> ManagerState {
+        ManagerState {
+            inner: Mutex::new(Inner {
+                files: HashMap::new(),
+                blocks: HashMap::new(),
+                nodes: Vec::new(),
+                policy,
+            }),
+            heartbeat_timeout: HEARTBEAT_TIMEOUT,
+            gc_inflight: Mutex::new(HashSet::new()),
+            gc_done: Condvar::new(),
+        }
+    }
+
     /// Handle one request message.
     pub fn handle(&self, msg: Msg) -> Msg {
-        match msg {
-            Msg::GetBlockMap { file } => {
-                let files = self.files.lock().unwrap();
-                match files.get(&file) {
-                    Some(e) => Msg::BlockMap {
-                        version: e.version,
-                        blocks: e.blocks.clone(),
-                    },
-                    None => Msg::BlockMap {
-                        version: 0,
-                        blocks: Vec::new(),
-                    },
+        // GC work (network deletes) is collected under the lock and
+        // executed after it is released — synchronously, on purpose:
+        // the reply to a commit/release is only written once the
+        // orphaned blocks are really gone, which keeps reclamation
+        // observable (and testable) at the client.  Unreachable nodes
+        // are skipped fast on loopback; a slow real-network connect
+        // only delays this one caller.
+        let (reply, gc) = self.handle_inner(msg);
+        if let Some((freed, addrs)) = gc {
+            gc_delete(&freed, &addrs);
+            let mut inflight = self.gc_inflight.lock().unwrap();
+            for (h, _) in &freed {
+                inflight.remove(h);
+            }
+            drop(inflight);
+            self.gc_done.notify_all();
+        }
+        reply
+    }
+
+    /// Block until no in-flight GC batch covers any of `specs` (bounded
+    /// by [`GC_WAIT`]).  Touches only `gc_inflight` + the condvar —
+    /// never the state lock — so other manager operations proceed while
+    /// an allocation waits.
+    fn await_gc(&self, specs: &[BlockSpec]) {
+        let mut inflight = self.gc_inflight.lock().unwrap();
+        let deadline = Instant::now() + GC_WAIT;
+        while specs.iter().any(|s| inflight.contains(&s.hash)) {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                break;
+            }
+            let (g, _) = self.gc_done.wait_timeout(inflight, left).unwrap();
+            inflight = g;
+        }
+    }
+
+    /// True if any of `specs` is covered by an in-flight GC batch.
+    fn gc_covers(&self, specs: &[BlockSpec]) -> bool {
+        let inflight = self.gc_inflight.lock().unwrap();
+        specs.iter().any(|s| inflight.contains(&s.hash))
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn handle_inner(&self, msg: Msg) -> (Msg, Option<(Vec<(Digest, Vec<u32>)>, Vec<String>)>) {
+        // Allocations wait out GC batches covering their hashes BEFORE
+        // taking the state lock (so the wait stalls only this caller),
+        // then re-check under the lock: a sweep that started in between
+        // sends us back to waiting.  Bounded attempts — after that,
+        // proceed best-effort (same exposure as not waiting at all).
+        let msg = match msg {
+            Msg::AllocPlacement { file, blocks } => {
+                for attempt in 0..3 {
+                    if attempt > 0 || self.gc_covers(&blocks) {
+                        self.await_gc(&blocks);
+                    }
+                    let mut guard = self.inner.lock().unwrap();
+                    if self.gc_covers(&blocks) && attempt < 2 {
+                        continue; // sweep raced us; wait again unlocked
+                    }
+                    let g = &mut *guard;
+                    let reply = match alloc(g, &file, &blocks, self.heartbeat_timeout) {
+                        Ok(assignments) => Msg::Placement { assignments },
+                        Err(e) => Msg::Err(e),
+                    };
+                    return (reply, None);
+                }
+                unreachable!("alloc loop always returns by attempt 2");
+            }
+            other => other,
+        };
+        let mut guard = self.inner.lock().unwrap();
+        // Reborrow as a plain `&mut Inner` so field borrows split.
+        let g = &mut *guard;
+        let reply = match msg {
+            Msg::GetBlockMap { file } => match g.files.get(&file) {
+                Some(e) => Msg::BlockMap {
+                    version: e.version,
+                    blocks: e.blocks.clone(),
+                },
+                None => Msg::BlockMap {
+                    version: 0,
+                    blocks: Vec::new(),
+                },
+            },
+            Msg::CommitBlockMap { file, blocks } => {
+                // Satellite: validate node ids against the registry
+                // before accepting, so readers never chase a block to a
+                // node that does not exist.
+                if let Some(err) = validate_blocks(&blocks, g.nodes.len()) {
+                    return (Msg::Err(err), None);
+                }
+                for m in &blocks {
+                    let e = g.blocks.entry(m.hash).or_insert_with(|| BlockInfo {
+                        replicas: m.replicas.clone(),
+                        len: m.len,
+                        refs: 0,
+                        pending: 0,
+                        placed_by: String::new(),
+                    });
+                    e.refs += 1;
+                    e.pending = e.pending.saturating_sub(1);
+                }
+                let f = g.files.entry(file).or_default();
+                f.version += 1;
+                let old = std::mem::replace(&mut f.blocks, blocks);
+                for m in &old {
+                    if let Some(e) = g.blocks.get_mut(&m.hash) {
+                        e.refs = e.refs.saturating_sub(1);
+                    }
+                }
+                // Only the old map's hashes can have newly reached zero
+                // references (the new map's all got refs += 1).
+                // KNOWN LIMITATION (ROADMAP): readers still streaming
+                // the overwritten version race this reclamation; read
+                // leases / version pinning are future work.
+                let candidates: Vec<Digest> = old.iter().map(|m| m.hash).collect();
+                let gc = self.sweep_and_mark(g, &candidates);
+                return (Msg::Ok, gc);
+            }
+            // AllocPlacement is handled above (it interleaves with the
+            // GC-in-flight barrier before taking the state lock).
+            Msg::AllocPlacement { .. } => unreachable!("handled before the lock"),
+            Msg::ReleaseBlocks { hashes } => {
+                for h in &hashes {
+                    if let Some(e) = g.blocks.get_mut(h) {
+                        e.pending = e.pending.saturating_sub(1);
+                    }
+                }
+                let gc = self.sweep_and_mark(g, &hashes);
+                return (Msg::Ok, gc);
+            }
+            Msg::NodeJoin { addr } => {
+                let now = Instant::now();
+                match g.nodes.iter().position(|n| n.addr == addr) {
+                    Some(id) => {
+                        g.nodes[id].last_beat = now;
+                        Msg::NodeId { id: id as u32 }
+                    }
+                    None => {
+                        g.nodes.push(NodeSlot {
+                            addr,
+                            last_beat: now,
+                        });
+                        Msg::NodeId {
+                            id: (g.nodes.len() - 1) as u32,
+                        }
+                    }
                 }
             }
-            Msg::CommitBlockMap { file, blocks } => {
-                let mut files = self.files.lock().unwrap();
-                let e = files.entry(file).or_default();
-                e.version += 1;
-                e.blocks = blocks;
-                Msg::Ok
+            Msg::Heartbeat { node } => match g.nodes.get_mut(node as usize) {
+                Some(n) => {
+                    n.last_beat = Instant::now();
+                    Msg::Ok
+                }
+                None => Msg::Err(format!("heartbeat from unregistered node {node}")),
+            },
+            Msg::NodeList => {
+                let timeout = self.heartbeat_timeout;
+                Msg::Nodes {
+                    nodes: g
+                        .nodes
+                        .iter()
+                        .enumerate()
+                        .map(|(id, n)| NodeEntry {
+                            id: id as u32,
+                            addr: n.addr.clone(),
+                            alive: n.last_beat.elapsed() < timeout,
+                        })
+                        .collect(),
+                }
             }
             Msg::ListFiles => {
-                let files = self.files.lock().unwrap();
-                let mut list: Vec<(String, u64)> = files
-                    .iter()
-                    .map(|(k, v)| (k.clone(), v.version))
-                    .collect();
+                let mut list: Vec<(String, u64)> =
+                    g.files.iter().map(|(k, v)| (k.clone(), v.version)).collect();
                 list.sort();
                 Msg::Files { files: list }
             }
             other => Msg::Err(format!("manager: unexpected message {other:?}")),
+        };
+        (reply, None)
+    }
+
+    /// (blocks, bytes) the manager believes are live (committed or
+    /// pending) across the cluster, counting each replica copy.
+    pub fn block_stats(&self) -> (u64, u64) {
+        let g = self.inner.lock().unwrap();
+        let mut blocks = 0u64;
+        let mut bytes = 0u64;
+        for b in g.blocks.values() {
+            let copies = b.replicas.len() as u64;
+            blocks += copies;
+            bytes += copies * b.len as u64;
+        }
+        (blocks, bytes)
+    }
+}
+
+fn validate_blocks(blocks: &[BlockMeta], registered: usize) -> Option<String> {
+    for (i, m) in blocks.iter().enumerate() {
+        if m.replicas.is_empty() {
+            return Some(format!("block {i}: empty replica set"));
+        }
+        for &r in &m.replicas {
+            if r as usize >= registered {
+                return Some(format!(
+                    "block {i}: replica node {r} is not registered ({registered} nodes known)"
+                ));
+            }
+        }
+    }
+    None
+}
+
+fn alloc(
+    g: &mut Inner,
+    file: &str,
+    specs: &[BlockSpec],
+    timeout: Duration,
+) -> std::result::Result<Vec<Assignment>, String> {
+    let alive: Vec<u32> = g
+        .nodes
+        .iter()
+        .enumerate()
+        .filter(|(_, n)| n.last_beat.elapsed() < timeout)
+        .map(|(id, _)| id as u32)
+        .collect();
+    if alive.is_empty() {
+        return Err(if g.nodes.is_empty() {
+            "no storage nodes registered".into()
+        } else {
+            "no storage nodes alive".into()
+        });
+    }
+    let mut out = Vec::with_capacity(specs.len());
+    for s in specs {
+        match g.blocks.get_mut(&s.hash) {
+            // Committed somewhere (a commit proves the transfer
+            // completed), or claimed by this same session (which is the
+            // one doing the transfer): safe to dedup — PROVIDED at
+            // least one replica is still alive.  A known block whose
+            // replicas all died is re-homed and re-transferred (the
+            // writer has the bytes in hand; dedup against dead nodes
+            // would commit an unreadable file).
+            Some(e) if e.refs > 0 || e.placed_by == file => {
+                e.pending += 1;
+                if e.replicas.iter().any(|r| alive.contains(r)) {
+                    out.push(Assignment {
+                        replicas: e.replicas.clone(),
+                        fresh: false,
+                    });
+                } else {
+                    e.replicas = g.policy.place(&alive);
+                    out.push(Assignment {
+                        replicas: e.replicas.clone(),
+                        fresh: true,
+                    });
+                }
+            }
+            // Known only as ANOTHER session's uncommitted claim: that
+            // transfer may still fail or be abandoned, so this writer
+            // must transfer too (puts are idempotent by key) — same
+            // homes (re-homed if all dead), but fresh from the caller's
+            // point of view.
+            Some(e) => {
+                e.pending += 1;
+                if !e.replicas.iter().any(|r| alive.contains(r)) {
+                    e.replicas = g.policy.place(&alive);
+                }
+                out.push(Assignment {
+                    replicas: e.replicas.clone(),
+                    fresh: true,
+                });
+            }
+            None => {
+                let replicas = g.policy.place(&alive);
+                debug_assert!(!replicas.is_empty());
+                g.blocks.insert(
+                    s.hash,
+                    BlockInfo {
+                        replicas: replicas.clone(),
+                        len: s.len,
+                        refs: 0,
+                        pending: 1,
+                        placed_by: file.to_string(),
+                    },
+                );
+                out.push(Assignment {
+                    replicas,
+                    fresh: true,
+                });
+            }
+        }
+    }
+    Ok(out)
+}
+
+impl ManagerState {
+    /// Collect garbage among `candidates` (the hashes whose counters
+    /// this operation decremented — anything else cannot have newly
+    /// reached zero): drop every candidate with no committed references
+    /// and no pending claims, mark the freed hashes as GC-in-flight
+    /// (while still holding the state lock, so allocations of these
+    /// hashes wait — see [`ManagerState::await_gc`]), and return what
+    /// must be deleted from which nodes (executed outside the lock).
+    #[allow(clippy::type_complexity)]
+    fn sweep_and_mark(
+        &self,
+        g: &mut Inner,
+        candidates: &[Digest],
+    ) -> Option<(Vec<(Digest, Vec<u32>)>, Vec<String>)> {
+        let mut freed: Vec<(Digest, Vec<u32>)> = Vec::new();
+        for h in candidates {
+            // Duplicate candidates are harmless: once removed, the
+            // second lookup misses.
+            if let Some(b) = g.blocks.get(h) {
+                if b.refs == 0 && b.pending == 0 {
+                    freed.push((*h, b.replicas.clone()));
+                    g.blocks.remove(h);
+                }
+            }
+        }
+        if freed.is_empty() {
+            return None;
+        }
+        let mut inflight = self.gc_inflight.lock().unwrap();
+        for (h, _) in &freed {
+            inflight.insert(*h);
+        }
+        drop(inflight);
+        let addrs = g.nodes.iter().map(|n| n.addr.clone()).collect();
+        Some((freed, addrs))
+    }
+}
+
+/// Best-effort deletion of freed blocks on their owning nodes.  Dead or
+/// unreachable nodes are skipped — the block is already unreferenced,
+/// so a leaked copy only costs space until the node rejoins or dies.
+fn gc_delete(freed: &[(Digest, Vec<u32>)], addrs: &[String]) {
+    let mut per_node: HashMap<u32, Vec<Digest>> = HashMap::new();
+    for (hash, replicas) in freed {
+        for r in replicas {
+            per_node.entry(*r).or_default().push(*hash);
+        }
+    }
+    for (node, hashes) in per_node {
+        let Some(addr) = addrs.get(node as usize) else {
+            continue;
+        };
+        // Bounded connect: a black-holed node must not stall the
+        // committing client for the OS SYN timeout.
+        let Ok(conn) = Conn::connect_timeout(addr, Duration::from_secs(1)) else {
+            continue;
+        };
+        let Ok(rc) = conn.try_clone() else { continue };
+        let mut r = BufReader::new(rc);
+        let mut w = BufWriter::new(conn);
+        for hash in hashes {
+            if Msg::DeleteBlock { hash }.write_to(&mut w).is_err() {
+                break;
+            }
+            if Msg::read_from(&mut r).is_err() {
+                break;
+            }
         }
     }
 }
@@ -71,11 +577,17 @@ pub struct Manager {
 }
 
 impl Manager {
-    /// Bind and serve on `addr` ("127.0.0.1:0" for ephemeral).
+    /// Bind and serve on `addr` ("127.0.0.1:0" for ephemeral) with the
+    /// default single-copy round-robin policy.
     pub fn spawn(addr: &str) -> Result<Manager> {
+        Manager::spawn_with_policy(addr, Box::new(RoundRobinStripe::default()))
+    }
+
+    /// Bind and serve with an explicit placement policy.
+    pub fn spawn_with_policy(addr: &str, policy: Box<dyn PlacementPolicy>) -> Result<Manager> {
         let listener = Listener::bind(addr)?;
         let addr = listener.local_addr()?;
-        let state = Arc::new(ManagerState::default());
+        let state = Arc::new(ManagerState::new(policy));
         let stop = Arc::new(AtomicBool::new(false));
         let (st, sp) = (state.clone(), stop.clone());
         let accept_thread = std::thread::Builder::new()
@@ -102,8 +614,14 @@ impl Manager {
 
     /// Stop accepting (existing connections finish their current call).
     pub fn shutdown(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        // Poke the accept loop.
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return; // already shut down
+        }
+        // Dedicated poke path: connect-and-close guarantees the blocked
+        // `accept()` returns at least once after the stop flag is set.
+        // The accept loop serves that last connection regardless (a
+        // real client racing shutdown gets its call answered; the poke
+        // itself sends nothing and its serve thread exits on EOF).
         let _ = Conn::connect(&self.addr);
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
@@ -123,13 +641,19 @@ fn accept_loop(listener: Listener, state: Arc<ManagerState>, stop: Arc<AtomicBoo
             Ok(c) => c,
             Err(_) => break,
         };
-        if stop.load(Ordering::Relaxed) {
-            break;
-        }
+        // Race fix: the stop flag is checked before DROPPING the
+        // connection, not before serving it — a real client that
+        // connected concurrently with shutdown is still served (its
+        // serve thread runs to completion), and the shutdown poke's
+        // connection reads clean EOF and exits immediately.
+        let stopping = stop.load(Ordering::SeqCst);
         let st = state.clone();
         let _ = std::thread::Builder::new()
             .name("mosa-manager-conn".into())
             .spawn(move || serve_conn(conn, st));
+        if stopping {
+            break;
+        }
     }
 }
 
@@ -156,13 +680,26 @@ mod tests {
         BlockMeta {
             hash: [i; 16],
             len: 100,
-            node: 0,
+            replicas: vec![0],
+        }
+    }
+
+    /// Register `n` fake nodes directly against the state.  The
+    /// addresses point at closed loopback ports so GC deletes fail
+    /// *immediately* (connection refused) instead of hanging.
+    fn join_nodes(s: &ManagerState, n: usize) {
+        for i in 0..n {
+            let r = s.handle(Msg::NodeJoin {
+                addr: format!("127.0.0.1:{}", i + 1),
+            });
+            assert_eq!(r, Msg::NodeId { id: i as u32 });
         }
     }
 
     #[test]
     fn state_commit_and_get() {
         let s = ManagerState::default();
+        join_nodes(&s, 1);
         let r = s.handle(Msg::GetBlockMap { file: "f".into() });
         assert_eq!(
             r,
@@ -188,6 +725,7 @@ mod tests {
     #[test]
     fn state_versions_increment() {
         let s = ManagerState::default();
+        join_nodes(&s, 1);
         for i in 1..=3 {
             s.handle(Msg::CommitBlockMap {
                 file: "f".into(),
@@ -204,6 +742,7 @@ mod tests {
     #[test]
     fn state_list_files_sorted() {
         let s = ManagerState::default();
+        join_nodes(&s, 1);
         for f in ["b", "a"] {
             s.handle(Msg::CommitBlockMap {
                 file: f.into(),
@@ -223,9 +762,200 @@ mod tests {
     }
 
     #[test]
+    fn commit_rejects_unregistered_node() {
+        let s = ManagerState::default();
+        join_nodes(&s, 2);
+        let bad = BlockMeta {
+            hash: [1; 16],
+            len: 10,
+            replicas: vec![0, 7], // node 7 does not exist
+        };
+        assert!(matches!(
+            s.handle(Msg::CommitBlockMap {
+                file: "f".into(),
+                blocks: vec![bad],
+            }),
+            Msg::Err(_)
+        ));
+        // And an empty replica set is rejected too.
+        let empty = BlockMeta {
+            hash: [2; 16],
+            len: 10,
+            replicas: vec![],
+        };
+        assert!(matches!(
+            s.handle(Msg::CommitBlockMap {
+                file: "f".into(),
+                blocks: vec![empty],
+            }),
+            Msg::Err(_)
+        ));
+    }
+
+    #[test]
+    fn alloc_requires_registered_nodes() {
+        let s = ManagerState::default();
+        let r = s.handle(Msg::AllocPlacement {
+            file: "f".into(),
+            blocks: vec![BlockSpec { hash: [1; 16], len: 5 }],
+        });
+        assert!(matches!(r, Msg::Err(_)));
+    }
+
+    #[test]
+    fn alloc_round_robins_and_dedups() {
+        let s = ManagerState::default();
+        join_nodes(&s, 3);
+        let specs: Vec<BlockSpec> = (0..4u8)
+            .map(|i| BlockSpec {
+                hash: [i; 16],
+                len: 10,
+            })
+            .collect();
+        let Msg::Placement { assignments } = s.handle(Msg::AllocPlacement {
+            file: "f".into(),
+            blocks: specs.clone(),
+        }) else {
+            panic!()
+        };
+        assert_eq!(assignments.len(), 4);
+        assert!(assignments.iter().all(|a| a.fresh));
+        let picked: Vec<u32> = assignments.iter().map(|a| a.replicas[0]).collect();
+        assert_eq!(picked, vec![0, 1, 2, 0], "round-robin over 3 nodes");
+
+        // The same session (file) re-allocating its own pending blocks
+        // dedups: it is the one doing the transfer.
+        let Msg::Placement { assignments: same } = s.handle(Msg::AllocPlacement {
+            file: "f".into(),
+            blocks: specs.clone(),
+        }) else {
+            panic!()
+        };
+        assert!(same.iter().all(|a| !a.fresh));
+
+        // ANOTHER session must not dedup against a merely-pending claim
+        // (the first transfer may never complete): same homes, but it
+        // is told to transfer too.
+        let Msg::Placement { assignments: other } = s.handle(Msg::AllocPlacement {
+            file: "g".into(),
+            blocks: specs.clone(),
+        }) else {
+            panic!()
+        };
+        assert!(other.iter().all(|a| a.fresh));
+        assert_eq!(
+            other.iter().map(|a| a.replicas[0]).collect::<Vec<_>>(),
+            picked,
+            "pending blocks keep their assigned homes"
+        );
+
+        // Once committed, any session dedups against it.
+        let metas: Vec<BlockMeta> = (0..4u8)
+            .map(|i| BlockMeta {
+                hash: [i; 16],
+                len: 10,
+                replicas: vec![picked[i as usize]],
+            })
+            .collect();
+        s.handle(Msg::CommitBlockMap {
+            file: "f".into(),
+            blocks: metas,
+        });
+        let Msg::Placement { assignments: after } = s.handle(Msg::AllocPlacement {
+            file: "h".into(),
+            blocks: specs,
+        }) else {
+            panic!()
+        };
+        assert!(after.iter().all(|a| !a.fresh), "committed blocks dedup globally");
+    }
+
+    #[test]
+    fn replicated_stripe_places_distinct_copies() {
+        let mut p = ReplicatedStripe::new(2);
+        let alive = vec![0u32, 1, 2, 3];
+        for _ in 0..8 {
+            let set = p.place(&alive);
+            assert_eq!(set.len(), 2);
+            assert_ne!(set[0], set[1]);
+        }
+        // Replication clamps to the alive count.
+        let mut p = ReplicatedStripe::new(5);
+        let set = p.place(&[7, 9]);
+        assert_eq!(set.len(), 2);
+    }
+
+    #[test]
+    fn refcount_overwrite_frees_old_blocks() {
+        let s = ManagerState::default();
+        join_nodes(&s, 1);
+        // v1 references block 1; v2 references block 2 only.
+        s.handle(Msg::CommitBlockMap {
+            file: "f".into(),
+            blocks: vec![meta(1)],
+        });
+        assert_eq!(s.block_stats().0, 1);
+        s.handle(Msg::CommitBlockMap {
+            file: "f".into(),
+            blocks: vec![meta(2)],
+        });
+        // Block 1 had refs 0 after the overwrite -> swept.
+        assert_eq!(s.block_stats().0, 1);
+        // A block shared by two files survives one file's overwrite.
+        s.handle(Msg::CommitBlockMap {
+            file: "g".into(),
+            blocks: vec![meta(2)],
+        });
+        s.handle(Msg::CommitBlockMap {
+            file: "f".into(),
+            blocks: vec![],
+        });
+        assert_eq!(s.block_stats().0, 1, "g still references block 2");
+    }
+
+    #[test]
+    fn release_drops_pending_claims() {
+        let s = ManagerState::default();
+        join_nodes(&s, 1);
+        let spec = BlockSpec { hash: [9; 16], len: 7 };
+        s.handle(Msg::AllocPlacement {
+            file: "f".into(),
+            blocks: vec![spec],
+        });
+        assert_eq!(s.block_stats().0, 1, "pending claim keeps the block");
+        s.handle(Msg::ReleaseBlocks {
+            hashes: vec![[9; 16]],
+        });
+        assert_eq!(s.block_stats().0, 0, "released + unreferenced -> swept");
+    }
+
+    #[test]
+    fn node_join_is_idempotent_and_heartbeat_tracked() {
+        let s = ManagerState::default();
+        let r1 = s.handle(Msg::NodeJoin { addr: "a:1".into() });
+        let r2 = s.handle(Msg::NodeJoin { addr: "b:2".into() });
+        let r3 = s.handle(Msg::NodeJoin { addr: "a:1".into() });
+        assert_eq!(r1, Msg::NodeId { id: 0 });
+        assert_eq!(r2, Msg::NodeId { id: 1 });
+        assert_eq!(r3, Msg::NodeId { id: 0 }, "rejoin keeps the id");
+        assert_eq!(s.handle(Msg::Heartbeat { node: 1 }), Msg::Ok);
+        assert!(matches!(s.handle(Msg::Heartbeat { node: 9 }), Msg::Err(_)));
+        let Msg::Nodes { nodes } = s.handle(Msg::NodeList) else {
+            panic!()
+        };
+        assert_eq!(nodes.len(), 2);
+        assert!(nodes.iter().all(|n| n.alive));
+    }
+
+    #[test]
     fn tcp_serving_works() {
         let mgr = Manager::spawn("127.0.0.1:0").unwrap();
         let mut c = Conn::connect(mgr.addr()).unwrap();
+        Msg::NodeJoin { addr: "x:1".into() }.write_to(&mut c).unwrap();
+        assert_eq!(
+            Msg::read_from(&mut c).unwrap().unwrap(),
+            Msg::NodeId { id: 0 }
+        );
         Msg::CommitBlockMap {
             file: "x".into(),
             blocks: vec![meta(5)],
@@ -248,6 +978,7 @@ mod tests {
     #[test]
     fn multiple_clients() {
         let mgr = Manager::spawn("127.0.0.1:0").unwrap();
+        mgr.state().handle(Msg::NodeJoin { addr: "x:1".into() });
         let addr = mgr.addr().to_string();
         let threads: Vec<_> = (0..4)
             .map(|i| {
@@ -271,5 +1002,27 @@ mod tests {
             panic!()
         };
         assert_eq!(files.len(), 4);
+    }
+
+    #[test]
+    fn shutdown_still_serves_racing_client() {
+        // A client connecting concurrently with shutdown must get its
+        // in-flight call answered, not be silently dropped.
+        for _ in 0..8 {
+            let mut mgr = Manager::spawn("127.0.0.1:0").unwrap();
+            let addr = mgr.addr().to_string();
+            let client = std::thread::spawn(move || {
+                let mut c = Conn::connect(&addr)?;
+                Msg::ListFiles.write_to(&mut c)?;
+                Msg::read_from(&mut c)
+            });
+            mgr.shutdown();
+            match client.join().unwrap() {
+                // Served (possibly during shutdown) or cleanly refused;
+                // a hang would fail the test via the harness timeout.
+                Ok(Some(Msg::Files { .. })) | Ok(None) | Err(_) => {}
+                other => panic!("unexpected reply: {other:?}"),
+            }
+        }
     }
 }

@@ -1,17 +1,38 @@
 //! store — the MosaStore analog: an object-based, content-addressable
-//! distributed storage system (GoogleFS-like topology, paper §3.2.1).
+//! distributed storage system (GoogleFS-like topology, paper §3.2.1),
+//! running the v2 *manager-driven* control plane.
 //!
-//! * [`manager`] — centralized metadata manager: per-file block-maps
-//!   (with every block's hash), versioning, commit protocol.
-//! * [`node`] — storage nodes: hash-addressed block stores.
+//! Control-plane v2 in one paragraph: the metadata manager owns
+//! placement.  Storage nodes register with it on spawn
+//! ([`Msg::NodeJoin`]) and heartbeat it for liveness; clients bootstrap
+//! from the manager address alone, discover nodes via
+//! [`Msg::NodeList`], and — per hashed batch — request placements
+//! ([`Msg::AllocPlacement`]).  A pluggable
+//! [`PlacementPolicy`](manager::PlacementPolicy)
+//! ([`RoundRobinStripe`](manager::RoundRobinStripe) = classic 1-copy
+//! striping, [`ReplicatedStripe`](manager::ReplicatedStripe) = n-way
+//! replication) answers with a replica set per block and a freshness
+//! bit (global, manager-side dedup).  The manager refcounts every block
+//! across files and versions; a commit that overwrites a version
+//! releases the old map's references and garbage-collects unreferenced
+//! blocks from their owning nodes ([`Msg::DeleteBlock`]).  Readers fail
+//! over between replicas when a node is down or a copy fails its
+//! integrity check.
+//!
+//! * [`manager`] — metadata manager: block-maps, versions, node
+//!   registry (join/heartbeat), placement policies, per-block refcounts
+//!   and commit-time GC.
+//! * [`node`] — storage nodes: hash-addressed block stores that join
+//!   the manager and honor GC deletes.
 //! * [`sai`] — the client System Access Interface: write buffering,
 //!   chunking (fixed or content-based), hashing through a pluggable
-//!   [`crate::hashgpu::HashEngine`], similarity detection against the
-//!   previous version's block-map, and striped transfer to the nodes.
+//!   [`crate::hashgpu::HashEngine`], manager-side dedup + placement,
+//!   replicated transfer to the nodes.
 //! * [`session`] — streaming sessions over the SAI: [`FileWriter`]
-//!   (`std::io::Write`, pipelined chunk→hash→dedup→stripe, commit on
-//!   close) and [`FileReader`] (`std::io::Read`, prefetching +
-//!   integrity-verified block streaming).
+//!   (`std::io::Write`, pipelined chunk→hash→dedup→replicate, commit on
+//!   close, claims released on abandoned drop) and [`FileReader`]
+//!   (`std::io::Read`, prefetching + integrity-verified block streaming
+//!   with replica failover).
 //! * [`proto`] — the length-prefixed wire protocol shared by all three.
 //! * [`cluster`] — spawn a full single-process cluster (manager + nodes)
 //!   on loopback TCP for tests, benches and examples.
@@ -24,8 +45,8 @@ pub mod sai;
 pub mod session;
 
 pub use cluster::Cluster;
-pub use manager::Manager;
+pub use manager::{policy_for, Manager, PlacementPolicy, ReplicatedStripe, RoundRobinStripe};
 pub use node::StorageNode;
-pub use proto::{BlockMeta, Msg};
+pub use proto::{Assignment, BlockMeta, BlockSpec, Msg, NodeEntry};
 pub use sai::{Sai, WriteReport};
 pub use session::{FileReader, FileWriter};

@@ -1,18 +1,27 @@
 //! Storage node: a hash-addressed block store (paper §3.2.1).  Blocks
 //! are kept in memory by default (the paper's nodes are RAM-backed for
 //! the evaluated workloads) with an optional spill directory.
+//!
+//! Control-plane v2: a node registers with the metadata manager on
+//! spawn ([`Msg::NodeJoin`]), heartbeats it for liveness, and handles
+//! [`Msg::DeleteBlock`] so the manager can reclaim unreferenced blocks.
 
 use std::collections::HashMap;
 use std::io::{BufReader, BufWriter};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use super::proto::Msg;
 use crate::hash::Digest;
 use crate::net::{Conn, Listener};
 use crate::Result;
+
+/// How often a registered node beacons the manager.
+const HEARTBEAT_INTERVAL: Duration = Duration::from_millis(250);
 
 /// Node state shared across connection threads.
 #[derive(Debug, Default)]
@@ -56,6 +65,15 @@ impl NodeState {
                     },
                 }
             }
+            Msg::DeleteBlock { hash } => {
+                // Idempotent: deleting an unknown block is fine (the
+                // manager's GC may race an aborted writer's puts).
+                self.blocks.lock().unwrap().remove(&hash);
+                if let Some(p) = self.disk_path(&hash) {
+                    let _ = std::fs::remove_file(p);
+                }
+                Msg::Ok
+            }
             Msg::NodeStats => {
                 let b = self.blocks.lock().unwrap();
                 Msg::Stats {
@@ -76,16 +94,53 @@ pub struct StorageNode {
     accept_thread: Option<JoinHandle<()>>,
     /// Live connections (for failure injection: `shutdown` severs them).
     conns: Arc<Mutex<Vec<Conn>>>,
+    /// Manager-assigned id, when registered.
+    node_id: Option<u32>,
+    /// Stop channel + handle of the heartbeat thread, when registered.
+    heartbeat: Option<(Sender<()>, JoinHandle<()>)>,
 }
 
 impl StorageNode {
-    /// Bind and serve on `addr` with in-memory storage.
+    /// Bind and serve on `addr` with in-memory storage (no manager).
     pub fn spawn(addr: &str) -> Result<StorageNode> {
         Self::spawn_with(addr, None)
     }
 
-    /// Bind and serve, optionally spilling blocks to `disk_dir`.
+    /// Bind and serve, optionally spilling blocks to `disk_dir`
+    /// (no manager registration).
     pub fn spawn_with(addr: &str, disk_dir: Option<PathBuf>) -> Result<StorageNode> {
+        Self::spawn_full(addr, disk_dir, None)
+    }
+
+    /// Bind, serve, and — when `manager` is given — register with the
+    /// metadata manager (joining under this node's bound address) and
+    /// start heartbeating it.
+    pub fn spawn_full(
+        addr: &str,
+        disk_dir: Option<PathBuf>,
+        manager: Option<&str>,
+    ) -> Result<StorageNode> {
+        Self::spawn_inner(addr, disk_dir, manager, None)
+    }
+
+    /// Like [`spawn_full`](Self::spawn_full) with a manager, but join
+    /// under `advertise` (for nodes bound to wildcard addresses that
+    /// are reachable at a different host:port).
+    pub fn spawn_advertised(
+        addr: &str,
+        disk_dir: Option<PathBuf>,
+        manager: &str,
+        advertise: Option<&str>,
+    ) -> Result<StorageNode> {
+        Self::spawn_inner(addr, disk_dir, Some(manager), advertise)
+    }
+
+    fn spawn_inner(
+        addr: &str,
+        disk_dir: Option<PathBuf>,
+        manager: Option<&str>,
+        advertise: Option<&str>,
+    ) -> Result<StorageNode> {
         if let Some(d) = &disk_dir {
             std::fs::create_dir_all(d)?;
         }
@@ -102,18 +157,90 @@ impl StorageNode {
             .name("mosa-node".into())
             .spawn(move || accept_loop(listener, st, sp, cn))
             .map_err(crate::Error::Io)?;
-        Ok(StorageNode {
+        let mut node = StorageNode {
             addr,
             state,
             stop,
             accept_thread: Some(accept_thread),
             conns,
-        })
+            node_id: None,
+            heartbeat: None,
+        };
+        if let Some(mgr) = manager {
+            let join_as = advertise.unwrap_or(&node.addr).to_string();
+            node.register(mgr, join_as)?;
+        }
+        Ok(node)
+    }
+
+    /// Join the manager's registry (under `join_as`) and start the
+    /// heartbeat thread.
+    fn register(&mut self, manager_addr: &str, join_as: String) -> Result<()> {
+        let mut conn = Conn::connect(manager_addr)?;
+        Msg::NodeJoin {
+            addr: join_as.clone(),
+        }
+        .write_to(&mut conn)?;
+        let id = match Msg::read_from(&mut conn)?
+            .ok_or_else(|| crate::Error::Manager("manager closed during join".into()))?
+            .into_result()?
+        {
+            Msg::NodeId { id } => id,
+            m => {
+                return Err(crate::Error::Manager(format!(
+                    "unexpected join reply {m:?}"
+                )))
+            }
+        };
+        self.node_id = Some(id);
+        let mgr_addr = manager_addr.to_string();
+        let (tx, rx) = mpsc::channel::<()>();
+        let handle = std::thread::Builder::new()
+            .name(format!("mosa-node-hb-{id}"))
+            .spawn(move || {
+                // Reuse the join connection; on any failure — transport
+                // OR a logical Err reply (e.g. the manager restarted
+                // with an empty registry and no longer knows this id) —
+                // re-JOIN over a fresh connection, which re-registers
+                // the node and may hand back a new id.
+                let mut link = Some(conn);
+                let mut my_id = id;
+                loop {
+                    match rx.recv_timeout(HEARTBEAT_INTERVAL) {
+                        Err(RecvTimeoutError::Timeout) => {}
+                        _ => break, // stop requested or node dropped
+                    }
+                    let beat = |c: &mut Conn, id: u32| -> Result<()> {
+                        Msg::Heartbeat { node: id }.write_to(c)?;
+                        match Msg::read_from(c)?.ok_or_else(|| {
+                            crate::Error::Manager("manager closed".into())
+                        })? {
+                            Msg::Ok => Ok(()),
+                            m => Err(crate::Error::Manager(format!("beat: {m:?}"))),
+                        }
+                    };
+                    let sent = match link.as_mut() {
+                        Some(c) => beat(c, my_id).is_ok(),
+                        None => false,
+                    };
+                    if !sent {
+                        link = rejoin(&mgr_addr, &join_as, &mut my_id);
+                    }
+                }
+            })
+            .map_err(crate::Error::Io)?;
+        self.heartbeat = Some((tx, handle));
+        Ok(())
     }
 
     /// The bound address.
     pub fn addr(&self) -> &str {
         &self.addr
+    }
+
+    /// Manager-assigned node id (None when unregistered).
+    pub fn node_id(&self) -> Option<u32> {
+        self.node_id
     }
 
     /// Direct state access for tests.
@@ -124,7 +251,15 @@ impl StorageNode {
     /// Stop accepting and sever every live connection (failure
     /// injection: in-flight client requests observe errors, not hangs).
     pub fn shutdown(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return; // already shut down
+        }
+        if let Some((tx, handle)) = self.heartbeat.take() {
+            let _ = tx.send(()); // wake the heartbeat thread promptly
+            let _ = handle.join();
+        }
+        // Dedicated poke path (see Manager::shutdown): guarantees the
+        // blocked accept() returns after the stop flag is set.
         let _ = Conn::connect(&self.addr);
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
@@ -141,6 +276,26 @@ impl Drop for StorageNode {
     }
 }
 
+/// Best-effort re-registration with the manager (fresh connection +
+/// `NodeJoin`); updates `my_id` if the manager assigned a new one.
+/// Bounded connect: a black-holed manager must not stall the heartbeat
+/// thread (and thus `shutdown`'s join) for the OS SYN timeout.
+fn rejoin(mgr_addr: &str, join_as: &str, my_id: &mut u32) -> Option<Conn> {
+    let mut c = Conn::connect_timeout(mgr_addr, Duration::from_secs(1)).ok()?;
+    Msg::NodeJoin {
+        addr: join_as.to_string(),
+    }
+    .write_to(&mut c)
+    .ok()?;
+    match Msg::read_from(&mut c).ok()?? {
+        Msg::NodeId { id } => {
+            *my_id = id;
+            Some(c)
+        }
+        _ => None,
+    }
+}
+
 fn accept_loop(
     listener: Listener,
     state: Arc<NodeState>,
@@ -152,9 +307,11 @@ fn accept_loop(
             Ok(c) => c,
             Err(_) => break,
         };
-        if stop.load(Ordering::Relaxed) {
-            break;
-        }
+        // Race fix (mirrors the manager): serve the connection even if
+        // the stop flag was set while accept() was blocked — a real
+        // client racing shutdown gets answered, the shutdown poke reads
+        // clean EOF — then exit the loop.
+        let stopping = stop.load(Ordering::SeqCst);
         if let Ok(clone) = conn.try_clone() {
             conns.lock().unwrap().push(clone);
         }
@@ -162,6 +319,9 @@ fn accept_loop(
         let _ = std::thread::Builder::new()
             .name("mosa-node-conn".into())
             .spawn(move || serve_conn(conn, st));
+        if stopping {
+            break;
+        }
     }
 }
 
@@ -215,6 +375,25 @@ mod tests {
     }
 
     #[test]
+    fn delete_block_is_idempotent() {
+        let s = NodeState::default();
+        let h = [4u8; 16];
+        s.handle(Msg::PutBlock {
+            hash: h,
+            data: vec![1; 50],
+        });
+        assert_eq!(s.handle(Msg::DeleteBlock { hash: h }), Msg::Ok);
+        assert_eq!(s.handle(Msg::HasBlock { hash: h }), Msg::Bool(false));
+        // Deleting again (or a never-stored key) still succeeds.
+        assert_eq!(s.handle(Msg::DeleteBlock { hash: h }), Msg::Ok);
+        assert_eq!(s.handle(Msg::DeleteBlock { hash: [5; 16] }), Msg::Ok);
+        assert_eq!(
+            s.handle(Msg::NodeStats),
+            Msg::Stats { blocks: 0, bytes: 0 }
+        );
+    }
+
+    #[test]
     fn stats_accumulate() {
         let s = NodeState::default();
         for i in 0..3u8 {
@@ -265,6 +444,10 @@ mod tests {
         assert_eq!(Msg::read_from(&mut c).unwrap().unwrap(), Msg::Ok);
         // Block landed on disk.
         assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 1);
+        // DeleteBlock removes the spilled copy too.
+        Msg::DeleteBlock { hash: [7; 16] }.write_to(&mut c).unwrap();
+        assert_eq!(Msg::read_from(&mut c).unwrap().unwrap(), Msg::Ok);
+        assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 0);
         node.shutdown();
         std::fs::remove_dir_all(&dir).ok();
     }
@@ -285,5 +468,19 @@ mod tests {
             Msg::read_from(&mut c).unwrap().unwrap(),
             Msg::Data { data: vec![5; 10] }
         );
+    }
+
+    #[test]
+    fn registers_with_manager_and_heartbeats() {
+        use super::super::manager::Manager;
+        let mgr = Manager::spawn("127.0.0.1:0").unwrap();
+        let node = StorageNode::spawn_full("127.0.0.1:0", None, Some(mgr.addr())).unwrap();
+        assert_eq!(node.node_id(), Some(0));
+        let Msg::Nodes { nodes } = mgr.state().handle(Msg::NodeList) else {
+            panic!()
+        };
+        assert_eq!(nodes.len(), 1);
+        assert_eq!(nodes[0].addr, node.addr());
+        assert!(nodes[0].alive);
     }
 }

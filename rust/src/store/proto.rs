@@ -3,6 +3,15 @@
 //! surprises anyway).
 //!
 //! Frame layout: `u32 payload_len (LE) | u8 tag | payload`.
+//!
+//! Control-plane v2: placement is manager-driven.  A block's metadata
+//! carries a *replica set* (`Vec<u32>` of node ids) instead of a single
+//! node index; clients obtain placements through
+//! [`Msg::AllocPlacement`] → [`Msg::Placement`], storage nodes register
+//! through [`Msg::NodeJoin`] / [`Msg::Heartbeat`] and are discovered
+//! through [`Msg::NodeList`] → [`Msg::Nodes`]; unreferenced blocks are
+//! reclaimed through [`Msg::ReleaseBlocks`] (client→manager) and
+//! [`Msg::DeleteBlock`] (manager→node).
 
 use std::io::{Read, Write};
 
@@ -12,6 +21,10 @@ use crate::{Error, Result};
 /// Maximum accepted frame (defensive bound; blocks are <= 4 MB + slack).
 pub const MAX_FRAME: usize = 64 * 1024 * 1024;
 
+/// Maximum replicas per block accepted on the wire (defensive bound; the
+/// paper's stripes are 4-wide and replication factors are single-digit).
+pub const MAX_REPLICAS: usize = 64;
+
 /// A block's metadata entry in a file's block-map.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct BlockMeta {
@@ -19,8 +32,50 @@ pub struct BlockMeta {
     pub hash: Digest,
     /// Payload length.
     pub len: u32,
-    /// Index of the storage node holding the block.
-    pub node: u32,
+    /// Ids of the storage nodes holding a copy of the block (the
+    /// manager-assigned replica set; never empty in a committed map).
+    pub replicas: Vec<u32>,
+}
+
+impl BlockMeta {
+    /// The preferred replica to read from (first in the set).
+    pub fn primary(&self) -> Option<u32> {
+        self.replicas.first().copied()
+    }
+}
+
+/// One block of an [`Msg::AllocPlacement`] request: what the client is
+/// about to store (hash + length), before any node has been chosen.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BlockSpec {
+    /// Content hash (or synthetic key in non-CA mode).
+    pub hash: Digest,
+    /// Payload length.
+    pub len: u32,
+}
+
+/// One entry of a [`Msg::Placement`] reply.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Assignment {
+    /// Node ids the block must be written to (fresh) or already lives
+    /// on (duplicate).
+    pub replicas: Vec<u32>,
+    /// `true` if the manager had never seen this hash: the client must
+    /// transfer the block to every replica.  `false` means the block is
+    /// already stored (manager-side dedup) — CA clients skip the
+    /// transfer, non-CA clients overwrite in place.
+    pub fresh: bool,
+}
+
+/// One entry of a [`Msg::Nodes`] reply.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NodeEntry {
+    /// Manager-assigned node id (index into the registry).
+    pub id: u32,
+    /// Address the node serves blocks on.
+    pub addr: String,
+    /// Whether the node heartbeated recently.
+    pub alive: bool,
 }
 
 /// Protocol messages.
@@ -32,7 +87,9 @@ pub enum Msg {
         /// File name.
         file: String,
     },
-    /// Commit a new version's block-map (replaces the old one).
+    /// Commit a new version's block-map (replaces the old one; the
+    /// manager refcounts blocks across versions and reclaims the ones
+    /// the overwrite orphaned).
     CommitBlockMap {
         /// File name.
         file: String,
@@ -41,6 +98,27 @@ pub enum Msg {
     },
     /// List stored files.
     ListFiles,
+    /// Ask the manager to place a batch of blocks (control-plane v2:
+    /// the manager chooses nodes, the client only transfers).
+    AllocPlacement {
+        /// Claim tag of the allocating session.  Clients send a unique
+        /// per-session token (file name + process/session nonce): the
+        /// manager dedups *uncommitted* pending blocks only within the
+        /// same tag, so one session's claims never hide another's
+        /// possibly-incomplete transfer.
+        file: String,
+        /// The blocks to place, in order.
+        blocks: Vec<BlockSpec>,
+    },
+    /// Drop the caller's provisional claims on blocks it allocated but
+    /// will not commit (aborted write session).
+    ReleaseBlocks {
+        /// Hashes previously returned by [`Msg::AllocPlacement`], one
+        /// entry per allocated occurrence.
+        hashes: Vec<Digest>,
+    },
+    /// Fetch the node registry.
+    NodeList,
 
     // ---- manager -> client ----
     /// Block-map reply; `version == 0` means the file does not exist.
@@ -54,6 +132,36 @@ pub enum Msg {
     Files {
         /// Names and current versions.
         files: Vec<(String, u64)>,
+    },
+    /// Placement reply: one assignment per requested block, in order.
+    Placement {
+        /// Replica sets + freshness, aligned with the request.
+        assignments: Vec<Assignment>,
+    },
+    /// Node registry reply.
+    Nodes {
+        /// Registered nodes, by id.
+        nodes: Vec<NodeEntry>,
+    },
+
+    // ---- node -> manager ----
+    /// Register this node (idempotent: rejoining with a known address
+    /// returns the existing id).
+    NodeJoin {
+        /// Address the node serves blocks on.
+        addr: String,
+    },
+    /// Liveness beacon.
+    Heartbeat {
+        /// Manager-assigned node id.
+        node: u32,
+    },
+
+    // ---- manager -> node (reply to NodeJoin) ----
+    /// Node id assignment.
+    NodeId {
+        /// Manager-assigned node id.
+        id: u32,
     },
 
     // ---- client -> node ----
@@ -71,6 +179,11 @@ pub enum Msg {
     },
     /// Fetch a block.
     GetBlock {
+        /// Storage key.
+        hash: Digest,
+    },
+    /// Drop a block (manager GC; idempotent — unknown keys are OK).
+    DeleteBlock {
         /// Storage key.
         hash: Digest,
     },
@@ -117,6 +230,15 @@ impl Msg {
             Msg::Ok => 12,
             Msg::Bool(_) => 13,
             Msg::Err(_) => 14,
+            Msg::AllocPlacement { .. } => 15,
+            Msg::Placement { .. } => 16,
+            Msg::NodeJoin { .. } => 17,
+            Msg::NodeId { .. } => 18,
+            Msg::Heartbeat { .. } => 19,
+            Msg::NodeList => 20,
+            Msg::Nodes { .. } => 21,
+            Msg::ReleaseBlocks { .. } => 22,
+            Msg::DeleteBlock { .. } => 23,
         }
     }
 
@@ -129,7 +251,7 @@ impl Msg {
                 put_str(&mut p, file);
                 put_blocks(&mut p, blocks);
             }
-            Msg::ListFiles | Msg::NodeStats | Msg::Ok => {}
+            Msg::ListFiles | Msg::NodeStats | Msg::NodeList | Msg::Ok => {}
             Msg::BlockMap { version, blocks } => {
                 p.extend_from_slice(&version.to_le_bytes());
                 put_blocks(&mut p, blocks);
@@ -141,12 +263,46 @@ impl Msg {
                     p.extend_from_slice(&v.to_le_bytes());
                 }
             }
+            Msg::AllocPlacement { file, blocks } => {
+                put_str(&mut p, file);
+                p.extend_from_slice(&(blocks.len() as u32).to_le_bytes());
+                for b in blocks {
+                    p.extend_from_slice(&b.hash);
+                    p.extend_from_slice(&b.len.to_le_bytes());
+                }
+            }
+            Msg::Placement { assignments } => {
+                p.extend_from_slice(&(assignments.len() as u32).to_le_bytes());
+                for a in assignments {
+                    p.push(a.fresh as u8);
+                    put_replicas(&mut p, &a.replicas);
+                }
+            }
+            Msg::Nodes { nodes } => {
+                p.extend_from_slice(&(nodes.len() as u32).to_le_bytes());
+                for n in nodes {
+                    p.extend_from_slice(&n.id.to_le_bytes());
+                    put_str(&mut p, &n.addr);
+                    p.push(n.alive as u8);
+                }
+            }
+            Msg::NodeJoin { addr } => put_str(&mut p, addr),
+            Msg::NodeId { id } => p.extend_from_slice(&id.to_le_bytes()),
+            Msg::Heartbeat { node } => p.extend_from_slice(&node.to_le_bytes()),
+            Msg::ReleaseBlocks { hashes } => {
+                p.extend_from_slice(&(hashes.len() as u32).to_le_bytes());
+                for h in hashes {
+                    p.extend_from_slice(h);
+                }
+            }
             Msg::PutBlock { hash, data } => {
                 p.extend_from_slice(hash);
                 p.extend_from_slice(&(data.len() as u32).to_le_bytes());
                 p.extend_from_slice(data);
             }
-            Msg::HasBlock { hash } | Msg::GetBlock { hash } => p.extend_from_slice(hash),
+            Msg::HasBlock { hash } | Msg::GetBlock { hash } | Msg::DeleteBlock { hash } => {
+                p.extend_from_slice(hash)
+            }
             Msg::Data { data } => {
                 p.extend_from_slice(&(data.len() as u32).to_le_bytes());
                 p.extend_from_slice(data);
@@ -204,6 +360,65 @@ impl Msg {
             12 => Msg::Ok,
             13 => Msg::Bool(c.u8()? != 0),
             14 => Msg::Err(c.str()?),
+            15 => {
+                let file = c.str()?;
+                let n = c.u32()? as usize;
+                if n > MAX_FRAME / 20 {
+                    return Err(Error::Proto(format!("spec list too long: {n}")));
+                }
+                let mut blocks = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    blocks.push(BlockSpec {
+                        hash: c.digest()?,
+                        len: c.u32()?,
+                    });
+                }
+                Msg::AllocPlacement { file, blocks }
+            }
+            16 => {
+                let n = c.u32()? as usize;
+                if n > MAX_FRAME / 6 {
+                    return Err(Error::Proto(format!("assignment list too long: {n}")));
+                }
+                let mut assignments = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    let fresh = c.u8()? != 0;
+                    let replicas = c.replicas()?;
+                    assignments.push(Assignment { replicas, fresh });
+                }
+                Msg::Placement { assignments }
+            }
+            17 => Msg::NodeJoin { addr: c.str()? },
+            18 => Msg::NodeId { id: c.u32()? },
+            19 => Msg::Heartbeat { node: c.u32()? },
+            20 => Msg::NodeList,
+            21 => {
+                let n = c.u32()? as usize;
+                if n > MAX_FRAME / 9 {
+                    return Err(Error::Proto(format!("node list too long: {n}")));
+                }
+                let mut nodes = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    nodes.push(NodeEntry {
+                        id: c.u32()?,
+                        addr: c.str()?,
+                        alive: c.u8()? != 0,
+                    });
+                }
+                Msg::Nodes { nodes }
+            }
+            22 => {
+                let n = c.u32()? as usize;
+                if n > MAX_FRAME / 16 {
+                    return Err(Error::Proto(format!("hash list too long: {n}")));
+                }
+                let mut hashes = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    hashes.push(c.digest()?);
+                }
+                Msg::ReleaseBlocks { hashes }
+            }
+            23 => Msg::DeleteBlock { hash: c.digest()? },
             t => return Err(Error::Proto(format!("unknown tag {t}"))),
         };
         if c.i != p.len() {
@@ -213,6 +428,28 @@ impl Msg {
             )));
         }
         Ok(msg)
+    }
+
+    /// The fixed-size prefix of a `PutBlock` frame (length prefix, tag,
+    /// hash, payload length): senders write this header and then the
+    /// payload bytes straight from their shared buffer, so replicating
+    /// a block to several nodes never deep-copies the data.
+    pub fn put_header(hash: &Digest, data_len: usize) -> [u8; 25] {
+        let mut h = [0u8; 25];
+        h[..4].copy_from_slice(&((16 + 4 + data_len) as u32 + 1).to_le_bytes());
+        h[4] = 6; // PutBlock tag
+        h[5..21].copy_from_slice(hash);
+        h[21..25].copy_from_slice(&(data_len as u32).to_le_bytes());
+        h
+    }
+
+    /// Whole `PutBlock` frame from borrowed payload (tests; hot paths
+    /// use [`Msg::put_header`] + a payload write instead).
+    /// Byte-identical to `Msg::PutBlock { .. }.encode()` (tested).
+    pub fn encode_put(hash: &Digest, data: &[u8]) -> Vec<u8> {
+        let mut frame = Msg::put_header(hash, data.len()).to_vec();
+        frame.extend_from_slice(data);
+        frame
     }
 
     /// Write one frame to a stream.
@@ -253,12 +490,24 @@ fn put_str(p: &mut Vec<u8>, s: &str) {
     p.extend_from_slice(s.as_bytes());
 }
 
+fn put_replicas(p: &mut Vec<u8>, replicas: &[u32]) {
+    // Encode exactly what the decoder accepts: replica sets are bounded
+    // by MAX_REPLICAS end to end (policies clamp to it), so truncation
+    // here is a never-expected last resort, not a silent behavior.
+    debug_assert!(replicas.len() <= MAX_REPLICAS, "replica set too large");
+    let n = replicas.len().min(MAX_REPLICAS);
+    p.push(n as u8);
+    for r in &replicas[..n] {
+        p.extend_from_slice(&r.to_le_bytes());
+    }
+}
+
 fn put_blocks(p: &mut Vec<u8>, blocks: &[BlockMeta]) {
     p.extend_from_slice(&(blocks.len() as u32).to_le_bytes());
     for b in blocks {
         p.extend_from_slice(&b.hash);
         p.extend_from_slice(&b.len.to_le_bytes());
-        p.extend_from_slice(&b.node.to_le_bytes());
+        put_replicas(p, &b.replicas);
     }
 }
 
@@ -303,17 +552,29 @@ impl<'a> Cursor<'a> {
         String::from_utf8(b).map_err(|_| Error::Proto("bad utf-8 string".into()))
     }
 
-    fn blocks(&mut self) -> Result<Vec<BlockMeta>> {
-        let n = self.u32()? as usize;
-        if n > MAX_FRAME / 24 {
-            return Err(Error::Proto(format!("block list too long: {n}")));
+    fn replicas(&mut self) -> Result<Vec<u32>> {
+        let n = self.u8()? as usize;
+        if n > MAX_REPLICAS {
+            return Err(Error::Proto(format!("replica set too large: {n}")));
         }
         let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u32()?);
+        }
+        Ok(out)
+    }
+
+    fn blocks(&mut self) -> Result<Vec<BlockMeta>> {
+        let n = self.u32()? as usize;
+        if n > MAX_FRAME / 21 {
+            return Err(Error::Proto(format!("block list too long: {n}")));
+        }
+        let mut out = Vec::with_capacity(n.min(4096));
         for _ in 0..n {
             out.push(BlockMeta {
                 hash: self.digest()?,
                 len: self.u32()?,
-                node: self.u32()?,
+                replicas: self.replicas()?,
             });
         }
         Ok(out)
@@ -336,7 +597,7 @@ mod tests {
         BlockMeta {
             hash: [i; 16],
             len: 1000 + i as u32,
-            node: i as u32 % 4,
+            replicas: vec![i as u32 % 4, (i as u32 + 1) % 4],
         }
     }
 
@@ -355,6 +616,53 @@ mod tests {
         roundtrip(Msg::Files {
             files: vec![("x".into(), 1), ("y".into(), 2)],
         });
+        roundtrip(Msg::AllocPlacement {
+            file: "f".into(),
+            blocks: vec![
+                BlockSpec { hash: [1; 16], len: 100 },
+                BlockSpec { hash: [2; 16], len: 200 },
+            ],
+        });
+        roundtrip(Msg::Placement {
+            assignments: vec![
+                Assignment {
+                    replicas: vec![0, 2],
+                    fresh: true,
+                },
+                Assignment {
+                    replicas: vec![1],
+                    fresh: false,
+                },
+                Assignment {
+                    replicas: vec![],
+                    fresh: false,
+                },
+            ],
+        });
+        roundtrip(Msg::NodeJoin {
+            addr: "127.0.0.1:9999".into(),
+        });
+        roundtrip(Msg::NodeId { id: 3 });
+        roundtrip(Msg::Heartbeat { node: 2 });
+        roundtrip(Msg::NodeList);
+        roundtrip(Msg::Nodes {
+            nodes: vec![
+                NodeEntry {
+                    id: 0,
+                    addr: "a:1".into(),
+                    alive: true,
+                },
+                NodeEntry {
+                    id: 1,
+                    addr: "b:2".into(),
+                    alive: false,
+                },
+            ],
+        });
+        roundtrip(Msg::ReleaseBlocks {
+            hashes: vec![[4; 16], [5; 16]],
+        });
+        roundtrip(Msg::DeleteBlock { hash: [6; 16] });
         roundtrip(Msg::PutBlock {
             hash: [9; 16],
             data: vec![1, 2, 3],
@@ -418,8 +726,36 @@ mod tests {
     }
 
     #[test]
+    fn rejects_oversized_replica_set() {
+        // A block-map whose replica count byte exceeds MAX_REPLICAS.
+        let mut p = Vec::new();
+        p.extend_from_slice(&1u32.to_le_bytes()); // one block
+        p.extend_from_slice(&[0u8; 16]); // hash
+        p.extend_from_slice(&10u32.to_le_bytes()); // len
+        p.push(255); // replica count (> MAX_REPLICAS)
+        p.extend_from_slice(&vec![0u8; 255 * 4]);
+        let mut f = Vec::new();
+        f.extend_from_slice(&8u64.to_le_bytes()); // version
+        f.extend_from_slice(&p);
+        assert!(Msg::decode(4, &f).is_err());
+    }
+
+    #[test]
     fn into_result_maps_err() {
         assert!(Msg::Err("x".into()).into_result().is_err());
         assert!(Msg::Ok.into_result().is_ok());
+    }
+
+    #[test]
+    fn encode_put_matches_owned_encode() {
+        let hash = [0xA5u8; 16];
+        for data in [vec![], vec![7u8; 1], vec![3u8; 70_000]] {
+            let owned = Msg::PutBlock {
+                hash,
+                data: data.clone(),
+            }
+            .encode();
+            assert_eq!(Msg::encode_put(&hash, &data), owned);
+        }
     }
 }

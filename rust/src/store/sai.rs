@@ -8,25 +8,24 @@
 //! integrity verification.  Whole-buffer [`Sai::write_file`] /
 //! [`Sai::read_file`] are thin wrappers over the sessions.
 //!
-//! Write path: application data accumulates in a write buffer; when the
-//! buffer fills, the content-addressability module (a) detects block
-//! boundaries (fixed-size or content-based via sliding-window hashes),
-//! (b) submits the blocks' hashes to the configured
-//! [`HashEngine`] — *asynchronously* on accelerator engines, so buffer
-//! N's hashing overlaps buffer N-1's transfers — then (c) compares
-//! digests against the file's previous-version block-map and
-//! (d) transfers only new blocks, striped across `stripe_width` storage
-//! nodes in parallel.  On close, the new block-map is committed to the
-//! metadata manager.
+//! Control-plane v2: the client no longer chooses placement.  It
+//! connects to the *manager only*, discovers the storage nodes from the
+//! manager's registry ([`Msg::NodeList`]), and — per hashed batch —
+//! asks the manager where blocks go ([`Msg::AllocPlacement`]).  The
+//! manager answers with a replica set per block plus a freshness bit
+//! (manager-side dedup); the client transfers fresh blocks to *every*
+//! assigned replica and the reader fails over between replicas when a
+//! node is down or a copy fails its integrity check.
 //!
 //! All node links share one bandwidth [`Shaper`] — the client's NIC.
 
 use std::io::{BufReader, BufWriter, Write as _};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use super::proto::{BlockMeta, Msg};
+use super::proto::{Assignment, BlockMeta, BlockSpec, Msg};
 use super::session::{FileReader, FileWriter};
 use crate::config::{CaMode, ClientConfig};
 use crate::hash::Digest;
@@ -43,10 +42,19 @@ pub struct WriteReport {
     pub blocks: usize,
     /// Blocks actually transferred to storage nodes.
     pub new_blocks: usize,
-    /// Blocks deduplicated (hash already known).
+    /// Blocks deduplicated (hash already stored somewhere, per the
+    /// manager's global block table).
     pub dup_blocks: usize,
-    /// Bytes actually transferred.
+    /// Bytes actually transferred, counting each replica copy once
+    /// (i.e. payload bytes × that block's replica count).
     pub new_bytes: u64,
+    /// Unique payload bytes behind `new_bytes` (each fresh block's
+    /// length counted once, regardless of replication) — the basis of
+    /// `similarity`.
+    pub new_payload_bytes: u64,
+    /// Replication factor observed on this write's fresh blocks
+    /// (1 when no blocks were fresh).
+    pub replication: usize,
     /// Wall-clock duration of the write.
     pub elapsed: Duration,
     /// Hash-engine time that stalled the write pipeline (window + direct
@@ -86,7 +94,8 @@ impl WriteReport {
 enum NodeCmd {
     Put {
         hash: Digest,
-        data: Vec<u8>,
+        /// Shared payload: one allocation serves every replica's put.
+        data: Arc<Vec<u8>>,
         done: Sender<Result<()>>,
     },
     Get {
@@ -100,23 +109,35 @@ enum NodeCmd {
 /// in parallel while the SAI keeps hashing.
 pub(super) struct NodeClient {
     tx: Sender<NodeCmd>,
+    /// Set by the worker when its transport dies (node crash/restart).
+    /// [`Sai::node`] evicts dead clients so a later registry refresh can
+    /// reconnect to a healthy rebirth of the node.
+    dead: Arc<AtomicBool>,
 }
 
 impl NodeClient {
     fn connect(addr: &str, shaper: Option<Arc<Shaper>>) -> Result<NodeClient> {
-        let mut conn = Conn::connect(addr)?;
+        // Bounded connect: a black-holed node costs 2s, not the OS SYN
+        // timeout.
+        let mut conn = Conn::connect_timeout(addr, Duration::from_secs(2))?;
         if let Some(s) = shaper {
             conn = conn.with_shaper(s);
         }
         let (tx, rx): (Sender<NodeCmd>, Receiver<NodeCmd>) = mpsc::channel();
+        let dead = Arc::new(AtomicBool::new(false));
+        let flag = dead.clone();
         std::thread::Builder::new()
             .name(format!("sai-node-{addr}"))
-            .spawn(move || node_worker(conn, rx))
+            .spawn(move || node_worker(conn, rx, flag))
             .map_err(Error::Io)?;
-        Ok(NodeClient { tx })
+        Ok(NodeClient { tx, dead })
     }
 
-    pub(super) fn put(&self, hash: Digest, data: Vec<u8>) -> Receiver<Result<()>> {
+    fn is_dead(&self) -> bool {
+        self.dead.load(Ordering::Relaxed)
+    }
+
+    pub(super) fn put(&self, hash: Digest, data: Arc<Vec<u8>>) -> Receiver<Result<()>> {
         let (done, rx) = mpsc::channel();
         let _ = self.tx.send(NodeCmd::Put { hash, data, done });
         rx
@@ -129,25 +150,44 @@ impl NodeClient {
     }
 }
 
-fn node_worker(conn: Conn, rx: Receiver<NodeCmd>) {
+/// Transport-level failure (socket dead) vs. a logical error reply the
+/// connection survives (e.g. "unknown block").
+fn transport_error<T>(r: &Result<T>) -> bool {
+    match r {
+        Err(Error::Io(_)) => true,
+        Err(Error::Node(m)) => m == "connection closed",
+        _ => false,
+    }
+}
+
+fn node_worker(conn: Conn, rx: Receiver<NodeCmd>, dead: Arc<AtomicBool>) {
     let reader = match conn.try_clone() {
         Ok(c) => c,
-        Err(_) => return,
+        Err(_) => {
+            dead.store(true, Ordering::Relaxed);
+            return;
+        }
     };
     let mut r = BufReader::new(reader);
     let mut w = BufWriter::with_capacity(256 * 1024, conn);
     while let Ok(cmd) = rx.recv() {
-        match cmd {
+        let fatal = match cmd {
             NodeCmd::Put { hash, data, done } => {
                 let res = (|| -> Result<()> {
-                    Msg::PutBlock { hash, data }.write_to(&mut w)?;
+                    // Header + payload written separately: the payload
+                    // streams straight from the shared Arc — no frame
+                    // assembly copy per replica.
+                    w.write_all(&Msg::put_header(&hash, data.len()))?;
+                    w.write_all(&data)?;
                     w.flush()?;
                     match Msg::read_from(&mut r)?.ok_or_else(closed)?.into_result()? {
                         Msg::Ok => Ok(()),
                         m => Err(Error::Proto(format!("unexpected put reply {m:?}"))),
                     }
                 })();
+                let fatal = transport_error(&res);
                 let _ = done.send(res);
+                fatal
             }
             NodeCmd::Get { hash, done } => {
                 let res = (|| -> Result<Vec<u8>> {
@@ -158,8 +198,16 @@ fn node_worker(conn: Conn, rx: Receiver<NodeCmd>) {
                         m => Err(Error::Proto(format!("unexpected get reply {m:?}"))),
                     }
                 })();
+                let fatal = transport_error(&res);
                 let _ = done.send(res);
+                fatal
             }
+        };
+        if fatal {
+            // The socket is gone; mark dead and exit.  Queued commands'
+            // reply senders drop, so waiters observe `closed()`.
+            dead.store(true, Ordering::Relaxed);
+            break;
         }
     }
 }
@@ -173,23 +221,31 @@ pub struct Sai {
     pub(super) cfg: ClientConfig,
     pub(super) engine: Arc<dyn HashEngine>,
     manager: Mutex<(BufReader<Conn>, BufWriter<Conn>)>,
-    pub(super) nodes: Vec<NodeClient>,
+    /// Node clients indexed by manager node id.  `None` = the node was
+    /// unreachable when last tried (reads fail over to other replicas;
+    /// puts targeting it fail the write).  Refreshed from the manager's
+    /// registry when a placement names an id this client has no link
+    /// for (nodes can join after the client connected).
+    nodes: Mutex<Vec<Option<Arc<NodeClient>>>>,
+    /// NIC shaper applied to (re)connected node links.
+    shaper: Option<Arc<Shaper>>,
+    /// Throttle for registry refreshes triggered by unknown/down nodes.
+    last_refresh: Mutex<Option<Instant>>,
 }
 
 impl Sai {
-    /// Connect to a manager and a set of storage nodes.  `shaper`, if
-    /// given, paces ALL node links together (the client's NIC).
+    /// Connect to the manager and, from its registry, to the storage
+    /// nodes (control-plane v2: the manager is the single bootstrap
+    /// address).  `shaper`, if given, paces ALL node links together
+    /// (the client's NIC).  Nodes that are down are tolerated here and
+    /// handled by replica failover at read time.
     pub fn connect(
         manager_addr: &str,
-        node_addrs: &[String],
         cfg: ClientConfig,
         engine: Arc<dyn HashEngine>,
         shaper: Option<Arc<Shaper>>,
     ) -> Result<Sai> {
         cfg.validate()?;
-        if node_addrs.is_empty() {
-            return Err(Error::Config("need at least one storage node".into()));
-        }
         if cfg.ca_mode != CaMode::Cdc && cfg.write_buffer % cfg.block_size != 0 {
             return Err(Error::Config(
                 "write_buffer must be a multiple of block_size".into(),
@@ -197,16 +253,62 @@ impl Sai {
         }
         let conn = Conn::connect(manager_addr)?;
         let manager = Mutex::new((BufReader::new(conn.try_clone()?), BufWriter::new(conn)));
-        let nodes = node_addrs
-            .iter()
-            .map(|a| NodeClient::connect(a, shaper.clone()))
-            .collect::<Result<Vec<_>>>()?;
-        Ok(Sai {
+        let sai = Sai {
             cfg,
             engine,
             manager,
-            nodes,
-        })
+            nodes: Mutex::new(Vec::new()),
+            shaper,
+            last_refresh: Mutex::new(None),
+        };
+        sai.refresh_nodes()?;
+        {
+            let nodes = sai.nodes.lock().unwrap();
+            if nodes.is_empty() {
+                return Err(Error::Config(
+                    "no storage nodes registered with the manager".into(),
+                ));
+            }
+            if nodes.iter().all(Option::is_none) {
+                return Err(Error::Node("no storage node is reachable".into()));
+            }
+        }
+        Ok(sai)
+    }
+
+    /// Re-read the manager's registry and connect any node this client
+    /// has no live link for (nodes may join at any time).  Connects
+    /// happen OUTSIDE the nodes lock (with a bounded timeout), so a
+    /// black-holed node never stalls concurrent `node()` callers — in
+    /// particular read failover routing around that very node.
+    fn refresh_nodes(&self) -> Result<()> {
+        let entries = self.list_nodes()?;
+        let missing: Vec<(usize, String)> = {
+            let mut nodes = self.nodes.lock().unwrap();
+            if let Some(max) = entries.iter().map(|e| e.id as usize).max() {
+                if nodes.len() <= max {
+                    nodes.resize_with(max + 1, || None);
+                }
+            }
+            entries
+                .iter()
+                // Skip nodes the manager itself reports dead: they
+                // re-qualify as soon as they heartbeat again, and
+                // dialing them only buys bounded-but-real stalls.
+                .filter(|e| e.alive && nodes[e.id as usize].is_none())
+                .map(|e| (e.id as usize, e.addr.clone()))
+                .collect()
+        };
+        for (idx, addr) in missing {
+            if let Ok(client) = NodeClient::connect(&addr, self.shaper.clone()) {
+                let mut nodes = self.nodes.lock().unwrap();
+                if nodes[idx].is_none() {
+                    nodes[idx] = Some(Arc::new(client));
+                }
+            }
+        }
+        *self.last_refresh.lock().unwrap() = Some(Instant::now());
+        Ok(())
     }
 
     /// The active configuration.
@@ -225,6 +327,82 @@ impl Sai {
         msg.write_to(w)?;
         w.flush()?;
         Msg::read_from(r)?.ok_or_else(closed)?.into_result()
+    }
+
+    /// The client for node `id`, if it is connected.  An id beyond the
+    /// known registry is provably stale client state (the manager just
+    /// placed on a node that joined after we last looked) and always
+    /// refreshes; reconnect attempts for known-but-down nodes are
+    /// rate-limited instead.
+    pub(super) fn node(&self, id: u32) -> Result<Arc<NodeClient>> {
+        let known = {
+            let mut nodes = self.nodes.lock().unwrap();
+            if let Some(n) = nodes.get(id as usize).and_then(Option::clone) {
+                if !n.is_dead() {
+                    return Ok(n);
+                }
+                // The worker's transport died (node crash/restart):
+                // evict so the refresh below can reconnect to a healthy
+                // rebirth at the same id.
+                nodes[id as usize] = None;
+            }
+            nodes.len()
+        };
+        let due = id as usize >= known
+            || match *self.last_refresh.lock().unwrap() {
+                None => true,
+                Some(t) => t.elapsed() > Duration::from_secs(1),
+            };
+        if due {
+            self.refresh_nodes()?;
+            if let Some(n) = self
+                .nodes
+                .lock()
+                .unwrap()
+                .get(id as usize)
+                .and_then(Option::clone)
+            {
+                return Ok(n);
+            }
+        }
+        Err(Error::Node(format!("node {id} unavailable")))
+    }
+
+    /// Fetch the manager's node registry.
+    pub fn list_nodes(&self) -> Result<Vec<super::proto::NodeEntry>> {
+        match self.manager_call(Msg::NodeList)? {
+            Msg::Nodes { nodes } => Ok(nodes),
+            m => Err(Error::Proto(format!("unexpected reply {m:?}"))),
+        }
+    }
+
+    /// Ask the manager to place a batch of blocks for `file`.
+    pub(super) fn alloc_placement(
+        &self,
+        file: &str,
+        blocks: Vec<BlockSpec>,
+    ) -> Result<Vec<Assignment>> {
+        let n = blocks.len();
+        match self.manager_call(Msg::AllocPlacement {
+            file: file.into(),
+            blocks,
+        })? {
+            Msg::Placement { assignments } if assignments.len() == n => Ok(assignments),
+            Msg::Placement { assignments } => Err(Error::Manager(format!(
+                "placement count mismatch: {} for {} blocks",
+                assignments.len(),
+                n
+            ))),
+            m => Err(Error::Proto(format!("unexpected reply {m:?}"))),
+        }
+    }
+
+    /// Best-effort release of provisional block claims (aborted write).
+    pub(super) fn release_blocks(&self, hashes: Vec<Digest>) {
+        if hashes.is_empty() {
+            return;
+        }
+        let _ = self.manager_call(Msg::ReleaseBlocks { hashes });
     }
 
     /// Fetch a file's current block-map (version 0 = absent).
@@ -250,7 +428,7 @@ impl Sai {
 
     /// Open a streaming write session: returns a [`FileWriter`] that
     /// implements [`std::io::Write`].  Data is chunked, hashed,
-    /// deduplicated and striped as it arrives; call
+    /// deduplicated and placed (by the manager) as it arrives; call
     /// [`FileWriter::close`] to commit the new version (the POSIX
     /// `release` step) and obtain the [`WriteReport`].
     pub fn create(&self, name: &str) -> Result<FileWriter<'_>> {
@@ -258,9 +436,10 @@ impl Sai {
     }
 
     /// Open a streaming read session: returns a [`FileReader`] that
-    /// implements [`std::io::Read`], prefetching blocks from the stripe
-    /// nodes ahead of the consumer and verifying each block's integrity
-    /// (CA modes).
+    /// implements [`std::io::Read`], prefetching blocks from their
+    /// replica nodes ahead of the consumer, verifying each block's
+    /// integrity (CA modes), and failing over to the next replica when
+    /// a node is down or a copy is corrupt.
     pub fn open(&self, name: &str) -> Result<FileReader<'_>> {
         FileReader::new(self, name)
     }
@@ -285,9 +464,11 @@ impl Sai {
         Ok(out)
     }
 
-    /// Integrity scrub: fetch every block of `name` and recompute its
-    /// content hash (the paper's "traditional system that uses hashing
-    /// to preserve data integrity").  Returns (ok, corrupt) counts.
+    /// Integrity scrub: fetch every replica copy of every block of
+    /// `name` and recompute its content hash (the paper's "traditional
+    /// system that uses hashing to preserve data integrity").  Returns
+    /// (ok, corrupt) *copy* counts — an unreachable replica counts as
+    /// corrupt, since the scrub cannot vouch for it.
     pub fn verify_file(&self, name: &str) -> Result<(usize, usize)> {
         let (version, blocks) = self.get_block_map(name)?;
         if version == 0 {
@@ -298,13 +479,21 @@ impl Sai {
                 "non-CA mode stores no content hashes to verify".into(),
             ));
         }
-        let rxs: Vec<_> = blocks
-            .iter()
-            .map(|b| self.nodes[b.node as usize].get(b.hash))
-            .collect();
         let mut ok = 0;
         let mut bad = 0;
-        for (meta, rx) in blocks.iter().zip(rxs) {
+        // (meta index, receiver) per reachable copy; unreachable copies
+        // are counted bad immediately.
+        let mut rxs: Vec<(usize, Receiver<Result<Vec<u8>>>)> = Vec::new();
+        for (i, b) in blocks.iter().enumerate() {
+            for &id in &b.replicas {
+                match self.node(id) {
+                    Ok(n) => rxs.push((i, n.get(b.hash))),
+                    Err(_) => bad += 1,
+                }
+            }
+        }
+        for (i, rx) in rxs {
+            let meta = &blocks[i];
             match rx.recv().map_err(|_| closed())? {
                 Ok(data) => {
                     if data.len() == meta.len as usize
@@ -321,8 +510,16 @@ impl Sai {
         Ok((ok, bad))
     }
 
-    /// Number of stripe nodes in use.
+    /// Transfer-parallelism window: how many puts/prefetches the client
+    /// keeps in flight (bounded by the connected node count).
     pub(super) fn stripe(&self) -> usize {
-        self.cfg.stripe_width.min(self.nodes.len())
+        let connected = self
+            .nodes
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|n| n.is_some())
+            .count();
+        self.cfg.stripe_width.min(connected).max(1)
     }
 }

@@ -1,28 +1,38 @@
 //! Streaming sessions over the SAI: [`FileWriter`] (incremental write →
-//! chunk → hash → dedup → stripe pipeline, commit on close) and
-//! [`FileReader`] (prefetching, integrity-verified block streaming).
+//! chunk → hash → dedup → replicate pipeline, commit on close) and
+//! [`FileReader`] (prefetching, integrity-verified block streaming with
+//! replica failover).
 //!
 //! The writer is the paper's pipeline made visible in the API: each
 //! filled write buffer's block digests are *submitted* to the hash
 //! engine (non-blocking on accelerator engines) and redeemed one buffer
-//! later, so buffer N's hashing overlaps buffer N-1's block placement
+//! later, so buffer N's hashing overlaps buffer N-1's placement
 //! and transfers, and buffer N+1's accumulation/chunking — CrystalGPU's
 //! transfer/compute overlap, end to end.  Synchronous engines
 //! (CPU/oracle) degrade gracefully to the serial path through the same
 //! code.
+//!
+//! Control-plane v2: once a batch's digests are known, the writer asks
+//! the *manager* where the blocks go ([`Sai::alloc_placement`]); the
+//! reply carries a replica set per block plus a freshness bit
+//! (manager-side global dedup).  Fresh blocks are transferred to every
+//! assigned replica; duplicates are recorded in the block-map without
+//! transfer (CA modes).  Dropping a writer without closing releases its
+//! provisional claims back to the manager.
 //!
 //! Buffering is caller-split-invariant: the writer re-buffers incoming
 //! bytes to exactly `write_buffer`-sized batches internally, so a file
 //! streamed in arbitrary splits produces a block-map byte-identical to
 //! a one-shot [`super::Sai::write_file`] (property-tested).
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::VecDeque;
 use std::io::{Read, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::Receiver;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use super::proto::{BlockMeta, Msg};
+use super::proto::{BlockMeta, BlockSpec, Msg};
 use super::sai::{closed, Sai, WriteReport};
 use crate::chunking::ContentChunker;
 use crate::config::CaMode;
@@ -51,23 +61,33 @@ struct Inflight {
 /// Streaming write session (from [`Sai::create`]).  Implements
 /// [`std::io::Write`]; call [`close`](FileWriter::close) to commit the
 /// block-map and obtain the [`WriteReport`].  Dropping the writer
-/// without closing abandons the write: nothing is committed (already
-/// transferred blocks remain on the nodes as unreferenced garbage, as
-/// with any aborted write).
+/// without closing abandons the write: nothing is committed, and the
+/// session's provisional placement claims are released back to the
+/// manager so already-transferred blocks can be garbage-collected.
+/// Monotonic per-process counter feeding session claim tokens.
+static SESSION_SEQ: AtomicU64 = AtomicU64::new(0);
+
 pub struct FileWriter<'a> {
     sai: &'a Sai,
     name: String,
+    /// Unique claim token for this write session, sent as the "file" of
+    /// [`Msg::AllocPlacement`].  The manager dedups uncommitted pending
+    /// claims only against the SAME token — a file name would wrongly
+    /// match a crashed earlier attempt (whose transfer may never have
+    /// happened) or a concurrent writer of the same file.
+    claim: String,
     mode: ModeState,
     /// Bytes accumulated toward the next `write_buffer`-sized batch.
     buf: Vec<u8>,
-    /// hash -> node of every block known to dedup against (previous
-    /// version + blocks placed by this write).
-    known: HashMap<Digest, u32>,
     metas: Vec<BlockMeta>,
     /// Outstanding node-put acknowledgements.
     pending: Vec<Receiver<Result<()>>>,
     /// The previous buffer's digest batch, still being hashed.
     inflight: Option<Inflight>,
+    /// Every hash occurrence allocated from the manager this session
+    /// (released on drop when the session never commits).
+    alloced: Vec<Digest>,
+    committed: bool,
     report: WriteReport,
     t0: Instant,
 }
@@ -75,9 +95,6 @@ pub struct FileWriter<'a> {
 impl<'a> FileWriter<'a> {
     pub(super) fn new(sai: &'a Sai, name: &str) -> Result<FileWriter<'a>> {
         let t0 = Instant::now();
-        // Previous version's block-map: hash -> node.
-        let (_, old_blocks) = sai.get_block_map(name)?;
-        let known = old_blocks.iter().map(|b| (b.hash, b.node)).collect();
         let mode = match sai.cfg.ca_mode {
             CaMode::None => ModeState::None { index: 0 },
             CaMode::Fixed => ModeState::Fixed,
@@ -85,15 +102,30 @@ impl<'a> FileWriter<'a> {
                 chunker: ContentChunker::new(sai.cfg.chunk_params()),
             },
         };
+        // pid + per-process counter + wall-clock nanos: unique across
+        // hosts and pid reuse (claims must never collide — a collision
+        // would let one session dedup against another's possibly-
+        // incomplete transfer).
+        let nonce = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        let claim = format!(
+            "{name}#{}.{}.{nonce:x}",
+            std::process::id(),
+            SESSION_SEQ.fetch_add(1, Ordering::Relaxed)
+        );
         Ok(FileWriter {
             sai,
             name: name.to_string(),
+            claim,
             mode,
             buf: Vec::with_capacity(sai.cfg.write_buffer),
-            known,
             metas: Vec::new(),
             pending: Vec::new(),
             inflight: None,
+            alloced: Vec::new(),
+            committed: false,
             report: WriteReport::default(),
             t0,
         })
@@ -154,15 +186,21 @@ impl<'a> FileWriter<'a> {
             Msg::Ok => {}
             m => return Err(Error::Proto(format!("unexpected commit reply {m:?}"))),
         }
+        // The commit consumed this session's provisional claims; the
+        // Drop impl must not release them a second time.
+        self.committed = true;
 
         self.report.blocks = self.metas.len();
+        if self.report.replication == 0 {
+            self.report.replication = 1;
+        }
         self.report.elapsed = self.t0.elapsed();
         self.report.similarity = if self.report.bytes == 0 {
             0.0
         } else {
-            1.0 - self.report.new_bytes as f64 / self.report.bytes as f64
+            1.0 - self.report.new_payload_bytes as f64 / self.report.bytes as f64
         };
-        Ok(self.report)
+        Ok(self.report.clone())
     }
 
     /// Process one accumulated batch (exactly `write_buffer` bytes,
@@ -190,9 +228,12 @@ impl<'a> FileWriter<'a> {
         result
     }
 
-    /// Non-CA: no hashing, blocks addressed by (file, index) and shipped
-    /// straight out.
+    /// Non-CA: no content hashing — blocks are keyed by (file, index)
+    /// and always transferred, but placement still comes from the
+    /// manager (same [`Sai::alloc_placement`] path as CA modes).
     fn process_non_ca(&mut self, buf: &[u8]) -> Result<()> {
+        let mut blocks = Vec::new();
+        let mut digests = Vec::new();
         for blk in buf.chunks(self.sai.cfg.block_size) {
             let ModeState::None { index } = &mut self.mode else {
                 return Err(Error::Other("mode state mismatch".into()));
@@ -202,20 +243,10 @@ impl<'a> FileWriter<'a> {
             let mut key = Vec::with_capacity(self.name.len() + 8);
             key.extend_from_slice(self.name.as_bytes());
             key.extend_from_slice(&i.to_le_bytes());
-            let hash = md5(&key);
-            let node = (i as usize % self.sai.stripe()) as u32;
-            self.pending
-                .push(self.sai.nodes[node as usize].put(hash, blk.to_vec()));
-            self.report.new_blocks += 1;
-            self.report.new_bytes += blk.len() as u64;
-            self.metas.push(BlockMeta {
-                hash,
-                len: blk.len() as u32,
-                node,
-            });
-            self.collect_window(2 * self.sai.stripe())?;
+            digests.push(md5(&key));
+            blocks.push(blk.to_vec());
         }
-        Ok(())
+        self.place_batch(blocks, &digests)
     }
 
     /// CDC: window-hash this buffer (async where the engine allows),
@@ -274,10 +305,12 @@ impl<'a> FileWriter<'a> {
                 blocks.len()
             )));
         }
-        for (blk, digest) in blocks.iter().zip(digests) {
-            self.place_block(blk, digest);
-        }
-        self.collect_window(2 * self.sai.stripe())
+        // The ticket has been redeemed, so the engine normally dropped
+        // its clone of the batch and the unwrap is copy-free; a still-
+        // shared batch falls back to one clone (never worse than a
+        // per-block copy).
+        let owned = Arc::try_unwrap(blocks).unwrap_or_else(|a| a.as_ref().clone());
+        self.place_batch(owned, &digests)
     }
 
     fn add_hash_timing(&mut self, t: HashTiming) {
@@ -285,28 +318,54 @@ impl<'a> FileWriter<'a> {
         self.report.hash_hidden_secs += t.hidden.as_secs_f64();
     }
 
-    /// Dedup decision + transfer for one block.
-    fn place_block(&mut self, data: &[u8], digest: Digest) {
-        if let Some(&node) = self.known.get(&digest) {
-            self.report.dup_blocks += 1;
-            self.metas.push(BlockMeta {
-                hash: digest,
-                len: data.len() as u32,
-                node,
-            });
-            return;
+    /// Manager-driven placement + transfer for one hashed batch: one
+    /// [`Msg::AllocPlacement`] round-trip, then fresh blocks go out to
+    /// every assigned replica while duplicates only land in the map.
+    fn place_batch(&mut self, blocks: Vec<Vec<u8>>, digests: &[Digest]) -> Result<()> {
+        if blocks.is_empty() {
+            return Ok(());
         }
-        let node = (self.metas.len() % self.sai.stripe()) as u32;
-        self.pending
-            .push(self.sai.nodes[node as usize].put(digest, data.to_vec()));
-        self.known.insert(digest, node);
-        self.report.new_blocks += 1;
-        self.report.new_bytes += data.len() as u64;
-        self.metas.push(BlockMeta {
-            hash: digest,
-            len: data.len() as u32,
-            node,
-        });
+        let specs: Vec<BlockSpec> = digests
+            .iter()
+            .zip(&blocks)
+            .map(|(h, b)| BlockSpec {
+                hash: *h,
+                len: b.len() as u32,
+            })
+            .collect();
+        let assignments = self.sai.alloc_placement(&self.claim, specs)?;
+        // Every occurrence is now claimed on the manager; register them
+        // for release-on-abort BEFORE anything below can fail, so a
+        // mid-batch error never strands pending claims.
+        self.alloced.extend(digests.iter().copied());
+        // Non-CA keys are positional, not content hashes: a rewrite
+        // reuses the key with different bytes, so the data must always
+        // be transferred even when the manager already knows the key.
+        let always_transfer = self.sai.cfg.ca_mode == CaMode::None;
+        for ((data, digest), asg) in blocks.into_iter().zip(digests).zip(assignments) {
+            let len = data.len();
+            if asg.fresh || always_transfer {
+                // The payload moves into one shared allocation serving
+                // every replica — no copies on the transfer path.
+                let payload = Arc::new(data);
+                for &id in &asg.replicas {
+                    self.pending
+                        .push(self.sai.node(id)?.put(*digest, payload.clone()));
+                }
+                self.report.new_blocks += 1;
+                self.report.new_payload_bytes += len as u64;
+                self.report.new_bytes += (len * asg.replicas.len()) as u64;
+                self.report.replication = self.report.replication.max(asg.replicas.len());
+            } else {
+                self.report.dup_blocks += 1;
+            }
+            self.metas.push(BlockMeta {
+                hash: *digest,
+                len: len as u32,
+                replicas: asg.replicas,
+            });
+        }
+        self.collect_window(2 * self.sai.stripe())
     }
 
     /// Await acks until at most `max_left` puts remain outstanding.
@@ -316,6 +375,23 @@ impl<'a> FileWriter<'a> {
             rx.recv().map_err(|_| closed())??;
         }
         Ok(())
+    }
+}
+
+impl Drop for FileWriter<'_> {
+    fn drop(&mut self) {
+        if !self.committed {
+            // Abandoned session: wait out the in-flight puts (so a GC
+            // delete cannot be overtaken by a straggling transfer),
+            // then hand the provisional claims back so the manager can
+            // reclaim the blocks.  All best effort with bounded waits —
+            // a frozen node or dead manager must not hang the drop
+            // (stranded claims are an accepted cost, see ROADMAP).
+            for rx in self.pending.drain(..) {
+                let _ = rx.recv_timeout(Duration::from_secs(5));
+            }
+            self.sai.release_blocks(std::mem::take(&mut self.alloced));
+        }
     }
 }
 
@@ -334,25 +410,32 @@ impl Write for FileWriter<'_> {
 }
 
 /// Streaming read session (from [`Sai::open`]).  Implements
-/// [`std::io::Read`]: blocks are prefetched from the stripe nodes ahead
-/// of the consumer and each block's content hash is re-verified before
-/// its bytes are served (CA modes).
+/// [`std::io::Read`]: blocks are prefetched from their replica nodes
+/// ahead of the consumer and each block's content hash is re-verified
+/// before its bytes are served (CA modes).  When a copy cannot be
+/// fetched — node down, short read, integrity mismatch — the reader
+/// transparently fails over to the block's remaining replicas and only
+/// errors once every copy has been tried.
 pub struct FileReader<'a> {
     sai: &'a Sai,
     blocks: Vec<BlockMeta>,
     version: u64,
-    /// Next block index to request from its node.
+    /// Next block index to request from its primary replica.
     next_fetch: usize,
     /// Next block index to hand to the consumer.
     next_read: usize,
-    /// Outstanding fetches, in block order.
-    rxs: VecDeque<Receiver<Result<Vec<u8>>>>,
+    /// Outstanding fetches, in block order: (replica id tried, rx).
+    /// `id == u32::MAX` marks a block with no reachable replica at
+    /// prefetch time (resolved — or failed — via failover).
+    rxs: VecDeque<(u32, Receiver<Result<Vec<u8>>>)>,
+    /// Blocks served from a non-primary replica (failover events).
+    failovers: usize,
     /// Current block being drained by `read`.
     cur: Vec<u8>,
     cur_off: usize,
-    /// Once any block fails (transport, length, integrity), the session
-    /// is poisoned: fetch/read bookkeeping is no longer aligned, so all
-    /// further reads fail instead of serving misattributed blocks.
+    /// Once a block fails on EVERY replica the session is poisoned:
+    /// fetch/read bookkeeping is no longer aligned, so all further
+    /// reads fail instead of serving misattributed blocks.
     failed: bool,
 }
 
@@ -369,11 +452,12 @@ impl<'a> FileReader<'a> {
             next_fetch: 0,
             next_read: 0,
             rxs: VecDeque::new(),
+            failovers: 0,
             cur: Vec::new(),
             cur_off: 0,
             failed: false,
         };
-        r.prefetch()?;
+        r.prefetch();
         Ok(r)
     }
 
@@ -397,25 +481,40 @@ impl<'a> FileReader<'a> {
         self.blocks.len()
     }
 
+    /// Blocks that were served from a fallback replica after the first
+    /// attempt failed (node down or copy corrupt).
+    pub fn failover_count(&self) -> usize {
+        self.failovers
+    }
+
     /// Keep up to `2 * stripe` fetches outstanding ahead of the reader.
-    fn prefetch(&mut self) -> Result<()> {
+    /// Each block is requested from its first *connected* replica;
+    /// blocks with no connected replica enter the queue as immediate
+    /// failures and are retried (and properly diagnosed) by the
+    /// failover path.
+    fn prefetch(&mut self) {
         let window = 2 * self.sai.stripe().max(1);
         while self.next_fetch < self.blocks.len() && self.rxs.len() < window {
             let b = &self.blocks[self.next_fetch];
-            let node = self
-                .sai
-                .nodes
-                .get(b.node as usize)
-                .ok_or_else(|| Error::Node(format!("block maps to unknown node {}", b.node)))?;
-            self.rxs.push_back(node.get(b.hash));
+            let entry = b
+                .replicas
+                .iter()
+                .find_map(|&id| self.sai.node(id).ok().map(|n| (id, n.get(b.hash))))
+                .unwrap_or_else(|| {
+                    // No replica reachable: a receiver whose sender is
+                    // gone yields an immediate RecvError downstream.
+                    (u32::MAX, std::sync::mpsc::channel().1)
+                });
+            self.rxs.push_back(entry);
             self.next_fetch += 1;
         }
-        Ok(())
     }
 
-    /// Fetch, verify and return the next whole block (None at EOF).
-    /// Any error poisons the session: subsequent calls keep failing
-    /// rather than serving blocks misaligned with their metadata.
+    /// Fetch, verify and return the next whole block (None at EOF),
+    /// failing over across replicas.  An error means every replica of
+    /// the block failed; it poisons the session and subsequent calls
+    /// keep failing rather than serving blocks misaligned with their
+    /// metadata.
     pub fn next_block(&mut self) -> Result<Option<Vec<u8>>> {
         if self.failed {
             return Err(Error::Node("read session failed earlier".into()));
@@ -429,13 +528,8 @@ impl<'a> FileReader<'a> {
         }
     }
 
-    fn next_block_inner(&mut self) -> Result<Option<Vec<u8>>> {
-        if self.next_read >= self.blocks.len() {
-            return Ok(None);
-        }
-        let rx = self.rxs.pop_front().expect("prefetch invariant");
-        let data = rx.recv().map_err(|_| closed())??;
-        let meta = &self.blocks[self.next_read];
+    /// Validate one fetched copy against the block's metadata.
+    fn check(&self, meta: &BlockMeta, data: &[u8]) -> Result<()> {
         if data.len() != meta.len as usize {
             return Err(Error::Node(format!(
                 "block length mismatch: got {}, expected {}",
@@ -445,13 +539,71 @@ impl<'a> FileReader<'a> {
         }
         if self.sai.cfg.ca_mode != CaMode::None {
             // Integrity check: recompute the content hash.
-            let th = self.sai.engine.direct_hash(&data)?;
+            let th = self.sai.engine.direct_hash(data)?;
             if th != meta.hash {
                 return Err(Error::Node("block integrity check failed".into()));
             }
         }
+        Ok(())
+    }
+
+    fn next_block_inner(&mut self) -> Result<Option<Vec<u8>>> {
+        if self.next_read >= self.blocks.len() {
+            return Ok(None);
+        }
+        let (tried, rx) = self.rxs.pop_front().expect("prefetch invariant");
+        let primary = rx
+            .recv()
+            .map_err(|_| closed())
+            .and_then(|r| r)
+            .and_then(|data| {
+                self.check(&self.blocks[self.next_read], &data)?;
+                Ok(data)
+            });
+        let data = match primary {
+            Ok(data) => data,
+            Err(first_err) => {
+                // Failover: try the remaining replicas synchronously.
+                let meta = self.blocks[self.next_read].clone();
+                let mut last_err = first_err;
+                let mut found = None;
+                for &id in meta.replicas.iter().filter(|&&id| id != tried) {
+                    let res = match self.sai.node(id) {
+                        Ok(n) => n
+                            .get(meta.hash)
+                            .recv()
+                            .map_err(|_| closed())
+                            .and_then(|r| r),
+                        Err(e) => Err(e),
+                    };
+                    match res.and_then(|data| {
+                        self.check(&meta, &data)?;
+                        Ok(data)
+                    }) {
+                        Ok(data) => {
+                            found = Some(data);
+                            break;
+                        }
+                        Err(e) => last_err = e,
+                    }
+                }
+                match found {
+                    Some(data) => {
+                        self.failovers += 1;
+                        data
+                    }
+                    None => {
+                        return Err(Error::Node(format!(
+                            "block {} failed on all {} replica(s): {last_err}",
+                            self.next_read,
+                            meta.replicas.len().max(1)
+                        )))
+                    }
+                }
+            }
+        };
         self.next_read += 1;
-        self.prefetch()?;
+        self.prefetch();
         Ok(Some(data))
     }
 }

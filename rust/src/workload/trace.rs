@@ -292,6 +292,7 @@ read ckpt -
             nodes: 2,
             link_bps: 1e9,
             shape: false,
+            replication: 1,
         })
         .unwrap();
         let cfg = ClientConfig {

@@ -11,7 +11,7 @@ use gpustore::hash::{
     direct_hash_cpu, md5, window_hashes, Md5, DEFAULT_P, DEFAULT_WINDOW,
 };
 use gpustore::runtime::artifacts::Manifest;
-use gpustore::store::proto::{BlockMeta, Msg};
+use gpustore::store::proto::{Assignment, BlockMeta, BlockSpec, Msg, NodeEntry};
 use gpustore::util::Rng;
 
 const CASES: u64 = 40;
@@ -133,10 +133,11 @@ fn prop_proto_roundtrip() {
             .map(|_| {
                 let mut hash = [0u8; 16];
                 rng.fill(&mut hash);
+                let n_replicas = rng.range(1, 5);
                 BlockMeta {
                     hash,
                     len: rng.next_u64() as u32,
-                    node: rng.range(0, 8) as u32,
+                    replicas: (0..n_replicas).map(|_| rng.range(0, 8) as u32).collect(),
                 }
             })
             .collect();
@@ -147,7 +148,38 @@ fn prop_proto_roundtrip() {
             },
             Msg::BlockMap {
                 version: rng.next_u64(),
-                blocks,
+                blocks: blocks.clone(),
+            },
+            Msg::AllocPlacement {
+                file: format!("file-{seed}"),
+                blocks: blocks
+                    .iter()
+                    .map(|b| BlockSpec {
+                        hash: b.hash,
+                        len: b.len,
+                    })
+                    .collect(),
+            },
+            Msg::Placement {
+                assignments: blocks
+                    .iter()
+                    .map(|b| Assignment {
+                        replicas: b.replicas.clone(),
+                        fresh: rng.next_u64() % 2 == 0,
+                    })
+                    .collect(),
+            },
+            Msg::Nodes {
+                nodes: (0..rng.range(0, 6))
+                    .map(|i| NodeEntry {
+                        id: i as u32,
+                        addr: format!("10.0.0.{i}:{}", 7000 + i),
+                        alive: rng.next_u64() % 2 == 0,
+                    })
+                    .collect(),
+            },
+            Msg::ReleaseBlocks {
+                hashes: blocks.iter().map(|b| b.hash).collect(),
             },
             Msg::PutBlock {
                 hash: [seed as u8; 16],
@@ -284,12 +316,22 @@ fn prop_streaming_oneshot_equivalence() {
     use gpustore::store::Cluster;
     use std::io::Write as _;
 
-    let cluster = Cluster::spawn(ClusterConfig {
-        nodes: 3,
-        link_bps: 1e9,
-        shape: false,
-    })
-    .unwrap();
+    // Dedup (and the round-robin placement cursor) is manager-global
+    // under control-plane v2, so the one-shot and streaming paths are
+    // compared on *twin clusters*: both see the exact same sequence of
+    // writes, so equivalent clients must produce identical reports and
+    // byte-identical block-maps.
+    let mk_cluster = || {
+        Cluster::spawn(ClusterConfig {
+            nodes: 3,
+            link_bps: 1e9,
+            shape: false,
+            replication: 1,
+        })
+        .unwrap()
+    };
+    let cluster_one = mk_cluster();
+    let cluster_str = mk_cluster();
     let gpu_master = {
         let opts = CrystalOpts::optimized(BackendKind::Mock {
             artifact_dir: Manifest::default_dir(),
@@ -316,18 +358,19 @@ fn prop_streaming_oneshot_equivalence() {
             stripe_width: rng.range(1, 4),
             ..ClientConfig::default()
         };
-        let sai = cluster.client(cfg, engine.clone()).unwrap();
+        let sai_one = cluster_one.client(cfg.clone(), engine.clone()).unwrap();
+        let sai_str = cluster_str.client(cfg, engine.clone()).unwrap();
 
         // Two versions, so the second write exercises dedup against the
         // previous block-map on both paths.
         let len = rng.range(1, 300_000);
         let mut data = rng.bytes(len);
         for version in 0..2 {
-            let one_name = format!("eq-{seed}-one");
-            let str_name = format!("eq-{seed}-str");
-            let r_one = sai.write_file(&one_name, &data).unwrap();
+            // Same file name on both clusters: non-CA keys embed it.
+            let name = format!("eq-{seed}");
+            let r_one = sai_one.write_file(&name, &data).unwrap();
 
-            let mut w = sai.create(&str_name).unwrap();
+            let mut w = sai_str.create(&name).unwrap();
             let mut off = 0;
             while off < data.len() {
                 let take = rng.range(1, 80_000).min(data.len() - off);
@@ -347,27 +390,126 @@ fn prop_streaming_oneshot_equivalence() {
             assert_eq!(r_one.new_bytes, r_str.new_bytes, "{ctx}");
             assert!((r_one.similarity - r_str.similarity).abs() < 1e-12, "{ctx}");
 
-            let (_, m_one) = sai.get_block_map(&one_name).unwrap();
-            let (_, m_str) = sai.get_block_map(&str_name).unwrap();
-            if mode == CaMode::None {
-                // Non-CA block keys embed the file name; compare layout.
-                assert_eq!(m_one.len(), m_str.len(), "{ctx}");
-                for (a, b) in m_one.iter().zip(&m_str) {
-                    assert_eq!((a.len, a.node), (b.len, b.node), "{ctx}");
-                }
-            } else {
-                // Content-addressed: maps must be byte-identical.
-                assert_eq!(m_one, m_str, "{ctx}");
-            }
+            // Identical write sequences against identical clusters must
+            // yield byte-identical block-maps (hashes, lengths, AND
+            // manager-assigned replica sets) in every mode.
+            let (_, m_one) = sai_one.get_block_map(&name).unwrap();
+            let (_, m_str) = sai_str.get_block_map(&name).unwrap();
+            assert_eq!(m_one, m_str, "{ctx}");
 
-            assert_eq!(sai.read_file(&one_name).unwrap(), data, "{ctx}");
-            assert_eq!(sai.read_file(&str_name).unwrap(), data, "{ctx}");
+            assert_eq!(sai_one.read_file(&name).unwrap(), data, "{ctx}");
+            assert_eq!(sai_str.read_file(&name).unwrap(), data, "{ctx}");
 
             // Mutate for the next version (insert keeps most content).
             let at = rng.range(0, data.len());
             let n = rng.range(1, 500);
             let ins = rng.bytes(n);
             data.splice(at..at, ins);
+        }
+    }
+}
+
+/// SATELLITE (robustness): every strict prefix of every message's
+/// payload must decode to a clean `Error::Proto` — never a panic, never
+/// a bogus success — and so must payloads with trailing garbage.
+/// Random garbage payloads for every tag must not panic either.
+#[test]
+fn prop_proto_truncation_robustness() {
+    let meta = |i: u8| BlockMeta {
+        hash: [i; 16],
+        len: 64 + i as u32,
+        replicas: vec![0, 1],
+    };
+    // One representative per wire tag (1..=23), with non-empty payloads
+    // wherever the message has any fields.
+    let msgs = vec![
+        Msg::GetBlockMap { file: "f".into() },
+        Msg::CommitBlockMap {
+            file: "f".into(),
+            blocks: vec![meta(1), meta(2)],
+        },
+        Msg::ListFiles,
+        Msg::BlockMap {
+            version: 3,
+            blocks: vec![meta(3)],
+        },
+        Msg::Files {
+            files: vec![("a".into(), 1), ("b".into(), 2)],
+        },
+        Msg::PutBlock {
+            hash: [4; 16],
+            data: vec![9; 100],
+        },
+        Msg::HasBlock { hash: [5; 16] },
+        Msg::GetBlock { hash: [6; 16] },
+        Msg::NodeStats,
+        Msg::Data { data: vec![7; 50] },
+        Msg::Stats { blocks: 1, bytes: 2 },
+        Msg::Ok,
+        Msg::Bool(true),
+        Msg::Err("boom".into()),
+        Msg::AllocPlacement {
+            file: "f".into(),
+            blocks: vec![BlockSpec { hash: [8; 16], len: 10 }],
+        },
+        Msg::Placement {
+            assignments: vec![Assignment {
+                replicas: vec![0, 2],
+                fresh: true,
+            }],
+        },
+        Msg::NodeJoin { addr: "h:1".into() },
+        Msg::NodeId { id: 1 },
+        Msg::Heartbeat { node: 2 },
+        Msg::NodeList,
+        Msg::Nodes {
+            nodes: vec![NodeEntry {
+                id: 0,
+                addr: "h:1".into(),
+                alive: true,
+            }],
+        },
+        Msg::ReleaseBlocks {
+            hashes: vec![[9; 16], [10; 16]],
+        },
+        Msg::DeleteBlock { hash: [11; 16] },
+    ];
+    // Every tag is represented exactly once.
+    let mut tags: Vec<u8> = msgs.iter().map(|m| m.encode()[4]).collect();
+    tags.sort_unstable();
+    assert_eq!(tags, (1..=23).collect::<Vec<u8>>(), "tag coverage");
+
+    for m in &msgs {
+        let frame = m.encode();
+        let tag = frame[4];
+        let payload = &frame[5..];
+        // Sanity: the full payload round-trips.
+        assert_eq!(&Msg::decode(tag, payload).unwrap(), m);
+        // Every strict prefix must fail cleanly.
+        for cut in 0..payload.len() {
+            match Msg::decode(tag, &payload[..cut]) {
+                Err(gpustore::Error::Proto(_)) => {}
+                Ok(got) => panic!("truncated {m:?} at {cut} decoded as {got:?}"),
+                Err(e) => panic!("non-proto error for truncated {m:?}: {e:?}"),
+            }
+        }
+        // Trailing garbage must fail cleanly too.
+        let mut long = payload.to_vec();
+        long.extend_from_slice(&[0xAB, 0xCD, 0xEF]);
+        assert!(
+            matches!(Msg::decode(tag, &long), Err(gpustore::Error::Proto(_))),
+            "garbage tail accepted for {m:?}"
+        );
+    }
+
+    // Fuzz: random payload bytes against every tag (including unknown
+    // tags) must never panic.
+    let mut rng = Rng::new(0xF00D);
+    for tag in 0..=30u8 {
+        for _ in 0..50 {
+            let n = rng.range(0, 128);
+            let p = rng.bytes(n);
+            let _ = Msg::decode(tag, &p);
         }
     }
 }
@@ -382,6 +524,7 @@ fn prop_store_write_read_fuzz() {
         nodes: 3,
         link_bps: 1e9,
         shape: false,
+        replication: 1,
     })
     .unwrap();
     for seed in 800..806 {

@@ -16,6 +16,18 @@ fn small_cluster() -> Cluster {
         nodes: 4,
         link_bps: 1e9,
         shape: false, // wall-clock tests don't want pacing
+        replication: 1,
+    })
+    .unwrap()
+}
+
+/// 4 nodes, 2 copies per block.
+fn replicated_cluster() -> Cluster {
+    Cluster::spawn(ClusterConfig {
+        nodes: 4,
+        link_bps: 1e9,
+        shape: false,
+        replication: 2,
     })
     .unwrap()
 }
@@ -109,7 +121,10 @@ fn streaming_session_roundtrip_all_modes() {
 #[test]
 fn streaming_writer_matches_oneshot_wrapper() {
     // write_file is a wrapper over the session; both must produce the
-    // same block-map and dedup accounting.
+    // same block-map.  Since dedup is now manager-global, the second
+    // file's blocks are all duplicates of the first file's — the
+    // block-maps still come out identical (same hashes, same
+    // manager-assigned homes), and no byte is transferred twice.
     let cluster = small_cluster();
     let sai = cluster.client(fixed_cfg(), cpu_engine()).unwrap();
     let data = Rng::new(7).bytes(500_000);
@@ -122,12 +137,17 @@ fn streaming_writer_matches_oneshot_wrapper() {
     let r2 = w.close().unwrap();
 
     assert_eq!(r1.blocks, r2.blocks);
-    assert_eq!(r1.new_blocks, r2.new_blocks);
-    assert_eq!(r1.dup_blocks, r2.dup_blocks);
-    assert_eq!(r1.new_bytes, r2.new_bytes);
+    assert!(r1.new_blocks > 0);
+    assert_eq!(r2.new_blocks, 0, "cross-file dedup via the manager");
+    assert_eq!(r2.dup_blocks, r1.blocks);
+    assert_eq!(r2.new_bytes, 0);
     let (_, m1) = sai.get_block_map("one.bin").unwrap();
     let (_, m2) = sai.get_block_map("str.bin").unwrap();
     assert_eq!(m1, m2, "content-addressed block maps must be identical");
+    // One physical copy serves both files.
+    let (blocks, bytes) = cluster.storage_stats();
+    assert_eq!(blocks as usize, r1.blocks);
+    assert_eq!(bytes, 500_000);
 }
 
 #[test]
@@ -136,13 +156,20 @@ fn dropped_writer_commits_nothing() {
     let sai = cluster.client(fixed_cfg(), cpu_engine()).unwrap();
     {
         let mut w = sai.create("abandoned.bin").unwrap();
-        w.write_all(&Rng::new(8).bytes(200_000)).unwrap();
+        // 600 KB > two full 256 KB write buffers, so blocks were
+        // hashed, allocated from the manager and transferred before
+        // the drop.
+        w.write_all(&Rng::new(8).bytes(600_000)).unwrap();
         // Dropped without close().
     }
     let (version, blocks) = sai.get_block_map("abandoned.bin").unwrap();
     assert_eq!(version, 0, "no version without close()");
     assert!(blocks.is_empty());
     assert!(sai.open("abandoned.bin").is_err());
+    // The drop released the session's provisional claims; the manager
+    // GC'd the already-transferred blocks off the nodes.
+    let (b, by) = cluster.storage_stats();
+    assert_eq!((b, by), (0, 0), "abandoned write leaves no garbage");
 }
 
 #[test]
@@ -334,10 +361,11 @@ fn striping_spreads_blocks_across_nodes() {
     let data = Rng::new(14).bytes(1_000_000); // 16 distinct blocks
     sai.write_file("stripe.bin", &data).unwrap();
     let (_, map) = sai.get_block_map("stripe.bin").unwrap();
-    let mut nodes: Vec<u32> = map.iter().map(|b| b.node).collect();
+    let mut nodes: Vec<u32> = map.iter().flat_map(|b| b.replicas.clone()).collect();
     nodes.sort_unstable();
     nodes.dedup();
     assert_eq!(nodes, vec![0, 1, 2, 3], "all 4 stripe nodes used");
+    assert!(map.iter().all(|b| b.replicas.len() == 1), "replication 1");
 }
 
 #[test]
@@ -363,6 +391,7 @@ fn shaped_cluster_still_correct() {
         nodes: 4,
         link_bps: 1e9,
         shape: true,
+        replication: 1,
     })
     .unwrap();
     let sai = cluster.client(fixed_cfg(), cpu_engine()).unwrap();
@@ -388,7 +417,7 @@ fn verify_file_detects_corruption() {
     let (_, map) = sai.get_block_map("scrub.bin").unwrap();
     let victim = &map[2];
     // Overwrite the stored payload under the same key.
-    let node = &cluster.node_addrs()[victim.node as usize];
+    let node = &cluster.node_addrs()[victim.primary().unwrap() as usize];
     let mut c = gpustore::net::Conn::connect(node).unwrap();
     Msg::PutBlock {
         hash: victim.hash,
@@ -433,6 +462,7 @@ fn node_failure_mid_stream_surfaces_error() {
         nodes: 4,
         link_bps: 1e9,
         shape: false,
+        replication: 1,
     })
     .unwrap();
     let sai = cluster.client(fixed_cfg(), cpu_engine()).unwrap();
@@ -443,6 +473,107 @@ fn node_failure_mid_stream_surfaces_error() {
     std::thread::sleep(std::time::Duration::from_millis(50));
     let res = sai.write_file("post.bin", &Rng::new(22).bytes(512 * 1024));
     assert!(res.is_err(), "write must fail when a stripe node is down");
+}
+
+#[test]
+fn replicated_write_spreads_copies() {
+    let cluster = replicated_cluster();
+    let sai = cluster.client(fixed_cfg(), cpu_engine()).unwrap();
+    let data = Rng::new(40).bytes(1_000_000); // 16 distinct blocks
+    let rep = sai.write_file("r2.bin", &data).unwrap();
+    assert_eq!(rep.replication, 2);
+    assert_eq!(rep.new_blocks, 16);
+    assert_eq!(rep.new_bytes, 2_000_000, "every byte transferred twice");
+    let (_, map) = sai.get_block_map("r2.bin").unwrap();
+    assert!(map.iter().all(|b| {
+        b.replicas.len() == 2 && b.replicas[0] != b.replicas[1]
+    }));
+    let (blocks, bytes) = cluster.storage_stats();
+    assert_eq!(blocks, 32, "16 blocks x 2 copies");
+    assert_eq!(bytes, 2_000_000);
+    assert_eq!(sai.read_file("r2.bin").unwrap(), data);
+}
+
+#[test]
+fn reader_fails_over_when_node_dies() {
+    // The acceptance-criteria kill-a-node test: with replication 2, the
+    // full file reads back after one storage node is gone.
+    let mut cluster = replicated_cluster();
+    let sai = cluster.client(fixed_cfg(), cpu_engine()).unwrap();
+    let data = Rng::new(41).bytes(1_000_000);
+    sai.write_file("failover.bin", &data).unwrap();
+    let (_, map) = sai.get_block_map("failover.bin").unwrap();
+    // Kill the primary replica of the first block: at least that block
+    // (and every other block fronted by the same node) must fail over.
+    let victim = map[0].primary().unwrap() as usize;
+    cluster.kill_node(victim);
+    std::thread::sleep(std::time::Duration::from_millis(50));
+
+    let mut r = sai.open("failover.bin").unwrap();
+    let mut back = Vec::new();
+    r.read_to_end(&mut back).unwrap();
+    assert_eq!(back, data, "file served transparently from replicas");
+    assert!(r.failover_count() > 0, "failover path was exercised");
+
+    // The scrub sees the dead node's copies as unverifiable but every
+    // block still has one good copy.
+    let (ok, bad) = sai.verify_file("failover.bin").unwrap();
+    assert!(bad > 0, "dead node's copies unverifiable");
+    assert!(ok >= map.len(), "every block retains a healthy copy");
+}
+
+#[test]
+fn manager_gc_reclaims_overwritten_blocks() {
+    // The acceptance-criteria GC test: overwriting a version releases
+    // the old blocks and the nodes' byte counts shrink.
+    let cluster = small_cluster();
+    let sai = cluster.client(fixed_cfg(), cpu_engine()).unwrap();
+    let v1 = Rng::new(42).bytes(512 * 1024);
+    sai.write_file("gc.bin", &v1).unwrap();
+    let (_, by1) = cluster.storage_stats();
+    assert_eq!(by1, 512 * 1024);
+    // Overwrite with unrelated, smaller content: all v1 blocks orphan.
+    let v2 = Rng::new(43).bytes(256 * 1024);
+    sai.write_file("gc.bin", &v2).unwrap();
+    let (b2, by2) = cluster.storage_stats();
+    assert_eq!(by2, 256 * 1024, "old version reclaimed from the nodes");
+    assert_eq!(b2, 4, "4 x 64 KB blocks remain");
+    assert_eq!(sai.read_file("gc.bin").unwrap(), v2);
+    // Overwriting with identical content is GC-neutral.
+    sai.write_file("gc.bin", &v2).unwrap();
+    assert_eq!(cluster.storage_stats().1, 256 * 1024);
+}
+
+#[test]
+fn replicated_gc_deletes_all_copies() {
+    let cluster = replicated_cluster();
+    let sai = cluster.client(fixed_cfg(), cpu_engine()).unwrap();
+    let v1 = Rng::new(44).bytes(512 * 1024);
+    sai.write_file("rgc.bin", &v1).unwrap();
+    assert_eq!(cluster.storage_stats().1, 2 * 512 * 1024);
+    let v2 = Rng::new(45).bytes(256 * 1024);
+    sai.write_file("rgc.bin", &v2).unwrap();
+    let (blocks, bytes) = cluster.storage_stats();
+    assert_eq!(bytes, 2 * 256 * 1024, "both copies of old blocks deleted");
+    assert_eq!(blocks, 8);
+}
+
+#[test]
+fn client_bootstraps_from_manager_alone() {
+    // Control-plane v2: Sai::connect takes only the manager address and
+    // discovers the nodes from the registry.
+    use gpustore::hashgpu::build_engine;
+    use gpustore::store::Sai;
+    let cluster = small_cluster();
+    let cfg = fixed_cfg();
+    let engine = build_engine(&cfg, None).unwrap();
+    let sai = Sai::connect(cluster.manager_addr(), cfg, engine, None).unwrap();
+    let nodes = sai.list_nodes().unwrap();
+    assert_eq!(nodes.len(), 4);
+    assert!(nodes.iter().all(|n| n.alive));
+    let data = Rng::new(46).bytes(200_000);
+    sai.write_file("boot.bin", &data).unwrap();
+    assert_eq!(sai.read_file("boot.bin").unwrap(), data);
 }
 
 #[test]
