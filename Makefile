@@ -3,7 +3,7 @@
 # `artifacts` needs a Python environment with JAX (see
 # python/compile/aot.py); everything else is pure cargo.
 
-.PHONY: all artifacts test bench smoke clean
+.PHONY: all artifacts test bench smoke sleep-guard clean
 
 all: test
 
@@ -14,9 +14,25 @@ artifacts:
 	python3 python/compile/aot.py --out artifacts
 
 # The tier-1 gate.
-test:
+test: sleep-guard
 	cargo build --release
 	cargo test -q
+
+# Determinism guard: the fault-injection suite drives timeouts through
+# the manager's clock hook, so no test may hide behind a wall-clock
+# sleep longer than 100 ms.  Allowlist, not blocklist: the ONLY
+# accepted form is an inline `sleep(Duration::from_millis(N))` with
+# N <= 100 — named constants, from_secs, and wrapped/multi-line
+# arguments all fail, so a slow sleep can't slip past the grep.
+sleep-guard:
+	@bad=$$(grep -rnE 'sleep\(' rust/tests --include='*.rs' \
+	  | grep -vE 'sleep\((std::time::)?Duration::from_millis\((100|[0-9]{1,2})\)\)' \
+	  || true); \
+	if [ -n "$$bad" ]; then \
+	  echo "FAIL: tests may only sleep via an inline Duration::from_millis(<=100):"; \
+	  echo "$$bad"; exit 1; \
+	fi
+	@echo "sleep-guard: OK (no test sleeps > 100 ms)"
 
 # Figure-regeneration harness (writes BENCH_pr2.json) + hot-path
 # microbenchmarks.

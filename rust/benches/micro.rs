@@ -136,6 +136,7 @@ fn main() {
             link_bps: 1e9,
             shape: false,
             replication: 1,
+            ..ClusterConfig::default()
         })
         .unwrap();
         let modes = [

@@ -1,6 +1,8 @@
 //! Typed configuration for the storage system and its experiments,
 //! mirroring the paper's evaluated setups (§4).
 
+use std::time::Duration;
+
 use crate::chunking::ChunkParams;
 
 /// Content-addressability mode of the client SAI.
@@ -196,6 +198,11 @@ pub struct ClusterConfig {
     /// `ReplicatedStripe` when > 1, classic round-robin when 1).
     /// Must be `1 <= replication <= nodes`.
     pub replication: usize,
+    /// Manager lease timeout (control-plane v3): how long a read
+    /// session's version pins and a write session's claims survive
+    /// without a renewal.  Surfaced like `replication`
+    /// (`--lease-timeout` in the CLI); must be non-zero.
+    pub lease_timeout: Duration,
 }
 
 impl Default for ClusterConfig {
@@ -205,6 +212,7 @@ impl Default for ClusterConfig {
             link_bps: 1e9,
             shape: true,
             replication: 1,
+            lease_timeout: Duration::from_secs(30),
         }
     }
 }

@@ -14,9 +14,11 @@
 
 use std::collections::HashMap;
 use std::io::{Read as _, Write as _};
+use std::time::Duration;
 
 use gpustore::config::{CaMode, ClientConfig, ClusterConfig, HashEngineKind};
 use gpustore::hashgpu::build_engine;
+use gpustore::store::manager::DEFAULT_LEASE_TIMEOUT;
 use gpustore::store::proto::MAX_REPLICAS;
 use gpustore::store::{policy_for, Cluster, Manager, Sai, StorageNode};
 use gpustore::util::{human_bytes, Rng};
@@ -66,7 +68,7 @@ fn print_usage() {
     println!(
         "gpustore — GPU-accelerated content-addressable storage \
          (TPDS'12 reproduction)\n\n\
-         USAGE:\n  gpustore manager --listen ADDR [--replication N]\n  \
+         USAGE:\n  gpustore manager --listen ADDR [--replication N] [--lease-timeout SECS]\n  \
          gpustore node --listen ADDR --manager ADDR [--advertise ADDR] [--disk DIR]\n  \
          gpustore write --manager ADDR [--mode fixed|cdc|none]\n\
          \x20                [--engine cpu|gpu|oracle] [--threads N]\n\
@@ -75,7 +77,7 @@ fn print_usage() {
          gpustore verify --manager ADDR --file NAME\n  \
          gpustore ls --manager ADDR\n  \
          gpustore trace --manager ADDR --trace FILE [--seed N]\n  \
-         gpustore demo [--replication N]\n\n\
+         gpustore demo [--replication N] [--lease-timeout SECS]\n\n\
          Nodes register with the manager; clients discover them from it\n\
          (no --nodes flag).  `make artifacts` must have produced\n\
          artifacts/ for --engine gpu."
@@ -172,14 +174,35 @@ fn parse_replication(flags: &HashMap<String, String>) -> Result<usize> {
     }
 }
 
+/// Parse `--lease-timeout` (whole seconds, fractional allowed, e.g.
+/// `0.5`) as strictly as `--replication`: malformed, zero, or
+/// out-of-range fails loudly rather than silently running with a
+/// default (or panicking on Duration overflow).
+fn parse_lease_timeout(flags: &HashMap<String, String>) -> Result<Duration> {
+    match flags.get("lease-timeout") {
+        None => Ok(DEFAULT_LEASE_TIMEOUT),
+        Some(v) => match v.parse::<f64>().ok().and_then(|s| {
+            (s > 0.0).then_some(())?;
+            Duration::try_from_secs_f64(s).ok()
+        }) {
+            Some(d) => Ok(d),
+            None => Err(Error::Config(format!(
+                "bad --lease-timeout `{v}` (need a positive number of seconds)"
+            ))),
+        },
+    }
+}
+
 fn cmd_manager(flags: &HashMap<String, String>) -> Result<()> {
     let listen = flags.get("listen").map(String::as_str).unwrap_or("0.0.0.0:7070");
     let replication = parse_replication(flags)?;
+    let lease_timeout = parse_lease_timeout(flags)?;
     let policy = policy_for(replication);
     let name = policy.name();
-    let mgr = Manager::spawn_with_policy(listen, policy)?;
+    let mgr = Manager::spawn_with_opts(listen, policy, lease_timeout)?;
     println!(
-        "metadata manager listening on {} (policy {name}, replication {replication})",
+        "metadata manager listening on {} (policy {name}, replication {replication}, \
+         lease timeout {lease_timeout:?})",
         mgr.addr()
     );
     loop {
@@ -332,12 +355,15 @@ fn cmd_trace(flags: &HashMap<String, String>) -> Result<()> {
 fn cmd_demo(flags: &HashMap<String, String>) -> Result<()> {
     // Cluster::spawn validates replication against the node count.
     let replication = parse_replication(flags)?;
+    let lease_timeout = parse_lease_timeout(flags)?;
     let cluster = Cluster::spawn(ClusterConfig {
         replication,
+        lease_timeout,
         ..ClusterConfig::default()
     })?;
     println!(
-        "demo cluster: manager {} nodes {:?} (replication {replication})",
+        "demo cluster: manager {} nodes {:?} (replication {replication}, \
+         lease timeout {lease_timeout:?})",
         cluster.manager_addr(),
         cluster.node_addrs()
     );
@@ -386,6 +412,23 @@ mod tests {
         assert_eq!(f.get("a").unwrap(), "1");
         assert_eq!(f.get("flag").unwrap(), "true");
         assert_eq!(f.get("b").unwrap(), "x");
+    }
+
+    #[test]
+    fn parse_lease_timeout_flag() {
+        let mut flags = HashMap::new();
+        assert_eq!(parse_lease_timeout(&flags).unwrap(), DEFAULT_LEASE_TIMEOUT);
+        flags.insert("lease-timeout".into(), "2".into());
+        assert_eq!(parse_lease_timeout(&flags).unwrap(), Duration::from_secs(2));
+        flags.insert("lease-timeout".into(), "0.5".into());
+        assert_eq!(
+            parse_lease_timeout(&flags).unwrap(),
+            Duration::from_millis(500)
+        );
+        for bad in ["0", "-1", "x", "inf", "nan", "1e20"] {
+            flags.insert("lease-timeout".into(), bad.into());
+            assert!(parse_lease_timeout(&flags).is_err(), "{bad}");
+        }
     }
 
     #[test]

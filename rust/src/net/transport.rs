@@ -63,6 +63,16 @@ impl Conn {
         })
     }
 
+    /// Bound blocking reads on this connection: after `timeout` a
+    /// pending read fails with `WouldBlock`/`TimedOut` instead of
+    /// hanging forever.  Background control loops (lease heartbeats)
+    /// use this so a peer that accepts but never replies cannot wedge
+    /// a thread that something else will later `join`.
+    pub fn set_read_timeout(&self, timeout: std::time::Duration) -> Result<()> {
+        self.stream.set_read_timeout(Some(timeout))?;
+        Ok(())
+    }
+
     /// Clone the underlying socket (for split read/write threads).
     pub fn try_clone(&self) -> Result<Conn> {
         Ok(Conn {

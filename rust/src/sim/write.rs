@@ -71,6 +71,11 @@ pub struct SystemSim {
     pub net_bps: f64,
     /// Fixed per-file overhead: manager round-trips, open/commit (s).
     pub per_file_overhead: f64,
+    /// Per-file lease overhead (control-plane v3): the extra manager
+    /// round-trips a session spends on its lease — open-with-pin on
+    /// read, open + commit-consume on write (renewals ride a separate
+    /// heartbeat connection and cost the data path nothing).
+    pub per_lease_overhead: f64,
     /// Per-block bookkeeping overhead on the client (s) — hash compare,
     /// metadata entry, request framing.
     pub per_block_overhead: f64,
@@ -89,6 +94,7 @@ impl Default for SystemSim {
             gpu: GpuPipeline::default(),
             net_bps: 117e6, // 1 Gbps after TCP/IP overheads
             per_file_overhead: 2e-3,
+            per_lease_overhead: 0.2e-3, // ~2 extra manager RTTs
             per_block_overhead: 15e-6,
             memcpy_bps: 350e6,
             cpu_system_efficiency: 0.6,
@@ -146,7 +152,9 @@ impl SystemSim {
     /// per-buffer pipeline fill/drain instead
     /// ([`pipelined_secs`]).
     pub fn write_secs(&self, cfg: &WriteConfig, size: usize, blocks: usize) -> f64 {
-        let overhead = self.per_file_overhead + blocks as f64 * self.per_block_overhead;
+        let overhead = self.per_file_overhead
+            + self.per_lease_overhead
+            + blocks as f64 * self.per_block_overhead;
         self.gated_secs(cfg, size).0 + overhead
     }
 
@@ -228,7 +236,9 @@ mod tests {
         let hash = s.hash_secs(&c, MB64);
         let net = s.net_secs(&c, MB64);
         let copy = MB64 as f64 / s.memcpy_bps;
-        let overhead = s.per_file_overhead + blocks_for(MB64) as f64 * s.per_block_overhead;
+        let overhead = s.per_file_overhead
+            + s.per_lease_overhead
+            + blocks_for(MB64) as f64 * s.per_block_overhead;
         let w = s.write_secs(&c, MB64, blocks_for(MB64));
         // Pipelined write is never faster than the bottleneck stage and
         // never slower than the old fully-serialized composition.
@@ -248,6 +258,27 @@ mod tests {
             similarity,
             replication: 1,
         }
+    }
+
+    #[test]
+    fn lease_overhead_is_additive_per_file() {
+        // The lease round-trips are a constant per-file cost on top of
+        // the v2 model: zeroing them recovers the old write time
+        // exactly, and the delta never depends on file size.
+        let mut with = SystemSim::default();
+        let mut without = SystemSim::default();
+        without.per_lease_overhead = 0.0;
+        with.per_lease_overhead = 0.5e-3;
+        let c = cfg(EngineModel::Cpu { threads: 16 }, false, 0.0);
+        for size in [1 << 20, MB64] {
+            let d = with.write_secs(&c, size, 64) - without.write_secs(&c, size, 64);
+            assert!((d - 0.5e-3).abs() < 1e-12, "size {size}: delta {d}");
+        }
+        // And it does not perturb the hidden-hash accounting.
+        assert_eq!(
+            with.hash_hidden_secs(&c, MB64),
+            without.hash_hidden_secs(&c, MB64)
+        );
     }
 
     #[test]

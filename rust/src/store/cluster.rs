@@ -6,7 +6,8 @@
 //! heartbeat), the manager owns placement via a
 //! [`PlacementPolicy`](super::manager::PlacementPolicy) derived from
 //! [`ClusterConfig::replication`], and clients bootstrap from the
-//! manager address alone.
+//! manager address alone.  Control-plane v3: the manager's lease
+//! timeout comes from [`ClusterConfig::lease_timeout`].
 
 use std::sync::Arc;
 
@@ -39,7 +40,14 @@ impl Cluster {
                 cfg.replication, cfg.nodes
             )));
         }
-        let manager = Manager::spawn_with_policy("127.0.0.1:0", policy_for(cfg.replication))?;
+        if cfg.lease_timeout.is_zero() {
+            return Err(Error::Config("lease_timeout must be non-zero".into()));
+        }
+        let manager = Manager::spawn_with_opts(
+            "127.0.0.1:0",
+            policy_for(cfg.replication),
+            cfg.lease_timeout,
+        )?;
         let nodes = (0..cfg.nodes)
             .map(|_| StorageNode::spawn_full("127.0.0.1:0", None, Some(manager.addr())))
             .collect::<Result<Vec<_>>>()?;

@@ -1,11 +1,18 @@
-//! The centralized metadata manager (paper §3.2.1), control-plane v2:
-//! besides per-file block-maps and versions it now owns *placement* —
+//! The centralized metadata manager (paper §3.2.1), control-plane v3:
+//! besides per-file block-maps and versions it owns *placement* —
 //! clients ask where blocks go ([`Msg::AllocPlacement`]) and a pluggable
 //! [`PlacementPolicy`] answers with an n-way replica set — plus a node
 //! registry fed by [`Msg::NodeJoin`]/[`Msg::Heartbeat`], per-block
-//! reference counting across file versions, and commit-time garbage
-//! collection: blocks orphaned by a version overwrite are deleted from
-//! their owning nodes.  Thread-per-connection over the shared protocol.
+//! reference counting across file versions, commit-time garbage
+//! collection (blocks orphaned by a version overwrite are deleted from
+//! their owning nodes), and *leases*: read leases pin an opened
+//! version's blocks so GC defers their deletion until the last lease
+//! drops, and writer claim leases expire when the owning client stops
+//! heartbeating, returning an abandoned session's pending claims to the
+//! GC pool.  Lease expiry shares the manager's liveness clock, which a
+//! test-only hook ([`ManagerState::advance_clock`]) can advance so
+//! every expiry path is testable without wall-clock sleeps.
+//! Thread-per-connection over the shared protocol.
 
 use std::collections::{HashMap, HashSet};
 use std::io::{BufReader, BufWriter};
@@ -128,15 +135,42 @@ struct BlockInfo {
     /// Occurrences in committed block-maps.
     refs: u64,
     /// Provisional claims: allocated by a writer that has not committed
-    /// or released yet.  Blocks with `refs == 0 && pending == 0` are
-    /// garbage and get deleted from their nodes.
+    /// or released yet.  Blocks with `refs == 0 && pending == 0 &&
+    /// pins == 0` are garbage and get deleted from their nodes.
     pending: u64,
+    /// Read-lease pins: occurrences in version snapshots still being
+    /// streamed by readers.  A pinned block survives losing its last
+    /// committed reference; the delete is deferred until the last
+    /// lease drops or lapses.
+    pins: u64,
     /// While `refs == 0`, the claim tag of the session that first
     /// allocated the block (clients send a unique per-session token as
     /// `AllocPlacement.file`).  Dedup against a merely-pending block is
     /// only safe for that same session (a commit proves the bytes
     /// landed, a pending claim does not); everyone else transfers too.
     placed_by: String,
+}
+
+/// One granted lease: a read-session version pin or a write-session
+/// claim holder.  Leases lapse when `expires_at` (on the manager's
+/// clock) passes without a renewal; the expiry sweep runs lazily at the
+/// top of every handled message.
+#[derive(Debug)]
+struct Lease {
+    /// Read lease: the opened file.  Write lease: the session's claim
+    /// token.  Diagnostics only (Debug output) — the hash occurrences
+    /// below are the authoritative state.
+    #[allow(dead_code)]
+    tag: String,
+    /// Writer claim lease (releases `pending`) vs. read lease
+    /// (releases `pins`).
+    write: bool,
+    /// Hash occurrences held: one entry per pinned block-map slot
+    /// (read) or per allocated claim (write).  Occurrences, not unique
+    /// hashes — a file of n identical blocks holds n entries.
+    hashes: Vec<Digest>,
+    /// Lapse deadline on the manager's clock.
+    expires_at: Instant,
 }
 
 #[derive(Debug)]
@@ -151,6 +185,10 @@ struct Inner {
     blocks: HashMap<Digest, BlockInfo>,
     nodes: Vec<NodeSlot>,
     policy: Box<dyn PlacementPolicy>,
+    /// Live leases by id.
+    leases: HashMap<u64, Lease>,
+    /// Next lease id (ids start at 1; 0 means "no lease" on the wire).
+    next_lease: u64,
 }
 
 /// Manager state shared across connection threads.
@@ -160,6 +198,13 @@ pub struct ManagerState {
     /// A node is considered alive if it joined or heartbeated within
     /// this window.
     heartbeat_timeout: Duration,
+    /// A lease lapses if not renewed within this window.
+    lease_timeout: Duration,
+    /// Test-only time hook: an offset added to `Instant::now()` to form
+    /// the manager's clock.  [`ManagerState::advance_clock`] bumps it so
+    /// lease expiry (and node liveness) can be driven deterministically
+    /// instead of with sleeps.
+    clock_skew: Mutex<Duration>,
     /// Hashes whose on-node copies are being deleted by an in-flight GC
     /// batch.  Allocations of these hashes wait until the deletes have
     /// landed, so a stale `DeleteBlock` can never destroy a copy a
@@ -178,24 +223,80 @@ impl Default for ManagerState {
 /// heartbeat interval, so a few dropped beats don't flap placement.
 const HEARTBEAT_TIMEOUT: Duration = Duration::from_secs(3);
 
+/// Default lease timeout: generous relative to the clients' `ttl / 3`
+/// renewal cadence, so a few dropped renewals don't lapse a live
+/// session, while an abandoned writer's claims return to the GC pool in
+/// human time.  Overridable per deployment (`--lease-timeout`,
+/// [`crate::config::ClusterConfig::lease_timeout`]).
+pub const DEFAULT_LEASE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Floor for configured lease timeouts: zero (or near-zero) would
+/// lapse every lease at its first expiry sweep, so
+/// [`ManagerState::with_lease_timeout`] clamps up to this.
+pub const MIN_LEASE_TIMEOUT: Duration = Duration::from_millis(1);
+
 /// Upper bound on how long an allocation waits for an in-flight GC
 /// batch covering one of its hashes (best effort beyond that).
 const GC_WAIT: Duration = Duration::from_secs(2);
 
+/// Freed blocks + the node address book, handed out of the state lock
+/// for execution (network deletes happen outside the lock).
+type GcBatch = (Vec<(Digest, Vec<u32>)>, Vec<String>);
+
 impl ManagerState {
-    /// State with an explicit placement policy.
+    /// State with an explicit placement policy and the default lease
+    /// timeout.
     pub fn new(policy: Box<dyn PlacementPolicy>) -> ManagerState {
+        ManagerState::with_lease_timeout(policy, DEFAULT_LEASE_TIMEOUT)
+    }
+
+    /// State with an explicit placement policy and lease timeout.  A
+    /// zero timeout would lapse every lease at its very first sweep
+    /// (silently reopening the reader-vs-GC race), so it is clamped to
+    /// [`MIN_LEASE_TIMEOUT`] here, at the layer that owns the invariant
+    /// — front ends (`Cluster::spawn`, `--lease-timeout`) additionally
+    /// reject zero loudly.
+    pub fn with_lease_timeout(
+        policy: Box<dyn PlacementPolicy>,
+        lease_timeout: Duration,
+    ) -> ManagerState {
+        let lease_timeout = lease_timeout.max(MIN_LEASE_TIMEOUT);
         ManagerState {
             inner: Mutex::new(Inner {
                 files: HashMap::new(),
                 blocks: HashMap::new(),
                 nodes: Vec::new(),
                 policy,
+                leases: HashMap::new(),
+                next_lease: 1,
             }),
             heartbeat_timeout: HEARTBEAT_TIMEOUT,
+            lease_timeout,
+            clock_skew: Mutex::new(Duration::ZERO),
             gc_inflight: Mutex::new(HashSet::new()),
             gc_done: Condvar::new(),
         }
+    }
+
+    /// The manager's notion of "now": real time plus the test skew.
+    fn now(&self) -> Instant {
+        Instant::now() + *self.clock_skew.lock().unwrap()
+    }
+
+    /// Test-only time hook: advance the manager's clock by `by`.  Lease
+    /// expiry and node liveness both read this clock, so fault-injection
+    /// tests drive timeouts deterministically (pair with
+    /// [`ManagerState::tick`] to run the expiry sweep).
+    pub fn advance_clock(&self, by: Duration) {
+        *self.clock_skew.lock().unwrap() += by;
+    }
+
+    /// Run the lazy lease-expiry sweep now (every handled message does
+    /// this first) and execute any resulting GC deletes before
+    /// returning.  Ops/test hook — pairs with
+    /// [`ManagerState::advance_clock`].
+    pub fn tick(&self) {
+        let _ = self.handle(Msg::NodeList);
     }
 
     /// Handle one request message.
@@ -206,7 +307,11 @@ impl ManagerState {
         // orphaned blocks are really gone, which keeps reclamation
         // observable (and testable) at the client.  Unreachable nodes
         // are skipped fast on loopback; a slow real-network connect
-        // only delays this one caller.
+        // only delays this one caller.  This ordering also makes the
+        // in-call expiry/alloc interleaving safe: a hash freed by the
+        // expiry sweep and immediately re-allocated by the same message
+        // has its stale on-node copies deleted BEFORE the reply (and
+        // thus the client's re-upload) goes out.
         let (reply, gc) = self.handle_inner(msg);
         if let Some((freed, addrs)) = gc {
             gc_delete(&freed, &addrs);
@@ -243,15 +348,14 @@ impl ManagerState {
         specs.iter().any(|s| inflight.contains(&s.hash))
     }
 
-    #[allow(clippy::type_complexity)]
-    fn handle_inner(&self, msg: Msg) -> (Msg, Option<(Vec<(Digest, Vec<u32>)>, Vec<String>)>) {
+    fn handle_inner(&self, msg: Msg) -> (Msg, Option<GcBatch>) {
         // Allocations wait out GC batches covering their hashes BEFORE
         // taking the state lock (so the wait stalls only this caller),
         // then re-check under the lock: a sweep that started in between
         // sends us back to waiting.  Bounded attempts — after that,
         // proceed best-effort (same exposure as not waiting at all).
         let msg = match msg {
-            Msg::AllocPlacement { file, blocks } => {
+            Msg::AllocPlacement { file, lease, blocks } => {
                 for attempt in 0..3 {
                     if attempt > 0 || self.gc_covers(&blocks) {
                         self.await_gc(&blocks);
@@ -261,11 +365,17 @@ impl ManagerState {
                         continue; // sweep raced us; wait again unlocked
                     }
                     let g = &mut *guard;
-                    let reply = match alloc(g, &file, &blocks, self.heartbeat_timeout) {
+                    let now = self.now();
+                    // Lapsed leases release their claims/pins first, so
+                    // an abandoned writer's stale claims never satisfy
+                    // this allocation's dedup.
+                    let mut freed = Vec::new();
+                    self.expire_leases(g, now, &mut freed);
+                    let reply = match self.alloc(g, &file, lease, &blocks, now) {
                         Ok(assignments) => Msg::Placement { assignments },
                         Err(e) => Msg::Err(e),
                     };
-                    return (reply, None);
+                    return (reply, self.gc_batch(g, freed));
                 }
                 unreachable!("alloc loop always returns by attempt 2");
             }
@@ -274,6 +384,13 @@ impl ManagerState {
         let mut guard = self.inner.lock().unwrap();
         // Reborrow as a plain `&mut Inner` so field borrows split.
         let g = &mut *guard;
+        let now = self.now();
+        // Lazy expiry sweep: every handled message first lapses overdue
+        // leases (claims/pins release, newly-unreferenced blocks join
+        // this message's GC batch).  No background timer — expiry is
+        // deterministic given the clock, which tests control.
+        let mut freed = Vec::new();
+        self.expire_leases(g, now, &mut freed);
         let reply = match msg {
             Msg::GetBlockMap { file } => match g.files.get(&file) {
                 Some(e) => Msg::BlockMap {
@@ -285,40 +402,11 @@ impl ManagerState {
                     blocks: Vec::new(),
                 },
             },
-            Msg::CommitBlockMap { file, blocks } => {
-                // Satellite: validate node ids against the registry
-                // before accepting, so readers never chase a block to a
-                // node that does not exist.
-                if let Some(err) = validate_blocks(&blocks, g.nodes.len()) {
-                    return (Msg::Err(err), None);
+            Msg::CommitBlockMap { file, lease, blocks } => {
+                match self.commit(g, file, lease, blocks, &mut freed) {
+                    Ok(()) => Msg::Ok,
+                    Err(e) => Msg::Err(e),
                 }
-                for m in &blocks {
-                    let e = g.blocks.entry(m.hash).or_insert_with(|| BlockInfo {
-                        replicas: m.replicas.clone(),
-                        len: m.len,
-                        refs: 0,
-                        pending: 0,
-                        placed_by: String::new(),
-                    });
-                    e.refs += 1;
-                    e.pending = e.pending.saturating_sub(1);
-                }
-                let f = g.files.entry(file).or_default();
-                f.version += 1;
-                let old = std::mem::replace(&mut f.blocks, blocks);
-                for m in &old {
-                    if let Some(e) = g.blocks.get_mut(&m.hash) {
-                        e.refs = e.refs.saturating_sub(1);
-                    }
-                }
-                // Only the old map's hashes can have newly reached zero
-                // references (the new map's all got refs += 1).
-                // KNOWN LIMITATION (ROADMAP): readers still streaming
-                // the overwritten version race this reclamation; read
-                // leases / version pinning are future work.
-                let candidates: Vec<Digest> = old.iter().map(|m| m.hash).collect();
-                let gc = self.sweep_and_mark(g, &candidates);
-                return (Msg::Ok, gc);
             }
             // AllocPlacement is handled above (it interleaves with the
             // GC-in-flight barrier before taking the state lock).
@@ -329,30 +417,43 @@ impl ManagerState {
                         e.pending = e.pending.saturating_sub(1);
                     }
                 }
-                let gc = self.sweep_and_mark(g, &hashes);
-                return (Msg::Ok, gc);
+                self.sweep(g, &hashes, &mut freed);
+                Msg::Ok
             }
-            Msg::NodeJoin { addr } => {
-                let now = Instant::now();
-                match g.nodes.iter().position(|n| n.addr == addr) {
-                    Some(id) => {
-                        g.nodes[id].last_beat = now;
-                        Msg::NodeId { id: id as u32 }
-                    }
-                    None => {
-                        g.nodes.push(NodeSlot {
-                            addr,
-                            last_beat: now,
-                        });
-                        Msg::NodeId {
-                            id: (g.nodes.len() - 1) as u32,
-                        }
+            Msg::OpenLease { file, write } => self.open_lease(g, file, write, now),
+            Msg::RenewLease { lease } => match g.leases.get_mut(&lease) {
+                Some(l) => {
+                    l.expires_at = now + self.lease_timeout;
+                    Msg::Ok
+                }
+                None => Msg::Err(format!("lease {lease} unknown or lapsed")),
+            },
+            Msg::DropLease { lease } => {
+                // Idempotent: dropping a lapsed/consumed lease is OK (a
+                // committed writer's lease is consumed by the commit).
+                if let Some(l) = g.leases.remove(&lease) {
+                    self.release_lease(g, l, &mut freed);
+                }
+                Msg::Ok
+            }
+            Msg::NodeJoin { addr } => match g.nodes.iter().position(|n| n.addr == addr) {
+                Some(id) => {
+                    g.nodes[id].last_beat = now;
+                    Msg::NodeId { id: id as u32 }
+                }
+                None => {
+                    g.nodes.push(NodeSlot {
+                        addr,
+                        last_beat: now,
+                    });
+                    Msg::NodeId {
+                        id: (g.nodes.len() - 1) as u32,
                     }
                 }
-            }
+            },
             Msg::Heartbeat { node } => match g.nodes.get_mut(node as usize) {
                 Some(n) => {
-                    n.last_beat = Instant::now();
+                    n.last_beat = now;
                     Msg::Ok
                 }
                 None => Msg::Err(format!("heartbeat from unregistered node {node}")),
@@ -367,7 +468,7 @@ impl ManagerState {
                         .map(|(id, n)| NodeEntry {
                             id: id as u32,
                             addr: n.addr.clone(),
-                            alive: n.last_beat.elapsed() < timeout,
+                            alive: now.saturating_duration_since(n.last_beat) < timeout,
                         })
                         .collect(),
                 }
@@ -380,22 +481,370 @@ impl ManagerState {
             }
             other => Msg::Err(format!("manager: unexpected message {other:?}")),
         };
-        (reply, None)
+        (reply, self.gc_batch(g, freed))
     }
 
-    /// (blocks, bytes) the manager believes are live (committed or
-    /// pending) across the cluster, counting each replica copy.
-    pub fn block_stats(&self) -> (u64, u64) {
+    /// Commit one new version: validate, redeem the write lease's
+    /// claims into committed references, release the overwritten map's
+    /// references and sweep what dropped to zero (pinned blocks are
+    /// deferred to their last lease's release).
+    fn commit(
+        &self,
+        g: &mut Inner,
+        file: String,
+        lease: u64,
+        blocks: Vec<BlockMeta>,
+        freed: &mut Vec<(Digest, Vec<u32>)>,
+    ) -> std::result::Result<(), String> {
+        // Satellite (PR 2): validate node ids against the registry
+        // before accepting, so readers never chase a block to a node
+        // that does not exist.
+        if let Some(err) = validate_blocks(&blocks, g.nodes.len()) {
+            return Err(err);
+        }
+        // A lease-tracked commit must present a live write lease: if it
+        // lapsed, its claims were already released and the blocks may
+        // be gone from the nodes — committing would publish an
+        // unreadable file.  The commit consumes the lease (it redeems
+        // every claim; the writer's Drop must not release them again).
+        let held = match lease {
+            0 => None,
+            id => match g.leases.remove(&id) {
+                Some(l) if l.write => Some(l),
+                Some(l) => {
+                    g.leases.insert(id, l);
+                    return Err(format!("commit: lease {id} is not a write lease"));
+                }
+                None => {
+                    return Err(format!(
+                        "commit: write lease {id} lapsed and its claims were released"
+                    ))
+                }
+            },
+        };
+        for m in &blocks {
+            let e = g.blocks.entry(m.hash).or_insert_with(|| BlockInfo {
+                replicas: m.replicas.clone(),
+                len: m.len,
+                refs: 0,
+                pending: 0,
+                pins: 0,
+                placed_by: String::new(),
+            });
+            e.refs += 1;
+            e.pending = e.pending.saturating_sub(1);
+        }
+        // Claim occurrences the commit did not consume (allocated but
+        // left out of the final map) are released with the lease.
+        if let Some(l) = held {
+            let mut consumed: HashMap<Digest, u64> = HashMap::new();
+            for m in &blocks {
+                *consumed.entry(m.hash).or_default() += 1;
+            }
+            let mut leftovers = Vec::new();
+            for h in l.hashes {
+                match consumed.get_mut(&h) {
+                    Some(n) if *n > 0 => *n -= 1,
+                    _ => {
+                        if let Some(e) = g.blocks.get_mut(&h) {
+                            e.pending = e.pending.saturating_sub(1);
+                        }
+                        leftovers.push(h);
+                    }
+                }
+            }
+            self.sweep(g, &leftovers, freed);
+        }
+        let f = g.files.entry(file).or_default();
+        f.version += 1;
+        let old = std::mem::replace(&mut f.blocks, blocks);
+        for m in &old {
+            if let Some(e) = g.blocks.get_mut(&m.hash) {
+                e.refs = e.refs.saturating_sub(1);
+            }
+        }
+        // Only the old map's hashes can have newly reached zero
+        // references (the new map's all got refs += 1).  Read-leased
+        // blocks have pins > 0 and survive; their deferred deletes run
+        // when the last lease drops — the ROADMAP reader-snapshot race,
+        // closed.
+        let candidates: Vec<Digest> = old.iter().map(|m| m.hash).collect();
+        self.sweep(g, &candidates, freed);
+        Ok(())
+    }
+
+    /// Grant a lease: read leases atomically snapshot + pin the file's
+    /// current block-map, write leases register an (initially empty)
+    /// claim holder.
+    fn open_lease(&self, g: &mut Inner, file: String, write: bool, now: Instant) -> Msg {
+        let ttl_ms = self.lease_timeout.as_millis() as u64;
+        let (version, blocks) = if write {
+            (0, Vec::new())
+        } else {
+            match g.files.get(&file) {
+                Some(e) if e.version > 0 => (e.version, e.blocks.clone()),
+                _ => {
+                    // No such file: nothing to pin, no lease granted.
+                    return Msg::LeaseGrant {
+                        lease: 0,
+                        ttl_ms,
+                        version: 0,
+                        blocks: Vec::new(),
+                    };
+                }
+            }
+        };
+        for m in &blocks {
+            if let Some(e) = g.blocks.get_mut(&m.hash) {
+                e.pins += 1;
+            }
+        }
+        let id = g.next_lease;
+        g.next_lease += 1;
+        g.leases.insert(
+            id,
+            Lease {
+                tag: file,
+                write,
+                hashes: blocks.iter().map(|m| m.hash).collect(),
+                expires_at: now + self.lease_timeout,
+            },
+        );
+        Msg::LeaseGrant {
+            lease: id,
+            ttl_ms,
+            version,
+            blocks,
+        }
+    }
+
+    /// Lapse every overdue lease (release its claims/pins and sweep).
+    fn expire_leases(&self, g: &mut Inner, now: Instant, freed: &mut Vec<(Digest, Vec<u32>)>) {
+        let lapsed: Vec<u64> = g
+            .leases
+            .iter()
+            .filter(|(_, l)| l.expires_at <= now)
+            .map(|(id, _)| *id)
+            .collect();
+        for id in lapsed {
+            let l = g.leases.remove(&id).expect("collected under the same lock");
+            self.release_lease(g, l, freed);
+        }
+    }
+
+    /// Return a lease's held occurrences to the pool: a write lease's
+    /// claims stop pending, a read lease's pins drop — then sweep.
+    fn release_lease(&self, g: &mut Inner, l: Lease, freed: &mut Vec<(Digest, Vec<u32>)>) {
+        for h in &l.hashes {
+            if let Some(e) = g.blocks.get_mut(h) {
+                if l.write {
+                    e.pending = e.pending.saturating_sub(1);
+                } else {
+                    e.pins = e.pins.saturating_sub(1);
+                }
+            }
+        }
+        self.sweep(g, &l.hashes, freed);
+    }
+
+    /// Collect garbage among `candidates` (the hashes whose counters
+    /// this operation decremented — anything else cannot have newly
+    /// reached zero): drop every candidate with no committed
+    /// references, no pending claims and no read-lease pins, and mark
+    /// the freed hashes GC-in-flight (while still holding the state
+    /// lock, so allocations of these hashes wait — see
+    /// [`ManagerState::await_gc`]).  Deletion itself runs outside the
+    /// lock, via [`ManagerState::gc_batch`].
+    fn sweep(&self, g: &mut Inner, candidates: &[Digest], freed: &mut Vec<(Digest, Vec<u32>)>) {
+        let mut marked = Vec::new();
+        for h in candidates {
+            // Duplicate candidates are harmless: once removed, the
+            // second lookup misses.
+            if let Some(b) = g.blocks.get(h) {
+                if b.refs == 0 && b.pending == 0 && b.pins == 0 {
+                    freed.push((*h, b.replicas.clone()));
+                    marked.push(*h);
+                    g.blocks.remove(h);
+                }
+            }
+        }
+        if !marked.is_empty() {
+            self.gc_inflight.lock().unwrap().extend(marked);
+        }
+    }
+
+    /// Package this message's freed blocks with the node address book
+    /// for execution outside the state lock.
+    fn gc_batch(&self, g: &Inner, freed: Vec<(Digest, Vec<u32>)>) -> Option<GcBatch> {
+        if freed.is_empty() {
+            return None;
+        }
+        Some((freed, g.nodes.iter().map(|n| n.addr.clone()).collect()))
+    }
+
+    /// Manager-driven placement for one batch (claims held under the
+    /// caller's write lease, which the allocation also renews).
+    fn alloc(
+        &self,
+        g: &mut Inner,
+        file: &str,
+        lease: u64,
+        specs: &[BlockSpec],
+        now: Instant,
+    ) -> std::result::Result<Vec<Assignment>, String> {
+        // Claims must be held under a live write lease (`0` = untracked
+        // legacy claims, kept for raw protocol users): a lapsed lease
+        // means this writer's earlier claims were already reclaimed —
+        // it must re-open rather than keep streaming into a void.
+        if lease != 0 {
+            match g.leases.get(&lease) {
+                Some(l) if l.write => {}
+                Some(_) => return Err(format!("alloc: lease {lease} is not a write lease")),
+                None => return Err(format!("alloc: write lease {lease} lapsed")),
+            }
+        }
+        let alive: Vec<u32> = g
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| {
+                now.saturating_duration_since(n.last_beat) < self.heartbeat_timeout
+            })
+            .map(|(id, _)| id as u32)
+            .collect();
+        if alive.is_empty() {
+            return Err(if g.nodes.is_empty() {
+                "no storage nodes registered".into()
+            } else {
+                "no storage nodes alive".into()
+            });
+        }
+        let mut out = Vec::with_capacity(specs.len());
+        for s in specs {
+            match g.blocks.get_mut(&s.hash) {
+                // Committed somewhere (a commit proves the transfer
+                // completed), or claimed by this same session (which is
+                // the one doing the transfer): safe to dedup — PROVIDED
+                // at least one replica is still alive.  A known block
+                // whose replicas all died is re-homed and
+                // re-transferred (the writer has the bytes in hand;
+                // dedup against dead nodes would commit an unreadable
+                // file).
+                Some(e) if e.refs > 0 || e.placed_by == file => {
+                    e.pending += 1;
+                    if e.replicas.iter().any(|r| alive.contains(r)) {
+                        out.push(Assignment {
+                            replicas: e.replicas.clone(),
+                            fresh: false,
+                        });
+                    } else {
+                        e.replicas = g.policy.place(&alive);
+                        out.push(Assignment {
+                            replicas: e.replicas.clone(),
+                            fresh: true,
+                        });
+                    }
+                }
+                // Known only as ANOTHER session's uncommitted claim:
+                // that transfer may still fail or be abandoned, so this
+                // writer must transfer too (puts are idempotent by key)
+                // — same homes (re-homed if all dead), but fresh from
+                // the caller's point of view.
+                //
+                // Re-homing (here and above) deliberately does NOT
+                // delete the old replicas' copies: those nodes look
+                // dead, so the deletes could not land anyway, and if a
+                // node was merely partitioned, its surviving copy may
+                // be the only one a pinned reader's snapshot map can
+                // still name — eager deletion would break that reader
+                // when the node heals.  The cost is a bounded space
+                // leak on a flapping node (ROADMAP, lease limitations).
+                Some(e) => {
+                    e.pending += 1;
+                    if !e.replicas.iter().any(|r| alive.contains(r)) {
+                        e.replicas = g.policy.place(&alive);
+                    }
+                    out.push(Assignment {
+                        replicas: e.replicas.clone(),
+                        fresh: true,
+                    });
+                }
+                None => {
+                    let replicas = g.policy.place(&alive);
+                    debug_assert!(!replicas.is_empty());
+                    g.blocks.insert(
+                        s.hash,
+                        BlockInfo {
+                            replicas: replicas.clone(),
+                            len: s.len,
+                            refs: 0,
+                            pending: 1,
+                            pins: 0,
+                            placed_by: file.to_string(),
+                        },
+                    );
+                    out.push(Assignment {
+                        replicas,
+                        fresh: true,
+                    });
+                }
+            }
+        }
+        // Record the claim occurrences against the lease and renew it
+        // (an actively-allocating writer is a live writer).
+        if lease != 0 {
+            let l = g.leases.get_mut(&lease).expect("validated above");
+            l.hashes.extend(specs.iter().map(|s| s.hash));
+            l.expires_at = now + self.lease_timeout;
+        }
+        Ok(out)
+    }
+
+    /// Aggregate manager bookkeeping, counting each replica copy —
+    /// includes the lease subsystem's counters, which the
+    /// fault-injection tests assert on ("zero stranded pending
+    /// claims").  Counters reflect the state as of the last handled
+    /// message; call [`ManagerState::tick`] first to fold in overdue
+    /// lease expiries.
+    pub fn block_stats(&self) -> BlockStats {
         let g = self.inner.lock().unwrap();
-        let mut blocks = 0u64;
-        let mut bytes = 0u64;
+        let mut s = BlockStats::default();
         for b in g.blocks.values() {
             let copies = b.replicas.len() as u64;
-            blocks += copies;
-            bytes += copies * b.len as u64;
+            s.blocks += copies;
+            s.bytes += copies * b.len as u64;
+            s.pending_claims += b.pending;
+            if b.pins > 0 {
+                s.pinned_blocks += 1;
+            }
         }
-        (blocks, bytes)
+        for l in g.leases.values() {
+            if l.write {
+                s.write_leases += 1;
+            } else {
+                s.read_leases += 1;
+            }
+        }
+        s
     }
+}
+
+/// Aggregate manager bookkeeping returned by
+/// [`ManagerState::block_stats`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct BlockStats {
+    /// Replica copies the manager believes live (committed or pending).
+    pub blocks: u64,
+    /// Payload bytes behind those copies.
+    pub bytes: u64,
+    /// Outstanding provisional claim occurrences (uncommitted writers).
+    pub pending_claims: u64,
+    /// Blocks currently pinned by at least one read lease.
+    pub pinned_blocks: u64,
+    /// Live read leases.
+    pub read_leases: u64,
+    /// Live write leases.
+    pub write_leases: u64,
 }
 
 fn validate_blocks(blocks: &[BlockMeta], registered: usize) -> Option<String> {
@@ -412,127 +861,6 @@ fn validate_blocks(blocks: &[BlockMeta], registered: usize) -> Option<String> {
         }
     }
     None
-}
-
-fn alloc(
-    g: &mut Inner,
-    file: &str,
-    specs: &[BlockSpec],
-    timeout: Duration,
-) -> std::result::Result<Vec<Assignment>, String> {
-    let alive: Vec<u32> = g
-        .nodes
-        .iter()
-        .enumerate()
-        .filter(|(_, n)| n.last_beat.elapsed() < timeout)
-        .map(|(id, _)| id as u32)
-        .collect();
-    if alive.is_empty() {
-        return Err(if g.nodes.is_empty() {
-            "no storage nodes registered".into()
-        } else {
-            "no storage nodes alive".into()
-        });
-    }
-    let mut out = Vec::with_capacity(specs.len());
-    for s in specs {
-        match g.blocks.get_mut(&s.hash) {
-            // Committed somewhere (a commit proves the transfer
-            // completed), or claimed by this same session (which is the
-            // one doing the transfer): safe to dedup — PROVIDED at
-            // least one replica is still alive.  A known block whose
-            // replicas all died is re-homed and re-transferred (the
-            // writer has the bytes in hand; dedup against dead nodes
-            // would commit an unreadable file).
-            Some(e) if e.refs > 0 || e.placed_by == file => {
-                e.pending += 1;
-                if e.replicas.iter().any(|r| alive.contains(r)) {
-                    out.push(Assignment {
-                        replicas: e.replicas.clone(),
-                        fresh: false,
-                    });
-                } else {
-                    e.replicas = g.policy.place(&alive);
-                    out.push(Assignment {
-                        replicas: e.replicas.clone(),
-                        fresh: true,
-                    });
-                }
-            }
-            // Known only as ANOTHER session's uncommitted claim: that
-            // transfer may still fail or be abandoned, so this writer
-            // must transfer too (puts are idempotent by key) — same
-            // homes (re-homed if all dead), but fresh from the caller's
-            // point of view.
-            Some(e) => {
-                e.pending += 1;
-                if !e.replicas.iter().any(|r| alive.contains(r)) {
-                    e.replicas = g.policy.place(&alive);
-                }
-                out.push(Assignment {
-                    replicas: e.replicas.clone(),
-                    fresh: true,
-                });
-            }
-            None => {
-                let replicas = g.policy.place(&alive);
-                debug_assert!(!replicas.is_empty());
-                g.blocks.insert(
-                    s.hash,
-                    BlockInfo {
-                        replicas: replicas.clone(),
-                        len: s.len,
-                        refs: 0,
-                        pending: 1,
-                        placed_by: file.to_string(),
-                    },
-                );
-                out.push(Assignment {
-                    replicas,
-                    fresh: true,
-                });
-            }
-        }
-    }
-    Ok(out)
-}
-
-impl ManagerState {
-    /// Collect garbage among `candidates` (the hashes whose counters
-    /// this operation decremented — anything else cannot have newly
-    /// reached zero): drop every candidate with no committed references
-    /// and no pending claims, mark the freed hashes as GC-in-flight
-    /// (while still holding the state lock, so allocations of these
-    /// hashes wait — see [`ManagerState::await_gc`]), and return what
-    /// must be deleted from which nodes (executed outside the lock).
-    #[allow(clippy::type_complexity)]
-    fn sweep_and_mark(
-        &self,
-        g: &mut Inner,
-        candidates: &[Digest],
-    ) -> Option<(Vec<(Digest, Vec<u32>)>, Vec<String>)> {
-        let mut freed: Vec<(Digest, Vec<u32>)> = Vec::new();
-        for h in candidates {
-            // Duplicate candidates are harmless: once removed, the
-            // second lookup misses.
-            if let Some(b) = g.blocks.get(h) {
-                if b.refs == 0 && b.pending == 0 {
-                    freed.push((*h, b.replicas.clone()));
-                    g.blocks.remove(h);
-                }
-            }
-        }
-        if freed.is_empty() {
-            return None;
-        }
-        let mut inflight = self.gc_inflight.lock().unwrap();
-        for (h, _) in &freed {
-            inflight.insert(*h);
-        }
-        drop(inflight);
-        let addrs = g.nodes.iter().map(|n| n.addr.clone()).collect();
-        Some((freed, addrs))
-    }
 }
 
 /// Best-effort deletion of freed blocks on their owning nodes.  Dead or
@@ -583,11 +911,23 @@ impl Manager {
         Manager::spawn_with_policy(addr, Box::new(RoundRobinStripe::default()))
     }
 
-    /// Bind and serve with an explicit placement policy.
+    /// Bind and serve with an explicit placement policy and the default
+    /// lease timeout.
     pub fn spawn_with_policy(addr: &str, policy: Box<dyn PlacementPolicy>) -> Result<Manager> {
+        Manager::spawn_with_opts(addr, policy, DEFAULT_LEASE_TIMEOUT)
+    }
+
+    /// Bind and serve with an explicit placement policy and lease
+    /// timeout (surfaced as `--lease-timeout` in the CLI and
+    /// [`crate::config::ClusterConfig::lease_timeout`]).
+    pub fn spawn_with_opts(
+        addr: &str,
+        policy: Box<dyn PlacementPolicy>,
+        lease_timeout: Duration,
+    ) -> Result<Manager> {
         let listener = Listener::bind(addr)?;
         let addr = listener.local_addr()?;
-        let state = Arc::new(ManagerState::new(policy));
+        let state = Arc::new(ManagerState::with_lease_timeout(policy, lease_timeout));
         let stop = Arc::new(AtomicBool::new(false));
         let (st, sp) = (state.clone(), stop.clone());
         let accept_thread = std::thread::Builder::new()
@@ -710,6 +1050,7 @@ mod tests {
         );
         s.handle(Msg::CommitBlockMap {
             file: "f".into(),
+            lease: 0,
             blocks: vec![meta(1)],
         });
         let r = s.handle(Msg::GetBlockMap { file: "f".into() });
@@ -729,6 +1070,7 @@ mod tests {
         for i in 1..=3 {
             s.handle(Msg::CommitBlockMap {
                 file: "f".into(),
+                lease: 0,
                 blocks: vec![meta(i)],
             });
             let Msg::BlockMap { version, .. } = s.handle(Msg::GetBlockMap { file: "f".into() })
@@ -746,6 +1088,7 @@ mod tests {
         for f in ["b", "a"] {
             s.handle(Msg::CommitBlockMap {
                 file: f.into(),
+                lease: 0,
                 blocks: vec![],
             });
         }
@@ -773,6 +1116,7 @@ mod tests {
         assert!(matches!(
             s.handle(Msg::CommitBlockMap {
                 file: "f".into(),
+                lease: 0,
                 blocks: vec![bad],
             }),
             Msg::Err(_)
@@ -786,6 +1130,7 @@ mod tests {
         assert!(matches!(
             s.handle(Msg::CommitBlockMap {
                 file: "f".into(),
+                lease: 0,
                 blocks: vec![empty],
             }),
             Msg::Err(_)
@@ -797,6 +1142,7 @@ mod tests {
         let s = ManagerState::default();
         let r = s.handle(Msg::AllocPlacement {
             file: "f".into(),
+            lease: 0,
             blocks: vec![BlockSpec { hash: [1; 16], len: 5 }],
         });
         assert!(matches!(r, Msg::Err(_)));
@@ -814,6 +1160,7 @@ mod tests {
             .collect();
         let Msg::Placement { assignments } = s.handle(Msg::AllocPlacement {
             file: "f".into(),
+            lease: 0,
             blocks: specs.clone(),
         }) else {
             panic!()
@@ -827,6 +1174,7 @@ mod tests {
         // dedups: it is the one doing the transfer.
         let Msg::Placement { assignments: same } = s.handle(Msg::AllocPlacement {
             file: "f".into(),
+            lease: 0,
             blocks: specs.clone(),
         }) else {
             panic!()
@@ -838,6 +1186,7 @@ mod tests {
         // is told to transfer too.
         let Msg::Placement { assignments: other } = s.handle(Msg::AllocPlacement {
             file: "g".into(),
+            lease: 0,
             blocks: specs.clone(),
         }) else {
             panic!()
@@ -859,10 +1208,12 @@ mod tests {
             .collect();
         s.handle(Msg::CommitBlockMap {
             file: "f".into(),
+            lease: 0,
             blocks: metas,
         });
         let Msg::Placement { assignments: after } = s.handle(Msg::AllocPlacement {
             file: "h".into(),
+            lease: 0,
             blocks: specs,
         }) else {
             panic!()
@@ -892,25 +1243,29 @@ mod tests {
         // v1 references block 1; v2 references block 2 only.
         s.handle(Msg::CommitBlockMap {
             file: "f".into(),
+            lease: 0,
             blocks: vec![meta(1)],
         });
-        assert_eq!(s.block_stats().0, 1);
+        assert_eq!(s.block_stats().blocks, 1);
         s.handle(Msg::CommitBlockMap {
             file: "f".into(),
+            lease: 0,
             blocks: vec![meta(2)],
         });
         // Block 1 had refs 0 after the overwrite -> swept.
-        assert_eq!(s.block_stats().0, 1);
+        assert_eq!(s.block_stats().blocks, 1);
         // A block shared by two files survives one file's overwrite.
         s.handle(Msg::CommitBlockMap {
             file: "g".into(),
+            lease: 0,
             blocks: vec![meta(2)],
         });
         s.handle(Msg::CommitBlockMap {
             file: "f".into(),
+            lease: 0,
             blocks: vec![],
         });
-        assert_eq!(s.block_stats().0, 1, "g still references block 2");
+        assert_eq!(s.block_stats().blocks, 1, "g still references block 2");
     }
 
     #[test]
@@ -920,13 +1275,14 @@ mod tests {
         let spec = BlockSpec { hash: [9; 16], len: 7 };
         s.handle(Msg::AllocPlacement {
             file: "f".into(),
+            lease: 0,
             blocks: vec![spec],
         });
-        assert_eq!(s.block_stats().0, 1, "pending claim keeps the block");
+        assert_eq!(s.block_stats().blocks, 1, "pending claim keeps the block");
         s.handle(Msg::ReleaseBlocks {
             hashes: vec![[9; 16]],
         });
-        assert_eq!(s.block_stats().0, 0, "released + unreferenced -> swept");
+        assert_eq!(s.block_stats().blocks, 0, "released + unreferenced -> swept");
     }
 
     #[test]
@@ -958,6 +1314,7 @@ mod tests {
         );
         Msg::CommitBlockMap {
             file: "x".into(),
+            lease: 0,
             blocks: vec![meta(5)],
         }
         .write_to(&mut c)
@@ -987,6 +1344,7 @@ mod tests {
                     let mut c = Conn::connect(&addr).unwrap();
                     Msg::CommitBlockMap {
                         file: format!("f{i}"),
+                        lease: 0,
                         blocks: vec![meta(i as u8)],
                     }
                     .write_to(&mut c)
@@ -1024,5 +1382,272 @@ mod tests {
                 other => panic!("unexpected reply: {other:?}"),
             }
         }
+    }
+
+    // ---- leases (control-plane v3) ----
+
+    /// 5-second lease window + 1 node, the lease unit-test fixture.
+    fn leased_state() -> ManagerState {
+        let s = ManagerState::with_lease_timeout(
+            Box::new(RoundRobinStripe::default()),
+            Duration::from_secs(5),
+        );
+        join_nodes(&s, 1);
+        s
+    }
+
+    fn open_write_lease(s: &ManagerState, tag: &str) -> u64 {
+        let Msg::LeaseGrant { lease, ttl_ms, version, blocks } = s.handle(Msg::OpenLease {
+            file: tag.into(),
+            write: true,
+        }) else {
+            panic!("no grant")
+        };
+        assert!(lease != 0);
+        assert_eq!(ttl_ms, 5_000);
+        assert_eq!((version, blocks.len()), (0, 0));
+        lease
+    }
+
+    #[test]
+    fn zero_lease_timeout_clamped_to_floor() {
+        // The invariant lives in with_lease_timeout itself, not only in
+        // the front ends: a zero window must not lapse leases at grant.
+        let s = ManagerState::with_lease_timeout(
+            Box::new(RoundRobinStripe::default()),
+            Duration::ZERO,
+        );
+        let Msg::LeaseGrant { lease, ttl_ms, .. } = s.handle(Msg::OpenLease {
+            file: "t".into(),
+            write: true,
+        }) else {
+            panic!()
+        };
+        assert!(lease != 0);
+        assert!(ttl_ms >= 1, "ttl clamped to the floor, not zero");
+    }
+
+    #[test]
+    fn write_lease_claims_lapse_on_expiry() {
+        let s = leased_state();
+        let lease = open_write_lease(&s, "sess");
+        s.handle(Msg::AllocPlacement {
+            file: "sess".into(),
+            lease,
+            blocks: vec![BlockSpec { hash: [9; 16], len: 7 }],
+        });
+        assert_eq!(s.block_stats().pending_claims, 1);
+        // Within the window nothing lapses.
+        s.advance_clock(Duration::from_secs(4));
+        s.tick();
+        assert_eq!(s.block_stats().pending_claims, 1);
+        assert_eq!(s.block_stats().write_leases, 1);
+        // The allocation renewed the lease, so expiry counts from it.
+        s.advance_clock(Duration::from_secs(2));
+        s.tick();
+        assert_eq!(s.block_stats().pending_claims, 0, "claims lapsed");
+        assert_eq!(s.block_stats().write_leases, 0);
+        assert_eq!(s.block_stats().blocks, 0, "orphaned block swept");
+        // A lapsed lease can neither allocate nor commit.
+        assert!(matches!(
+            s.handle(Msg::AllocPlacement {
+                file: "sess".into(),
+                lease,
+                blocks: vec![BlockSpec { hash: [9; 16], len: 7 }],
+            }),
+            Msg::Err(_)
+        ));
+        assert!(matches!(
+            s.handle(Msg::CommitBlockMap {
+                file: "f".into(),
+                lease,
+                blocks: vec![meta(9)],
+            }),
+            Msg::Err(_)
+        ));
+    }
+
+    #[test]
+    fn renew_extends_write_lease() {
+        let s = leased_state();
+        let lease = open_write_lease(&s, "sess");
+        s.handle(Msg::AllocPlacement {
+            file: "sess".into(),
+            lease,
+            blocks: vec![BlockSpec { hash: [8; 16], len: 3 }],
+        });
+        for _ in 0..3 {
+            s.advance_clock(Duration::from_secs(4));
+            assert_eq!(s.handle(Msg::RenewLease { lease }), Msg::Ok);
+        }
+        s.tick();
+        assert_eq!(s.block_stats().pending_claims, 1, "renewals kept the claim");
+        // Stop renewing: one full window later the claim lapses.
+        s.advance_clock(Duration::from_secs(6));
+        assert!(matches!(s.handle(Msg::RenewLease { lease }), Msg::Err(_)));
+        assert_eq!(s.block_stats().pending_claims, 0);
+    }
+
+    #[test]
+    fn commit_consumes_write_lease() {
+        let s = leased_state();
+        let lease = open_write_lease(&s, "sess");
+        s.handle(Msg::AllocPlacement {
+            file: "sess".into(),
+            lease,
+            blocks: vec![BlockSpec { hash: [1; 16], len: 100 }],
+        });
+        assert_eq!(
+            s.handle(Msg::CommitBlockMap {
+                file: "f".into(),
+                lease,
+                blocks: vec![meta(1)],
+            }),
+            Msg::Ok
+        );
+        let stats = s.block_stats();
+        assert_eq!(stats.pending_claims, 0, "claims redeemed into refs");
+        assert_eq!(stats.write_leases, 0, "lease consumed");
+        assert_eq!(stats.blocks, 1);
+        // Expiry long after the commit must not touch the committed
+        // version.
+        s.advance_clock(Duration::from_secs(60));
+        s.tick();
+        assert_eq!(s.block_stats().blocks, 1);
+        // Dropping the consumed lease is a harmless no-op.
+        assert_eq!(s.handle(Msg::DropLease { lease }), Msg::Ok);
+        assert_eq!(s.block_stats().blocks, 1);
+    }
+
+    #[test]
+    fn commit_releases_unused_claims() {
+        // A writer allocates two blocks but commits only one (e.g. the
+        // app truncated): the unused claim is released with the lease.
+        let s = leased_state();
+        let lease = open_write_lease(&s, "sess");
+        s.handle(Msg::AllocPlacement {
+            file: "sess".into(),
+            lease,
+            blocks: vec![
+                BlockSpec { hash: [1; 16], len: 100 },
+                BlockSpec { hash: [2; 16], len: 100 },
+            ],
+        });
+        assert_eq!(s.block_stats().pending_claims, 2);
+        s.handle(Msg::CommitBlockMap {
+            file: "f".into(),
+            lease,
+            blocks: vec![meta(1)],
+        });
+        let stats = s.block_stats();
+        assert_eq!(stats.pending_claims, 0);
+        assert_eq!(stats.blocks, 1, "unused claim's block swept");
+    }
+
+    #[test]
+    fn read_lease_pins_overwritten_version() {
+        let s = leased_state();
+        s.handle(Msg::CommitBlockMap {
+            file: "f".into(),
+            lease: 0,
+            blocks: vec![meta(1)],
+        });
+        let Msg::LeaseGrant { lease, version, blocks, .. } = s.handle(Msg::OpenLease {
+            file: "f".into(),
+            write: false,
+        }) else {
+            panic!()
+        };
+        assert!(lease != 0);
+        assert_eq!(version, 1);
+        assert_eq!(blocks, vec![meta(1)]);
+        // Overwrite: block 1 loses its last reference but is pinned.
+        s.handle(Msg::CommitBlockMap {
+            file: "f".into(),
+            lease: 0,
+            blocks: vec![meta(2)],
+        });
+        let stats = s.block_stats();
+        assert_eq!(stats.blocks, 2, "old block pinned, not swept");
+        assert_eq!(stats.pinned_blocks, 1);
+        assert_eq!(stats.read_leases, 1);
+        // Dropping the lease runs the deferred delete.
+        assert_eq!(s.handle(Msg::DropLease { lease }), Msg::Ok);
+        let stats = s.block_stats();
+        assert_eq!(stats.blocks, 1, "deferred GC ran on lease drop");
+        assert_eq!((stats.pinned_blocks, stats.read_leases), (0, 0));
+    }
+
+    #[test]
+    fn read_lease_expiry_unpins() {
+        let s = leased_state();
+        s.handle(Msg::CommitBlockMap {
+            file: "f".into(),
+            lease: 0,
+            blocks: vec![meta(1)],
+        });
+        let Msg::LeaseGrant { lease, .. } = s.handle(Msg::OpenLease {
+            file: "f".into(),
+            write: false,
+        }) else {
+            panic!()
+        };
+        assert!(lease != 0);
+        s.handle(Msg::CommitBlockMap {
+            file: "f".into(),
+            lease: 0,
+            blocks: vec![meta(2)],
+        });
+        assert_eq!(s.block_stats().blocks, 2);
+        // The reader vanishes without dropping: the pin lapses with the
+        // lease and the deferred delete runs.
+        s.advance_clock(Duration::from_secs(6));
+        s.tick();
+        let stats = s.block_stats();
+        assert_eq!(stats.blocks, 1, "pin lapsed, block reclaimed");
+        assert_eq!(stats.read_leases, 0);
+    }
+
+    #[test]
+    fn open_lease_on_missing_file_grants_nothing() {
+        let s = leased_state();
+        let Msg::LeaseGrant { lease, version, blocks, .. } = s.handle(Msg::OpenLease {
+            file: "nope".into(),
+            write: false,
+        }) else {
+            panic!()
+        };
+        assert_eq!((lease, version, blocks.len()), (0, 0, 0));
+        assert_eq!(s.block_stats().read_leases, 0);
+    }
+
+    #[test]
+    fn shared_block_pinned_by_two_readers() {
+        let s = leased_state();
+        s.handle(Msg::CommitBlockMap {
+            file: "f".into(),
+            lease: 0,
+            blocks: vec![meta(1)],
+        });
+        let open = |s: &ManagerState| -> u64 {
+            let Msg::LeaseGrant { lease, .. } = s.handle(Msg::OpenLease {
+                file: "f".into(),
+                write: false,
+            }) else {
+                panic!()
+            };
+            lease
+        };
+        let (l1, l2) = (open(&s), open(&s));
+        s.handle(Msg::CommitBlockMap {
+            file: "f".into(),
+            lease: 0,
+            blocks: vec![],
+        });
+        assert_eq!(s.block_stats().blocks, 1, "pinned twice");
+        s.handle(Msg::DropLease { lease: l1 });
+        assert_eq!(s.block_stats().blocks, 1, "still pinned once");
+        s.handle(Msg::DropLease { lease: l2 });
+        assert_eq!(s.block_stats().blocks, 0, "last pin dropped -> swept");
     }
 }

@@ -1,6 +1,6 @@
 //! store — the MosaStore analog: an object-based, content-addressable
 //! distributed storage system (GoogleFS-like topology, paper §3.2.1),
-//! running the v2 *manager-driven* control plane.
+//! running the v3 *manager-driven, lease-consistent* control plane.
 //!
 //! Control-plane v2 in one paragraph: the metadata manager owns
 //! placement.  Storage nodes register with it on spawn
@@ -18,6 +18,16 @@
 //! blocks from their owning nodes ([`Msg::DeleteBlock`]).  Readers fail
 //! over between replicas when a node is down or a copy fails its
 //! integrity check.
+//!
+//! Control-plane v3 adds *leases* for consistency under failure
+//! timings: a read session's [`Msg::OpenLease`] atomically snapshots
+//! and pins its version's blocks (GC defers their deletion until the
+//! last lease drops), and a write session's claims live under an
+//! expiring lease renewed by a client heartbeat, so a SIGKILL'd
+//! writer's claims lapse and its blocks return to the GC pool.  Lease
+//! expiry shares the manager's liveness clock, with a test-only
+//! advance hook making every expiry path deterministic to test
+//! (`rust/tests/fault_injection.rs`).
 //!
 //! * [`manager`] — metadata manager: block-maps, versions, node
 //!   registry (join/heartbeat), placement policies, per-block refcounts
@@ -45,7 +55,10 @@ pub mod sai;
 pub mod session;
 
 pub use cluster::Cluster;
-pub use manager::{policy_for, Manager, PlacementPolicy, ReplicatedStripe, RoundRobinStripe};
+pub use manager::{
+    policy_for, BlockStats, Manager, PlacementPolicy, ReplicatedStripe, RoundRobinStripe,
+    DEFAULT_LEASE_TIMEOUT,
+};
 pub use node::StorageNode;
 pub use proto::{Assignment, BlockMeta, BlockSpec, Msg, NodeEntry};
 pub use sai::{Sai, WriteReport};

@@ -12,6 +12,15 @@
 //! through [`Msg::NodeList`] → [`Msg::Nodes`]; unreferenced blocks are
 //! reclaimed through [`Msg::ReleaseBlocks`] (client→manager) and
 //! [`Msg::DeleteBlock`] (manager→node).
+//!
+//! Control-plane v3 adds *leases* (tags ≥ 24): a read session opens a
+//! lease that pins the opened version's blocks against GC
+//! ([`Msg::OpenLease`] → [`Msg::LeaseGrant`]) and a write session's
+//! provisional claims are held under an expiring lease renewed by a
+//! client heartbeat ([`Msg::RenewLease`]) — a SIGKILL'd writer's claims
+//! lapse instead of stranding forever.  Lease ids ride along on
+//! [`Msg::AllocPlacement`] and [`Msg::CommitBlockMap`] (`lease == 0`
+//! means "untracked", the pre-lease behaviour).
 
 use std::io::{Read, Write};
 
@@ -89,10 +98,16 @@ pub enum Msg {
     },
     /// Commit a new version's block-map (replaces the old one; the
     /// manager refcounts blocks across versions and reclaims the ones
-    /// the overwrite orphaned).
+    /// the overwrite orphaned — deferring deletes for blocks pinned by
+    /// read leases).
     CommitBlockMap {
         /// File name.
         file: String,
+        /// Write lease the session's claims were allocated under.  The
+        /// manager consumes the lease on commit; if it already lapsed
+        /// (the claims were released and the blocks possibly GC'd) the
+        /// commit is rejected.  `0` = untracked (no lease validation).
+        lease: u64,
         /// Ordered block list.
         blocks: Vec<BlockMeta>,
     },
@@ -107,6 +122,11 @@ pub enum Msg {
         /// same tag, so one session's claims never hide another's
         /// possibly-incomplete transfer.
         file: String,
+        /// Write lease the claims are held under: the manager records
+        /// each allocated occurrence against the lease so the claims
+        /// lapse if the writer vanishes, and the allocation renews the
+        /// lease.  `0` = untracked claims (pre-lease behaviour).
+        lease: u64,
         /// The blocks to place, in order.
         blocks: Vec<BlockSpec>,
     },
@@ -119,6 +139,31 @@ pub enum Msg {
     },
     /// Fetch the node registry.
     NodeList,
+    /// Open a lease.  Read leases (`write == false`) atomically fetch
+    /// the file's current block-map and pin its blocks against GC until
+    /// the lease is dropped or lapses; write leases register an
+    /// expiring holder for a write session's provisional claims.
+    OpenLease {
+        /// Read lease: the file to open.  Write lease: the session's
+        /// claim token (diagnostics only).
+        file: String,
+        /// `true` for a writer claim lease, `false` for a read lease.
+        write: bool,
+    },
+    /// Extend a lease's expiry by the manager's lease timeout (the
+    /// client-side heartbeat).  Errs if the lease already lapsed.
+    RenewLease {
+        /// Lease id from [`Msg::LeaseGrant`].
+        lease: u64,
+    },
+    /// Release a lease early: a read lease unpins its version's blocks
+    /// (deferred GC deletes run now), a write lease releases its
+    /// pending claims (aborted session).  Idempotent — dropping an
+    /// unknown/lapsed lease is OK.
+    DropLease {
+        /// Lease id from [`Msg::LeaseGrant`].
+        lease: u64,
+    },
 
     // ---- manager -> client ----
     /// Block-map reply; `version == 0` means the file does not exist.
@@ -142,6 +187,20 @@ pub enum Msg {
     Nodes {
         /// Registered nodes, by id.
         nodes: Vec<NodeEntry>,
+    },
+    /// Lease reply.  For read leases `version`/`blocks` carry the
+    /// pinned snapshot (`lease == 0 && version == 0` = no such file);
+    /// for write leases both are empty/zero.
+    LeaseGrant {
+        /// Granted lease id (`0` = not granted).
+        lease: u64,
+        /// The manager's lease timeout in milliseconds — the client
+        /// paces its renewals from this (typically every `ttl / 3`).
+        ttl_ms: u64,
+        /// Pinned file version (read leases; 0 = absent file).
+        version: u64,
+        /// Pinned block-map (read leases).
+        blocks: Vec<BlockMeta>,
     },
 
     // ---- node -> manager ----
@@ -239,6 +298,10 @@ impl Msg {
             Msg::Nodes { .. } => 21,
             Msg::ReleaseBlocks { .. } => 22,
             Msg::DeleteBlock { .. } => 23,
+            Msg::OpenLease { .. } => 24,
+            Msg::LeaseGrant { .. } => 25,
+            Msg::RenewLease { .. } => 26,
+            Msg::DropLease { .. } => 27,
         }
     }
 
@@ -247,8 +310,9 @@ impl Msg {
         let mut p = Vec::new();
         match self {
             Msg::GetBlockMap { file } => put_str(&mut p, file),
-            Msg::CommitBlockMap { file, blocks } => {
+            Msg::CommitBlockMap { file, lease, blocks } => {
                 put_str(&mut p, file);
+                p.extend_from_slice(&lease.to_le_bytes());
                 put_blocks(&mut p, blocks);
             }
             Msg::ListFiles | Msg::NodeStats | Msg::NodeList | Msg::Ok => {}
@@ -263,8 +327,9 @@ impl Msg {
                     p.extend_from_slice(&v.to_le_bytes());
                 }
             }
-            Msg::AllocPlacement { file, blocks } => {
+            Msg::AllocPlacement { file, lease, blocks } => {
                 put_str(&mut p, file);
+                p.extend_from_slice(&lease.to_le_bytes());
                 p.extend_from_slice(&(blocks.len() as u32).to_le_bytes());
                 for b in blocks {
                     p.extend_from_slice(&b.hash);
@@ -313,6 +378,24 @@ impl Msg {
             }
             Msg::Bool(b) => p.push(*b as u8),
             Msg::Err(e) => put_str(&mut p, e),
+            Msg::OpenLease { file, write } => {
+                put_str(&mut p, file);
+                p.push(*write as u8);
+            }
+            Msg::LeaseGrant {
+                lease,
+                ttl_ms,
+                version,
+                blocks,
+            } => {
+                p.extend_from_slice(&lease.to_le_bytes());
+                p.extend_from_slice(&ttl_ms.to_le_bytes());
+                p.extend_from_slice(&version.to_le_bytes());
+                put_blocks(&mut p, blocks);
+            }
+            Msg::RenewLease { lease } | Msg::DropLease { lease } => {
+                p.extend_from_slice(&lease.to_le_bytes())
+            }
         }
         let mut frame = Vec::with_capacity(5 + p.len());
         frame.extend_from_slice(&(p.len() as u32 + 1).to_le_bytes());
@@ -328,6 +411,7 @@ impl Msg {
             1 => Msg::GetBlockMap { file: c.str()? },
             2 => Msg::CommitBlockMap {
                 file: c.str()?,
+                lease: c.u64()?,
                 blocks: c.blocks()?,
             },
             3 => Msg::ListFiles,
@@ -362,6 +446,7 @@ impl Msg {
             14 => Msg::Err(c.str()?),
             15 => {
                 let file = c.str()?;
+                let lease = c.u64()?;
                 let n = c.u32()? as usize;
                 if n > MAX_FRAME / 20 {
                     return Err(Error::Proto(format!("spec list too long: {n}")));
@@ -373,7 +458,7 @@ impl Msg {
                         len: c.u32()?,
                     });
                 }
-                Msg::AllocPlacement { file, blocks }
+                Msg::AllocPlacement { file, lease, blocks }
             }
             16 => {
                 let n = c.u32()? as usize;
@@ -419,6 +504,18 @@ impl Msg {
                 Msg::ReleaseBlocks { hashes }
             }
             23 => Msg::DeleteBlock { hash: c.digest()? },
+            24 => Msg::OpenLease {
+                file: c.str()?,
+                write: c.u8()? != 0,
+            },
+            25 => Msg::LeaseGrant {
+                lease: c.u64()?,
+                ttl_ms: c.u64()?,
+                version: c.u64()?,
+                blocks: c.blocks()?,
+            },
+            26 => Msg::RenewLease { lease: c.u64()? },
+            27 => Msg::DropLease { lease: c.u64()? },
             t => return Err(Error::Proto(format!("unknown tag {t}"))),
         };
         if c.i != p.len() {
@@ -606,6 +703,7 @@ mod tests {
         roundtrip(Msg::GetBlockMap { file: "a/b.txt".into() });
         roundtrip(Msg::CommitBlockMap {
             file: "f".into(),
+            lease: 42,
             blocks: vec![meta(1), meta(2)],
         });
         roundtrip(Msg::ListFiles);
@@ -618,6 +716,7 @@ mod tests {
         });
         roundtrip(Msg::AllocPlacement {
             file: "f".into(),
+            lease: u64::MAX,
             blocks: vec![
                 BlockSpec { hash: [1; 16], len: 100 },
                 BlockSpec { hash: [2; 16], len: 200 },
@@ -663,6 +762,28 @@ mod tests {
             hashes: vec![[4; 16], [5; 16]],
         });
         roundtrip(Msg::DeleteBlock { hash: [6; 16] });
+        roundtrip(Msg::OpenLease {
+            file: "lease.bin".into(),
+            write: true,
+        });
+        roundtrip(Msg::OpenLease {
+            file: "lease.bin".into(),
+            write: false,
+        });
+        roundtrip(Msg::LeaseGrant {
+            lease: 7,
+            ttl_ms: 30_000,
+            version: 3,
+            blocks: vec![meta(4)],
+        });
+        roundtrip(Msg::LeaseGrant {
+            lease: 0,
+            ttl_ms: 0,
+            version: 0,
+            blocks: vec![],
+        });
+        roundtrip(Msg::RenewLease { lease: u64::MAX });
+        roundtrip(Msg::DropLease { lease: 1 });
         roundtrip(Msg::PutBlock {
             hash: [9; 16],
             data: vec![1, 2, 3],

@@ -17,6 +17,12 @@
 //! assigned replica and the reader fails over between replicas when a
 //! node is down or a copy fails its integrity check.
 //!
+//! Control-plane v3 adds leases: `open` pins the opened version's
+//! blocks against GC for the life of the read session, and `create`
+//! holds its provisional claims under an expiring lease renewed by a
+//! heartbeat, so a SIGKILL'd writer's claims lapse instead of stranding
+//! blocks forever.
+//!
 //! All node links share one bandwidth [`Shaper`] — the client's NIC.
 
 use std::io::{BufReader, BufWriter, Write as _};
@@ -221,6 +227,10 @@ pub struct Sai {
     pub(super) cfg: ClientConfig,
     pub(super) engine: Arc<dyn HashEngine>,
     manager: Mutex<(BufReader<Conn>, BufWriter<Conn>)>,
+    /// Manager bootstrap address — kept so per-session helpers (the
+    /// write-lease heartbeat thread) can open their own control
+    /// connections without serializing behind the shared one.
+    manager_addr: String,
     /// Node clients indexed by manager node id.  `None` = the node was
     /// unreachable when last tried (reads fail over to other replicas;
     /// puts targeting it fail the write).  Refreshed from the manager's
@@ -257,6 +267,7 @@ impl Sai {
             cfg,
             engine,
             manager,
+            manager_addr: manager_addr.to_string(),
             nodes: Mutex::new(Vec::new()),
             shaper,
             last_refresh: Mutex::new(None),
@@ -376,15 +387,61 @@ impl Sai {
         }
     }
 
-    /// Ask the manager to place a batch of blocks for `file`.
+    /// The manager bootstrap address.
+    pub(super) fn manager_addr(&self) -> &str {
+        &self.manager_addr
+    }
+
+    /// Open a lease: `(lease, ttl_ms, version, blocks)`.  Read leases
+    /// atomically fetch-and-pin the file's current block-map; write
+    /// leases register an expiring claim holder for a write session.
+    pub(super) fn open_lease(
+        &self,
+        file: &str,
+        write: bool,
+    ) -> Result<(u64, u64, u64, Vec<BlockMeta>)> {
+        match self.manager_call(Msg::OpenLease {
+            file: file.into(),
+            write,
+        })? {
+            Msg::LeaseGrant {
+                lease,
+                ttl_ms,
+                version,
+                blocks,
+            } => Ok((lease, ttl_ms, version, blocks)),
+            m => Err(Error::Proto(format!("unexpected lease reply {m:?}"))),
+        }
+    }
+
+    /// Extend a lease (errs if it already lapsed manager-side).
+    pub(super) fn renew_lease(&self, lease: u64) -> Result<()> {
+        match self.manager_call(Msg::RenewLease { lease })? {
+            Msg::Ok => Ok(()),
+            m => Err(Error::Proto(format!("unexpected renew reply {m:?}"))),
+        }
+    }
+
+    /// Best-effort lease release (session teardown).  Idempotent on the
+    /// manager; `0` (never granted) is skipped client-side.
+    pub(super) fn drop_lease(&self, lease: u64) {
+        if lease != 0 {
+            let _ = self.manager_call(Msg::DropLease { lease });
+        }
+    }
+
+    /// Ask the manager to place a batch of blocks for `file`, claiming
+    /// them under the session's write `lease`.
     pub(super) fn alloc_placement(
         &self,
         file: &str,
+        lease: u64,
         blocks: Vec<BlockSpec>,
     ) -> Result<Vec<Assignment>> {
         let n = blocks.len();
         match self.manager_call(Msg::AllocPlacement {
             file: file.into(),
+            lease,
             blocks,
         })? {
             Msg::Placement { assignments } if assignments.len() == n => Ok(assignments),
@@ -395,14 +452,6 @@ impl Sai {
             ))),
             m => Err(Error::Proto(format!("unexpected reply {m:?}"))),
         }
-    }
-
-    /// Best-effort release of provisional block claims (aborted write).
-    pub(super) fn release_blocks(&self, hashes: Vec<Digest>) {
-        if hashes.is_empty() {
-            return;
-        }
-        let _ = self.manager_call(Msg::ReleaseBlocks { hashes });
     }
 
     /// Fetch a file's current block-map (version 0 = absent).

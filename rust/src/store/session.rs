@@ -20,6 +20,16 @@
 //! transfer (CA modes).  Dropping a writer without closing releases its
 //! provisional claims back to the manager.
 //!
+//! Control-plane v3 (leases): the writer's claims are held under a
+//! manager lease that a dedicated heartbeat thread renews, so a writer
+//! killed without running `Drop` (SIGKILL, power loss) has its claims
+//! lapse and its blocks reclaimed instead of stranding forever; renewal
+//! failures are survived gracefully (the session keeps streaming and
+//! the commit itself revalidates the lease).  The reader's lease pins
+//! the opened version's blocks at the manager, so a concurrent
+//! overwrite's commit-time GC defers their deletion until this session
+//! finishes — a mid-file reader can no longer lose its snapshot.
+//!
 //! Buffering is caller-split-invariant: the writer re-buffers incoming
 //! bytes to exactly `write_buffer`-sized batches internally, so a file
 //! streamed in arbitrary splits produces a block-map byte-identical to
@@ -27,9 +37,10 @@
 
 use std::collections::VecDeque;
 use std::io::{Read, Write};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::Receiver;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::proto::{BlockMeta, BlockSpec, Msg};
@@ -38,6 +49,7 @@ use crate::chunking::ContentChunker;
 use crate::config::CaMode;
 use crate::hash::{md5, Digest};
 use crate::hashgpu::{DigestsTicket, HashTiming};
+use crate::net::Conn;
 use crate::{Error, Result};
 
 /// Mode-specific chunking state of a write session.
@@ -58,15 +70,107 @@ struct Inflight {
     ticket: DigestsTicket,
 }
 
+/// Monotonic per-process counter feeding session claim tokens.
+static SESSION_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Floor on the write-lease renewal cadence: even against a manager
+/// configured with a very short lease timeout the heartbeat thread
+/// never busy-spins.
+const MIN_RENEW_INTERVAL: Duration = Duration::from_millis(25);
+
+/// The write session's lease heartbeat: a thread with its own manager
+/// connection renewing the claim lease every `ttl / 3`, so a slow or
+/// idle-but-alive writer keeps its claims while a SIGKILL'd one lapses.
+/// Renewal failures are survived, not surfaced: transport errors retry
+/// over a fresh connection next tick, and a logical "lease lapsed"
+/// reply latches [`LeaseHeartbeat::lost`] — the commit revalidates the
+/// lease anyway, so the session fails at close with a clear error
+/// instead of panicking mid-stream.
+struct LeaseHeartbeat {
+    /// Dropping the sender stops the thread at its next tick.
+    stop: Option<Sender<()>>,
+    /// Fault-injection hook: while set, ticks skip renewal (the
+    /// in-process analog of a SIGKILL'd client's silence).
+    pause: Arc<AtomicBool>,
+    /// Latched when the manager reports the lease lapsed.
+    lost: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl LeaseHeartbeat {
+    fn spawn(manager_addr: String, lease: u64, ttl: Duration) -> LeaseHeartbeat {
+        let (stop, rx) = mpsc::channel::<()>();
+        let pause = Arc::new(AtomicBool::new(false));
+        let lost = Arc::new(AtomicBool::new(false));
+        let (p, l) = (pause.clone(), lost.clone());
+        let every = (ttl / 3).max(MIN_RENEW_INTERVAL);
+        let handle = std::thread::Builder::new()
+            .name(format!("sai-lease-{lease}"))
+            .spawn(move || {
+                let mut link: Option<Conn> = None;
+                loop {
+                    match rx.recv_timeout(every) {
+                        Err(RecvTimeoutError::Timeout) => {}
+                        _ => break, // stop requested or writer dropped
+                    }
+                    if p.load(Ordering::Relaxed) {
+                        continue;
+                    }
+                    if link.is_none() {
+                        // Bounded connect AND bounded reads: a manager
+                        // that accepts but never replies must not wedge
+                        // this thread — FileWriter::drop joins it.
+                        link = Conn::connect_timeout(&manager_addr, Duration::from_secs(1))
+                            .and_then(|c| {
+                                c.set_read_timeout(Duration::from_secs(1))?;
+                                Ok(c)
+                            })
+                            .ok();
+                    }
+                    let Some(c) = link.as_mut() else { continue };
+                    let reply = (|| -> Result<Msg> {
+                        Msg::RenewLease { lease }.write_to(c)?;
+                        Msg::read_from(c)?.ok_or_else(closed)
+                    })();
+                    match reply {
+                        Ok(Msg::Ok) => {}
+                        // The manager says the lease is gone: renewing
+                        // further is pointless — latch and stop.
+                        Ok(Msg::Err(_)) => {
+                            l.store(true, Ordering::Relaxed);
+                            break;
+                        }
+                        // Transport trouble or protocol noise: retry
+                        // over a fresh connection next tick.
+                        _ => link = None,
+                    }
+                }
+            })
+            .ok();
+        LeaseHeartbeat {
+            stop: Some(stop),
+            pause,
+            lost,
+            handle,
+        }
+    }
+
+    fn stop(&mut self) {
+        self.stop.take(); // disconnects the channel -> thread exits
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
 /// Streaming write session (from [`Sai::create`]).  Implements
 /// [`std::io::Write`]; call [`close`](FileWriter::close) to commit the
 /// block-map and obtain the [`WriteReport`].  Dropping the writer
 /// without closing abandons the write: nothing is committed, and the
-/// session's provisional placement claims are released back to the
-/// manager so already-transferred blocks can be garbage-collected.
-/// Monotonic per-process counter feeding session claim tokens.
-static SESSION_SEQ: AtomicU64 = AtomicU64::new(0);
-
+/// session's claim lease is dropped so already-transferred blocks can
+/// be garbage-collected.  A writer that never runs `Drop` at all
+/// (SIGKILL) is covered by lease expiry: its heartbeats stop and the
+/// manager reclaims the claims after the lease timeout.
 pub struct FileWriter<'a> {
     sai: &'a Sai,
     name: String,
@@ -76,6 +180,11 @@ pub struct FileWriter<'a> {
     /// match a crashed earlier attempt (whose transfer may never have
     /// happened) or a concurrent writer of the same file.
     claim: String,
+    /// Manager lease holding this session's claims (renewed by
+    /// `heartbeat`, consumed by the commit, dropped on abort).
+    lease: u64,
+    /// Renewal thread (stopped on drop, surviving sessions only).
+    heartbeat: Option<LeaseHeartbeat>,
     mode: ModeState,
     /// Bytes accumulated toward the next `write_buffer`-sized batch.
     buf: Vec<u8>,
@@ -84,9 +193,6 @@ pub struct FileWriter<'a> {
     pending: Vec<Receiver<Result<()>>>,
     /// The previous buffer's digest batch, still being hashed.
     inflight: Option<Inflight>,
-    /// Every hash occurrence allocated from the manager this session
-    /// (released on drop when the session never commits).
-    alloced: Vec<Digest>,
     committed: bool,
     report: WriteReport,
     t0: Instant,
@@ -115,16 +221,28 @@ impl<'a> FileWriter<'a> {
             std::process::id(),
             SESSION_SEQ.fetch_add(1, Ordering::Relaxed)
         );
+        // Claim lease: every occurrence this session allocates is held
+        // under it, so a vanished writer's claims lapse after the
+        // manager's lease timeout instead of stranding forever.
+        let (lease, ttl_ms, _, _) = sai.open_lease(&claim, true)?;
+        let heartbeat = (lease != 0).then(|| {
+            LeaseHeartbeat::spawn(
+                sai.manager_addr().to_string(),
+                lease,
+                Duration::from_millis(ttl_ms.max(1)),
+            )
+        });
         Ok(FileWriter {
             sai,
             name: name.to_string(),
             claim,
+            lease,
+            heartbeat,
             mode,
             buf: Vec::with_capacity(sai.cfg.write_buffer),
             metas: Vec::new(),
             pending: Vec::new(),
             inflight: None,
-            alloced: Vec::new(),
             committed: false,
             report: WriteReport::default(),
             t0,
@@ -139,6 +257,32 @@ impl<'a> FileWriter<'a> {
     /// Bytes accepted so far.
     pub fn bytes_written(&self) -> u64 {
         self.report.bytes
+    }
+
+    /// The manager lease holding this session's claims.
+    pub fn lease(&self) -> u64 {
+        self.lease
+    }
+
+    /// Whether the claim lease is known to have lapsed (a renewal was
+    /// rejected).  The session survives — the commit revalidates the
+    /// lease and fails with a clear error if it is really gone.
+    pub fn lease_lost(&self) -> bool {
+        self.heartbeat
+            .as_ref()
+            .map(|h| h.lost.load(Ordering::Relaxed))
+            .unwrap_or(false)
+    }
+
+    /// Fault-injection hook: stop renewing the claim lease without
+    /// stopping the session — the in-process analog of SIGKILLing the
+    /// writer's host (its heartbeats go silent but the manager still
+    /// holds its claims until the lease times out).  Pair with
+    /// `std::mem::forget` to model a crash that never runs `Drop`.
+    pub fn pause_lease_heartbeat(&self) {
+        if let Some(h) = &self.heartbeat {
+            h.pause.store(true, Ordering::Relaxed);
+        }
     }
 
     /// Feed payload bytes into the pipeline (the [`std::io::Write`]
@@ -181,13 +325,14 @@ impl<'a> FileWriter<'a> {
 
         match self.sai.manager_call(Msg::CommitBlockMap {
             file: self.name.clone(),
+            lease: self.lease,
             blocks: self.metas.clone(),
         })? {
             Msg::Ok => {}
             m => return Err(Error::Proto(format!("unexpected commit reply {m:?}"))),
         }
-        // The commit consumed this session's provisional claims; the
-        // Drop impl must not release them a second time.
+        // The commit consumed this session's claim lease; the Drop impl
+        // must not release it a second time.
         self.committed = true;
 
         self.report.blocks = self.metas.len();
@@ -333,11 +478,11 @@ impl<'a> FileWriter<'a> {
                 len: b.len() as u32,
             })
             .collect();
-        let assignments = self.sai.alloc_placement(&self.claim, specs)?;
-        // Every occurrence is now claimed on the manager; register them
-        // for release-on-abort BEFORE anything below can fail, so a
-        // mid-batch error never strands pending claims.
-        self.alloced.extend(digests.iter().copied());
+        let assignments = self.sai.alloc_placement(&self.claim, self.lease, specs)?;
+        // Every occurrence is now claimed on the manager, recorded
+        // against this session's lease server-side — a mid-batch error
+        // below (or a crash right here) cannot strand pending claims:
+        // the lease's release or expiry returns them all.
         // Non-CA keys are positional, not content hashes: a rewrite
         // reuses the key with different bytes, so the data must always
         // be transferred even when the manager already knows the key.
@@ -380,17 +525,22 @@ impl<'a> FileWriter<'a> {
 
 impl Drop for FileWriter<'_> {
     fn drop(&mut self) {
+        if let Some(hb) = &mut self.heartbeat {
+            hb.stop();
+        }
         if !self.committed {
             // Abandoned session: wait out the in-flight puts (so a GC
             // delete cannot be overtaken by a straggling transfer),
-            // then hand the provisional claims back so the manager can
-            // reclaim the blocks.  All best effort with bounded waits —
-            // a frozen node or dead manager must not hang the drop
-            // (stranded claims are an accepted cost, see ROADMAP).
+            // then drop the claim lease so the manager reclaims the
+            // blocks now.  All best effort with bounded waits — a
+            // frozen node or dead manager must not hang the drop
+            // (claims a dead manager can't release lapse via lease
+            // expiry once it restarts... or cost nothing if it never
+            // does).
             for rx in self.pending.drain(..) {
                 let _ = rx.recv_timeout(Duration::from_secs(5));
             }
-            self.sai.release_blocks(std::mem::take(&mut self.alloced));
+            self.sai.drop_lease(self.lease);
         }
     }
 }
@@ -416,10 +566,23 @@ impl Write for FileWriter<'_> {
 /// fetched — node down, short read, integrity mismatch — the reader
 /// transparently fails over to the block's remaining replicas and only
 /// errors once every copy has been tried.
+///
+/// The session holds a manager *read lease* pinning the opened
+/// version's blocks: a concurrent overwrite cannot garbage-collect
+/// them out from under this reader (the delete is deferred to the last
+/// lease's release).  The lease is acquired atomically with the
+/// block-map, renewed lazily while the session reads, and dropped —
+/// running any deferred deletes — when the reader is dropped.
 pub struct FileReader<'a> {
     sai: &'a Sai,
     blocks: Vec<BlockMeta>,
     version: u64,
+    /// Manager read lease pinning `blocks`.
+    lease: u64,
+    /// Lease timeout reported by the manager; renew at `ttl / 3`.
+    ttl: Duration,
+    /// Last renewal (or acquisition) on this client's clock.
+    last_renew: Instant,
     /// Next block index to request from its primary replica.
     next_fetch: usize,
     /// Next block index to hand to the consumer.
@@ -441,7 +604,10 @@ pub struct FileReader<'a> {
 
 impl<'a> FileReader<'a> {
     pub(super) fn new(sai: &'a Sai, name: &str) -> Result<FileReader<'a>> {
-        let (version, blocks) = sai.get_block_map(name)?;
+        // Atomic snapshot + pin: the lease grant carries the block-map,
+        // so there is no window between "map fetched" and "blocks
+        // pinned" for a concurrent overwrite's GC to slip through.
+        let (lease, ttl_ms, version, blocks) = sai.open_lease(name, false)?;
         if version == 0 {
             return Err(Error::Manager(format!("no such file: {name}")));
         }
@@ -449,6 +615,9 @@ impl<'a> FileReader<'a> {
             sai,
             blocks,
             version,
+            lease,
+            ttl: Duration::from_millis(ttl_ms.max(1)),
+            last_renew: Instant::now(),
             next_fetch: 0,
             next_read: 0,
             rxs: VecDeque::new(),
@@ -487,6 +656,25 @@ impl<'a> FileReader<'a> {
         self.failovers
     }
 
+    /// The manager read lease pinning this session's version.
+    pub fn lease(&self) -> u64 {
+        self.lease
+    }
+
+    /// Lazy renewal: piggybacked on the read path instead of a thread —
+    /// a reader that stops consuming eventually lapses (by design: an
+    /// abandoned session must not pin blocks forever), while any
+    /// actively-draining session renews far inside the window.
+    /// Best-effort — if the lease is already gone the blocks may be
+    /// deleted mid-read, which surfaces as an ordinary all-replicas
+    /// read failure.
+    fn maybe_renew(&mut self) {
+        if self.lease != 0 && self.last_renew.elapsed() > self.ttl / 3 {
+            let _ = self.sai.renew_lease(self.lease);
+            self.last_renew = Instant::now();
+        }
+    }
+
     /// Keep up to `2 * stripe` fetches outstanding ahead of the reader.
     /// Each block is requested from its first *connected* replica;
     /// blocks with no connected replica enter the queue as immediate
@@ -519,6 +707,7 @@ impl<'a> FileReader<'a> {
         if self.failed {
             return Err(Error::Node("read session failed earlier".into()));
         }
+        self.maybe_renew();
         match self.next_block_inner() {
             Ok(v) => Ok(v),
             Err(e) => {
@@ -605,6 +794,16 @@ impl<'a> FileReader<'a> {
         self.next_read += 1;
         self.prefetch();
         Ok(Some(data))
+    }
+}
+
+impl Drop for FileReader<'_> {
+    fn drop(&mut self) {
+        // Unpin: any deletes deferred to this session (the version was
+        // overwritten while we streamed it) run inside this call, so
+        // reclamation stays observable at the client.  Best effort — a
+        // dead manager lapses the lease by expiry instead.
+        self.sai.drop_lease(self.lease);
     }
 }
 

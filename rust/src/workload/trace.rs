@@ -293,6 +293,7 @@ read ckpt -
             link_bps: 1e9,
             shape: false,
             replication: 1,
+            ..ClusterConfig::default()
         })
         .unwrap();
         let cfg = ClientConfig {

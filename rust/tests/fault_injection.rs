@@ -1,0 +1,283 @@
+//! Deterministic fault injection for the lease subsystem
+//! (control-plane v3): writers killed without `Drop`, heartbeats gone
+//! silent, and clock-driven lease expiry — all through the manager's
+//! test-only time hook (`advance_clock` + `tick`), never wall-clock
+//! sleeps.  The only real waiting in this file is bounded sub-100 ms
+//! polling for asynchronous transfers/heartbeats to land (enforced by
+//! the Makefile's sleep guard).
+//!
+//! These tests close the two PR-2 correctness holes recorded in
+//! ROADMAP: a reader streaming an overwritten version racing commit-time
+//! GC, and a SIGKILL'd writer stranding pending claims forever.
+
+use std::io::{Read, Write};
+use std::sync::Arc;
+use std::time::Duration;
+
+use gpustore::config::{ClientConfig, ClusterConfig};
+use gpustore::hashgpu::{CpuEngine, WindowHashMode};
+use gpustore::store::{Cluster, FileWriter, Sai};
+use gpustore::util::Rng;
+
+/// Manager lease window for these tests.  The value is arbitrary — the
+/// clock hook advances past it instantly — but comfortably larger than
+/// any test's real runtime, so a lease can never lapse by accident.
+const LEASE: Duration = Duration::from_secs(5);
+
+/// 4 nodes, no shaping, 64 KB blocks — claims and pins are per-block,
+/// so small blocks exercise multi-block maps cheaply.
+fn lease_cluster() -> Cluster {
+    Cluster::spawn(ClusterConfig {
+        nodes: 4,
+        link_bps: 1e9,
+        shape: false,
+        replication: 1,
+        lease_timeout: LEASE,
+    })
+    .unwrap()
+}
+
+fn client(cluster: &Cluster) -> Sai {
+    let cfg = ClientConfig {
+        block_size: 64 * 1024,
+        write_buffer: 256 * 1024,
+        ..ClientConfig::default()
+    };
+    let engine = Arc::new(CpuEngine::new(4, 4096, WindowHashMode::Rolling));
+    cluster.client(cfg, engine).unwrap()
+}
+
+/// Fault-injection helpers: each models one failure the paper's storage
+/// prototype must stay consistent under.
+struct Hiccup;
+
+impl Hiccup {
+    /// SIGKILL analog: the writer vanishes without ever running `Drop`
+    /// — no commit, no claim release, and its lease heartbeats go
+    /// silent.  (The heartbeat is paused first because the in-process
+    /// renewal thread would otherwise outlive the forgotten writer;
+    /// a real SIGKILL takes the thread with the process.)
+    fn kill_writer(w: FileWriter<'_>) {
+        w.pause_lease_heartbeat();
+        std::mem::forget(w);
+    }
+
+    /// Jump the manager's clock past the lease window and run one
+    /// expiry sweep — deterministic expiry, no sleeping.
+    fn lapse_leases(cluster: &Cluster) {
+        let state = cluster.manager().state();
+        state.advance_clock(LEASE + Duration::from_millis(1));
+        state.tick();
+    }
+}
+
+/// Bounded sub-100 ms polling for asynchronous cluster state (node
+/// transfers, heartbeats) — never a blind sleep.
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    for _ in 0..500 {
+        if cond() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    panic!("timed out waiting for {what}");
+}
+
+/// Advancing the manager clock also stales node heartbeats; the node
+/// processes are alive and re-beat within ~250 ms of real time, which
+/// placement needs before the next write.
+fn wait_nodes_alive(sai: &Sai, n: usize) {
+    wait_until("nodes to re-heartbeat", || {
+        sai.list_nodes()
+            .map(|nodes| nodes.iter().filter(|e| e.alive).count() == n)
+            .unwrap_or(false)
+    });
+}
+
+/// ROADMAP hole #1 (reader snapshots vs. GC): a reader streaming v1
+/// while a writer overwrites to v2 — whose commit runs GC — finishes v1
+/// byte-exact, because its read lease pinned the v1 blocks; the
+/// deferred deletes run when the lease drops.
+#[test]
+fn reader_pinned_version_survives_overwrite_gc() {
+    let cluster = lease_cluster();
+    let sai = client(&cluster);
+    // 32 blocks: far more than the reader's prefetch window (8), so
+    // most of the file is still un-fetched when the overwrite lands —
+    // without pinning, those tail blocks would be deleted mid-read.
+    let v1 = Rng::new(1).bytes(2 << 20);
+    sai.write_file("snap.bin", &v1).unwrap();
+
+    let mut r = sai.open("snap.bin").unwrap();
+    assert_eq!(r.version(), 1);
+    assert!(r.lease() != 0, "read session holds a lease");
+    let first = r.next_block().unwrap().unwrap();
+
+    // Overwrite with unrelated content: commit-time GC runs inside this
+    // call (the manager replies only after its deletes land).
+    let v2 = Rng::new(2).bytes(256 * 1024);
+    sai.write_file("snap.bin", &v2).unwrap();
+    let (version, _) = sai.get_block_map("snap.bin").unwrap();
+    assert_eq!(version, 2);
+
+    // The pinned v1 blocks survived the GC; v2 coexists.
+    let (_, bytes) = cluster.storage_stats();
+    assert_eq!(bytes, (2 << 20) + 256 * 1024, "v1 pinned + v2 live");
+    let stats = cluster.manager().state().block_stats();
+    assert_eq!(stats.read_leases, 1);
+    assert!(stats.pinned_blocks >= 32, "all v1 blocks pinned");
+
+    // The reader finishes v1 byte-exact.
+    let mut rest = Vec::new();
+    r.read_to_end(&mut rest).unwrap();
+    let mut got = first;
+    got.extend_from_slice(&rest);
+    assert_eq!(got, v1, "pinned snapshot served byte-exact");
+
+    // Dropping the reader runs the deferred deletes synchronously.
+    drop(r);
+    let (_, bytes) = cluster.storage_stats();
+    assert_eq!(bytes, 256 * 1024, "v1 reclaimed once the last lease dropped");
+    let stats = cluster.manager().state().block_stats();
+    assert_eq!((stats.read_leases, stats.pinned_blocks), (0, 0));
+    assert_eq!(sai.read_file("snap.bin").unwrap(), v2);
+}
+
+/// ROADMAP hole #2 (claim leases): a writer forgotten mid-stream — no
+/// release, heartbeats silenced — has its claims lapse at lease expiry,
+/// its transferred blocks reclaimed off the nodes, and a later re-write
+/// of the same content re-transfers and commits cleanly.
+#[test]
+fn abandoned_writer_claims_lapse_and_rewrite_recommits() {
+    let cluster = lease_cluster();
+    let sai = client(&cluster);
+    // 600 KB: two full 256 KB buffers — the pipeline places + transfers
+    // batch 1 (4 blocks) while batch 2 is still in flight, so the kill
+    // strands real pending claims AND real on-node bytes.
+    let data = Rng::new(7).bytes(600_000);
+    let mut w = sai.create("orphan.bin").unwrap();
+    w.write_all(&data).unwrap();
+    // Let batch 1's transfers land so post-expiry reclamation is exact.
+    wait_until("batch-1 transfers", || cluster.storage_stats().0 == 4);
+
+    Hiccup::kill_writer(w);
+    let state = cluster.manager().state();
+    let stats = state.block_stats();
+    assert_eq!(stats.pending_claims, 4, "claims outstanding after the kill");
+    assert_eq!(stats.write_leases, 1, "lease still held");
+
+    // Within the lease window nothing lapses (a slow writer is not a
+    // dead writer).
+    state.tick();
+    assert_eq!(state.block_stats().pending_claims, 4);
+
+    // Past the window: claims lapse, blocks come back off the nodes.
+    Hiccup::lapse_leases(&cluster);
+    let stats = state.block_stats();
+    assert_eq!(stats.pending_claims, 0, "zero stranded pending claims");
+    assert_eq!(stats.write_leases, 0, "abandoned lease lapsed");
+    assert_eq!(stats.blocks, 0, "manager dropped the orphaned blocks");
+    assert_eq!(cluster.storage_stats(), (0, 0), "nodes reclaimed the bytes");
+
+    // Re-writing the same content must re-transfer (no dedup against
+    // lapsed claims) and commit.
+    wait_nodes_alive(&sai, 4);
+    let rep = sai.write_file("orphan.bin", &data).unwrap();
+    assert_eq!(rep.blocks, 10); // ceil(600000 / 64 KB)
+    assert_eq!(rep.new_blocks, 10, "every block re-transferred");
+    assert_eq!(sai.read_file("orphan.bin").unwrap(), data);
+    let stats = state.block_stats();
+    assert_eq!(stats.pending_claims, 0);
+    assert_eq!(stats.write_leases, 0);
+}
+
+/// A writer whose lease lapses mid-stream (heartbeats paused, clock
+/// advanced) fails cleanly at the next placement — no hang, no partial
+/// commit, no stranded claims.
+#[test]
+fn expired_lease_fails_writer_cleanly_mid_stream() {
+    let cluster = lease_cluster();
+    let sai = client(&cluster);
+    let mut w = sai.create("late.bin").unwrap();
+    // One full buffer is hashed in flight but nothing is placed yet —
+    // the first allocation happens inside close(), after the lapse.
+    w.write_all(&Rng::new(9).bytes(300_000)).unwrap();
+    w.pause_lease_heartbeat();
+    Hiccup::lapse_leases(&cluster);
+    wait_nodes_alive(&sai, 4);
+
+    let err = w.close();
+    assert!(err.is_err(), "placement under a lapsed lease must fail");
+    let (version, _) = sai.get_block_map("late.bin").unwrap();
+    assert_eq!(version, 0, "nothing committed");
+    assert_eq!(cluster.storage_stats(), (0, 0));
+    assert_eq!(cluster.manager().state().block_stats().pending_claims, 0);
+}
+
+/// The commit itself revalidates the lease: an empty session (no
+/// allocations to trip over) whose lease lapsed is refused at commit.
+#[test]
+fn expired_lease_fails_commit_cleanly() {
+    let cluster = lease_cluster();
+    let sai = client(&cluster);
+    let w = sai.create("empty.bin").unwrap();
+    w.pause_lease_heartbeat();
+    Hiccup::lapse_leases(&cluster);
+
+    let err = w.close();
+    assert!(err.is_err(), "commit under a lapsed lease must fail");
+    let (version, _) = sai.get_block_map("empty.bin").unwrap();
+    assert_eq!(version, 0);
+}
+
+/// A reader dropped mid-file releases its pins immediately: the next
+/// overwrite reclaims the old version with no deferral.
+#[test]
+fn dropped_reader_unpins_immediately() {
+    let cluster = lease_cluster();
+    let sai = client(&cluster);
+    let v1 = Rng::new(11).bytes(512 * 1024);
+    sai.write_file("quick.bin", &v1).unwrap();
+    {
+        let mut r = sai.open("quick.bin").unwrap();
+        let _ = r.next_block().unwrap();
+        // Dropped mid-file.
+    }
+    assert_eq!(cluster.manager().state().block_stats().read_leases, 0);
+    let v2 = Rng::new(12).bytes(128 * 1024);
+    sai.write_file("quick.bin", &v2).unwrap();
+    let (_, bytes) = cluster.storage_stats();
+    assert_eq!(bytes, 128 * 1024, "no stale pins defer the overwrite GC");
+}
+
+/// A reader that vanishes without dropping lapses by expiry: its pins
+/// release, a subsequent overwrite's GC deletes the old blocks, and the
+/// zombie session's late reads fail instead of serving deleted data.
+#[test]
+fn expired_read_lease_unpins_and_zombie_reader_errors() {
+    let cluster = lease_cluster();
+    let sai = client(&cluster);
+    let v1 = Rng::new(21).bytes(2 << 20); // 32 blocks >> prefetch window
+    sai.write_file("zombie.bin", &v1).unwrap();
+    let mut r = sai.open("zombie.bin").unwrap();
+
+    // The reader goes silent past the lease window.
+    Hiccup::lapse_leases(&cluster);
+    assert_eq!(cluster.manager().state().block_stats().read_leases, 0);
+    wait_nodes_alive(&sai, 4);
+
+    // Overwrite: with the pin lapsed, v1 is reclaimed immediately.
+    let v2 = Rng::new(22).bytes(256 * 1024);
+    sai.write_file("zombie.bin", &v2).unwrap();
+    let (_, bytes) = cluster.storage_stats();
+    assert_eq!(bytes, 256 * 1024, "lapsed pins do not defer GC");
+
+    // The zombie session fails loudly when it reaches a reclaimed
+    // block (its first prefetch window may still be buffered
+    // client-side — that's fine, those bytes were fetched while valid).
+    let mut sink = Vec::new();
+    assert!(
+        r.read_to_end(&mut sink).is_err(),
+        "zombie reader must error, not serve a half-deleted snapshot"
+    );
+}

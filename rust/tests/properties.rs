@@ -144,6 +144,7 @@ fn prop_proto_roundtrip() {
         let msgs = vec![
             Msg::CommitBlockMap {
                 file: format!("file-{seed}"),
+                lease: rng.next_u64(),
                 blocks: blocks.clone(),
             },
             Msg::BlockMap {
@@ -152,6 +153,7 @@ fn prop_proto_roundtrip() {
             },
             Msg::AllocPlacement {
                 file: format!("file-{seed}"),
+                lease: rng.next_u64(),
                 blocks: blocks
                     .iter()
                     .map(|b| BlockSpec {
@@ -159,6 +161,22 @@ fn prop_proto_roundtrip() {
                         len: b.len,
                     })
                     .collect(),
+            },
+            Msg::OpenLease {
+                file: format!("file-{seed}"),
+                write: rng.next_u64() % 2 == 0,
+            },
+            Msg::LeaseGrant {
+                lease: rng.next_u64(),
+                ttl_ms: rng.next_u64(),
+                version: rng.next_u64(),
+                blocks: blocks.clone(),
+            },
+            Msg::RenewLease {
+                lease: rng.next_u64(),
+            },
+            Msg::DropLease {
+                lease: rng.next_u64(),
             },
             Msg::Placement {
                 assignments: blocks
@@ -327,6 +345,7 @@ fn prop_streaming_oneshot_equivalence() {
             link_bps: 1e9,
             shape: false,
             replication: 1,
+            ..ClusterConfig::default()
         })
         .unwrap()
     };
@@ -426,6 +445,7 @@ fn prop_proto_truncation_robustness() {
         Msg::GetBlockMap { file: "f".into() },
         Msg::CommitBlockMap {
             file: "f".into(),
+            lease: 7,
             blocks: vec![meta(1), meta(2)],
         },
         Msg::ListFiles,
@@ -450,6 +470,7 @@ fn prop_proto_truncation_robustness() {
         Msg::Err("boom".into()),
         Msg::AllocPlacement {
             file: "f".into(),
+            lease: 9,
             blocks: vec![BlockSpec { hash: [8; 16], len: 10 }],
         },
         Msg::Placement {
@@ -473,11 +494,23 @@ fn prop_proto_truncation_robustness() {
             hashes: vec![[9; 16], [10; 16]],
         },
         Msg::DeleteBlock { hash: [11; 16] },
+        Msg::OpenLease {
+            file: "f".into(),
+            write: true,
+        },
+        Msg::LeaseGrant {
+            lease: 12,
+            ttl_ms: 30_000,
+            version: 2,
+            blocks: vec![meta(13)],
+        },
+        Msg::RenewLease { lease: 14 },
+        Msg::DropLease { lease: 15 },
     ];
     // Every tag is represented exactly once.
     let mut tags: Vec<u8> = msgs.iter().map(|m| m.encode()[4]).collect();
     tags.sort_unstable();
-    assert_eq!(tags, (1..=23).collect::<Vec<u8>>(), "tag coverage");
+    assert_eq!(tags, (1..=27).collect::<Vec<u8>>(), "tag coverage");
 
     for m in &msgs {
         let frame = m.encode();
@@ -514,6 +547,46 @@ fn prop_proto_truncation_robustness() {
     }
 }
 
+/// SATELLITE (leases): lease ids are opaque u64s and must survive the
+/// wire bit-exact in every message that carries one — including the
+/// sentinel 0, u64::MAX, and values with every byte pattern the LE
+/// encoding could mangle.
+#[test]
+fn prop_lease_id_roundtrip() {
+    let mut rng = Rng::new(0x1EA5E);
+    let mut ids = vec![0u64, 1, u64::MAX, u64::MAX - 1, 1 << 63, 0x0102_0304_0506_0708];
+    for _ in 0..CASES {
+        ids.push(rng.next_u64());
+    }
+    for &lease in &ids {
+        let msgs = [
+            Msg::RenewLease { lease },
+            Msg::DropLease { lease },
+            Msg::LeaseGrant {
+                lease,
+                ttl_ms: rng.next_u64(),
+                version: rng.next_u64(),
+                blocks: vec![],
+            },
+            Msg::AllocPlacement {
+                file: "f".into(),
+                lease,
+                blocks: vec![BlockSpec { hash: [3; 16], len: 9 }],
+            },
+            Msg::CommitBlockMap {
+                file: "f".into(),
+                lease,
+                blocks: vec![],
+            },
+        ];
+        for m in msgs {
+            let f = m.encode();
+            let got = Msg::decode(f[4], &f[5..]).unwrap();
+            assert_eq!(got, m, "lease id {lease:#x} mangled on the wire");
+        }
+    }
+}
+
 /// PROPERTY (dedup safety): the SAI never loses data — any sequence of
 /// writes of random files under random configs reads back exactly.
 #[test]
@@ -525,6 +598,7 @@ fn prop_store_write_read_fuzz() {
         link_bps: 1e9,
         shape: false,
         replication: 1,
+        ..ClusterConfig::default()
     })
     .unwrap();
     for seed in 800..806 {

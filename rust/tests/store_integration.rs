@@ -17,6 +17,7 @@ fn small_cluster() -> Cluster {
         link_bps: 1e9,
         shape: false, // wall-clock tests don't want pacing
         replication: 1,
+        ..ClusterConfig::default()
     })
     .unwrap()
 }
@@ -28,6 +29,7 @@ fn replicated_cluster() -> Cluster {
         link_bps: 1e9,
         shape: false,
         replication: 2,
+        ..ClusterConfig::default()
     })
     .unwrap()
 }
@@ -392,6 +394,7 @@ fn shaped_cluster_still_correct() {
         link_bps: 1e9,
         shape: true,
         replication: 1,
+        ..ClusterConfig::default()
     })
     .unwrap();
     let sai = cluster.client(fixed_cfg(), cpu_engine()).unwrap();
@@ -463,6 +466,7 @@ fn node_failure_mid_stream_surfaces_error() {
         link_bps: 1e9,
         shape: false,
         replication: 1,
+        ..ClusterConfig::default()
     })
     .unwrap();
     let sai = cluster.client(fixed_cfg(), cpu_engine()).unwrap();
