@@ -34,10 +34,11 @@ sleep-guard:
 	fi
 	@echo "sleep-guard: OK (no test sleeps > 100 ms)"
 
-# Figure-regeneration harness (writes BENCH_pr2.json) + hot-path
-# microbenchmarks.
+# Figure-regeneration harness (writes BENCH_pr2.json), the end-to-end
+# data-plane bench (writes BENCH_pr5.json) + hot-path microbenchmarks.
 bench:
 	cargo bench --bench figures
+	cargo bench --bench data_plane
 	cargo bench --bench micro
 
 # Fast end-to-end smoke: build benches and run the runnable examples
@@ -49,4 +50,4 @@ smoke:
 
 clean:
 	cargo clean
-	rm -f BENCH_pr2.json
+	rm -f BENCH_pr2.json BENCH_pr5.json

@@ -1,0 +1,249 @@
+//! End-to-end data-plane throughput benchmark (data-plane v2): real
+//! cluster, real TCP, real sessions — measuring what the pipelined
+//! duplex protocol buys over the old lock-step one.
+//!
+//!     cargo bench --bench data_plane            # full matrix
+//!     cargo bench --bench data_plane -- quick   # CI smoke subset
+//!
+//! The matrix crosses shaped (1 Gbps-model NICs + a GbE-realistic
+//! 500 µs request→reply turnaround on every node) and unshaped
+//! (loopback-raw) fabrics with replication 1 and 3, ablating the
+//! per-node in-flight depth (`ClientConfig::node_inflight`).
+//! **Depth 1 is the lock-step baseline** — one operation on the wire
+//! per node, reply awaited before the next frame, exactly the
+//! pre-pipelining data plane; the session's in-flight-bytes budget is
+//! scaled with the depth.  Writes run non-CA so no hashing and no
+//! dedup pollute the wire-path measurement.
+//!
+//! Results are printed as tables and flushed to `BENCH_pr5.json` at
+//! the repo root (MB/s per scenario, op, depth, plus the
+//! speedup-vs-lock-step column CI and the README quote).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use gpustore::config::{ClientConfig, ClusterConfig};
+use gpustore::hashgpu::OracleEngine;
+use gpustore::metrics::Table;
+use gpustore::store::Cluster;
+use gpustore::util::Rng;
+
+const MB: f64 = 1024.0 * 1024.0;
+/// Small blocks stress the per-request turnaround — the regime where
+/// lock-step is `block_size / RTT`-bound.  32 KB is under the shaped
+/// link's bandwidth-delay product (117 MB/s × 500 µs ≈ 58 KB), so a
+/// lock-step sender genuinely idles each RTT instead of burning
+/// banked token-bucket credit.
+const BLOCK: usize = 32 * 1024;
+
+struct Scenario {
+    name: &'static str,
+    shape: bool,
+    rtt_us: u64,
+    nodes: usize,
+    replication: usize,
+    file_mb: usize,
+}
+
+struct Record {
+    scenario: &'static str,
+    op: &'static str,
+    nodes: usize,
+    replication: usize,
+    shaped: bool,
+    rtt_us: u64,
+    depth: usize,
+    mbps: f64,
+    speedup_vs_lockstep: f64,
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| !a.starts_with('-'))
+        .collect();
+    let quick = args.iter().any(|a| a == "quick");
+    let depths: Vec<usize> = if quick {
+        vec![1, 4]
+    } else {
+        vec![1, 2, 4, 8, 16]
+    };
+    let scenarios: Vec<Scenario> = if quick {
+        vec![
+            Scenario {
+                name: "shaped-pernode",
+                shape: true,
+                rtt_us: 500,
+                nodes: 1,
+                replication: 1,
+                file_mb: 8,
+            },
+            Scenario {
+                name: "unshaped",
+                shape: false,
+                rtt_us: 0,
+                nodes: 4,
+                replication: 1,
+                file_mb: 8,
+            },
+        ]
+    } else {
+        vec![
+            // The per-node isolate: one node, so the whole write AND
+            // read path ride a single duplex link.
+            Scenario {
+                name: "shaped-pernode",
+                shape: true,
+                rtt_us: 500,
+                nodes: 1,
+                replication: 1,
+                file_mb: 16,
+            },
+            // The paper's stripe: 4 nodes behind one client NIC.
+            Scenario {
+                name: "shaped-stripe",
+                shape: true,
+                rtt_us: 500,
+                nodes: 4,
+                replication: 1,
+                file_mb: 16,
+            },
+            Scenario {
+                name: "shaped-stripe-r3",
+                shape: true,
+                rtt_us: 500,
+                nodes: 4,
+                replication: 3,
+                file_mb: 16,
+            },
+            Scenario {
+                name: "unshaped",
+                shape: false,
+                rtt_us: 0,
+                nodes: 4,
+                replication: 1,
+                file_mb: 32,
+            },
+        ]
+    };
+
+    let mut records: Vec<Record> = Vec::new();
+    for sc in &scenarios {
+        let cluster = Cluster::spawn(ClusterConfig {
+            nodes: sc.nodes,
+            link_bps: 1e9,
+            shape: sc.shape,
+            replication: sc.replication,
+            node_rtt: Duration::from_micros(sc.rtt_us),
+            ..ClusterConfig::default()
+        })
+        .unwrap();
+        let data = Rng::new(0xDA7A).bytes(sc.file_mb << 20);
+        println!(
+            "\n== data-plane: {} (nodes={}, r={}, {}, rtt={}us, {} MB files, {} KB blocks) ==",
+            sc.name,
+            sc.nodes,
+            sc.replication,
+            if sc.shape { "1 Gbps shaped" } else { "unshaped" },
+            sc.rtt_us,
+            sc.file_mb,
+            BLOCK / 1024,
+        );
+        let mut t = Table::new(&[
+            "depth",
+            "write MB/s",
+            "read MB/s",
+            "write x vs lock-step",
+            "read x vs lock-step",
+        ]);
+        let mut base = (0.0f64, 0.0f64);
+        for &depth in &depths {
+            let cfg = ClientConfig {
+                block_size: BLOCK,
+                write_buffer: 16 * BLOCK,
+                node_inflight: depth,
+                // The session budget scales with the requested depth so
+                // it admits (and bounds) exactly that much pipeline.
+                inflight_budget: BLOCK * depth * sc.nodes * sc.replication,
+                ..ClientConfig::non_ca()
+            };
+            let sai = cluster.client(cfg, Arc::new(OracleEngine::new())).unwrap();
+            // Unshaped loopback runs are noisier: best of 3.
+            let runs = if sc.shape { 1 } else { 3 };
+            let mut wr_mbps = 0.0f64;
+            let mut rd_mbps = 0.0f64;
+            // Warmup outside the measurement: node links connect lazily.
+            sai.write_file(&format!("warm-{}-{depth}", sc.name), &data[..1 << 20])
+                .unwrap();
+            for run in 0..runs {
+                let name = format!("dp-{}-{depth}-{run}", sc.name);
+                let rep = sai.write_file(&name, &data).unwrap();
+                assert_eq!(rep.new_blocks, data.len().div_ceil(BLOCK), "{name}");
+                wr_mbps = wr_mbps.max(rep.mbps());
+                let t0 = Instant::now();
+                let back = sai.read_file(&name).unwrap();
+                let dt = t0.elapsed().as_secs_f64();
+                assert_eq!(back.len(), data.len(), "{name}");
+                rd_mbps = rd_mbps.max(back.len() as f64 / MB / dt);
+            }
+            if depth == depths[0] {
+                base = (wr_mbps, rd_mbps);
+            }
+            let (wx, rx) = (wr_mbps / base.0, rd_mbps / base.1);
+            t.row(vec![
+                if depth == 1 {
+                    "1 (lock-step)".into()
+                } else {
+                    depth.to_string()
+                },
+                format!("{wr_mbps:.1}"),
+                format!("{rd_mbps:.1}"),
+                format!("{wx:.2}x"),
+                format!("{rx:.2}x"),
+            ]);
+            for (op, mbps, speedup) in [("write", wr_mbps, wx), ("read", rd_mbps, rx)] {
+                records.push(Record {
+                    scenario: sc.name,
+                    op,
+                    nodes: sc.nodes,
+                    replication: sc.replication,
+                    shaped: sc.shape,
+                    rtt_us: sc.rtt_us,
+                    depth,
+                    mbps,
+                    speedup_vs_lockstep: speedup,
+                });
+            }
+        }
+        println!("{}", t.markdown());
+    }
+    flush(&records, quick);
+}
+
+fn flush(records: &[Record], quick: bool) {
+    let mut out = String::from("{\n  \"bench\": \"data-plane\",\n  \"unit\": \"MB/s\",\n");
+    out.push_str(&format!("  \"quick\": {quick},\n"));
+    out.push_str(&format!("  \"block_bytes\": {BLOCK},\n  \"results\": [\n"));
+    for (i, r) in records.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"scenario\": \"{}\", \"op\": \"{}\", \"nodes\": {}, \"replication\": {}, \
+             \"shaped\": {}, \"rtt_us\": {}, \"depth\": {}, \"mbps\": {:.2}, \
+             \"speedup_vs_lockstep\": {:.3}}}{}\n",
+            r.scenario,
+            r.op,
+            r.nodes,
+            r.replication,
+            r.shaped,
+            r.rtt_us,
+            r.depth,
+            r.mbps,
+            r.speedup_vs_lockstep,
+            if i + 1 == records.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_pr5.json", &out) {
+        Ok(()) => println!("\nwrote BENCH_pr5.json ({} results)", records.len()),
+        Err(e) => eprintln!("could not write BENCH_pr5.json: {e}"),
+    }
+}

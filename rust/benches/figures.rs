@@ -271,9 +271,8 @@ fn fig7_10(cdc: bool, similar: bool, title: &str) {
             let mk = |sim: f64| WriteConfig {
                 engine: *engine,
                 cdc,
-                write_buffer: 4 << 20,
                 similarity: sim,
-                replication: 1,
+                ..WriteConfig::default()
             };
             let secs = if similar && dedup_able {
                 s.write_secs(&mk(0.0), size, blocks)
@@ -343,9 +342,8 @@ fn fig11() {
             let cfg = WriteConfig {
                 engine,
                 cdc,
-                write_buffer: 4 << 20,
                 similarity: sim,
-                replication: 1,
+                ..WriteConfig::default()
             };
             // First image transfers fully; the rest dedup at `sim`.
             let cfg0 = WriteConfig { similarity: 0.0, ..cfg };
@@ -410,10 +408,8 @@ fn contention(kind: CompetitorKind, title: &str) {
         ] {
             let cfg = WriteConfig {
                 engine,
-                cdc: false,
-                write_buffer: 4 << 20,
                 similarity: if name == "non-CA" { 0.0 } else { sim },
-                replication: 1,
+                ..WriteConfig::default()
             };
             let r = m.evaluate(&s, &cfg, size, blocks, kind);
             t.row(vec![
@@ -459,10 +455,7 @@ fn ablate_10g() {
         let cell = |name: &str, e: EngineModel| {
             let cfg = WriteConfig {
                 engine: e,
-                cdc: false,
-                write_buffer: 4 << 20,
-                similarity: 0.0,
-                replication: 1,
+                ..WriteConfig::default()
             };
             let mbps = s.write_bps(&cfg, size, 64, 10) / MB;
             record("ablate-10g", name, &format!("link={label}"), mbps);
@@ -490,10 +483,9 @@ fn ablate_replication() {
     for r in [1usize, 2, 3] {
         let mk = |sim: f64| WriteConfig {
             engine: EngineModel::Gpu { opts: GpuOpts::OVERLAP },
-            cdc: false,
-            write_buffer: 4 << 20,
             similarity: sim,
             replication: r,
+            ..WriteConfig::default()
         };
         let diff = s.write_bps(&mk(0.0), size, 64, 10) / MB;
         let simi = s.write_bps(&mk(1.0), size, 64, 10) / MB;

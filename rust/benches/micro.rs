@@ -77,6 +77,7 @@ fn main() {
 
     if want("proto") {
         let msg = Msg::PutBlock {
+            req: 1,
             hash: [7; 16],
             data: data1m.clone(),
         };
@@ -172,6 +173,14 @@ fn main() {
                 std::hint::black_box(r);
             });
             report_bw(&format!("store write 4MB ({label}, loopback)"), 4 << 20, s);
+            // Read path: blocks come back as shared Arcs straight from
+            // the node store (no per-block copy until the final
+            // assembly) — the satellite-task verification bench.
+            let name = format!("m-{label}-{seq}");
+            let s = time_it(|| {
+                std::hint::black_box(sai.read_file(&name).unwrap());
+            });
+            report_bw(&format!("store read 4MB ({label}, loopback)"), 4 << 20, s);
         }
     }
 

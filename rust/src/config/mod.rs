@@ -69,10 +69,25 @@ pub struct ClientConfig {
     pub write_buffer: usize,
     /// Direct-hash segment size for the parallel Merkle–Damgård split.
     pub segment_bytes: usize,
-    /// Client transfer-parallelism window (paper: stripes of 4).
-    /// Placement itself is manager-driven (control-plane v2); this only
-    /// bounds how many puts/prefetches the client keeps in flight.
+    /// Stripe width (paper: stripes of 4).  Placement is manager-driven
+    /// (control-plane v2) and the data plane is flow-controlled by
+    /// `inflight_budget`/`node_inflight` (data-plane v2), so this is a
+    /// legacy knob kept for configuration compatibility; it no longer
+    /// bounds transfers.
     pub stripe_width: usize,
+    /// Maximum operations in flight per node connection (data-plane
+    /// v2).  The duplex node links pipeline up to this many puts/gets
+    /// on one socket; `1` degenerates to the old lock-step protocol
+    /// (one op on the wire per node, reply awaited before the next
+    /// frame) and is the benchmark baseline.
+    pub node_inflight: usize,
+    /// Per-session in-flight payload budget in **bytes** (data-plane
+    /// v2): a write session stops accepting new batches once this many
+    /// put bytes are unacknowledged, and a read session prefetches
+    /// ahead of the consumer only up to this many bytes.  One knob
+    /// bounds the memory of arbitrarily deep pipelines (CLI:
+    /// `--inflight-mb`).
+    pub inflight_budget: usize,
 }
 
 impl Default for ClientConfig {
@@ -87,6 +102,8 @@ impl Default for ClientConfig {
             write_buffer: 4 * 1024 * 1024,
             segment_bytes: 4096,
             stripe_width: 4,
+            node_inflight: 16,
+            inflight_budget: 32 * 1024 * 1024,
         }
     }
 }
@@ -106,7 +123,12 @@ impl ClientConfig {
 
     /// Validate cross-field invariants.
     pub fn validate(&self) -> crate::Result<()> {
-        if self.block_size == 0 || self.write_buffer == 0 || self.stripe_width == 0 {
+        if self.block_size == 0
+            || self.write_buffer == 0
+            || self.stripe_width == 0
+            || self.node_inflight == 0
+            || self.inflight_budget == 0
+        {
             return Err(crate::Error::Config("zero-sized config field".into()));
         }
         if self.ca_mode == CaMode::Cdc {
@@ -203,6 +225,14 @@ pub struct ClusterConfig {
     /// without a renewal.  Surfaced like `replication`
     /// (`--lease-timeout` in the CLI); must be non-zero.
     pub lease_timeout: Duration,
+    /// Modeled fabric round-trip residue applied to every storage-node
+    /// reply (data-plane v2, single-host experiments): each reply is
+    /// released this long after its request arrived, through a delay
+    /// line that lets pipelined requests overlap their latencies the
+    /// way real in-flight packets do.  `ZERO` (the default) disables
+    /// the model; benchmarks set it to a GbE-realistic few hundred
+    /// microseconds to expose the lock-step `block_size / RTT` bound.
+    pub node_rtt: Duration,
 }
 
 impl Default for ClusterConfig {
@@ -213,6 +243,7 @@ impl Default for ClusterConfig {
             shape: true,
             replication: 1,
             lease_timeout: Duration::from_secs(30),
+            node_rtt: Duration::ZERO,
         }
     }
 }
@@ -245,6 +276,20 @@ mod tests {
     #[test]
     fn zero_threads_rejected() {
         assert!(ClientConfig::ca_cpu_fixed(0).validate().is_err());
+    }
+
+    #[test]
+    fn zero_data_plane_knobs_rejected() {
+        let c = ClientConfig {
+            node_inflight: 0,
+            ..ClientConfig::default()
+        };
+        assert!(c.validate().is_err());
+        let c = ClientConfig {
+            inflight_budget: 0,
+            ..ClientConfig::default()
+        };
+        assert!(c.validate().is_err());
     }
 
     #[test]

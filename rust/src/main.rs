@@ -72,6 +72,7 @@ fn print_usage() {
          gpustore node --listen ADDR --manager ADDR [--advertise ADDR] [--disk DIR]\n  \
          gpustore write --manager ADDR [--mode fixed|cdc|none]\n\
          \x20                [--engine cpu|gpu|oracle] [--threads N]\n\
+         \x20                [--inflight-mb MB] [--node-inflight N]\n\
          \x20                [--file NAME] [--size BYTES|K|M|G] [--count N] [--seed N]\n  \
          gpustore read --manager ADDR --file NAME [--out PATH]\n  \
          gpustore verify --manager ADDR --file NAME\n  \
@@ -139,11 +140,39 @@ fn client_config(flags: &HashMap<String, String>) -> Result<ClientConfig> {
         "oracle" | "infinite" => HashEngineKind::Oracle,
         e => return Err(Error::Config(format!("bad --engine `{e}`"))),
     };
-    let cfg = ClientConfig {
+    let mut cfg = ClientConfig {
         ca_mode: mode,
         engine,
         ..ClientConfig::default()
     };
+    // Data-plane knobs: the per-session in-flight-bytes budget and the
+    // per-node pipeline depth.  Parsed strictly — a malformed value
+    // must fail loudly, not silently run with a default.
+    if let Some(v) = flags.get("inflight-mb") {
+        cfg.inflight_budget = match v
+            .parse::<usize>()
+            .ok()
+            .filter(|&mb| mb >= 1)
+            .and_then(|mb| mb.checked_mul(1024 * 1024))
+        {
+            Some(bytes) => bytes,
+            None => {
+                return Err(Error::Config(format!(
+                    "bad --inflight-mb `{v}` (need an integer >= 1, in-range)"
+                )))
+            }
+        };
+    }
+    if let Some(v) = flags.get("node-inflight") {
+        cfg.node_inflight = match v.parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => {
+                return Err(Error::Config(format!(
+                    "bad --node-inflight `{v}` (need an integer >= 1)"
+                )))
+            }
+        };
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -441,5 +470,27 @@ mod tests {
         assert_eq!(cfg.engine, HashEngineKind::Oracle);
         flags.insert("mode".into(), "bogus".into());
         assert!(client_config(&flags).is_err());
+    }
+
+    #[test]
+    fn client_config_data_plane_flags() {
+        let mut flags = HashMap::new();
+        flags.insert("inflight-mb".into(), "64".into());
+        flags.insert("node-inflight".into(), "4".into());
+        let cfg = client_config(&flags).unwrap();
+        assert_eq!(cfg.inflight_budget, 64 * 1024 * 1024);
+        assert_eq!(cfg.node_inflight, 4);
+        for (k, bad) in [
+            ("inflight-mb", "0"),
+            ("inflight-mb", "x"),
+            // 2^44 + 1 MB: parses as usize but overflows the byte
+            // conversion — must fail loudly, not wrap.
+            ("inflight-mb", "17592186044417"),
+            ("node-inflight", "0"),
+        ] {
+            let mut f = HashMap::new();
+            f.insert(k.to_string(), bad.to_string());
+            assert!(client_config(&f).is_err(), "{k}={bad}");
+        }
     }
 }

@@ -85,6 +85,16 @@ impl Conn {
     pub fn shutdown(&self) {
         let _ = self.stream.shutdown(std::net::Shutdown::Both);
     }
+
+    /// Half-close: shut down the write direction only.  The pipelined
+    /// duplex data plane uses this for graceful teardown — the client's
+    /// writer thread signals EOF to the node while the reply-reader
+    /// thread keeps draining whatever replies are still in flight; the
+    /// node answers everything it read, closes, and the reader then
+    /// sees a clean EOF instead of a reset.
+    pub fn shutdown_write(&self) {
+        let _ = self.stream.shutdown(std::net::Shutdown::Write);
+    }
 }
 
 impl Read for Conn {

@@ -147,10 +147,8 @@ mod tests {
     fn cfg(engine: EngineModel, similarity: f64) -> WriteConfig {
         WriteConfig {
             engine,
-            cdc: false,
-            write_buffer: 4 << 20,
             similarity,
-            replication: 1,
+            ..WriteConfig::default()
         }
     }
 

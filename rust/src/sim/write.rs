@@ -50,6 +50,25 @@ pub struct WriteConfig {
     /// Copies per block (control-plane v2 replication): every new byte
     /// crosses the client NIC once per replica.
     pub replication: usize,
+    /// Data-plane pipeline depth (data-plane v2): operations kept in
+    /// flight per node link.  `1` models the old lock-step protocol —
+    /// every transferred block pays the full request→reply turnaround
+    /// ([`SystemSim::net_rtt`]) on top of its wire time; deeper
+    /// pipelines amortize it away.
+    pub inflight_depth: usize,
+}
+
+impl Default for WriteConfig {
+    fn default() -> Self {
+        WriteConfig {
+            engine: EngineModel::None,
+            cdc: false,
+            write_buffer: 4 << 20,
+            similarity: 0.0,
+            replication: 1,
+            inflight_depth: 16,
+        }
+    }
 }
 
 /// The modeled system: client CPU/GPU + network.
@@ -69,6 +88,11 @@ pub struct SystemSim {
     /// Client NIC bandwidth, bytes/s (1 Gbps link in the paper; the
     /// 4-node stripe is NIC-bound, not node-bound).
     pub net_bps: f64,
+    /// Per-request round-trip residue on the storage fabric, seconds
+    /// (GbE switch + kernel turnaround).  A lock-step data plane
+    /// (`WriteConfig::inflight_depth == 1`) pays this once per
+    /// transferred block; a pipelined one divides it by the depth.
+    pub net_rtt: f64,
     /// Fixed per-file overhead: manager round-trips, open/commit (s).
     pub per_file_overhead: f64,
     /// Per-file lease overhead (control-plane v3): the extra manager
@@ -93,6 +117,7 @@ impl Default for SystemSim {
             cpu: CpuModel::xeon_2008(),
             gpu: GpuPipeline::default(),
             net_bps: 117e6, // 1 Gbps after TCP/IP overheads
+            net_rtt: 0.2e-3,
             per_file_overhead: 2e-3,
             per_lease_overhead: 0.2e-3, // ~2 extra manager RTTs
             per_block_overhead: 15e-6,
@@ -134,10 +159,32 @@ impl SystemSim {
 
     /// Transfer seconds for one file: only non-duplicate bytes cross
     /// the network, once per replica copy (the client NIC pays for
-    /// replication, as in the real `FileWriter`).
+    /// replication, as in the real `FileWriter`).  Pure wire time — the
+    /// `inflight_depth == ∞` asymptote of
+    /// [`net_secs_pipelined`](SystemSim::net_secs_pipelined).
     pub fn net_secs(&self, cfg: &WriteConfig, size: usize) -> f64 {
         let new_bytes = size as f64 * (1.0 - cfg.similarity);
         new_bytes * cfg.replication.max(1) as f64 / self.net_bps
+    }
+
+    /// Transfer seconds including the per-block request→reply
+    /// turnaround the data plane's pipeline does or does not hide
+    /// (data-plane v2).  Each transferred block costs
+    /// `max(wire_time, (wire_time + rtt) / depth)` — the classic
+    /// sliding-window throughput bound: at depth 1 (lock-step) every
+    /// block serializes behind its own acknowledgement
+    /// (`block / RTT`-bound, the pre-pipelining data plane), while a
+    /// depth that covers the bandwidth-delay product leaves the link
+    /// wire-limited.
+    pub fn net_secs_pipelined(&self, cfg: &WriteConfig, size: usize, blocks: usize) -> f64 {
+        let blocks = blocks.max(1);
+        let new_blocks = blocks as f64 * (1.0 - cfg.similarity);
+        if new_blocks <= 0.0 {
+            return 0.0;
+        }
+        let wire = (size as f64 / blocks as f64) * cfg.replication.max(1) as f64 / self.net_bps;
+        let depth = cfg.inflight_depth.max(1) as f64;
+        new_blocks * wire.max((wire + self.net_rtt) / depth)
     }
 
     /// Seconds to write one file of `size` bytes.
@@ -155,22 +202,22 @@ impl SystemSim {
         let overhead = self.per_file_overhead
             + self.per_lease_overhead
             + blocks as f64 * self.per_block_overhead;
-        self.gated_secs(cfg, size).0 + overhead
+        self.gated_secs(cfg, size, blocks).0 + overhead
     }
 
     /// Hash time *hidden* behind transfers for one file under `cfg` —
     /// the modeled counterpart of `WriteReport::hash_hidden_secs`.
-    pub fn hash_hidden_secs(&self, cfg: &WriteConfig, size: usize) -> f64 {
-        self.gated_secs(cfg, size).1
+    pub fn hash_hidden_secs(&self, cfg: &WriteConfig, size: usize, blocks: usize) -> f64 {
+        self.gated_secs(cfg, size, blocks).1
     }
 
     /// Hash/transfer composition for one file, without per-file/block
     /// overheads: `(gated seconds, hash seconds hidden)`.  Single source
     /// of truth for the serial-vs-pipelined choice, so write_secs and
     /// hash_hidden_secs cannot diverge.
-    fn gated_secs(&self, cfg: &WriteConfig, size: usize) -> (f64, f64) {
+    fn gated_secs(&self, cfg: &WriteConfig, size: usize, blocks: usize) -> (f64, f64) {
         let hash = self.hash_secs(cfg, size);
-        let net = self.net_secs(cfg, size);
+        let net = self.net_secs_pipelined(cfg, size, blocks);
         let xfer = net.max(size as f64 / self.memcpy_bps);
         match cfg.engine {
             // Async digest submission: hash of buffer N overlaps the
@@ -245,7 +292,7 @@ mod tests {
         assert!(w >= hash.max(net.max(copy)) + overhead - 1e-9);
         assert!(w <= hash + net.max(copy) + overhead + 1e-9);
         // And the hidden-hash accounting is the difference to serial.
-        let hidden = s.hash_hidden_secs(&c, MB64);
+        let hidden = s.hash_hidden_secs(&c, MB64, blocks_for(MB64));
         assert!(hidden >= 0.0);
         assert!((hash + net.max(copy) + overhead - hidden - w).abs() < 1e-9);
     }
@@ -254,9 +301,8 @@ mod tests {
         WriteConfig {
             engine,
             cdc,
-            write_buffer: 4 << 20,
             similarity,
-            replication: 1,
+            ..WriteConfig::default()
         }
     }
 
@@ -276,9 +322,42 @@ mod tests {
         }
         // And it does not perturb the hidden-hash accounting.
         assert_eq!(
-            with.hash_hidden_secs(&c, MB64),
-            without.hash_hidden_secs(&c, MB64)
+            with.hash_hidden_secs(&c, MB64, 64),
+            without.hash_hidden_secs(&c, MB64, 64)
         );
+    }
+
+    #[test]
+    fn depth_ablation_lock_step_is_rtt_bound() {
+        // Small blocks against a realistic fabric RTT: the lock-step
+        // data plane (depth 1) pays `rtt` per block and loses to the
+        // pipelined one; a modest depth recovers the wire limit.
+        let s = SystemSim {
+            net_rtt: 0.5e-3,
+            ..SystemSim::default()
+        };
+        let blocks = 1024; // 64 KB blocks of a 64 MB file
+        let lockstep = WriteConfig {
+            inflight_depth: 1,
+            ..cfg(EngineModel::None, false, 0.0)
+        };
+        let deep = WriteConfig {
+            inflight_depth: 8,
+            ..lockstep
+        };
+        let t1 = s.write_secs(&lockstep, MB64, blocks);
+        let t8 = s.write_secs(&deep, MB64, blocks);
+        assert!(t1 > 1.5 * t8, "lock-step {t1:.3}s vs depth-8 {t8:.3}s");
+        // Depth only ever helps, and never beats the pure wire time.
+        assert!(
+            s.net_secs_pipelined(&deep, MB64, blocks) >= s.net_secs(&deep, MB64) - 1e-12
+        );
+        // Fully-dedup'd writes transfer nothing at any depth.
+        let similar = WriteConfig {
+            similarity: 1.0,
+            ..lockstep
+        };
+        assert_eq!(s.net_secs_pipelined(&similar, MB64, blocks), 0.0);
     }
 
     #[test]

@@ -12,7 +12,7 @@
 use std::sync::Arc;
 
 use super::manager::{policy_for, Manager};
-use super::node::StorageNode;
+use super::node::{NodeOpts, StorageNode};
 use super::sai::Sai;
 use crate::config::{ClientConfig, ClusterConfig};
 use crate::hashgpu::HashEngine;
@@ -49,7 +49,22 @@ impl Cluster {
             cfg.lease_timeout,
         )?;
         let nodes = (0..cfg.nodes)
-            .map(|_| StorageNode::spawn_full("127.0.0.1:0", None, Some(manager.addr())))
+            .map(|_| {
+                StorageNode::spawn_opts(
+                    "127.0.0.1:0",
+                    NodeOpts {
+                        manager: Some(manager.addr().to_string()),
+                        // Each node gets its own NIC on the modeled
+                        // fabric: replies (the read path) are paced at
+                        // link speed just like the client's puts.
+                        reply_shaper: cfg
+                            .shape
+                            .then(|| Arc::new(Shaper::from_bits_per_sec(cfg.link_bps))),
+                        reply_latency: cfg.node_rtt,
+                        ..NodeOpts::default()
+                    },
+                )
+            })
             .collect::<Result<Vec<_>>>()?;
         Ok(Cluster {
             manager,

@@ -1,0 +1,509 @@
+//! Pipelined duplex data-plane client (data-plane v2).
+//!
+//! The old `node_worker` was lock-step: one put/get on the wire per
+//! node, reply awaited before the next frame was written, so per-node
+//! throughput was bounded by `block_size / RTT` no matter how fast the
+//! NIC or the hash engine ran.  [`DuplexClient`] splits each node link
+//! into a **writer thread** and a **reply-reader thread** over one
+//! socket (`Conn::try_clone`): requests stream out back-to-back while
+//! replies stream back, matched to their waiters by the request id the
+//! bumped wire format carries ([`Msg::PutBlock`]/[`Msg::GetBlock`] →
+//! [`Msg::OkFor`]/[`Msg::Data`]/[`Msg::ErrFor`]).  Per-node throughput
+//! becomes bandwidth-bound instead of RTT-bound.
+//!
+//! Flow control is two-level: this client admits at most
+//! `max_inflight` operations onto one socket (the
+//! `ClientConfig::node_inflight` knob; `1` degenerates to the old
+//! lock-step behaviour and is the benchmark baseline), and the session
+//! layer bounds total buffered payload with its in-flight-bytes budget
+//! (`ClientConfig::inflight_budget`) so deep pipelines cannot balloon
+//! memory.
+//!
+//! Failure semantics are preserved from the lock-step worker: a
+//! transport death marks the client dead (the SAI evicts and later
+//! reconnects), every outstanding waiter observes [`closed`] — never a
+//! hang — and new [`put`](DuplexClient::put)/[`get`](DuplexClient::get)
+//! calls fail **eagerly** instead of silently enqueueing into a dead
+//! worker.  Logical errors ([`Msg::ErrFor`], e.g. "unknown block") fail
+//! only their own request; the connection and every other in-flight
+//! operation survive.
+
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter, Write as _};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use super::proto::Msg;
+use crate::hash::Digest;
+use crate::net::{Conn, Shaper};
+use crate::{Error, Result};
+
+/// Transport-level connection-death error: what every waiter on a dead
+/// link observes, and what eager submission against a dead client
+/// returns.
+pub fn closed() -> Error {
+    Error::Node("connection closed".into())
+}
+
+/// One block payload, shared without copying: the writer streams it to
+/// every replica from the same allocation, the node stores it, and the
+/// read path hands it back to the consumer un-copied.
+pub type Block = Arc<Vec<u8>>;
+
+/// A registered reply waiter, keyed by request id.
+enum Waiter {
+    Put(Sender<Result<()>>),
+    Get(Sender<Result<Block>>),
+}
+
+impl Waiter {
+    fn fail(self, e: Error) {
+        match self {
+            Waiter::Put(s) => drop(s.send(Err(e))),
+            Waiter::Get(s) => drop(s.send(Err(e))),
+        }
+    }
+}
+
+/// A queued operation travelling from a submitting session thread to
+/// the writer thread.
+enum Cmd {
+    Put {
+        req: u64,
+        hash: Digest,
+        data: Block,
+        done: Sender<Result<()>>,
+    },
+    Get {
+        req: u64,
+        hash: Digest,
+        done: Sender<Result<Block>>,
+    },
+}
+
+impl Cmd {
+    fn fail(self, e: Error) {
+        match self {
+            Cmd::Put { done, .. } => drop(done.send(Err(e))),
+            Cmd::Get { done, .. } => drop(done.send(Err(e))),
+        }
+    }
+}
+
+/// State shared by the writer thread, the reader thread, and the
+/// submitting sessions.
+struct Shared {
+    /// Outstanding operations awaiting a reply, by request id.
+    waiters: Mutex<HashMap<u64, Waiter>>,
+    /// Signalled whenever a waiter resolves (or the link dies) so the
+    /// writer's admission wait can re-check.
+    space: Condvar,
+    /// Latched on transport death; checked eagerly by `put`/`get`.
+    dead: AtomicBool,
+}
+
+impl Shared {
+    /// Mark the link dead and fail every outstanding waiter with
+    /// [`closed`] — no waiter may ever hang on a dead socket.
+    fn die(&self) {
+        self.dead.store(true, Ordering::Relaxed);
+        let drained: Vec<Waiter> = {
+            let mut ws = self.waiters.lock().unwrap();
+            ws.drain().map(|(_, w)| w).collect()
+        };
+        for w in drained {
+            w.fail(closed());
+        }
+        self.space.notify_all();
+    }
+}
+
+/// One storage node's pipelined data-plane client.  See the module
+/// docs; construct with [`DuplexClient::connect`].
+pub struct DuplexClient {
+    tx: Sender<Cmd>,
+    shared: Arc<Shared>,
+    next_req: AtomicU64,
+}
+
+impl DuplexClient {
+    /// Connect to a node and spawn the writer/reader pair.  `shaper`,
+    /// if given, paces this link's writes (the client NIC);
+    /// `max_inflight` bounds operations in flight on this socket
+    /// (floored at 1; `1` = lock-step).
+    pub fn connect(
+        addr: &str,
+        shaper: Option<Arc<Shaper>>,
+        max_inflight: usize,
+    ) -> Result<DuplexClient> {
+        // Bounded connect: a black-holed node costs 2s, not the OS SYN
+        // timeout.
+        let mut conn = Conn::connect_timeout(addr, Duration::from_secs(2))?;
+        if let Some(s) = shaper {
+            conn = conn.with_shaper(s);
+        }
+        let reader_conn = conn.try_clone()?;
+        let shared = Arc::new(Shared {
+            waiters: Mutex::new(HashMap::new()),
+            space: Condvar::new(),
+            dead: AtomicBool::new(false),
+        });
+        let (tx, rx) = mpsc::channel();
+        let cap = max_inflight.max(1);
+        let sh = shared.clone();
+        std::thread::Builder::new()
+            .name(format!("sai-dpw-{addr}"))
+            .spawn(move || writer_loop(conn, rx, sh, cap))
+            .map_err(Error::Io)?;
+        let sh = shared.clone();
+        std::thread::Builder::new()
+            .name(format!("sai-dpr-{addr}"))
+            .spawn(move || reader_loop(reader_conn, sh))
+            .map_err(|e| {
+                // The writer is already running; poison the link so it
+                // exits when the handle drops.
+                shared.die();
+                Error::Io(e)
+            })?;
+        Ok(DuplexClient {
+            tx,
+            shared,
+            next_req: AtomicU64::new(1),
+        })
+    }
+
+    /// Whether the link's transport has died (node crash/restart).  The
+    /// SAI evicts dead clients so a registry refresh can reconnect.
+    pub fn is_dead(&self) -> bool {
+        self.shared.dead.load(Ordering::Relaxed)
+    }
+
+    /// Submit a block store.  Errs **eagerly** when the link is already
+    /// dead — a caller never silently enqueues into a dead worker.  The
+    /// returned receiver resolves when the node acknowledges (or the
+    /// link dies: [`closed`], never a hang).
+    pub fn put(&self, hash: Digest, data: Block) -> Result<Receiver<Result<()>>> {
+        if self.is_dead() {
+            return Err(closed());
+        }
+        let req = self.next_req.fetch_add(1, Ordering::Relaxed);
+        let (done, rx) = mpsc::channel();
+        self.tx
+            .send(Cmd::Put {
+                req,
+                hash,
+                data,
+                done,
+            })
+            .map_err(|_| closed())?;
+        Ok(rx)
+    }
+
+    /// Submit a block fetch.  Same eager-error and never-hang contract
+    /// as [`put`](DuplexClient::put); resolves to the shared block
+    /// payload (no copy on the client side).
+    pub fn get(&self, hash: Digest) -> Result<Receiver<Result<Block>>> {
+        if self.is_dead() {
+            return Err(closed());
+        }
+        let req = self.next_req.fetch_add(1, Ordering::Relaxed);
+        let (done, rx) = mpsc::channel();
+        self.tx
+            .send(Cmd::Get { req, hash, done })
+            .map_err(|_| closed())?;
+        Ok(rx)
+    }
+}
+
+/// While idle, the writer wakes at this cadence to notice a link that
+/// died with nothing queued — otherwise a dead link would park this
+/// thread (and its socket fd) until the SAI next evicts the client.
+const WRITER_IDLE_TICK: Duration = Duration::from_secs(1);
+
+/// Outcome of waiting for the next queued command.
+enum Next {
+    Cmd(Cmd),
+    /// Client handle dropped: graceful teardown.
+    Closed,
+    /// Transport died (flush failure, or the reader flagged it while
+    /// the queue was idle): fatal teardown.
+    Dead,
+}
+
+/// Pull the next command, flushing buffered frames before blocking on
+/// an empty queue (nothing may sit unsent while we sleep) and ticking
+/// the dead flag while idle.
+fn next_cmd(rx: &Receiver<Cmd>, w: &mut BufWriter<Conn>, shared: &Shared) -> Next {
+    match rx.try_recv() {
+        Ok(c) => return Next::Cmd(c),
+        Err(TryRecvError::Disconnected) => return Next::Closed,
+        Err(TryRecvError::Empty) => {}
+    }
+    if w.flush().is_err() {
+        return Next::Dead;
+    }
+    loop {
+        match rx.recv_timeout(WRITER_IDLE_TICK) {
+            Ok(c) => return Next::Cmd(c),
+            Err(RecvTimeoutError::Disconnected) => return Next::Closed,
+            Err(RecvTimeoutError::Timeout) => {
+                if shared.dead.load(Ordering::Relaxed) {
+                    return Next::Dead;
+                }
+            }
+        }
+    }
+}
+
+/// Writer thread: streams queued requests onto the socket, registering
+/// each waiter *before* its frame goes out (the reply can race the
+/// write), batching flushes (one flush per queue drain, not per frame)
+/// and admitting at most `cap` operations in flight.
+fn writer_loop(conn: Conn, rx: Receiver<Cmd>, shared: Arc<Shared>, cap: usize) {
+    let mut w = BufWriter::with_capacity(256 * 1024, conn);
+    let fatal = |w: &mut BufWriter<Conn>, shared: &Shared| {
+        shared.die();
+        // Unblock the reader (and any straggling peer read).
+        w.get_ref().shutdown();
+    };
+    let mut graceful = true;
+    loop {
+        let cmd = match next_cmd(&rx, &mut w, &shared) {
+            Next::Cmd(c) => c,
+            Next::Closed => break, // client handle dropped
+            Next::Dead => {
+                fatal(&mut w, &shared);
+                graceful = false;
+                break;
+            }
+        };
+        // Admission: at most `cap` ops outstanding on this socket.
+        // Everything buffered must hit the wire before we block on
+        // replies, or the pipeline deadlocks on its own buffer.
+        if shared.waiters.lock().unwrap().len() >= cap {
+            if w.flush().is_err() {
+                cmd.fail(closed());
+                fatal(&mut w, &shared);
+                graceful = false;
+                break;
+            }
+            let mut ws = shared.waiters.lock().unwrap();
+            while ws.len() >= cap && !shared.dead.load(Ordering::Relaxed) {
+                ws = shared.space.wait(ws).unwrap();
+            }
+        }
+        if shared.dead.load(Ordering::Relaxed) {
+            // Reader saw the transport die: fail this command and exit
+            // (the post-loop drain fails anything else queued).  A dead
+            // link must not park this thread in recv() forever — new
+            // submissions already err eagerly at `put`/`get`.
+            cmd.fail(closed());
+            graceful = false;
+            break;
+        }
+        let res = match cmd {
+            Cmd::Put {
+                req,
+                hash,
+                data,
+                done,
+            } => {
+                shared
+                    .waiters
+                    .lock()
+                    .unwrap()
+                    .insert(req, Waiter::Put(done));
+                // Header + payload written separately: the payload
+                // streams straight from the shared Arc — no frame
+                // assembly copy per replica.
+                w.write_all(&Msg::put_header(req, &hash, data.len()))
+                    .and_then(|()| w.write_all(&data))
+            }
+            Cmd::Get { req, hash, done } => {
+                shared
+                    .waiters
+                    .lock()
+                    .unwrap()
+                    .insert(req, Waiter::Get(done));
+                w.write_all(&Msg::GetBlock { req, hash }.encode())
+            }
+        };
+        if res.is_err() {
+            // The socket is gone mid-frame; `die` fails the waiter we
+            // just registered along with every other outstanding one.
+            fatal(&mut w, &shared);
+            graceful = false;
+            break;
+        }
+        // Death re-check AFTER registering: the reader may have died
+        // (and drained the map) between our admission check and the
+        // insert, in which case nobody else will ever fail the waiter
+        // we just added.  The waiters mutex orders the insert against
+        // the reader's drain, so exactly one side sees the other:
+        // either the drain took our waiter, or this load observes
+        // `dead` and `die` fails it here.  Never a hang.
+        if shared.dead.load(Ordering::Relaxed) {
+            fatal(&mut w, &shared);
+            graceful = false;
+            break;
+        }
+    }
+    if graceful {
+        // Handle dropped: flush what's queued and half-close so the
+        // node answers everything it read; the reader drains those
+        // replies and then sees a clean EOF.
+        let _ = w.flush();
+        w.get_ref().shutdown_write();
+    }
+    // Fail anything still queued behind a fatal exit.
+    while let Ok(c) = rx.try_recv() {
+        c.fail(closed());
+    }
+}
+
+/// Reader thread: drains tagged replies off the socket and resolves
+/// their waiters by request id.  Any transport error, EOF, or protocol
+/// violation (unknown id, reply-kind mismatch, untagged frame) kills
+/// the link: the stream can no longer be trusted to align replies with
+/// requests.
+fn reader_loop(conn: Conn, shared: Arc<Shared>) {
+    let mut r = BufReader::with_capacity(256 * 1024, conn);
+    loop {
+        let msg = match Msg::read_from(&mut r) {
+            Ok(Some(m)) => m,
+            _ => break, // EOF or transport/frame error
+        };
+        let (req, outcome) = match msg {
+            Msg::OkFor { req } => (req, Ok(None)),
+            Msg::Data { req, data } => (req, Ok(Some(data))),
+            Msg::ErrFor { req, msg } => (req, Err(Error::Node(msg))),
+            _ => break, // untagged frame on the data plane
+        };
+        let waiter = shared.waiters.lock().unwrap().remove(&req);
+        match (waiter, outcome) {
+            (Some(Waiter::Put(s)), Ok(None)) => drop(s.send(Ok(()))),
+            (Some(Waiter::Get(s)), Ok(Some(data))) => drop(s.send(Ok(Arc::new(data)))),
+            (Some(w), Err(e)) => w.fail(e),
+            // Unknown request id or reply-kind mismatch: stop trusting
+            // the stream (the removed waiter, if any, resolves through
+            // `die` below... its sender is gone, so it observes closed).
+            _ => break,
+        }
+        shared.space.notify_all();
+    }
+    shared.die();
+    // Unblock a writer stuck in a backpressured send.
+    r.get_ref().shutdown();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::Listener;
+
+    /// A scripted node: reads `n` requests off one connection, then
+    /// replies to ALL of them in the (possibly shuffled) order given by
+    /// `order` (indices into arrival order).
+    fn scripted_node(n: usize, order: Vec<usize>) -> (String, std::thread::JoinHandle<()>) {
+        let l = Listener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let mut c = l.accept().unwrap();
+            let mut reqs = Vec::new();
+            for _ in 0..n {
+                reqs.push(Msg::read_from(&mut c).unwrap().unwrap());
+            }
+            for &i in &order {
+                let reply = match &reqs[i] {
+                    Msg::PutBlock { req, .. } => Msg::OkFor { req: *req },
+                    Msg::GetBlock { req, hash } => Msg::Data {
+                        req: *req,
+                        data: vec![hash[0]; 8],
+                    },
+                    m => panic!("unexpected {m:?}"),
+                };
+                reply.write_to(&mut c).unwrap();
+            }
+        });
+        (addr, h)
+    }
+
+    #[test]
+    fn replies_match_waiters_out_of_order() {
+        let (addr, h) = scripted_node(4, vec![2, 0, 3, 1]);
+        let c = DuplexClient::connect(&addr, None, 8).unwrap();
+        let p0 = c.put([1; 16], Arc::new(vec![1; 32])).unwrap();
+        let g1 = c.get([2; 16]).unwrap();
+        let p2 = c.put([3; 16], Arc::new(vec![3; 32])).unwrap();
+        let g3 = c.get([4; 16]).unwrap();
+        assert!(p0.recv().unwrap().is_ok());
+        assert_eq!(&*g1.recv().unwrap().unwrap(), &vec![2u8; 8]);
+        assert!(p2.recv().unwrap().is_ok());
+        assert_eq!(&*g3.recv().unwrap().unwrap(), &vec![4u8; 8]);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn dead_link_fails_eagerly_and_fails_waiters() {
+        let l = Listener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let mut c = l.accept().unwrap();
+            // Read one request, then slam the door.
+            let _ = Msg::read_from(&mut c).unwrap();
+            c.shutdown();
+        });
+        let c = DuplexClient::connect(&addr, None, 8).unwrap();
+        let rx = c.put([1; 16], Arc::new(vec![0; 16])).unwrap();
+        // The outstanding waiter observes an error, not a hang.
+        assert!(rx.recv().unwrap().is_err());
+        h.join().unwrap();
+        // Subsequent submissions fail eagerly.
+        for _ in 0..100 {
+            if c.is_dead() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(c.is_dead());
+        assert!(c.put([2; 16], Arc::new(vec![0; 16])).is_err());
+        assert!(c.get([2; 16]).is_err());
+    }
+
+    #[test]
+    fn lock_step_cap_still_completes() {
+        // cap = 1 (the lock-step baseline) must interleave cleanly with
+        // a node that answers one request at a time.
+        let l = Listener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let mut c = l.accept().unwrap();
+            while let Ok(Some(m)) = Msg::read_from(&mut c) {
+                let reply = match m {
+                    Msg::PutBlock { req, .. } => Msg::OkFor { req },
+                    Msg::GetBlock { req, hash } => Msg::Data {
+                        req,
+                        data: vec![hash[0]; 4],
+                    },
+                    m => panic!("unexpected {m:?}"),
+                };
+                if reply.write_to(&mut c).is_err() {
+                    break;
+                }
+            }
+        });
+        let c = DuplexClient::connect(&addr, None, 1).unwrap();
+        let rxs: Vec<_> = (0..3u8)
+            .map(|i| c.put([i; 16], Arc::new(vec![i; 16])).unwrap())
+            .collect();
+        for rx in rxs {
+            assert!(rx.recv().unwrap().is_ok());
+        }
+        let g = c.get([7; 16]).unwrap();
+        assert_eq!(&*g.recv().unwrap().unwrap(), &vec![7u8; 4]);
+        drop(c); // half-close -> the serve loop sees EOF and exits
+        h.join().unwrap();
+    }
+}

@@ -29,9 +29,19 @@
 //! advance hook making every expiry path deterministic to test
 //! (`rust/tests/fault_injection.rs`).
 //!
+//! Data-plane v2 (pipelined duplex): client↔node block frames carry
+//! request ids and every node link is split into a writer thread plus
+//! a reply-reader thread ([`duplex`]), so many puts/gets ride one
+//! socket concurrently and per-node throughput is bandwidth-bound
+//! instead of `block_size / RTT`-bound; sessions meter both directions
+//! with an in-flight-bytes budget
+//! (`crate::config::ClientConfig::inflight_budget`).
+//!
 //! * [`manager`] — metadata manager: block-maps, versions, node
 //!   registry (join/heartbeat), placement policies, per-block refcounts
 //!   and commit-time GC.
+//! * [`duplex`] — the pipelined duplex data-plane client each node
+//!   link runs on.
 //! * [`node`] — storage nodes: hash-addressed block stores that join
 //!   the manager and honor GC deletes.
 //! * [`sai`] — the client System Access Interface: write buffering,
@@ -48,6 +58,7 @@
 //!   on loopback TCP for tests, benches and examples.
 
 pub mod cluster;
+pub mod duplex;
 pub mod manager;
 pub mod node;
 pub mod proto;
@@ -55,11 +66,12 @@ pub mod sai;
 pub mod session;
 
 pub use cluster::Cluster;
+pub use duplex::DuplexClient;
 pub use manager::{
     policy_for, BlockStats, Manager, PlacementPolicy, ReplicatedStripe, RoundRobinStripe,
     DEFAULT_LEASE_TIMEOUT,
 };
-pub use node::StorageNode;
+pub use node::{NodeOpts, StorageNode};
 pub use proto::{Assignment, BlockMeta, BlockSpec, Msg, NodeEntry};
 pub use sai::{Sai, WriteReport};
 pub use session::{FileReader, FileWriter};

@@ -5,19 +5,34 @@
 //! Control-plane v2: a node registers with the metadata manager on
 //! spawn ([`Msg::NodeJoin`]), heartbeats it for liveness, and handles
 //! [`Msg::DeleteBlock`] so the manager can reclaim unreferenced blocks.
+//!
+//! Data-plane v2 (pipelined duplex): each connection is served by a
+//! **request-reader loop** plus a dedicated **reply-writer thread**, so
+//! the node decodes request N+1 while reply N is still draining onto
+//! the wire — the server half of the client's pipelined
+//! [`DuplexClient`](super::duplex::DuplexClient).  Blocks are stored as
+//! shared [`Arc`] payloads and `Data` replies stream straight out of
+//! the store ([`Msg::data_header`] + payload), so a get never copies
+//! the block on the node.  Two optional fidelity knobs for single-host
+//! experiments: a reply-side [`Shaper`] models the node's NIC, and
+//! `reply_latency` models the fabric round-trip a real deployment would
+//! add to every request→reply turnaround (implemented as a delay line:
+//! each reply is released `reply_latency` after its request arrived, so
+//! pipelined replies overlap their delays exactly like real in-flight
+//! packets, while a lock-step client pays the latency once per block).
 
 use std::collections::HashMap;
-use std::io::{BufReader, BufWriter};
+use std::io::{BufReader, BufWriter, Write as _};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{self, RecvTimeoutError, Sender};
+use std::sync::mpsc::{self, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::proto::Msg;
 use crate::hash::Digest;
-use crate::net::{Conn, Listener};
+use crate::net::{Conn, Listener, Shaper};
 use crate::Result;
 
 /// How often a registered node beacons the manager.
@@ -26,8 +41,18 @@ const HEARTBEAT_INTERVAL: Duration = Duration::from_millis(250);
 /// Node state shared across connection threads.
 #[derive(Debug, Default)]
 pub struct NodeState {
-    blocks: Mutex<HashMap<Digest, Vec<u8>>>,
+    /// Shared payloads: a get clones the `Arc`, not the bytes.
+    blocks: Mutex<HashMap<Digest, Arc<Vec<u8>>>>,
     disk_dir: Option<PathBuf>,
+}
+
+/// One reply travelling from the request-reader to the reply-writer
+/// thread of a connection.
+enum Reply {
+    /// Control/ack frame, encoded at write time.
+    Msg(Msg),
+    /// Zero-copy block payload: header + bytes straight from the store.
+    Data { req: u64, data: Arc<Vec<u8>> },
 }
 
 impl NodeState {
@@ -37,34 +62,69 @@ impl NodeState {
             .map(|d| d.join(crate::util::hex(hash)))
     }
 
-    /// Handle one request.
+    /// Store one block (memory + optional disk spill).
+    fn store(&self, hash: Digest, data: Vec<u8>) -> std::result::Result<(), String> {
+        if let Some(p) = self.disk_path(&hash) {
+            if let Err(e) = std::fs::write(&p, &data) {
+                return Err(format!("disk write: {e}"));
+            }
+        }
+        self.blocks.lock().unwrap().insert(hash, Arc::new(data));
+        Ok(())
+    }
+
+    /// Fetch one block as a shared payload (memory first, then spill).
+    fn fetch(&self, hash: &Digest) -> Option<Arc<Vec<u8>>> {
+        if let Some(d) = self.blocks.lock().unwrap().get(hash).cloned() {
+            return Some(d);
+        }
+        let p = self.disk_path(hash)?;
+        std::fs::read(&p).ok().map(Arc::new)
+    }
+
+    /// Serve-loop dispatch: data-plane requests resolve to tagged
+    /// replies (with `Data` payloads shared, not copied); everything
+    /// else goes through [`NodeState::handle`].
+    fn dispatch(&self, msg: Msg) -> Reply {
+        match msg {
+            Msg::PutBlock { req, hash, data } => match self.store(hash, data) {
+                Ok(()) => Reply::Msg(Msg::OkFor { req }),
+                Err(e) => Reply::Msg(Msg::ErrFor { req, msg: e }),
+            },
+            Msg::GetBlock { req, hash } => match self.fetch(&hash) {
+                Some(data) => Reply::Data { req, data },
+                None => Reply::Msg(Msg::ErrFor {
+                    req,
+                    msg: "unknown block".into(),
+                }),
+            },
+            other => Reply::Msg(self.handle(other)),
+        }
+    }
+
+    /// Handle one request, returning the full reply message (tests and
+    /// introspection; the serve loop's hot path uses
+    /// [`NodeState::dispatch`], which shares `Data` payloads instead of
+    /// copying them into a `Msg`).
     pub fn handle(&self, msg: Msg) -> Msg {
         match msg {
-            Msg::PutBlock { hash, data } => {
-                if let Some(p) = self.disk_path(&hash) {
-                    if let Err(e) = std::fs::write(&p, &data) {
-                        return Msg::Err(format!("disk write: {e}"));
-                    }
-                }
-                self.blocks.lock().unwrap().insert(hash, data);
-                Msg::Ok
-            }
+            Msg::PutBlock { req, hash, data } => match self.store(hash, data) {
+                Ok(()) => Msg::OkFor { req },
+                Err(e) => Msg::ErrFor { req, msg: e },
+            },
             Msg::HasBlock { hash } => {
                 Msg::Bool(self.blocks.lock().unwrap().contains_key(&hash))
             }
-            Msg::GetBlock { hash } => {
-                let mem = self.blocks.lock().unwrap().get(&hash).cloned();
-                match mem {
-                    Some(data) => Msg::Data { data },
-                    None => match self.disk_path(&hash) {
-                        Some(p) => match std::fs::read(&p) {
-                            Ok(data) => Msg::Data { data },
-                            Err(_) => Msg::Err("unknown block".into()),
-                        },
-                        None => Msg::Err("unknown block".into()),
-                    },
-                }
-            }
+            Msg::GetBlock { req, hash } => match self.fetch(&hash) {
+                Some(data) => Msg::Data {
+                    req,
+                    data: data.as_ref().clone(),
+                },
+                None => Msg::ErrFor {
+                    req,
+                    msg: "unknown block".into(),
+                },
+            },
             Msg::DeleteBlock { hash } => {
                 // Idempotent: deleting an unknown block is fine (the
                 // manager's GC may race an aborted writer's puts).
@@ -84,6 +144,25 @@ impl NodeState {
             other => Msg::Err(format!("node: unexpected message {other:?}")),
         }
     }
+}
+
+/// Spawn-time options for a [`StorageNode`] beyond the bind address.
+#[derive(Default)]
+pub struct NodeOpts {
+    /// Optional block spill directory.
+    pub disk_dir: Option<PathBuf>,
+    /// Manager address to register with (join + heartbeat).
+    pub manager: Option<String>,
+    /// Address to join the manager under (wildcard-bound nodes that are
+    /// reachable at a different host:port).
+    pub advertise: Option<String>,
+    /// Pace this node's replies (its NIC) — single-host experiments
+    /// shaping the read path like the paper's 1 Gbps fabric.
+    pub reply_shaper: Option<Arc<Shaper>>,
+    /// Modeled fabric round-trip residue: each reply is released this
+    /// long after its request arrived (a delay line — pipelined replies
+    /// overlap their delays; a lock-step client pays it per block).
+    pub reply_latency: Duration,
 }
 
 /// A running storage node server.
@@ -120,7 +199,14 @@ impl StorageNode {
         disk_dir: Option<PathBuf>,
         manager: Option<&str>,
     ) -> Result<StorageNode> {
-        Self::spawn_inner(addr, disk_dir, manager, None)
+        Self::spawn_opts(
+            addr,
+            NodeOpts {
+                disk_dir,
+                manager: manager.map(str::to_string),
+                ..NodeOpts::default()
+            },
+        )
     }
 
     /// Like [`spawn_full`](Self::spawn_full) with a manager, but join
@@ -132,15 +218,26 @@ impl StorageNode {
         manager: &str,
         advertise: Option<&str>,
     ) -> Result<StorageNode> {
-        Self::spawn_inner(addr, disk_dir, Some(manager), advertise)
+        Self::spawn_opts(
+            addr,
+            NodeOpts {
+                disk_dir,
+                manager: Some(manager.to_string()),
+                advertise: advertise.map(str::to_string),
+                ..NodeOpts::default()
+            },
+        )
     }
 
-    fn spawn_inner(
-        addr: &str,
-        disk_dir: Option<PathBuf>,
-        manager: Option<&str>,
-        advertise: Option<&str>,
-    ) -> Result<StorageNode> {
+    /// Bind and serve with the full option set.
+    pub fn spawn_opts(addr: &str, opts: NodeOpts) -> Result<StorageNode> {
+        let NodeOpts {
+            disk_dir,
+            manager,
+            advertise,
+            reply_shaper,
+            reply_latency,
+        } = opts;
         if let Some(d) = &disk_dir {
             std::fs::create_dir_all(d)?;
         }
@@ -155,7 +252,7 @@ impl StorageNode {
         let (st, sp, cn) = (state.clone(), stop.clone(), conns.clone());
         let accept_thread = std::thread::Builder::new()
             .name("mosa-node".into())
-            .spawn(move || accept_loop(listener, st, sp, cn))
+            .spawn(move || accept_loop(listener, st, sp, cn, reply_shaper, reply_latency))
             .map_err(crate::Error::Io)?;
         let mut node = StorageNode {
             addr,
@@ -167,8 +264,8 @@ impl StorageNode {
             heartbeat: None,
         };
         if let Some(mgr) = manager {
-            let join_as = advertise.unwrap_or(&node.addr).to_string();
-            node.register(mgr, join_as)?;
+            let join_as = advertise.unwrap_or_else(|| node.addr.clone());
+            node.register(&mgr, join_as)?;
         }
         Ok(node)
     }
@@ -301,6 +398,8 @@ fn accept_loop(
     state: Arc<NodeState>,
     stop: Arc<AtomicBool>,
     conns: Arc<Mutex<Vec<Conn>>>,
+    reply_shaper: Option<Arc<Shaper>>,
+    reply_latency: Duration,
 ) {
     loop {
         let conn = match listener.accept() {
@@ -316,28 +415,100 @@ fn accept_loop(
             conns.lock().unwrap().push(clone);
         }
         let st = state.clone();
+        let sh = reply_shaper.clone();
         let _ = std::thread::Builder::new()
             .name("mosa-node-conn".into())
-            .spawn(move || serve_conn(conn, st));
+            .spawn(move || serve_conn(conn, st, sh, reply_latency));
         if stopping {
             break;
         }
     }
 }
 
-fn serve_conn(conn: Conn, state: Arc<NodeState>) {
+/// Serve one connection, pipelined: the request-reader loop (this
+/// thread) decodes and handles request N+1 while the reply-writer
+/// thread drains reply N — so a stream of puts/gets is never
+/// store-and-forward serialized against its own acknowledgements.
+/// Replies leave in request order; the tagged protocol lets the client
+/// match them to waiters regardless.
+fn serve_conn(
+    conn: Conn,
+    state: Arc<NodeState>,
+    reply_shaper: Option<Arc<Shaper>>,
+    reply_latency: Duration,
+) {
     let reader = match conn.try_clone() {
         Ok(c) => c,
         Err(_) => return,
     };
-    let mut r = BufReader::new(reader);
-    let mut w = BufWriter::new(conn);
+    let mut wconn = conn;
+    if let Some(s) = reply_shaper {
+        // The node's NIC: paces Data payloads on the read path the way
+        // the client's shaper paces puts on the write path.
+        wconn = wconn.with_shaper(s);
+    }
+    let (tx, rx) = mpsc::channel::<(Instant, Reply)>();
+    let Ok(writer) = std::thread::Builder::new()
+        .name("mosa-node-reply".into())
+        .spawn(move || reply_writer(wconn, rx))
+    else {
+        return;
+    };
+    let mut r = BufReader::with_capacity(256 * 1024, reader);
     while let Ok(Some(msg)) = Msg::read_from(&mut r) {
-        let reply = state.handle(msg);
-        if reply.write_to(&mut w).is_err() {
+        // The delay line stamps each reply at request arrival, so
+        // overlapped requests overlap their latencies (like real
+        // in-flight packets) instead of queueing them.
+        let due = Instant::now() + reply_latency;
+        if tx.send((due, state.dispatch(msg))).is_err() {
             break;
         }
     }
+    drop(tx); // writer drains the queue, flushes, and exits
+    let _ = writer.join();
+}
+
+/// Reply-writer half of a connection: releases each reply at its due
+/// time, streams `Data` payloads straight from the shared store, and
+/// batches flushes (one per queue drain, not one per frame).
+fn reply_writer(conn: Conn, rx: mpsc::Receiver<(Instant, Reply)>) {
+    let mut w = BufWriter::with_capacity(256 * 1024, conn);
+    loop {
+        let (due, reply) = match rx.try_recv() {
+            Ok(r) => r,
+            Err(TryRecvError::Empty) => {
+                if w.flush().is_err() {
+                    return;
+                }
+                match rx.recv() {
+                    Ok(r) => r,
+                    Err(_) => break,
+                }
+            }
+            Err(TryRecvError::Disconnected) => break,
+        };
+        let now = Instant::now();
+        if due > now {
+            // Already-due replies must not ride out this sleep inside
+            // the buffer: flush them first, THEN wait for the delay
+            // line — otherwise a reply could arrive up to a full
+            // `reply_latency` late.
+            if w.flush().is_err() {
+                return;
+            }
+            std::thread::sleep(due - now);
+        }
+        let res = match reply {
+            Reply::Msg(m) => w.write_all(&m.encode()),
+            Reply::Data { req, data } => w
+                .write_all(&Msg::data_header(req, data.len()))
+                .and_then(|()| w.write_all(&data)),
+        };
+        if res.is_err() {
+            return;
+        }
+    }
+    let _ = w.flush();
 }
 
 #[cfg(test)]
@@ -351,15 +522,17 @@ mod tests {
         assert_eq!(s.handle(Msg::HasBlock { hash: h }), Msg::Bool(false));
         assert_eq!(
             s.handle(Msg::PutBlock {
+                req: 5,
                 hash: h,
                 data: vec![1, 2, 3]
             }),
-            Msg::Ok
+            Msg::OkFor { req: 5 }
         );
         assert_eq!(s.handle(Msg::HasBlock { hash: h }), Msg::Bool(true));
         assert_eq!(
-            s.handle(Msg::GetBlock { hash: h }),
+            s.handle(Msg::GetBlock { req: 6, hash: h }),
             Msg::Data {
+                req: 6,
                 data: vec![1, 2, 3]
             }
         );
@@ -369,8 +542,11 @@ mod tests {
     fn get_unknown_errors() {
         let s = NodeState::default();
         assert!(matches!(
-            s.handle(Msg::GetBlock { hash: [9; 16] }),
-            Msg::Err(_)
+            s.handle(Msg::GetBlock {
+                req: 1,
+                hash: [9; 16]
+            }),
+            Msg::ErrFor { req: 1, .. }
         ));
     }
 
@@ -379,6 +555,7 @@ mod tests {
         let s = NodeState::default();
         let h = [4u8; 16];
         s.handle(Msg::PutBlock {
+            req: 1,
             hash: h,
             data: vec![1; 50],
         });
@@ -398,6 +575,7 @@ mod tests {
         let s = NodeState::default();
         for i in 0..3u8 {
             s.handle(Msg::PutBlock {
+                req: i as u64,
                 hash: [i; 16],
                 data: vec![0; 100],
             });
@@ -415,14 +593,13 @@ mod tests {
     fn put_is_idempotent_by_key() {
         let s = NodeState::default();
         let h = [2u8; 16];
-        s.handle(Msg::PutBlock {
-            hash: h,
-            data: vec![1],
-        });
-        s.handle(Msg::PutBlock {
-            hash: h,
-            data: vec![1],
-        });
+        for req in [1, 2] {
+            s.handle(Msg::PutBlock {
+                req,
+                hash: h,
+                data: vec![1],
+            });
+        }
         assert_eq!(
             s.handle(Msg::NodeStats),
             Msg::Stats { blocks: 1, bytes: 1 }
@@ -436,12 +613,16 @@ mod tests {
         let mut node = StorageNode::spawn_with("127.0.0.1:0", Some(dir.clone())).unwrap();
         let mut c = Conn::connect(node.addr()).unwrap();
         Msg::PutBlock {
+            req: 1,
             hash: [7; 16],
             data: vec![9; 50],
         }
         .write_to(&mut c)
         .unwrap();
-        assert_eq!(Msg::read_from(&mut c).unwrap().unwrap(), Msg::Ok);
+        assert_eq!(
+            Msg::read_from(&mut c).unwrap().unwrap(),
+            Msg::OkFor { req: 1 }
+        );
         // Block landed on disk.
         assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 1);
         // DeleteBlock removes the spilled copy too.
@@ -457,16 +638,105 @@ mod tests {
         let node = StorageNode::spawn("127.0.0.1:0").unwrap();
         let mut c = Conn::connect(node.addr()).unwrap();
         Msg::PutBlock {
+            req: 9,
             hash: [3; 16],
             data: vec![5; 10],
         }
         .write_to(&mut c)
         .unwrap();
-        assert_eq!(Msg::read_from(&mut c).unwrap().unwrap(), Msg::Ok);
-        Msg::GetBlock { hash: [3; 16] }.write_to(&mut c).unwrap();
         assert_eq!(
             Msg::read_from(&mut c).unwrap().unwrap(),
-            Msg::Data { data: vec![5; 10] }
+            Msg::OkFor { req: 9 }
+        );
+        Msg::GetBlock {
+            req: 10,
+            hash: [3; 16],
+        }
+        .write_to(&mut c)
+        .unwrap();
+        assert_eq!(
+            Msg::read_from(&mut c).unwrap().unwrap(),
+            Msg::Data {
+                req: 10,
+                data: vec![5; 10]
+            }
+        );
+    }
+
+    #[test]
+    fn pipelined_requests_one_connection() {
+        // Many requests written before any reply is read: the split
+        // serve loop answers them all, in order, ids echoed.
+        let node = StorageNode::spawn("127.0.0.1:0").unwrap();
+        let mut c = Conn::connect(node.addr()).unwrap();
+        for i in 0..16u64 {
+            Msg::PutBlock {
+                req: i,
+                hash: [i as u8; 16],
+                data: vec![i as u8; 100],
+            }
+            .write_to(&mut c)
+            .unwrap();
+        }
+        for i in 0..16u64 {
+            Msg::GetBlock {
+                req: 100 + i,
+                hash: [i as u8; 16],
+            }
+            .write_to(&mut c)
+            .unwrap();
+        }
+        for i in 0..16u64 {
+            assert_eq!(
+                Msg::read_from(&mut c).unwrap().unwrap(),
+                Msg::OkFor { req: i }
+            );
+        }
+        for i in 0..16u64 {
+            assert_eq!(
+                Msg::read_from(&mut c).unwrap().unwrap(),
+                Msg::Data {
+                    req: 100 + i,
+                    data: vec![i as u8; 100]
+                }
+            );
+        }
+    }
+
+    #[test]
+    fn reply_latency_is_a_delay_line() {
+        // 16 pipelined requests against a 30 ms reply latency complete
+        // in ~one latency window, not 16 of them — the delays overlap.
+        let node = StorageNode::spawn_opts(
+            "127.0.0.1:0",
+            NodeOpts {
+                reply_latency: Duration::from_millis(30),
+                ..NodeOpts::default()
+            },
+        )
+        .unwrap();
+        let mut c = Conn::connect(node.addr()).unwrap();
+        let t0 = Instant::now();
+        for i in 0..16u64 {
+            Msg::PutBlock {
+                req: i,
+                hash: [i as u8; 16],
+                data: vec![0; 10],
+            }
+            .write_to(&mut c)
+            .unwrap();
+        }
+        for i in 0..16u64 {
+            assert_eq!(
+                Msg::read_from(&mut c).unwrap().unwrap(),
+                Msg::OkFor { req: i }
+            );
+        }
+        let dt = t0.elapsed();
+        assert!(dt >= Duration::from_millis(30), "latency applied: {dt:?}");
+        assert!(
+            dt < Duration::from_millis(16 * 30),
+            "delays must overlap, not queue: {dt:?}"
         );
     }
 

@@ -21,6 +21,16 @@
 //! lapse instead of stranding forever.  Lease ids ride along on
 //! [`Msg::AllocPlacement`] and [`Msg::CommitBlockMap`] (`lease == 0`
 //! means "untracked", the pre-lease behaviour).
+//!
+//! Data-plane v2 (pipelined duplex, wire format bumped): the
+//! client↔node block frames carry a *request id* so many operations can
+//! be in flight on one socket and replies can be matched to their
+//! waiters out of band.  [`Msg::PutBlock`] / [`Msg::GetBlock`] gain a
+//! `req` field and are answered by the tagged [`Msg::OkFor`] /
+//! [`Msg::Data`] / [`Msg::ErrFor`] (tags 28–29) instead of the bare
+//! `Ok`/`Err`.  Manager frames — and the untagged node control messages
+//! ([`Msg::HasBlock`], [`Msg::DeleteBlock`], [`Msg::NodeStats`]), which
+//! stay strictly request/reply — are unchanged.
 
 use std::io::{Read, Write};
 
@@ -223,21 +233,28 @@ pub enum Msg {
         id: u32,
     },
 
-    // ---- client -> node ----
-    /// Store a block.
+    // ---- client -> node (data plane: tagged, pipelined) ----
+    /// Store a block.  Answered by [`Msg::OkFor`] (or [`Msg::ErrFor`])
+    /// echoing `req`.
     PutBlock {
+        /// Request id: matches the reply to its waiter when many
+        /// operations are in flight on one connection.
+        req: u64,
         /// Content hash (storage key).
         hash: Digest,
         /// Payload.
         data: Vec<u8>,
     },
-    /// Does the node hold this block?
+    /// Does the node hold this block? (untagged control; `Bool` reply)
     HasBlock {
         /// Storage key.
         hash: Digest,
     },
-    /// Fetch a block.
+    /// Fetch a block.  Answered by [`Msg::Data`] (or [`Msg::ErrFor`])
+    /// echoing `req`.
     GetBlock {
+        /// Request id (same role as on `PutBlock`).
+        req: u64,
         /// Storage key.
         hash: Digest,
     },
@@ -249,9 +266,11 @@ pub enum Msg {
     /// Node statistics request.
     NodeStats,
 
-    // ---- node -> client ----
+    // ---- node -> client (data plane: tagged, pipelined) ----
     /// Block payload reply.
     Data {
+        /// Request id of the [`Msg::GetBlock`] this answers.
+        req: u64,
         /// Payload.
         data: Vec<u8>,
     },
@@ -261,6 +280,21 @@ pub enum Msg {
         blocks: u64,
         /// Total payload bytes held.
         bytes: u64,
+    },
+    /// Tagged success acknowledgement (put ack on the pipelined data
+    /// plane).
+    OkFor {
+        /// Request id of the [`Msg::PutBlock`] this answers.
+        req: u64,
+    },
+    /// Tagged logical error reply (e.g. "unknown block"): the request
+    /// it answers failed, but the connection — and every other
+    /// operation in flight on it — survives.
+    ErrFor {
+        /// Request id of the operation that failed.
+        req: u64,
+        /// Error message.
+        msg: String,
     },
 
     // ---- shared ----
@@ -302,6 +336,8 @@ impl Msg {
             Msg::LeaseGrant { .. } => 25,
             Msg::RenewLease { .. } => 26,
             Msg::DropLease { .. } => 27,
+            Msg::OkFor { .. } => 28,
+            Msg::ErrFor { .. } => 29,
         }
     }
 
@@ -360,17 +396,26 @@ impl Msg {
                     p.extend_from_slice(h);
                 }
             }
-            Msg::PutBlock { hash, data } => {
+            Msg::PutBlock { req, hash, data } => {
+                p.extend_from_slice(&req.to_le_bytes());
                 p.extend_from_slice(hash);
                 p.extend_from_slice(&(data.len() as u32).to_le_bytes());
                 p.extend_from_slice(data);
             }
-            Msg::HasBlock { hash } | Msg::GetBlock { hash } | Msg::DeleteBlock { hash } => {
-                p.extend_from_slice(hash)
+            Msg::GetBlock { req, hash } => {
+                p.extend_from_slice(&req.to_le_bytes());
+                p.extend_from_slice(hash);
             }
-            Msg::Data { data } => {
+            Msg::HasBlock { hash } | Msg::DeleteBlock { hash } => p.extend_from_slice(hash),
+            Msg::Data { req, data } => {
+                p.extend_from_slice(&req.to_le_bytes());
                 p.extend_from_slice(&(data.len() as u32).to_le_bytes());
                 p.extend_from_slice(data);
+            }
+            Msg::OkFor { req } => p.extend_from_slice(&req.to_le_bytes()),
+            Msg::ErrFor { req, msg } => {
+                p.extend_from_slice(&req.to_le_bytes());
+                put_str(&mut p, msg);
             }
             Msg::Stats { blocks, bytes } => {
                 p.extend_from_slice(&blocks.to_le_bytes());
@@ -430,13 +475,20 @@ impl Msg {
                 Msg::Files { files }
             }
             6 => Msg::PutBlock {
+                req: c.u64()?,
                 hash: c.digest()?,
                 data: c.bytes()?,
             },
             7 => Msg::HasBlock { hash: c.digest()? },
-            8 => Msg::GetBlock { hash: c.digest()? },
+            8 => Msg::GetBlock {
+                req: c.u64()?,
+                hash: c.digest()?,
+            },
             9 => Msg::NodeStats,
-            10 => Msg::Data { data: c.bytes()? },
+            10 => Msg::Data {
+                req: c.u64()?,
+                data: c.bytes()?,
+            },
             11 => Msg::Stats {
                 blocks: c.u64()?,
                 bytes: c.u64()?,
@@ -516,6 +568,11 @@ impl Msg {
             },
             26 => Msg::RenewLease { lease: c.u64()? },
             27 => Msg::DropLease { lease: c.u64()? },
+            28 => Msg::OkFor { req: c.u64()? },
+            29 => Msg::ErrFor {
+                req: c.u64()?,
+                msg: c.str()?,
+            },
             t => return Err(Error::Proto(format!("unknown tag {t}"))),
         };
         if c.i != p.len() {
@@ -528,23 +585,37 @@ impl Msg {
     }
 
     /// The fixed-size prefix of a `PutBlock` frame (length prefix, tag,
-    /// hash, payload length): senders write this header and then the
-    /// payload bytes straight from their shared buffer, so replicating
-    /// a block to several nodes never deep-copies the data.
-    pub fn put_header(hash: &Digest, data_len: usize) -> [u8; 25] {
-        let mut h = [0u8; 25];
-        h[..4].copy_from_slice(&((16 + 4 + data_len) as u32 + 1).to_le_bytes());
+    /// request id, hash, payload length): senders write this header and
+    /// then the payload bytes straight from their shared buffer, so
+    /// replicating a block to several nodes never deep-copies the data.
+    pub fn put_header(req: u64, hash: &Digest, data_len: usize) -> [u8; 33] {
+        let mut h = [0u8; 33];
+        h[..4].copy_from_slice(&((8 + 16 + 4 + data_len) as u32 + 1).to_le_bytes());
         h[4] = 6; // PutBlock tag
-        h[5..21].copy_from_slice(hash);
-        h[21..25].copy_from_slice(&(data_len as u32).to_le_bytes());
+        h[5..13].copy_from_slice(&req.to_le_bytes());
+        h[13..29].copy_from_slice(hash);
+        h[29..33].copy_from_slice(&(data_len as u32).to_le_bytes());
+        h
+    }
+
+    /// The fixed-size prefix of a `Data` frame (length prefix, tag,
+    /// request id, payload length): the node's reply writer sends this
+    /// and then the payload straight from its shared block store — no
+    /// per-get frame-assembly copy.
+    pub fn data_header(req: u64, data_len: usize) -> [u8; 17] {
+        let mut h = [0u8; 17];
+        h[..4].copy_from_slice(&((8 + 4 + data_len) as u32 + 1).to_le_bytes());
+        h[4] = 10; // Data tag
+        h[5..13].copy_from_slice(&req.to_le_bytes());
+        h[13..17].copy_from_slice(&(data_len as u32).to_le_bytes());
         h
     }
 
     /// Whole `PutBlock` frame from borrowed payload (tests; hot paths
     /// use [`Msg::put_header`] + a payload write instead).
     /// Byte-identical to `Msg::PutBlock { .. }.encode()` (tested).
-    pub fn encode_put(hash: &Digest, data: &[u8]) -> Vec<u8> {
-        let mut frame = Msg::put_header(hash, data.len()).to_vec();
+    pub fn encode_put(req: u64, hash: &Digest, data: &[u8]) -> Vec<u8> {
+        let mut frame = Msg::put_header(req, hash, data.len()).to_vec();
         frame.extend_from_slice(data);
         frame
     }
@@ -785,18 +856,30 @@ mod tests {
         roundtrip(Msg::RenewLease { lease: u64::MAX });
         roundtrip(Msg::DropLease { lease: 1 });
         roundtrip(Msg::PutBlock {
+            req: 77,
             hash: [9; 16],
             data: vec![1, 2, 3],
         });
         roundtrip(Msg::HasBlock { hash: [8; 16] });
-        roundtrip(Msg::GetBlock { hash: [7; 16] });
+        roundtrip(Msg::GetBlock {
+            req: u64::MAX,
+            hash: [7; 16],
+        });
         roundtrip(Msg::NodeStats);
-        roundtrip(Msg::Data { data: vec![0; 100] });
+        roundtrip(Msg::Data {
+            req: 0,
+            data: vec![0; 100],
+        });
         roundtrip(Msg::Stats {
             blocks: 5,
             bytes: 12345,
         });
         roundtrip(Msg::Ok);
+        roundtrip(Msg::OkFor { req: 9 });
+        roundtrip(Msg::ErrFor {
+            req: 1 << 63,
+            msg: "unknown block".into(),
+        });
         roundtrip(Msg::Bool(true));
         roundtrip(Msg::Bool(false));
         roundtrip(Msg::Err("boom".into()));
@@ -807,6 +890,7 @@ mod tests {
         let msgs = vec![
             Msg::Ok,
             Msg::PutBlock {
+                req: 3,
                 hash: [1; 16],
                 data: vec![42; 1000],
             },
@@ -870,13 +954,36 @@ mod tests {
     #[test]
     fn encode_put_matches_owned_encode() {
         let hash = [0xA5u8; 16];
-        for data in [vec![], vec![7u8; 1], vec![3u8; 70_000]] {
+        for (req, data) in [
+            (0u64, vec![]),
+            (42, vec![7u8; 1]),
+            (u64::MAX, vec![3u8; 70_000]),
+        ] {
             let owned = Msg::PutBlock {
+                req,
                 hash,
                 data: data.clone(),
             }
             .encode();
-            assert_eq!(Msg::encode_put(&hash, &data), owned);
+            assert_eq!(Msg::encode_put(req, &hash, &data), owned);
+        }
+    }
+
+    #[test]
+    fn data_header_matches_owned_encode() {
+        for (req, data) in [
+            (0u64, vec![]),
+            (9, vec![1u8; 3]),
+            (u64::MAX, vec![5u8; 70_000]),
+        ] {
+            let owned = Msg::Data {
+                req,
+                data: data.clone(),
+            }
+            .encode();
+            let mut framed = Msg::data_header(req, data.len()).to_vec();
+            framed.extend_from_slice(&data);
+            assert_eq!(framed, owned);
         }
     }
 }

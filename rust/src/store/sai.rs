@@ -23,18 +23,23 @@
 //! heartbeat, so a SIGKILL'd writer's claims lapse instead of stranding
 //! blocks forever.
 //!
+//! Data-plane v2: each node link is a pipelined duplex
+//! [`DuplexClient`](super::duplex::DuplexClient) — a writer thread and
+//! a reply-reader thread over one socket, with replies matched to
+//! waiters by request id — so per-node throughput is bandwidth-bound,
+//! not RTT-bound.  See [`super::duplex`].
+//!
 //! All node links share one bandwidth [`Shaper`] — the client's NIC.
 
 use std::io::{BufReader, BufWriter, Write as _};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::mpsc::Receiver;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use super::duplex::{closed, Block, DuplexClient};
 use super::proto::{Assignment, BlockMeta, BlockSpec, Msg};
 use super::session::{FileReader, FileWriter};
 use crate::config::{CaMode, ClientConfig};
-use crate::hash::Digest;
 use crate::hashgpu::HashEngine;
 use crate::net::{Conn, Shaper};
 use crate::{Error, Result};
@@ -97,131 +102,6 @@ impl WriteReport {
     }
 }
 
-enum NodeCmd {
-    Put {
-        hash: Digest,
-        /// Shared payload: one allocation serves every replica's put.
-        data: Arc<Vec<u8>>,
-        done: Sender<Result<()>>,
-    },
-    Get {
-        hash: Digest,
-        done: Sender<Result<Vec<u8>>>,
-    },
-}
-
-/// One storage node's client: a worker thread owning the (shaped)
-/// connection, fed through a channel so puts to different nodes proceed
-/// in parallel while the SAI keeps hashing.
-pub(super) struct NodeClient {
-    tx: Sender<NodeCmd>,
-    /// Set by the worker when its transport dies (node crash/restart).
-    /// [`Sai::node`] evicts dead clients so a later registry refresh can
-    /// reconnect to a healthy rebirth of the node.
-    dead: Arc<AtomicBool>,
-}
-
-impl NodeClient {
-    fn connect(addr: &str, shaper: Option<Arc<Shaper>>) -> Result<NodeClient> {
-        // Bounded connect: a black-holed node costs 2s, not the OS SYN
-        // timeout.
-        let mut conn = Conn::connect_timeout(addr, Duration::from_secs(2))?;
-        if let Some(s) = shaper {
-            conn = conn.with_shaper(s);
-        }
-        let (tx, rx): (Sender<NodeCmd>, Receiver<NodeCmd>) = mpsc::channel();
-        let dead = Arc::new(AtomicBool::new(false));
-        let flag = dead.clone();
-        std::thread::Builder::new()
-            .name(format!("sai-node-{addr}"))
-            .spawn(move || node_worker(conn, rx, flag))
-            .map_err(Error::Io)?;
-        Ok(NodeClient { tx, dead })
-    }
-
-    fn is_dead(&self) -> bool {
-        self.dead.load(Ordering::Relaxed)
-    }
-
-    pub(super) fn put(&self, hash: Digest, data: Arc<Vec<u8>>) -> Receiver<Result<()>> {
-        let (done, rx) = mpsc::channel();
-        let _ = self.tx.send(NodeCmd::Put { hash, data, done });
-        rx
-    }
-
-    pub(super) fn get(&self, hash: Digest) -> Receiver<Result<Vec<u8>>> {
-        let (done, rx) = mpsc::channel();
-        let _ = self.tx.send(NodeCmd::Get { hash, done });
-        rx
-    }
-}
-
-/// Transport-level failure (socket dead) vs. a logical error reply the
-/// connection survives (e.g. "unknown block").
-fn transport_error<T>(r: &Result<T>) -> bool {
-    match r {
-        Err(Error::Io(_)) => true,
-        Err(Error::Node(m)) => m == "connection closed",
-        _ => false,
-    }
-}
-
-fn node_worker(conn: Conn, rx: Receiver<NodeCmd>, dead: Arc<AtomicBool>) {
-    let reader = match conn.try_clone() {
-        Ok(c) => c,
-        Err(_) => {
-            dead.store(true, Ordering::Relaxed);
-            return;
-        }
-    };
-    let mut r = BufReader::new(reader);
-    let mut w = BufWriter::with_capacity(256 * 1024, conn);
-    while let Ok(cmd) = rx.recv() {
-        let fatal = match cmd {
-            NodeCmd::Put { hash, data, done } => {
-                let res = (|| -> Result<()> {
-                    // Header + payload written separately: the payload
-                    // streams straight from the shared Arc — no frame
-                    // assembly copy per replica.
-                    w.write_all(&Msg::put_header(&hash, data.len()))?;
-                    w.write_all(&data)?;
-                    w.flush()?;
-                    match Msg::read_from(&mut r)?.ok_or_else(closed)?.into_result()? {
-                        Msg::Ok => Ok(()),
-                        m => Err(Error::Proto(format!("unexpected put reply {m:?}"))),
-                    }
-                })();
-                let fatal = transport_error(&res);
-                let _ = done.send(res);
-                fatal
-            }
-            NodeCmd::Get { hash, done } => {
-                let res = (|| -> Result<Vec<u8>> {
-                    Msg::GetBlock { hash }.write_to(&mut w)?;
-                    w.flush()?;
-                    match Msg::read_from(&mut r)?.ok_or_else(closed)?.into_result()? {
-                        Msg::Data { data } => Ok(data),
-                        m => Err(Error::Proto(format!("unexpected get reply {m:?}"))),
-                    }
-                })();
-                let fatal = transport_error(&res);
-                let _ = done.send(res);
-                fatal
-            }
-        };
-        if fatal {
-            // The socket is gone; mark dead and exit.  Queued commands'
-            // reply senders drop, so waiters observe `closed()`.
-            dead.store(true, Ordering::Relaxed);
-            break;
-        }
-    }
-}
-
-pub(super) fn closed() -> Error {
-    Error::Node("connection closed".into())
-}
-
 /// The SAI client.
 pub struct Sai {
     pub(super) cfg: ClientConfig,
@@ -236,7 +116,7 @@ pub struct Sai {
     /// puts targeting it fail the write).  Refreshed from the manager's
     /// registry when a placement names an id this client has no link
     /// for (nodes can join after the client connected).
-    nodes: Mutex<Vec<Option<Arc<NodeClient>>>>,
+    nodes: Mutex<Vec<Option<Arc<DuplexClient>>>>,
     /// NIC shaper applied to (re)connected node links.
     shaper: Option<Arc<Shaper>>,
     /// Throttle for registry refreshes triggered by unknown/down nodes.
@@ -311,7 +191,9 @@ impl Sai {
                 .collect()
         };
         for (idx, addr) in missing {
-            if let Ok(client) = NodeClient::connect(&addr, self.shaper.clone()) {
+            if let Ok(client) =
+                DuplexClient::connect(&addr, self.shaper.clone(), self.cfg.node_inflight)
+            {
                 let mut nodes = self.nodes.lock().unwrap();
                 if nodes[idx].is_none() {
                     nodes[idx] = Some(Arc::new(client));
@@ -345,7 +227,7 @@ impl Sai {
     /// placed on a node that joined after we last looked) and always
     /// refreshes; reconnect attempts for known-but-down nodes are
     /// rate-limited instead.
-    pub(super) fn node(&self, id: u32) -> Result<Arc<NodeClient>> {
+    pub(super) fn node(&self, id: u32) -> Result<Arc<DuplexClient>> {
         let known = {
             let mut nodes = self.nodes.lock().unwrap();
             if let Some(n) = nodes.get(id as usize).and_then(Option::clone) {
@@ -531,12 +413,13 @@ impl Sai {
         let mut ok = 0;
         let mut bad = 0;
         // (meta index, receiver) per reachable copy; unreachable copies
-        // are counted bad immediately.
-        let mut rxs: Vec<(usize, Receiver<Result<Vec<u8>>>)> = Vec::new();
+        // (no link, or a link that is already dead) are counted bad
+        // immediately — the duplex client errs eagerly.
+        let mut rxs: Vec<(usize, Receiver<Result<Block>>)> = Vec::new();
         for (i, b) in blocks.iter().enumerate() {
             for &id in &b.replicas {
-                match self.node(id) {
-                    Ok(n) => rxs.push((i, n.get(b.hash))),
+                match self.node(id).and_then(|n| n.get(b.hash)) {
+                    Ok(rx) => rxs.push((i, rx)),
                     Err(_) => bad += 1,
                 }
             }
@@ -557,18 +440,5 @@ impl Sai {
             }
         }
         Ok((ok, bad))
-    }
-
-    /// Transfer-parallelism window: how many puts/prefetches the client
-    /// keeps in flight (bounded by the connected node count).
-    pub(super) fn stripe(&self) -> usize {
-        let connected = self
-            .nodes
-            .lock()
-            .unwrap()
-            .iter()
-            .filter(|n| n.is_some())
-            .count();
-        self.cfg.stripe_width.min(connected).max(1)
     }
 }

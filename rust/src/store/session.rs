@@ -34,6 +34,20 @@
 //! bytes to exactly `write_buffer`-sized batches internally, so a file
 //! streamed in arbitrary splits produces a block-map byte-identical to
 //! a one-shot [`super::Sai::write_file`] (property-tested).
+//!
+//! Data-plane v2 (pipelined duplex): node operations stream over
+//! [`DuplexClient`](super::duplex::DuplexClient) links that keep many
+//! requests in flight per socket, so the session no longer meters
+//! transfers by *count* (the old `2 × stripe` window).  Both directions
+//! are governed by one **in-flight-bytes budget**
+//! (`ClientConfig::inflight_budget`): the writer stops accepting new
+//! batches once that many payload bytes are unacknowledged (each
+//! replica copy counted once — what is actually buffered on the wire),
+//! and the reader prefetches ahead of the consumer only up to the same
+//! budget.  Deep pipelines get bandwidth-bound throughput without
+//! ballooning memory; a budget smaller than one block degenerates to
+//! one operation at a time, never a deadlock (the over-budget operation
+//! is already on the wire when the session waits for it).
 
 use std::collections::VecDeque;
 use std::io::{Read, Write};
@@ -43,8 +57,9 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use super::duplex::{closed, Block};
 use super::proto::{BlockMeta, BlockSpec, Msg};
-use super::sai::{closed, Sai, WriteReport};
+use super::sai::{Sai, WriteReport};
 use crate::chunking::ContentChunker;
 use crate::config::CaMode;
 use crate::hash::{md5, Digest};
@@ -189,8 +204,13 @@ pub struct FileWriter<'a> {
     /// Bytes accumulated toward the next `write_buffer`-sized batch.
     buf: Vec<u8>,
     metas: Vec<BlockMeta>,
-    /// Outstanding node-put acknowledgements.
-    pending: Vec<Receiver<Result<()>>>,
+    /// Outstanding node-put acknowledgements, oldest first, each with
+    /// the payload bytes it holds on the wire (one entry per replica
+    /// copy).
+    pending: VecDeque<(u64, Receiver<Result<()>>)>,
+    /// Total unacknowledged put bytes — held at or under
+    /// `ClientConfig::inflight_budget` by [`FileWriter::reclaim_to`].
+    inflight_bytes: u64,
     /// The previous buffer's digest batch, still being hashed.
     inflight: Option<Inflight>,
     committed: bool,
@@ -241,7 +261,8 @@ impl<'a> FileWriter<'a> {
             mode,
             buf: Vec::with_capacity(sai.cfg.write_buffer),
             metas: Vec::new(),
-            pending: Vec::new(),
+            pending: VecDeque::new(),
+            inflight_bytes: 0,
             inflight: None,
             committed: false,
             report: WriteReport::default(),
@@ -321,7 +342,7 @@ impl<'a> FileWriter<'a> {
             self.resolve(Some(Inflight { blocks, ticket }))?;
         }
         // Wait for all outstanding transfers.
-        self.collect_window(0)?;
+        self.reclaim_to(0)?;
 
         match self.sai.manager_call(Msg::CommitBlockMap {
             file: self.name.clone(),
@@ -492,10 +513,11 @@ impl<'a> FileWriter<'a> {
             if asg.fresh || always_transfer {
                 // The payload moves into one shared allocation serving
                 // every replica — no copies on the transfer path.
-                let payload = Arc::new(data);
+                let payload: Block = Arc::new(data);
                 for &id in &asg.replicas {
-                    self.pending
-                        .push(self.sai.node(id)?.put(*digest, payload.clone()));
+                    let rx = self.sai.node(id)?.put(*digest, payload.clone())?;
+                    self.pending.push_back((len as u64, rx));
+                    self.inflight_bytes += len as u64;
                 }
                 self.report.new_blocks += 1;
                 self.report.new_payload_bytes += len as u64;
@@ -510,13 +532,25 @@ impl<'a> FileWriter<'a> {
                 replicas: asg.replicas,
             });
         }
-        self.collect_window(2 * self.sai.stripe())
+        self.reclaim_to(self.sai.cfg.inflight_budget as u64)
     }
 
-    /// Await acks until at most `max_left` puts remain outstanding.
-    fn collect_window(&mut self, max_left: usize) -> Result<()> {
-        while self.pending.len() > max_left {
-            let rx = self.pending.remove(0);
+    /// Await acks (oldest first) until at most `max_bytes` of put
+    /// payload remain unacknowledged.  With the duplex links keeping
+    /// many requests on the wire per node, this byte budget is the
+    /// session's only transfer flow control: it bounds buffered memory
+    /// without capping pipeline depth the way the old
+    /// `2 × stripe`-operation window did.  A single block larger than
+    /// the budget is admitted (it is already on the wire when we get
+    /// here) and then immediately awaited — degenerating to lock-step,
+    /// never deadlocking.
+    fn reclaim_to(&mut self, max_bytes: u64) -> Result<()> {
+        // `max_bytes == 0` is the full drain (commit barrier): every
+        // ack must land, even a hypothetical zero-length one the byte
+        // count alone would never pop.
+        while self.inflight_bytes > max_bytes || (max_bytes == 0 && !self.pending.is_empty()) {
+            let (len, rx) = self.pending.pop_front().expect("inflight accounting");
+            self.inflight_bytes -= len;
             rx.recv().map_err(|_| closed())??;
         }
         Ok(())
@@ -537,7 +571,7 @@ impl Drop for FileWriter<'_> {
             // (claims a dead manager can't release lapse via lease
             // expiry once it restarts... or cost nothing if it never
             // does).
-            for rx in self.pending.drain(..) {
+            for (_, rx) in self.pending.drain(..) {
                 let _ = rx.recv_timeout(Duration::from_secs(5));
             }
             self.sai.drop_lease(self.lease);
@@ -587,14 +621,19 @@ pub struct FileReader<'a> {
     next_fetch: usize,
     /// Next block index to hand to the consumer.
     next_read: usize,
-    /// Outstanding fetches, in block order: (replica id tried, rx).
+    /// Outstanding fetches, in block order: (replica id tried, whether
+    /// that already was a non-primary re-route, block bytes, rx).
     /// `id == u32::MAX` marks a block with no reachable replica at
     /// prefetch time (resolved — or failed — via failover).
-    rxs: VecDeque<(u32, Receiver<Result<Vec<u8>>>)>,
+    rxs: VecDeque<(u32, bool, u64, Receiver<Result<Block>>)>,
+    /// Total bytes of outstanding prefetches — held at or under
+    /// `ClientConfig::inflight_budget`.
+    inflight_bytes: u64,
     /// Blocks served from a non-primary replica (failover events).
     failovers: usize,
-    /// Current block being drained by `read`.
-    cur: Vec<u8>,
+    /// Current block being drained by `read` (shared with the node
+    /// link's reader — no per-block copy on the way here).
+    cur: Block,
     cur_off: usize,
     /// Once a block fails on EVERY replica the session is poisoned:
     /// fetch/read bookkeeping is no longer aligned, so all further
@@ -621,8 +660,9 @@ impl<'a> FileReader<'a> {
             next_fetch: 0,
             next_read: 0,
             rxs: VecDeque::new(),
+            inflight_bytes: 0,
             failovers: 0,
-            cur: Vec::new(),
+            cur: Arc::new(Vec::new()),
             cur_off: 0,
             failed: false,
         };
@@ -650,8 +690,12 @@ impl<'a> FileReader<'a> {
         self.blocks.len()
     }
 
-    /// Blocks that were served from a fallback replica after the first
-    /// attempt failed (node down or copy corrupt).
+    /// Blocks *served* from a fallback replica — because a fetch
+    /// attempt failed mid-flight, or because the primary's link was
+    /// already known dead when the prefetch was issued (eager death
+    /// detection on the duplex links routes around a down node before
+    /// wasting a request on it).  Each block counts at most once, and
+    /// only when it was actually served.
     pub fn failover_count(&self) -> usize {
         self.failovers
     }
@@ -675,24 +719,40 @@ impl<'a> FileReader<'a> {
         }
     }
 
-    /// Keep up to `2 * stripe` fetches outstanding ahead of the reader.
-    /// Each block is requested from its first *connected* replica;
-    /// blocks with no connected replica enter the queue as immediate
-    /// failures and are retried (and properly diagnosed) by the
-    /// failover path.
+    /// Keep fetches outstanding ahead of the reader, up to the
+    /// session's in-flight-bytes budget (always at least one, so a
+    /// block larger than the whole budget still streams — one at a
+    /// time).  Each block is requested from its first *connected*
+    /// replica; blocks with no connected replica enter the queue as
+    /// immediate failures and are retried (and properly diagnosed) by
+    /// the failover path.  The duplex node links pipeline these
+    /// requests on the wire, so a deep budget keeps every replica NIC
+    /// busy instead of paying one RTT per block.
     fn prefetch(&mut self) {
-        let window = 2 * self.sai.stripe().max(1);
-        while self.next_fetch < self.blocks.len() && self.rxs.len() < window {
+        let budget = self.sai.cfg.inflight_budget as u64;
+        while self.next_fetch < self.blocks.len() {
             let b = &self.blocks[self.next_fetch];
+            if !self.rxs.is_empty() && self.inflight_bytes + b.len as u64 > budget {
+                break;
+            }
+            let primary = b.primary();
             let entry = b
                 .replicas
                 .iter()
-                .find_map(|&id| self.sai.node(id).ok().map(|n| (id, n.get(b.hash))))
+                .find_map(|&id| {
+                    let rx = self.sai.node(id).ok()?.get(b.hash).ok()?;
+                    // Routing around a known-dead primary IS a
+                    // failover, just detected before the wasted
+                    // request; it is counted when the block is served.
+                    let rerouted = Some(id) != primary;
+                    Some((id, rerouted, b.len as u64, rx))
+                })
                 .unwrap_or_else(|| {
                     // No replica reachable: a receiver whose sender is
                     // gone yields an immediate RecvError downstream.
-                    (u32::MAX, std::sync::mpsc::channel().1)
+                    (u32::MAX, false, b.len as u64, std::sync::mpsc::channel().1)
                 });
+            self.inflight_bytes += entry.2;
             self.rxs.push_back(entry);
             self.next_fetch += 1;
         }
@@ -703,7 +763,7 @@ impl<'a> FileReader<'a> {
     /// the block failed; it poisons the session and subsequent calls
     /// keep failing rather than serving blocks misaligned with their
     /// metadata.
-    pub fn next_block(&mut self) -> Result<Option<Vec<u8>>> {
+    pub fn next_block(&mut self) -> Result<Option<Block>> {
         if self.failed {
             return Err(Error::Node("read session failed earlier".into()));
         }
@@ -736,11 +796,12 @@ impl<'a> FileReader<'a> {
         Ok(())
     }
 
-    fn next_block_inner(&mut self) -> Result<Option<Vec<u8>>> {
+    fn next_block_inner(&mut self) -> Result<Option<Block>> {
         if self.next_read >= self.blocks.len() {
             return Ok(None);
         }
-        let (tried, rx) = self.rxs.pop_front().expect("prefetch invariant");
+        let (tried, rerouted, len, rx) = self.rxs.pop_front().expect("prefetch invariant");
+        self.inflight_bytes -= len;
         let primary = rx
             .recv()
             .map_err(|_| closed())
@@ -750,19 +811,22 @@ impl<'a> FileReader<'a> {
                 Ok(data)
             });
         let data = match primary {
-            Ok(data) => data,
+            Ok(data) => {
+                if rerouted {
+                    // Served from a fallback replica the prefetch
+                    // already routed to (primary link known dead).
+                    self.failovers += 1;
+                }
+                data
+            }
             Err(first_err) => {
                 // Failover: try the remaining replicas synchronously.
                 let meta = self.blocks[self.next_read].clone();
                 let mut last_err = first_err;
                 let mut found = None;
                 for &id in meta.replicas.iter().filter(|&&id| id != tried) {
-                    let res = match self.sai.node(id) {
-                        Ok(n) => n
-                            .get(meta.hash)
-                            .recv()
-                            .map_err(|_| closed())
-                            .and_then(|r| r),
+                    let res = match self.sai.node(id).and_then(|n| n.get(meta.hash)) {
+                        Ok(rx) => rx.recv().map_err(|_| closed()).and_then(|r| r),
                         Err(e) => Err(e),
                     };
                     match res.and_then(|data| {

@@ -250,14 +250,128 @@ fn dropped_reader_unpins_immediately() {
     assert_eq!(bytes, 128 * 1024, "no stale pins defer the overwrite GC");
 }
 
+/// Data-plane v2: a node dying with a DEEP pipeline of puts in flight
+/// (duplex links, many unacknowledged operations) fails the write
+/// cleanly — every outstanding waiter observes an error, no hang — and
+/// once the session's lease lapses, zero pending claims are stranded.
+#[test]
+fn node_death_mid_pipeline_fails_waiters_and_strands_nothing() {
+    // 100 ms reply delay line: every put's ack is still in flight when
+    // the node dies, so the kill lands mid-pipeline by construction.
+    let mut cluster = Cluster::spawn(ClusterConfig {
+        nodes: 4,
+        link_bps: 1e9,
+        shape: false,
+        replication: 1,
+        lease_timeout: LEASE,
+        node_rtt: Duration::from_millis(100),
+        ..ClusterConfig::default()
+    })
+    .unwrap();
+    // Deep pipeline: 16 ops per node, a budget far beyond the file.
+    let cfg = ClientConfig {
+        block_size: 64 * 1024,
+        write_buffer: 256 * 1024,
+        node_inflight: 16,
+        inflight_budget: 64 << 20,
+        ..ClientConfig::default()
+    };
+    let engine = Arc::new(CpuEngine::new(4, 4096, WindowHashMode::Rolling));
+    let sai = cluster.client(cfg, engine).unwrap();
+
+    // 2 MB = 32 blocks round-robined over 4 nodes.  With the deep
+    // budget, write_all enqueues everything without waiting for a
+    // single ack — dozens of puts are unacknowledged when it returns.
+    let mut w = sai.create("deep.bin").unwrap();
+    assert!(w.lease() != 0);
+    w.write_all(&Rng::new(51).bytes(2 << 20)).unwrap();
+
+    // Kill one stripe node while all those acks are still in flight.
+    cluster.kill_node(1);
+
+    // close() drains the pipeline: the dead node's waiters observe an
+    // error (never a hang) and the commit fails cleanly.
+    let err = w.close();
+    assert!(err.is_err(), "commit over a dead node must fail");
+    let (version, _) = sai.get_block_map("deep.bin").unwrap();
+    assert_eq!(version, 0, "nothing committed");
+
+    // The aborted session's drop released its claims; after the lease
+    // window nothing is stranded either way.
+    Hiccup::lapse_leases(&cluster);
+    let stats = cluster.manager().state().block_stats();
+    assert_eq!(stats.pending_claims, 0, "zero stranded pending claims");
+    assert_eq!(stats.write_leases, 0, "no leaked write lease");
+}
+
+/// Data-plane v2, read side: a replicated file's reader with a deep
+/// prefetch pipeline survives its primary node dying mid-read — the
+/// in-flight waiters on the dead link observe `closed` (not a hang)
+/// and every affected block fails over to the surviving replica,
+/// byte-exact.  The nodes' reply delay line (100 ms fabric model)
+/// makes "mid-pipeline" deterministic: the kill lands while every
+/// prefetched reply is still in flight, before any could be delivered.
+#[test]
+fn node_death_mid_pipeline_read_fails_over() {
+    let mut cluster = Cluster::spawn(ClusterConfig {
+        nodes: 4,
+        link_bps: 1e9,
+        shape: false,
+        replication: 2,
+        lease_timeout: LEASE,
+        node_rtt: Duration::from_millis(100),
+        ..ClusterConfig::default()
+    })
+    .unwrap();
+    let cfg = ClientConfig {
+        block_size: 64 * 1024,
+        write_buffer: 256 * 1024,
+        node_inflight: 16,
+        inflight_budget: 64 << 20, // the whole file prefetches at once
+        ..ClientConfig::default()
+    };
+    let engine = Arc::new(CpuEngine::new(4, 4096, WindowHashMode::Rolling));
+    let sai = cluster.client(cfg, engine).unwrap();
+    let data = Rng::new(52).bytes(2 << 20); // 32 blocks
+    sai.write_file("failover.bin", &data).unwrap();
+
+    let (_, map) = sai.get_block_map("failover.bin").unwrap();
+    // Opening prefetches a get for EVERY block (deep budget); none of
+    // the replies is due for another 100 ms.  Kill the primary of
+    // block 0 now: its in-flight replies die with the socket.
+    let mut r = sai.open("failover.bin").unwrap();
+    let victim = map[0].primary().unwrap() as usize;
+    cluster.kill_node(victim);
+
+    let mut got = Vec::new();
+    r.read_to_end(&mut got).unwrap();
+    assert_eq!(got, data, "mid-pipeline failover must stay byte-exact");
+    assert!(
+        r.failover_count() > 0,
+        "the dead primary's blocks must have failed over"
+    );
+}
+
 /// A reader that vanishes without dropping lapses by expiry: its pins
 /// release, a subsequent overwrite's GC deletes the old blocks, and the
 /// zombie session's late reads fail instead of serving deleted data.
 #[test]
 fn expired_read_lease_unpins_and_zombie_reader_errors() {
     let cluster = lease_cluster();
-    let sai = client(&cluster);
-    let v1 = Rng::new(21).bytes(2 << 20); // 32 blocks >> prefetch window
+    // Small in-flight budget: only a few blocks prefetch ahead of the
+    // consumer, so the tail of the file is still UNfetched when the
+    // lease lapses — the zombie must then fail on a reclaimed block.
+    // (With a deep budget the whole file would already be in flight,
+    // and serving it would be legitimate snapshot semantics.)
+    let cfg = ClientConfig {
+        block_size: 64 * 1024,
+        write_buffer: 256 * 1024,
+        inflight_budget: 256 * 1024,
+        ..ClientConfig::default()
+    };
+    let engine = Arc::new(CpuEngine::new(4, 4096, WindowHashMode::Rolling));
+    let sai = cluster.client(cfg, engine).unwrap();
+    let v1 = Rng::new(21).bytes(2 << 20); // 32 blocks >> prefetch budget
     sai.write_file("zombie.bin", &v1).unwrap();
     let mut r = sai.open("zombie.bin").unwrap();
 

@@ -200,11 +200,30 @@ fn prop_proto_roundtrip() {
                 hashes: blocks.iter().map(|b| b.hash).collect(),
             },
             Msg::PutBlock {
+                req: rng.next_u64(),
                 hash: [seed as u8; 16],
                 data: {
                     let n = rng.range(0, 3000);
                     rng.bytes(n)
                 },
+            },
+            Msg::GetBlock {
+                req: rng.next_u64(),
+                hash: [seed as u8; 16],
+            },
+            Msg::Data {
+                req: rng.next_u64(),
+                data: {
+                    let n = rng.range(0, 2000);
+                    rng.bytes(n)
+                },
+            },
+            Msg::OkFor {
+                req: rng.next_u64(),
+            },
+            Msg::ErrFor {
+                req: rng.next_u64(),
+                msg: format!("errfor-{seed}"),
             },
             Msg::Err(format!("err-{seed}")),
         ];
@@ -457,13 +476,20 @@ fn prop_proto_truncation_robustness() {
             files: vec![("a".into(), 1), ("b".into(), 2)],
         },
         Msg::PutBlock {
+            req: 1,
             hash: [4; 16],
             data: vec![9; 100],
         },
         Msg::HasBlock { hash: [5; 16] },
-        Msg::GetBlock { hash: [6; 16] },
+        Msg::GetBlock {
+            req: 2,
+            hash: [6; 16],
+        },
         Msg::NodeStats,
-        Msg::Data { data: vec![7; 50] },
+        Msg::Data {
+            req: 3,
+            data: vec![7; 50],
+        },
         Msg::Stats { blocks: 1, bytes: 2 },
         Msg::Ok,
         Msg::Bool(true),
@@ -506,11 +532,16 @@ fn prop_proto_truncation_robustness() {
         },
         Msg::RenewLease { lease: 14 },
         Msg::DropLease { lease: 15 },
+        Msg::OkFor { req: 16 },
+        Msg::ErrFor {
+            req: 17,
+            msg: "unknown block".into(),
+        },
     ];
     // Every tag is represented exactly once.
     let mut tags: Vec<u8> = msgs.iter().map(|m| m.encode()[4]).collect();
     tags.sort_unstable();
-    assert_eq!(tags, (1..=27).collect::<Vec<u8>>(), "tag coverage");
+    assert_eq!(tags, (1..=29).collect::<Vec<u8>>(), "tag coverage");
 
     for m in &msgs {
         let frame = m.encode();
@@ -584,6 +615,208 @@ fn prop_lease_id_roundtrip() {
             let got = Msg::decode(f[4], &f[5..]).unwrap();
             assert_eq!(got, m, "lease id {lease:#x} mangled on the wire");
         }
+    }
+}
+
+/// SATELLITE (data-plane v2): request ids are opaque u64s matching
+/// pipelined replies to their waiters and must survive the wire
+/// bit-exact in every tagged data-plane frame — including 0, u64::MAX,
+/// and every byte pattern the LE encoding could mangle.
+#[test]
+fn prop_req_id_roundtrip() {
+    let mut rng = Rng::new(0xD00D);
+    let mut ids = vec![0u64, 1, u64::MAX, u64::MAX - 1, 1 << 63, 0x0102_0304_0506_0708];
+    for _ in 0..CASES {
+        ids.push(rng.next_u64());
+    }
+    for &req in &ids {
+        let msgs = [
+            Msg::PutBlock {
+                req,
+                hash: [7; 16],
+                data: vec![1, 2, 3],
+            },
+            Msg::GetBlock { req, hash: [8; 16] },
+            Msg::Data {
+                req,
+                data: vec![9; 30],
+            },
+            Msg::OkFor { req },
+            Msg::ErrFor {
+                req,
+                msg: "x".into(),
+            },
+        ];
+        for m in msgs {
+            let f = m.encode();
+            let got = Msg::decode(f[4], &f[5..]).unwrap();
+            assert_eq!(got, m, "req id {req:#x} mangled on the wire");
+        }
+        // And the streaming put header is byte-identical to the owned
+        // encoding for every id.
+        assert_eq!(
+            Msg::encode_put(req, &[7; 16], &[1, 2, 3]),
+            Msg::PutBlock {
+                req,
+                hash: [7; 16],
+                data: vec![1, 2, 3]
+            }
+            .encode()
+        );
+    }
+}
+
+/// PROPERTY (pipelining correctness, wire level): N interleaved
+/// in-flight puts/gets against a node that replies in a *shuffled*
+/// order resolve every waiter with exactly its own payload — the
+/// request-id matching can never misattribute a reply, regardless of
+/// reply order, op mix, or pipeline depth.
+#[test]
+fn prop_duplex_shuffled_reply_matching() {
+    use gpustore::net::Listener;
+    use gpustore::store::DuplexClient;
+
+    // The payload a get of `hash` must resolve to — derived from the
+    // hash so the scripted server and the checking client agree without
+    // sharing state.
+    fn payload_for(hash: &[u8; 16]) -> Vec<u8> {
+        vec![hash[0] ^ 0x5A; 1 + hash[1] as usize]
+    }
+
+    for seed in 1100..1100 + 12 {
+        let mut rng = Rng::new(seed);
+        let n = rng.range(1, 40);
+        let mut order: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = rng.range(0, i + 1);
+            order.swap(i, j);
+        }
+        let l = Listener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let mut c = l.accept().unwrap();
+            let mut reqs = Vec::new();
+            for _ in 0..n {
+                reqs.push(Msg::read_from(&mut c).unwrap().unwrap());
+            }
+            for &i in &order {
+                let reply = match &reqs[i] {
+                    Msg::PutBlock { req, .. } => Msg::OkFor { req: *req },
+                    Msg::GetBlock { req, hash } => Msg::Data {
+                        req: *req,
+                        data: payload_for(hash),
+                    },
+                    m => panic!("unexpected data-plane frame {m:?}"),
+                };
+                reply.write_to(&mut c).unwrap();
+            }
+        });
+        // Depth >= n so every request is on the wire before any reply.
+        let client = DuplexClient::connect(&addr, None, n).unwrap();
+        enum Want {
+            Put(std::sync::mpsc::Receiver<gpustore::Result<()>>),
+            Get(
+                std::sync::mpsc::Receiver<gpustore::Result<Arc<Vec<u8>>>>,
+                Vec<u8>,
+            ),
+        }
+        let mut pending = Vec::new();
+        for k in 0..n {
+            let mut hash = [0u8; 16];
+            rng.fill(&mut hash);
+            hash[2] = k as u8; // distinct per op
+            if rng.next_u64() % 2 == 0 {
+                let n = rng.range(0, 2000);
+                let body = rng.bytes(n);
+                pending.push(Want::Put(client.put(hash, Arc::new(body)).unwrap()));
+            } else {
+                pending.push(Want::Get(
+                    client.get(hash).unwrap(),
+                    payload_for(&hash),
+                ));
+            }
+        }
+        for (k, want) in pending.into_iter().enumerate() {
+            match want {
+                Want::Put(rx) => {
+                    rx.recv().unwrap().unwrap_or_else(|e| panic!("seed={seed} op {k}: {e}"))
+                }
+                Want::Get(rx, expect) => {
+                    let got = rx
+                        .recv()
+                        .unwrap()
+                        .unwrap_or_else(|e| panic!("seed={seed} op {k}: {e}"));
+                    assert_eq!(&*got, &expect, "seed={seed} op {k} misattributed reply");
+                }
+            }
+        }
+        server.join().unwrap();
+    }
+}
+
+/// PROPERTY (pipelining correctness, end to end): concurrent write and
+/// read sessions interleaved over the same duplex node links — under
+/// random pipeline depths and in-flight budgets — commit and read back
+/// byte-exact.
+#[test]
+fn prop_pipelined_sessions_interleaved_byte_exact() {
+    use gpustore::config::{ClientConfig, ClusterConfig};
+    use gpustore::hashgpu::{CpuEngine, WindowHashMode};
+    use std::io::{Read as _, Write as _};
+
+    let cluster = gpustore::store::Cluster::spawn(ClusterConfig {
+        nodes: 3,
+        link_bps: 1e9,
+        shape: false,
+        replication: 1,
+        ..ClusterConfig::default()
+    })
+    .unwrap();
+    for seed in 1200..1206 {
+        let mut rng = Rng::new(seed);
+        let cfg = ClientConfig {
+            block_size: 16 * 1024,
+            write_buffer: 64 * 1024,
+            node_inflight: rng.range(1, 9),
+            // From sub-block (degenerates to lock-step) to deep.
+            inflight_budget: [8 * 1024, 64 * 1024, 4 << 20][rng.range(0, 3)],
+            ..ClientConfig::default()
+        };
+        let engine = Arc::new(CpuEngine::new(2, 4096, WindowHashMode::Rolling));
+        let sai = cluster.client(cfg, engine).unwrap();
+
+        let old_len = rng.range(1, 400_000);
+        let old = rng.bytes(old_len);
+        sai.write_file(&format!("ilv-old-{seed}"), &old).unwrap();
+        let new_len = rng.range(1, 400_000);
+        let new = rng.bytes(new_len);
+
+        // Interleave: stream `new` out while streaming `old` back in,
+        // so puts and gets share the node links' pipelines.
+        let mut w = sai.create(&format!("ilv-new-{seed}")).unwrap();
+        let mut r = sai.open(&format!("ilv-old-{seed}")).unwrap();
+        let mut got = Vec::new();
+        let mut off = 0;
+        let mut buf = vec![0u8; 30_000];
+        while off < new.len() || got.len() < old.len() {
+            if off < new.len() {
+                let take = rng.range(1, 50_000).min(new.len() - off);
+                w.write_all(&new[off..off + take]).unwrap();
+                off += take;
+            }
+            if got.len() < old.len() {
+                let n = r.read(&mut buf).unwrap();
+                got.extend_from_slice(&buf[..n]);
+            }
+        }
+        r.read_to_end(&mut got).unwrap();
+        assert_eq!(got, old, "seed={seed} read path");
+        w.close().unwrap();
+        assert_eq!(
+            sai.read_file(&format!("ilv-new-{seed}")).unwrap(),
+            new,
+            "seed={seed} write path"
+        );
     }
 }
 

@@ -387,6 +387,33 @@ fn multiple_files_coexist() {
 }
 
 #[test]
+fn data_plane_knobs_roundtrip_at_extremes() {
+    // The same data round-trips at every corner of the data-plane
+    // config space: lock-step (depth 1), deep pipelines, and budgets
+    // from sub-block (degenerates to one op at a time) to
+    // larger-than-file.
+    let cluster = small_cluster();
+    let data = Rng::new(60).bytes(900_000);
+    for (depth, budget) in [
+        (1usize, 16 * 1024usize), // lock-step, sub-block budget
+        (1, 64 << 20),
+        (8, 64 * 1024),
+        (32, 64 << 20), // deep pipe, budget >> file
+    ] {
+        let cfg = ClientConfig {
+            node_inflight: depth,
+            inflight_budget: budget,
+            ..fixed_cfg()
+        };
+        let sai = cluster.client(cfg, cpu_engine()).unwrap();
+        let name = format!("knobs-{depth}-{budget}");
+        let rep = sai.write_file(&name, &data).unwrap();
+        assert_eq!(rep.bytes, data.len() as u64, "{name}");
+        assert_eq!(sai.read_file(&name).unwrap(), data, "{name}");
+    }
+}
+
+#[test]
 fn shaped_cluster_still_correct() {
     // With the 1 Gbps shaper on, writes still round-trip (slower).
     let cluster = Cluster::spawn(ClusterConfig {
@@ -423,6 +450,7 @@ fn verify_file_detects_corruption() {
     let node = &cluster.node_addrs()[victim.primary().unwrap() as usize];
     let mut c = gpustore::net::Conn::connect(node).unwrap();
     Msg::PutBlock {
+        req: 1,
         hash: victim.hash,
         data: vec![0xEE; victim.len as usize],
     }
@@ -430,7 +458,7 @@ fn verify_file_detects_corruption() {
     .unwrap();
     assert!(matches!(
         Msg::read_from(&mut c).unwrap().unwrap(),
-        Msg::Ok
+        Msg::OkFor { req: 1 }
     ));
 
     let (ok, bad) = sai.verify_file("scrub.bin").unwrap();
