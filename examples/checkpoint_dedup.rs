@@ -17,7 +17,8 @@ use std::io::{Read, Write};
 use std::sync::Arc;
 
 use gpustore::config::{CaMode, ClientConfig, ClusterConfig};
-use gpustore::hashgpu::{build_engine, CpuEngine, WindowHashMode};
+use gpustore::hashgpu::{CpuEngine, WindowHashMode};
+use gpustore::hashsvc::session_engine;
 use gpustore::metrics::Table;
 use gpustore::store::Cluster;
 use gpustore::util::human_bytes;
@@ -84,7 +85,8 @@ fn main() -> gpustore::Result<()> {
     ] {
         let cfg = cfg_for(mode, gpu);
         let engine: Arc<dyn gpustore::hashgpu::HashEngine> = if gpu {
-            build_engine(&cfg, None)? // PJRT-backed crystal runtime
+            // PJRT-backed crystal runtime, via the shared hash service.
+            session_engine(&cfg, None)?
         } else if mode == CaMode::Cdc {
             // CPU CDC baseline: the paper's MD5-per-window implementation
             // is the honest (slow) comparator.

@@ -11,7 +11,8 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use gpustore::config::{ClientConfig, ClusterConfig};
-use gpustore::hashgpu::{build_engine, CpuEngine, WindowHashMode};
+use gpustore::hashgpu::{CpuEngine, WindowHashMode};
+use gpustore::hashsvc::session_engine;
 use gpustore::metrics::Table;
 use gpustore::store::{Cluster, Sai, WriteReport};
 use gpustore::workload::{different_files, ComputeBoundApp, IoBoundApp};
@@ -58,10 +59,13 @@ fn main() -> gpustore::Result<()> {
         ("CA-CPU", ClientConfig::ca_cpu_fixed(cores), true),
         ("CA-GPU", ClientConfig::ca_gpu_fixed(), false),
     ] {
+        // CPU arms keep a dedicated rolling-window engine (the study
+        // isolates per-engine CPU cost); the GPU arm goes through the
+        // shared hash service, as the storage clients now do.
         let engine: Arc<dyn gpustore::hashgpu::HashEngine> = if cpu_engine {
             Arc::new(CpuEngine::new(cores, cfg.segment_bytes, WindowHashMode::Rolling))
         } else {
-            build_engine(&cfg, None)?
+            session_engine(&cfg, None)?
         };
         let sai = cluster.client(cfg, engine)?;
 

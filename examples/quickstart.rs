@@ -14,7 +14,7 @@
 use std::io::{Read, Write};
 
 use gpustore::config::{ClientConfig, ClusterConfig};
-use gpustore::hashgpu::build_engine;
+use gpustore::hashsvc::session_engine;
 use gpustore::store::Cluster;
 use gpustore::util::{human_bytes, Rng};
 
@@ -28,9 +28,11 @@ fn main() -> gpustore::Result<()> {
     );
 
     // 2. A CA-GPU client: fixed 1 MB blocks, hashing offloaded through
-    //    crystal to the compiled Pallas artifacts.
+    //    crystal to the compiled Pallas artifacts.  The engine is a
+    //    handle onto the process-wide shared hash service, so every
+    //    session in this example coalesces into one device queue.
     let cfg = ClientConfig::ca_gpu_fixed();
-    let engine = build_engine(&cfg, None)?;
+    let engine = session_engine(&cfg, None)?;
     let sai = cluster.client(cfg, engine)?;
     println!("client: engine={}", sai.engine().name());
 
@@ -91,7 +93,7 @@ fn main() -> gpustore::Result<()> {
         ..ClusterConfig::default()
     })?;
     let cfg = ClientConfig::ca_gpu_fixed();
-    let engine = build_engine(&cfg, None)?;
+    let engine = session_engine(&cfg, None)?;
     let rsai = rcluster.client(cfg, engine)?;
     let r3 = rsai.write_file("demo.bin", &data)?;
     println!(

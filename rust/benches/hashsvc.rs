@@ -1,0 +1,321 @@
+//! Shared-hash-service occupancy benchmark (PR 6): N concurrent write
+//! sessions hashing through per-session engines vs handles onto one
+//! shared coalescing service, on the SAME single modeled device.
+//!
+//!     cargo bench --bench hashsvc            # full matrix (adds 64 sessions + cpu arm)
+//!     cargo bench --bench hashsvc -- quick   # CI smoke subset (1/4/16 sessions)
+//!
+//! Each session streams small 4-block submissions (16 KB blocks over
+//! 4 KB segments — 16 segments a pop), the shallow-batch regime the
+//! paper's CrystalGPU observation is about: a per-session engine turns
+//! every submission into its own under-occupied device step, while the
+//! shared service coalesces concurrent sessions' submissions into deep
+//! batches (up to `max_batch_blocks`, held back at most `max_linger`)
+//! that fill wide artifact lanes and amortize the per-step overhead.
+//! The mock backend charges a fixed per-step cost, so the win measured
+//! here is exactly the step-count reduction — the same quantity the
+//! calibrated sim models via `GpuPipeline::shared_stream_secs`.
+//!
+//! Results are printed as tables and flushed to `BENCH_pr6.json` at the
+//! repo root (MB/s + batch-depth curve per scenario/arm/session count;
+//! CI gates on shared@16 beating per-session@16 on the mock-gpu
+//! scenario).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use gpustore::config::ClientConfig;
+use gpustore::crystal::{BackendKind, CrystalOpts, Master, MockTuning};
+use gpustore::hashgpu::{CpuEngine, GpuEngine, HashEngine, WindowHashMode};
+use gpustore::hashsvc::{HashService, SvcPolicy};
+use gpustore::metrics::Table;
+use gpustore::runtime::artifacts::Manifest;
+use gpustore::util::Rng;
+
+const MB: f64 = 1024.0 * 1024.0;
+/// 16 KB blocks over the 4 KB segment size: 4 segments per block.
+const BLOCK: usize = 16 * 1024;
+const SEG: usize = 4096;
+/// Blocks per submission — one small write-buffer's worth.
+const SUB_BLOCKS: usize = 4;
+/// Submissions per session.
+const JOBS: usize = 8;
+/// Fixed per-step device cost: the overhead deep batches amortize.
+const STEP_COST: Duration = Duration::from_millis(2);
+
+struct Record {
+    scenario: &'static str,
+    engine: &'static str,
+    sessions: usize,
+    mbps: f64,
+    depth_mean: f64,
+    depth_max: usize,
+    speedup_vs_per_session: f64,
+}
+
+#[derive(Default, Clone, Copy)]
+struct DepthAgg {
+    batches: u64,
+    depth_sum: u64,
+    depth_max: usize,
+}
+
+impl DepthAgg {
+    fn mean(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.depth_sum as f64 / self.batches as f64
+        }
+    }
+}
+
+fn mock_master() -> Arc<Master> {
+    let opts = CrystalOpts {
+        devices: 1,
+        ..CrystalOpts::optimized(BackendKind::Mock {
+            artifact_dir: Manifest::default_dir(),
+            tuning: MockTuning {
+                fixed_delay: STEP_COST,
+                ..MockTuning::default()
+            },
+        })
+    };
+    Arc::new(Master::new(opts).unwrap())
+}
+
+/// Per-session payloads: `sessions` lists of `JOBS` submissions each.
+fn payloads(sessions: usize) -> Vec<Vec<Arc<Vec<Vec<u8>>>>> {
+    (0..sessions)
+        .map(|s| {
+            (0..JOBS)
+                .map(|j| {
+                    Arc::new(
+                        (0..SUB_BLOCKS)
+                            .map(|b| {
+                                Rng::new((s * JOBS * SUB_BLOCKS + j * SUB_BLOCKS + b) as u64)
+                                    .bytes(BLOCK)
+                            })
+                            .collect::<Vec<Vec<u8>>>(),
+                    )
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Drive all sessions concurrently; returns (elapsed secs, depth agg).
+fn drive(engines: &[Arc<dyn HashEngine>], work: &[Vec<Arc<Vec<Vec<u8>>>>]) -> (f64, DepthAgg) {
+    let t0 = Instant::now();
+    let mut agg = DepthAgg::default();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = engines
+            .iter()
+            .zip(work)
+            .map(|(engine, subs)| {
+                scope.spawn(move || {
+                    let mut out = DepthAgg::default();
+                    for blocks in subs {
+                        let ticket = engine.submit_direct_batch(blocks.clone()).unwrap();
+                        let (digests, timing) = ticket.wait().unwrap();
+                        assert_eq!(digests.len(), blocks.len());
+                        out.batches += 1;
+                        out.depth_sum += timing.batch_blocks as u64;
+                        out.depth_max = out.depth_max.max(timing.batch_blocks);
+                    }
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            let out = h.join().unwrap();
+            agg.batches += out.batches;
+            agg.depth_sum += out.depth_sum;
+            agg.depth_max = agg.depth_max.max(out.depth_max);
+        }
+    });
+    (t0.elapsed().as_secs_f64(), agg)
+}
+
+fn run_scenario(
+    scenario: &'static str,
+    session_counts: &[usize],
+    build: impl Fn(usize, bool) -> Vec<Arc<dyn HashEngine>>,
+    records: &mut Vec<Record>,
+) {
+    println!(
+        "\n== hashsvc: {scenario} ({JOBS} submissions x {SUB_BLOCKS} x {} KB blocks per session) ==",
+        BLOCK / 1024
+    );
+    let mut t = Table::new(&[
+        "sessions",
+        "per-session MB/s",
+        "shared MB/s",
+        "shared depth mean/max",
+        "speedup",
+    ]);
+    for &n in session_counts {
+        let work = payloads(n);
+        let total_bytes = (n * JOBS * SUB_BLOCKS * BLOCK) as f64;
+
+        let dedicated = build(n, false);
+        check_digests(&dedicated[0], &work[0][0]);
+        let (base_secs, base_agg) = drive(&dedicated, &work);
+        drop(dedicated);
+        let base_mbps = total_bytes / MB / base_secs;
+
+        let shared = build(n, true);
+        check_digests(&shared[0], &work[0][0]);
+        let (svc_secs, svc_agg) = drive(&shared, &work);
+        drop(shared);
+        let svc_mbps = total_bytes / MB / svc_secs;
+
+        let speedup = svc_mbps / base_mbps;
+        t.row(vec![
+            n.to_string(),
+            format!("{base_mbps:.1}"),
+            format!("{svc_mbps:.1}"),
+            format!("{:.1} / {}", svc_agg.mean(), svc_agg.depth_max),
+            format!("{speedup:.2}x"),
+        ]);
+        records.push(Record {
+            scenario,
+            engine: "per-session",
+            sessions: n,
+            mbps: base_mbps,
+            depth_mean: base_agg.mean(),
+            depth_max: base_agg.depth_max,
+            speedup_vs_per_session: 1.0,
+        });
+        records.push(Record {
+            scenario,
+            engine: "shared",
+            sessions: n,
+            mbps: svc_mbps,
+            depth_mean: svc_agg.mean(),
+            depth_max: svc_agg.depth_max,
+            speedup_vs_per_session: speedup,
+        });
+    }
+    println!("{}", t.markdown());
+}
+
+/// Bit-identity spot check against the CPU reference.
+fn check_digests(engine: &Arc<dyn HashEngine>, blocks: &Arc<Vec<Vec<u8>>>) {
+    let cpu = CpuEngine::new(1, SEG, WindowHashMode::Rolling);
+    let (got, _) = engine
+        .submit_direct_batch(blocks.clone())
+        .unwrap()
+        .wait()
+        .unwrap();
+    for (blk, d) in blocks.iter().zip(&got) {
+        assert_eq!(cpu.direct_hash(blk).unwrap(), *d, "digest mismatch");
+    }
+}
+
+fn svc_policy() -> SvcPolicy {
+    SvcPolicy {
+        max_batch_blocks: ClientConfig::default().hash_batch,
+        max_linger: Duration::from_micros(500),
+        devices: 1,
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| !a.starts_with('-'))
+        .collect();
+    let quick = args.iter().any(|a| a == "quick");
+    let session_counts: Vec<usize> = if quick {
+        vec![1, 4, 16]
+    } else {
+        vec![1, 4, 16, 64]
+    };
+
+    let mut records: Vec<Record> = Vec::new();
+
+    // Mock-GPU arm: per-session GpuEngines vs service handles, all over
+    // a fresh single-device master per measurement (same step cost).
+    run_scenario(
+        "mock-gpu",
+        &session_counts,
+        |n, shared| {
+            if shared {
+                let svc =
+                    HashService::over_crystal(mock_master(), SEG, 48, svc_policy());
+                (0..n).map(|_| svc.handle()).collect()
+            } else {
+                let master = mock_master();
+                (0..n)
+                    .map(|_| {
+                        Arc::new(GpuEngine::new(master.clone(), SEG, 48))
+                            as Arc<dyn HashEngine>
+                    })
+                    .collect()
+            }
+        },
+        &mut records,
+    );
+
+    // CPU fallback arm (full mode): single-threaded engines per session
+    // vs multi-lane service over one such engine — shows the batching
+    // policy composing with host-side parallel lanes.
+    if !quick {
+        run_scenario(
+            "cpu",
+            &session_counts,
+            |n, shared| {
+                if shared {
+                    let svc = HashService::over_engine(
+                        Arc::new(CpuEngine::new(1, SEG, WindowHashMode::Rolling)),
+                        SvcPolicy {
+                            devices: 4,
+                            ..svc_policy()
+                        },
+                    );
+                    (0..n).map(|_| svc.handle()).collect()
+                } else {
+                    (0..n)
+                        .map(|_| {
+                            Arc::new(CpuEngine::new(1, SEG, WindowHashMode::Rolling))
+                                as Arc<dyn HashEngine>
+                        })
+                        .collect()
+                }
+            },
+            &mut records,
+        );
+    }
+
+    flush(&records, quick);
+}
+
+fn flush(records: &[Record], quick: bool) {
+    let mut out = String::from("{\n  \"bench\": \"hashsvc\",\n  \"unit\": \"MB/s\",\n");
+    out.push_str(&format!("  \"quick\": {quick},\n"));
+    out.push_str(&format!(
+        "  \"block_bytes\": {BLOCK},\n  \"sub_blocks\": {SUB_BLOCKS},\n  \
+         \"jobs_per_session\": {JOBS},\n  \"results\": [\n"
+    ));
+    for (i, r) in records.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"scenario\": \"{}\", \"engine\": \"{}\", \"sessions\": {}, \
+             \"mbps\": {:.2}, \"depth_mean\": {:.2}, \"depth_max\": {}, \
+             \"speedup_vs_per_session\": {:.3}}}{}\n",
+            r.scenario,
+            r.engine,
+            r.sessions,
+            r.mbps,
+            r.depth_mean,
+            r.depth_max,
+            r.speedup_vs_per_session,
+            if i + 1 == records.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_pr6.json", &out) {
+        Ok(()) => println!("\nwrote BENCH_pr6.json ({} results)", records.len()),
+        Err(e) => eprintln!("could not write BENCH_pr6.json: {e}"),
+    }
+}

@@ -88,6 +88,18 @@ pub struct ClientConfig {
     /// bounds the memory of arbitrarily deep pipelines (CLI:
     /// `--inflight-mb`).
     pub inflight_budget: usize,
+    /// Shared hash service: flush a coalesced device batch once this
+    /// many blocks are queued across sessions (the occupancy bound;
+    /// CLI: `--hash-batch`).
+    pub hash_batch: usize,
+    /// Shared hash service: flush once the oldest queued submission has
+    /// waited this many microseconds (the latency bound; CLI:
+    /// `--hash-linger-us`).  `0` flushes every submission immediately.
+    pub hash_linger_us: u64,
+    /// Shared hash service fan-out: crystal devices on the GPU backend,
+    /// parallel hashing lanes on the CPU fallback (CLI:
+    /// `--hash-devices`).
+    pub hash_devices: usize,
 }
 
 impl Default for ClientConfig {
@@ -104,6 +116,9 @@ impl Default for ClientConfig {
             stripe_width: 4,
             node_inflight: 16,
             inflight_budget: 32 * 1024 * 1024,
+            hash_batch: 64,
+            hash_linger_us: 200,
+            hash_devices: 1,
         }
     }
 }
@@ -128,6 +143,8 @@ impl ClientConfig {
             || self.stripe_width == 0
             || self.node_inflight == 0
             || self.inflight_budget == 0
+            || self.hash_batch == 0
+            || self.hash_devices == 0
         {
             return Err(crate::Error::Config("zero-sized config field".into()));
         }
@@ -233,6 +250,16 @@ pub struct ClusterConfig {
     /// the model; benchmarks set it to a GbE-realistic few hundred
     /// microseconds to expose the lock-step `block_size / RTT` bound.
     pub node_rtt: Duration,
+    /// Cluster-wide shared-hash-service occupancy bound, stamped onto
+    /// every client built through
+    /// [`Cluster::service_client`](crate::store::Cluster::service_client)
+    /// so co-located sessions agree on one batching policy (and hence
+    /// share one service).  See [`ClientConfig::hash_batch`].
+    pub hash_batch: usize,
+    /// Cluster-wide latency bound (see [`ClientConfig::hash_linger_us`]).
+    pub hash_linger_us: u64,
+    /// Cluster-wide service fan-out (see [`ClientConfig::hash_devices`]).
+    pub hash_devices: usize,
 }
 
 impl Default for ClusterConfig {
@@ -244,6 +271,9 @@ impl Default for ClusterConfig {
             replication: 1,
             lease_timeout: Duration::from_secs(30),
             node_rtt: Duration::ZERO,
+            hash_batch: 64,
+            hash_linger_us: 200,
+            hash_devices: 1,
         }
     }
 }
@@ -290,6 +320,26 @@ mod tests {
             ..ClientConfig::default()
         };
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn zero_hash_service_knobs_rejected() {
+        let c = ClientConfig {
+            hash_batch: 0,
+            ..ClientConfig::default()
+        };
+        assert!(c.validate().is_err());
+        let c = ClientConfig {
+            hash_devices: 0,
+            ..ClientConfig::default()
+        };
+        assert!(c.validate().is_err());
+        // Zero linger is legal: flush every submission immediately.
+        let c = ClientConfig {
+            hash_linger_us: 0,
+            ..ClientConfig::default()
+        };
+        c.validate().unwrap();
     }
 
     #[test]

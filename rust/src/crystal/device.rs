@@ -156,6 +156,34 @@ impl Planner {
         blocks: &[Vec<u8>],
         pool: &BufferPool,
     ) -> Result<Plan> {
+        let refs: Vec<&[u8]> = blocks.iter().map(|b| b.as_slice()).collect();
+        self.plan_direct_refs(seg_bytes, &refs, pool)
+    }
+
+    /// Stage several sessions' block batches as ONE batched direct-hash
+    /// job (the shared hash service's coalescing path).  Blocks are
+    /// indexed flat across groups, in order — the output is
+    /// `JobOut::DigestGroups` with one entry per block, exactly as if the
+    /// concatenated batch had been submitted by a single caller.
+    pub fn plan_direct_batch_groups(
+        &self,
+        seg_bytes: usize,
+        groups: &[std::sync::Arc<Vec<Vec<u8>>>],
+        pool: &BufferPool,
+    ) -> Result<Plan> {
+        let refs: Vec<&[u8]> = groups
+            .iter()
+            .flat_map(|g| g.iter().map(|b| b.as_slice()))
+            .collect();
+        self.plan_direct_refs(seg_bytes, &refs, pool)
+    }
+
+    fn plan_direct_refs(
+        &self,
+        seg_bytes: usize,
+        blocks: &[&[u8]],
+        pool: &BufferPool,
+    ) -> Result<Plan> {
         let t0 = Instant::now();
         let total: usize = blocks.iter().map(|b| b.len()).sum();
         // Per-block segment slices, in order.

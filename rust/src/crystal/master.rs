@@ -99,6 +99,13 @@ enum Payload {
         seg_bytes: usize,
         blocks: Arc<Vec<Vec<u8>>>,
     },
+    /// Several callers' block batches coalesced into one packed job
+    /// (the shared hash service's deep cross-session batches).  Blocks
+    /// are indexed flat across groups in submission order.
+    BatchGroups {
+        seg_bytes: usize,
+        groups: Vec<Arc<Vec<Vec<u8>>>>,
+    },
 }
 
 struct QueueItem {
@@ -178,6 +185,21 @@ impl Master {
         self.enqueue(
             DeviceOp::DirectHash { seg_bytes },
             Payload::Batch { seg_bytes, blocks },
+        )
+    }
+
+    /// Submit several callers' block batches as ONE packed direct-hash
+    /// job without concatenating (or copying) their payloads.  Digest
+    /// groups come back indexed flat across `groups` in order — the
+    /// shared hash service splits them back out per caller.
+    pub fn submit_batch_groups(
+        &self,
+        seg_bytes: usize,
+        groups: Vec<Arc<Vec<Vec<u8>>>>,
+    ) -> JobHandle {
+        self.enqueue(
+            DeviceOp::DirectHash { seg_bytes },
+            Payload::BatchGroups { seg_bytes, groups },
         )
     }
 
@@ -272,6 +294,10 @@ fn stage(sh: &Shared, item: &QueueItem) -> Result<Plan> {
         Payload::Single(data) => sh.planner.plan(item.op, data, &sh.pool),
         Payload::Batch { seg_bytes, blocks } => {
             sh.planner.plan_direct_batch(*seg_bytes, blocks, &sh.pool)
+        }
+        Payload::BatchGroups { seg_bytes, groups } => {
+            sh.planner
+                .plan_direct_batch_groups(*seg_bytes, groups, &sh.pool)
         }
     }
 }
@@ -487,6 +513,28 @@ mod tests {
         // Both devices did work (shared queue balances under delay).
         assert!(stats.per_device[0] > 0, "{:?}", stats.per_device);
         assert!(stats.per_device[1] > 0, "{:?}", stats.per_device);
+    }
+
+    #[test]
+    fn batch_groups_match_concatenated_batch() {
+        let m = Master::new(CrystalOpts::optimized(mock_backend(Default::default()))).unwrap();
+        let g1: Arc<Vec<Vec<u8>>> = Arc::new(
+            (0..3)
+                .map(|i| Rng::new(i).bytes(5000 + i as usize * 111))
+                .collect(),
+        );
+        let g2: Arc<Vec<Vec<u8>>> = Arc::new(vec![Rng::new(9).bytes(12_000), Vec::new()]);
+        let all: Arc<Vec<Vec<u8>>> = Arc::new(g1.iter().chain(g2.iter()).cloned().collect());
+        let grouped = m
+            .submit_batch_groups(4096, vec![g1.clone(), g2.clone()])
+            .wait()
+            .unwrap();
+        let flat = m.submit_batch(4096, all).wait().unwrap();
+        let (JobOut::DigestGroups(a), JobOut::DigestGroups(b)) = (grouped.out, flat.out) else {
+            panic!("wrong output kinds");
+        };
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 5);
     }
 
     #[test]

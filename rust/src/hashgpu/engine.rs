@@ -33,13 +33,20 @@ pub struct HashTiming {
     /// Engine time that overlapped the caller's other work.  Always zero
     /// for synchronous engines.
     pub hidden: Duration,
+    /// Depth (blocks) of the device batch that served this ticket: the
+    /// submission size on dedicated engines, the coalesced cross-session
+    /// batch size on the shared hash service.  Zero for window tickets.
+    pub batch_blocks: usize,
+    /// Time the submission lingered in a shared-service queue before
+    /// dispatch.  Zero on dedicated engines.
+    pub svc_wait: Duration,
 }
 
 impl HashTiming {
     fn sync(cost: Duration) -> Self {
         HashTiming {
             exposed: cost,
-            hidden: Duration::ZERO,
+            ..HashTiming::default()
         }
     }
 
@@ -48,6 +55,7 @@ impl HashTiming {
         HashTiming {
             exposed: blocked,
             hidden: engine_time.saturating_sub(blocked),
+            ..HashTiming::default()
         }
     }
 }
@@ -61,6 +69,9 @@ enum DigestsInner {
         n_blocks: usize,
         breakdown: Arc<Mutex<StageBreakdown>>,
     },
+    /// Work in flight somewhere else (e.g. the shared hash service);
+    /// the closure blocks until it resolves and reports its own timing.
+    Deferred(Box<dyn FnOnce() -> Result<(Vec<Digest>, HashTiming)> + Send>),
 }
 
 /// In-flight batch of block digests (from
@@ -79,10 +90,29 @@ impl DigestsTicket {
         }
     }
 
+    /// A ticket backed by a blocking resolver (used by engines — like the
+    /// shared hash service — whose in-flight state lives outside the
+    /// crystal runtime).  The closure runs once, on `wait`.
+    pub fn deferred<F>(resolve: F) -> Self
+    where
+        F: FnOnce() -> Result<(Vec<Digest>, HashTiming)> + Send + 'static,
+    {
+        DigestsTicket {
+            inner: DigestsInner::Deferred(Box::new(resolve)),
+            sync_cost: Duration::ZERO,
+        }
+    }
+
     /// Block until the digests are available.
     pub fn wait(self) -> Result<(Vec<Digest>, HashTiming)> {
         match self.inner {
-            DigestsInner::Ready(r) => Ok((r?, HashTiming::sync(self.sync_cost))),
+            DigestsInner::Ready(r) => {
+                let digests = r?;
+                let mut t = HashTiming::sync(self.sync_cost);
+                t.batch_blocks = digests.len();
+                Ok((digests, t))
+            }
+            DigestsInner::Deferred(resolve) => resolve(),
             DigestsInner::Crystal {
                 handle,
                 n_blocks,
@@ -111,7 +141,9 @@ impl DigestsTicket {
                     r.timing.record(&mut b);
                     b.add(Stage::Postprocess, post);
                 }
-                Ok((out, HashTiming::split(r.timing.total() + post, blocked + post)))
+                let mut t = HashTiming::split(r.timing.total() + post, blocked + post);
+                t.batch_blocks = n_blocks;
+                Ok((out, t))
             }
         }
     }
@@ -123,6 +155,7 @@ enum WindowInner {
         handle: JobHandle,
         breakdown: Arc<Mutex<StageBreakdown>>,
     },
+    Deferred(Box<dyn FnOnce() -> Result<(Vec<u32>, HashTiming)> + Send>),
 }
 
 /// In-flight sliding-window hash job (from
@@ -141,10 +174,23 @@ impl WindowTicket {
         }
     }
 
+    /// A ticket backed by a blocking resolver (see
+    /// [`DigestsTicket::deferred`]).
+    pub fn deferred<F>(resolve: F) -> Self
+    where
+        F: FnOnce() -> Result<(Vec<u32>, HashTiming)> + Send + 'static,
+    {
+        WindowTicket {
+            inner: WindowInner::Deferred(Box::new(resolve)),
+            sync_cost: Duration::ZERO,
+        }
+    }
+
     /// Block until the window hashes are available.
     pub fn wait(self) -> Result<(Vec<u32>, HashTiming)> {
         match self.inner {
             WindowInner::Ready(r) => Ok((r?, HashTiming::sync(self.sync_cost))),
+            WindowInner::Deferred(resolve) => resolve(),
             WindowInner::Crystal { handle, breakdown } => {
                 let t0 = Instant::now();
                 let r = handle.wait()?;

@@ -1,0 +1,40 @@
+//! hashsvc — the shared cross-session hash service.
+//!
+//! The paper's offload only pays when the accelerator is kept occupied,
+//! but a per-session [`HashEngine`](crate::hashgpu::HashEngine) submits
+//! one write-buffer's blocks at a time: with many concurrent sessions
+//! the device sees a stream of shallow batches and runs under-occupied
+//! (CrystalGPU's motivating observation).  This module turns hashing
+//! into a process-wide *service*: every session gets a lightweight
+//! handle onto one shared backend, and a coalescing submission queue
+//! merges concurrent sessions' block batches into deep device batches
+//! before dispatch.
+//!
+//! Batching policy (the latency/occupancy knob):
+//! * flush as soon as `max_batch_blocks` blocks are queued (**occupancy**
+//!   bound), or
+//! * when the oldest queued submission has lingered `max_linger`
+//!   (**latency** bound) — whichever comes first.
+//!
+//! Dispatch fans out over `devices` lanes: on the crystal backend the
+//! shared [`Master`](crate::crystal::Master) runs one manager per
+//! device, so deep batches spread across every device present; the CPU
+//! fallback hashes lanes on parallel worker threads, so batching helps
+//! the non-GPU build too.
+//!
+//! Failure rule (mirrors the duplex dead-link rule in `net`): the first
+//! backend error *poisons* the service — queued and in-flight
+//! submissions resolve with the error, and every later submission fails
+//! eagerly instead of enqueueing into a dead service.
+//! [`shared_service`] hands out a fresh service once the registered one
+//! is poisoned, the way a new duplex client reconnects a dead link.
+//!
+//! Session handles implement the unchanged `HashEngine` trait, so the
+//! writer/reader pipeline, the oracle, and every existing test work
+//! as-is; results are bit-identical to per-session hashing.
+
+mod service;
+
+pub use service::{
+    session_engine, shared_service, HashService, SvcPolicy, SvcStats,
+};

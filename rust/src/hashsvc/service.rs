@@ -1,0 +1,832 @@
+//! Service internals: the coalescing queue, the flush timer, the
+//! dispatch lanes, and the per-session engine handle.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, Weak};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::{ClientConfig, HashEngineKind};
+use crate::crystal::task::JobOut;
+use crate::crystal::{BackendKind, CrystalOpts, Master};
+use crate::hash::{finalize_digests, Digest};
+use crate::hashgpu::{
+    CpuEngine, DigestsTicket, GpuEngine, HashEngine, HashTiming, OracleEngine,
+    WindowHashMode, WindowTicket,
+};
+use crate::metrics::StageBreakdown;
+use crate::{Error, Result};
+
+// -------------------------------------------------------------- policy ----
+
+/// The latency/occupancy knob: when does a coalesced batch flush, and
+/// how wide does dispatch fan out.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SvcPolicy {
+    /// Flush once this many blocks are queued across sessions (the
+    /// occupancy bound: deeper batches pack more artifact lanes).
+    pub max_batch_blocks: usize,
+    /// Flush once the oldest queued submission has waited this long
+    /// (the latency bound a lone session pays at worst).
+    pub max_linger: Duration,
+    /// Fan-out: crystal devices (GPU backend) or parallel hashing lanes
+    /// (CPU fallback).
+    pub devices: usize,
+}
+
+impl Default for SvcPolicy {
+    fn default() -> Self {
+        SvcPolicy {
+            max_batch_blocks: 64,
+            max_linger: Duration::from_micros(200),
+            devices: 1,
+        }
+    }
+}
+
+impl SvcPolicy {
+    /// Policy encoded in a client configuration.
+    pub fn from_config(cfg: &ClientConfig) -> Self {
+        SvcPolicy {
+            max_batch_blocks: cfg.hash_batch.max(1),
+            max_linger: Duration::from_micros(cfg.hash_linger_us),
+            devices: cfg.hash_devices.max(1),
+        }
+    }
+}
+
+// --------------------------------------------------------------- stats ----
+
+/// Service-wide occupancy counters (the bench's curve).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SvcStats {
+    /// Coalesced device batches dispatched.
+    pub batches: u64,
+    /// Blocks hashed across all batches.
+    pub blocks: u64,
+    /// Deepest batch dispatched (blocks).
+    pub depth_max: usize,
+    /// Batches that merged more than one submission.
+    pub coalesced: u64,
+    /// Backend errors observed (the first one poisons the service).
+    pub errors: u64,
+}
+
+impl SvcStats {
+    /// Mean blocks per dispatched batch.
+    pub fn depth_mean(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.blocks as f64 / self.batches as f64
+        }
+    }
+}
+
+// ------------------------------------------------------------ plumbing ----
+
+struct Submission {
+    blocks: Arc<Vec<Vec<u8>>>,
+    enqueued: Instant,
+    reply: Sender<Reply>,
+}
+
+struct Reply {
+    result: Result<Vec<Digest>>,
+    /// Engine time attributed to this submission (its share of the
+    /// batch, proportional to block count).
+    engine: Duration,
+    /// Depth of the device batch that served it.
+    batch_blocks: usize,
+    /// Enqueue-to-dispatch wait (the linger the policy traded for
+    /// occupancy).
+    svc_wait: Duration,
+}
+
+struct MegaBatch {
+    subs: Vec<Submission>,
+}
+
+struct QueueState {
+    subs: Vec<Submission>,
+    blocks: usize,
+}
+
+struct SvcShared {
+    queue: Mutex<QueueState>,
+    kick: Condvar,
+    policy: SvcPolicy,
+    shutdown: AtomicBool,
+    poisoned: Mutex<Option<String>>,
+    stats: Mutex<SvcStats>,
+}
+
+enum Backend {
+    /// Deep batches ride `Master::submit_batch_groups`; the master's
+    /// per-device managers are the multi-device fan-out.
+    Crystal { master: Arc<Master>, seg_bytes: usize },
+    /// CPU/oracle fallback: lanes hash mega-batches on worker threads.
+    Engine(Arc<dyn HashEngine>),
+}
+
+// ------------------------------------------------------------- service ----
+
+/// A process-wide hash service: one backend, many session handles, a
+/// queue that coalesces their submissions into deep device batches.
+pub struct HashService {
+    shared: Arc<SvcShared>,
+    /// Pass-through engine for window hashing and metadata (same master
+    /// on the crystal backend, the backend engine itself otherwise).
+    front: Arc<dyn HashEngine>,
+    dispatcher: Option<JoinHandle<()>>,
+    lanes: Vec<JoinHandle<()>>,
+}
+
+impl HashService {
+    /// Service over a crystal runtime (the GPU path).  `master` should
+    /// be built with as many devices as the policy fans out over.
+    pub fn over_crystal(
+        master: Arc<Master>,
+        seg_bytes: usize,
+        window: usize,
+        policy: SvcPolicy,
+    ) -> Arc<HashService> {
+        let front = Arc::new(GpuEngine::new(master.clone(), seg_bytes, window));
+        Self::build(Backend::Crystal { master, seg_bytes }, front, policy)
+    }
+
+    /// Service over any synchronous engine (the CPU/oracle fallback):
+    /// `policy.devices` parallel lanes hash coalesced batches.
+    pub fn over_engine(engine: Arc<dyn HashEngine>, policy: SvcPolicy) -> Arc<HashService> {
+        Self::build(Backend::Engine(engine.clone()), engine, policy)
+    }
+
+    fn build(
+        backend: Backend,
+        front: Arc<dyn HashEngine>,
+        policy: SvcPolicy,
+    ) -> Arc<HashService> {
+        let shared = Arc::new(SvcShared {
+            queue: Mutex::new(QueueState {
+                subs: Vec::new(),
+                blocks: 0,
+            }),
+            kick: Condvar::new(),
+            policy,
+            shutdown: AtomicBool::new(false),
+            poisoned: Mutex::new(None),
+            stats: Mutex::new(SvcStats::default()),
+        });
+        // Crystal lanes come in pairs per device so one batch can stage
+        // while another executes (the master pipelines internally; two
+        // waiters per device keep its queue fed).
+        let n_lanes = match &backend {
+            Backend::Crystal { .. } => policy.devices.max(1) * 2,
+            Backend::Engine(_) => policy.devices.max(1),
+        };
+        let backend = Arc::new(backend);
+        let mut lane_txs = Vec::with_capacity(n_lanes);
+        let mut lanes = Vec::with_capacity(n_lanes);
+        for i in 0..n_lanes {
+            let (tx, rx) = mpsc::sync_channel::<MegaBatch>(1);
+            lane_txs.push(tx);
+            let sh = shared.clone();
+            let be = backend.clone();
+            lanes.push(
+                std::thread::Builder::new()
+                    .name(format!("hashsvc-lane-{i}"))
+                    .spawn(move || lane_loop(sh, be, rx))
+                    .expect("spawn hashsvc lane"),
+            );
+        }
+        let sh = shared.clone();
+        let dispatcher = std::thread::Builder::new()
+            .name("hashsvc-dispatch".into())
+            .spawn(move || dispatch_loop(sh, lane_txs))
+            .expect("spawn hashsvc dispatcher");
+        Arc::new(HashService {
+            shared,
+            front,
+            dispatcher: Some(dispatcher),
+            lanes,
+        })
+    }
+
+    /// A per-session engine handle over this service.  Handles are
+    /// cheap; results are bit-identical to a dedicated engine's.
+    pub fn handle(self: &Arc<Self>) -> Arc<dyn HashEngine> {
+        Arc::new(SessionEngine { svc: self.clone() })
+    }
+
+    /// Occupancy counters so far.
+    pub fn stats(&self) -> SvcStats {
+        *self.shared.stats.lock().unwrap()
+    }
+
+    /// The poisoning error, if a backend failure has killed the service.
+    pub fn poisoned(&self) -> Option<String> {
+        self.shared.poisoned.lock().unwrap().clone()
+    }
+
+    fn check_poisoned(&self) -> Result<()> {
+        match self.shared.poisoned.lock().unwrap().as_ref() {
+            Some(e) => Err(Error::Crystal(e.clone())),
+            None => Ok(()),
+        }
+    }
+
+    fn poison_on(&self, e: &Error) {
+        poison(&self.shared, e);
+    }
+
+    /// Enqueue a block batch; the ticket resolves when its coalesced
+    /// device batch completes.  Fails eagerly on a poisoned service
+    /// (mirroring the duplex dead-link rule) so callers never enqueue
+    /// into a dead backend.
+    pub fn submit(&self, blocks: Arc<Vec<Vec<u8>>>) -> Result<DigestsTicket> {
+        if blocks.is_empty() {
+            return Ok(DigestsTicket::ready(Ok(Vec::new()), Duration::ZERO));
+        }
+        self.check_poisoned()?;
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.blocks += blocks.len();
+            q.subs.push(Submission {
+                blocks,
+                enqueued: Instant::now(),
+                reply: tx,
+            });
+        }
+        self.shared.kick.notify_all();
+        Ok(DigestsTicket::deferred(move || {
+            let t0 = Instant::now();
+            let reply = rx
+                .recv()
+                .map_err(|_| Error::Crystal("hash service shut down".into()))?;
+            let blocked = t0.elapsed();
+            let digests = reply.result?;
+            Ok((
+                digests,
+                HashTiming {
+                    exposed: blocked,
+                    hidden: reply.engine.saturating_sub(blocked),
+                    batch_blocks: reply.batch_blocks,
+                    svc_wait: reply.svc_wait,
+                },
+            ))
+        }))
+    }
+}
+
+impl Drop for HashService {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+        self.shared.kick.notify_all();
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        for l in self.lanes.drain(..) {
+            let _ = l.join();
+        }
+    }
+}
+
+fn poison(sh: &SvcShared, e: &Error) {
+    {
+        let mut p = sh.poisoned.lock().unwrap();
+        if p.is_none() {
+            *p = Some(format!("hash service disabled after backend error: {e}"));
+        }
+    }
+    sh.stats.lock().unwrap().errors += 1;
+}
+
+// ---------------------------------------------------------- dispatcher ----
+
+/// Flush loop: wait until the occupancy bound (queued blocks) or the
+/// latency bound (oldest submission's age) trips, then hand a coalesced
+/// batch to the next lane round-robin.  Lane channels are depth-1, so a
+/// saturated backend backpressures here while the queue keeps deepening
+/// — exactly when deeper batches are most useful.
+fn dispatch_loop(sh: Arc<SvcShared>, lane_txs: Vec<SyncSender<MegaBatch>>) {
+    let mut next_lane = 0usize;
+    loop {
+        let subs = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if q.subs.is_empty() {
+                    if sh.shutdown.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    q = sh.kick.wait(q).unwrap();
+                    continue;
+                }
+                if sh.shutdown.load(Ordering::Relaxed)
+                    || q.blocks >= sh.policy.max_batch_blocks
+                {
+                    break;
+                }
+                let age = q.subs[0].enqueued.elapsed();
+                if age >= sh.policy.max_linger {
+                    break;
+                }
+                let (guard, _) = sh
+                    .kick
+                    .wait_timeout(q, sh.policy.max_linger - age)
+                    .unwrap();
+                q = guard;
+            }
+            // Take whole submissions up to the occupancy bound (always
+            // at least one); the rest stays queued for the next lane.
+            let mut take = 0usize;
+            let mut blocks = 0usize;
+            for s in &q.subs {
+                if take > 0 && blocks + s.blocks.len() > sh.policy.max_batch_blocks {
+                    break;
+                }
+                blocks += s.blocks.len();
+                take += 1;
+            }
+            q.blocks -= blocks;
+            q.subs.drain(..take).collect::<Vec<_>>()
+        };
+        if lane_txs[next_lane % lane_txs.len()]
+            .send(MegaBatch { subs })
+            .is_err()
+        {
+            return;
+        }
+        next_lane += 1;
+    }
+}
+
+// --------------------------------------------------------------- lanes ----
+
+fn lane_loop(sh: Arc<SvcShared>, backend: Arc<Backend>, rx: Receiver<MegaBatch>) {
+    while let Ok(batch) = rx.recv() {
+        run_batch(&sh, &backend, batch);
+    }
+}
+
+/// Hash one coalesced batch and route per-submission results back.
+fn run_batch(sh: &SvcShared, backend: &Backend, batch: MegaBatch) {
+    let subs = batch.subs;
+    let total_blocks: usize = subs.iter().map(|s| s.blocks.len()).sum();
+    let dispatched = Instant::now();
+    // A poisoned service fails fast without touching the device; a
+    // session killed mid-batch just drops its receiver — the send error
+    // is ignored and everyone else still gets their digests.
+    if let Some(msg) = sh.poisoned.lock().unwrap().clone() {
+        for s in subs {
+            let Submission { blocks, reply, .. } = s;
+            drop(blocks);
+            let _ = reply.send(Reply {
+                result: Err(Error::Crystal(msg.clone())),
+                engine: Duration::ZERO,
+                batch_blocks: total_blocks,
+                svc_wait: Duration::ZERO,
+            });
+        }
+        return;
+    }
+    let t0 = Instant::now();
+    let result: Result<Vec<Vec<Digest>>> = match backend {
+        Backend::Crystal { master, seg_bytes } => {
+            let groups: Vec<Arc<Vec<Vec<u8>>>> =
+                subs.iter().map(|s| s.blocks.clone()).collect();
+            master
+                .submit_batch_groups(*seg_bytes, groups)
+                .wait()
+                .and_then(|r| {
+                    let JobOut::DigestGroups(groups_out) = &r.out else {
+                        return Err(Error::Crystal("wrong output kind".into()));
+                    };
+                    if groups_out.len() != total_blocks {
+                        return Err(Error::Crystal(format!(
+                            "batch returned {} groups for {} blocks",
+                            groups_out.len(),
+                            total_blocks
+                        )));
+                    }
+                    // Host-side final stage, then split back per caller.
+                    let mut it = groups_out.iter();
+                    Ok(subs
+                        .iter()
+                        .map(|s| {
+                            s.blocks
+                                .iter()
+                                .map(|_| finalize_digests(it.next().unwrap()))
+                                .collect()
+                        })
+                        .collect())
+                })
+        }
+        Backend::Engine(engine) => {
+            let refs: Vec<&[u8]> = subs
+                .iter()
+                .flat_map(|s| s.blocks.iter().map(|b| b.as_slice()))
+                .collect();
+            engine.direct_hash_batch(&refs).map(|flat| {
+                let mut it = flat.into_iter();
+                subs.iter()
+                    .map(|s| (&mut it).take(s.blocks.len()).collect())
+                    .collect()
+            })
+        }
+    };
+    let engine_time = t0.elapsed();
+    match result {
+        Ok(per_sub) => {
+            {
+                let mut st = sh.stats.lock().unwrap();
+                st.batches += 1;
+                st.blocks += total_blocks as u64;
+                st.depth_max = st.depth_max.max(total_blocks);
+                if subs.len() > 1 {
+                    st.coalesced += 1;
+                }
+            }
+            for (s, digests) in subs.into_iter().zip(per_sub) {
+                let share = engine_time
+                    .mul_f64(digests.len() as f64 / total_blocks.max(1) as f64);
+                let svc_wait = dispatched.saturating_duration_since(s.enqueued);
+                let Submission { blocks, reply, .. } = s;
+                // Release the payload Arc before replying so the writer
+                // can reclaim its buffers copy-free (`Arc::try_unwrap`).
+                drop(blocks);
+                let _ = reply.send(Reply {
+                    result: Ok(digests),
+                    engine: share,
+                    batch_blocks: total_blocks,
+                    svc_wait,
+                });
+            }
+        }
+        Err(e) => {
+            poison(sh, &e);
+            let msg = format!("{e}");
+            for s in subs {
+                let svc_wait = dispatched.saturating_duration_since(s.enqueued);
+                let Submission { blocks, reply, .. } = s;
+                drop(blocks);
+                let _ = reply.send(Reply {
+                    result: Err(Error::Crystal(msg.clone())),
+                    engine: Duration::ZERO,
+                    batch_blocks: total_blocks,
+                    svc_wait,
+                });
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------ session handle ----
+
+/// Per-session [`HashEngine`] over the shared service: direct-hash
+/// batches go through the coalescing queue; window hashing passes
+/// through to the shared backend (window jobs are already deep
+/// single-buffer device jobs).
+struct SessionEngine {
+    svc: Arc<HashService>,
+}
+
+impl HashEngine for SessionEngine {
+    fn direct_hash(&self, data: &[u8]) -> Result<Digest> {
+        let (d, _) = self.svc.submit(Arc::new(vec![data.to_vec()]))?.wait()?;
+        Ok(d[0])
+    }
+
+    fn direct_hash_batch(&self, blocks: &[&[u8]]) -> Result<Vec<Digest>> {
+        let owned: Arc<Vec<Vec<u8>>> = Arc::new(blocks.iter().map(|b| b.to_vec()).collect());
+        Ok(self.svc.submit(owned)?.wait()?.0)
+    }
+
+    fn window_hashes(&self, data: &[u8]) -> Result<Vec<u32>> {
+        self.svc.check_poisoned()?;
+        self.svc.front.window_hashes(data)
+    }
+
+    fn submit_direct_batch(&self, blocks: Arc<Vec<Vec<u8>>>) -> Result<DigestsTicket> {
+        self.svc.submit(blocks)
+    }
+
+    fn submit_window_hashes(&self, data: Vec<u8>) -> Result<WindowTicket> {
+        self.svc.check_poisoned()?;
+        let ticket = self.svc.front.submit_window_hashes(data)?;
+        let svc = self.svc.clone();
+        Ok(WindowTicket::deferred(move || match ticket.wait() {
+            Ok(out) => Ok(out),
+            Err(e) => {
+                // A window-job device failure is a backend error too.
+                svc.poison_on(&e);
+                Err(e)
+            }
+        }))
+    }
+
+    fn window(&self) -> usize {
+        self.svc.front.window()
+    }
+
+    fn name(&self) -> &'static str {
+        self.svc.front.name()
+    }
+
+    fn stage_breakdown(&self) -> Option<StageBreakdown> {
+        self.svc.front.stage_breakdown()
+    }
+}
+
+// ------------------------------------------------------------ registry ----
+
+static REGISTRY: OnceLock<Mutex<HashMap<String, Weak<HashService>>>> = OnceLock::new();
+
+fn service_key(cfg: &ClientConfig, dir: &Path) -> String {
+    format!(
+        "{:?}|seg={}|batch={}|linger={}|dev={}|{}",
+        cfg.engine,
+        cfg.segment_bytes,
+        cfg.hash_batch,
+        cfg.hash_linger_us,
+        cfg.hash_devices,
+        dir.display()
+    )
+}
+
+fn build_for_config(cfg: &ClientConfig, dir: PathBuf) -> Result<Arc<HashService>> {
+    let policy = SvcPolicy::from_config(cfg);
+    Ok(match cfg.engine {
+        HashEngineKind::Cpu { threads } => HashService::over_engine(
+            Arc::new(CpuEngine::new(
+                threads,
+                cfg.segment_bytes,
+                WindowHashMode::PaperMd5,
+            )),
+            policy,
+        ),
+        HashEngineKind::Gpu {
+            devices,
+            buffer_reuse,
+            overlap,
+        } => {
+            let opts = CrystalOpts {
+                devices: devices.max(policy.devices),
+                buffer_reuse,
+                overlap,
+                ..CrystalOpts::optimized(BackendKind::Pjrt { artifact_dir: dir })
+            };
+            let master = Arc::new(Master::new(opts)?);
+            HashService::over_crystal(
+                master,
+                cfg.segment_bytes,
+                crate::hash::DEFAULT_WINDOW,
+                policy,
+            )
+        }
+        HashEngineKind::Oracle => {
+            HashService::over_engine(Arc::new(OracleEngine::new()), policy)
+        }
+    })
+}
+
+/// The process-wide service for this configuration: sessions asking for
+/// the same engine/policy share one backend (and its batching queue);
+/// the service shuts down when the last handle drops.  A poisoned
+/// service is evicted and replaced, the way a fresh duplex client
+/// reconnects a dead link.
+pub fn shared_service(
+    cfg: &ClientConfig,
+    artifact_dir: Option<PathBuf>,
+) -> Result<Arc<HashService>> {
+    let dir = artifact_dir.unwrap_or_else(crate::runtime::artifacts::Manifest::default_dir);
+    let key = service_key(cfg, &dir);
+    let reg = REGISTRY.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut reg = reg.lock().unwrap();
+    if let Some(svc) = reg.get(&key).and_then(Weak::upgrade) {
+        if svc.poisoned().is_none() {
+            return Ok(svc);
+        }
+    }
+    let svc = build_for_config(cfg, dir)?;
+    reg.insert(key, Arc::downgrade(&svc));
+    Ok(svc)
+}
+
+/// A session engine handle over [`shared_service`] — the drop-in
+/// replacement for [`build_engine`](crate::hashgpu::build_engine) that
+/// every CLI/workload client goes through.
+pub fn session_engine(
+    cfg: &ClientConfig,
+    artifact_dir: Option<PathBuf>,
+) -> Result<Arc<dyn HashEngine>> {
+    Ok(shared_service(cfg, artifact_dir)?.handle())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crystal::MockTuning;
+    use crate::runtime::artifacts::Manifest;
+    use crate::util::Rng;
+
+    fn mock_master(tuning: MockTuning, devices: usize) -> Arc<Master> {
+        let opts = CrystalOpts {
+            devices,
+            ..CrystalOpts::optimized(BackendKind::Mock {
+                artifact_dir: Manifest::default_dir(),
+                tuning,
+            })
+        };
+        Arc::new(Master::new(opts).unwrap())
+    }
+
+    fn crystal_svc(policy: SvcPolicy, tuning: MockTuning) -> Arc<HashService> {
+        HashService::over_crystal(mock_master(tuning, policy.devices), 4096, 48, policy)
+    }
+
+    fn blocks(seed: u64, n: usize, len: usize) -> Arc<Vec<Vec<u8>>> {
+        Arc::new((0..n).map(|i| Rng::new(seed + i as u64).bytes(len)).collect())
+    }
+
+    #[test]
+    fn shared_digests_match_dedicated_engine() {
+        let svc = crystal_svc(SvcPolicy::default(), MockTuning::default());
+        let h = svc.handle();
+        let cpu = CpuEngine::new(1, 4096, WindowHashMode::Rolling);
+        let b = blocks(1, 5, 9000);
+        let (got, t) = h.submit_direct_batch(b.clone()).unwrap().wait().unwrap();
+        for (blk, d) in b.iter().zip(&got) {
+            assert_eq!(cpu.direct_hash(blk).unwrap(), *d);
+        }
+        assert!(t.batch_blocks >= 5);
+    }
+
+    #[test]
+    fn concurrent_sessions_coalesce_into_one_batch() {
+        // Three sessions enqueue within the linger window; the flush
+        // timer must merge them into a single deep device batch.
+        let policy = SvcPolicy {
+            max_batch_blocks: 1024,
+            max_linger: Duration::from_millis(50),
+            devices: 1,
+        };
+        let svc = crystal_svc(policy, MockTuning::default());
+        let handles: Vec<_> = (0..3).map(|_| svc.handle()).collect();
+        let tickets: Vec<_> = handles
+            .iter()
+            .enumerate()
+            .map(|(i, h)| {
+                h.submit_direct_batch(blocks(i as u64 * 100, 4, 5000)).unwrap()
+            })
+            .collect();
+        for t in tickets {
+            let (digests, timing) = t.wait().unwrap();
+            assert_eq!(digests.len(), 4);
+            assert_eq!(timing.batch_blocks, 12, "expected one coalesced batch");
+        }
+        let st = svc.stats();
+        assert_eq!(st.batches, 1);
+        assert_eq!(st.blocks, 12);
+        assert_eq!(st.coalesced, 1);
+    }
+
+    #[test]
+    fn depth_bound_flushes_before_linger() {
+        let policy = SvcPolicy {
+            max_batch_blocks: 4,
+            max_linger: Duration::from_secs(5),
+            devices: 1,
+        };
+        let svc = crystal_svc(policy, MockTuning::default());
+        let h = svc.handle();
+        let t0 = Instant::now();
+        let a = h.submit_direct_batch(blocks(1, 2, 4000)).unwrap();
+        let b = h.submit_direct_batch(blocks(7, 2, 4000)).unwrap();
+        a.wait().unwrap();
+        b.wait().unwrap();
+        // Flushed on depth (4 blocks), not after the 5 s linger.
+        assert!(t0.elapsed() < Duration::from_secs(2));
+        assert_eq!(svc.stats().depth_max, 4);
+    }
+
+    #[test]
+    fn zero_linger_still_resolves() {
+        let policy = SvcPolicy {
+            max_linger: Duration::ZERO,
+            ..SvcPolicy::default()
+        };
+        let svc = crystal_svc(policy, MockTuning::default());
+        let h = svc.handle();
+        let (d, _) = h.submit_direct_batch(blocks(3, 3, 6000)).unwrap().wait().unwrap();
+        assert_eq!(d.len(), 3);
+    }
+
+    #[test]
+    fn empty_batch_is_ready_immediately() {
+        let svc = crystal_svc(SvcPolicy::default(), MockTuning::default());
+        let h = svc.handle();
+        let (d, t) = h
+            .submit_direct_batch(Arc::new(Vec::new()))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert!(d.is_empty());
+        assert_eq!(t.svc_wait, Duration::ZERO);
+        assert_eq!(svc.stats().batches, 0);
+    }
+
+    #[test]
+    fn backend_error_poisons_and_new_submissions_fail_eagerly() {
+        // Every mock step fails: the first batch errors, poisoning the
+        // service; later submissions must fail at submit time.
+        let svc = crystal_svc(
+            SvcPolicy {
+                max_linger: Duration::ZERO,
+                ..SvcPolicy::default()
+            },
+            MockTuning {
+                fail_every: Some(1),
+                ..Default::default()
+            },
+        );
+        let h = svc.handle();
+        let t = h.submit_direct_batch(blocks(1, 2, 4000)).unwrap();
+        assert!(t.wait().is_err());
+        assert!(svc.poisoned().is_some());
+        assert!(svc.stats().errors >= 1);
+        // Eager failure: no ticket is even issued.
+        assert!(h.submit_direct_batch(blocks(2, 2, 4000)).is_err());
+        assert!(h.direct_hash(b"x").is_err());
+        assert!(h.window_hashes(b"abc").is_err());
+        assert!(h.submit_window_hashes(vec![0u8; 100]).is_err());
+    }
+
+    #[test]
+    fn cpu_fallback_lanes_match_dedicated_engine() {
+        let engine = Arc::new(CpuEngine::new(1, 4096, WindowHashMode::Rolling));
+        let svc = HashService::over_engine(
+            engine.clone(),
+            SvcPolicy {
+                devices: 2,
+                max_linger: Duration::from_millis(5),
+                ..SvcPolicy::default()
+            },
+        );
+        let h = svc.handle();
+        let b = blocks(11, 6, 7000);
+        let (got, _) = h.submit_direct_batch(b.clone()).unwrap().wait().unwrap();
+        for (blk, d) in b.iter().zip(&got) {
+            assert_eq!(engine.direct_hash(blk).unwrap(), *d);
+        }
+        assert_eq!(svc.stats().blocks, 6);
+    }
+
+    #[test]
+    fn window_hashes_pass_through() {
+        let svc = crystal_svc(SvcPolicy::default(), MockTuning::default());
+        let h = svc.handle();
+        let cpu = CpuEngine::new(1, 4096, WindowHashMode::Rolling);
+        let data = Rng::new(4).bytes(70_000);
+        assert_eq!(
+            h.window_hashes(&data).unwrap(),
+            cpu.window_hashes(&data).unwrap()
+        );
+        let (got, _) = h.submit_window_hashes(data.clone()).unwrap().wait().unwrap();
+        assert_eq!(got, cpu.window_hashes(&data).unwrap());
+    }
+
+    #[test]
+    fn payload_arcs_released_by_redeem_time() {
+        // The writer recovers its buffers with Arc::try_unwrap after
+        // redeeming the ticket; the service must have dropped its
+        // clones by then.
+        let svc = crystal_svc(SvcPolicy::default(), MockTuning::default());
+        let h = svc.handle();
+        let b = blocks(21, 3, 5000);
+        let t = h.submit_direct_batch(b.clone()).unwrap();
+        t.wait().unwrap();
+        assert!(
+            Arc::try_unwrap(b).is_ok(),
+            "service held payload Arc past redeem"
+        );
+    }
+
+    #[test]
+    fn registry_shares_and_respects_policy_key() {
+        let cfg = ClientConfig::default(); // cpu engine
+        let a = shared_service(&cfg, None).unwrap();
+        let b = shared_service(&cfg, None).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        let other = ClientConfig {
+            hash_batch: 128,
+            ..cfg
+        };
+        let c = shared_service(&other, None).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(session_engine(&other, None).unwrap().name(), "cpu");
+    }
+}

@@ -26,6 +26,11 @@
 //! - [`hashgpu`] — HashGPU analog: the two hashing primitives over crystal,
 //!   with blocking calls plus non-blocking submit/ticket pairs
 //!   (`submit_direct_batch` / `submit_window_hashes`).
+//! - [`hashsvc`] — shared cross-session hash service: one process-wide
+//!   backend per configuration, a queue that coalesces concurrent
+//!   sessions' submissions into deep device batches (flush on
+//!   `max_batch_blocks` or `max_linger_us`), multi-device fan-out, and
+//!   a multi-lane CPU fallback.
 //! - [`runtime`] — PJRT artifact loading/execution (`xla` crate behind the
 //!   `pjrt` feature; a synthetic manifest serves host-recompute backends).
 //! - [`hash`], [`chunking`] — CPU baselines + host-side final stages.
@@ -40,6 +45,7 @@ pub mod crystal;
 pub mod error;
 pub mod hash;
 pub mod hashgpu;
+pub mod hashsvc;
 pub mod metrics;
 pub mod net;
 pub mod runtime;

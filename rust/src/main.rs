@@ -17,7 +17,7 @@ use std::io::{Read as _, Write as _};
 use std::time::Duration;
 
 use gpustore::config::{CaMode, ClientConfig, ClusterConfig, HashEngineKind};
-use gpustore::hashgpu::build_engine;
+use gpustore::hashsvc::session_engine;
 use gpustore::store::manager::DEFAULT_LEASE_TIMEOUT;
 use gpustore::store::proto::MAX_REPLICAS;
 use gpustore::store::{policy_for, Cluster, Manager, Sai, StorageNode};
@@ -73,12 +73,15 @@ fn print_usage() {
          gpustore write --manager ADDR [--mode fixed|cdc|none]\n\
          \x20                [--engine cpu|gpu|oracle] [--threads N]\n\
          \x20                [--inflight-mb MB] [--node-inflight N]\n\
-         \x20                [--file NAME] [--size BYTES|K|M|G] [--count N] [--seed N]\n  \
+         \x20                [--hash-batch N] [--hash-linger-us US] [--hash-devices N]\n\
+         \x20                [--file NAME] [--size BYTES|K|M|G] [--count N] [--seed N]\n\
+         \x20                [--verbose]\n  \
          gpustore read --manager ADDR --file NAME [--out PATH]\n  \
          gpustore verify --manager ADDR --file NAME\n  \
          gpustore ls --manager ADDR\n  \
          gpustore trace --manager ADDR --trace FILE [--seed N]\n  \
-         gpustore demo [--replication N] [--lease-timeout SECS]\n\n\
+         gpustore demo [--replication N] [--lease-timeout SECS]\n\
+         \x20             [--hash-batch N] [--hash-linger-us US] [--hash-devices N]\n\n\
          Nodes register with the manager; clients discover them from it\n\
          (no --nodes flag).  `make artifacts` must have produced\n\
          artifacts/ for --engine gpu."
@@ -173,8 +176,47 @@ fn client_config(flags: &HashMap<String, String>) -> Result<ClientConfig> {
             }
         };
     }
+    apply_hash_flags(flags, &mut cfg)?;
     cfg.validate()?;
     Ok(cfg)
+}
+
+/// Parse the shared-hash-service knobs strictly (same rule as the other
+/// data-plane flags: malformed values fail loudly).  `--hash-batch` and
+/// `--hash-devices` need integers >= 1; `--hash-linger-us 0` is valid —
+/// it disables lingering so every flush is immediate.
+fn apply_hash_flags(flags: &HashMap<String, String>, cfg: &mut ClientConfig) -> Result<()> {
+    if let Some(v) = flags.get("hash-batch") {
+        cfg.hash_batch = match v.parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => {
+                return Err(Error::Config(format!(
+                    "bad --hash-batch `{v}` (need an integer >= 1)"
+                )))
+            }
+        };
+    }
+    if let Some(v) = flags.get("hash-linger-us") {
+        cfg.hash_linger_us = match v.parse::<u64>() {
+            Ok(n) => n,
+            Err(_) => {
+                return Err(Error::Config(format!(
+                    "bad --hash-linger-us `{v}` (need a non-negative integer)"
+                )))
+            }
+        };
+    }
+    if let Some(v) = flags.get("hash-devices") {
+        cfg.hash_devices = match v.parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => {
+                return Err(Error::Config(format!(
+                    "bad --hash-devices `{v}` (need an integer >= 1)"
+                )))
+            }
+        };
+    }
+    Ok(())
 }
 
 fn connect_sai(flags: &HashMap<String, String>) -> Result<Sai> {
@@ -185,7 +227,10 @@ fn connect_sai(flags: &HashMap<String, String>) -> Result<Sai> {
         eprintln!("note: --nodes is obsolete; storage nodes are discovered via the manager");
     }
     let cfg = client_config(flags)?;
-    let engine = build_engine(&cfg, None)?;
+    // Engines are handles onto the process-wide shared hash service:
+    // every client in this process with the same engine/policy
+    // coalesces its hashing into one backend (see `gpustore::hashsvc`).
+    let engine = session_engine(&cfg, None)?;
     Sai::connect(manager, cfg, engine, None)
 }
 
@@ -292,6 +337,17 @@ fn cmd_write(flags: &HashMap<String, String>) -> Result<()> {
             r.hash_secs,
             r.hash_hidden_secs
         );
+        if flags.contains_key("verbose") {
+            println!(
+                "  hash batching: {} batches, depth mean {:.1} / max {}, \
+                 svc linger {:.2} ms, overlap {:.0}%",
+                r.hash_batches,
+                r.hash_batch_depth_mean,
+                r.hash_batch_depth_max,
+                1e3 * r.hash_linger_secs,
+                100.0 * r.overlap_fraction()
+            );
+        }
         total += r.bytes;
         secs += r.elapsed.as_secs_f64();
     }
@@ -385,9 +441,16 @@ fn cmd_demo(flags: &HashMap<String, String>) -> Result<()> {
     // Cluster::spawn validates replication against the node count.
     let replication = parse_replication(flags)?;
     let lease_timeout = parse_lease_timeout(flags)?;
+    // The hash-service knobs ride through the cluster config so every
+    // client connected via `service_client` shares one policy.
+    let mut knobs = ClientConfig::default();
+    apply_hash_flags(flags, &mut knobs)?;
     let cluster = Cluster::spawn(ClusterConfig {
         replication,
         lease_timeout,
+        hash_batch: knobs.hash_batch,
+        hash_linger_us: knobs.hash_linger_us,
+        hash_devices: knobs.hash_devices,
         ..ClusterConfig::default()
     })?;
     println!(
@@ -396,9 +459,7 @@ fn cmd_demo(flags: &HashMap<String, String>) -> Result<()> {
         cluster.manager_addr(),
         cluster.node_addrs()
     );
-    let cfg = ClientConfig::ca_cpu_fixed(4);
-    let engine = build_engine(&cfg, None)?;
-    let sai = cluster.client(cfg, engine)?;
+    let sai = cluster.service_client(ClientConfig::ca_cpu_fixed(4))?;
     let data = Rng::new(1).bytes(8 << 20);
     let write_streaming = |name: &str| -> Result<gpustore::store::WriteReport> {
         let mut w = sai.create(name)?;
@@ -487,6 +548,29 @@ mod tests {
             // conversion — must fail loudly, not wrap.
             ("inflight-mb", "17592186044417"),
             ("node-inflight", "0"),
+        ] {
+            let mut f = HashMap::new();
+            f.insert(k.to_string(), bad.to_string());
+            assert!(client_config(&f).is_err(), "{k}={bad}");
+        }
+    }
+
+    #[test]
+    fn client_config_hash_service_flags() {
+        let mut flags = HashMap::new();
+        flags.insert("hash-batch".into(), "128".into());
+        flags.insert("hash-linger-us".into(), "0".into());
+        flags.insert("hash-devices".into(), "2".into());
+        let cfg = client_config(&flags).unwrap();
+        assert_eq!(cfg.hash_batch, 128);
+        assert_eq!(cfg.hash_linger_us, 0);
+        assert_eq!(cfg.hash_devices, 2);
+        for (k, bad) in [
+            ("hash-batch", "0"),
+            ("hash-batch", "x"),
+            ("hash-linger-us", "-5"),
+            ("hash-linger-us", "y"),
+            ("hash-devices", "0"),
         ] {
             let mut f = HashMap::new();
             f.insert(k.to_string(), bad.to_string());

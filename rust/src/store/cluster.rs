@@ -102,6 +102,20 @@ impl Cluster {
         Sai::connect(self.manager_addr(), cfg, engine, self.client_shaper())
     }
 
+    /// Connect a SAI client whose engine is a handle onto the shared
+    /// process-wide hash service (see [`crate::hashsvc`]).  The cluster
+    /// config's batching knobs (`hash_batch` / `hash_linger_us` /
+    /// `hash_devices`) are stamped onto the client config first, so
+    /// every client of this cluster coalesces into the same service.
+    pub fn service_client(&self, cfg: ClientConfig) -> Result<Sai> {
+        let mut cfg = cfg;
+        cfg.hash_batch = self.cfg.hash_batch;
+        cfg.hash_linger_us = self.cfg.hash_linger_us;
+        cfg.hash_devices = self.cfg.hash_devices;
+        let engine = crate::hashsvc::session_engine(&cfg, None)?;
+        self.client(cfg, engine)
+    }
+
     /// Kill one storage node (failure injection for tests): stops its
     /// accept loop, its heartbeats, and severs existing connections.
     pub fn kill_node(&mut self, idx: usize) {

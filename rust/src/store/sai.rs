@@ -76,6 +76,19 @@ pub struct WriteReport {
     pub hash_hidden_secs: f64,
     /// Fraction of bytes deduplicated (similarity detected).
     pub similarity: f64,
+    /// Device batches that served this session's direct-hash tickets.
+    /// On a shared hash service a "batch" is the coalesced batch the
+    /// ticket rode in (other sessions' blocks included in its depth).
+    pub hash_batches: usize,
+    /// Mean depth, in blocks, of those device batches (0.0 when no
+    /// batched hashing happened).
+    pub hash_batch_depth_mean: f64,
+    /// Deepest device batch any of this session's tickets rode in.
+    pub hash_batch_depth_max: usize,
+    /// Time this session's submissions lingered in the shared service's
+    /// coalescing queue (zero on dedicated engines) — the latency cost
+    /// bought by `hash_linger_us` in exchange for deeper batches.
+    pub hash_linger_secs: f64,
 }
 
 impl WriteReport {

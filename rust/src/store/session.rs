@@ -215,6 +215,9 @@ pub struct FileWriter<'a> {
     inflight: Option<Inflight>,
     committed: bool,
     report: WriteReport,
+    /// Sum of device-batch depths behind `report.hash_batches` — kept
+    /// here (not in the report) so the mean is computed once at close.
+    hash_depth_sum: u64,
     t0: Instant,
 }
 
@@ -266,6 +269,7 @@ impl<'a> FileWriter<'a> {
             inflight: None,
             committed: false,
             report: WriteReport::default(),
+            hash_depth_sum: 0,
             t0,
         })
     }
@@ -359,6 +363,10 @@ impl<'a> FileWriter<'a> {
         self.report.blocks = self.metas.len();
         if self.report.replication == 0 {
             self.report.replication = 1;
+        }
+        if self.report.hash_batches > 0 {
+            self.report.hash_batch_depth_mean =
+                self.hash_depth_sum as f64 / self.report.hash_batches as f64;
         }
         self.report.elapsed = self.t0.elapsed();
         self.report.similarity = if self.report.bytes == 0 {
@@ -482,6 +490,15 @@ impl<'a> FileWriter<'a> {
     fn add_hash_timing(&mut self, t: HashTiming) {
         self.report.hash_secs += t.exposed.as_secs_f64();
         self.report.hash_hidden_secs += t.hidden.as_secs_f64();
+        self.report.hash_linger_secs += t.svc_wait.as_secs_f64();
+        // Window-hash tickets report no device-batch depth; only the
+        // direct-hash batches count toward batching stats.
+        if t.batch_blocks > 0 {
+            self.report.hash_batches += 1;
+            self.hash_depth_sum += t.batch_blocks as u64;
+            self.report.hash_batch_depth_max =
+                self.report.hash_batch_depth_max.max(t.batch_blocks);
+        }
     }
 
     /// Manager-driven placement + transfer for one hashed batch: one

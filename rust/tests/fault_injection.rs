@@ -395,3 +395,100 @@ fn expired_read_lease_unpins_and_zombie_reader_errors() {
         "zombie reader must error, not serve a half-deleted snapshot"
     );
 }
+
+/// PR-6 hole (shared hash service): a session killed mid-batch — its
+/// ticket and engine handle dropped without ever waiting, reply channel
+/// and all — must not strand the other sessions coalesced into the same
+/// device batch, must not deadlock the flush timer for later
+/// submissions, and must not poison the backend.
+#[test]
+fn dropped_hash_session_mid_batch_strands_nothing() {
+    use gpustore::crystal::{BackendKind, CrystalOpts, Master, MockTuning};
+    use gpustore::hashgpu::HashEngine;
+    use gpustore::hashsvc::{HashService, SvcPolicy};
+    use gpustore::runtime::artifacts::Manifest;
+
+    // Slow mock device (30 ms per step) so the coalesced batch is still
+    // in flight when the victim session disappears; a wide linger window
+    // guarantees both sessions land in the SAME device batch.
+    let opts = CrystalOpts {
+        devices: 1,
+        ..CrystalOpts::optimized(BackendKind::Mock {
+            artifact_dir: Manifest::default_dir(),
+            tuning: MockTuning {
+                fixed_delay: Duration::from_millis(30),
+                ..MockTuning::default()
+            },
+        })
+    };
+    let master = Arc::new(Master::new(opts).unwrap());
+    let svc = HashService::over_crystal(
+        master,
+        4096,
+        48,
+        SvcPolicy {
+            max_batch_blocks: 64,
+            max_linger: Duration::from_millis(100),
+            devices: 1,
+        },
+    );
+
+    let victim = svc.handle();
+    let survivor = svc.handle();
+    let mk_blocks = |seed: u64| {
+        Arc::new(
+            (0..4)
+                .map(|i| Rng::new(seed + i).bytes(9000))
+                .collect::<Vec<Vec<u8>>>(),
+        )
+    };
+
+    // Both sessions enqueue within one linger window -> one device batch.
+    let doomed = victim.submit_direct_batch(mk_blocks(10)).unwrap();
+    let b_blocks = mk_blocks(20);
+    let kept = survivor.submit_direct_batch(b_blocks.clone()).unwrap();
+
+    // SIGKILL analog for the victim session: its ticket (the reply
+    // receiver) and its handle vanish while the batch is queued/in
+    // flight.  Nothing ever waits on the victim's digests.
+    drop(doomed);
+    drop(victim);
+
+    // The survivor's ticket still resolves, bit-exact...
+    let cpu = CpuEngine::new(1, 4096, WindowHashMode::Rolling);
+    let (digests, timing) = kept.wait().unwrap();
+    assert_eq!(digests.len(), b_blocks.len());
+    for (blk, d) in b_blocks.iter().zip(&digests) {
+        assert_eq!(cpu.direct_hash(blk).unwrap(), *d, "survivor digest");
+    }
+    // ...and the device batch really carried the victim's blocks too:
+    // the dead session's submissions left the queue instead of rotting.
+    assert_eq!(timing.batch_blocks, 8, "both sessions' blocks coalesced");
+
+    // Flush timer is alive: a later submission on a fresh handle still
+    // dispatches and resolves (nothing deadlocked on the dead reply
+    // channel), and the drop never poisoned the backend.
+    let late = svc.handle();
+    let c_blocks = mk_blocks(30);
+    let (digests, _) = late
+        .submit_direct_batch(c_blocks.clone())
+        .unwrap()
+        .wait()
+        .unwrap();
+    for (blk, d) in c_blocks.iter().zip(&digests) {
+        assert_eq!(cpu.direct_hash(blk).unwrap(), *d, "late digest");
+    }
+    assert!(svc.poisoned().is_none(), "a dropped session is not a fault");
+    let stats = svc.stats();
+    assert!(stats.coalesced >= 1, "victim+survivor merged into one batch");
+    assert_eq!(stats.errors, 0);
+
+    // Shutdown with an in-flight-but-unclaimed reply joins cleanly: the
+    // dispatcher drains the queue on shutdown and the lane threads exit,
+    // so dropping the last handles cannot hang the test binary.
+    let orphan = late.submit_direct_batch(mk_blocks(40)).unwrap();
+    drop(orphan);
+    drop(late);
+    drop(survivor);
+    drop(svc);
+}

@@ -866,3 +866,156 @@ fn prop_store_write_read_fuzz() {
         }
     }
 }
+
+/// PROPERTY (shared-service transparency, PR 6): hashing through handles
+/// onto one shared coalescing [`HashService`] is bit-identical to
+/// per-session engines for random interleavings of concurrent sessions —
+/// first at the engine level (random submissions racing through a tight
+/// coalescing policy), then end to end (concurrent service-backed write
+/// sessions vs dedicated-engine clients over twin clusters, reusing the
+/// streaming/one-shot equivalence harness's block-map comparison).
+#[test]
+fn prop_shared_hash_service_bit_identical() {
+    use gpustore::hashgpu::{build_engine, CpuEngine, HashEngine, WindowHashMode};
+    use gpustore::hashsvc::{HashService, SvcPolicy};
+    use std::time::Duration;
+
+    // Engine level: concurrent sessions push random submissions (odd
+    // sizes, empty blocks included) through one service whose policy
+    // forces cross-session coalescing (odd batch bound, non-zero linger,
+    // two lanes).  Every digest and window-hash answer must match a
+    // dedicated CPU engine's, and every ticket must report a device
+    // batch at least as deep as its own submission.
+    let reference = CpuEngine::new(1, 4096, WindowHashMode::Rolling);
+    for seed in 1300u64..1306 {
+        let svc = HashService::over_engine(
+            Arc::new(CpuEngine::new(2, 4096, WindowHashMode::Rolling)),
+            SvcPolicy {
+                max_batch_blocks: 7,
+                max_linger: Duration::from_millis(2),
+                devices: 2,
+            },
+        );
+        let sessions = 2 + (seed as usize % 3);
+        std::thread::scope(|scope| {
+            for s in 0..sessions {
+                let engine = svc.handle();
+                let reference = &reference;
+                scope.spawn(move || {
+                    let mut rng = Rng::new(seed * 101 + s as u64);
+                    for _ in 0..10 {
+                        let n_blocks = rng.range(1, 5);
+                        let blocks: Arc<Vec<Vec<u8>>> = Arc::new(
+                            (0..n_blocks)
+                                .map(|_| {
+                                    let len = rng.range(0, 5000);
+                                    rng.bytes(len)
+                                })
+                                .collect(),
+                        );
+                        let ticket = engine.submit_direct_batch(blocks.clone()).unwrap();
+                        let (digests, timing) = ticket.wait().unwrap();
+                        assert_eq!(digests.len(), blocks.len(), "seed={seed} s={s}");
+                        assert!(
+                            timing.batch_blocks >= blocks.len(),
+                            "seed={seed} s={s}: coalesced depth below own submission"
+                        );
+                        for (blk, d) in blocks.iter().zip(&digests) {
+                            assert_eq!(
+                                reference.direct_hash(blk).unwrap(),
+                                *d,
+                                "seed={seed} s={s} digest"
+                            );
+                        }
+                        let wlen = rng.range(48, 4000);
+                        let data = rng.bytes(wlen);
+                        assert_eq!(
+                            engine.window_hashes(&data).unwrap(),
+                            reference.window_hashes(&data).unwrap(),
+                            "seed={seed} s={s} window"
+                        );
+                    }
+                });
+            }
+        });
+    }
+
+    // End to end: concurrent write sessions on a shared-service cluster
+    // (every client a handle onto ONE process-wide service) must commit
+    // the same content hashes and read-backs as dedicated-engine clients
+    // writing the same data sequentially to a twin cluster.  Replica
+    // sets are placement-order-dependent under concurrency, so the
+    // comparison is on (hash, len) sequences, not full block-maps.
+    use gpustore::config::{ClientConfig, ClusterConfig};
+    use gpustore::store::Cluster;
+    use std::io::Write as _;
+
+    let mk_cluster = || {
+        Cluster::spawn(ClusterConfig {
+            nodes: 3,
+            link_bps: 1e9,
+            shape: false,
+            replication: 1,
+            hash_batch: 32,
+            hash_linger_us: 300,
+            ..ClusterConfig::default()
+        })
+        .unwrap()
+    };
+    let shared = mk_cluster();
+    let dedicated = mk_cluster();
+    for seed in 1310u64..1313 {
+        let mut rng = Rng::new(seed);
+        let cfg = ClientConfig {
+            block_size: 16 * 1024,
+            write_buffer: 64 * 1024,
+            stripe_width: 2,
+            ..ClientConfig::ca_cpu_fixed(2)
+        };
+        let sessions = 3;
+        let datas: Vec<Vec<u8>> = (0..sessions)
+            .map(|_| {
+                let len = rng.range(1, 200_000);
+                rng.bytes(len)
+            })
+            .collect();
+
+        std::thread::scope(|scope| {
+            for (s, data) in datas.iter().enumerate() {
+                let sai = shared.service_client(cfg.clone()).unwrap();
+                scope.spawn(move || {
+                    let mut rng = Rng::new(seed * 31 + s as u64);
+                    let mut w = sai.create(&format!("svc-{seed}-{s}")).unwrap();
+                    let mut off = 0;
+                    while off < data.len() {
+                        let take = rng.range(1, 60_000).min(data.len() - off);
+                        w.write_all(&data[off..off + take]).unwrap();
+                        off += take;
+                    }
+                    let r = w.close().unwrap();
+                    assert!(
+                        r.hash_batches > 0 && r.hash_batch_depth_max >= 1,
+                        "seed={seed} s={s}: no batching stats reported"
+                    );
+                });
+            }
+        });
+
+        let engine = build_engine(&cfg, None).unwrap();
+        let probe_d = dedicated.client(cfg.clone(), engine).unwrap();
+        for (s, data) in datas.iter().enumerate() {
+            probe_d.write_file(&format!("svc-{seed}-{s}"), data).unwrap();
+        }
+
+        let probe_s = shared.service_client(cfg.clone()).unwrap();
+        for (s, data) in datas.iter().enumerate() {
+            let name = format!("svc-{seed}-{s}");
+            let (_, m_s) = probe_s.get_block_map(&name).unwrap();
+            let (_, m_d) = probe_d.get_block_map(&name).unwrap();
+            let h_s: Vec<_> = m_s.iter().map(|b| (b.hash, b.len)).collect();
+            let h_d: Vec<_> = m_d.iter().map(|b| (b.hash, b.len)).collect();
+            assert_eq!(h_s, h_d, "seed={seed} file={s} hash sequence");
+            assert_eq!(probe_s.read_file(&name).unwrap(), *data, "seed={seed} file={s}");
+        }
+    }
+}
