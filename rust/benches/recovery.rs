@@ -1,0 +1,235 @@
+//! Durable control-plane recovery benchmark (PR 7): how fast the
+//! manager comes back from its write-ahead log, and what group commit
+//! buys on the logging hot path.
+//!
+//!     cargo bench --bench recovery            # full matrix
+//!     cargo bench --bench recovery -- quick   # CI smoke subset
+//!
+//! Two experiments, both against a bare [`ManagerState`] (no TCP, no
+//! storage nodes — the WAL is the system under test):
+//!
+//! * **replay**: drive N logged mutations (open-lease → alloc →
+//!   commit per file), kill the state, and time a cold
+//!   `with_durability` recovery — replay time must scale linearly in
+//!   log length.
+//! * **group-commit**: the same mutation workload under
+//!   `--wal-sync 0` (fsync every record, the strict baseline) vs the
+//!   default 5 ms window (one fsync covers every record in the
+//!   window).  Batched group commit must beat per-record fsync —
+//!   CI gates on exactly that.
+//!
+//! Results are printed as tables and flushed to `BENCH_pr7.json` at
+//! the repo root.
+
+use std::time::{Duration, Instant};
+
+use gpustore::store::proto::{BlockMeta, BlockSpec, Msg};
+use gpustore::store::{policy_for, ManagerState};
+use gpustore::util::Rng;
+use gpustore::wal::DurabilityOpts;
+
+/// Self-cleaning scratch directory (the bench has no access to the
+/// crate-internal test fixture).
+struct TempDir(std::path::PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> TempDir {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let n = SEQ.fetch_add(1, Ordering::Relaxed);
+        let name = format!("gpustore-bench-{tag}-{}-{n}", std::process::id());
+        let dir = std::env::temp_dir().join(name);
+        std::fs::create_dir_all(&dir).unwrap();
+        TempDir(dir)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+/// A long-lived lease window so nothing lapses mid-bench, and a huge
+/// snapshot cadence so recovery measures *pure log replay*.
+const LEASE: Duration = Duration::from_secs(600);
+
+fn opts(dir: &TempDir, sync_interval: Duration) -> DurabilityOpts {
+    DurabilityOpts {
+        data_dir: dir.0.clone(),
+        sync_interval,
+        snapshot_every: u64::MAX,
+    }
+}
+
+fn state_with(o: &DurabilityOpts) -> ManagerState {
+    ManagerState::with_durability(policy_for(1), LEASE, Some(o.clone())).unwrap()
+}
+
+fn join_nodes(state: &ManagerState) {
+    // Root-reserved loopback ports: nothing listens, and this workload
+    // never triggers GC, so no connection is ever attempted.
+    for port in 1..=4 {
+        let addr = format!("127.0.0.1:{port}");
+        let _ = state.handle(Msg::NodeJoin { addr });
+    }
+}
+
+/// Drive `files` fresh single-block files through the logged mutation
+/// path: open-lease, alloc, commit — 3 WAL records per file, no
+/// overwrites (so no GC network traffic pollutes the measurement).
+fn drive(state: &ManagerState, rng: &mut Rng, files: usize, tag: &str) {
+    join_nodes(state);
+    for i in 0..files {
+        if i % 256 == 0 {
+            // Volatile liveness refresh (unlogged): keeps placement
+            // alive through runs longer than the heartbeat window.
+            join_nodes(state);
+        }
+        let file = format!("{tag}-{i}");
+        let open = state.handle(Msg::OpenLease {
+            file: file.clone(),
+            write: true,
+        });
+        let Msg::LeaseGrant { lease, .. } = open else {
+            panic!("open failed: {open:?}");
+        };
+        let mut hash = [0u8; 16];
+        rng.fill(&mut hash);
+        let alloc = state.handle(Msg::AllocPlacement {
+            file: file.clone(),
+            lease,
+            blocks: vec![BlockSpec { hash, len: 4096 }],
+        });
+        let Msg::Placement { assignments } = alloc else {
+            panic!("alloc failed: {alloc:?}");
+        };
+        let commit = state.handle(Msg::CommitBlockMap {
+            file,
+            lease,
+            blocks: vec![BlockMeta {
+                hash,
+                len: 4096,
+                replicas: assignments[0].replicas.clone(),
+            }],
+        });
+        assert!(matches!(commit, Msg::Ok), "commit failed: {commit:?}");
+    }
+}
+
+struct Record {
+    kind: &'static str,
+    sync: &'static str,
+    records: u64,
+    millis: f64,
+    records_per_sec: f64,
+}
+
+/// Experiment 1: cold-recovery time vs log length.
+fn replay_case(files: usize, out: &mut Vec<Record>) {
+    let dir = TempDir::new("replay");
+    let o = opts(&dir, Duration::from_millis(5));
+    let state = state_with(&o);
+    let mut rng = Rng::new(0x5EED ^ files as u64);
+    drive(&state, &mut rng, files, "r");
+    let records = state.last_lsn();
+    let want = state.snapshot_state();
+    state.detach_wal();
+    drop(state);
+
+    let t = Instant::now();
+    let recovered = state_with(&o);
+    let millis = t.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(recovered.snapshot_state(), want, "recovery diverged");
+    println!(
+        "replay: {records:>7} records in {millis:>9.2} ms  \
+         ({:.0} records/s)",
+        records as f64 / (millis / 1e3)
+    );
+    out.push(Record {
+        kind: "replay",
+        sync: "batched-5ms",
+        records,
+        millis,
+        records_per_sec: records as f64 / (millis / 1e3),
+    });
+}
+
+/// Experiment 2: logging throughput, per-record fsync vs group commit.
+fn group_commit_case(
+    sync: &'static str,
+    sync_interval: Duration,
+    files: usize,
+    out: &mut Vec<Record>,
+) {
+    let dir = TempDir::new("sync");
+    let o = opts(&dir, sync_interval);
+    let state = state_with(&o);
+    let mut rng = Rng::new(0xABBA ^ files as u64);
+    let t = Instant::now();
+    drive(&state, &mut rng, files, "s");
+    let millis = t.elapsed().as_secs_f64() * 1e3;
+    let records = state.last_lsn();
+    println!(
+        "group-commit [{sync:>11}]: {records:>6} records in {millis:>9.2} ms  \
+         ({:.0} records/s)",
+        records as f64 / (millis / 1e3)
+    );
+    out.push(Record {
+        kind: "group-commit",
+        sync,
+        records,
+        millis,
+        records_per_sec: records as f64 / (millis / 1e3),
+    });
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| !a.starts_with('-'))
+        .collect();
+    let quick = args.iter().any(|a| a == "quick");
+
+    // ~1k / ~10k records quick; the full run adds ~50k (3 records per
+    // file plus the 4 node joins).
+    let replay_files: Vec<usize> = if quick {
+        vec![333, 3_333]
+    } else {
+        vec![333, 3_333, 16_666]
+    };
+    let sync_files = if quick { 700 } else { 3_500 };
+
+    let mut records: Vec<Record> = Vec::new();
+    println!("== recovery: replay time vs log length ==");
+    for files in replay_files {
+        replay_case(files, &mut records);
+    }
+    println!("\n== logging: per-record fsync vs group commit ==");
+    group_commit_case("per-record", Duration::ZERO, sync_files, &mut records);
+    group_commit_case("batched-5ms", Duration::from_millis(5), sync_files, &mut records);
+
+    flush(&records, quick);
+}
+
+fn flush(records: &[Record], quick: bool) {
+    let mut out = String::from("{\n  \"bench\": \"recovery\",\n  \"unit\": \"records/s\",\n");
+    out.push_str(&format!("  \"quick\": {quick},\n  \"results\": [\n"));
+    for (i, r) in records.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"kind\": \"{}\", \"sync\": \"{}\", \"records\": {}, \"millis\": {:.3}, \
+             \"records_per_sec\": {:.0}}}{}\n",
+            r.kind,
+            r.sync,
+            r.records,
+            r.millis,
+            r.records_per_sec,
+            if i + 1 == records.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_pr7.json", &out) {
+        Ok(()) => println!("\nwrote BENCH_pr7.json ({} results)", records.len()),
+        Err(e) => eprintln!("could not write BENCH_pr7.json: {e}"),
+    }
+}

@@ -69,12 +69,6 @@ pub struct ClientConfig {
     pub write_buffer: usize,
     /// Direct-hash segment size for the parallel Merkle–Damgård split.
     pub segment_bytes: usize,
-    /// Stripe width (paper: stripes of 4).  Placement is manager-driven
-    /// (control-plane v2) and the data plane is flow-controlled by
-    /// `inflight_budget`/`node_inflight` (data-plane v2), so this is a
-    /// legacy knob kept for configuration compatibility; it no longer
-    /// bounds transfers.
-    pub stripe_width: usize,
     /// Maximum operations in flight per node connection (data-plane
     /// v2).  The duplex node links pipeline up to this many puts/gets
     /// on one socket; `1` degenerates to the old lock-step protocol
@@ -113,7 +107,6 @@ impl Default for ClientConfig {
             cdc_mask: (1 << 20) - 1,
             write_buffer: 4 * 1024 * 1024,
             segment_bytes: 4096,
-            stripe_width: 4,
             node_inflight: 16,
             inflight_budget: 32 * 1024 * 1024,
             hash_batch: 64,
@@ -140,7 +133,6 @@ impl ClientConfig {
     pub fn validate(&self) -> crate::Result<()> {
         if self.block_size == 0
             || self.write_buffer == 0
-            || self.stripe_width == 0
             || self.node_inflight == 0
             || self.inflight_budget == 0
             || self.hash_batch == 0
@@ -260,6 +252,12 @@ pub struct ClusterConfig {
     pub hash_linger_us: u64,
     /// Cluster-wide service fan-out (see [`ClientConfig::hash_devices`]).
     pub hash_devices: usize,
+    /// Manager durability (PR 7): `Some` gives the manager a data dir
+    /// with a write-ahead log + snapshots, so
+    /// [`Cluster::restart_manager`](crate::store::Cluster::restart_manager)
+    /// recovers the control plane after a crash.  `None` (the default)
+    /// keeps the pre-durability in-memory manager.
+    pub durability: Option<crate::wal::DurabilityOpts>,
 }
 
 impl Default for ClusterConfig {
@@ -274,6 +272,7 @@ impl Default for ClusterConfig {
             hash_batch: 64,
             hash_linger_us: 200,
             hash_devices: 1,
+            durability: None,
         }
     }
 }

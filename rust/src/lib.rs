@@ -34,6 +34,9 @@
 //! - [`runtime`] — PJRT artifact loading/execution (`xla` crate behind the
 //!   `pjrt` feature; a synthetic manifest serves host-recompute backends).
 //! - [`hash`], [`chunking`] — CPU baselines + host-side final stages.
+//! - [`wal`] — durable control plane: segmented CRC-framed write-ahead
+//!   log + snapshots under the manager, group-commit fsync batching,
+//!   torn-tail-tolerant recovery, and the log-shipping record format.
 //! - [`sim`] — discrete-event performance model used by the figure benches
 //!   (models the session pipeline's hash/transfer overlap).
 //! - [`workload`] — paper workload generators (different/similar/checkpoint,
@@ -52,6 +55,7 @@ pub mod runtime;
 pub mod sim;
 pub mod store;
 pub mod util;
+pub mod wal;
 pub mod workload;
 
 pub use error::{Error, Result};

@@ -20,8 +20,9 @@ use gpustore::config::{CaMode, ClientConfig, ClusterConfig, HashEngineKind};
 use gpustore::hashsvc::session_engine;
 use gpustore::store::manager::DEFAULT_LEASE_TIMEOUT;
 use gpustore::store::proto::MAX_REPLICAS;
-use gpustore::store::{policy_for, Cluster, Manager, Sai, StorageNode};
+use gpustore::store::{policy_for, Cluster, Follower, Manager, Sai, StorageNode};
 use gpustore::util::{human_bytes, Rng};
+use gpustore::wal::DurabilityOpts;
 use gpustore::{Error, Result};
 
 /// Application-side streaming granularity for the CLI's writes: the
@@ -68,7 +69,9 @@ fn print_usage() {
     println!(
         "gpustore — GPU-accelerated content-addressable storage \
          (TPDS'12 reproduction)\n\n\
-         USAGE:\n  gpustore manager --listen ADDR [--replication N] [--lease-timeout SECS]\n  \
+         USAGE:\n  gpustore manager --listen ADDR [--replication N] [--lease-timeout SECS]\n\
+         \x20                [--data-dir DIR [--wal-sync MS] [--snapshot-every N]]\n\
+         \x20                [--follow ADDR]\n  \
          gpustore node --listen ADDR --manager ADDR [--advertise ADDR] [--disk DIR]\n  \
          gpustore write --manager ADDR [--mode fixed|cdc|none]\n\
          \x20                [--engine cpu|gpu|oracle] [--threads N]\n\
@@ -80,7 +83,7 @@ fn print_usage() {
          gpustore verify --manager ADDR --file NAME\n  \
          gpustore ls --manager ADDR\n  \
          gpustore trace --manager ADDR --trace FILE [--seed N]\n  \
-         gpustore demo [--replication N] [--lease-timeout SECS]\n\
+         gpustore demo [--replication N] [--lease-timeout SECS] [--data-dir DIR]\n\
          \x20             [--hash-batch N] [--hash-linger-us US] [--hash-devices N]\n\n\
          Nodes register with the manager; clients discover them from it\n\
          (no --nodes flag).  `make artifacts` must have produced\n\
@@ -267,18 +270,113 @@ fn parse_lease_timeout(flags: &HashMap<String, String>) -> Result<Duration> {
     }
 }
 
+/// Parse the durability knobs: `--data-dir DIR` turns the write-ahead
+/// log on; `--wal-sync MS` (group-commit fsync interval, `0` = fsync
+/// every record) and `--snapshot-every N` refine it and therefore
+/// require `--data-dir`.
+fn parse_durability(flags: &HashMap<String, String>) -> Result<Option<DurabilityOpts>> {
+    let Some(dir) = flags.get("data-dir") else {
+        for k in ["wal-sync", "snapshot-every"] {
+            if flags.contains_key(k) {
+                return Err(Error::Config(format!("--{k} requires --data-dir")));
+            }
+        }
+        return Ok(None);
+    };
+    let mut opts = DurabilityOpts::new(dir);
+    if let Some(v) = flags.get("wal-sync") {
+        opts.sync_interval = match v.parse::<u64>() {
+            Ok(ms) => Duration::from_millis(ms),
+            Err(_) => {
+                return Err(Error::Config(format!(
+                    "bad --wal-sync `{v}` (need a non-negative integer of milliseconds)"
+                )))
+            }
+        };
+    }
+    if let Some(v) = flags.get("snapshot-every") {
+        opts.snapshot_every = match v.parse::<u64>() {
+            Ok(n) if n >= 1 => n,
+            _ => {
+                return Err(Error::Config(format!(
+                    "bad --snapshot-every `{v}` (need an integer >= 1)"
+                )))
+            }
+        };
+    }
+    Ok(Some(opts))
+}
+
+/// Consecutive failed polls after which a follower assumes the primary
+/// is gone and promotes itself.
+const FOLLOWER_PROMOTE_AFTER: u32 = 20;
+
+/// Follower poll cadence.
+const FOLLOWER_POLL: Duration = Duration::from_millis(100);
+
 fn cmd_manager(flags: &HashMap<String, String>) -> Result<()> {
     let listen = flags.get("listen").map(String::as_str).unwrap_or("0.0.0.0:7070");
     let replication = parse_replication(flags)?;
     let lease_timeout = parse_lease_timeout(flags)?;
+    let durability = parse_durability(flags)?;
+    if let Some(primary) = flags.get("follow") {
+        if durability.is_some() {
+            return Err(Error::Config(
+                "--follow replicates in memory from the primary's log; \
+                 it cannot be combined with --data-dir"
+                    .into(),
+            ));
+        }
+        return cmd_follow(listen, primary, lease_timeout);
+    }
     let policy = policy_for(replication);
     let name = policy.name();
-    let mgr = Manager::spawn_with_opts(listen, policy, lease_timeout)?;
+    let durable = match &durability {
+        Some(o) => format!(", data dir {}", o.data_dir.display()),
+        None => ", in-memory".into(),
+    };
+    let mgr = Manager::spawn_with_opts(listen, policy, lease_timeout, durability)?;
     println!(
         "metadata manager listening on {} (policy {name}, replication {replication}, \
-         lease timeout {lease_timeout:?})",
+         lease timeout {lease_timeout:?}{durable})",
         mgr.addr()
     );
+    loop {
+        std::thread::park();
+    }
+}
+
+/// Log-shipping follower: bootstrap from the primary's snapshot, tail
+/// its WAL, and self-promote once the primary stops answering.
+fn cmd_follow(listen: &str, primary: &str, lease_timeout: Duration) -> Result<()> {
+    let follower = Follower::connect(primary, lease_timeout)?;
+    println!(
+        "follower replicating from {primary} (lsn {}); will promote on {listen} \
+         after {FOLLOWER_PROMOTE_AFTER} failed polls",
+        follower.last_lsn()
+    );
+    let mut failures = 0u32;
+    loop {
+        match follower.poll() {
+            Ok(n) => {
+                failures = 0;
+                if n == 0 {
+                    std::thread::sleep(FOLLOWER_POLL);
+                }
+            }
+            Err(e) => {
+                failures += 1;
+                if failures >= FOLLOWER_PROMOTE_AFTER {
+                    eprintln!("follower: primary unreachable ({e}); promoting");
+                    break;
+                }
+                std::thread::sleep(FOLLOWER_POLL);
+            }
+        }
+    }
+    let lsn = follower.last_lsn();
+    let mgr = follower.promote(listen)?;
+    println!("promoted follower serving on {} (lsn {lsn})", mgr.addr());
     loop {
         std::thread::park();
     }
@@ -441,6 +539,7 @@ fn cmd_demo(flags: &HashMap<String, String>) -> Result<()> {
     // Cluster::spawn validates replication against the node count.
     let replication = parse_replication(flags)?;
     let lease_timeout = parse_lease_timeout(flags)?;
+    let durability = parse_durability(flags)?;
     // The hash-service knobs ride through the cluster config so every
     // client connected via `service_client` shares one policy.
     let mut knobs = ClientConfig::default();
@@ -451,11 +550,16 @@ fn cmd_demo(flags: &HashMap<String, String>) -> Result<()> {
         hash_batch: knobs.hash_batch,
         hash_linger_us: knobs.hash_linger_us,
         hash_devices: knobs.hash_devices,
+        durability: durability.clone(),
         ..ClusterConfig::default()
     })?;
+    let durable = match &durability {
+        Some(o) => format!(", data dir {}", o.data_dir.display()),
+        None => String::new(),
+    };
     println!(
         "demo cluster: manager {} nodes {:?} (replication {replication}, \
-         lease timeout {lease_timeout:?})",
+         lease timeout {lease_timeout:?}{durable})",
         cluster.manager_addr(),
         cluster.node_addrs()
     );
@@ -518,6 +622,35 @@ mod tests {
         for bad in ["0", "-1", "x", "inf", "nan", "1e20"] {
             flags.insert("lease-timeout".into(), bad.into());
             assert!(parse_lease_timeout(&flags).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn parse_durability_flags() {
+        let mut flags = HashMap::new();
+        assert!(parse_durability(&flags).unwrap().is_none());
+        // The refining knobs are meaningless without a data dir.
+        flags.insert("wal-sync".into(), "5".into());
+        assert!(parse_durability(&flags).is_err());
+        flags.insert("data-dir".into(), "/tmp/d".into());
+        flags.insert("snapshot-every".into(), "100".into());
+        let opts = parse_durability(&flags).unwrap().unwrap();
+        assert_eq!(opts.data_dir, std::path::PathBuf::from("/tmp/d"));
+        assert_eq!(opts.sync_interval, Duration::from_millis(5));
+        assert_eq!(opts.snapshot_every, 100);
+        // `--wal-sync 0` is valid: fsync every record.
+        flags.insert("wal-sync".into(), "0".into());
+        let opts = parse_durability(&flags).unwrap().unwrap();
+        assert_eq!(opts.sync_interval, Duration::ZERO);
+        for (k, bad) in [
+            ("wal-sync", "x"),
+            ("wal-sync", "-1"),
+            ("snapshot-every", "0"),
+            ("snapshot-every", "y"),
+        ] {
+            let mut f = flags.clone();
+            f.insert(k.into(), bad.into());
+            assert!(parse_durability(&f).is_err(), "{k}={bad}");
         }
     }
 

@@ -103,6 +103,12 @@ pub struct SystemSim {
     /// Per-block bookkeeping overhead on the client (s) — hash compare,
     /// metadata entry, request framing.
     pub per_block_overhead: f64,
+    /// Per-commit durability overhead (PR 7): the group-commit fsync
+    /// latency a manager running with a write-ahead log adds to the
+    /// commit reply (at most one `--wal-sync` window plus the device
+    /// flush).  `0.0` — the default — models the in-memory manager and
+    /// keeps every pre-durability figure bit-identical.
+    pub per_commit_wal_overhead: f64,
     /// Client data-path bandwidth: FUSE crossing + SAI write-buffer
     /// copies (B/s).  The CA-Infinite ceiling.
     pub memcpy_bps: f64,
@@ -121,6 +127,7 @@ impl Default for SystemSim {
             per_file_overhead: 2e-3,
             per_lease_overhead: 0.2e-3, // ~2 extra manager RTTs
             per_block_overhead: 15e-6,
+            per_commit_wal_overhead: 0.0,
             memcpy_bps: 350e6,
             cpu_system_efficiency: 0.6,
         }
@@ -201,6 +208,7 @@ impl SystemSim {
     pub fn write_secs(&self, cfg: &WriteConfig, size: usize, blocks: usize) -> f64 {
         let overhead = self.per_file_overhead
             + self.per_lease_overhead
+            + self.per_commit_wal_overhead
             + blocks as f64 * self.per_block_overhead;
         self.gated_secs(cfg, size, blocks).0 + overhead
     }
@@ -319,6 +327,30 @@ mod tests {
         for size in [1 << 20, MB64] {
             let d = with.write_secs(&c, size, 64) - without.write_secs(&c, size, 64);
             assert!((d - 0.5e-3).abs() < 1e-12, "size {size}: delta {d}");
+        }
+        // And it does not perturb the hidden-hash accounting.
+        assert_eq!(
+            with.hash_hidden_secs(&c, MB64, 64),
+            without.hash_hidden_secs(&c, MB64, 64)
+        );
+    }
+
+    #[test]
+    fn wal_overhead_is_additive_per_commit() {
+        // Durability is one group-commit window on the commit reply: a
+        // constant per-file cost, independent of size and block count,
+        // and zero by default (pre-durability figures stay
+        // bit-identical).
+        let without = SystemSim::default();
+        assert_eq!(without.per_commit_wal_overhead, 0.0);
+        let with = SystemSim {
+            per_commit_wal_overhead: 5e-3, // the default --wal-sync window
+            ..SystemSim::default()
+        };
+        let c = cfg(EngineModel::Cpu { threads: 16 }, false, 0.0);
+        for (size, blocks) in [(1 << 20, 1), (MB64, 64), (MB64, 1024)] {
+            let d = with.write_secs(&c, size, blocks) - without.write_secs(&c, size, blocks);
+            assert!((d - 5e-3).abs() < 1e-12, "size {size}: delta {d}");
         }
         // And it does not perturb the hidden-hash accounting.
         assert_eq!(

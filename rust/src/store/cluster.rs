@@ -47,6 +47,7 @@ impl Cluster {
             "127.0.0.1:0",
             policy_for(cfg.replication),
             cfg.lease_timeout,
+            cfg.durability.clone(),
         )?;
         let nodes = (0..cfg.nodes)
             .map(|_| {
@@ -81,6 +82,24 @@ impl Cluster {
     /// The manager itself (registry/refcount introspection in tests).
     pub fn manager(&self) -> &Manager {
         &self.manager
+    }
+
+    /// Kill the manager in place (see [`Manager::crash`]): in-memory
+    /// state discarded, WAL handle released, address kept — only what
+    /// the log and snapshots captured survives.
+    pub fn crash_manager(&self) {
+        self.manager.crash();
+    }
+
+    /// Respawn the crashed manager on the same address, recovering from
+    /// the cluster's configured data dir (a no-op recovery when the
+    /// cluster runs without durability).
+    pub fn restart_manager(&self) -> Result<()> {
+        self.manager.restart(
+            policy_for(self.cfg.replication),
+            self.cfg.lease_timeout,
+            self.cfg.durability.clone(),
+        )
     }
 
     /// Node addresses, by node id.

@@ -13,18 +13,36 @@
 //! test-only hook ([`ManagerState::advance_clock`]) can advance so
 //! every expiry path is testable without wall-clock sleeps.
 //! Thread-per-connection over the shared protocol.
+//!
+//! **Durable control plane.**  With a [`DurabilityOpts`] attached,
+//! every state mutation is planned (validated + decided) under the
+//! lock, serialized as a typed [`Record`], appended to the write-ahead
+//! log, and only then applied — through `ManagerState::apply`, the
+//! single mutation path that live execution, crash-recovery replay
+//! ([`ManagerState::with_durability`]) and log-shipping followers
+//! ([`Follower`]) all share.  Append-before-mutate means an append
+//! failure surfaces as a logical error with the state untouched; a
+//! crash after the append but before the reply leaves a durable but
+//! unacknowledged mutation — exactly what a real crash gives a client.
+//! Recovery resumes lease clocks conservatively (full TTL: surviving
+//! writers revalidate on their next renewal, abandoned ones lapse one
+//! window after restart) and re-learns node liveness through the
+//! existing heartbeat re-join path.  Volatile facts (heartbeats,
+//! re-joins of known addresses, the placement cursor) are never
+//! logged; `Alloc` records carry their decided replica sets instead.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::io::{BufReader, BufWriter};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use super::proto::{Assignment, BlockMeta, BlockSpec, Msg, NodeEntry, MAX_REPLICAS};
+use super::proto::{Assignment, BlockMeta, BlockSpec, Msg, NodeEntry, WalEntry, MAX_REPLICAS};
 use crate::hash::Digest;
 use crate::net::{Conn, Listener};
-use crate::Result;
+use crate::wal::{self, DurabilityOpts, Record, SnapBlock, SnapLease, SnapshotState, Wal};
+use crate::{Error, Result};
 
 /// How a placement policy chooses nodes for a new block.
 ///
@@ -158,9 +176,8 @@ struct BlockInfo {
 #[derive(Debug)]
 struct Lease {
     /// Read lease: the opened file.  Write lease: the session's claim
-    /// token.  Diagnostics only (Debug output) — the hash occurrences
-    /// below are the authoritative state.
-    #[allow(dead_code)]
+    /// token.  Carried through the log and snapshots so a recovered
+    /// manager reproduces the lease table exactly.
     tag: String,
     /// Writer claim lease (releases `pending`) vs. read lease
     /// (releases `pins`).
@@ -189,6 +206,16 @@ struct Inner {
     leases: HashMap<u64, Lease>,
     /// Next lease id (ids start at 1; 0 means "no lease" on the wire).
     next_lease: u64,
+    /// The write-ahead log, when this manager is durable (`None` = the
+    /// pre-PR-7 in-memory mode; records still flow through
+    /// [`ManagerState::apply`] and the ship buffer either way).
+    wal: Option<Wal>,
+    /// LSN of the last record logged/applied (0 = none yet).
+    last_lsn: u64,
+    /// Recent records retained in memory for log-shipping followers
+    /// (`(lsn, encoded record)`, dense).  Bounded by [`SHIP_CAP`]; a
+    /// follower further behind re-bootstraps from a snapshot.
+    ship: VecDeque<(u64, Vec<u8>)>,
 }
 
 /// Manager state shared across connection threads.
@@ -239,6 +266,14 @@ pub const MIN_LEASE_TIMEOUT: Duration = Duration::from_millis(1);
 /// batch covering one of its hashes (best effort beyond that).
 const GC_WAIT: Duration = Duration::from_secs(2);
 
+/// How many recent records the manager keeps in memory for followers
+/// to tail, and the follower-fetch batch bound.
+const SHIP_CAP: usize = 4096;
+
+/// Max records returned per [`Msg::FetchWal`] (keeps reply frames
+/// well under `MAX_FRAME` even with large commit records).
+const SHIP_BATCH: usize = 512;
+
 /// Freed blocks + the node address book, handed out of the state lock
 /// for execution (network deletes happen outside the lock).
 type GcBatch = (Vec<(Digest, Vec<u32>)>, Vec<String>);
@@ -269,6 +304,9 @@ impl ManagerState {
                 policy,
                 leases: HashMap::new(),
                 next_lease: 1,
+                wal: None,
+                last_lsn: 0,
+                ship: VecDeque::new(),
             }),
             heartbeat_timeout: HEARTBEAT_TIMEOUT,
             lease_timeout,
@@ -276,6 +314,113 @@ impl ManagerState {
             gc_inflight: Mutex::new(HashSet::new()),
             gc_done: Condvar::new(),
         }
+    }
+
+    /// Durable state: open (or initialize) `opts.data_dir`, install the
+    /// latest snapshot, replay the log tail through the same
+    /// [`ManagerState::apply`] path live execution uses, and continue
+    /// logging to the recovered WAL.  `durability: None` degrades to
+    /// the in-memory [`ManagerState::with_lease_timeout`].
+    ///
+    /// Replay's GC side effects are discarded: the pre-crash manager
+    /// already issued those (idempotent) deletes before replying, and
+    /// whatever it did not finish is space the next real sweep of the
+    /// same hashes reclaims.
+    pub fn with_durability(
+        policy: Box<dyn PlacementPolicy>,
+        lease_timeout: Duration,
+        durability: Option<DurabilityOpts>,
+    ) -> Result<ManagerState> {
+        let state = ManagerState::with_lease_timeout(policy, lease_timeout);
+        let Some(opts) = durability else {
+            return Ok(state);
+        };
+        let recovery = wal::recover(&opts)?;
+        {
+            let mut guard = state.inner.lock().unwrap();
+            let g = &mut *guard;
+            let now = state.now();
+            if let Some(snap) = &recovery.snapshot {
+                install_snapshot_into(g, snap, now, state.lease_timeout);
+            }
+            let mut freed = Vec::new();
+            for (lsn, rec) in recovery.records {
+                state.apply(g, rec, now, &mut freed);
+                g.last_lsn = lsn;
+            }
+            g.last_lsn = g.last_lsn.max(recovery.wal.next_lsn().saturating_sub(1));
+            g.wal = Some(recovery.wal);
+        }
+        // Replay ran sweeps that marked hashes GC-in-flight; no deletes
+        // will be issued for them, so unmark.
+        state.gc_inflight.lock().unwrap().clear();
+        Ok(state)
+    }
+
+    /// A serializable image of the durable state (sorted, so two
+    /// replicas of the same history compare equal regardless of
+    /// hash-map iteration order).  Powers on-disk snapshots, follower
+    /// bootstrap and the recovery property tests.
+    pub fn snapshot_state(&self) -> SnapshotState {
+        let g = self.inner.lock().unwrap();
+        snapshot_of(&g, g.last_lsn)
+    }
+
+    /// Replace this state with a snapshot image (follower bootstrap).
+    /// Liveness and lease clocks restart conservatively: nodes are
+    /// "alive" until the heartbeat window re-judges them, leases get a
+    /// full TTL.
+    pub fn install_snapshot(&self, snap: &SnapshotState) {
+        let mut guard = self.inner.lock().unwrap();
+        let now = self.now();
+        install_snapshot_into(&mut guard, snap, now, self.lease_timeout);
+        drop(guard);
+        self.gc_inflight.lock().unwrap().clear();
+    }
+
+    /// Apply one record shipped from a primary (strictly in lsn order;
+    /// a gap means frames were lost and the follower must re-sync).
+    /// The follower never issues GC deletes — the primary already did.
+    pub fn apply_shipped(&self, lsn: u64, data: &[u8]) -> Result<()> {
+        let rec = Record::decode(data)?;
+        let mut guard = self.inner.lock().unwrap();
+        let g = &mut *guard;
+        if lsn != g.last_lsn + 1 {
+            return Err(Error::Manager(format!(
+                "shipped record lsn {lsn} does not follow {}",
+                g.last_lsn
+            )));
+        }
+        let now = self.now();
+        let mut freed = Vec::new();
+        self.apply(g, rec, now, &mut freed);
+        g.last_lsn = lsn;
+        g.ship.push_back((lsn, data.to_vec()));
+        if g.ship.len() > SHIP_CAP {
+            g.ship.pop_front();
+        }
+        drop(guard);
+        if !freed.is_empty() {
+            let mut inflight = self.gc_inflight.lock().unwrap();
+            for (h, _) in &freed {
+                inflight.remove(h);
+            }
+        }
+        Ok(())
+    }
+
+    /// LSN of the last record logged/applied.
+    pub fn last_lsn(&self) -> u64 {
+        self.inner.lock().unwrap().last_lsn
+    }
+
+    /// Drop the WAL handle (crash simulation: the dropped handle syncs
+    /// its tail, mimicking an OS that flushed what the process wrote —
+    /// from here on this state object can no longer log anything).
+    /// Serializes on the state lock, so a mutation that raced this call
+    /// either made it to the log or lands only in the discarded memory.
+    pub fn detach_wal(&self) {
+        let _ = self.inner.lock().unwrap().wal.take();
     }
 
     /// The manager's notion of "now": real time plus the test skew.
@@ -371,10 +516,25 @@ impl ManagerState {
                     // this allocation's dedup.
                     let mut freed = Vec::new();
                     self.expire_leases(g, now, &mut freed);
-                    let reply = match self.alloc(g, &file, lease, &blocks, now) {
-                        Ok(assignments) => Msg::Placement { assignments },
+                    // Plan (read-only decisions, policy cursor aside),
+                    // then log + apply: the Alloc record carries the
+                    // decided replica sets, so replay never re-runs
+                    // placement.
+                    let reply = match self.plan_alloc(g, &file, lease, &blocks, now) {
+                        Ok((assignments, metas)) => {
+                            let rec = Record::Alloc {
+                                tag: file,
+                                lease,
+                                blocks: metas,
+                            };
+                            match self.log_apply(g, rec, now, &mut freed) {
+                                Ok(()) => Msg::Placement { assignments },
+                                Err(e) => Msg::Err(e),
+                            }
+                        }
                         Err(e) => Msg::Err(e),
                     };
+                    self.maybe_snapshot(g);
                     return (reply, self.gc_batch(g, freed));
                 }
                 unreachable!("alloc loop always returns by attempt 2");
@@ -403,8 +563,14 @@ impl ManagerState {
                 },
             },
             Msg::CommitBlockMap { file, lease, blocks } => {
-                match self.commit(g, file, lease, blocks, &mut freed) {
-                    Ok(()) => Msg::Ok,
+                match self.plan_commit(g, lease, &blocks) {
+                    Ok(()) => {
+                        let rec = Record::Commit { file, lease, blocks };
+                        match self.log_apply(g, rec, now, &mut freed) {
+                            Ok(()) => Msg::Ok,
+                            Err(e) => Msg::Err(e),
+                        }
+                    }
                     Err(e) => Msg::Err(e),
                 }
             }
@@ -412,42 +578,49 @@ impl ManagerState {
             // GC-in-flight barrier before taking the state lock).
             Msg::AllocPlacement { .. } => unreachable!("handled before the lock"),
             Msg::ReleaseBlocks { hashes } => {
-                for h in &hashes {
-                    if let Some(e) = g.blocks.get_mut(h) {
-                        e.pending = e.pending.saturating_sub(1);
-                    }
+                match self.log_apply(g, Record::Release { hashes }, now, &mut freed) {
+                    Ok(()) => Msg::Ok,
+                    Err(e) => Msg::Err(e),
                 }
-                self.sweep(g, &hashes, &mut freed);
-                Msg::Ok
             }
-            Msg::OpenLease { file, write } => self.open_lease(g, file, write, now),
-            Msg::RenewLease { lease } => match g.leases.get_mut(&lease) {
-                Some(l) => {
-                    l.expires_at = now + self.lease_timeout;
-                    Msg::Ok
+            Msg::OpenLease { file, write } => self.open_lease(g, file, write, now, &mut freed),
+            Msg::RenewLease { lease } => {
+                // Renewals of unknown/lapsed leases are not logged —
+                // there is nothing durable to change.
+                if g.leases.contains_key(&lease) {
+                    match self.log_apply(g, Record::RenewLease { id: lease }, now, &mut freed) {
+                        Ok(()) => Msg::Ok,
+                        Err(e) => Msg::Err(e),
+                    }
+                } else {
+                    Msg::Err(format!("lease {lease} unknown or lapsed"))
                 }
-                None => Msg::Err(format!("lease {lease} unknown or lapsed")),
-            },
+            }
             Msg::DropLease { lease } => {
                 // Idempotent: dropping a lapsed/consumed lease is OK (a
-                // committed writer's lease is consumed by the commit).
-                if let Some(l) = g.leases.remove(&lease) {
-                    self.release_lease(g, l, &mut freed);
+                // committed writer's lease is consumed by the commit)
+                // and not logged — there is no lease to release.
+                if g.leases.contains_key(&lease) {
+                    match self.log_apply(g, Record::DropLease { id: lease }, now, &mut freed) {
+                        Ok(()) => Msg::Ok,
+                        Err(e) => Msg::Err(e),
+                    }
+                } else {
+                    Msg::Ok
                 }
-                Msg::Ok
             }
             Msg::NodeJoin { addr } => match g.nodes.iter().position(|n| n.addr == addr) {
                 Some(id) => {
+                    // Re-join of a known address only refreshes the
+                    // volatile liveness clock — not logged.
                     g.nodes[id].last_beat = now;
                     Msg::NodeId { id: id as u32 }
                 }
                 None => {
-                    g.nodes.push(NodeSlot {
-                        addr,
-                        last_beat: now,
-                    });
-                    Msg::NodeId {
-                        id: (g.nodes.len() - 1) as u32,
+                    let id = g.nodes.len() as u32;
+                    match self.log_apply(g, Record::NodeJoin { id, addr }, now, &mut freed) {
+                        Ok(()) => Msg::NodeId { id },
+                        Err(e) => Msg::Err(e),
                     }
                 }
             },
@@ -479,104 +652,279 @@ impl ManagerState {
                 list.sort();
                 Msg::Files { files: list }
             }
+            Msg::FetchSnapshot => Msg::SnapshotData {
+                data: snapshot_of(g, g.last_lsn).encode(),
+            },
+            Msg::FetchWal { after } => {
+                let retained = match g.ship.front() {
+                    Some((front, _)) => after.saturating_add(1) >= *front,
+                    None => after >= g.last_lsn,
+                };
+                if retained {
+                    let records: Vec<WalEntry> = g
+                        .ship
+                        .iter()
+                        .filter(|(l, _)| *l > after)
+                        .take(SHIP_BATCH)
+                        .map(|(l, d)| WalEntry {
+                            lsn: *l,
+                            data: d.clone(),
+                        })
+                        .collect();
+                    Msg::WalRecords { records }
+                } else {
+                    Msg::Err(format!(
+                        "wal: records after {after} no longer retained; re-snapshot"
+                    ))
+                }
+            }
             other => Msg::Err(format!("manager: unexpected message {other:?}")),
         };
+        self.maybe_snapshot(g);
         (reply, self.gc_batch(g, freed))
     }
 
-    /// Commit one new version: validate, redeem the write lease's
-    /// claims into committed references, release the overwritten map's
-    /// references and sweep what dropped to zero (pinned blocks are
-    /// deferred to their last lease's release).
-    fn commit(
+    /// The single durability gate: encode the record, append it to the
+    /// log (append-before-mutate — a failed append leaves the state
+    /// untouched and surfaces as a logical error), buffer it for
+    /// shipping followers, then apply it.
+    fn log_apply(
         &self,
         g: &mut Inner,
-        file: String,
-        lease: u64,
-        blocks: Vec<BlockMeta>,
+        rec: Record,
+        now: Instant,
         freed: &mut Vec<(Digest, Vec<u32>)>,
+    ) -> std::result::Result<(), String> {
+        let bytes = rec.encode();
+        let lsn = g.last_lsn + 1;
+        if let Some(w) = g.wal.as_mut() {
+            if let Err(e) = w.append(lsn, &bytes) {
+                return Err(format!("manager: wal append failed: {e}"));
+            }
+        }
+        g.last_lsn = lsn;
+        g.ship.push_back((lsn, bytes));
+        if g.ship.len() > SHIP_CAP {
+            g.ship.pop_front();
+        }
+        self.apply(g, rec, now, freed);
+        Ok(())
+    }
+
+    /// Cut a snapshot when the log has grown past the configured
+    /// cadence.  Best-effort at runtime: a failed snapshot leaves the
+    /// log authoritative (recovery just replays more), so it logs to
+    /// stderr instead of failing the triggering request.
+    fn maybe_snapshot(&self, g: &mut Inner) {
+        if !g.wal.as_ref().is_some_and(|w| w.wants_snapshot()) {
+            return;
+        }
+        let snap = snapshot_of(g, g.last_lsn);
+        if let Some(w) = g.wal.as_mut() {
+            if let Err(e) = w.snapshot(&snap) {
+                eprintln!("gpustore manager: snapshot failed (log stays authoritative): {e}");
+            }
+        }
+    }
+
+    /// Apply one record.  The ONLY place records mutate durable state:
+    /// the live path calls it right after appending, crash recovery
+    /// replays the log tail through it, and followers feed shipped
+    /// records into it — one code path, three consumers.
+    ///
+    /// Apply is deliberately more tolerant than the live planners
+    /// (missing leases are skipped, not panicked on): the planner
+    /// validated before logging, so on replay the lookups succeed; the
+    /// tolerance only guards against logs hand-edited or written by a
+    /// newer version.
+    fn apply(&self, g: &mut Inner, rec: Record, now: Instant, freed: &mut Vec<(Digest, Vec<u32>)>) {
+        match rec {
+            Record::Commit { file, lease, blocks } => {
+                // The planner verified the lease is a live write lease
+                // (or 0 = untracked), so remove() here yields the claim
+                // holder to redeem.
+                let held = match lease {
+                    0 => None,
+                    id => g.leases.remove(&id),
+                };
+                for m in &blocks {
+                    let e = g.blocks.entry(m.hash).or_insert_with(|| BlockInfo {
+                        replicas: m.replicas.clone(),
+                        len: m.len,
+                        refs: 0,
+                        pending: 0,
+                        pins: 0,
+                        placed_by: String::new(),
+                    });
+                    e.refs += 1;
+                    e.pending = e.pending.saturating_sub(1);
+                }
+                // Claim occurrences the commit did not consume
+                // (allocated but left out of the final map) are
+                // released with the lease.
+                if let Some(l) = held {
+                    let mut consumed: HashMap<Digest, u64> = HashMap::new();
+                    for m in &blocks {
+                        *consumed.entry(m.hash).or_default() += 1;
+                    }
+                    let mut leftovers = Vec::new();
+                    for h in l.hashes {
+                        match consumed.get_mut(&h) {
+                            Some(n) if *n > 0 => *n -= 1,
+                            _ => {
+                                if let Some(e) = g.blocks.get_mut(&h) {
+                                    e.pending = e.pending.saturating_sub(1);
+                                }
+                                leftovers.push(h);
+                            }
+                        }
+                    }
+                    self.sweep(g, &leftovers, freed);
+                }
+                let f = g.files.entry(file).or_default();
+                f.version += 1;
+                let old = std::mem::replace(&mut f.blocks, blocks);
+                for m in &old {
+                    if let Some(e) = g.blocks.get_mut(&m.hash) {
+                        e.refs = e.refs.saturating_sub(1);
+                    }
+                }
+                // Only the old map's hashes can have newly reached zero
+                // references (the new map's all got refs += 1).
+                // Read-leased blocks have pins > 0 and survive; their
+                // deferred deletes run when the last lease drops.
+                let candidates: Vec<Digest> = old.iter().map(|m| m.hash).collect();
+                self.sweep(g, &candidates, freed);
+            }
+            Record::Release { hashes } => {
+                for h in &hashes {
+                    if let Some(e) = g.blocks.get_mut(h) {
+                        e.pending = e.pending.saturating_sub(1);
+                    }
+                }
+                self.sweep(g, &hashes, freed);
+            }
+            Record::OpenLease { id, tag, write, hashes } => {
+                if !write {
+                    for h in &hashes {
+                        if let Some(e) = g.blocks.get_mut(h) {
+                            e.pins += 1;
+                        }
+                    }
+                }
+                g.leases.insert(
+                    id,
+                    Lease {
+                        tag,
+                        write,
+                        hashes,
+                        expires_at: now + self.lease_timeout,
+                    },
+                );
+                g.next_lease = g.next_lease.max(id + 1);
+            }
+            Record::RenewLease { id } => {
+                if let Some(l) = g.leases.get_mut(&id) {
+                    l.expires_at = now + self.lease_timeout;
+                }
+            }
+            Record::DropLease { id } | Record::ExpireLease { id } => {
+                if let Some(l) = g.leases.remove(&id) {
+                    self.release_lease(g, l, freed);
+                }
+            }
+            Record::Alloc { tag, lease, blocks } => {
+                for m in &blocks {
+                    match g.blocks.get_mut(&m.hash) {
+                        Some(e) => {
+                            e.pending += 1;
+                            // The planner re-homed dead replica sets at
+                            // log time; for live sets it recorded the
+                            // existing one, so this is a no-op there.
+                            e.replicas = m.replicas.clone();
+                        }
+                        None => {
+                            g.blocks.insert(
+                                m.hash,
+                                BlockInfo {
+                                    replicas: m.replicas.clone(),
+                                    len: m.len,
+                                    refs: 0,
+                                    pending: 1,
+                                    pins: 0,
+                                    placed_by: tag.clone(),
+                                },
+                            );
+                        }
+                    }
+                }
+                // Record the claim occurrences against the lease and
+                // renew it (an actively-allocating writer is live).
+                if lease != 0 {
+                    if let Some(l) = g.leases.get_mut(&lease) {
+                        l.hashes.extend(blocks.iter().map(|m| m.hash));
+                        l.expires_at = now + self.lease_timeout;
+                    }
+                }
+            }
+            Record::NodeJoin { id, addr } => {
+                let idx = id as usize;
+                if idx == g.nodes.len() {
+                    g.nodes.push(NodeSlot {
+                        addr,
+                        last_beat: now,
+                    });
+                } else if let Some(n) = g.nodes.get_mut(idx) {
+                    n.addr = addr;
+                    n.last_beat = now;
+                }
+            }
+        }
+    }
+
+    /// Validate a commit without mutating anything (the mutation is the
+    /// logged [`Record::Commit`]'s `apply`): node ids must be
+    /// registered, and a lease-tracked commit must present a live write
+    /// lease — if it lapsed, its claims were already released and the
+    /// blocks may be gone from the nodes, so committing would publish
+    /// an unreadable file.
+    fn plan_commit(
+        &self,
+        g: &Inner,
+        lease: u64,
+        blocks: &[BlockMeta],
     ) -> std::result::Result<(), String> {
         // Satellite (PR 2): validate node ids against the registry
         // before accepting, so readers never chase a block to a node
         // that does not exist.
-        if let Some(err) = validate_blocks(&blocks, g.nodes.len()) {
+        if let Some(err) = validate_blocks(blocks, g.nodes.len()) {
             return Err(err);
         }
-        // A lease-tracked commit must present a live write lease: if it
-        // lapsed, its claims were already released and the blocks may
-        // be gone from the nodes — committing would publish an
-        // unreadable file.  The commit consumes the lease (it redeems
-        // every claim; the writer's Drop must not release them again).
-        let held = match lease {
-            0 => None,
-            id => match g.leases.remove(&id) {
-                Some(l) if l.write => Some(l),
-                Some(l) => {
-                    g.leases.insert(id, l);
-                    return Err(format!("commit: lease {id} is not a write lease"));
-                }
-                None => {
-                    return Err(format!(
-                        "commit: write lease {id} lapsed and its claims were released"
-                    ))
-                }
+        match lease {
+            0 => Ok(()),
+            id => match g.leases.get(&id) {
+                Some(l) if l.write => Ok(()),
+                Some(_) => Err(format!("commit: lease {id} is not a write lease")),
+                None => Err(format!(
+                    "commit: write lease {id} lapsed and its claims were released"
+                )),
             },
-        };
-        for m in &blocks {
-            let e = g.blocks.entry(m.hash).or_insert_with(|| BlockInfo {
-                replicas: m.replicas.clone(),
-                len: m.len,
-                refs: 0,
-                pending: 0,
-                pins: 0,
-                placed_by: String::new(),
-            });
-            e.refs += 1;
-            e.pending = e.pending.saturating_sub(1);
         }
-        // Claim occurrences the commit did not consume (allocated but
-        // left out of the final map) are released with the lease.
-        if let Some(l) = held {
-            let mut consumed: HashMap<Digest, u64> = HashMap::new();
-            for m in &blocks {
-                *consumed.entry(m.hash).or_default() += 1;
-            }
-            let mut leftovers = Vec::new();
-            for h in l.hashes {
-                match consumed.get_mut(&h) {
-                    Some(n) if *n > 0 => *n -= 1,
-                    _ => {
-                        if let Some(e) = g.blocks.get_mut(&h) {
-                            e.pending = e.pending.saturating_sub(1);
-                        }
-                        leftovers.push(h);
-                    }
-                }
-            }
-            self.sweep(g, &leftovers, freed);
-        }
-        let f = g.files.entry(file).or_default();
-        f.version += 1;
-        let old = std::mem::replace(&mut f.blocks, blocks);
-        for m in &old {
-            if let Some(e) = g.blocks.get_mut(&m.hash) {
-                e.refs = e.refs.saturating_sub(1);
-            }
-        }
-        // Only the old map's hashes can have newly reached zero
-        // references (the new map's all got refs += 1).  Read-leased
-        // blocks have pins > 0 and survive; their deferred deletes run
-        // when the last lease drops — the ROADMAP reader-snapshot race,
-        // closed.
-        let candidates: Vec<Digest> = old.iter().map(|m| m.hash).collect();
-        self.sweep(g, &candidates, freed);
-        Ok(())
     }
 
     /// Grant a lease: read leases atomically snapshot + pin the file's
     /// current block-map, write leases register an (initially empty)
-    /// claim holder.
-    fn open_lease(&self, g: &mut Inner, file: String, write: bool, now: Instant) -> Msg {
+    /// claim holder.  The grant is logged (pins and the claim holder
+    /// are durable facts GC depends on); the no-such-file read case
+    /// grants nothing and is not.
+    fn open_lease(
+        &self,
+        g: &mut Inner,
+        file: String,
+        write: bool,
+        now: Instant,
+        freed: &mut Vec<(Digest, Vec<u32>)>,
+    ) -> Msg {
         let ttl_ms = self.lease_timeout.as_millis() as u64;
         let (version, blocks) = if write {
             (0, Vec::new())
@@ -594,41 +942,47 @@ impl ManagerState {
                 }
             }
         };
-        for m in &blocks {
-            if let Some(e) = g.blocks.get_mut(&m.hash) {
-                e.pins += 1;
-            }
-        }
         let id = g.next_lease;
-        g.next_lease += 1;
-        g.leases.insert(
+        let rec = Record::OpenLease {
             id,
-            Lease {
-                tag: file,
-                write,
-                hashes: blocks.iter().map(|m| m.hash).collect(),
-                expires_at: now + self.lease_timeout,
+            tag: file,
+            write,
+            hashes: blocks.iter().map(|m| m.hash).collect(),
+        };
+        match self.log_apply(g, rec, now, freed) {
+            Ok(()) => Msg::LeaseGrant {
+                lease: id,
+                ttl_ms,
+                version,
+                blocks,
             },
-        );
-        Msg::LeaseGrant {
-            lease: id,
-            ttl_ms,
-            version,
-            blocks,
+            Err(e) => Msg::Err(e),
         }
     }
 
     /// Lapse every overdue lease (release its claims/pins and sweep).
+    /// Each lapse is logged as a [`Record::ExpireLease`] — expiry is a
+    /// durable state change like any other, and replaying it beats
+    /// making recovery re-derive it from clocks that did not survive
+    /// the crash.  Sorted ids keep the log deterministic for a given
+    /// set of overdue leases.
     fn expire_leases(&self, g: &mut Inner, now: Instant, freed: &mut Vec<(Digest, Vec<u32>)>) {
-        let lapsed: Vec<u64> = g
+        let mut lapsed: Vec<u64> = g
             .leases
             .iter()
             .filter(|(_, l)| l.expires_at <= now)
             .map(|(id, _)| *id)
             .collect();
+        lapsed.sort_unstable();
         for id in lapsed {
-            let l = g.leases.remove(&id).expect("collected under the same lock");
-            self.release_lease(g, l, freed);
+            // Append-before-mutate: if the log rejects the record the
+            // lease stays (still overdue), and the next sweep retries.
+            if self
+                .log_apply(g, Record::ExpireLease { id }, now, freed)
+                .is_err()
+            {
+                break;
+            }
         }
     }
 
@@ -682,16 +1036,24 @@ impl ManagerState {
         Some((freed, g.nodes.iter().map(|n| n.addr.clone()).collect()))
     }
 
-    /// Manager-driven placement for one batch (claims held under the
-    /// caller's write lease, which the allocation also renews).
-    fn alloc(
+    /// Plan one placement batch: validate the lease, decide every
+    /// block's replica set and freshness, and return the assignments
+    /// plus the [`BlockMeta`]s an [`Record::Alloc`] will carry — but
+    /// mutate nothing except the policy cursor (volatile by design; it
+    /// is not persisted, because the decided replica sets are).  The
+    /// counter bumps happen in `apply` once the record is logged.
+    ///
+    /// `planned` overlays in-batch decisions over `g.blocks` so a hash
+    /// that repeats inside one batch deduplicates against its own first
+    /// occurrence, exactly as the pre-WAL mutate-as-you-go version did.
+    fn plan_alloc(
         &self,
         g: &mut Inner,
         file: &str,
         lease: u64,
         specs: &[BlockSpec],
         now: Instant,
-    ) -> std::result::Result<Vec<Assignment>, String> {
+    ) -> std::result::Result<(Vec<Assignment>, Vec<BlockMeta>), String> {
         // Claims must be held under a live write lease (`0` = untracked
         // legacy claims, kept for raw protocol users): a lapsed lease
         // means this writer's earlier claims were already reclaimed —
@@ -719,85 +1081,75 @@ impl ManagerState {
                 "no storage nodes alive".into()
             });
         }
+        // hash -> (decided replicas, dedup_ok: later occurrences in
+        // this batch may skip the transfer).
+        let mut planned: HashMap<Digest, (Vec<u32>, bool)> = HashMap::new();
         let mut out = Vec::with_capacity(specs.len());
+        let mut metas = Vec::with_capacity(specs.len());
         for s in specs {
-            match g.blocks.get_mut(&s.hash) {
-                // Committed somewhere (a commit proves the transfer
-                // completed), or claimed by this same session (which is
-                // the one doing the transfer): safe to dedup — PROVIDED
-                // at least one replica is still alive.  A known block
-                // whose replicas all died is re-homed and
-                // re-transferred (the writer has the bytes in hand;
-                // dedup against dead nodes would commit an unreadable
-                // file).
-                Some(e) if e.refs > 0 || e.placed_by == file => {
-                    e.pending += 1;
-                    if e.replicas.iter().any(|r| alive.contains(r)) {
-                        out.push(Assignment {
-                            replicas: e.replicas.clone(),
-                            fresh: false,
-                        });
-                    } else {
-                        e.replicas = g.policy.place(&alive);
-                        out.push(Assignment {
-                            replicas: e.replicas.clone(),
-                            fresh: true,
-                        });
+            let (replicas, fresh) = if let Some((replicas, dedup_ok)) = planned.get(&s.hash) {
+                (replicas.clone(), !*dedup_ok)
+            } else {
+                match g.blocks.get(&s.hash) {
+                    // Committed somewhere (a commit proves the transfer
+                    // completed), or claimed by this same session
+                    // (which is the one doing the transfer): safe to
+                    // dedup — PROVIDED at least one replica is still
+                    // alive.  A known block whose replicas all died is
+                    // re-homed and re-transferred (the writer has the
+                    // bytes in hand; dedup against dead nodes would
+                    // commit an unreadable file).
+                    Some(e) if e.refs > 0 || e.placed_by == file => {
+                        if e.replicas.iter().any(|r| alive.contains(r)) {
+                            planned.insert(s.hash, (e.replicas.clone(), true));
+                            (e.replicas.clone(), false)
+                        } else {
+                            let replicas = g.policy.place(&alive);
+                            planned.insert(s.hash, (replicas.clone(), true));
+                            (replicas, true)
+                        }
+                    }
+                    // Known only as ANOTHER session's uncommitted
+                    // claim: that transfer may still fail or be
+                    // abandoned, so this writer must transfer too (puts
+                    // are idempotent by key) — same homes (re-homed if
+                    // all dead), but fresh from the caller's point of
+                    // view, and every in-batch repeat stays fresh too.
+                    //
+                    // Re-homing (here and above) deliberately does NOT
+                    // delete the old replicas' copies: those nodes look
+                    // dead, so the deletes could not land anyway, and
+                    // if a node was merely partitioned, its surviving
+                    // copy may be the only one a pinned reader's
+                    // snapshot map can still name — eager deletion
+                    // would break that reader when the node heals.  The
+                    // cost is a bounded space leak on a flapping node
+                    // (ROADMAP, lease limitations).
+                    Some(e) => {
+                        let replicas = if e.replicas.iter().any(|r| alive.contains(r)) {
+                            e.replicas.clone()
+                        } else {
+                            g.policy.place(&alive)
+                        };
+                        planned.insert(s.hash, (replicas.clone(), false));
+                        (replicas, true)
+                    }
+                    None => {
+                        let replicas = g.policy.place(&alive);
+                        debug_assert!(!replicas.is_empty());
+                        planned.insert(s.hash, (replicas.clone(), true));
+                        (replicas, true)
                     }
                 }
-                // Known only as ANOTHER session's uncommitted claim:
-                // that transfer may still fail or be abandoned, so this
-                // writer must transfer too (puts are idempotent by key)
-                // — same homes (re-homed if all dead), but fresh from
-                // the caller's point of view.
-                //
-                // Re-homing (here and above) deliberately does NOT
-                // delete the old replicas' copies: those nodes look
-                // dead, so the deletes could not land anyway, and if a
-                // node was merely partitioned, its surviving copy may
-                // be the only one a pinned reader's snapshot map can
-                // still name — eager deletion would break that reader
-                // when the node heals.  The cost is a bounded space
-                // leak on a flapping node (ROADMAP, lease limitations).
-                Some(e) => {
-                    e.pending += 1;
-                    if !e.replicas.iter().any(|r| alive.contains(r)) {
-                        e.replicas = g.policy.place(&alive);
-                    }
-                    out.push(Assignment {
-                        replicas: e.replicas.clone(),
-                        fresh: true,
-                    });
-                }
-                None => {
-                    let replicas = g.policy.place(&alive);
-                    debug_assert!(!replicas.is_empty());
-                    g.blocks.insert(
-                        s.hash,
-                        BlockInfo {
-                            replicas: replicas.clone(),
-                            len: s.len,
-                            refs: 0,
-                            pending: 1,
-                            pins: 0,
-                            placed_by: file.to_string(),
-                        },
-                    );
-                    out.push(Assignment {
-                        replicas,
-                        fresh: true,
-                    });
-                }
-            }
+            };
+            metas.push(BlockMeta {
+                hash: s.hash,
+                len: s.len,
+                replicas: replicas.clone(),
+            });
+            out.push(Assignment { replicas, fresh });
         }
-        // Record the claim occurrences against the lease and renew it
-        // (an actively-allocating writer is a live writer).
-        if lease != 0 {
-            let l = g.leases.get_mut(&lease).expect("validated above");
-            l.hashes.extend(specs.iter().map(|s| s.hash));
-            l.expires_at = now + self.lease_timeout;
-        }
-        Ok(out)
+        Ok((out, metas))
     }
 
     /// Aggregate manager bookkeeping, counting each replica copy —
@@ -863,6 +1215,121 @@ fn validate_blocks(blocks: &[BlockMeta], registered: usize) -> Option<String> {
     None
 }
 
+/// Serialize the durable slice of the state (everything except clocks,
+/// the policy cursor and the ship buffer) into a canonical, sorted
+/// [`SnapshotState`] — sorted so images of the same history compare
+/// equal regardless of hash-map iteration order.
+fn snapshot_of(g: &Inner, lsn: u64) -> SnapshotState {
+    let mut files: Vec<(String, u64, Vec<BlockMeta>)> = g
+        .files
+        .iter()
+        .map(|(name, e)| (name.clone(), e.version, e.blocks.clone()))
+        .collect();
+    files.sort_by(|a, b| a.0.cmp(&b.0));
+    let mut blocks: Vec<SnapBlock> = g
+        .blocks
+        .iter()
+        .map(|(hash, b)| SnapBlock {
+            hash: *hash,
+            len: b.len,
+            replicas: b.replicas.clone(),
+            refs: b.refs,
+            pending: b.pending,
+            pins: b.pins,
+            placed_by: b.placed_by.clone(),
+        })
+        .collect();
+    blocks.sort_by_key(|b| b.hash);
+    let mut leases: Vec<SnapLease> = g
+        .leases
+        .iter()
+        .map(|(id, l)| SnapLease {
+            id: *id,
+            tag: l.tag.clone(),
+            write: l.write,
+            hashes: l.hashes.clone(),
+        })
+        .collect();
+    leases.sort_by_key(|l| l.id);
+    SnapshotState {
+        lsn,
+        files,
+        blocks,
+        nodes: g.nodes.iter().map(|n| n.addr.clone()).collect(),
+        leases,
+        next_lease: g.next_lease,
+    }
+}
+
+/// Rebuild the in-memory state from a snapshot image.  Clocks restart
+/// conservatively: every node is "alive" as of now (the heartbeat
+/// window re-judges it within one timeout) and every lease gets a full
+/// TTL (surviving holders renew as usual, abandoned ones lapse one
+/// window after restart — PR 3's reclamation, just delayed).
+fn install_snapshot_into(
+    g: &mut Inner,
+    snap: &SnapshotState,
+    now: Instant,
+    lease_timeout: Duration,
+) {
+    g.files = snap
+        .files
+        .iter()
+        .map(|(name, version, blocks)| {
+            (
+                name.clone(),
+                FileEntry {
+                    version: *version,
+                    blocks: blocks.clone(),
+                },
+            )
+        })
+        .collect();
+    g.blocks = snap
+        .blocks
+        .iter()
+        .map(|b| {
+            (
+                b.hash,
+                BlockInfo {
+                    replicas: b.replicas.clone(),
+                    len: b.len,
+                    refs: b.refs,
+                    pending: b.pending,
+                    pins: b.pins,
+                    placed_by: b.placed_by.clone(),
+                },
+            )
+        })
+        .collect();
+    g.nodes = snap
+        .nodes
+        .iter()
+        .map(|addr| NodeSlot {
+            addr: addr.clone(),
+            last_beat: now,
+        })
+        .collect();
+    g.leases = snap
+        .leases
+        .iter()
+        .map(|l| {
+            (
+                l.id,
+                Lease {
+                    tag: l.tag.clone(),
+                    write: l.write,
+                    hashes: l.hashes.clone(),
+                    expires_at: now + lease_timeout,
+                },
+            )
+        })
+        .collect();
+    g.next_lease = snap.next_lease;
+    g.last_lsn = snap.lsn;
+    g.ship.clear();
+}
+
 /// Best-effort deletion of freed blocks on their owning nodes.  Dead or
 /// unreachable nodes are skipped — the block is already unreferenced,
 /// so a leaked copy only costs space until the node rejoins or dies.
@@ -896,10 +1363,27 @@ fn gc_delete(freed: &[(Digest, Vec<u32>)], addrs: &[String]) {
     }
 }
 
+/// The servable state behind a running [`Manager`]: swapping it (and
+/// bumping `epoch`) is how [`Manager::crash`]/[`Manager::restart`]
+/// simulate a process kill without giving up the bound port — the
+/// listener survives, so clients see connection-level errors while
+/// "down" and recover against the same address, with no TIME_WAIT
+/// rebind races in tests.
+struct Slot {
+    state: Arc<ManagerState>,
+    up: bool,
+    /// Bumped on every crash/restart.  A connection thread that
+    /// resolved state before a crash re-checks the epoch before writing
+    /// its reply: a stale reply (computed against the now-discarded
+    /// state) is dropped on the floor, exactly like a reply a killed
+    /// process never sent.
+    epoch: u64,
+}
+
 /// A running manager server.
 pub struct Manager {
     addr: String,
-    state: Arc<ManagerState>,
+    slot: Arc<Mutex<Slot>>,
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
 }
@@ -914,29 +1398,47 @@ impl Manager {
     /// Bind and serve with an explicit placement policy and the default
     /// lease timeout.
     pub fn spawn_with_policy(addr: &str, policy: Box<dyn PlacementPolicy>) -> Result<Manager> {
-        Manager::spawn_with_opts(addr, policy, DEFAULT_LEASE_TIMEOUT)
+        Manager::spawn_with_opts(addr, policy, DEFAULT_LEASE_TIMEOUT, None)
     }
 
-    /// Bind and serve with an explicit placement policy and lease
-    /// timeout (surfaced as `--lease-timeout` in the CLI and
-    /// [`crate::config::ClusterConfig::lease_timeout`]).
+    /// Bind and serve with an explicit placement policy, lease timeout
+    /// (surfaced as `--lease-timeout` in the CLI and
+    /// [`crate::config::ClusterConfig::lease_timeout`]) and optional
+    /// durability (`--data-dir`): with a data dir the manager recovers
+    /// its state from the latest snapshot + log tail before serving.
     pub fn spawn_with_opts(
         addr: &str,
         policy: Box<dyn PlacementPolicy>,
         lease_timeout: Duration,
+        durability: Option<DurabilityOpts>,
     ) -> Result<Manager> {
+        let state = Arc::new(ManagerState::with_durability(
+            policy,
+            lease_timeout,
+            durability,
+        )?);
+        Manager::serve(addr, state)
+    }
+
+    /// Bind and serve an already-built state (follower promotion, or a
+    /// state recovered/inspected out-of-band).
+    pub fn serve(addr: &str, state: Arc<ManagerState>) -> Result<Manager> {
         let listener = Listener::bind(addr)?;
         let addr = listener.local_addr()?;
-        let state = Arc::new(ManagerState::with_lease_timeout(policy, lease_timeout));
+        let slot = Arc::new(Mutex::new(Slot {
+            state,
+            up: true,
+            epoch: 0,
+        }));
         let stop = Arc::new(AtomicBool::new(false));
-        let (st, sp) = (state.clone(), stop.clone());
+        let (sl, sp) = (slot.clone(), stop.clone());
         let accept_thread = std::thread::Builder::new()
             .name("mosa-manager".into())
-            .spawn(move || accept_loop(listener, st, sp))
+            .spawn(move || accept_loop(listener, sl, sp))
             .map_err(crate::Error::Io)?;
         Ok(Manager {
             addr,
-            state,
+            slot,
             stop,
             accept_thread: Some(accept_thread),
         })
@@ -948,8 +1450,45 @@ impl Manager {
     }
 
     /// Direct (in-process) access for tests.
-    pub fn state(&self) -> &Arc<ManagerState> {
-        &self.state
+    pub fn state(&self) -> Arc<ManagerState> {
+        self.slot.lock().unwrap().state.clone()
+    }
+
+    /// Simulate a process kill: mark the slot down (in-flight requests'
+    /// replies are suppressed via the epoch, new requests are severed),
+    /// discard the in-memory state, and release the WAL handle so the
+    /// data dir can be re-opened.  Only what the log/snapshot captured
+    /// survives — exactly a SIGKILL's durability contract.
+    pub fn crash(&self) {
+        let old = {
+            let mut slot = self.slot.lock().unwrap();
+            slot.up = false;
+            slot.epoch += 1;
+            std::mem::replace(&mut slot.state, Arc::new(ManagerState::default()))
+        };
+        // Outside the slot lock (detach serializes on the state lock,
+        // which an in-flight handler may hold).
+        old.detach_wal();
+    }
+
+    /// Respawn after [`Manager::crash`] on the same address: recover a
+    /// fresh state from the data dir and start serving it.
+    pub fn restart(
+        &self,
+        policy: Box<dyn PlacementPolicy>,
+        lease_timeout: Duration,
+        durability: Option<DurabilityOpts>,
+    ) -> Result<()> {
+        let state = Arc::new(ManagerState::with_durability(
+            policy,
+            lease_timeout,
+            durability,
+        )?);
+        let mut slot = self.slot.lock().unwrap();
+        slot.state = state;
+        slot.epoch += 1;
+        slot.up = true;
+        Ok(())
     }
 
     /// Stop accepting (existing connections finish their current call).
@@ -975,7 +1514,7 @@ impl Drop for Manager {
     }
 }
 
-fn accept_loop(listener: Listener, state: Arc<ManagerState>, stop: Arc<AtomicBool>) {
+fn accept_loop(listener: Listener, slot: Arc<Mutex<Slot>>, stop: Arc<AtomicBool>) {
     loop {
         let conn = match listener.accept() {
             Ok(c) => c,
@@ -987,17 +1526,17 @@ fn accept_loop(listener: Listener, state: Arc<ManagerState>, stop: Arc<AtomicBoo
         // serve thread runs to completion), and the shutdown poke's
         // connection reads clean EOF and exits immediately.
         let stopping = stop.load(Ordering::SeqCst);
-        let st = state.clone();
+        let sl = slot.clone();
         let _ = std::thread::Builder::new()
             .name("mosa-manager-conn".into())
-            .spawn(move || serve_conn(conn, st));
+            .spawn(move || serve_conn(conn, sl));
         if stopping {
             break;
         }
     }
 }
 
-fn serve_conn(conn: Conn, state: Arc<ManagerState>) {
+fn serve_conn(conn: Conn, slot: Arc<Mutex<Slot>>) {
     let reader = match conn.try_clone() {
         Ok(c) => c,
         Err(_) => return,
@@ -1005,10 +1544,127 @@ fn serve_conn(conn: Conn, state: Arc<ManagerState>) {
     let mut r = BufReader::new(reader);
     let mut w = BufWriter::new(conn);
     while let Ok(Some(msg)) = Msg::read_from(&mut r) {
+        // Resolve the state per message, not per connection, so a
+        // restart is visible to connections that outlive it.  A crashed
+        // slot severs the connection (client sees EOF, like a dead
+        // process).
+        let (state, epoch) = {
+            let slot = slot.lock().unwrap();
+            if !slot.up {
+                return;
+            }
+            (slot.state.clone(), slot.epoch)
+        };
         let reply = state.handle(msg);
+        // A crash while we were handling: the state this reply was
+        // computed against is gone.  Suppress the reply (the client
+        // sees the connection die mid-call) — never answer from the
+        // dead.
+        if slot.lock().unwrap().epoch != epoch {
+            return;
+        }
         if reply.write_to(&mut w).is_err() {
             break;
         }
+    }
+}
+
+/// A log-shipping follower: bootstraps from the primary's snapshot,
+/// then tails its WAL over the wire ([`Msg::FetchWal`]), applying each
+/// shipped record through the same `apply` path the primary used.  On
+/// primary loss the follower can be [`Follower::promote`]d into a
+/// serving [`Manager`] — proving the log format is replication-ready.
+///
+/// Deliberately minimal: pull-based, one primary, no election — the
+/// smallest thing that demonstrates a second machine can hold a
+/// promotable copy of the control plane.
+pub struct Follower {
+    state: Arc<ManagerState>,
+    primary: String,
+}
+
+impl Follower {
+    /// Connect to a primary and bootstrap from its current snapshot.
+    pub fn connect(primary: &str, lease_timeout: Duration) -> Result<Follower> {
+        let state = Arc::new(ManagerState::with_lease_timeout(
+            Box::new(RoundRobinStripe::default()),
+            lease_timeout,
+        ));
+        let f = Follower {
+            state,
+            primary: primary.to_string(),
+        };
+        f.bootstrap()?;
+        Ok(f)
+    }
+
+    /// One request/reply against the primary on a fresh connection
+    /// (simplest thing that survives primary restarts between polls).
+    fn call(&self, msg: Msg) -> Result<Msg> {
+        let conn = Conn::connect_timeout(&self.primary, Duration::from_secs(1))?;
+        let rc = conn.try_clone()?;
+        let mut r = BufReader::new(rc);
+        let mut w = BufWriter::new(conn);
+        msg.write_to(&mut w)?;
+        Msg::read_from(&mut r)?
+            .ok_or_else(|| Error::Manager("primary closed the connection".into()))?
+            .into_result()
+    }
+
+    /// (Re-)install the primary's current snapshot.
+    fn bootstrap(&self) -> Result<()> {
+        match self.call(Msg::FetchSnapshot)? {
+            Msg::SnapshotData { data } => {
+                let snap = SnapshotState::decode(&data)?;
+                self.state.install_snapshot(&snap);
+                Ok(())
+            }
+            other => Err(Error::Manager(format!(
+                "follower: unexpected snapshot reply {other:?}"
+            ))),
+        }
+    }
+
+    /// Fetch and apply the next batch of shipped records.  Returns how
+    /// many were applied (0 = caught up).  If the primary no longer
+    /// retains our position, re-bootstraps from a fresh snapshot.
+    pub fn poll(&self) -> Result<usize> {
+        let after = self.state.last_lsn();
+        let records = match self.call(Msg::FetchWal { after }) {
+            Ok(Msg::WalRecords { records }) => records,
+            Ok(other) => {
+                return Err(Error::Manager(format!(
+                    "follower: unexpected wal reply {other:?}"
+                )))
+            }
+            Err(Error::Proto(e)) if e.contains("re-snapshot") => {
+                self.bootstrap()?;
+                return Ok(0);
+            }
+            Err(e) => return Err(e),
+        };
+        let n = records.len();
+        for entry in records {
+            self.state.apply_shipped(entry.lsn, &entry.data)?;
+        }
+        Ok(n)
+    }
+
+    /// The replicated state (tests assert it matches the primary's).
+    pub fn state(&self) -> Arc<ManagerState> {
+        self.state.clone()
+    }
+
+    /// Highest LSN applied so far.
+    pub fn last_lsn(&self) -> u64 {
+        self.state.last_lsn()
+    }
+
+    /// Promote: stop following and serve the replicated state on
+    /// `addr`.  (The caller decides *when* — e.g. after N failed
+    /// polls; see `gpustore manager --follow`.)
+    pub fn promote(self, addr: &str) -> Result<Manager> {
+        Manager::serve(addr, self.state)
     }
 }
 
@@ -1649,5 +2305,229 @@ mod tests {
         assert_eq!(s.block_stats().blocks, 1, "still pinned once");
         s.handle(Msg::DropLease { lease: l2 });
         assert_eq!(s.block_stats().blocks, 0, "last pin dropped -> swept");
+    }
+
+    // ---- durability (PR 7) ----
+
+    use crate::wal::testutil::TempDir;
+
+    fn durable_opts(dir: &std::path::Path) -> DurabilityOpts {
+        DurabilityOpts {
+            data_dir: dir.to_path_buf(),
+            sync_interval: Duration::ZERO,
+            snapshot_every: 1_000_000,
+        }
+    }
+
+    /// Durable 5-second-lease state on `dir` (the lease fixture's
+    /// window, so `open_write_lease` works against it too).
+    fn durable_state(dir: &std::path::Path) -> ManagerState {
+        ManagerState::with_durability(
+            Box::new(RoundRobinStripe::default()),
+            Duration::from_secs(5),
+            Some(durable_opts(dir)),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn durable_state_survives_crash_and_restart() {
+        let t = TempDir::new("mgr-durable");
+        let before = {
+            let s = durable_state(&t.0);
+            join_nodes(&s, 2);
+            let lease = open_write_lease(&s, "sess");
+            s.handle(Msg::AllocPlacement {
+                file: "sess".into(),
+                lease,
+                blocks: vec![
+                    BlockSpec { hash: [1; 16], len: 10 },
+                    BlockSpec { hash: [2; 16], len: 20 },
+                ],
+            });
+            assert_eq!(
+                s.handle(Msg::CommitBlockMap {
+                    file: "f".into(),
+                    lease,
+                    blocks: vec![
+                        BlockMeta { hash: [1; 16], len: 10, replicas: vec![0] },
+                        BlockMeta { hash: [2; 16], len: 20, replicas: vec![1] },
+                    ],
+                }),
+                Msg::Ok
+            );
+            // An open read lease and a second in-flight writer are part
+            // of the durable image too.
+            let Msg::LeaseGrant { lease: rl, .. } = s.handle(Msg::OpenLease {
+                file: "f".into(),
+                write: false,
+            }) else {
+                panic!()
+            };
+            assert!(rl != 0);
+            let _w2 = open_write_lease(&s, "sess2");
+            let snap = s.snapshot_state();
+            s.detach_wal(); // crash: from here nothing else persists
+            snap
+        };
+        let s = durable_state(&t.0);
+        assert_eq!(s.snapshot_state(), before, "recovered state == pre-crash");
+        // The recovered manager keeps serving: the committed map reads
+        // back byte-identical metadata.
+        let Msg::BlockMap { version, blocks } = s.handle(Msg::GetBlockMap { file: "f".into() })
+        else {
+            panic!()
+        };
+        assert_eq!(version, 1);
+        assert_eq!(blocks.len(), 2);
+    }
+
+    #[test]
+    fn recovered_leases_get_full_ttl_then_lapse() {
+        let t = TempDir::new("mgr-lease-ttl");
+        {
+            let s = durable_state(&t.0);
+            join_nodes(&s, 1);
+            let lease = open_write_lease(&s, "sess");
+            s.handle(Msg::AllocPlacement {
+                file: "sess".into(),
+                lease,
+                blocks: vec![BlockSpec { hash: [9; 16], len: 7 }],
+            });
+            s.detach_wal();
+        }
+        let s = durable_state(&t.0);
+        assert_eq!(s.block_stats().write_leases, 1, "claim holder recovered");
+        assert_eq!(s.block_stats().pending_claims, 1);
+        // Conservative clocks: the recovered lease is good for one full
+        // window after restart (its surviving writer renews as usual)...
+        s.advance_clock(Duration::from_secs(4));
+        s.tick();
+        assert_eq!(s.block_stats().write_leases, 1);
+        // ...then lapses if its writer never came back — PR 3's
+        // reclamation, one window late, zero stranded claims.
+        s.advance_clock(Duration::from_secs(2));
+        s.tick();
+        assert_eq!(s.block_stats().write_leases, 0);
+        assert_eq!(s.block_stats().pending_claims, 0, "no stranded claims");
+        assert_eq!(s.block_stats().blocks, 0, "orphaned claim swept");
+    }
+
+    #[test]
+    fn snapshot_cadence_prunes_and_recovers() {
+        let t = TempDir::new("mgr-snap");
+        let opts = DurabilityOpts {
+            data_dir: t.0.clone(),
+            sync_interval: Duration::ZERO,
+            snapshot_every: 4,
+        };
+        let before = {
+            let s = ManagerState::with_durability(
+                Box::new(RoundRobinStripe::default()),
+                Duration::from_secs(5),
+                Some(opts.clone()),
+            )
+            .unwrap();
+            join_nodes(&s, 1);
+            for i in 1..=6u8 {
+                s.handle(Msg::CommitBlockMap {
+                    file: format!("f{i}"),
+                    lease: 0,
+                    blocks: vec![meta(i)],
+                });
+            }
+            let snap = s.snapshot_state();
+            s.detach_wal();
+            snap
+        };
+        let snaps = std::fs::read_dir(t.0.join("snap")).unwrap().count();
+        assert_eq!(snaps, 1, "cadence cut a snapshot and pruned older ones");
+        let s = ManagerState::with_durability(
+            Box::new(RoundRobinStripe::default()),
+            Duration::from_secs(5),
+            Some(opts),
+        )
+        .unwrap();
+        assert_eq!(s.snapshot_state(), before, "snapshot + tail replay");
+    }
+
+    #[test]
+    fn follower_tails_primary_and_promotes() {
+        let mgr = Manager::spawn("127.0.0.1:0").unwrap();
+        let s = mgr.state();
+        join_nodes(&s, 1);
+        s.handle(Msg::CommitBlockMap {
+            file: "f".into(),
+            lease: 0,
+            blocks: vec![meta(1)],
+        });
+        let f = Follower::connect(mgr.addr(), DEFAULT_LEASE_TIMEOUT).unwrap();
+        assert_eq!(f.state().snapshot_state(), s.snapshot_state());
+        // New mutations ship incrementally (no re-bootstrap).
+        s.handle(Msg::CommitBlockMap {
+            file: "g".into(),
+            lease: 0,
+            blocks: vec![meta(2)],
+        });
+        while f.poll().unwrap() > 0 {}
+        assert_eq!(f.state().snapshot_state(), s.snapshot_state());
+        // Promotion: the replicated state serves on its own address.
+        let promoted = f.promote("127.0.0.1:0").unwrap();
+        let Msg::BlockMap { version, blocks } = promoted
+            .state()
+            .handle(Msg::GetBlockMap { file: "g".into() })
+        else {
+            panic!()
+        };
+        assert_eq!((version, blocks), (1, vec![meta(2)]));
+    }
+
+    #[test]
+    fn tcp_crash_then_restart_recovers_on_same_addr() {
+        let t = TempDir::new("mgr-tcp-crash");
+        let opts = durable_opts(&t.0);
+        let mgr = Manager::spawn_with_opts(
+            "127.0.0.1:0",
+            Box::new(RoundRobinStripe::default()),
+            Duration::from_secs(5),
+            Some(opts.clone()),
+        )
+        .unwrap();
+        let mut c = Conn::connect(mgr.addr()).unwrap();
+        Msg::NodeJoin { addr: "x:1".into() }.write_to(&mut c).unwrap();
+        assert_eq!(
+            Msg::read_from(&mut c).unwrap().unwrap(),
+            Msg::NodeId { id: 0 }
+        );
+        Msg::CommitBlockMap {
+            file: "f".into(),
+            lease: 0,
+            blocks: vec![meta(3)],
+        }
+        .write_to(&mut c)
+        .unwrap();
+        assert_eq!(Msg::read_from(&mut c).unwrap().unwrap(), Msg::Ok);
+        mgr.crash();
+        // While down the old connection is severed mid-call — the
+        // client sees EOF or an error, never a reply from the dead.
+        let dead = Msg::GetBlockMap { file: "f".into() }
+            .write_to(&mut c)
+            .and_then(|_| Msg::read_from(&mut c));
+        assert!(!matches!(dead, Ok(Some(_))), "{dead:?}");
+        mgr.restart(
+            Box::new(RoundRobinStripe::default()),
+            Duration::from_secs(5),
+            Some(opts),
+        )
+        .unwrap();
+        let mut c = Conn::connect(mgr.addr()).unwrap();
+        Msg::GetBlockMap { file: "f".into() }.write_to(&mut c).unwrap();
+        assert_eq!(
+            Msg::read_from(&mut c).unwrap().unwrap(),
+            Msg::BlockMap {
+                version: 1,
+                blocks: vec![meta(3)]
+            }
+        );
     }
 }

@@ -68,8 +68,8 @@ pub mod session;
 pub use cluster::Cluster;
 pub use duplex::DuplexClient;
 pub use manager::{
-    policy_for, BlockStats, Manager, PlacementPolicy, ReplicatedStripe, RoundRobinStripe,
-    DEFAULT_LEASE_TIMEOUT,
+    policy_for, BlockStats, Follower, Manager, ManagerState, PlacementPolicy, ReplicatedStripe,
+    RoundRobinStripe, DEFAULT_LEASE_TIMEOUT,
 };
 pub use node::{NodeOpts, StorageNode};
 pub use proto::{Assignment, BlockMeta, BlockSpec, Msg, NodeEntry};

@@ -22,6 +22,14 @@
 //! [`Msg::AllocPlacement`] and [`Msg::CommitBlockMap`] (`lease == 0`
 //! means "untracked", the pre-lease behaviour).
 //!
+//! The durable control plane (tags ≥ 30) adds *log shipping*: a
+//! follower bootstraps from the primary's full state image
+//! ([`Msg::FetchSnapshot`] → [`Msg::SnapshotData`]) and then tails the
+//! primary's write-ahead log ([`Msg::FetchWal`] → [`Msg::WalRecords`]),
+//! applying each record through the same `apply()` path the primary and
+//! crash recovery use.  A follower that fell behind the primary's
+//! retained log receives a logical `Err` and re-bootstraps.
+//!
 //! Data-plane v2 (pipelined duplex, wire format bumped): the
 //! client↔node block frames carry a *request id* so many operations can
 //! be in flight on one socket and replies can be matched to their
@@ -84,6 +92,16 @@ pub struct Assignment {
     /// already stored (manager-side dedup) — CA clients skip the
     /// transfer, non-CA clients overwrite in place.
     pub fresh: bool,
+}
+
+/// One shipped write-ahead-log record in a [`Msg::WalRecords`] reply.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WalEntry {
+    /// The record's log sequence number (dense; the follower applies in
+    /// order and re-fetches from its last applied lsn).
+    pub lsn: u64,
+    /// The encoded `wal::Record` bytes.
+    pub data: Vec<u8>,
 }
 
 /// One entry of a [`Msg::Nodes`] reply.
@@ -297,6 +315,32 @@ pub enum Msg {
         msg: String,
     },
 
+    // ---- follower -> primary (log shipping) ----
+    /// Fetch a full state image to bootstrap a follower.  Answered by
+    /// [`Msg::SnapshotData`].
+    FetchSnapshot,
+    /// Fetch log records after `after` (the follower's last applied
+    /// lsn).  Answered by [`Msg::WalRecords`], or a logical `Err` when
+    /// the primary no longer retains that far back — the follower must
+    /// re-bootstrap from a fresh snapshot.
+    FetchWal {
+        /// Last lsn the follower has applied (`0` = from the start).
+        after: u64,
+    },
+
+    // ---- primary -> follower (log shipping) ----
+    /// A full state image (encoded `wal::SnapshotState`).
+    SnapshotData {
+        /// Encoded snapshot bytes.
+        data: Vec<u8>,
+    },
+    /// A batch of shipped log records in lsn order (possibly empty when
+    /// the follower is caught up).
+    WalRecords {
+        /// The records, dense from the requested position.
+        records: Vec<WalEntry>,
+    },
+
     // ---- shared ----
     /// Success acknowledgement.
     Ok,
@@ -338,6 +382,10 @@ impl Msg {
             Msg::DropLease { .. } => 27,
             Msg::OkFor { .. } => 28,
             Msg::ErrFor { .. } => 29,
+            Msg::FetchSnapshot => 30,
+            Msg::SnapshotData { .. } => 31,
+            Msg::FetchWal { .. } => 32,
+            Msg::WalRecords { .. } => 33,
         }
     }
 
@@ -351,7 +399,7 @@ impl Msg {
                 p.extend_from_slice(&lease.to_le_bytes());
                 put_blocks(&mut p, blocks);
             }
-            Msg::ListFiles | Msg::NodeStats | Msg::NodeList | Msg::Ok => {}
+            Msg::ListFiles | Msg::NodeStats | Msg::NodeList | Msg::FetchSnapshot | Msg::Ok => {}
             Msg::BlockMap { version, blocks } => {
                 p.extend_from_slice(&version.to_le_bytes());
                 put_blocks(&mut p, blocks);
@@ -440,6 +488,19 @@ impl Msg {
             }
             Msg::RenewLease { lease } | Msg::DropLease { lease } => {
                 p.extend_from_slice(&lease.to_le_bytes())
+            }
+            Msg::FetchWal { after } => p.extend_from_slice(&after.to_le_bytes()),
+            Msg::SnapshotData { data } => {
+                p.extend_from_slice(&(data.len() as u32).to_le_bytes());
+                p.extend_from_slice(data);
+            }
+            Msg::WalRecords { records } => {
+                p.extend_from_slice(&(records.len() as u32).to_le_bytes());
+                for r in records {
+                    p.extend_from_slice(&r.lsn.to_le_bytes());
+                    p.extend_from_slice(&(r.data.len() as u32).to_le_bytes());
+                    p.extend_from_slice(&r.data);
+                }
             }
         }
         let mut frame = Vec::with_capacity(5 + p.len());
@@ -573,6 +634,23 @@ impl Msg {
                 req: c.u64()?,
                 msg: c.str()?,
             },
+            30 => Msg::FetchSnapshot,
+            31 => Msg::SnapshotData { data: c.bytes()? },
+            32 => Msg::FetchWal { after: c.u64()? },
+            33 => {
+                let n = c.u32()? as usize;
+                if n > MAX_FRAME / 13 {
+                    return Err(Error::Proto(format!("wal record list too long: {n}")));
+                }
+                let mut records = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    records.push(WalEntry {
+                        lsn: c.u64()?,
+                        data: c.bytes()?,
+                    });
+                }
+                Msg::WalRecords { records }
+            }
             t => return Err(Error::Proto(format!("unknown tag {t}"))),
         };
         if c.i != p.len() {
@@ -653,12 +731,12 @@ impl Msg {
     }
 }
 
-fn put_str(p: &mut Vec<u8>, s: &str) {
+pub(crate) fn put_str(p: &mut Vec<u8>, s: &str) {
     p.extend_from_slice(&(s.len() as u32).to_le_bytes());
     p.extend_from_slice(s.as_bytes());
 }
 
-fn put_replicas(p: &mut Vec<u8>, replicas: &[u32]) {
+pub(crate) fn put_replicas(p: &mut Vec<u8>, replicas: &[u32]) {
     // Encode exactly what the decoder accepts: replica sets are bounded
     // by MAX_REPLICAS end to end (policies clamp to it), so truncation
     // here is a never-expected last resort, not a silent behavior.
@@ -670,7 +748,7 @@ fn put_replicas(p: &mut Vec<u8>, replicas: &[u32]) {
     }
 }
 
-fn put_blocks(p: &mut Vec<u8>, blocks: &[BlockMeta]) {
+pub(crate) fn put_blocks(p: &mut Vec<u8>, blocks: &[BlockMeta]) {
     p.extend_from_slice(&(blocks.len() as u32).to_le_bytes());
     for b in blocks {
         p.extend_from_slice(&b.hash);
@@ -679,12 +757,19 @@ fn put_blocks(p: &mut Vec<u8>, blocks: &[BlockMeta]) {
     }
 }
 
-struct Cursor<'a> {
+/// A bounds-checked decode cursor over one frame's payload.  Shared
+/// with the `wal` module (record + snapshot decoding) so the durable
+/// format reuses the wire format's primitives.
+pub(crate) struct Cursor<'a> {
     b: &'a [u8],
     i: usize,
 }
 
 impl<'a> Cursor<'a> {
+    pub(crate) fn new(b: &'a [u8]) -> Cursor<'a> {
+        Cursor { b, i: 0 }
+    }
+
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         if self.i + n > self.b.len() {
             return Err(Error::Proto("truncated frame".into()));
@@ -694,19 +779,19 @@ impl<'a> Cursor<'a> {
         Ok(s)
     }
 
-    fn u8(&mut self) -> Result<u8> {
+    pub(crate) fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
     }
 
-    fn u32(&mut self) -> Result<u32> {
+    pub(crate) fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn u64(&mut self) -> Result<u64> {
+    pub(crate) fn u64(&mut self) -> Result<u64> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    fn digest(&mut self) -> Result<Digest> {
+    pub(crate) fn digest(&mut self) -> Result<Digest> {
         Ok(self.take(16)?.try_into().unwrap())
     }
 
@@ -715,12 +800,44 @@ impl<'a> Cursor<'a> {
         Ok(self.take(n)?.to_vec())
     }
 
-    fn str(&mut self) -> Result<String> {
+    pub(crate) fn str(&mut self) -> Result<String> {
         let b = self.bytes()?;
         String::from_utf8(b).map_err(|_| Error::Proto("bad utf-8 string".into()))
     }
 
-    fn replicas(&mut self) -> Result<Vec<u32>> {
+    /// A `u32` list length, bounded so `n * min_item_bytes` cannot
+    /// exceed a frame (rejects absurd counts before allocating).
+    pub(crate) fn list_len(&mut self, min_item_bytes: usize, what: &str) -> Result<usize> {
+        let n = self.u32()? as usize;
+        if n > MAX_FRAME / min_item_bytes.max(1) {
+            return Err(Error::Proto(format!("{what} list too long: {n}")));
+        }
+        Ok(n)
+    }
+
+    /// A bounded list of digests (the `ReleaseBlocks` / wal-record
+    /// hash-list encoding).
+    pub(crate) fn hashes(&mut self) -> Result<Vec<Digest>> {
+        let n = self.list_len(16, "hash")?;
+        let mut out = Vec::with_capacity(n.min(4096));
+        for _ in 0..n {
+            out.push(self.digest()?);
+        }
+        Ok(out)
+    }
+
+    /// Require the cursor to have consumed its input exactly.
+    pub(crate) fn finish(&self, what: &str) -> Result<()> {
+        if self.i != self.b.len() {
+            return Err(Error::Proto(format!(
+                "trailing {} bytes in {what}",
+                self.b.len() - self.i
+            )));
+        }
+        Ok(())
+    }
+
+    pub(crate) fn replicas(&mut self) -> Result<Vec<u32>> {
         let n = self.u8()? as usize;
         if n > MAX_REPLICAS {
             return Err(Error::Proto(format!("replica set too large: {n}")));
@@ -732,7 +849,7 @@ impl<'a> Cursor<'a> {
         Ok(out)
     }
 
-    fn blocks(&mut self) -> Result<Vec<BlockMeta>> {
+    pub(crate) fn blocks(&mut self) -> Result<Vec<BlockMeta>> {
         let n = self.u32()? as usize;
         if n > MAX_FRAME / 21 {
             return Err(Error::Proto(format!("block list too long: {n}")));
@@ -883,6 +1000,26 @@ mod tests {
         roundtrip(Msg::Bool(true));
         roundtrip(Msg::Bool(false));
         roundtrip(Msg::Err("boom".into()));
+        roundtrip(Msg::FetchSnapshot);
+        roundtrip(Msg::SnapshotData {
+            data: vec![1, 2, 3, 4],
+        });
+        roundtrip(Msg::SnapshotData { data: vec![] });
+        roundtrip(Msg::FetchWal { after: 0 });
+        roundtrip(Msg::FetchWal { after: u64::MAX });
+        roundtrip(Msg::WalRecords { records: vec![] });
+        roundtrip(Msg::WalRecords {
+            records: vec![
+                WalEntry {
+                    lsn: 1,
+                    data: vec![9; 40],
+                },
+                WalEntry {
+                    lsn: 2,
+                    data: vec![],
+                },
+            ],
+        });
     }
 
     #[test]

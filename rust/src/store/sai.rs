@@ -230,6 +230,31 @@ impl Sai {
     pub(super) fn manager_call(&self, msg: Msg) -> Result<Msg> {
         let mut g = self.manager.lock().unwrap();
         let (r, w) = &mut *g;
+        // First try on the shared long-lived connection; note whether
+        // the request was ever flushed onto the wire.
+        let sent = msg.write_to(w).and_then(|()| w.flush().map_err(Error::Io));
+        let reply = match &sent {
+            Ok(()) => Msg::read_from(r),
+            Err(_) => Ok(None),
+        };
+        match reply {
+            Ok(Some(m)) => return m.into_result(),
+            // Retry exactly once, on a fresh connection, only when the
+            // connection itself failed: the write never made it out, or
+            // the manager severed the link without replying (EOF — a
+            // manager crash/restart does this to every live
+            // connection).  In both cases the durable manager either
+            // never saw the request or recovered it from its log, so a
+            // single replay is safe for our idempotent control calls; a
+            // read that died MID-reply (a non-EOF error after a
+            // successful write) is NOT retried — the request may have
+            // applied and replaying e.g. a commit could double-apply.
+            Ok(None) => {}
+            Err(e) => return Err(e),
+        }
+        let conn = Conn::connect_timeout(&self.manager_addr, Duration::from_secs(1))?;
+        *g = (BufReader::new(conn.try_clone()?), BufWriter::new(conn));
+        let (r, w) = &mut *g;
         msg.write_to(w)?;
         w.flush()?;
         Msg::read_from(r)?.ok_or_else(closed)?.into_result()

@@ -1,0 +1,1142 @@
+//! Durable control plane: a segmented, CRC-framed write-ahead log plus
+//! periodic snapshots for the manager's metadata (block table, leases,
+//! file maps, node registry).
+//!
+//! Everything the manager mutates is first serialized as a typed
+//! [`Record`] and appended here; the same `apply()` path in
+//! `store::manager` consumes records both live and during replay, so
+//! recovery is not a separate (and separately-buggy) code path.
+//!
+//! ## On-disk layout (`--data-dir`)
+//!
+//! ```text
+//! <data-dir>/
+//!   wal/seg-<first_lsn:020>.log     append-only record segments
+//!   snap/snap-<lsn:020>.snap        full-state snapshots
+//! ```
+//!
+//! Each log frame is `u32 body_len (LE) | u32 crc32 (LE) | body`, where
+//! `body = u64 lsn (LE) | record bytes` and the CRC covers the body.
+//! LSNs are dense (each record's lsn is its predecessor's + 1), which
+//! recovery verifies — a gap means a lost segment and fails loudly.
+//!
+//! ## Torn tails vs. corruption
+//!
+//! A crash can tear the **final** record of the **final** segment: an
+//! incomplete frame at EOF there is expected, truncated away, and
+//! replay proceeds (the record was never acknowledged — group commit's
+//! documented loss window).  Everything else is corruption and fails
+//! loudly: a short frame mid-log, a complete frame whose CRC
+//! mismatches, an LSN gap, or an undecodable snapshot.  The WAL never
+//! silently drops interior history.
+//!
+//! ## Group commit
+//!
+//! `sync_interval == 0` fsyncs every append (strict durability, used by
+//! the recovery tests and the bench baseline).  A non-zero interval
+//! fsyncs at most once per interval — the classic group-commit trade:
+//! an unacknowledged tail of at most one interval's records can be lost
+//! on power failure, in exchange for not paying an fsync per mutation.
+//! `Wal::sync` (and drop) force the tail down.
+//!
+//! ## Snapshots
+//!
+//! Every `snapshot_every` records the manager serializes its entire
+//! state ([`SnapshotState`]) through a temp-file + fsync + rename
+//! sequence, rotates the log so the new segment starts after the
+//! snapshot's lsn, and prunes segments and snapshots the new snapshot
+//! covers.  Recovery loads the latest snapshot and replays only the
+//! tail.
+
+use std::fs::{self, File, OpenOptions};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use crate::hash::Digest;
+use crate::store::proto::{put_blocks, put_replicas, put_str, BlockMeta, Cursor, MAX_FRAME};
+use crate::{Error, Result};
+
+/// Durability knobs for a manager (`--data-dir`, `--wal-sync`,
+/// `--snapshot-every`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DurabilityOpts {
+    /// Root directory for the WAL segments and snapshots.
+    pub data_dir: PathBuf,
+    /// Group-commit window: fsync at most once per this interval
+    /// (`0` = fsync every record).
+    pub sync_interval: Duration,
+    /// Snapshot after this many records since the last snapshot.
+    pub snapshot_every: u64,
+}
+
+impl DurabilityOpts {
+    /// Options with the default group-commit window (5 ms) and snapshot
+    /// cadence (4096 records).
+    pub fn new(data_dir: impl Into<PathBuf>) -> DurabilityOpts {
+        DurabilityOpts {
+            data_dir: data_dir.into(),
+            sync_interval: Duration::from_millis(5),
+            snapshot_every: 4096,
+        }
+    }
+}
+
+/// Rotate the live segment when it crosses this size.
+const SEG_BYTES: u64 = 8 * 1024 * 1024;
+
+/// Magic prefix of a snapshot file.
+const SNAP_MAGIC: &[u8; 4] = b"GSNP";
+/// Snapshot format version.
+const SNAP_VERSION: u32 = 1;
+
+/// One typed manager mutation.  Every state change the manager makes —
+/// live or during replay — is one of these, applied through the single
+/// `ManagerState::apply` path.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Record {
+    /// Commit a file version (claims redeemed, old map released).
+    Commit {
+        /// File name.
+        file: String,
+        /// Write lease consumed by the commit (`0` = untracked).
+        lease: u64,
+        /// The committed block-map.
+        blocks: Vec<BlockMeta>,
+    },
+    /// Release provisional claims (aborted writer occurrences).
+    Release {
+        /// One entry per released claim occurrence.
+        hashes: Vec<Digest>,
+    },
+    /// Grant a lease (read: pins the listed occurrences; write: empty).
+    OpenLease {
+        /// The granted lease id.
+        id: u64,
+        /// Read lease: file name.  Write lease: session claim token.
+        tag: String,
+        /// Writer claim lease vs. read-pin lease.
+        write: bool,
+        /// Pinned hash occurrences (read leases; empty for write).
+        hashes: Vec<Digest>,
+    },
+    /// Extend a lease's expiry (client heartbeat).
+    RenewLease {
+        /// Lease id.
+        id: u64,
+    },
+    /// Release a lease early (client drop).
+    DropLease {
+        /// Lease id.
+        id: u64,
+    },
+    /// Lapse an overdue lease (manager expiry sweep).
+    ExpireLease {
+        /// Lease id.
+        id: u64,
+    },
+    /// Place a batch of claims: each block's replica set was decided by
+    /// the placement policy at log time, so replay never re-runs
+    /// placement (the policy cursor is volatile).
+    Alloc {
+        /// Claim tag of the allocating session.
+        tag: String,
+        /// Write lease the claims are held under (`0` = untracked).
+        lease: u64,
+        /// Placed blocks with their decided replica sets.
+        blocks: Vec<BlockMeta>,
+    },
+    /// A new node joined the registry (re-joins of a known address only
+    /// touch the volatile liveness clock and are not logged).
+    NodeJoin {
+        /// Assigned node id (the registry index).
+        id: u32,
+        /// Address the node serves blocks on.
+        addr: String,
+    },
+}
+
+impl Record {
+    fn tag(&self) -> u8 {
+        match self {
+            Record::Commit { .. } => 1,
+            Record::Release { .. } => 2,
+            Record::OpenLease { .. } => 3,
+            Record::RenewLease { .. } => 4,
+            Record::DropLease { .. } => 5,
+            Record::ExpireLease { .. } => 6,
+            Record::Alloc { .. } => 7,
+            Record::NodeJoin { .. } => 8,
+        }
+    }
+
+    /// Serialize to record bytes (tag + fields; no frame).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut p = vec![self.tag()];
+        match self {
+            Record::Commit { file, lease, blocks } | Record::Alloc { tag: file, lease, blocks } => {
+                put_str(&mut p, file);
+                p.extend_from_slice(&lease.to_le_bytes());
+                put_blocks(&mut p, blocks);
+            }
+            Record::Release { hashes } => put_hashes(&mut p, hashes),
+            Record::OpenLease { id, tag, write, hashes } => {
+                p.extend_from_slice(&id.to_le_bytes());
+                put_str(&mut p, tag);
+                p.push(*write as u8);
+                put_hashes(&mut p, hashes);
+            }
+            Record::RenewLease { id } | Record::DropLease { id } | Record::ExpireLease { id } => {
+                p.extend_from_slice(&id.to_le_bytes())
+            }
+            Record::NodeJoin { id, addr } => {
+                p.extend_from_slice(&id.to_le_bytes());
+                put_str(&mut p, addr);
+            }
+        }
+        p
+    }
+
+    /// Deserialize record bytes (strict: trailing bytes are an error).
+    pub fn decode(b: &[u8]) -> Result<Record> {
+        let mut c = Cursor::new(b);
+        let tag = c.u8()?;
+        let rec = match tag {
+            1 => Record::Commit {
+                file: c.str()?,
+                lease: c.u64()?,
+                blocks: c.blocks()?,
+            },
+            2 => Record::Release { hashes: c.hashes()? },
+            3 => Record::OpenLease {
+                id: c.u64()?,
+                tag: c.str()?,
+                write: c.u8()? != 0,
+                hashes: c.hashes()?,
+            },
+            4 => Record::RenewLease { id: c.u64()? },
+            5 => Record::DropLease { id: c.u64()? },
+            6 => Record::ExpireLease { id: c.u64()? },
+            7 => Record::Alloc {
+                tag: c.str()?,
+                lease: c.u64()?,
+                blocks: c.blocks()?,
+            },
+            8 => Record::NodeJoin {
+                id: c.u32()?,
+                addr: c.str()?,
+            },
+            t => return Err(Error::Proto(format!("wal: unknown record tag {t}"))),
+        };
+        c.finish(&format!("wal record {tag}"))?;
+        Ok(rec)
+    }
+}
+
+fn put_hashes(p: &mut Vec<u8>, hashes: &[Digest]) {
+    p.extend_from_slice(&(hashes.len() as u32).to_le_bytes());
+    for h in hashes {
+        p.extend_from_slice(h);
+    }
+}
+
+/// One stored block's full bookkeeping in a snapshot (mirrors the
+/// manager's `BlockInfo`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SnapBlock {
+    /// Content hash.
+    pub hash: Digest,
+    /// Payload length.
+    pub len: u32,
+    /// Assigned replica set.
+    pub replicas: Vec<u32>,
+    /// Committed references.
+    pub refs: u64,
+    /// Provisional claim occurrences.
+    pub pending: u64,
+    /// Read-lease pins.
+    pub pins: u64,
+    /// Claim tag of the first allocator while uncommitted.
+    pub placed_by: String,
+}
+
+/// One live lease in a snapshot.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SnapLease {
+    /// Lease id.
+    pub id: u64,
+    /// File name (read) or claim token (write).
+    pub tag: String,
+    /// Writer claim lease vs. read-pin lease.
+    pub write: bool,
+    /// Held hash occurrences.
+    pub hashes: Vec<Digest>,
+}
+
+/// A complete, serializable image of the manager's durable state at one
+/// LSN.  Volatile fields (lease expiry clocks, node liveness beats, the
+/// placement cursor, GC-in-flight marks) are deliberately absent: lease
+/// clocks resume conservatively at a full TTL, nodes resume "alive"
+/// until the heartbeat timeout re-judges them, and `Alloc` records
+/// carry their decided replica sets so the cursor never needs replay.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct SnapshotState {
+    /// LSN of the last record folded into this image.
+    pub lsn: u64,
+    /// Files, sorted by name: `(name, version, block-map)`.
+    pub files: Vec<(String, u64, Vec<BlockMeta>)>,
+    /// Block table, sorted by hash.
+    pub blocks: Vec<SnapBlock>,
+    /// Node registry addresses, by id.
+    pub nodes: Vec<String>,
+    /// Live leases, sorted by id.
+    pub leases: Vec<SnapLease>,
+    /// Next lease id to grant.
+    pub next_lease: u64,
+}
+
+impl SnapshotState {
+    /// Serialize: `magic | crc32(body) | body`.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut p = Vec::new();
+        p.extend_from_slice(&SNAP_VERSION.to_le_bytes());
+        p.extend_from_slice(&self.lsn.to_le_bytes());
+        p.extend_from_slice(&self.next_lease.to_le_bytes());
+        p.extend_from_slice(&(self.files.len() as u32).to_le_bytes());
+        for (name, version, blocks) in &self.files {
+            put_str(&mut p, name);
+            p.extend_from_slice(&version.to_le_bytes());
+            put_blocks(&mut p, blocks);
+        }
+        p.extend_from_slice(&(self.blocks.len() as u32).to_le_bytes());
+        for b in &self.blocks {
+            p.extend_from_slice(&b.hash);
+            p.extend_from_slice(&b.len.to_le_bytes());
+            put_replicas(&mut p, &b.replicas);
+            p.extend_from_slice(&b.refs.to_le_bytes());
+            p.extend_from_slice(&b.pending.to_le_bytes());
+            p.extend_from_slice(&b.pins.to_le_bytes());
+            put_str(&mut p, &b.placed_by);
+        }
+        p.extend_from_slice(&(self.nodes.len() as u32).to_le_bytes());
+        for addr in &self.nodes {
+            put_str(&mut p, addr);
+        }
+        p.extend_from_slice(&(self.leases.len() as u32).to_le_bytes());
+        for l in &self.leases {
+            p.extend_from_slice(&l.id.to_le_bytes());
+            put_str(&mut p, &l.tag);
+            p.push(l.write as u8);
+            put_hashes(&mut p, &l.hashes);
+        }
+        let mut out = Vec::with_capacity(8 + p.len());
+        out.extend_from_slice(SNAP_MAGIC);
+        out.extend_from_slice(&crc32(&p).to_le_bytes());
+        out.extend_from_slice(&p);
+        out
+    }
+
+    /// Deserialize, verifying magic, CRC, version and exact length.
+    pub fn decode(b: &[u8]) -> Result<SnapshotState> {
+        if b.len() < 8 || &b[..4] != SNAP_MAGIC {
+            return Err(Error::Proto("snapshot: bad magic".into()));
+        }
+        let crc = u32::from_le_bytes(b[4..8].try_into().unwrap());
+        let body = &b[8..];
+        if crc32(body) != crc {
+            return Err(Error::Proto("snapshot: crc mismatch".into()));
+        }
+        let mut c = Cursor::new(body);
+        let version = c.u32()?;
+        if version != SNAP_VERSION {
+            return Err(Error::Proto(format!("snapshot: unknown version {version}")));
+        }
+        let lsn = c.u64()?;
+        let next_lease = c.u64()?;
+        let nf = c.list_len(16, "snapshot files")?;
+        let mut files = Vec::with_capacity(nf.min(4096));
+        for _ in 0..nf {
+            let name = c.str()?;
+            let v = c.u64()?;
+            files.push((name, v, c.blocks()?));
+        }
+        let nb = c.list_len(49, "snapshot blocks")?;
+        let mut blocks = Vec::with_capacity(nb.min(4096));
+        for _ in 0..nb {
+            blocks.push(SnapBlock {
+                hash: c.digest()?,
+                len: c.u32()?,
+                replicas: c.replicas()?,
+                refs: c.u64()?,
+                pending: c.u64()?,
+                pins: c.u64()?,
+                placed_by: c.str()?,
+            });
+        }
+        let nn = c.list_len(4, "snapshot nodes")?;
+        let mut nodes = Vec::with_capacity(nn.min(4096));
+        for _ in 0..nn {
+            nodes.push(c.str()?);
+        }
+        let nl = c.list_len(17, "snapshot leases")?;
+        let mut leases = Vec::with_capacity(nl.min(4096));
+        for _ in 0..nl {
+            leases.push(SnapLease {
+                id: c.u64()?,
+                tag: c.str()?,
+                write: c.u8()? != 0,
+                hashes: c.hashes()?,
+            });
+        }
+        c.finish("snapshot")?;
+        Ok(SnapshotState {
+            lsn,
+            files,
+            blocks,
+            nodes,
+            leases,
+            next_lease,
+        })
+    }
+}
+
+/// An open write-ahead log: the manager's append handle.
+#[derive(Debug)]
+pub struct Wal {
+    opts: DurabilityOpts,
+    /// The live (last) segment, opened for append.
+    seg: File,
+    seg_bytes: u64,
+    /// LSN the next append must carry.
+    next_lsn: u64,
+    /// Group-commit clock: last time the live segment was fsynced.
+    last_sync: Instant,
+    /// Records appended since the last snapshot.
+    since_snapshot: u64,
+}
+
+/// The result of opening a data dir: the state image to install, the
+/// log tail to replay on top of it, and the continuing append handle.
+#[derive(Debug)]
+pub struct Recovery {
+    /// Latest valid snapshot, if any.
+    pub snapshot: Option<SnapshotState>,
+    /// Records after the snapshot, in LSN order.
+    pub records: Vec<(u64, Record)>,
+    /// The log, positioned to append the next record.
+    pub wal: Wal,
+}
+
+impl Wal {
+    /// Append one record as `lsn` (must be the next dense LSN) and
+    /// apply the group-commit sync policy.
+    pub fn append(&mut self, lsn: u64, record: &[u8]) -> Result<()> {
+        debug_assert_eq!(lsn, self.next_lsn, "wal appends must be dense");
+        let mut frame = Vec::with_capacity(16 + record.len());
+        frame.extend_from_slice(&((8 + record.len()) as u32).to_le_bytes());
+        frame.extend_from_slice(&[0; 4]); // crc placeholder
+        frame.extend_from_slice(&lsn.to_le_bytes());
+        frame.extend_from_slice(record);
+        let crc = crc32(&frame[8..]);
+        frame[4..8].copy_from_slice(&crc.to_le_bytes());
+        self.seg.write_all(&frame)?;
+        self.seg_bytes += frame.len() as u64;
+        self.next_lsn = lsn + 1;
+        self.since_snapshot += 1;
+        if self.opts.sync_interval.is_zero() {
+            self.seg.sync_data()?;
+        } else {
+            let now = Instant::now();
+            if now.duration_since(self.last_sync) >= self.opts.sync_interval {
+                self.seg.sync_data()?;
+                self.last_sync = now;
+            }
+        }
+        if self.seg_bytes >= SEG_BYTES {
+            self.rotate()?;
+        }
+        Ok(())
+    }
+
+    /// Force any unsynced tail to disk (the group-commit window ends
+    /// here; also runs on drop).
+    pub fn sync(&mut self) -> Result<()> {
+        self.seg.sync_data()?;
+        self.last_sync = Instant::now();
+        Ok(())
+    }
+
+    /// LSN the next append must carry.
+    pub fn next_lsn(&self) -> u64 {
+        self.next_lsn
+    }
+
+    /// True once `snapshot_every` records accumulated since the last
+    /// snapshot — the manager should cut one.
+    pub fn wants_snapshot(&self) -> bool {
+        self.since_snapshot >= self.opts.snapshot_every.max(1)
+    }
+
+    /// Durably write a snapshot covering everything up to
+    /// `snap.lsn == next_lsn - 1`, rotate the log, and prune segments
+    /// and snapshots the new image covers.
+    pub fn snapshot(&mut self, snap: &SnapshotState) -> Result<()> {
+        debug_assert_eq!(snap.lsn + 1, self.next_lsn, "snapshot must cover the log");
+        let snap_dir = self.opts.data_dir.join("snap");
+        let tmp = snap_dir.join("snap.tmp");
+        let finali = snap_dir.join(format!("snap-{:020}.snap", snap.lsn));
+        {
+            let mut f = File::create(&tmp)?;
+            f.write_all(&snap.encode())?;
+            f.sync_all()?;
+        }
+        fs::rename(&tmp, &finali)?;
+        sync_dir(&snap_dir)?;
+        // Rotate so the live segment starts after the snapshot: every
+        // older segment is then fully covered and prunable.
+        self.rotate()?;
+        self.since_snapshot = 0;
+        prune(&self.opts.data_dir, snap.lsn, self.segment_path())?;
+        Ok(())
+    }
+
+    fn segment_path(&self) -> PathBuf {
+        // The live segment's first lsn is next_lsn minus what it holds;
+        // after a rotate it is exactly next_lsn.  We only need this
+        // right after rotation (for prune), where it is exact.
+        self.opts
+            .data_dir
+            .join("wal")
+            .join(format!("seg-{:020}.log", self.next_lsn))
+    }
+
+    /// Sync and close the live segment, then start a fresh one at
+    /// `next_lsn`.
+    fn rotate(&mut self) -> Result<()> {
+        self.seg.sync_data()?;
+        let wal_dir = self.opts.data_dir.join("wal");
+        let path = wal_dir.join(format!("seg-{:020}.log", self.next_lsn));
+        self.seg = OpenOptions::new().create(true).append(true).open(&path)?;
+        self.seg_bytes = 0;
+        self.last_sync = Instant::now();
+        sync_dir(&wal_dir)?;
+        Ok(())
+    }
+}
+
+impl Drop for Wal {
+    fn drop(&mut self) {
+        let _ = self.seg.sync_data();
+    }
+}
+
+/// Open (or initialize) a data dir: load the latest snapshot, replay
+/// and validate the log tail, truncate a torn final record, and return
+/// the continuing append handle.  Interior corruption — a short frame
+/// mid-log, a CRC mismatch on a complete frame, an LSN gap, an
+/// unreadable snapshot — fails loudly; this function never guesses.
+pub fn recover(opts: &DurabilityOpts) -> Result<Recovery> {
+    let wal_dir = opts.data_dir.join("wal");
+    let snap_dir = opts.data_dir.join("snap");
+    fs::create_dir_all(&wal_dir)?;
+    fs::create_dir_all(&snap_dir)?;
+    // A crash between tmp-write and rename leaves a .tmp: never valid.
+    let _ = fs::remove_file(snap_dir.join("snap.tmp"));
+
+    let snapshot = match latest(&snap_dir, "snap-", ".snap")? {
+        Some((_, path)) => {
+            let bytes = fs::read(&path)?;
+            // A snapshot that exists but does not decode is corruption,
+            // not absence: fail loudly rather than silently replaying
+            // from an older base and resurrecting deleted state.
+            Some(SnapshotState::decode(&bytes).map_err(|e| {
+                Error::Proto(format!("snapshot {}: {e}", path.display()))
+            })?)
+        }
+        None => None,
+    };
+    let snap_lsn = snapshot.as_ref().map(|s| s.lsn).unwrap_or(0);
+
+    let mut seg_paths: Vec<(u64, PathBuf)> = list(&wal_dir, "seg-", ".log")?;
+    seg_paths.sort();
+    let mut records: Vec<(u64, Record)> = Vec::new();
+    let mut expected: Option<u64> = None;
+    for (i, (first_lsn, path)) in seg_paths.iter().enumerate() {
+        let last = i + 1 == seg_paths.len();
+        let bytes = fs::read(path)?;
+        let mut off = 0usize;
+        while off < bytes.len() {
+            let frame_start = off;
+            if bytes.len() - off < 8 {
+                torn(path, frame_start, last, &bytes)?;
+                break;
+            }
+            let len = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+            let crc = u32::from_le_bytes(bytes[off + 4..off + 8].try_into().unwrap());
+            if len < 9 || len > MAX_FRAME {
+                return Err(Error::Proto(format!(
+                    "wal {}: bad frame length {len} at offset {frame_start}",
+                    path.display()
+                )));
+            }
+            if bytes.len() - off - 8 < len {
+                torn(path, frame_start, last, &bytes)?;
+                break;
+            }
+            let body = &bytes[off + 8..off + 8 + len];
+            if crc32(body) != crc {
+                return Err(Error::Proto(format!(
+                    "wal {}: crc mismatch at offset {frame_start} (lsn area {})",
+                    path.display(),
+                    expected.unwrap_or(*first_lsn),
+                )));
+            }
+            let lsn = u64::from_le_bytes(body[..8].try_into().unwrap());
+            if off == 0 && lsn != *first_lsn {
+                return Err(Error::Proto(format!(
+                    "wal {}: first record lsn {lsn} does not match segment name",
+                    path.display()
+                )));
+            }
+            if let Some(e) = expected {
+                if lsn != e {
+                    return Err(Error::Proto(format!(
+                        "wal {}: lsn gap (expected {e}, found {lsn}) — a segment is missing",
+                        path.display()
+                    )));
+                }
+            }
+            expected = Some(lsn + 1);
+            if lsn > snap_lsn {
+                records.push((lsn, Record::decode(&body[8..])?));
+            }
+            off += 8 + len;
+        }
+    }
+    if let Some((lsn, _)) = records.first() {
+        if snapshot.is_some() && *lsn > snap_lsn + 1 {
+            return Err(Error::Proto(format!(
+                "wal: first replay record lsn {lsn} leaves a gap after snapshot lsn {snap_lsn}"
+            )));
+        }
+    }
+    let last_lsn = expected.map(|e| e - 1).unwrap_or(0).max(snap_lsn);
+    let next_lsn = last_lsn + 1;
+
+    // Continue the last segment when it ends exactly at last_lsn;
+    // otherwise (fresh dir, or a snapshot newer than the whole log)
+    // start a clean segment at next_lsn so density holds.
+    let continue_last = expected.map(|e| e - 1) == Some(last_lsn) && !seg_paths.is_empty();
+    let (seg, seg_bytes) = if continue_last {
+        let path = &seg_paths.last().unwrap().1;
+        let f = OpenOptions::new().append(true).open(path)?;
+        let len = f.metadata()?.len();
+        (f, len)
+    } else {
+        let path = wal_dir.join(format!("seg-{:020}.log", next_lsn));
+        let f = OpenOptions::new().create(true).append(true).open(&path)?;
+        sync_dir(&wal_dir)?;
+        (f, 0)
+    };
+    Ok(Recovery {
+        snapshot,
+        records,
+        wal: Wal {
+            opts: opts.clone(),
+            seg,
+            seg_bytes,
+            next_lsn,
+            last_sync: Instant::now(),
+            since_snapshot: 0,
+        },
+    })
+}
+
+/// Handle an incomplete frame at `frame_start`: in the final segment it
+/// is a torn tail (a crash mid-append of a record that was never
+/// acknowledged) — truncate it away, note it on stderr, and let the
+/// same recovery pass continue with everything before it; anywhere else
+/// it is a lost chunk of history — fail loudly.
+fn torn(path: &Path, frame_start: usize, last_segment: bool, bytes: &[u8]) -> Result<()> {
+    if !last_segment {
+        return Err(Error::Proto(format!(
+            "wal {}: truncated record mid-log at offset {frame_start}",
+            path.display()
+        )));
+    }
+    let f = OpenOptions::new().write(true).open(path)?;
+    f.set_len(frame_start as u64)?;
+    f.sync_all()?;
+    eprintln!(
+        "gpustore wal: torn tail truncated at {} bytes of {} ({} trailing bytes discarded)",
+        frame_start,
+        path.display(),
+        bytes.len() - frame_start
+    );
+    Ok(())
+}
+
+/// Files in `dir` named `<prefix><u64><suffix>`, with the parsed
+/// number.
+fn list(dir: &Path, prefix: &str, suffix: &str) -> Result<Vec<(u64, PathBuf)>> {
+    let mut out = Vec::new();
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(num) = name
+            .strip_prefix(prefix)
+            .and_then(|s| s.strip_suffix(suffix))
+        else {
+            continue;
+        };
+        let Ok(n) = num.parse::<u64>() else { continue };
+        out.push((n, entry.path()));
+    }
+    Ok(out)
+}
+
+fn latest(dir: &Path, prefix: &str, suffix: &str) -> Result<Option<(u64, PathBuf)>> {
+    Ok(list(dir, prefix, suffix)?.into_iter().max())
+}
+
+/// Delete snapshots older than `snap_lsn` and segments other than the
+/// live one (all fully covered after the post-snapshot rotation).
+fn prune(data_dir: &Path, snap_lsn: u64, live_segment: PathBuf) -> Result<()> {
+    for (lsn, path) in list(&data_dir.join("snap"), "snap-", ".snap")? {
+        if lsn < snap_lsn {
+            let _ = fs::remove_file(path);
+        }
+    }
+    for (_, path) in list(&data_dir.join("wal"), "seg-", ".log")? {
+        if path != live_segment {
+            let _ = fs::remove_file(path);
+        }
+    }
+    Ok(())
+}
+
+fn sync_dir(dir: &Path) -> Result<()> {
+    // Durability of creates/renames needs the directory fsynced on
+    // POSIX; best-effort on platforms where opening a dir fails.
+    if let Ok(d) = File::open(dir) {
+        let _ = d.sync_all();
+    }
+    Ok(())
+}
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+/// CRC-32 (IEEE, reflected) — the zlib polynomial, hand-rolled for the
+/// zero-dependency constraint.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Unit-test fixtures shared by this module's tests and the manager's
+/// durability tests.
+#[cfg(test)]
+pub(crate) mod testutil {
+    use std::fs;
+    use std::path::PathBuf;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    /// Unique throwaway data dir (removed on drop, best effort).
+    pub(crate) struct TempDir(pub PathBuf);
+
+    impl TempDir {
+        pub(crate) fn new(tag: &str) -> TempDir {
+            static N: AtomicU64 = AtomicU64::new(0);
+            let p = std::env::temp_dir().join(format!(
+                "gpustore-{tag}-{}-{}",
+                std::process::id(),
+                N.fetch_add(1, Ordering::Relaxed)
+            ));
+            fs::create_dir_all(&p).unwrap();
+            TempDir(p)
+        }
+    }
+
+    impl Drop for TempDir {
+        fn drop(&mut self) {
+            let _ = fs::remove_dir_all(&self.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::TempDir;
+    use super::*;
+
+    fn strict(dir: &Path) -> DurabilityOpts {
+        DurabilityOpts {
+            data_dir: dir.to_path_buf(),
+            sync_interval: Duration::ZERO,
+            snapshot_every: 1_000_000,
+        }
+    }
+
+    fn rec(i: u8) -> Record {
+        Record::Release {
+            hashes: vec![[i; 16]],
+        }
+    }
+
+    fn append_n(w: &mut Wal, from: u64, n: u64) {
+        for k in 0..n {
+            let lsn = from + k;
+            w.append(lsn, &rec((lsn % 251) as u8).encode()).unwrap();
+        }
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // The zlib/IEEE check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn record_roundtrip_all_variants() {
+        let meta = BlockMeta {
+            hash: [7; 16],
+            len: 123,
+            replicas: vec![0, 2],
+        };
+        let all = vec![
+            Record::Commit {
+                file: "f".into(),
+                lease: 9,
+                blocks: vec![meta.clone()],
+            },
+            Record::Release {
+                hashes: vec![[1; 16], [2; 16]],
+            },
+            Record::OpenLease {
+                id: 3,
+                tag: "t#1.2.abc".into(),
+                write: true,
+                hashes: vec![],
+            },
+            Record::OpenLease {
+                id: 4,
+                tag: "file.bin".into(),
+                write: false,
+                hashes: vec![[5; 16], [5; 16]],
+            },
+            Record::RenewLease { id: u64::MAX },
+            Record::DropLease { id: 1 },
+            Record::ExpireLease { id: 2 },
+            Record::Alloc {
+                tag: "sess".into(),
+                lease: 0,
+                blocks: vec![meta],
+            },
+            Record::NodeJoin {
+                id: 3,
+                addr: "127.0.0.1:7071".into(),
+            },
+        ];
+        for r in all {
+            let b = r.encode();
+            assert_eq!(Record::decode(&b).unwrap(), r, "{r:?}");
+            // Trailing garbage is rejected.
+            let mut long = b.clone();
+            long.push(0xEE);
+            assert!(Record::decode(&long).is_err(), "{r:?}");
+        }
+    }
+
+    #[test]
+    fn snapshot_roundtrip_and_corruption() {
+        let snap = SnapshotState {
+            lsn: 42,
+            files: vec![(
+                "a".into(),
+                3,
+                vec![BlockMeta {
+                    hash: [1; 16],
+                    len: 10,
+                    replicas: vec![0],
+                }],
+            )],
+            blocks: vec![SnapBlock {
+                hash: [1; 16],
+                len: 10,
+                replicas: vec![0],
+                refs: 1,
+                pending: 2,
+                pins: 3,
+                placed_by: "s".into(),
+            }],
+            nodes: vec!["a:1".into(), "b:2".into()],
+            leases: vec![SnapLease {
+                id: 7,
+                tag: "a".into(),
+                write: false,
+                hashes: vec![[1; 16]],
+            }],
+            next_lease: 8,
+        };
+        let mut b = snap.encode();
+        assert_eq!(SnapshotState::decode(&b).unwrap(), snap);
+        // One flipped byte in the body fails the CRC, loudly.
+        let mid = b.len() - 3;
+        b[mid] ^= 0xFF;
+        assert!(SnapshotState::decode(&b).is_err());
+        assert!(SnapshotState::decode(b"GSNPxxxx").is_err());
+        assert!(SnapshotState::decode(b"XXXX").is_err());
+    }
+
+    #[test]
+    fn append_and_recover_roundtrip() {
+        let t = TempDir::new("wal-roundtrip");
+        let opts = strict(&t.0);
+        {
+            let mut r = recover(&opts).unwrap();
+            assert!(r.snapshot.is_none());
+            assert!(r.records.is_empty());
+            assert_eq!(r.wal.next_lsn(), 1);
+            append_n(&mut r.wal, 1, 5);
+        }
+        let r = recover(&opts).unwrap();
+        assert!(r.snapshot.is_none());
+        assert_eq!(r.records.len(), 5);
+        assert_eq!(r.records.first().unwrap().0, 1);
+        assert_eq!(r.records.last().unwrap().0, 5);
+        assert_eq!(r.records[2].1, rec(3));
+        assert_eq!(r.wal.next_lsn(), 6);
+    }
+
+    #[test]
+    fn torn_final_record_truncated_then_recovers() {
+        let t = TempDir::new("wal-torn");
+        let opts = strict(&t.0);
+        {
+            let mut r = recover(&opts).unwrap();
+            append_n(&mut r.wal, 1, 3);
+        }
+        // Tear the tail: append half a frame to the live segment.
+        let seg = list(&t.0.join("wal"), "seg-", ".log").unwrap().pop().unwrap().1;
+        let whole = fs::read(&seg).unwrap();
+        let mut f = OpenOptions::new().append(true).open(&seg).unwrap();
+        f.write_all(&99u32.to_le_bytes()).unwrap(); // length of a frame that never arrived
+        f.write_all(&[1, 2, 3]).unwrap();
+        drop(f);
+        // One recovery pass truncates the torn tail and carries on with
+        // every complete record — a crashed manager restarts in one go.
+        let r = recover(&opts).unwrap();
+        assert_eq!(fs::read(&seg).unwrap(), whole, "tail truncated exactly");
+        assert_eq!(r.records.len(), 3);
+        assert_eq!(r.wal.next_lsn(), 4);
+        drop(r);
+        // Idempotent: a second recovery sees a clean log.
+        let r = recover(&opts).unwrap();
+        assert_eq!(r.records.len(), 3);
+        assert_eq!(r.wal.next_lsn(), 4);
+    }
+
+    #[test]
+    fn corrupt_crc_mid_segment_fails_loudly() {
+        let t = TempDir::new("wal-crc");
+        let opts = strict(&t.0);
+        {
+            let mut r = recover(&opts).unwrap();
+            append_n(&mut r.wal, 1, 3);
+        }
+        let seg = list(&t.0.join("wal"), "seg-", ".log").unwrap().pop().unwrap().1;
+        let mut bytes = fs::read(&seg).unwrap();
+        // Flip one payload byte of the FIRST frame: a complete interior
+        // record with a bad CRC is corruption, never a torn tail.
+        let len = u32::from_le_bytes(bytes[..4].try_into().unwrap()) as usize;
+        bytes[8 + len - 1] ^= 0xFF;
+        fs::write(&seg, &bytes).unwrap();
+        let err = recover(&opts).unwrap_err();
+        assert!(format!("{err}").contains("crc mismatch"), "{err}");
+        // And it stays loud on retry: nothing was silently truncated.
+        assert!(recover(&opts).is_err());
+    }
+
+    #[test]
+    fn empty_log_with_valid_snapshot() {
+        let t = TempDir::new("wal-snap-only");
+        let opts = strict(&t.0);
+        {
+            let mut r = recover(&opts).unwrap();
+            append_n(&mut r.wal, 1, 4);
+            let snap = SnapshotState {
+                lsn: 4,
+                next_lease: 1,
+                ..SnapshotState::default()
+            };
+            r.wal.snapshot(&snap).unwrap();
+        }
+        // The snapshot pruned all older segments; the live one is empty.
+        let r = recover(&opts).unwrap();
+        assert_eq!(r.snapshot.as_ref().unwrap().lsn, 4);
+        assert!(r.records.is_empty(), "{:?}", r.records);
+        assert_eq!(r.wal.next_lsn(), 5);
+        assert_eq!(
+            list(&t.0.join("snap"), "snap-", ".snap").unwrap().len(),
+            1,
+            "older snapshots pruned"
+        );
+    }
+
+    #[test]
+    fn snapshot_newer_than_log_recovers_from_snapshot() {
+        let t = TempDir::new("wal-snap-newer");
+        let opts = strict(&t.0);
+        {
+            let mut r = recover(&opts).unwrap();
+            append_n(&mut r.wal, 1, 3);
+        }
+        // Hand-write a snapshot claiming lsn 10 (beyond the log): the
+        // log is fully covered, replays nothing, and appends continue
+        // at 11 in a fresh segment.
+        let snap = SnapshotState {
+            lsn: 10,
+            next_lease: 1,
+            ..SnapshotState::default()
+        };
+        fs::write(
+            t.0.join("snap").join(format!("snap-{:020}.snap", 10)),
+            snap.encode(),
+        )
+        .unwrap();
+        let mut r = recover(&opts).unwrap();
+        assert_eq!(r.snapshot.as_ref().unwrap().lsn, 10);
+        assert!(r.records.is_empty());
+        assert_eq!(r.wal.next_lsn(), 11);
+        append_n(&mut r.wal, 11, 2);
+        drop(r);
+        let r = recover(&opts).unwrap();
+        assert_eq!(r.records.iter().map(|(l, _)| *l).collect::<Vec<_>>(), [11, 12]);
+    }
+
+    #[test]
+    fn corrupt_snapshot_fails_loudly() {
+        let t = TempDir::new("wal-snap-corrupt");
+        let opts = strict(&t.0);
+        {
+            let mut r = recover(&opts).unwrap();
+            append_n(&mut r.wal, 1, 2);
+            r.wal
+                .snapshot(&SnapshotState {
+                    lsn: 2,
+                    next_lease: 1,
+                    ..SnapshotState::default()
+                })
+                .unwrap();
+        }
+        let snap = list(&t.0.join("snap"), "snap-", ".snap").unwrap().pop().unwrap().1;
+        let mut b = fs::read(&snap).unwrap();
+        let last = b.len() - 1;
+        b[last] ^= 0x55;
+        fs::write(&snap, &b).unwrap();
+        assert!(recover(&opts).is_err(), "corrupt snapshot must not be skipped");
+    }
+
+    #[test]
+    fn leftover_tmp_snapshot_is_removed() {
+        let t = TempDir::new("wal-tmp");
+        let opts = strict(&t.0);
+        fs::create_dir_all(t.0.join("snap")).unwrap();
+        fs::write(t.0.join("snap").join("snap.tmp"), b"half-written").unwrap();
+        let r = recover(&opts).unwrap();
+        assert!(r.snapshot.is_none());
+        assert!(!t.0.join("snap").join("snap.tmp").exists());
+    }
+
+    #[test]
+    fn lsn_gap_between_segments_fails_loudly() {
+        let t = TempDir::new("wal-gap");
+        let opts = strict(&t.0);
+        {
+            let mut r = recover(&opts).unwrap();
+            append_n(&mut r.wal, 1, 2);
+        }
+        // Forge a second segment that skips lsn 3.
+        let mut w = Wal {
+            opts: opts.clone(),
+            seg: OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(t.0.join("wal").join(format!("seg-{:020}.log", 4)))
+                .unwrap(),
+            seg_bytes: 0,
+            next_lsn: 4,
+            last_sync: Instant::now(),
+            since_snapshot: 0,
+        };
+        w.append(4, &rec(4).encode()).unwrap();
+        drop(w);
+        let err = recover(&opts).unwrap_err();
+        assert!(format!("{err}").contains("lsn gap"), "{err}");
+    }
+
+    #[test]
+    fn group_commit_interval_skips_syncs() {
+        // Behavioural, not timing-based: with a huge interval, appends
+        // must not sync each record (we can only observe this as "no
+        // error" + data still recovered, since the OS page cache holds
+        // the bytes) — and an explicit sync() flushes the tail.
+        let t = TempDir::new("wal-group");
+        let opts = DurabilityOpts {
+            data_dir: t.0.clone(),
+            sync_interval: Duration::from_secs(3600),
+            snapshot_every: 1_000_000,
+        };
+        {
+            let mut r = recover(&opts).unwrap();
+            append_n(&mut r.wal, 1, 100);
+            r.wal.sync().unwrap();
+        }
+        assert_eq!(recover(&opts).unwrap().records.len(), 100);
+    }
+
+    #[test]
+    fn segment_rotation_preserves_history() {
+        let t = TempDir::new("wal-rotate");
+        let opts = strict(&t.0);
+        {
+            let mut r = recover(&opts).unwrap();
+            // Big records force several rotations past SEG_BYTES.
+            let big = Record::Release {
+                hashes: vec![[9; 16]; 40_000],
+            }
+            .encode();
+            for lsn in 1..=30u64 {
+                r.wal.append(lsn, &big).unwrap();
+            }
+        }
+        assert!(
+            list(&t.0.join("wal"), "seg-", ".log").unwrap().len() > 1,
+            "rotation happened"
+        );
+        let r = recover(&opts).unwrap();
+        assert_eq!(r.records.len(), 30);
+        assert_eq!(r.wal.next_lsn(), 31);
+    }
+}

@@ -300,7 +300,6 @@ read ckpt -
             ca_mode: CaMode::Fixed,
             block_size: 16 * 1024,
             write_buffer: 64 * 1024,
-            stripe_width: 2,
             ..ClientConfig::default()
         };
         let sai = cluster

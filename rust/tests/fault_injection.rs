@@ -11,6 +11,8 @@
 //! GC, and a SIGKILL'd writer stranding pending claims forever.
 
 use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -18,6 +20,33 @@ use gpustore::config::{ClientConfig, ClusterConfig};
 use gpustore::hashgpu::{CpuEngine, WindowHashMode};
 use gpustore::store::{Cluster, FileWriter, Sai};
 use gpustore::util::Rng;
+use gpustore::wal::DurabilityOpts;
+
+/// Self-cleaning scratch directory for durable-manager tests
+/// (integration tests cannot reach the crate-internal WAL test
+/// fixture, so this is a deliberate small duplicate).
+struct TempDir(PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> TempDir {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let n = SEQ.fetch_add(1, Ordering::Relaxed);
+        let name = format!("gpustore-fi-{tag}-{}-{n}", std::process::id());
+        let dir = std::env::temp_dir().join(name);
+        std::fs::create_dir_all(&dir).unwrap();
+        TempDir(dir)
+    }
+
+    fn path(&self) -> &Path {
+        &self.0
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
 
 /// Manager lease window for these tests.  The value is arbitrary — the
 /// clock hook advances past it instantly — but comfortably larger than
@@ -33,6 +62,31 @@ fn lease_cluster() -> Cluster {
         shape: false,
         replication: 1,
         lease_timeout: LEASE,
+        ..ClusterConfig::default()
+    })
+    .unwrap()
+}
+
+/// `lease_cluster` with a write-ahead log: the manager journals every
+/// state change under `dir`, so [`Hiccup::crash_manager`] +
+/// [`Hiccup::restart_manager`] model a full manager process kill.  A
+/// zero sync interval is the strictest group commit (every record
+/// fsynced before the reply), so a crash can never excuse a lost
+/// record in these tests; the huge snapshot cadence keeps recovery on
+/// the pure log-replay path.
+fn durable_cluster(dir: &TempDir) -> Cluster {
+    Cluster::spawn(ClusterConfig {
+        nodes: 4,
+        link_bps: 1e9,
+        shape: false,
+        replication: 1,
+        lease_timeout: LEASE,
+        durability: Some(DurabilityOpts {
+            data_dir: dir.path().to_path_buf(),
+            sync_interval: Duration::ZERO,
+            snapshot_every: 1_000_000,
+        }),
+        ..ClusterConfig::default()
     })
     .unwrap()
 }
@@ -68,6 +122,21 @@ impl Hiccup {
         let state = cluster.manager().state();
         state.advance_clock(LEASE + Duration::from_millis(1));
         state.tick();
+    }
+
+    /// SIGKILL analog for the *manager*: its in-memory state vanishes
+    /// and every client connection is severed mid-whatever-it-was-doing
+    /// — only what the WAL and snapshots captured survives.  The
+    /// listener keeps the address so a restart lands where clients
+    /// expect it.
+    fn crash_manager(cluster: &Cluster) {
+        cluster.crash_manager();
+    }
+
+    /// Restart the killed manager on the same address, recovering its
+    /// state from the cluster's data dir (snapshot + log replay).
+    fn restart_manager(cluster: &Cluster) {
+        cluster.restart_manager().unwrap();
     }
 }
 
@@ -491,4 +560,108 @@ fn dropped_hash_session_mid_batch_strands_nothing() {
     drop(late);
     drop(survivor);
     drop(svc);
+}
+
+/// PR-7 acceptance (durable control plane): the manager is killed with
+/// a committed file, a mid-file reader, and a mid-stream writer all
+/// outstanding, then restarted from its WAL.  The in-flight writer
+/// commits byte-exact across the crash, the pre-crash reader finishes
+/// byte-exact, the committed file survives verbatim, and once every
+/// session ends zero claims are stranded.
+#[test]
+fn manager_crash_mid_write_recovers_consistently() {
+    let dir = TempDir::new("mid-write");
+    let cluster = durable_cluster(&dir);
+    let sai = client(&cluster);
+
+    // A committed file from before the crash — must survive verbatim.
+    let v1 = Rng::new(31).bytes(512 * 1024);
+    sai.write_file("keep.bin", &v1).unwrap();
+
+    // A reader mid-file when the manager dies: one block consumed, the
+    // rest still streaming off the nodes.
+    let mut r = sai.open("keep.bin").unwrap();
+    let first = r.next_block().unwrap().unwrap();
+
+    // A writer mid-stream: batch 1 (4 blocks) claimed, placed and
+    // transferred; the tail of the file still client-side.
+    let data = Rng::new(32).bytes(600_000);
+    let mut w = sai.create("inflight.bin").unwrap();
+    w.write_all(&data).unwrap();
+    wait_until("batch-1 transfers", || cluster.storage_stats().0 >= 8 + 4);
+
+    Hiccup::crash_manager(&cluster);
+    Hiccup::restart_manager(&cluster);
+
+    // The in-flight writer commits byte-exact: its lease, claims and
+    // placements were all journaled, and the client's severed control
+    // connection re-establishes transparently.
+    let rep = w.close().unwrap();
+    assert_eq!(rep.blocks, 10); // ceil(600000 / 64 KB)
+    assert_eq!(sai.read_file("inflight.bin").unwrap(), data);
+
+    // The pre-crash reader finishes byte-exact: its read lease and
+    // version pins were journaled too.
+    let mut rest = Vec::new();
+    r.read_to_end(&mut rest).unwrap();
+    let mut got = first;
+    got.extend_from_slice(&rest);
+    assert_eq!(got, v1, "pre-crash reader stays byte-exact");
+    drop(r);
+
+    // Zero lost committed blocks.
+    assert_eq!(sai.read_file("keep.bin").unwrap(), v1);
+
+    // Zero stranded claims once the sessions are gone.
+    Hiccup::lapse_leases(&cluster);
+    let stats = cluster.manager().state().block_stats();
+    assert_eq!(stats.pending_claims, 0, "zero stranded pending claims");
+    assert_eq!((stats.write_leases, stats.read_leases), (0, 0));
+}
+
+/// A SIGKILL'd writer whose claims were journaled, followed by a
+/// manager kill + restart: the recovered claims and lease are intact
+/// (with a fresh conservative TTL), still lapse on schedule — recovery
+/// must not immortalize a dead session — and the reclaimed name is
+/// writable again afterwards.
+#[test]
+fn recovered_claims_of_killed_writer_still_lapse() {
+    let dir = TempDir::new("lapse");
+    let cluster = durable_cluster(&dir);
+    let sai = client(&cluster);
+    let data = Rng::new(33).bytes(600_000);
+    let mut w = sai.create("orphan.bin").unwrap();
+    w.write_all(&data).unwrap();
+    wait_until("batch-1 transfers", || cluster.storage_stats().0 == 4);
+    Hiccup::kill_writer(w);
+
+    Hiccup::crash_manager(&cluster);
+    Hiccup::restart_manager(&cluster);
+
+    // The orphan's claims and lease survived the restart.
+    let state = cluster.manager().state();
+    let stats = state.block_stats();
+    assert_eq!(stats.pending_claims, 4, "claims recovered from the log");
+    assert_eq!(stats.write_leases, 1, "lease recovered from the log");
+
+    // Recovered leases restart with a full conservative TTL: within
+    // the window nothing lapses (a slow writer is not a dead writer,
+    // and the pre-crash clock is gone)...
+    state.tick();
+    assert_eq!(state.block_stats().pending_claims, 4);
+
+    // ...past it, everything does: zero stranded claims, bytes
+    // reclaimed off the nodes.
+    Hiccup::lapse_leases(&cluster);
+    let stats = state.block_stats();
+    assert_eq!(stats.pending_claims, 0, "zero stranded pending claims");
+    assert_eq!(stats.write_leases, 0, "recovered lease lapsed");
+    assert_eq!(stats.blocks, 0, "manager dropped the orphaned blocks");
+    assert_eq!(cluster.storage_stats(), (0, 0), "nodes reclaimed the bytes");
+
+    // The name is writable again: full re-transfer, clean commit.
+    wait_nodes_alive(&sai, 4);
+    let rep = sai.write_file("orphan.bin", &data).unwrap();
+    assert_eq!(rep.new_blocks, 10, "every block re-transferred");
+    assert_eq!(sai.read_file("orphan.bin").unwrap(), data);
 }

@@ -11,7 +11,7 @@ use gpustore::hash::{
     direct_hash_cpu, md5, window_hashes, Md5, DEFAULT_P, DEFAULT_WINDOW,
 };
 use gpustore::runtime::artifacts::Manifest;
-use gpustore::store::proto::{Assignment, BlockMeta, BlockSpec, Msg, NodeEntry};
+use gpustore::store::proto::{Assignment, BlockMeta, BlockSpec, Msg, NodeEntry, WalEntry};
 use gpustore::util::Rng;
 
 const CASES: u64 = 40;
@@ -393,7 +393,6 @@ fn prop_streaming_oneshot_equivalence() {
             cdc_max: 32 * 1024,
             cdc_mask: (1 << 13) - 1,
             write_buffer: 64 * 1024,
-            stripe_width: rng.range(1, 4),
             ..ClientConfig::default()
         };
         let sai_one = cluster_one.client(cfg.clone(), engine.clone()).unwrap();
@@ -537,11 +536,26 @@ fn prop_proto_truncation_robustness() {
             req: 17,
             msg: "unknown block".into(),
         },
+        Msg::FetchSnapshot,
+        Msg::SnapshotData { data: vec![9; 40] },
+        Msg::FetchWal { after: 19 },
+        Msg::WalRecords {
+            records: vec![
+                WalEntry {
+                    lsn: 20,
+                    data: vec![21; 12],
+                },
+                WalEntry {
+                    lsn: 21,
+                    data: vec![22; 3],
+                },
+            ],
+        },
     ];
     // Every tag is represented exactly once.
     let mut tags: Vec<u8> = msgs.iter().map(|m| m.encode()[4]).collect();
     tags.sort_unstable();
-    assert_eq!(tags, (1..=29).collect::<Vec<u8>>(), "tag coverage");
+    assert_eq!(tags, (1..=33).collect::<Vec<u8>>(), "tag coverage");
 
     for m in &msgs {
         let frame = m.encode();
@@ -569,7 +583,7 @@ fn prop_proto_truncation_robustness() {
     // Fuzz: random payload bytes against every tag (including unknown
     // tags) must never panic.
     let mut rng = Rng::new(0xF00D);
-    for tag in 0..=30u8 {
+    for tag in 0..=34u8 {
         for _ in 0..50 {
             let n = rng.range(0, 128);
             let p = rng.bytes(n);
@@ -844,7 +858,6 @@ fn prop_store_write_read_fuzz() {
             cdc_max: 32 * 1024,
             cdc_mask: (1 << 13) - 1,
             write_buffer: 64 * 1024,
-            stripe_width: rng.range(1, 4),
             ..ClientConfig::default()
         };
         let engine = Arc::new(CpuEngine::new(2, 4096, WindowHashMode::Rolling));
@@ -969,7 +982,6 @@ fn prop_shared_hash_service_bit_identical() {
         let cfg = ClientConfig {
             block_size: 16 * 1024,
             write_buffer: 64 * 1024,
-            stripe_width: 2,
             ..ClientConfig::ca_cpu_fixed(2)
         };
         let sessions = 3;
@@ -1017,5 +1029,161 @@ fn prop_shared_hash_service_bit_identical() {
             assert_eq!(h_s, h_d, "seed={seed} file={s} hash sequence");
             assert_eq!(probe_s.read_file(&name).unwrap(), *data, "seed={seed} file={s}");
         }
+    }
+}
+
+/// Self-cleaning scratch directory for the durability property (each
+/// integration-test binary keeps its own copy of this tiny fixture).
+struct TempDir(std::path::PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> TempDir {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let n = SEQ.fetch_add(1, Ordering::Relaxed);
+        let name = format!("gpustore-prop-{tag}-{}-{n}", std::process::id());
+        let dir = std::env::temp_dir().join(name);
+        std::fs::create_dir_all(&dir).unwrap();
+        TempDir(dir)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+/// PR-7 acceptance (durability): for random interleaved mutation
+/// sequences — node joins, write/read leases, allocations, commits
+/// (including overwrites, whose GC runs), renewals, drops, abandoned
+/// sessions — a manager recovered from its WAL + snapshots is
+/// *identical* to the pre-crash manager, for every snapshot cadence
+/// from "snapshot every record" to "pure log replay".
+#[test]
+fn prop_recovered_manager_state_equals_pre_crash() {
+    use std::collections::HashMap;
+    use std::time::Duration;
+
+    use gpustore::store::{policy_for, ManagerState};
+    use gpustore::wal::DurabilityOpts;
+
+    for seed in 0..6u64 {
+        let dir = TempDir::new(&format!("crash-{seed}"));
+        let opts = DurabilityOpts {
+            data_dir: dir.0.clone(),
+            sync_interval: Duration::ZERO,
+            snapshot_every: [1, 3, 7, 1_000_000][(seed % 4) as usize],
+        };
+        let state = ManagerState::with_durability(
+            policy_for(1),
+            Duration::from_secs(30),
+            Some(opts.clone()),
+        )
+        .unwrap();
+        let mut rng = Rng::new(0xD15C ^ (seed << 8));
+
+        // Nodes on root-reserved loopback ports: GC deletes aimed at
+        // them fail fast and are ignored, which is all this property
+        // needs (metadata equality, not data-plane effects).
+        for port in 1..=4 {
+            let addr = format!("127.0.0.1:{port}");
+            let _ = state.handle(Msg::NodeJoin { addr });
+        }
+
+        // Random mutation sequence, tracking just enough client state
+        // to keep most operations valid (invalid ones are part of the
+        // property too: their rejections must not corrupt the log).
+        let mut open: Vec<(String, u64)> = Vec::new();
+        let mut session: HashMap<u64, Vec<BlockMeta>> = HashMap::new();
+        for _ in 0..120 {
+            match rng.range(0, 8) {
+                0 => {
+                    let file = format!("f{}", rng.range(0, 5));
+                    let m = state.handle(Msg::OpenLease {
+                        file: file.clone(),
+                        write: true,
+                    });
+                    if let Msg::LeaseGrant { lease, .. } = m {
+                        open.push((file, lease));
+                        session.insert(lease, Vec::new());
+                    }
+                }
+                1 | 2 if !open.is_empty() => {
+                    let (file, lease) = open[rng.range(0, open.len())].clone();
+                    let specs: Vec<BlockSpec> = (0..rng.range(1, 4))
+                        .map(|_| {
+                            let mut hash = [0u8; 16];
+                            rng.fill(&mut hash);
+                            BlockSpec {
+                                hash,
+                                len: rng.range(1, 65536) as u32,
+                            }
+                        })
+                        .collect();
+                    let m = state.handle(Msg::AllocPlacement {
+                        file,
+                        lease,
+                        blocks: specs.clone(),
+                    });
+                    if let Msg::Placement { assignments } = m {
+                        let metas = session.get_mut(&lease).unwrap();
+                        for (s, a) in specs.iter().zip(&assignments) {
+                            metas.push(BlockMeta {
+                                hash: s.hash,
+                                len: s.len,
+                                replicas: a.replicas.clone(),
+                            });
+                        }
+                    }
+                }
+                3 if !open.is_empty() => {
+                    let (file, lease) = open.swap_remove(rng.range(0, open.len()));
+                    let blocks = session.remove(&lease).unwrap_or_default();
+                    let _ = state.handle(Msg::CommitBlockMap {
+                        file,
+                        lease,
+                        blocks,
+                    });
+                }
+                4 if !open.is_empty() => {
+                    let (_, lease) = open.swap_remove(rng.range(0, open.len()));
+                    session.remove(&lease);
+                    let _ = state.handle(Msg::DropLease { lease });
+                }
+                5 => {
+                    let file = format!("f{}", rng.range(0, 5));
+                    let _ = state.handle(Msg::OpenLease { file, write: false });
+                }
+                6 => {
+                    // Renew a real lease or a bogus id (the latter is a
+                    // rejected, unlogged no-op).
+                    let lease = if !open.is_empty() && rng.range(0, 2) == 0 {
+                        open[rng.range(0, open.len())].1
+                    } else {
+                        rng.range(1, 50) as u64
+                    };
+                    let _ = state.handle(Msg::RenewLease { lease });
+                }
+                _ => {
+                    // Re-join (liveness refresh) or a brand-new node.
+                    let addr = format!("127.0.0.1:{}", 1 + rng.range(0, 6));
+                    let _ = state.handle(Msg::NodeJoin { addr });
+                }
+            }
+        }
+
+        let want = state.snapshot_state();
+        state.detach_wal();
+        drop(state);
+
+        let recovered =
+            ManagerState::with_durability(policy_for(1), Duration::from_secs(30), Some(opts))
+                .unwrap();
+        assert_eq!(
+            recovered.snapshot_state(),
+            want,
+            "seed={seed}: recovered state diverged from pre-crash state"
+        );
     }
 }
