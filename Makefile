@@ -46,11 +46,13 @@ bench:
 	cargo bench --bench micro
 
 # Fast end-to-end smoke: build benches and run the runnable examples
-# (checkpoint_dedup at reduced size: 4 images x 2 MB).
+# (checkpoint_dedup at reduced size: 4 images x 2 MB; election_smoke
+# kills the leader of a 3-manager quorum and proves failover serves).
 smoke:
 	cargo build --release --benches --examples
 	cargo run --release --example quickstart
 	cargo run --release --example checkpoint_dedup -- 4 2
+	cargo run --release --example election_smoke
 
 clean:
 	cargo clean

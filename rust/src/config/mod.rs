@@ -258,6 +258,14 @@ pub struct ClusterConfig {
     /// recovers the control plane after a crash.  `None` (the default)
     /// keeps the pre-durability in-memory manager.
     pub durability: Option<crate::wal::DurabilityOpts>,
+    /// Manager replicas forming a quorum group (PR 8).  `1` (the
+    /// default) is the classic single manager; `>= 2` spawns that many
+    /// managers wired as consensus peers (member 0 starts as leader,
+    /// the rest as followers; with durability each member gets its own
+    /// subdirectory under the configured data dir).  Elections need a
+    /// majority, so 3 is the smallest count that survives losing a
+    /// member.
+    pub managers: usize,
 }
 
 impl Default for ClusterConfig {
@@ -273,6 +281,7 @@ impl Default for ClusterConfig {
             hash_linger_us: 200,
             hash_devices: 1,
             durability: None,
+            managers: 1,
         }
     }
 }

@@ -20,7 +20,7 @@ use gpustore::config::{CaMode, ClientConfig, ClusterConfig, HashEngineKind};
 use gpustore::hashsvc::session_engine;
 use gpustore::store::manager::DEFAULT_LEASE_TIMEOUT;
 use gpustore::store::proto::MAX_REPLICAS;
-use gpustore::store::{policy_for, Cluster, Follower, Manager, Sai, StorageNode};
+use gpustore::store::{policy_for, Cluster, Follower, Manager, ManagerState, Sai, StorageNode};
 use gpustore::util::{human_bytes, Rng};
 use gpustore::wal::DurabilityOpts;
 use gpustore::{Error, Result};
@@ -71,7 +71,8 @@ fn print_usage() {
          (TPDS'12 reproduction)\n\n\
          USAGE:\n  gpustore manager --listen ADDR [--replication N] [--lease-timeout SECS]\n\
          \x20                [--data-dir DIR [--wal-sync MS] [--snapshot-every N]]\n\
-         \x20                [--follow ADDR]\n  \
+         \x20                [--peers A,B[,..] [--advertise ADDR] [--initial-leader]]\n\
+         \x20                [--follow ADDR [--peers A,B[,..]]]\n  \
          gpustore node --listen ADDR --manager ADDR [--advertise ADDR] [--disk DIR]\n  \
          gpustore write --manager ADDR [--mode fixed|cdc|none]\n\
          \x20                [--engine cpu|gpu|oracle] [--threads N]\n\
@@ -314,11 +315,25 @@ const FOLLOWER_PROMOTE_AFTER: u32 = 20;
 /// Follower poll cadence.
 const FOLLOWER_POLL: Duration = Duration::from_millis(100);
 
+/// Consensus timer cadence for CLI-run managers (tests tick manually).
+const MANAGER_TICK: Duration = Duration::from_millis(50);
+
+/// `--peers A,B[,..]` parsed into a peer address list.
+fn parse_peers(flags: &HashMap<String, String>) -> Option<Vec<String>> {
+    flags.get("peers").map(|p| {
+        p.split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect()
+    })
+}
+
 fn cmd_manager(flags: &HashMap<String, String>) -> Result<()> {
     let listen = flags.get("listen").map(String::as_str).unwrap_or("0.0.0.0:7070");
     let replication = parse_replication(flags)?;
     let lease_timeout = parse_lease_timeout(flags)?;
     let durability = parse_durability(flags)?;
+    let peers = parse_peers(flags);
     if let Some(primary) = flags.get("follow") {
         if durability.is_some() {
             return Err(Error::Config(
@@ -327,7 +342,7 @@ fn cmd_manager(flags: &HashMap<String, String>) -> Result<()> {
                     .into(),
             ));
         }
-        return cmd_follow(listen, primary, lease_timeout);
+        return cmd_follow(listen, primary, lease_timeout, peers);
     }
     let policy = policy_for(replication);
     let name = policy.name();
@@ -335,25 +350,79 @@ fn cmd_manager(flags: &HashMap<String, String>) -> Result<()> {
         Some(o) => format!(", data dir {}", o.data_dir.display()),
         None => ", in-memory".into(),
     };
-    let mgr = Manager::spawn_with_opts(listen, policy, lease_timeout, durability)?;
+    let Some(peers) = peers else {
+        let mgr = Manager::spawn_with_opts(listen, policy, lease_timeout, durability)?;
+        println!(
+            "metadata manager listening on {} (policy {name}, replication {replication}, \
+             lease timeout {lease_timeout:?}{durable})",
+            mgr.addr()
+        );
+        loop {
+            std::thread::park();
+        }
+    };
+    // Quorum member: peers are the OTHER managers' addresses; this
+    // member is known to them as --advertise (default: --listen, which
+    // must then be a concrete address, not a wildcard).
+    if peers.is_empty() {
+        return Err(Error::Config("--peers lists no addresses".into()));
+    }
+    let advertise = flags
+        .get("advertise")
+        .map(String::as_str)
+        .unwrap_or(listen)
+        .to_string();
+    let initial_leader = flags.get("initial-leader").is_some();
+    let term_dir = durability.as_ref().map(|o| o.data_dir.clone());
+    let state = std::sync::Arc::new(ManagerState::with_durability(
+        policy,
+        lease_timeout,
+        durability,
+    )?);
+    state.set_consensus(
+        gpustore::store::ConsensusOpts {
+            self_addr: advertise.clone(),
+            peers: peers.clone(),
+            initial_leader,
+        },
+        term_dir,
+    )?;
+    let mut mgr = Manager::serve(listen, state)?;
+    mgr.start_ticker(MANAGER_TICK);
     println!(
-        "metadata manager listening on {} (policy {name}, replication {replication}, \
-         lease timeout {lease_timeout:?}{durable})",
-        mgr.addr()
+        "quorum manager {} listening on {} (peers {}, {}policy {name}, replication \
+         {replication}, lease timeout {lease_timeout:?}{durable})",
+        advertise,
+        mgr.addr(),
+        peers.join(","),
+        if initial_leader { "initial leader, " } else { "" },
     );
     loop {
         std::thread::park();
     }
 }
 
-/// Log-shipping follower: bootstrap from the primary's snapshot, tail
-/// its WAL, and self-promote once the primary stops answering.
-fn cmd_follow(listen: &str, primary: &str, lease_timeout: Duration) -> Result<()> {
+/// Log-shipping follower: bootstrap from the primary's snapshot and
+/// tail its WAL.  When the primary stops answering, promotion is
+/// quorum-gated (PR 8): with `--peers` the follower stands for election
+/// and serves only after winning a majority; without peers it refuses
+/// loudly instead of risking split-brain against a
+/// partitioned-but-alive primary.
+fn cmd_follow(
+    listen: &str,
+    primary: &str,
+    lease_timeout: Duration,
+    peers: Option<Vec<String>>,
+) -> Result<()> {
     let follower = Follower::connect(primary, lease_timeout)?;
     println!(
-        "follower replicating from {primary} (lsn {}); will promote on {listen} \
-         after {FOLLOWER_PROMOTE_AFTER} failed polls",
-        follower.last_lsn()
+        "follower replicating from {primary} (lsn {}); promotion on {listen} \
+         after {FOLLOWER_PROMOTE_AFTER} failed polls is {}",
+        follower.last_lsn(),
+        match &peers {
+            Some(p) => format!("quorum-gated across {} peer(s)", p.len()),
+            None => "disabled (no --peers): will refuse loudly".to_string(),
+        }
     );
     let mut failures = 0u32;
     loop {
@@ -367,16 +436,28 @@ fn cmd_follow(listen: &str, primary: &str, lease_timeout: Duration) -> Result<()
             Err(e) => {
                 failures += 1;
                 if failures >= FOLLOWER_PROMOTE_AFTER {
-                    eprintln!("follower: primary unreachable ({e}); promoting");
+                    eprintln!("follower: primary unreachable ({e})");
                     break;
                 }
                 std::thread::sleep(FOLLOWER_POLL);
             }
         }
     }
+    let Some(peers) = peers else {
+        return Err(Error::Manager(format!(
+            "follower: primary {primary} unreachable after {FOLLOWER_PROMOTE_AFTER} failed \
+             polls; REFUSING blind promotion (a partitioned-but-alive primary would \
+             split-brain).  Configure --peers to stand for a quorum election, or restart \
+             the primary."
+        )));
+    };
     let lsn = follower.last_lsn();
-    let mgr = follower.promote(listen)?;
-    println!("promoted follower serving on {} (lsn {lsn})", mgr.addr());
+    let mut mgr = follower.promote_gated(listen, peers, None)?;
+    mgr.start_ticker(MANAGER_TICK);
+    println!(
+        "follower won election; serving on {} (lsn {lsn})",
+        mgr.addr()
+    );
     loop {
         std::thread::park();
     }

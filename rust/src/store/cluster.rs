@@ -11,25 +11,29 @@
 
 use std::sync::Arc;
 
-use super::manager::{policy_for, Manager};
+use super::manager::{policy_for, ConsensusOpts, Manager, ManagerState};
 use super::node::{NodeOpts, StorageNode};
 use super::sai::Sai;
 use crate::config::{ClientConfig, ClusterConfig};
 use crate::hashgpu::HashEngine;
-use crate::net::Shaper;
+use crate::net::{Listener, Shaper};
+use crate::wal::DurabilityOpts;
 use crate::{Error, Result};
 
 /// A running cluster.
 pub struct Cluster {
-    manager: Manager,
+    managers: Vec<Manager>,
     nodes: Vec<StorageNode>,
     cfg: ClusterConfig,
 }
 
 impl Cluster {
-    /// Spawn a manager and `cfg.nodes` storage nodes on ephemeral
-    /// ports.  The nodes join the manager's registry; the manager
-    /// places blocks with `cfg.replication` copies each.
+    /// Spawn `cfg.managers` manager(s) and `cfg.nodes` storage nodes on
+    /// ephemeral ports.  The nodes join manager 0's registry; managers
+    /// place blocks with `cfg.replication` copies each.  With
+    /// `cfg.managers >= 2` the managers form a quorum group (member 0
+    /// the initial leader) and clients bootstrap from the full member
+    /// list.
     pub fn spawn(cfg: ClusterConfig) -> Result<Cluster> {
         if cfg.replication == 0 {
             return Err(Error::Config("replication must be >= 1".into()));
@@ -43,18 +47,44 @@ impl Cluster {
         if cfg.lease_timeout.is_zero() {
             return Err(Error::Config("lease_timeout must be non-zero".into()));
         }
-        let manager = Manager::spawn_with_opts(
-            "127.0.0.1:0",
-            policy_for(cfg.replication),
-            cfg.lease_timeout,
-            cfg.durability.clone(),
-        )?;
+        if cfg.managers == 0 {
+            return Err(Error::Config("managers must be >= 1".into()));
+        }
+        // Bind every member's listener first: the full peer address
+        // list must exist before any member's consensus is configured.
+        let listeners = (0..cfg.managers)
+            .map(|_| Listener::bind("127.0.0.1:0"))
+            .collect::<Result<Vec<_>>>()?;
+        let addrs = listeners
+            .iter()
+            .map(|l| l.local_addr())
+            .collect::<Result<Vec<_>>>()?;
+        let mut managers = Vec::with_capacity(cfg.managers);
+        for (i, listener) in listeners.into_iter().enumerate() {
+            let durability = durability_for(&cfg, i);
+            let state = Arc::new(ManagerState::with_durability(
+                policy_for(cfg.replication),
+                cfg.lease_timeout,
+                durability.clone(),
+            )?);
+            if cfg.managers > 1 {
+                state.set_consensus(
+                    ConsensusOpts {
+                        self_addr: addrs[i].clone(),
+                        peers: peer_addrs(&addrs, i),
+                        initial_leader: i == 0,
+                    },
+                    durability.map(|d| d.data_dir),
+                )?;
+            }
+            managers.push(Manager::serve_listener(listener, state)?);
+        }
         let nodes = (0..cfg.nodes)
             .map(|_| {
                 StorageNode::spawn_opts(
                     "127.0.0.1:0",
                     NodeOpts {
-                        manager: Some(manager.addr().to_string()),
+                        manager: Some(managers[0].addr().to_string()),
                         // Each node gets its own NIC on the modeled
                         // fabric: replies (the read path) are paced at
                         // link speed just like the client's puts.
@@ -68,38 +98,102 @@ impl Cluster {
             })
             .collect::<Result<Vec<_>>>()?;
         Ok(Cluster {
-            manager,
+            managers,
             nodes,
             cfg,
         })
     }
 
-    /// Manager address (the client bootstrap address).
+    /// Manager 0's address (the classic single-manager bootstrap
+    /// address; multi-manager clients should prefer
+    /// [`Cluster::bootstrap_addrs`]).
     pub fn manager_addr(&self) -> &str {
-        self.manager.addr()
+        self.managers[0].addr()
+    }
+
+    /// Every manager's address, in member order.
+    pub fn manager_addrs(&self) -> Vec<String> {
+        self.managers.iter().map(|m| m.addr().to_string()).collect()
+    }
+
+    /// The comma-separated bootstrap list [`Sai::connect`] understands
+    /// (all members — redirects find the leader from any of them).
+    pub fn bootstrap_addrs(&self) -> String {
+        self.manager_addrs().join(",")
     }
 
     /// The manager itself (registry/refcount introspection in tests).
     pub fn manager(&self) -> &Manager {
-        &self.manager
+        &self.managers[0]
+    }
+
+    /// Manager by member index.
+    pub fn manager_at(&self, i: usize) -> &Manager {
+        &self.managers[i]
+    }
+
+    /// Member index of the current quorum leader, skipping crashed
+    /// members (`None` while an election is unsettled).
+    pub fn leader_idx(&self) -> Option<usize> {
+        self.managers
+            .iter()
+            .position(|m| m.up() && m.state().is_leader())
+    }
+
+    /// Run one consensus timer tick on every live member (tests drive
+    /// elections deterministically with this plus
+    /// [`ManagerState::advance_clock`]).
+    pub fn tick_managers(&self) {
+        for m in &self.managers {
+            if m.up() {
+                m.state().tick_consensus();
+            }
+        }
     }
 
     /// Kill the manager in place (see [`Manager::crash`]): in-memory
     /// state discarded, WAL handle released, address kept — only what
     /// the log and snapshots captured survives.
     pub fn crash_manager(&self) {
-        self.manager.crash();
+        self.crash_manager_at(0);
+    }
+
+    /// Kill manager `i` in place.
+    pub fn crash_manager_at(&self, i: usize) {
+        self.managers[i].crash();
     }
 
     /// Respawn the crashed manager on the same address, recovering from
     /// the cluster's configured data dir (a no-op recovery when the
     /// cluster runs without durability).
     pub fn restart_manager(&self) -> Result<()> {
-        self.manager.restart(
+        self.restart_manager_at(0)
+    }
+
+    /// Respawn crashed manager `i` on its old address.  In a quorum
+    /// group the member restarts as a *follower* regardless of its
+    /// pre-crash role (its persisted term/vote reload from disk; it
+    /// rejoins and catches up from the current leader's heartbeats).
+    pub fn restart_manager_at(&self, i: usize) -> Result<()> {
+        let durability = durability_for(&self.cfg, i);
+        let state = Arc::new(ManagerState::with_durability(
             policy_for(self.cfg.replication),
             self.cfg.lease_timeout,
-            self.cfg.durability.clone(),
-        )
+            durability.clone(),
+        )?);
+        if self.managers.len() > 1 {
+            let addrs = self.manager_addrs();
+            state.set_consensus(
+                ConsensusOpts {
+                    self_addr: addrs[i].clone(),
+                    peers: peer_addrs(&addrs, i),
+                    initial_leader: false,
+                },
+                durability.map(|d| d.data_dir),
+            )?;
+        }
+        self.managers[i].restart_state(state);
+        Ok(())
     }
 
     /// Node addresses, by node id.
@@ -116,9 +210,11 @@ impl Cluster {
     }
 
     /// Connect a SAI client with the given config and engine (nodes are
-    /// discovered through the manager).
+    /// discovered through the manager).  Multi-manager clusters hand
+    /// the client the full member list so `NotLeader` redirects always
+    /// have somewhere to rotate to.
     pub fn client(&self, cfg: ClientConfig, engine: Arc<dyn HashEngine>) -> Result<Sai> {
-        Sai::connect(self.manager_addr(), cfg, engine, self.client_shaper())
+        Sai::connect(&self.bootstrap_addrs(), cfg, engine, self.client_shaper())
     }
 
     /// Connect a SAI client whose engine is a handle onto the shared
@@ -166,4 +262,27 @@ impl Cluster {
             })
             .collect()
     }
+}
+
+/// Member `i`'s durability options: the configured data dir itself for
+/// a single manager (backward compatible), an `m<i>` subdirectory per
+/// member for a quorum group (each member owns its own WAL, snapshots
+/// and term sidecar).
+fn durability_for(cfg: &ClusterConfig, i: usize) -> Option<DurabilityOpts> {
+    cfg.durability.clone().map(|mut d| {
+        if cfg.managers > 1 {
+            d.data_dir = d.data_dir.join(format!("m{i}"));
+        }
+        d
+    })
+}
+
+/// Every member address except `i`'s own.
+fn peer_addrs(addrs: &[String], i: usize) -> Vec<String> {
+    addrs
+        .iter()
+        .enumerate()
+        .filter(|(j, _)| *j != i)
+        .map(|(_, a)| a.clone())
+        .collect()
 }

@@ -30,9 +30,26 @@
 //! existing heartbeat re-join path.  Volatile facts (heartbeats,
 //! re-joins of known addresses, the placement cursor) are never
 //! logged; `Alloc` records carry their decided replica sets instead.
+//!
+//! **Quorum replication (control-plane v5).**  With
+//! [`ManagerState::set_consensus`] a manager joins a quorum group:
+//! exactly one leader per term accepts mutations, pushes every appended
+//! record to its peers ([`Msg::Replicate`]) and replies to the client
+//! only once a quorum holds the records durably; peers answer client
+//! calls with [`Msg::NotLeader`] redirects.  Elections
+//! ([`Msg::RequestVote`]) follow Raft's rules — persisted term + vote,
+//! `(last_term, last_lsn)` log up-to-dateness, majority to win — and a
+//! peer that accepts appends from a *new* leader first re-bootstraps
+//! wholesale from that leader's snapshot, discarding any uncommitted
+//! divergent tail (the shipped-snapshot equivalent of Raft's log
+//! truncation).  All timers run on the manager's skewable test clock
+//! and fire only inside [`ManagerState::tick_consensus`], so every
+//! election schedule is deterministic under test; the CLI runs a small
+//! ticker thread ([`Manager::start_ticker`]) instead.
 
-use std::collections::{HashMap, HashSet, VecDeque};
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 use std::io::{BufReader, BufWriter};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -216,12 +233,100 @@ struct Inner {
     /// (`(lsn, encoded record)`, dense).  Bounded by [`SHIP_CAP`]; a
     /// follower further behind re-bootstraps from a snapshot.
     ship: VecDeque<(u64, Vec<u8>)>,
+    /// CRC32 of each record's encoded bytes by lsn (recent window,
+    /// bounded by [`CRC_LOG_CAP`], cleared on snapshot install).  The
+    /// committed-prefix divergence property compares these across
+    /// replicas: two nodes' entries must agree on every lsn both hold
+    /// at or below their commit index.
+    crc_log: BTreeMap<u64, u32>,
+}
+
+/// Consensus role of a manager in a quorum group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// Accepts mutations and replicates them to peers.
+    Leader,
+    /// Applies shipped records; redirects clients to the leader.
+    Follower,
+    /// Mid-election: has voted for itself and is soliciting votes.
+    Candidate,
+}
+
+/// Options wiring a manager into a quorum group
+/// ([`ManagerState::set_consensus`]).
+#[derive(Debug, Clone)]
+pub struct ConsensusOpts {
+    /// This manager's advertised address (what peers dial, what clients
+    /// are redirected to, and the fault id the partition table keys on).
+    pub self_addr: String,
+    /// Peer manager addresses (excluding `self_addr`).  Quorum =
+    /// majority of `peers.len() + 1`.
+    pub peers: Vec<String>,
+    /// Bootstrap convention: exactly one manager of a fresh group
+    /// starts as the term-1 leader (with its vote durably cast for
+    /// itself, so a same-term rival cannot also win).
+    pub initial_leader: bool,
+}
+
+/// Per-manager consensus state, guarded separately from [`Inner`] so
+/// peer RPCs never serialize behind block-table work.  Lock order:
+/// `repl` before `inner` when nested; NEVER held across network calls.
+#[derive(Debug)]
+struct Repl {
+    /// This manager's advertised address ("" = solo/unconfigured).
+    self_addr: String,
+    /// Peer manager addresses (empty = solo mode: every append is
+    /// trivially committed, preserving single-manager behavior).
+    peers: Vec<String>,
+    role: Role,
+    /// Current term (persisted via the WAL's term sidecar).
+    term: u64,
+    /// Who we voted for in `term` (persisted before any grant).
+    voted_for: Option<String>,
+    /// Term of the leader whose history this log currently follows —
+    /// Raft's "term of the last log entry".  A [`Msg::Replicate`] at a
+    /// *different* term forces a wholesale re-bootstrap from that
+    /// leader before any append is accepted, which is what guarantees
+    /// divergent uncommitted tails die on leader change.  Persisted
+    /// (after the re-bootstrap, before the first ack at the new term).
+    accepted_term: u64,
+    /// Last known leader address (the [`Msg::NotLeader`] redirect).
+    leader_hint: String,
+    /// Highest lsn known replicated on a quorum.  Only records at or
+    /// below this index count as *committed*.
+    commit_lsn: u64,
+    /// Last time we heard from a valid leader (or granted a vote), on
+    /// the manager's skewable clock: the election timer's base.
+    last_contact: Instant,
+    /// Where the term sidecar lives (`None` = in-memory manager; terms
+    /// and votes then do not survive a restart, which is safe only
+    /// because such a state also loses its log and rejoins empty).
+    term_dir: Option<PathBuf>,
+}
+
+impl Repl {
+    fn solo() -> Repl {
+        Repl {
+            self_addr: String::new(),
+            peers: Vec::new(),
+            role: Role::Leader,
+            term: 0,
+            voted_for: None,
+            accepted_term: 0,
+            leader_hint: String::new(),
+            commit_lsn: 0,
+            last_contact: Instant::now(),
+            term_dir: None,
+        }
+    }
 }
 
 /// Manager state shared across connection threads.
 #[derive(Debug)]
 pub struct ManagerState {
     inner: Mutex<Inner>,
+    /// Quorum-replication state (solo defaults when not configured).
+    repl: Mutex<Repl>,
     /// A node is considered alive if it joined or heartbeated within
     /// this window.
     heartbeat_timeout: Duration,
@@ -274,6 +379,28 @@ const SHIP_CAP: usize = 4096;
 /// well under `MAX_FRAME` even with large commit records).
 const SHIP_BATCH: usize = 512;
 
+/// Recent-record CRC window for the committed-prefix divergence checks.
+const CRC_LOG_CAP: usize = 8192;
+
+/// Base election timeout: a peer that has not heard from a leader for
+/// this long (plus its stagger) campaigns on its next
+/// [`ManagerState::tick_consensus`].
+const ELECTION_TIMEOUT_BASE: Duration = Duration::from_secs(1);
+
+/// Deterministic stagger between peers' election timeouts (by rank of
+/// `self_addr` in the sorted member list) — replaces Raft's randomized
+/// timeouts so tests can schedule elections exactly, while still making
+/// split votes unlikely in live deployments.
+const ELECTION_STAGGER: Duration = Duration::from_millis(300);
+
+/// Bounded connect to a consensus peer (loopback fails fast; a WAN
+/// deploy tolerates a slow SYN without stalling an election forever).
+const PEER_CONNECT_TIMEOUT: Duration = Duration::from_secs(1);
+
+/// Bounded wait for a peer's reply — covers a follower that must pull
+/// a snapshot from the leader before it can ack a Replicate.
+const PEER_READ_TIMEOUT: Duration = Duration::from_secs(3);
+
 /// Freed blocks + the node address book, handed out of the state lock
 /// for execution (network deletes happen outside the lock).
 type GcBatch = (Vec<(Digest, Vec<u32>)>, Vec<String>);
@@ -307,7 +434,9 @@ impl ManagerState {
                 wal: None,
                 last_lsn: 0,
                 ship: VecDeque::new(),
+                crc_log: BTreeMap::new(),
             }),
+            repl: Mutex::new(Repl::solo()),
             heartbeat_timeout: HEARTBEAT_TIMEOUT,
             lease_timeout,
             clock_skew: Mutex::new(Duration::ZERO),
@@ -370,12 +499,21 @@ impl ManagerState {
     /// Liveness and lease clocks restart conservatively: nodes are
     /// "alive" until the heartbeat window re-judges them, leases get a
     /// full TTL.
-    pub fn install_snapshot(&self, snap: &SnapshotState) {
+    /// A durable replica also resets its WAL to the snapshot image,
+    /// discarding any locally-retained tail — on a quorum replica that
+    /// tail was never committed (bootstrap only happens when adopting a
+    /// new leader's history), so dropping it is exactly the protocol's
+    /// intent.
+    pub fn install_snapshot(&self, snap: &SnapshotState) -> Result<()> {
         let mut guard = self.inner.lock().unwrap();
         let now = self.now();
         install_snapshot_into(&mut guard, snap, now, self.lease_timeout);
+        if let Some(w) = guard.wal.as_mut() {
+            w.reset_to(snap)?;
+        }
         drop(guard);
         self.gc_inflight.lock().unwrap().clear();
+        Ok(())
     }
 
     /// Apply one record shipped from a primary (strictly in lsn order;
@@ -391,14 +529,29 @@ impl ManagerState {
                 g.last_lsn
             )));
         }
+        // Durable replicas log the shipped record before applying it
+        // (same append-before-mutate rule as the live path) so an acked
+        // record survives this replica's own restart — an ack is a
+        // commit vote, and a vote that evaporates on crash breaks the
+        // quorum-intersection argument.
+        if let Some(w) = g.wal.as_mut() {
+            if let Err(e) = w.append(lsn, data) {
+                return Err(Error::Manager(format!(
+                    "manager: follower wal append failed: {e}"
+                )));
+            }
+        }
         let now = self.now();
         let mut freed = Vec::new();
         self.apply(g, rec, now, &mut freed);
         g.last_lsn = lsn;
+        g.crc_log.insert(lsn, wal::crc32(data));
+        trim_crc_log(g);
         g.ship.push_back((lsn, data.to_vec()));
         if g.ship.len() > SHIP_CAP {
             g.ship.pop_front();
         }
+        self.maybe_snapshot(g);
         drop(guard);
         if !freed.is_empty() {
             let mut inflight = self.gc_inflight.lock().unwrap();
@@ -703,6 +856,8 @@ impl ManagerState {
             }
         }
         g.last_lsn = lsn;
+        g.crc_log.insert(lsn, wal::crc32(&bytes));
+        trim_crc_log(g);
         g.ship.push_back((lsn, bytes));
         if g.ship.len() > SHIP_CAP {
             g.ship.pop_front();
@@ -1181,6 +1336,659 @@ impl ManagerState {
     }
 }
 
+// ---- quorum replication (consensus over the shipped WAL) ----
+impl ManagerState {
+    /// Wire this manager into a quorum group.  Reloads any persisted
+    /// term/vote from `term_dir` first (forgetting either across a
+    /// crash could elect two leaders in one term); the designated
+    /// initial leader durably casts a self-vote at term 1 so a
+    /// same-term rival cannot also be granted.
+    pub fn set_consensus(&self, opts: ConsensusOpts, term_dir: Option<PathBuf>) -> Result<()> {
+        let mut r = self.repl.lock().unwrap();
+        r.self_addr = opts.self_addr;
+        r.peers = opts.peers;
+        r.term_dir = term_dir;
+        if let Some(dir) = r.term_dir.clone() {
+            if let Some((term, voted, accepted)) = wal::load_term(&dir)? {
+                r.term = term;
+                r.voted_for = voted;
+                r.accepted_term = accepted;
+            }
+        }
+        if opts.initial_leader {
+            r.term = r.term.max(1);
+            r.role = Role::Leader;
+            r.voted_for = Some(r.self_addr.clone());
+            r.accepted_term = r.term;
+            r.leader_hint = r.self_addr.clone();
+            if let Some(dir) = r.term_dir.clone() {
+                wal::save_term(&dir, r.term, r.voted_for.as_deref(), r.accepted_term)?;
+            }
+        } else {
+            r.role = Role::Follower;
+            r.leader_hint = String::new();
+        }
+        r.last_contact = self.now();
+        Ok(())
+    }
+
+    /// Handle one request under the quorum protocol: peer RPCs go to
+    /// the election/replication handlers, reads any replica can serve
+    /// go straight through, and everything else is leader-only — a
+    /// mutation's reply is held until a quorum of managers holds its
+    /// appended records durably, and a non-leader answers
+    /// [`Msg::NotLeader`] instead.  With no peers configured this
+    /// degenerates to [`ManagerState::handle`] (single-manager mode).
+    pub fn handle_replicated(&self, msg: Msg) -> Msg {
+        match msg {
+            // Consensus traffic between managers.
+            Msg::RequestVote { .. } | Msg::Replicate { .. } => return self.handle_peer(msg),
+            // Reads any replica serves: follower bootstrap/tailing,
+            // node liveness beats, registry listings.
+            Msg::FetchSnapshot | Msg::FetchWal { .. } | Msg::Heartbeat { .. } | Msg::NodeList => {
+                return self.handle(msg)
+            }
+            _ => {}
+        }
+        let (solo, is_leader, hint) = {
+            let r = self.repl.lock().unwrap();
+            (
+                r.peers.is_empty(),
+                r.role == Role::Leader,
+                r.leader_hint.clone(),
+            )
+        };
+        if solo {
+            // Single-manager group: every append is trivially
+            // committed the moment it is applied.
+            let reply = self.handle(msg);
+            let last = self.last_lsn();
+            let mut r = self.repl.lock().unwrap();
+            r.commit_lsn = r.commit_lsn.max(last);
+            return reply;
+        }
+        if !is_leader {
+            return Msg::NotLeader { hint };
+        }
+        let before = self.last_lsn();
+        let reply = self.handle(msg);
+        let appended = self.ship_tail_since(before);
+        if appended.is_empty() {
+            return reply;
+        }
+        // The quorum-commit barrier: an error here means the mutation
+        // is durable locally but NOT acknowledged — the client must
+        // retry (possibly against a new leader).  Retries are
+        // at-least-once: every logged record's apply is state-idempotent
+        // across replicas, so a duplicate application cannot diverge
+        // the group (see README, "Consensus & failover").
+        match self.replicate_to_quorum(before, appended) {
+            Ok(()) => reply,
+            Err(e) => Msg::Err(e),
+        }
+    }
+
+    /// Manager↔manager RPCs (votes and log replication).
+    fn handle_peer(&self, msg: Msg) -> Msg {
+        match msg {
+            Msg::RequestVote {
+                term,
+                candidate,
+                last_term,
+                last_lsn,
+            } => self.handle_vote(term, candidate, last_term, last_lsn),
+            Msg::Replicate {
+                term,
+                leader,
+                prev_lsn,
+                commit_lsn,
+                records,
+            } => self.handle_replicate(term, leader, prev_lsn, commit_lsn, records),
+            other => Msg::Err(format!("manager: unexpected peer message {other:?}")),
+        }
+    }
+
+    /// Grant or refuse a vote (Raft §5.2/§5.4.1): the candidate's term
+    /// must be current, we must not have voted for anyone else this
+    /// term, and its log `(last_term, last_lsn)` must be at least as up
+    /// to date as ours.  Both the term bump and the vote are persisted
+    /// BEFORE the reply leaves — an unpersistable vote is refused.
+    fn handle_vote(&self, term: u64, candidate: String, last_term: u64, last_lsn: u64) -> Msg {
+        let my_last = self.last_lsn();
+        let mut r = self.repl.lock().unwrap();
+        if term > r.term {
+            r.term = term;
+            r.voted_for = None;
+            r.role = Role::Follower;
+            r.leader_hint = String::new();
+            if let Some(dir) = r.term_dir.clone() {
+                if wal::save_term(&dir, r.term, None, r.accepted_term).is_err() {
+                    return Msg::VoteReply {
+                        term: r.term,
+                        granted: false,
+                    };
+                }
+            }
+        }
+        let up_to_date = (last_term, last_lsn) >= (r.accepted_term, my_last);
+        let not_voted_other = match &r.voted_for {
+            None => true,
+            Some(v) => *v == candidate,
+        };
+        let granted = term == r.term && up_to_date && not_voted_other;
+        if granted {
+            if r.voted_for.is_none() {
+                r.voted_for = Some(candidate.clone());
+                if let Some(dir) = r.term_dir.clone() {
+                    if wal::save_term(&dir, r.term, Some(&candidate), r.accepted_term).is_err() {
+                        r.voted_for = None;
+                        return Msg::VoteReply {
+                            term: r.term,
+                            granted: false,
+                        };
+                    }
+                }
+            }
+            // Granting resets the election timer (don't immediately
+            // campaign against the candidate we just endorsed).
+            r.last_contact = self.now();
+        }
+        Msg::VoteReply {
+            term: r.term,
+            granted,
+        }
+    }
+
+    /// Accept (or refuse) a leader's append/heartbeat.  First contact
+    /// from a new leader re-bootstraps this replica wholesale from that
+    /// leader's snapshot — discarding any divergent uncommitted tail —
+    /// and records the adoption durably before any ack at the new term
+    /// can count toward its quorum.  A gap against the leader's window
+    /// self-heals by pulling [`Msg::FetchWal`] catch-up batches.  An
+    /// `ok` ack promises every covered record is fsynced locally.
+    fn handle_replicate(
+        &self,
+        term: u64,
+        leader: String,
+        prev_lsn: u64,
+        commit_lsn: u64,
+        records: Vec<WalEntry>,
+    ) -> Msg {
+        let pre_last = self.last_lsn();
+        let need_bootstrap;
+        {
+            let mut r = self.repl.lock().unwrap();
+            if term < r.term {
+                return Msg::ReplicateAck {
+                    term: r.term,
+                    last_lsn: pre_last,
+                    ok: false,
+                };
+            }
+            if term > r.term {
+                r.term = term;
+                r.voted_for = None;
+                if let Some(dir) = r.term_dir.clone() {
+                    if wal::save_term(&dir, r.term, None, r.accepted_term).is_err() {
+                        return Msg::ReplicateAck {
+                            term: r.term,
+                            last_lsn: pre_last,
+                            ok: false,
+                        };
+                    }
+                }
+            }
+            // A Replicate at the current term is from THE leader of
+            // that term (elections are unique per term): follow it — a
+            // candidate abandons its election, a deposed leader demotes.
+            r.role = Role::Follower;
+            r.leader_hint = leader.clone();
+            r.last_contact = self.now();
+            need_bootstrap = r.accepted_term != term;
+        }
+        if need_bootstrap {
+            if self.bootstrap_from(&leader).is_err() {
+                return Msg::ReplicateAck {
+                    term,
+                    last_lsn: self.last_lsn(),
+                    ok: false,
+                };
+            }
+            let mut r = self.repl.lock().unwrap();
+            if let Some(dir) = r.term_dir.clone() {
+                if wal::save_term(&dir, r.term, r.voted_for.as_deref(), term).is_err() {
+                    return Msg::ReplicateAck {
+                        term,
+                        last_lsn: self.last_lsn(),
+                        ok: false,
+                    };
+                }
+            }
+            r.accepted_term = term;
+        }
+        let mut appended = need_bootstrap;
+        let mut last = self.last_lsn();
+        if prev_lsn > last {
+            if self.catch_up(&leader).is_err() {
+                return Msg::ReplicateAck {
+                    term,
+                    last_lsn: last,
+                    ok: false,
+                };
+            }
+            let caught = self.last_lsn();
+            appended = appended || caught != last;
+            last = caught;
+        }
+        for e in &records {
+            if e.lsn <= last {
+                continue; // overlap with an already-applied window
+            }
+            if e.lsn != last + 1 || self.apply_shipped(e.lsn, &e.data).is_err() {
+                return Msg::ReplicateAck {
+                    term,
+                    last_lsn: last,
+                    ok: false,
+                };
+            }
+            last = e.lsn;
+            appended = true;
+        }
+        // Durability barrier: an ok ack is a commit vote, so everything
+        // it covers must be on disk first.
+        if appended && self.sync_wal().is_err() {
+            return Msg::ReplicateAck {
+                term,
+                last_lsn: last,
+                ok: false,
+            };
+        }
+        {
+            let mut r = self.repl.lock().unwrap();
+            r.commit_lsn = r.commit_lsn.max(commit_lsn.min(last));
+        }
+        Msg::ReplicateAck {
+            term,
+            last_lsn: last,
+            ok: true,
+        }
+    }
+
+    /// Pull shipped records from the leader until caught up (or until
+    /// it tells us to re-snapshot).  Called when a Replicate's
+    /// `prev_lsn` shows we missed earlier records.
+    fn catch_up(&self, leader: &str) -> Result<()> {
+        let self_addr = self.repl.lock().unwrap().self_addr.clone();
+        loop {
+            let after = self.last_lsn();
+            match peer_call(&self_addr, leader, Msg::FetchWal { after })?.into_result() {
+                Ok(Msg::WalRecords { records }) => {
+                    if records.is_empty() {
+                        return Ok(());
+                    }
+                    for e in records {
+                        self.apply_shipped(e.lsn, &e.data)?;
+                    }
+                }
+                Ok(other) => {
+                    return Err(Error::Manager(format!(
+                        "catch-up: unexpected reply {other:?}"
+                    )))
+                }
+                Err(Error::Proto(e)) if e.contains("re-snapshot") => {
+                    self.bootstrap_from(leader)?;
+                    return Ok(());
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Re-install the leader's current snapshot wholesale (and reset
+    /// the local WAL to it, discarding any divergent tail).
+    fn bootstrap_from(&self, leader: &str) -> Result<()> {
+        let self_addr = self.repl.lock().unwrap().self_addr.clone();
+        match peer_call(&self_addr, leader, Msg::FetchSnapshot)? {
+            Msg::SnapshotData { data } => {
+                let snap = SnapshotState::decode(&data)?;
+                self.install_snapshot(&snap)
+            }
+            other => Err(Error::Manager(format!(
+                "bootstrap: unexpected snapshot reply {other:?}"
+            ))),
+        }
+    }
+
+    /// Leader-side commit barrier: fsync our own copy (it counts toward
+    /// the quorum), push `records` to every peer, and succeed only once
+    /// a majority of the group holds them durably.  Seeing a higher
+    /// term in any ack deposes us on the spot.
+    fn replicate_to_quorum(
+        &self,
+        prev_lsn: u64,
+        records: Vec<WalEntry>,
+    ) -> std::result::Result<(), String> {
+        if let Err(e) = self.sync_wal() {
+            return Err(format!("no quorum: leader wal sync failed: {e}"));
+        }
+        let (term, self_addr, peers, commit) = {
+            let r = self.repl.lock().unwrap();
+            if r.role != Role::Leader {
+                return Err("no quorum: leadership lost".into());
+            }
+            (r.term, r.self_addr.clone(), r.peers.clone(), r.commit_lsn)
+        };
+        let last = records.last().map(|e| e.lsn).unwrap_or(prev_lsn);
+        let quorum = (peers.len() + 1) / 2 + 1;
+        let mut acked = 1usize; // self, synced above
+        let mut max_term = term;
+        for p in &peers {
+            let req = Msg::Replicate {
+                term,
+                leader: self_addr.clone(),
+                prev_lsn,
+                commit_lsn: commit,
+                records: records.clone(),
+            };
+            if let Ok(Msg::ReplicateAck {
+                term: t,
+                last_lsn,
+                ok,
+            }) = peer_call(&self_addr, p, req)
+            {
+                max_term = max_term.max(t);
+                if ok && t == term && last_lsn >= last {
+                    acked += 1;
+                }
+            }
+            if acked >= quorum {
+                break; // laggards catch up via the next heartbeat
+            }
+        }
+        let mut r = self.repl.lock().unwrap();
+        if max_term > r.term {
+            r.term = max_term;
+            r.voted_for = None;
+            r.role = Role::Follower;
+            r.leader_hint = String::new();
+            if let Some(dir) = r.term_dir.clone() {
+                let _ = wal::save_term(&dir, r.term, None, r.accepted_term);
+            }
+            return Err(format!("no quorum: deposed by term {max_term}"));
+        }
+        if acked >= quorum {
+            if r.role == Role::Leader && r.term == term {
+                r.commit_lsn = r.commit_lsn.max(last);
+            }
+            Ok(())
+        } else {
+            Err(format!("no quorum: {acked}/{quorum} acks for lsn {last}"))
+        }
+    }
+
+    /// Leader heartbeat round: empty Replicates to every peer (resetting
+    /// their election timers, triggering catch-up on laggards) and a
+    /// quorum-median pass over the acked lsns to advance the commit
+    /// index — which lets records that missed their own quorum barrier
+    /// (e.g. during a healed partition) commit retroactively.
+    fn send_heartbeats(&self) {
+        let (term, self_addr, peers, commit) = {
+            let r = self.repl.lock().unwrap();
+            if r.role != Role::Leader || r.peers.is_empty() {
+                return;
+            }
+            (r.term, r.self_addr.clone(), r.peers.clone(), r.commit_lsn)
+        };
+        let my_last = self.last_lsn();
+        let mut lsns = vec![my_last];
+        let mut max_term = term;
+        for p in &peers {
+            let req = Msg::Replicate {
+                term,
+                leader: self_addr.clone(),
+                prev_lsn: my_last,
+                commit_lsn: commit,
+                records: Vec::new(),
+            };
+            match peer_call(&self_addr, p, req) {
+                Ok(Msg::ReplicateAck {
+                    term: t,
+                    last_lsn,
+                    ok,
+                }) => {
+                    max_term = max_term.max(t);
+                    lsns.push(if ok && t == term { last_lsn } else { 0 });
+                }
+                _ => lsns.push(0),
+            }
+        }
+        let quorum = (peers.len() + 1) / 2 + 1;
+        lsns.sort_unstable_by(|a, b| b.cmp(a));
+        let quorum_lsn = lsns[quorum - 1];
+        let mut r = self.repl.lock().unwrap();
+        if max_term > r.term {
+            r.term = max_term;
+            r.voted_for = None;
+            r.role = Role::Follower;
+            r.leader_hint = String::new();
+            if let Some(dir) = r.term_dir.clone() {
+                let _ = wal::save_term(&dir, r.term, None, r.accepted_term);
+            }
+            return;
+        }
+        if r.role == Role::Leader && r.term == term {
+            r.commit_lsn = r.commit_lsn.max(quorum_lsn.min(my_last));
+        }
+    }
+
+    /// One consensus timer tick: a leader heartbeats its peers, a
+    /// follower/candidate whose election timer expired campaigns.  All
+    /// timers read the manager's skewable clock, so tests drive
+    /// elections with [`ManagerState::advance_clock`] + explicit ticks;
+    /// nothing fires between ticks.
+    pub fn tick_consensus(&self) {
+        let (role, solo, due) = {
+            let r = self.repl.lock().unwrap();
+            let due = self.now().saturating_duration_since(r.last_contact) >= election_timeout(&r);
+            (r.role, r.peers.is_empty(), due)
+        };
+        if solo {
+            return;
+        }
+        match role {
+            Role::Leader => self.send_heartbeats(),
+            Role::Follower | Role::Candidate => {
+                if due {
+                    if let Err(e) = self.campaign() {
+                        eprintln!("gpustore manager: election aborted: {e}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Stand for election (Raft §5.2): durably bump the term with a
+    /// self-vote, solicit votes from every peer, and take leadership on
+    /// a majority.  Returns `Ok(true)` iff this manager is the leader
+    /// afterwards.  Winning refreshes node liveness (storage nodes
+    /// heartbeat their configured manager, not us) and immediately
+    /// heartbeats the group to establish authority.
+    pub fn campaign(&self) -> Result<bool> {
+        let last_lsn = self.last_lsn();
+        let (term, self_addr, peers, accepted) = {
+            let mut r = self.repl.lock().unwrap();
+            if r.peers.is_empty() || r.role == Role::Leader {
+                return Ok(r.role == Role::Leader);
+            }
+            r.term += 1;
+            r.role = Role::Candidate;
+            r.voted_for = Some(r.self_addr.clone());
+            r.leader_hint = String::new();
+            r.last_contact = self.now();
+            if let Some(dir) = r.term_dir.clone() {
+                // An unpersistable self-vote must not be cast.
+                wal::save_term(&dir, r.term, r.voted_for.as_deref(), r.accepted_term)?;
+            }
+            (r.term, r.self_addr.clone(), r.peers.clone(), r.accepted_term)
+        };
+        let quorum = (peers.len() + 1) / 2 + 1;
+        let mut granted = 1usize; // self
+        let mut max_term = term;
+        for p in &peers {
+            let req = Msg::RequestVote {
+                term,
+                candidate: self_addr.clone(),
+                last_term: accepted,
+                last_lsn,
+            };
+            if let Ok(Msg::VoteReply { term: t, granted: g }) = peer_call(&self_addr, p, req) {
+                max_term = max_term.max(t);
+                if g && t == term {
+                    granted += 1;
+                }
+            }
+        }
+        let mut r = self.repl.lock().unwrap();
+        if max_term > r.term {
+            r.term = max_term;
+            r.voted_for = None;
+            r.role = Role::Follower;
+            if let Some(dir) = r.term_dir.clone() {
+                let _ = wal::save_term(&dir, r.term, None, r.accepted_term);
+            }
+            return Ok(false);
+        }
+        if r.term != term || r.role != Role::Candidate {
+            // Superseded while we were soliciting (a valid leader
+            // contacted us, or a newer campaign started).
+            return Ok(r.role == Role::Leader);
+        }
+        if granted >= quorum {
+            // From here on our log is the canonical term-`term` history
+            // (every peer re-bootstraps to match it) — adopt the term
+            // as our log's accepted term, durably, before leading.
+            if let Some(dir) = r.term_dir.clone() {
+                wal::save_term(&dir, r.term, r.voted_for.as_deref(), term)?;
+            }
+            r.accepted_term = term;
+            r.role = Role::Leader;
+            r.leader_hint = r.self_addr.clone();
+            r.last_contact = self.now();
+            drop(r);
+            self.refresh_node_liveness();
+            self.send_heartbeats();
+            return Ok(true);
+        }
+        r.role = Role::Follower;
+        Ok(false)
+    }
+
+    /// Refresh every registered node's liveness clock (used when taking
+    /// leadership: nodes heartbeat their configured manager, so a fresh
+    /// leader would otherwise judge them all dead for placement until
+    /// the heartbeat window re-elapses).
+    fn refresh_node_liveness(&self) {
+        let mut guard = self.inner.lock().unwrap();
+        let now = self.now();
+        for n in guard.nodes.iter_mut() {
+            n.last_beat = now;
+        }
+    }
+
+    /// Records appended after `after`, from the ship buffer.
+    fn ship_tail_since(&self, after: u64) -> Vec<WalEntry> {
+        let g = self.inner.lock().unwrap();
+        g.ship
+            .iter()
+            .filter(|(l, _)| *l > after)
+            .map(|(l, d)| WalEntry {
+                lsn: *l,
+                data: d.clone(),
+            })
+            .collect()
+    }
+
+    /// Force the WAL tail to disk (the quorum-commit durability
+    /// barrier; no-op for in-memory managers).
+    fn sync_wal(&self) -> Result<()> {
+        let mut guard = self.inner.lock().unwrap();
+        if let Some(w) = guard.wal.as_mut() {
+            w.sync()?;
+        }
+        Ok(())
+    }
+
+    /// This manager's current consensus role.
+    pub fn role(&self) -> Role {
+        self.repl.lock().unwrap().role
+    }
+
+    /// True when this manager currently leads its quorum group (always
+    /// true in solo mode).
+    pub fn is_leader(&self) -> bool {
+        self.role() == Role::Leader
+    }
+
+    /// Current term.
+    pub fn current_term(&self) -> u64 {
+        self.repl.lock().unwrap().term
+    }
+
+    /// Last known leader address ("" = unknown).
+    pub fn leader_hint(&self) -> String {
+        self.repl.lock().unwrap().leader_hint.clone()
+    }
+
+    /// Highest lsn known replicated on a quorum (== `last_lsn` in solo
+    /// mode, once a message has been handled).
+    pub fn commit_lsn(&self) -> u64 {
+        self.repl.lock().unwrap().commit_lsn
+    }
+
+    /// `(lsn, crc32)` of every retained record at or below the commit
+    /// index — the committed prefix the divergence property compares
+    /// across replicas (on the intersection of retained windows).
+    pub fn committed_crcs(&self) -> Vec<(u64, u32)> {
+        let commit = self.repl.lock().unwrap().commit_lsn;
+        let g = self.inner.lock().unwrap();
+        g.crc_log
+            .range(..=commit)
+            .map(|(l, c)| (*l, *c))
+            .collect()
+    }
+}
+
+/// Election timeout for this member: base plus a deterministic stagger
+/// by rank in the sorted member list.
+fn election_timeout(r: &Repl) -> Duration {
+    let mut members: Vec<&str> = r.peers.iter().map(|s| s.as_str()).collect();
+    members.push(r.self_addr.as_str());
+    members.sort_unstable();
+    let idx = members
+        .iter()
+        .position(|m| *m == r.self_addr.as_str())
+        .unwrap_or(0);
+    ELECTION_TIMEOUT_BASE + ELECTION_STAGGER * (idx as u32)
+}
+
+/// One request/reply to a consensus peer on a fresh bounded connection.
+/// Consults the fault-injection partition table first, so tests can cut
+/// manager↔manager links deterministically (and instantaneously — a cut
+/// link fails at dial time, no timeouts involved).
+pub fn peer_call(from: &str, to: &str, msg: Msg) -> Result<Msg> {
+    if super::partition::is_partitioned(from, to) {
+        return Err(Error::Manager(format!("partitioned: {from} <-> {to}")));
+    }
+    let conn = Conn::connect_timeout(to, PEER_CONNECT_TIMEOUT)?;
+    conn.set_read_timeout(PEER_READ_TIMEOUT)?;
+    let rc = conn.try_clone()?;
+    let mut r = BufReader::new(rc);
+    let mut w = BufWriter::new(conn);
+    msg.write_to(&mut w)?;
+    Msg::read_from(&mut r)?
+        .ok_or_else(|| Error::Manager(format!("peer {to} closed the connection")))
+}
+
 /// Aggregate manager bookkeeping returned by
 /// [`ManagerState::block_stats`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -1328,6 +2136,18 @@ fn install_snapshot_into(
     g.next_lease = snap.next_lease;
     g.last_lsn = snap.lsn;
     g.ship.clear();
+    g.crc_log.clear();
+}
+
+/// Keep the per-lsn crc history bounded (oldest entries fall off; the
+/// divergence property compares prefixes on the retained intersection).
+fn trim_crc_log(g: &mut Inner) {
+    while g.crc_log.len() > CRC_LOG_CAP {
+        let Some(k) = g.crc_log.keys().next().copied() else {
+            break;
+        };
+        g.crc_log.remove(&k);
+    }
 }
 
 /// Best-effort deletion of freed blocks on their owning nodes.  Dead or
@@ -1386,6 +2206,7 @@ pub struct Manager {
     slot: Arc<Mutex<Slot>>,
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
+    ticker_thread: Option<JoinHandle<()>>,
 }
 
 impl Manager {
@@ -1423,7 +2244,14 @@ impl Manager {
     /// Bind and serve an already-built state (follower promotion, or a
     /// state recovered/inspected out-of-band).
     pub fn serve(addr: &str, state: Arc<ManagerState>) -> Result<Manager> {
-        let listener = Listener::bind(addr)?;
+        Manager::serve_listener(Listener::bind(addr)?, state)
+    }
+
+    /// Serve an already-built state on an already-bound listener.  The
+    /// multi-manager cluster spawner binds every member's listener
+    /// first so the full peer address list exists before any member's
+    /// consensus state is configured.
+    pub fn serve_listener(listener: Listener, state: Arc<ManagerState>) -> Result<Manager> {
         let addr = listener.local_addr()?;
         let slot = Arc::new(Mutex::new(Slot {
             state,
@@ -1441,7 +2269,36 @@ impl Manager {
             slot,
             stop,
             accept_thread: Some(accept_thread),
+            ticker_thread: None,
         })
+    }
+
+    /// Run [`ManagerState::tick_consensus`] every `every` until
+    /// shutdown.  The CLI path: tests never start a ticker (they drive
+    /// ticks explicitly for determinism).
+    pub fn start_ticker(&mut self, every: Duration) {
+        let (slot, stop) = (self.slot.clone(), self.stop.clone());
+        let t = std::thread::Builder::new()
+            .name("mosa-manager-tick".into())
+            .spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    let state = {
+                        let s = slot.lock().unwrap();
+                        if s.up {
+                            Some(s.state.clone())
+                        } else {
+                            None
+                        }
+                    };
+                    if let Some(state) = state {
+                        state.tick_consensus();
+                    }
+                    std::thread::sleep(every);
+                }
+            });
+        if let Ok(t) = t {
+            self.ticker_thread = Some(t);
+        }
     }
 
     /// The bound address.
@@ -1452,6 +2309,12 @@ impl Manager {
     /// Direct (in-process) access for tests.
     pub fn state(&self) -> Arc<ManagerState> {
         self.slot.lock().unwrap().state.clone()
+    }
+
+    /// True unless crashed (tests skip downed members when hunting the
+    /// current leader).
+    pub fn up(&self) -> bool {
+        self.slot.lock().unwrap().up
     }
 
     /// Simulate a process kill: mark the slot down (in-flight requests'
@@ -1491,6 +2354,16 @@ impl Manager {
         Ok(())
     }
 
+    /// Respawn after [`Manager::crash`] with an already-built state
+    /// (the multi-manager restart path: the caller recovers the state,
+    /// re-wires its consensus config, then installs it here).
+    pub fn restart_state(&self, state: Arc<ManagerState>) {
+        let mut slot = self.slot.lock().unwrap();
+        slot.state = state;
+        slot.epoch += 1;
+        slot.up = true;
+    }
+
     /// Stop accepting (existing connections finish their current call).
     pub fn shutdown(&mut self) {
         if self.stop.swap(true, Ordering::SeqCst) {
@@ -1503,6 +2376,9 @@ impl Manager {
         // itself sends nothing and its serve thread exits on EOF).
         let _ = Conn::connect(&self.addr);
         if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        if let Some(t) = self.ticker_thread.take() {
             let _ = t.join();
         }
     }
@@ -1555,7 +2431,7 @@ fn serve_conn(conn: Conn, slot: Arc<Mutex<Slot>>) {
             }
             (slot.state.clone(), slot.epoch)
         };
-        let reply = state.handle(msg);
+        let reply = state.handle_replicated(msg);
         // A crash while we were handling: the state this reply was
         // computed against is gone.  Suppress the reply (the client
         // sees the connection die mid-call) — never answer from the
@@ -1581,6 +2457,9 @@ fn serve_conn(conn: Conn, slot: Arc<Mutex<Slot>>) {
 pub struct Follower {
     state: Arc<ManagerState>,
     primary: String,
+    /// Identity in the fault-injection partition table (see
+    /// [`Follower::set_fault_id`]); defaults to `"follower"`.
+    fault_id: String,
 }
 
 impl Follower {
@@ -1593,14 +2472,28 @@ impl Follower {
         let f = Follower {
             state,
             primary: primary.to_string(),
+            fault_id: "follower".to_string(),
         };
         f.bootstrap()?;
         Ok(f)
     }
 
+    /// Give this follower an identity in the fault-injection partition
+    /// table (tests cut the follower↔primary link with
+    /// `Hiccup::partition(fault_id, primary_addr)`).
+    pub fn set_fault_id(&mut self, id: &str) {
+        self.fault_id = id.to_string();
+    }
+
     /// One request/reply against the primary on a fresh connection
     /// (simplest thing that survives primary restarts between polls).
     fn call(&self, msg: Msg) -> Result<Msg> {
+        if super::partition::is_partitioned(&self.fault_id, &self.primary) {
+            return Err(Error::Manager(format!(
+                "partitioned: {} <-> {}",
+                self.fault_id, self.primary
+            )));
+        }
         let conn = Conn::connect_timeout(&self.primary, Duration::from_secs(1))?;
         let rc = conn.try_clone()?;
         let mut r = BufReader::new(rc);
@@ -1616,8 +2509,7 @@ impl Follower {
         match self.call(Msg::FetchSnapshot)? {
             Msg::SnapshotData { data } => {
                 let snap = SnapshotState::decode(&data)?;
-                self.state.install_snapshot(&snap);
-                Ok(())
+                self.state.install_snapshot(&snap)
             }
             other => Err(Error::Manager(format!(
                 "follower: unexpected snapshot reply {other:?}"
@@ -1663,8 +2555,55 @@ impl Follower {
     /// Promote: stop following and serve the replicated state on
     /// `addr`.  (The caller decides *when* — e.g. after N failed
     /// polls; see `gpustore manager --follow`.)
+    ///
+    /// **Unsafe against split-brain** — this blindly starts serving
+    /// whether or not the old primary is still alive on the other side
+    /// of a partition.  Kept for single-follower setups and for the
+    /// regression test that demonstrates the divergence; quorum
+    /// deployments use [`Follower::promote_gated`].
     pub fn promote(self, addr: &str) -> Result<Manager> {
         Manager::serve(addr, self.state)
+    }
+
+    /// Quorum-gated promotion (the PR-8 replacement for the blind
+    /// 20-failed-polls auto-promote): join the quorum group as a
+    /// candidate and serve only after *winning* an election — which
+    /// requires a majority of `peers` reachable and an up-to-date log.
+    /// Anything short of that (no peers configured, peers unreachable,
+    /// vote lost) refuses loudly and serves nothing.
+    pub fn promote_gated(
+        self,
+        addr: &str,
+        peers: Vec<String>,
+        term_dir: Option<PathBuf>,
+    ) -> Result<Manager> {
+        let listener = Listener::bind(addr)?;
+        let self_addr = listener.local_addr()?;
+        let state = self.state.clone();
+        state.set_consensus(
+            ConsensusOpts {
+                self_addr: self_addr.clone(),
+                peers,
+                initial_leader: false,
+            },
+            term_dir,
+        )?;
+        let m = Manager::serve_listener(listener, state.clone())?;
+        match state.campaign() {
+            Ok(true) => Ok(m),
+            Ok(false) => {
+                drop(m); // shuts the listener down — we serve nothing
+                Err(Error::Manager(format!(
+                    "promotion refused: no quorum granted {self_addr} leadership (term {}); \
+                     refusing to serve rather than risk split-brain",
+                    state.current_term()
+                )))
+            }
+            Err(e) => {
+                drop(m);
+                Err(e)
+            }
+        }
     }
 }
 

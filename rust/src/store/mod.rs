@@ -54,13 +54,23 @@
 //!   (`std::io::Read`, prefetching + integrity-verified block streaming
 //!   with replica failover).
 //! * [`proto`] — the length-prefixed wire protocol shared by all three.
+//! * [`partition`] — deterministic in-process network partitions for
+//!   the fault-injection harness (cut/heal any manager pair).
 //! * [`cluster`] — spawn a full single-process cluster (manager + nodes)
 //!   on loopback TCP for tests, benches and examples.
+//!
+//! Control-plane v5 (consensus): managers form a quorum group — one
+//! elected leader per term accepts mutations and commits each only
+//! after a majority holds it durably; non-leaders redirect clients via
+//! [`Msg::NotLeader`], which [`Sai`] follows transparently.  See
+//! [`manager::ManagerState::set_consensus`] and the README's
+//! "Consensus & failover" section.
 
 pub mod cluster;
 pub mod duplex;
 pub mod manager;
 pub mod node;
+pub mod partition;
 pub mod proto;
 pub mod sai;
 pub mod session;
@@ -68,8 +78,8 @@ pub mod session;
 pub use cluster::Cluster;
 pub use duplex::DuplexClient;
 pub use manager::{
-    policy_for, BlockStats, Follower, Manager, ManagerState, PlacementPolicy, ReplicatedStripe,
-    RoundRobinStripe, DEFAULT_LEASE_TIMEOUT,
+    policy_for, BlockStats, ConsensusOpts, Follower, Manager, ManagerState, PlacementPolicy,
+    ReplicatedStripe, Role, RoundRobinStripe, DEFAULT_LEASE_TIMEOUT,
 };
 pub use node::{NodeOpts, StorageNode};
 pub use proto::{Assignment, BlockMeta, BlockSpec, Msg, NodeEntry};

@@ -1,0 +1,74 @@
+//! Deterministic in-process network partitions for the fault-injection
+//! harness.
+//!
+//! A partition is an unordered pair of *fault ids* (we use manager
+//! listen addresses) registered in a process-global table.  Every
+//! manager↔manager call ([`super::manager::peer_call`]) and follower
+//! poll consults the table before dialing and fails fast with a
+//! `partitioned` error when the pair is cut — no timeouts, no real
+//! network interference, fully deterministic and instantaneous to heal.
+//!
+//! Client↔manager and client↔node traffic is deliberately unaffected:
+//! the scenarios under test are control-plane splits (a leader cut off
+//! from its quorum while still reachable by its clients — exactly the
+//! split-brain shape).
+
+use std::collections::HashSet;
+use std::sync::{Mutex, OnceLock};
+
+fn table() -> &'static Mutex<HashSet<(String, String)>> {
+    static TABLE: OnceLock<Mutex<HashSet<(String, String)>>> = OnceLock::new();
+    TABLE.get_or_init(|| Mutex::new(HashSet::new()))
+}
+
+fn key(a: &str, b: &str) -> (String, String) {
+    if a <= b {
+        (a.to_string(), b.to_string())
+    } else {
+        (b.to_string(), a.to_string())
+    }
+}
+
+/// Cut the link between `a` and `b` (both directions).  Idempotent.
+pub fn partition(a: &str, b: &str) {
+    table().lock().unwrap().insert(key(a, b));
+}
+
+/// Restore the link between `a` and `b`.  Idempotent.
+pub fn heal(a: &str, b: &str) {
+    table().lock().unwrap().remove(&key(a, b));
+}
+
+/// Restore every cut link (end-of-test cleanup; also used by seeded
+/// nemesis schedules between scenarios).
+pub fn heal_all() {
+    table().lock().unwrap().clear();
+}
+
+/// True when the `a`↔`b` link is currently cut.
+pub fn is_partitioned(a: &str, b: &str) -> bool {
+    table().lock().unwrap().contains(&key(a, b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unordered_and_idempotent() {
+        let (a, b) = ("x-part-test:1", "x-part-test:2");
+        assert!(!is_partitioned(a, b));
+        partition(a, b);
+        partition(a, b);
+        assert!(is_partitioned(a, b));
+        assert!(is_partitioned(b, a));
+        assert!(!is_partitioned(a, "x-part-test:3"));
+        heal(b, a);
+        assert!(!is_partitioned(a, b));
+        partition(a, b);
+        partition(a, "x-part-test:3");
+        heal_all();
+        assert!(!is_partitioned(a, b));
+        assert!(!is_partitioned(a, "x-part-test:3"));
+    }
+}

@@ -30,6 +30,14 @@
 //! crash recovery use.  A follower that fell behind the primary's
 //! retained log receives a logical `Err` and re-bootstraps.
 //!
+//! Consensus (tags ≥ 34): managers replicate as a quorum group over
+//! the same shipped-record format.  A leader pushes appended records to
+//! its peers ([`Msg::Replicate`] → [`Msg::ReplicateAck`]) and reports a
+//! mutation committed only once a quorum of managers holds it durably;
+//! elections ([`Msg::RequestVote`] → [`Msg::VoteReply`]) require an
+//! up-to-date log, and any client call landing on a non-leader is
+//! answered with [`Msg::NotLeader`] carrying a redirect hint.
+//!
 //! Data-plane v2 (pipelined duplex, wire format bumped): the
 //! client↔node block frames carry a *request id* so many operations can
 //! be in flight on one socket and replies can be matched to their
@@ -341,6 +349,70 @@ pub enum Msg {
         records: Vec<WalEntry>,
     },
 
+    // ---- manager <-> manager (consensus, tags >= 34) ----
+    /// A candidate solicits a vote for `term`.  Granted only when the
+    /// receiver has not already voted for a different candidate this
+    /// term and the candidate's log is at least as up to date as the
+    /// receiver's — compared as `(last_term, last_lsn)` lexicographic,
+    /// exactly Raft's §5.4.1 rule: a long log of stale-term entries
+    /// must not beat a shorter log containing newer-term commits.
+    RequestVote {
+        /// The candidate's (freshly incremented) term.
+        term: u64,
+        /// The candidate's advertised address — vote bookkeeping, and
+        /// the redirect hint it will serve under once elected.
+        candidate: String,
+        /// Term under which the candidate's log head was accepted.
+        last_term: u64,
+        /// Highest lsn in the candidate's log.
+        last_lsn: u64,
+    },
+    /// Reply to [`Msg::RequestVote`].
+    VoteReply {
+        /// The replier's current term (a candidate seeing a higher one
+        /// abandons its election and steps down).
+        term: u64,
+        /// Whether the vote was granted.
+        granted: bool,
+    },
+    /// Leader → peer: append shipped records and learn the quorum
+    /// commit index.  Empty `records` is a heartbeat — it still resets
+    /// the peer's election timer and advances its commit index.
+    Replicate {
+        /// The leader's term; peers reject stale terms.
+        term: u64,
+        /// The leader's advertised address (redirect hint + catch-up
+        /// source for peers that fell behind).
+        leader: String,
+        /// Lsn immediately preceding `records[0]` (or the leader's
+        /// last lsn for a heartbeat): the chain check a peer uses to
+        /// detect gaps and pull catch-up before applying.
+        prev_lsn: u64,
+        /// Highest lsn known replicated on a quorum.
+        commit_lsn: u64,
+        /// The appended records, dense from `prev_lsn + 1`.
+        records: Vec<WalEntry>,
+    },
+    /// Reply to [`Msg::Replicate`].
+    ReplicateAck {
+        /// The replier's current term (a leader seeing a higher one
+        /// was deposed and steps down).
+        term: u64,
+        /// The replier's highest durable lsn after applying — the ack
+        /// a leader counts toward its quorum-commit barrier.
+        last_lsn: u64,
+        /// Whether the append was accepted (term current, chain
+        /// intact after any catch-up).
+        ok: bool,
+    },
+    /// Reply to any client call a non-leader cannot serve: redirect.
+    NotLeader {
+        /// The current leader's address as far as the replier knows
+        /// (empty = unknown; the client falls back to its bootstrap
+        /// list).
+        hint: String,
+    },
+
     // ---- shared ----
     /// Success acknowledgement.
     Ok,
@@ -386,6 +458,11 @@ impl Msg {
             Msg::SnapshotData { .. } => 31,
             Msg::FetchWal { .. } => 32,
             Msg::WalRecords { .. } => 33,
+            Msg::RequestVote { .. } => 34,
+            Msg::VoteReply { .. } => 35,
+            Msg::Replicate { .. } => 36,
+            Msg::ReplicateAck { .. } => 37,
+            Msg::NotLeader { .. } => 38,
         }
     }
 
@@ -502,6 +579,45 @@ impl Msg {
                     p.extend_from_slice(&r.data);
                 }
             }
+            Msg::RequestVote {
+                term,
+                candidate,
+                last_term,
+                last_lsn,
+            } => {
+                p.extend_from_slice(&term.to_le_bytes());
+                put_str(&mut p, candidate);
+                p.extend_from_slice(&last_term.to_le_bytes());
+                p.extend_from_slice(&last_lsn.to_le_bytes());
+            }
+            Msg::VoteReply { term, granted } => {
+                p.extend_from_slice(&term.to_le_bytes());
+                p.push(*granted as u8);
+            }
+            Msg::Replicate {
+                term,
+                leader,
+                prev_lsn,
+                commit_lsn,
+                records,
+            } => {
+                p.extend_from_slice(&term.to_le_bytes());
+                put_str(&mut p, leader);
+                p.extend_from_slice(&prev_lsn.to_le_bytes());
+                p.extend_from_slice(&commit_lsn.to_le_bytes());
+                p.extend_from_slice(&(records.len() as u32).to_le_bytes());
+                for r in records {
+                    p.extend_from_slice(&r.lsn.to_le_bytes());
+                    p.extend_from_slice(&(r.data.len() as u32).to_le_bytes());
+                    p.extend_from_slice(&r.data);
+                }
+            }
+            Msg::ReplicateAck { term, last_lsn, ok } => {
+                p.extend_from_slice(&term.to_le_bytes());
+                p.extend_from_slice(&last_lsn.to_le_bytes());
+                p.push(*ok as u8);
+            }
+            Msg::NotLeader { hint } => put_str(&mut p, hint),
         }
         let mut frame = Vec::with_capacity(5 + p.len());
         frame.extend_from_slice(&(p.len() as u32 + 1).to_le_bytes());
@@ -651,6 +767,46 @@ impl Msg {
                 }
                 Msg::WalRecords { records }
             }
+            34 => Msg::RequestVote {
+                term: c.u64()?,
+                candidate: c.str()?,
+                last_term: c.u64()?,
+                last_lsn: c.u64()?,
+            },
+            35 => Msg::VoteReply {
+                term: c.u64()?,
+                granted: c.u8()? != 0,
+            },
+            36 => {
+                let term = c.u64()?;
+                let leader = c.str()?;
+                let prev_lsn = c.u64()?;
+                let commit_lsn = c.u64()?;
+                let n = c.u32()? as usize;
+                if n > MAX_FRAME / 13 {
+                    return Err(Error::Proto(format!("replicate record list too long: {n}")));
+                }
+                let mut records = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    records.push(WalEntry {
+                        lsn: c.u64()?,
+                        data: c.bytes()?,
+                    });
+                }
+                Msg::Replicate {
+                    term,
+                    leader,
+                    prev_lsn,
+                    commit_lsn,
+                    records,
+                }
+            }
+            37 => Msg::ReplicateAck {
+                term: c.u64()?,
+                last_lsn: c.u64()?,
+                ok: c.u8()? != 0,
+            },
+            38 => Msg::NotLeader { hint: c.str()? },
             t => return Err(Error::Proto(format!("unknown tag {t}"))),
         };
         if c.i != p.len() {
@@ -1019,6 +1175,60 @@ mod tests {
                     data: vec![],
                 },
             ],
+        });
+        roundtrip(Msg::RequestVote {
+            term: 3,
+            candidate: "127.0.0.1:7101".into(),
+            last_term: 2,
+            last_lsn: 42,
+        });
+        roundtrip(Msg::RequestVote {
+            term: u64::MAX,
+            candidate: String::new(),
+            last_term: 0,
+            last_lsn: 0,
+        });
+        roundtrip(Msg::VoteReply {
+            term: 3,
+            granted: true,
+        });
+        roundtrip(Msg::VoteReply {
+            term: 0,
+            granted: false,
+        });
+        roundtrip(Msg::Replicate {
+            term: 5,
+            leader: "127.0.0.1:7100".into(),
+            prev_lsn: 10,
+            commit_lsn: 9,
+            records: vec![WalEntry {
+                lsn: 11,
+                data: vec![7; 33],
+            }],
+        });
+        // Empty-records heartbeat form.
+        roundtrip(Msg::Replicate {
+            term: 1,
+            leader: "m0".into(),
+            prev_lsn: 0,
+            commit_lsn: 0,
+            records: vec![],
+        });
+        roundtrip(Msg::ReplicateAck {
+            term: 5,
+            last_lsn: 11,
+            ok: true,
+        });
+        roundtrip(Msg::ReplicateAck {
+            term: u64::MAX,
+            last_lsn: u64::MAX,
+            ok: false,
+        });
+        roundtrip(Msg::NotLeader {
+            hint: "127.0.0.1:7102".into(),
+        });
+        roundtrip(Msg::NotLeader {
+            hint: String::new(),
         });
     }
 

@@ -115,15 +115,37 @@ impl WriteReport {
     }
 }
 
+/// `NotLeader` hints followed within one rotation round before falling
+/// back to the bootstrap list (guards against redirect loops between
+/// confused replicas during an election).
+const MAX_REDIRECT_HOPS: usize = 4;
+/// Full rotation rounds through the bootstrap list before a call gives
+/// up.  Paired with [`REDIRECT_BACKOFF`] this bounds how long a client
+/// rides out a leader election (~3 s) before surfacing the error.
+/// Unit tests use a small bound so the exhaustion path runs fast.
+#[cfg(not(test))]
+const MAX_REDIRECT_ROUNDS: usize = 60;
+#[cfg(test)]
+const MAX_REDIRECT_ROUNDS: usize = 3;
+/// Pause between rotation rounds (an election needs real time to
+/// complete when every manager is answering `NotLeader`/`no quorum`).
+const REDIRECT_BACKOFF: Duration = Duration::from_millis(50);
+
 /// The SAI client.
 pub struct Sai {
     pub(super) cfg: ClientConfig,
     pub(super) engine: Arc<dyn HashEngine>,
     manager: Mutex<(BufReader<Conn>, BufWriter<Conn>)>,
-    /// Manager bootstrap address — kept so per-session helpers (the
-    /// write-lease heartbeat thread) can open their own control
-    /// connections without serializing behind the shared one.
-    manager_addr: String,
+    /// Manager bootstrap list (the connect string, comma-split): the
+    /// redirect fallback whenever no usable leader hint is available.
+    bootstrap: Vec<String>,
+    /// Rotation cursor over [`Sai::bootstrap`].
+    bootstrap_cursor: Mutex<usize>,
+    /// Address of the manager the shared connection currently points at
+    /// (follows `NotLeader` redirects) — also handed to per-session
+    /// helpers (the write-lease heartbeat thread) that open their own
+    /// control connections without serializing behind the shared one.
+    manager_addr: Mutex<String>,
     /// Node clients indexed by manager node id.  `None` = the node was
     /// unreachable when last tried (reads fail over to other replicas;
     /// puts targeting it fail the write).  Refreshed from the manager's
@@ -139,9 +161,12 @@ pub struct Sai {
 impl Sai {
     /// Connect to the manager and, from its registry, to the storage
     /// nodes (control-plane v2: the manager is the single bootstrap
-    /// address).  `shaper`, if given, paces ALL node links together
-    /// (the client's NIC).  Nodes that are down are tolerated here and
-    /// handled by replica failover at read time.
+    /// address; under consensus, `manager_addr` may be a comma-separated
+    /// list of the quorum group's members and the first reachable one is
+    /// dialed — `NotLeader` redirects take it from there).  `shaper`, if
+    /// given, paces ALL node links together (the client's NIC).  Nodes
+    /// that are down are tolerated here and handled by replica failover
+    /// at read time.
     pub fn connect(
         manager_addr: &str,
         cfg: ClientConfig,
@@ -154,13 +179,36 @@ impl Sai {
                 "write_buffer must be a multiple of block_size".into(),
             ));
         }
-        let conn = Conn::connect(manager_addr)?;
+        let bootstrap: Vec<String> = manager_addr
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        if bootstrap.is_empty() {
+            return Err(Error::Config("empty manager address".into()));
+        }
+        let (conn, picked) = if bootstrap.len() == 1 {
+            (Conn::connect(&bootstrap[0])?, bootstrap[0].clone())
+        } else {
+            let mut found = None;
+            for a in &bootstrap {
+                if let Ok(c) = Conn::connect_timeout(a, Duration::from_secs(1)) {
+                    found = Some((c, a.clone()));
+                    break;
+                }
+            }
+            found.ok_or_else(|| {
+                Error::Manager(format!("no manager reachable in \"{manager_addr}\""))
+            })?
+        };
         let manager = Mutex::new((BufReader::new(conn.try_clone()?), BufWriter::new(conn)));
         let sai = Sai {
             cfg,
             engine,
             manager,
-            manager_addr: manager_addr.to_string(),
+            bootstrap,
+            bootstrap_cursor: Mutex::new(0),
+            manager_addr: Mutex::new(picked),
             nodes: Mutex::new(Vec::new()),
             shaper,
             last_refresh: Mutex::new(None),
@@ -238,26 +286,131 @@ impl Sai {
             Err(_) => Ok(None),
         };
         match reply {
-            Ok(Some(m)) => return m.into_result(),
-            // Retry exactly once, on a fresh connection, only when the
-            // connection itself failed: the write never made it out, or
-            // the manager severed the link without replying (EOF — a
-            // manager crash/restart does this to every live
-            // connection).  In both cases the durable manager either
-            // never saw the request or recovered it from its log, so a
-            // single replay is safe for our idempotent control calls; a
-            // read that died MID-reply (a non-EOF error after a
-            // successful write) is NOT retried — the request may have
-            // applied and replaying e.g. a commit could double-apply.
-            Ok(None) => {}
-            Err(e) => return Err(e),
+            // The replica we're talking to isn't the leader: follow its
+            // hint (re-sending to a non-leader is always safe — it
+            // applied nothing).
+            Ok(Some(Msg::NotLeader { hint })) => self.redirect_call(&mut g, msg, hint),
+            // A leader that couldn't commit on a quorum: the record may
+            // be durable (uncommitted) on that leader, but our control
+            // calls are at-least-once — rotating to another member and
+            // replaying is safe for state convergence (see README,
+            // "Consensus & failover") and is exactly how a writer rides
+            // out a deposed/partitioned leader.
+            Ok(Some(Msg::Err(e))) if e.starts_with("no quorum") => {
+                self.redirect_call(&mut g, msg, String::new())
+            }
+            Ok(Some(m)) => m.into_result(),
+            // Reconnect and replay, only when the connection itself
+            // failed: the write never made it out, or the manager
+            // severed the link without replying (EOF — a manager
+            // crash/restart does this to every live connection).  In
+            // both cases the durable manager either never saw the
+            // request or recovered it from its log, so replaying the
+            // idempotent control call is safe; a read that died
+            // MID-reply (a non-EOF error after a successful write) is
+            // NOT retried — the request may have applied and replaying
+            // e.g. a commit could double-apply.
+            Ok(None) => self.redirect_call(&mut g, msg, String::new()),
+            Err(e) => Err(e),
         }
-        let conn = Conn::connect_timeout(&self.manager_addr, Duration::from_secs(1))?;
-        *g = (BufReader::new(conn.try_clone()?), BufWriter::new(conn));
-        let (r, w) = &mut *g;
-        msg.write_to(w)?;
-        w.flush()?;
-        Msg::read_from(r)?.ok_or_else(closed)?.into_result()
+    }
+
+    /// Redirect/rotation loop behind [`Sai::manager_call`]: chase at
+    /// most [`MAX_REDIRECT_HOPS`] `NotLeader` hints, falling back to
+    /// bootstrap-list rotation (with a short backoff between rounds, so
+    /// an in-flight election has time to conclude) when a hint is
+    /// missing, circular, or exhausted.  On success the fresh
+    /// connection replaces the shared one and the current manager
+    /// address is updated for future calls and session helpers.
+    fn redirect_call(
+        &self,
+        g: &mut (BufReader<Conn>, BufWriter<Conn>),
+        msg: Msg,
+        first_hint: String,
+    ) -> Result<Msg> {
+        let mut target = if first_hint.is_empty() {
+            self.next_bootstrap()
+        } else {
+            first_hint
+        };
+        let mut last_err = Error::Manager("manager redirect: no attempt made".into());
+        for round in 0..MAX_REDIRECT_ROUNDS {
+            if round > 0 {
+                std::thread::sleep(REDIRECT_BACKOFF);
+            }
+            let mut hops = 0;
+            loop {
+                let conn = match Conn::connect_timeout(&target, Duration::from_secs(1)) {
+                    Ok(c) => c,
+                    Err(e) => {
+                        last_err = e;
+                        target = self.next_bootstrap();
+                        break;
+                    }
+                };
+                let rc = match conn.try_clone() {
+                    Ok(c) => c,
+                    Err(e) => {
+                        last_err = e;
+                        target = self.next_bootstrap();
+                        break;
+                    }
+                };
+                let mut r = BufReader::new(rc);
+                let mut w = BufWriter::new(conn);
+                if let Err(e) = msg.write_to(&mut w).and_then(|()| w.flush().map_err(Error::Io)) {
+                    last_err = e;
+                    target = self.next_bootstrap();
+                    break;
+                }
+                match Msg::read_from(&mut r) {
+                    Ok(Some(Msg::NotLeader { hint })) => {
+                        hops += 1;
+                        if hops >= MAX_REDIRECT_HOPS {
+                            last_err = Error::Manager(format!(
+                                "no leader found after {hops} redirects"
+                            ));
+                            target = self.next_bootstrap();
+                            break;
+                        }
+                        // An empty or self-referential hint can't make
+                        // progress — rotate instead of looping.
+                        if hint.is_empty() || hint == target {
+                            target = self.next_bootstrap();
+                        } else {
+                            target = hint;
+                        }
+                    }
+                    Ok(Some(Msg::Err(e))) if e.starts_with("no quorum") => {
+                        last_err = Error::Proto(format!("remote: {e}"));
+                        target = self.next_bootstrap();
+                        break;
+                    }
+                    Ok(Some(m)) => {
+                        *g = (r, w);
+                        *self.manager_addr.lock().unwrap() = target;
+                        return m.into_result();
+                    }
+                    Ok(None) => {
+                        last_err = closed();
+                        target = self.next_bootstrap();
+                        break;
+                    }
+                    // Died mid-reply after a successful targeted write:
+                    // the request may have applied — do not replay.
+                    Err(e) => return Err(e),
+                }
+            }
+        }
+        Err(last_err)
+    }
+
+    /// Next bootstrap address in rotation order.
+    fn next_bootstrap(&self) -> String {
+        let mut cursor = self.bootstrap_cursor.lock().unwrap();
+        let a = self.bootstrap[*cursor % self.bootstrap.len()].clone();
+        *cursor = cursor.wrapping_add(1);
+        a
     }
 
     /// The client for node `id`, if it is connected.  An id beyond the
@@ -307,9 +460,11 @@ impl Sai {
         }
     }
 
-    /// The manager bootstrap address.
-    pub(super) fn manager_addr(&self) -> &str {
-        &self.manager_addr
+    /// The manager address the client currently targets (follows
+    /// `NotLeader` redirects, so session helpers start at the same
+    /// member the shared connection last succeeded against).
+    pub(super) fn manager_addr(&self) -> String {
+        self.manager_addr.lock().unwrap().clone()
     }
 
     /// Open a lease: `(lease, ttl_ms, version, blocks)`.  Read leases
@@ -478,5 +633,66 @@ impl Sai {
             }
         }
         Ok((ok, bad))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashgpu::{CpuEngine, WindowHashMode};
+    use crate::net::Listener;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// A fake manager that answers EVERY call with a `NotLeader` whose
+    /// hint points back at itself — the worst-case circular redirect.
+    /// `manager_call` must follow a bounded number of hints/rotations
+    /// and then surface an error, never loop forever.
+    #[test]
+    fn manager_call_follows_bounded_redirects_then_errs() {
+        let listener = Listener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let served = Arc::new(AtomicUsize::new(0));
+        let hint = addr.clone();
+        let count = served.clone();
+        std::thread::spawn(move || loop {
+            let Ok(conn) = listener.accept() else { return };
+            let (hint, count) = (hint.clone(), count.clone());
+            std::thread::spawn(move || {
+                let Ok(rc) = conn.try_clone() else { return };
+                let mut r = BufReader::new(rc);
+                let mut w = BufWriter::new(conn);
+                while let Ok(Some(_)) = Msg::read_from(&mut r) {
+                    count.fetch_add(1, Ordering::SeqCst);
+                    let reply = Msg::NotLeader { hint: hint.clone() };
+                    if reply.write_to(&mut w).is_err() {
+                        return;
+                    }
+                    let _ = w.flush();
+                }
+            });
+        });
+        let conn = Conn::connect(&addr).unwrap();
+        let sai = Sai {
+            cfg: ClientConfig::default(),
+            engine: Arc::new(CpuEngine::new(1, 4096, WindowHashMode::Rolling)),
+            manager: Mutex::new((BufReader::new(conn.try_clone().unwrap()), BufWriter::new(conn))),
+            bootstrap: vec![addr.clone()],
+            bootstrap_cursor: Mutex::new(0),
+            manager_addr: Mutex::new(addr),
+            nodes: Mutex::new(Vec::new()),
+            shaper: None,
+            last_refresh: Mutex::new(None),
+        };
+        let err = sai.manager_call(Msg::NodeList).unwrap_err();
+        let msg = format!("{err}");
+        assert!(
+            msg.contains("redirect") || msg.contains("leader"),
+            "unexpected error: {msg}"
+        );
+        // 1 call on the shared connection + at most HOPS per round.
+        let max = 1 + MAX_REDIRECT_ROUNDS * MAX_REDIRECT_HOPS;
+        let n = served.load(Ordering::SeqCst);
+        assert!(n <= max, "unbounded redirect chase: {n} calls > {max}");
+        assert!(n >= 2, "redirects were not followed at all: {n} calls");
     }
 }

@@ -122,6 +122,7 @@ impl LeaseHeartbeat {
         let handle = std::thread::Builder::new()
             .name(format!("sai-lease-{lease}"))
             .spawn(move || {
+                let mut manager_addr = manager_addr;
                 let mut link: Option<Conn> = None;
                 loop {
                     match rx.recv_timeout(every) {
@@ -149,6 +150,20 @@ impl LeaseHeartbeat {
                     })();
                     match reply {
                         Ok(Msg::Ok) => {}
+                        // Leadership moved while this session is alive:
+                        // renew against the hinted leader from the next
+                        // tick on (renewals are idempotent, so chasing
+                        // the hint late costs nothing).
+                        Ok(Msg::NotLeader { hint }) => {
+                            if !hint.is_empty() {
+                                manager_addr = hint;
+                            }
+                            link = None;
+                        }
+                        // A leader that can't commit the renewal on a
+                        // quorum (partition/election in progress) is
+                        // transient — the lease is NOT known lost.
+                        Ok(Msg::Err(e)) if e.starts_with("no quorum") => link = None,
                         // The manager says the lease is gone: renewing
                         // further is pointless — latch and stop.
                         Ok(Msg::Err(_)) => {
@@ -250,7 +265,7 @@ impl<'a> FileWriter<'a> {
         let (lease, ttl_ms, _, _) = sai.open_lease(&claim, true)?;
         let heartbeat = (lease != 0).then(|| {
             LeaseHeartbeat::spawn(
-                sai.manager_addr().to_string(),
+                sai.manager_addr(),
                 lease,
                 Duration::from_millis(ttl_ms.max(1)),
             )

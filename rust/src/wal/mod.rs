@@ -500,6 +500,47 @@ impl Wal {
         Ok(())
     }
 
+    /// Replace the log wholesale with `snap`: delete every existing
+    /// snapshot and segment (including any with LSNs beyond the
+    /// snapshot — the divergent-tail case on a demoted leader), durably
+    /// write `snap`, and start a fresh segment at `snap.lsn + 1`.  Used
+    /// when a replica re-bootstraps from a new quorum leader whose
+    /// history supersedes the local one.
+    ///
+    /// Deletion happens first so a crash mid-reset can only leave a
+    /// blank node (which re-bootstraps again on the leader's next
+    /// contact), never a stale higher-LSN snapshot that recovery would
+    /// prefer over the installed one.
+    pub fn reset_to(&mut self, snap: &SnapshotState) -> Result<()> {
+        let snap_dir = self.opts.data_dir.join("snap");
+        let wal_dir = self.opts.data_dir.join("wal");
+        for (_, path) in list(&snap_dir, "snap-", ".snap")? {
+            let _ = fs::remove_file(path);
+        }
+        for (_, path) in list(&wal_dir, "seg-", ".log")? {
+            let _ = fs::remove_file(path);
+        }
+        sync_dir(&snap_dir)?;
+        sync_dir(&wal_dir)?;
+        let tmp = snap_dir.join("snap.tmp");
+        let finali = snap_dir.join(format!("snap-{:020}.snap", snap.lsn));
+        {
+            let mut f = File::create(&tmp)?;
+            f.write_all(&snap.encode())?;
+            f.sync_all()?;
+        }
+        fs::rename(&tmp, &finali)?;
+        sync_dir(&snap_dir)?;
+        self.next_lsn = snap.lsn + 1;
+        let fresh = wal_dir.join(format!("seg-{:020}.log", self.next_lsn));
+        self.seg = OpenOptions::new().create(true).append(true).open(&fresh)?;
+        self.seg_bytes = 0;
+        self.last_sync = Instant::now();
+        self.since_snapshot = 0;
+        sync_dir(&wal_dir)?;
+        Ok(())
+    }
+
     fn segment_path(&self) -> PathBuf {
         // The live segment's first lsn is next_lsn minus what it holds;
         // after a rotate it is exactly next_lsn.  We only need this
@@ -714,6 +755,78 @@ fn prune(data_dir: &Path, snap_lsn: u64, live_segment: PathBuf) -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// Durably persist election state: the manager's current term, who it
+/// voted for in that term, and the term under which its log head was
+/// accepted (the Raft "last log term", used for election
+/// up-to-dateness).  A CRC-framed sidecar (`<data_dir>/term`) next to
+/// the WAL, written tmp + fsync + rename: forgetting a vote across a
+/// crash would let a node vote twice in one term and elect two leaders,
+/// and forgetting the accepted term would let a long stale-term log
+/// outvote a shorter log holding newer commits.
+pub fn save_term(
+    data_dir: &Path,
+    term: u64,
+    voted_for: Option<&str>,
+    accepted_term: u64,
+) -> Result<()> {
+    fs::create_dir_all(data_dir)?;
+    let voted = voted_for.unwrap_or("");
+    let mut body = Vec::with_capacity(20 + voted.len());
+    body.extend_from_slice(&term.to_le_bytes());
+    body.extend_from_slice(&accepted_term.to_le_bytes());
+    body.extend_from_slice(&(voted.len() as u32).to_le_bytes());
+    body.extend_from_slice(voted.as_bytes());
+    let mut buf = Vec::with_capacity(8 + body.len());
+    buf.extend_from_slice(b"GTRM");
+    buf.extend_from_slice(&crc32(&body).to_le_bytes());
+    buf.extend_from_slice(&body);
+    let tmp = data_dir.join("term.tmp");
+    let finali = data_dir.join("term");
+    {
+        let mut f = File::create(&tmp)?;
+        f.write_all(&buf)?;
+        f.sync_all()?;
+    }
+    fs::rename(&tmp, &finali)?;
+    sync_dir(data_dir)
+}
+
+/// Load the persisted `(term, voted_for, accepted_term)`: `Ok(None)`
+/// when no term file exists (a fresh node), loud `Err` on any
+/// corruption — guessing at election state risks a double vote.
+#[allow(clippy::type_complexity)]
+pub fn load_term(data_dir: &Path) -> Result<Option<(u64, Option<String>, u64)>> {
+    let path = data_dir.join("term");
+    let bytes = match fs::read(&path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e.into()),
+    };
+    let fail = |why: &str| Error::Proto(format!("term file {}: {why}", path.display()));
+    if bytes.len() < 28 || &bytes[..4] != b"GTRM" {
+        return Err(fail("bad magic or truncated"));
+    }
+    let crc = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    let body = &bytes[8..];
+    if crc32(body) != crc {
+        return Err(fail("crc mismatch"));
+    }
+    let term = u64::from_le_bytes(body[..8].try_into().unwrap());
+    let accepted = u64::from_le_bytes(body[8..16].try_into().unwrap());
+    let len = u32::from_le_bytes(body[16..20].try_into().unwrap()) as usize;
+    if body.len() != 20 + len {
+        return Err(fail("bad voted-for length"));
+    }
+    let voted = if len == 0 {
+        None
+    } else {
+        Some(
+            String::from_utf8(body[20..].to_vec()).map_err(|_| fail("voted-for not utf-8"))?,
+        )
+    };
+    Ok(Some((term, voted, accepted)))
 }
 
 fn sync_dir(dir: &Path) -> Result<()> {
@@ -1138,5 +1251,63 @@ mod tests {
         let r = recover(&opts).unwrap();
         assert_eq!(r.records.len(), 30);
         assert_eq!(r.wal.next_lsn(), 31);
+    }
+
+    #[test]
+    fn term_roundtrip_absent_and_corrupt() {
+        let t = TempDir::new("wal-term");
+        // Absent: a fresh node has no election state.
+        assert_eq!(load_term(&t.0).unwrap(), None);
+        save_term(&t.0, 3, Some("127.0.0.1:7100"), 2).unwrap();
+        assert_eq!(
+            load_term(&t.0).unwrap(),
+            Some((3, Some("127.0.0.1:7100".into()), 2))
+        );
+        // Overwrite with a bare term (vote cleared on term bump).
+        save_term(&t.0, 4, None, 2).unwrap();
+        assert_eq!(load_term(&t.0).unwrap(), Some((4, None, 2)));
+        // Corruption fails loudly, never guesses.
+        let path = t.0.join("term");
+        let mut bytes = fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        fs::write(&path, &bytes).unwrap();
+        assert!(load_term(&t.0).is_err());
+        fs::write(&path, b"XX").unwrap();
+        assert!(load_term(&t.0).is_err());
+    }
+
+    #[test]
+    fn reset_to_discards_divergent_higher_lsn_tail() {
+        let t = TempDir::new("wal-reset");
+        let opts = strict(&t.0);
+        let mut r = recover(&opts).unwrap();
+        // A local tail 1..=10 that a new leader's history supersedes.
+        append_n(&mut r.wal, 1, 10);
+        // The leader's snapshot covers only lsn 4: lower than our tail.
+        let snap = SnapshotState {
+            lsn: 4,
+            files: vec![],
+            blocks: vec![],
+            nodes: vec!["n:1".into()],
+            leases: vec![],
+            next_lease: 7,
+        };
+        r.wal.reset_to(&snap).unwrap();
+        assert_eq!(r.wal.next_lsn(), 5);
+        // Appends continue densely from the snapshot.
+        append_n(&mut r.wal, 5, 3);
+        drop(r);
+        let rec = recover(&opts).unwrap();
+        let got = rec.snapshot.unwrap();
+        assert_eq!(got.lsn, 4);
+        assert_eq!(got.next_lease, 7);
+        // Only the post-reset records survive — lsns 5..=7, nothing
+        // from the divergent 10-record tail.
+        assert_eq!(
+            rec.records.iter().map(|(l, _)| *l).collect::<Vec<_>>(),
+            vec![5, 6, 7]
+        );
+        assert_eq!(rec.wal.next_lsn(), 8);
     }
 }

@@ -18,7 +18,10 @@ use std::time::Duration;
 
 use gpustore::config::{ClientConfig, ClusterConfig};
 use gpustore::hashgpu::{CpuEngine, WindowHashMode};
-use gpustore::store::{Cluster, FileWriter, Sai};
+use gpustore::net::Listener;
+use gpustore::store::{
+    BlockMeta, Cluster, FileWriter, Follower, Manager, ManagerState, Msg, Role, Sai,
+};
 use gpustore::util::Rng;
 use gpustore::wal::DurabilityOpts;
 
@@ -91,6 +94,28 @@ fn durable_cluster(dir: &TempDir) -> Cluster {
     .unwrap()
 }
 
+/// `durable_cluster` with a three-member manager quorum (member 0 the
+/// initial leader): the smallest group that survives the loss of any
+/// one member.  Each member journals under its own `m<i>` subdirectory
+/// of `dir`.
+fn quorum_cluster(dir: &TempDir) -> Cluster {
+    Cluster::spawn(ClusterConfig {
+        nodes: 4,
+        link_bps: 1e9,
+        shape: false,
+        replication: 1,
+        lease_timeout: LEASE,
+        managers: 3,
+        durability: Some(DurabilityOpts {
+            data_dir: dir.path().to_path_buf(),
+            sync_interval: Duration::ZERO,
+            snapshot_every: 1_000_000,
+        }),
+        ..ClusterConfig::default()
+    })
+    .unwrap()
+}
+
 fn client(cluster: &Cluster) -> Sai {
     let cfg = ClientConfig {
         block_size: 64 * 1024,
@@ -137,6 +162,51 @@ impl Hiccup {
     /// state from the cluster's data dir (snapshot + log replay).
     fn restart_manager(cluster: &Cluster) {
         cluster.restart_manager().unwrap();
+    }
+
+    /// Cut the network between two endpoints (both directions) in the
+    /// process-global partition table.  Peer replication, elections and
+    /// follower polls consult the table; client↔manager and node
+    /// traffic is unaffected, exactly like a switch-level partition of
+    /// the management VLAN.  Keys are this test's own ephemeral
+    /// addresses, so concurrently running tests never interfere.
+    fn partition(a: &str, b: &str) {
+        gpustore::store::partition::partition(a, b);
+    }
+
+    /// Restore the network between two endpoints.
+    fn heal(a: &str, b: &str) {
+        gpustore::store::partition::heal(a, b);
+    }
+
+    /// Isolate quorum member `i` from every other member.
+    fn isolate_manager(cluster: &Cluster, i: usize) {
+        let addrs = cluster.manager_addrs();
+        for (j, a) in addrs.iter().enumerate() {
+            if j != i {
+                Hiccup::partition(&addrs[i], a);
+            }
+        }
+    }
+
+    /// Reconnect quorum member `i` to every other member.
+    fn rejoin_manager(cluster: &Cluster, i: usize) {
+        let addrs = cluster.manager_addrs();
+        for (j, a) in addrs.iter().enumerate() {
+            if j != i {
+                Hiccup::heal(&addrs[i], a);
+            }
+        }
+    }
+
+    /// Stand member `i` for election right now (the deterministic
+    /// equivalent of its election timer firing first) and assert it
+    /// wins.
+    fn elect(cluster: &Cluster, i: usize) {
+        assert!(
+            cluster.manager_at(i).state().campaign().unwrap(),
+            "member {i} should win the election"
+        );
     }
 }
 
@@ -664,4 +734,318 @@ fn recovered_claims_of_killed_writer_still_lapse() {
     let rep = sai.write_file("orphan.bin", &data).unwrap();
     assert_eq!(rep.new_blocks, 10, "every block re-transferred");
     assert_eq!(sai.read_file("orphan.bin").unwrap(), data);
+}
+
+// ---------------------------------------------------------------------
+// PR-8 partition matrix: quorum leader election over the shipped WAL.
+// ---------------------------------------------------------------------
+
+/// A file's committed block map, straight off one manager's state.
+fn block_map(s: &ManagerState, file: &str) -> Vec<BlockMeta> {
+    match s.handle(Msg::GetBlockMap { file: file.into() }) {
+        Msg::BlockMap { blocks, .. } => blocks,
+        other => panic!("no block map for {file}: {other:?}"),
+    }
+}
+
+/// The committed-prefix agreement invariant: on every LSN both members
+/// retain, the committed records must be byte-identical (compared by
+/// CRC).  Disjoint retained windows vacuously agree.
+fn assert_crcs_agree(who: &str, a: &[(u64, u32)], b: &[(u64, u32)]) {
+    let bm: std::collections::HashMap<u64, u32> = b.iter().copied().collect();
+    for (lsn, crc) in a {
+        if let Some(other) = bm.get(lsn) {
+            assert_eq!(
+                crc, other,
+                "{who}: committed records diverge at lsn {lsn}"
+            );
+        }
+    }
+}
+
+/// Election smoke (the CI scenario): kill the leader of a 3-member
+/// group and drive a surviving member's election *timer* (clock jump +
+/// tick, no sleeps) — it wins a quorum of votes and serves the next
+/// write; everything committed under the old leader stays readable
+/// byte-exact.
+#[test]
+fn killed_leader_quorum_elects_replacement_serving_writes() {
+    let dir = TempDir::new("elect");
+    let cluster = quorum_cluster(&dir);
+    let sai = client(&cluster);
+    let v0 = Rng::new(80).bytes(100_000);
+    sai.write_file("before.bin", &v0).unwrap();
+    assert_eq!(cluster.leader_idx(), Some(0), "member 0 leads initially");
+
+    Hiccup::crash_manager(&cluster); // member 0, the leader
+    // Jump member 1's clock past the longest election timeout
+    // (base 1 s + 300 ms stagger per rank) and tick: its timer fires,
+    // it campaigns, and member 2's vote makes the quorum of 2.
+    cluster.manager_at(1).state().advance_clock(Duration::from_secs(2));
+    wait_until("a surviving member takes leadership", || {
+        cluster.tick_managers();
+        matches!(cluster.leader_idx(), Some(i) if i != 0)
+    });
+    let leader = cluster.leader_idx().unwrap();
+    assert!(cluster.manager_at(leader).state().current_term() > 1);
+
+    // The same client rides over: its cached connection EOFs against
+    // the dead listener, and bootstrap rotation finds the new leader.
+    let v1 = Rng::new(81).bytes(100_000);
+    sai.write_file("after.bin", &v1).unwrap();
+    assert_eq!(sai.read_file("after.bin").unwrap(), v1);
+    assert_eq!(
+        sai.read_file("before.bin").unwrap(),
+        v0,
+        "pre-election commits survive the leader"
+    );
+}
+
+/// Partition matrix (1/3): the leader is partitioned from both peers
+/// mid-write.  The in-flight writer's next control call fails on the
+/// old leader with "no quorum", the client rotates to the freshly
+/// elected leader, and the commit lands there byte-exact — with zero
+/// stranded claims.
+#[test]
+fn leader_partitioned_mid_write_writer_redirects_and_commits() {
+    let dir = TempDir::new("part-write");
+    let cluster = quorum_cluster(&dir);
+    let sai = client(&cluster);
+    let v0 = Rng::new(82).bytes(100_000);
+    sai.write_file("base.bin", &v0).unwrap();
+
+    // In-flight write: two full 256 KB batches (8 blocks) allocated and
+    // transferred under the old leader, the 75 KB tail still buffered
+    // client-side.
+    let data = Rng::new(83).bytes(600_000);
+    let mut w = sai.create("inflight.bin").unwrap();
+    w.write_all(&data).unwrap();
+    wait_until("pre-partition transfers", || cluster.storage_stats().0 == 10);
+
+    // The leader drops off the management network (it is still alive
+    // and still believes it leads); member 1 takes over.
+    Hiccup::isolate_manager(&cluster, 0);
+    Hiccup::elect(&cluster, 1);
+
+    // close() allocates the tail batch and commits.  Both ops hit the
+    // deposed leader first, fail loudly with "no quorum", and redirect;
+    // the claims and lease made under term 1 were quorum-committed, so
+    // the new leader honors them.
+    let rep = w.close().unwrap();
+    assert_eq!(rep.blocks, 10);
+    assert_eq!(
+        sai.read_file("inflight.bin").unwrap(),
+        data,
+        "commit is byte-exact on the new leader"
+    );
+
+    let stats = cluster.manager_at(1).state().block_stats();
+    assert_eq!(stats.pending_claims, 0, "zero stranded claims");
+
+    Hiccup::rejoin_manager(&cluster, 0);
+}
+
+/// Partition matrix (2/3): a symmetric partition heals.  The deposed
+/// leader — which grew an *uncommitted* WAL tail while cut off — steps
+/// down on the first higher-term heartbeat, re-bootstraps from the new
+/// leader, and its divergent tail is gone: roles, terms, LSNs and full
+/// snapshots converge.
+#[test]
+fn healed_partition_deposed_leader_rejoins_and_discards_tail() {
+    let dir = TempDir::new("part-heal");
+    let cluster = quorum_cluster(&dir);
+    let sai = client(&cluster);
+    let v0 = Rng::new(84).bytes(100_000);
+    sai.write_file("base.bin", &v0).unwrap();
+
+    Hiccup::isolate_manager(&cluster, 0);
+    let s0 = cluster.manager_at(0).state();
+    let lsn_before = s0.last_lsn();
+    let commit_before = s0.commit_lsn();
+
+    // The cut-off leader still accepts a mutation locally, appends it,
+    // then fails the quorum barrier: the client sees a loud error, the
+    // record stays as an uncommitted tail only this member has.
+    let r = s0.handle_replicated(Msg::CommitBlockMap {
+        file: "tail.bin".into(),
+        lease: 0,
+        blocks: vec![],
+    });
+    assert!(matches!(&r, Msg::Err(e) if e.starts_with("no quorum")), "got {r:?}");
+    assert!(s0.last_lsn() > lsn_before, "tail appended locally");
+    assert_eq!(s0.commit_lsn(), commit_before, "tail not committed");
+
+    // The majority elects member 1 and commits real work without the
+    // old leader.
+    Hiccup::elect(&cluster, 1);
+    let v1 = Rng::new(85).bytes(100_000);
+    sai.write_file("after.bin", &v1).unwrap();
+
+    // Heal.  Ticking lets the stale leader heartbeat, learn the higher
+    // term, step down, and re-bootstrap from the new leader.
+    Hiccup::rejoin_manager(&cluster, 0);
+    let s1 = cluster.manager_at(1).state();
+    wait_until("deposed leader rejoins as follower", || {
+        cluster.tick_managers();
+        s0.role() == Role::Follower
+            && s0.current_term() == s1.current_term()
+            && s0.last_lsn() == s1.last_lsn()
+            && s0.commit_lsn() == s1.commit_lsn()
+    });
+
+    // The uncommitted tail is discarded, wholesale.
+    let r = s0.handle(Msg::GetBlockMap { file: "tail.bin".into() });
+    assert!(matches!(r, Msg::Err(_)), "divergent tail file must be gone: {r:?}");
+    assert_eq!(
+        s0.snapshot_state(),
+        s1.snapshot_state(),
+        "rejoined member's state matches the leader's exactly"
+    );
+    let s2 = cluster.manager_at(2).state();
+    assert_crcs_agree("m1 vs m2", &s1.committed_crcs(), &s2.committed_crcs());
+    assert_crcs_agree("m0 vs m1", &s0.committed_crcs(), &s1.committed_crcs());
+    assert_eq!(sai.read_file("after.bin").unwrap(), v1);
+}
+
+/// Partition matrix (3/3): a leader stranded in the minority makes no
+/// progress.  A client bootstrapped only at the minority leader fails
+/// loudly after bounded redirect rotation; nothing commits on the
+/// minority side and the majority's logs are untouched.
+#[test]
+fn minority_partitioned_leader_fails_writes_loudly() {
+    let dir = TempDir::new("minority");
+    let cluster = quorum_cluster(&dir);
+    let addrs = cluster.manager_addrs();
+    // Bootstrapped ONLY at member 0: when that member is cut off, this
+    // client has nowhere else to rotate to.
+    let cfg = ClientConfig {
+        block_size: 64 * 1024,
+        write_buffer: 256 * 1024,
+        ..ClientConfig::default()
+    };
+    let engine = Arc::new(CpuEngine::new(4, 4096, WindowHashMode::Rolling));
+    let sai0 = Sai::connect(&addrs[0], cfg, engine, None).unwrap();
+
+    Hiccup::isolate_manager(&cluster, 0);
+    let s0 = cluster.manager_at(0).state();
+    let commit_before = s0.commit_lsn();
+    let majority_lsns = (
+        cluster.manager_at(1).state().last_lsn(),
+        cluster.manager_at(2).state().last_lsn(),
+    );
+
+    let err = sai0
+        .write_file("minority.bin", &Rng::new(86).bytes(10_000))
+        .unwrap_err();
+    let msg = format!("{err}");
+    assert!(
+        msg.contains("no quorum") || msg.contains("leader"),
+        "minority write must fail loudly, got: {msg}"
+    );
+
+    assert_eq!(
+        s0.commit_lsn(),
+        commit_before,
+        "no commit progress in the minority"
+    );
+    assert!(
+        s0.last_lsn() > commit_before,
+        "the minority leader tried (uncommitted tail) — and got nowhere"
+    );
+    assert_eq!(
+        (
+            cluster.manager_at(1).state().last_lsn(),
+            cluster.manager_at(2).state().last_lsn(),
+        ),
+        majority_lsns,
+        "majority logs untouched by minority attempts"
+    );
+    assert_eq!(cluster.manager_at(1).state().role(), Role::Follower);
+
+    Hiccup::rejoin_manager(&cluster, 0);
+}
+
+/// PR-7 regression (satellite 1): the old `Follower::promote` path
+/// split-brains when the primary is partitioned-but-alive — both sides
+/// serve and commit conflicting maps for the same file.  The new
+/// quorum-gated path refuses loudly in the identical scenario and
+/// leaves the primary's authority untouched.
+#[test]
+fn blind_promotion_diverges_where_gated_promotion_refuses() {
+    let primary = Manager::spawn("127.0.0.1:0").unwrap();
+    let s = primary.state();
+    s.handle(Msg::NodeJoin {
+        addr: "127.0.0.1:1".into(),
+    });
+    let meta = |i: u8| BlockMeta {
+        hash: [i; 16],
+        len: 100,
+        replicas: vec![0],
+    };
+    s.handle(Msg::CommitBlockMap {
+        file: "seed".into(),
+        lease: 0,
+        blocks: vec![meta(1)],
+    });
+
+    // --- Old path: the follower loses contact and promotes blindly.
+    let mut blind = Follower::connect(primary.addr(), LEASE).unwrap();
+    blind.set_fault_id("blind-f");
+    blind.poll().unwrap();
+    Hiccup::partition("blind-f", primary.addr());
+    assert!(blind.poll().is_err(), "partitioned poll must fail");
+    let mut promoted = blind.promote("127.0.0.1:0").unwrap();
+
+    // Two managers now serve.  Each accepts a commit for the same
+    // name: split-brain, observable as divergent block maps.
+    s.handle_replicated(Msg::CommitBlockMap {
+        file: "split".into(),
+        lease: 0,
+        blocks: vec![meta(2)],
+    });
+    promoted.state().handle_replicated(Msg::CommitBlockMap {
+        file: "split".into(),
+        lease: 0,
+        blocks: vec![meta(3)],
+    });
+    assert_ne!(
+        block_map(s, "split"),
+        block_map(promoted.state(), "split"),
+        "blind promotion accepted conflicting histories"
+    );
+    promoted.shutdown();
+
+    // --- New path: same partition, quorum-gated promotion.  The
+    // candidate needs the primary's vote (quorum of 2 in a 2-member
+    // group) and cannot reach it, so it refuses to serve at all.
+    let mut gated = Follower::connect(primary.addr(), LEASE).unwrap();
+    gated.set_fault_id("gated-f");
+    gated.poll().unwrap();
+    // Pin the promotion address up front so the partition table can
+    // cut the candidate's vote traffic exactly like its poll traffic.
+    let probe = Listener::bind("127.0.0.1:0").unwrap();
+    let gate_addr = probe.local_addr().unwrap();
+    drop(probe);
+    Hiccup::partition("gated-f", primary.addr());
+    Hiccup::partition(&gate_addr, primary.addr());
+    assert!(gated.poll().is_err());
+
+    let err = gated
+        .promote_gated(&gate_addr, vec![primary.addr().to_string()], None)
+        .unwrap_err();
+    let msg = format!("{err}");
+    assert!(
+        msg.contains("promotion refused"),
+        "gated promotion must refuse loudly, got: {msg}"
+    );
+
+    // No divergence: the primary's map is untouched and it never even
+    // saw a competing term.
+    assert_eq!(block_map(s, "split"), vec![meta(2)]);
+    assert_eq!(s.role(), Role::Leader);
+    assert_eq!(s.current_term(), 0, "solo primary never learned of a campaign");
+
+    Hiccup::heal("blind-f", primary.addr());
+    Hiccup::heal("gated-f", primary.addr());
+    Hiccup::heal(&gate_addr, primary.addr());
 }

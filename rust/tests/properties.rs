@@ -226,6 +226,48 @@ fn prop_proto_roundtrip() {
                 msg: format!("errfor-{seed}"),
             },
             Msg::Err(format!("err-{seed}")),
+            Msg::RequestVote {
+                term: rng.next_u64(),
+                candidate: format!("10.0.0.{seed}:7100"),
+                last_term: rng.next_u64(),
+                last_lsn: rng.next_u64(),
+            },
+            Msg::VoteReply {
+                term: rng.next_u64(),
+                granted: rng.next_u64() % 2 == 0,
+            },
+            Msg::Replicate {
+                term: rng.next_u64(),
+                leader: format!("10.0.0.{seed}:7100"),
+                prev_lsn: rng.next_u64(),
+                commit_lsn: rng.next_u64(),
+                records: (0..rng.range(1, 4))
+                    .map(|i| WalEntry {
+                        lsn: i as u64,
+                        data: {
+                            let n = rng.range(0, 200);
+                            rng.bytes(n)
+                        },
+                    })
+                    .collect(),
+            },
+            // The empty-records form is the heartbeat — it must survive
+            // the wire like any other frame.
+            Msg::Replicate {
+                term: rng.next_u64(),
+                leader: format!("10.0.0.{seed}:7100"),
+                prev_lsn: rng.next_u64(),
+                commit_lsn: rng.next_u64(),
+                records: vec![],
+            },
+            Msg::ReplicateAck {
+                term: rng.next_u64(),
+                last_lsn: rng.next_u64(),
+                ok: rng.next_u64() % 2 == 0,
+            },
+            Msg::NotLeader {
+                hint: format!("10.0.0.{seed}:7100"),
+            },
         ];
         let mut buf = Vec::new();
         for m in &msgs {
@@ -457,7 +499,7 @@ fn prop_proto_truncation_robustness() {
         len: 64 + i as u32,
         replicas: vec![0, 1],
     };
-    // One representative per wire tag (1..=23), with non-empty payloads
+    // One representative per wire tag (1..=38), with non-empty payloads
     // wherever the message has any fields.
     let msgs = vec![
         Msg::GetBlockMap { file: "f".into() },
@@ -551,11 +593,39 @@ fn prop_proto_truncation_robustness() {
                 },
             ],
         },
+        Msg::RequestVote {
+            term: 7,
+            candidate: "10.0.0.1:7000".into(),
+            last_term: 6,
+            last_lsn: 41,
+        },
+        Msg::VoteReply {
+            term: 7,
+            granted: true,
+        },
+        Msg::Replicate {
+            term: 7,
+            leader: "10.0.0.1:7000".into(),
+            prev_lsn: 40,
+            commit_lsn: 39,
+            records: vec![WalEntry {
+                lsn: 41,
+                data: vec![23; 9],
+            }],
+        },
+        Msg::ReplicateAck {
+            term: 7,
+            last_lsn: 41,
+            ok: true,
+        },
+        Msg::NotLeader {
+            hint: "10.0.0.1:7000".into(),
+        },
     ];
     // Every tag is represented exactly once.
     let mut tags: Vec<u8> = msgs.iter().map(|m| m.encode()[4]).collect();
     tags.sort_unstable();
-    assert_eq!(tags, (1..=33).collect::<Vec<u8>>(), "tag coverage");
+    assert_eq!(tags, (1..=38).collect::<Vec<u8>>(), "tag coverage");
 
     for m in &msgs {
         let frame = m.encode();
@@ -583,7 +653,7 @@ fn prop_proto_truncation_robustness() {
     // Fuzz: random payload bytes against every tag (including unknown
     // tags) must never panic.
     let mut rng = Rng::new(0xF00D);
-    for tag in 0..=34u8 {
+    for tag in 0..=39u8 {
         for _ in 0..50 {
             let n = rng.range(0, 128);
             let p = rng.bytes(n);
@@ -1184,6 +1254,221 @@ fn prop_recovered_manager_state_equals_pre_crash() {
             recovered.snapshot_state(),
             want,
             "seed={seed}: recovered state diverged from pre-crash state"
+        );
+    }
+}
+
+/// PR-8 acceptance (consensus safety): under a seeded random schedule
+/// of mutations, member crashes/restarts, symmetric partitions, clock
+/// jumps, and forced elections across a 3-member manager quorum, the
+/// *committed* WAL prefixes of any two live members never diverge —
+/// checked record-by-record (by CRC) after every schedule step.  After
+/// healing and restarting everything, all members converge to the
+/// elected leader's exact snapshot state, and so does a member crashed
+/// and recovered from disk at the very end.
+#[test]
+fn prop_committed_prefixes_never_diverge() {
+    use std::time::Duration;
+
+    use gpustore::config::ClusterConfig;
+    use gpustore::store::partition as netsplit;
+    use gpustore::store::Cluster;
+    use gpustore::wal::DurabilityOpts;
+
+    /// First committed LSN (if any) on which the two members disagree.
+    fn crc_conflict(a: &[(u64, u32)], b: &[(u64, u32)]) -> Option<u64> {
+        let bm: std::collections::HashMap<u64, u32> = b.iter().copied().collect();
+        a.iter()
+            .find(|(lsn, crc)| bm.get(lsn).is_some_and(|other| other != crc))
+            .map(|(lsn, _)| *lsn)
+    }
+
+    for seed in 0..100u64 {
+        let dir = TempDir::new(&format!("quorum-{seed}"));
+        let cluster = Cluster::spawn(ClusterConfig {
+            nodes: 1,
+            link_bps: 1e9,
+            shape: false,
+            replication: 1,
+            lease_timeout: Duration::from_secs(30),
+            managers: 3,
+            durability: Some(DurabilityOpts {
+                data_dir: dir.0.clone(),
+                sync_interval: Duration::ZERO,
+                snapshot_every: 1_000_000,
+            }),
+            ..ClusterConfig::default()
+        })
+        .unwrap();
+        let addrs = cluster.manager_addrs();
+        let mut rng = Rng::new(0xC0_1D ^ (seed << 7));
+        // At most one member down at a time (a 3-member quorum cannot
+        // make progress with two down, so the schedule would degenerate).
+        let mut down: Option<usize> = None;
+
+        for step in 0..30 {
+            match rng.range(0, 10) {
+                // Mutations, applied through the current leader's full
+                // replication path (exactly what a client call does).
+                // "no quorum" rejections are part of the schedule: the
+                // record may strand as an uncommitted tail on a cut-off
+                // leader, and must never count as committed.
+                0..=4 => {
+                    let Some(l) = cluster.leader_idx() else {
+                        continue;
+                    };
+                    let file = format!("f{}", rng.range(0, 4));
+                    let msg = match rng.range(0, 4) {
+                        0 => {
+                            let mut hash = [0u8; 16];
+                            rng.fill(&mut hash);
+                            Msg::CommitBlockMap {
+                                file,
+                                lease: 0,
+                                blocks: vec![BlockMeta {
+                                    hash,
+                                    len: rng.range(1, 4096) as u32,
+                                    replicas: vec![0],
+                                }],
+                            }
+                        }
+                        1 => Msg::CommitBlockMap {
+                            file,
+                            lease: 0,
+                            blocks: vec![],
+                        },
+                        2 => Msg::OpenLease { file, write: false },
+                        _ => Msg::ReleaseBlocks {
+                            hashes: vec![[rng.range(0, 255) as u8; 16]],
+                        },
+                    };
+                    let _ = cluster.manager_at(l).state().handle_replicated(msg);
+                }
+                // Cut or heal a random member pair.
+                5 | 6 => {
+                    let a = rng.range(0, 3);
+                    let b = (a + 1 + rng.range(0, 2)) % 3;
+                    if rng.next_u64() % 2 == 0 {
+                        netsplit::partition(&addrs[a], &addrs[b]);
+                    } else {
+                        netsplit::heal(&addrs[a], &addrs[b]);
+                    }
+                }
+                // Crash a member (or restart the one that's down).
+                7 => match down {
+                    None => {
+                        let i = rng.range(0, 3);
+                        cluster.crash_manager_at(i);
+                        down = Some(i);
+                    }
+                    Some(i) => {
+                        cluster.restart_manager_at(i).unwrap();
+                        down = None;
+                    }
+                },
+                // Clock jump on a random member: election timers fire
+                // early on the next tick.
+                8 => {
+                    let i = rng.range(0, 3);
+                    if down != Some(i) {
+                        let ms = rng.range(100, 2000) as u64;
+                        cluster
+                            .manager_at(i)
+                            .state()
+                            .advance_clock(Duration::from_millis(ms));
+                    }
+                }
+                // Force a contested election: a random live member
+                // stands right now, leader or no leader.
+                _ => {
+                    let i = rng.range(0, 3);
+                    if down != Some(i) {
+                        let _ = cluster.manager_at(i).state().campaign();
+                    }
+                }
+            }
+            cluster.tick_managers();
+
+            // THE invariant: no two live members may disagree on any
+            // committed record, ever — mid-partition, mid-election,
+            // mid-crash included.
+            for a in 0..3usize {
+                for b in a + 1..3 {
+                    if down == Some(a) || down == Some(b) {
+                        continue;
+                    }
+                    let ca = cluster.manager_at(a).state().committed_crcs();
+                    let cb = cluster.manager_at(b).state().committed_crcs();
+                    if let Some(lsn) = crc_conflict(&ca, &cb) {
+                        panic!(
+                            "seed={seed} step={step}: members {a} and {b} \
+                             committed divergent records at lsn {lsn}"
+                        );
+                    }
+                }
+            }
+        }
+
+        // Heal the world, restart the dead, and let the group converge.
+        for a in 0..3 {
+            for b in a + 1..3 {
+                netsplit::heal(&addrs[a], &addrs[b]);
+            }
+        }
+        if let Some(i) = down.take() {
+            cluster.restart_manager_at(i).unwrap();
+        }
+        let mut converged = false;
+        for _ in 0..400 {
+            if cluster.leader_idx().is_none() {
+                let _ = cluster.manager_at(rng.range(0, 3)).state().campaign();
+            }
+            cluster.tick_managers();
+            if let Some(l) = cluster.leader_idx() {
+                let lead = cluster.manager_at(l).state();
+                let target = (lead.current_term(), lead.last_lsn(), lead.last_lsn());
+                if (0..3).all(|i| {
+                    let s = cluster.manager_at(i).state();
+                    (s.current_term(), s.last_lsn(), s.commit_lsn()) == target
+                }) {
+                    converged = true;
+                    break;
+                }
+            }
+        }
+        assert!(converged, "seed={seed}: quorum failed to converge after healing");
+
+        // Every member ends bit-identical to the elected leader.
+        let l = cluster.leader_idx().unwrap();
+        let want = cluster.manager_at(l).state().snapshot_state();
+        for i in 0..3 {
+            assert_eq!(
+                cluster.manager_at(i).state().snapshot_state(),
+                want,
+                "seed={seed}: member {i} diverged from the leader after healing"
+            );
+        }
+
+        // And a member recovered from disk at the very end matches too:
+        // crash a follower, restart it, let it catch up.
+        let j = (l + 1) % 3;
+        cluster.crash_manager_at(j);
+        cluster.restart_manager_at(j).unwrap();
+        let mut caught_up = false;
+        for _ in 0..400 {
+            cluster.tick_managers();
+            let s = cluster.manager_at(j).state();
+            let lead = cluster.manager_at(l).state();
+            if s.last_lsn() == lead.last_lsn() && s.commit_lsn() == lead.commit_lsn() {
+                caught_up = true;
+                break;
+            }
+        }
+        assert!(caught_up, "seed={seed}: recovered member {j} failed to catch up");
+        assert_eq!(
+            cluster.manager_at(j).state().snapshot_state(),
+            want,
+            "seed={seed}: disk-recovered member {j} diverged from the leader"
         );
     }
 }
