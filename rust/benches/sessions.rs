@@ -1,0 +1,199 @@
+//! Serve-loop scalability benchmark (PR 9): thousands of concurrent
+//! client sessions against one manager, event-driven reactor vs the
+//! legacy thread-per-connection accept loop.
+//!
+//!     cargo bench --bench sessions            # full matrix (up to 1k+)
+//!     cargo bench --bench sessions -- quick   # CI smoke subset
+//!
+//! The workload models the control-plane edge the reactor was built
+//! for: many short-lived sessions, each a burst of small metadata
+//! round-trips (`ListFiles`) with connection churn every couple of
+//! ops — exactly the pattern where thread-per-connection pays a thread
+//! spawn + teardown per session while the event loop pays one `poll`
+//! registration.  Every open session holds a live socket, so at 1024
+//! sessions the thread-mode server carries 1024 blocked threads and
+//! the event-mode server the same fixed worker pool it had at 16.
+//!
+//! Results (sessions-vs-throughput/latency curve, both modes) are
+//! printed as a table and flushed to `BENCH_pr9.json` at the repo
+//! root; CI gates on event-driven beating thread-per-connection at
+//! 256 sessions.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use gpustore::config::ServeMode;
+use gpustore::net::{Conn, Listener};
+use gpustore::store::proto::Msg;
+use gpustore::store::{policy_for, Manager, ManagerState};
+
+/// Lease window: irrelevant to the workload (no leases opened), but
+/// long so background expiry never logs anything mid-measurement.
+const LEASE: Duration = Duration::from_secs(600);
+
+/// Ops each session performs (quick mode halves this).
+const OPS_PER_SESSION: usize = 12;
+
+/// Reconnect every this many ops — the churn that makes the serve
+/// loop's accept/teardown cost visible.
+const CHURN_EVERY: usize = 2;
+
+/// Driver threads multiplexing the sessions (the bench host has few
+/// cores; the *server* is the system under test).
+const MAX_DRIVERS: usize = 64;
+
+struct Row {
+    mode: &'static str,
+    sessions: usize,
+    ops: usize,
+    ops_per_sec: f64,
+    p50_us: f64,
+    p99_us: f64,
+}
+
+fn mode_name(mode: ServeMode) -> &'static str {
+    match mode {
+        ServeMode::Event => "event",
+        ServeMode::Thread => "thread",
+    }
+}
+
+/// One `ListFiles` round-trip; returns the latency in microseconds.
+fn one_op(conn: &mut Conn) -> f64 {
+    let t = Instant::now();
+    Msg::ListFiles.write_to(conn).expect("send");
+    match Msg::read_from(conn).expect("recv") {
+        Some(Msg::Files { .. }) => {}
+        other => panic!("unexpected reply: {other:?}"),
+    }
+    t.elapsed().as_secs_f64() * 1e6
+}
+
+/// Run `sessions` concurrent sessions against a fresh manager serving
+/// in `mode`; every session keeps a socket open for its whole life and
+/// reconnects every [`CHURN_EVERY`] ops.
+fn bench_case(mode: ServeMode, sessions: usize, ops_per_session: usize) -> Row {
+    let state = Arc::new(
+        ManagerState::with_durability(policy_for(1), LEASE, None).expect("manager state"),
+    );
+    let listener = Listener::bind("127.0.0.1:0").expect("bind");
+    let mut mgr =
+        Manager::serve_listener_opts(listener, state, mode, 0).expect("serve");
+    let addr = mgr.addr().to_string();
+
+    let drivers = sessions.min(MAX_DRIVERS);
+    let per_driver = sessions / drivers;
+    assert_eq!(sessions % drivers, 0, "session counts divide the driver pool");
+
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..drivers)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut conns: Vec<Conn> = (0..per_driver)
+                    .map(|_| Conn::connect(&addr).expect("connect"))
+                    .collect();
+                let mut lat = Vec::with_capacity(per_driver * ops_per_session);
+                for round in 0..ops_per_session {
+                    for conn in conns.iter_mut() {
+                        lat.push(one_op(conn));
+                    }
+                    if (round + 1) % CHURN_EVERY == 0 && round + 1 < ops_per_session {
+                        for conn in conns.iter_mut() {
+                            *conn = Conn::connect(&addr).expect("reconnect");
+                        }
+                    }
+                }
+                lat
+            })
+        })
+        .collect();
+    let mut lat: Vec<f64> = Vec::with_capacity(sessions * ops_per_session);
+    for h in handles {
+        lat.extend(h.join().expect("driver"));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    mgr.shutdown();
+
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let ops = lat.len();
+    let pct = |p: f64| lat[((ops as f64 * p) as usize).min(ops - 1)];
+    Row {
+        mode: mode_name(mode),
+        sessions,
+        ops,
+        ops_per_sec: ops as f64 / wall,
+        p50_us: pct(0.50),
+        p99_us: pct(0.99),
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| !a.starts_with('-'))
+        .collect();
+    let quick = args.iter().any(|a| a == "quick");
+
+    let session_counts: Vec<usize> = if quick {
+        vec![64, 256]
+    } else {
+        vec![16, 64, 256, 1024]
+    };
+    let ops_per_session = if quick { OPS_PER_SESSION / 2 } else { OPS_PER_SESSION };
+
+    println!("== serve-loop scalability: sessions vs throughput/latency ==");
+    println!(
+        "{:<8} {:>8} {:>8} {:>12} {:>9} {:>9}",
+        "mode", "sessions", "ops", "ops/s", "p50 us", "p99 us"
+    );
+    let mut rows: Vec<Row> = Vec::new();
+    for &sessions in &session_counts {
+        for mode in [ServeMode::Thread, ServeMode::Event] {
+            let row = bench_case(mode, sessions, ops_per_session);
+            println!(
+                "{:<8} {:>8} {:>8} {:>12.0} {:>9.0} {:>9.0}",
+                row.mode, row.sessions, row.ops, row.ops_per_sec, row.p50_us, row.p99_us
+            );
+            rows.push(row);
+        }
+    }
+
+    // The headline comparison CI gates on.
+    let at = |mode: &str, sessions: usize| {
+        rows.iter()
+            .find(|r| r.mode == mode && r.sessions == sessions)
+            .map(|r| r.ops_per_sec)
+    };
+    if let (Some(ev), Some(th)) = (at("event", 256), at("thread", 256)) {
+        println!(
+            "\n@256 sessions: event {ev:.0} ops/s vs thread {th:.0} ops/s ({:+.1}%)",
+            (ev / th - 1.0) * 100.0
+        );
+    }
+
+    flush(&rows, quick);
+}
+
+fn flush(rows: &[Row], quick: bool) {
+    let mut out = String::from("{\n  \"bench\": \"sessions\",\n  \"unit\": \"ops/s\",\n");
+    out.push_str(&format!("  \"quick\": {quick},\n  \"results\": [\n"));
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"mode\": \"{}\", \"sessions\": {}, \"ops\": {}, \"ops_per_sec\": {:.0}, \
+             \"p50_us\": {:.1}, \"p99_us\": {:.1}}}{}\n",
+            r.mode,
+            r.sessions,
+            r.ops,
+            r.ops_per_sec,
+            r.p50_us,
+            r.p99_us,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_pr9.json", &out) {
+        Ok(()) => println!("\nwrote BENCH_pr9.json ({} rows)", rows.len()),
+        Err(e) => eprintln!("could not write BENCH_pr9.json: {e}"),
+    }
+}

@@ -49,6 +49,18 @@ impl HashEngineKind {
     }
 }
 
+/// How a node's / manager's serve path multiplexes connections (PR 9).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ServeMode {
+    /// Event-driven readiness loop + fixed worker pool (the default):
+    /// thousands of connections on a handful of threads.
+    #[default]
+    Event,
+    /// Legacy thread-per-connection serving, kept as the benchmark
+    /// baseline (`cargo bench --bench sessions` compares both).
+    Thread,
+}
+
 /// Client (SAI) configuration.
 #[derive(Debug, Clone)]
 pub struct ClientConfig {
@@ -266,6 +278,14 @@ pub struct ClusterConfig {
     /// majority, so 3 is the smallest count that survives losing a
     /// member.
     pub managers: usize,
+    /// Serve-path architecture for every node and manager in the
+    /// cluster (PR 9).  [`ServeMode::Event`] (the default) multiplexes
+    /// all connections over a reactor + worker pool; `Thread` keeps the
+    /// legacy thread-per-connection loops for baseline benchmarks.
+    pub serve_mode: ServeMode,
+    /// Worker threads per serve loop (`--serve-threads`); `0` picks the
+    /// built-in default.  Ignored in [`ServeMode::Thread`].
+    pub serve_threads: usize,
 }
 
 impl Default for ClusterConfig {
@@ -282,6 +302,8 @@ impl Default for ClusterConfig {
             hash_devices: 1,
             durability: None,
             managers: 1,
+            serve_mode: ServeMode::default(),
+            serve_threads: 0,
         }
     }
 }
@@ -364,6 +386,13 @@ mod tests {
         assert_eq!(p.min_size, c.cdc_min);
         assert_eq!(p.max_size, c.cdc_max);
         p.validate().unwrap();
+    }
+
+    #[test]
+    fn serve_mode_defaults_to_event() {
+        let c = ClusterConfig::default();
+        assert_eq!(c.serve_mode, ServeMode::Event);
+        assert_eq!(c.serve_threads, 0);
     }
 
     #[test]

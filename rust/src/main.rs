@@ -16,11 +16,14 @@ use std::collections::HashMap;
 use std::io::{Read as _, Write as _};
 use std::time::Duration;
 
-use gpustore::config::{CaMode, ClientConfig, ClusterConfig, HashEngineKind};
+use gpustore::config::{CaMode, ClientConfig, ClusterConfig, HashEngineKind, ServeMode};
 use gpustore::hashsvc::session_engine;
+use gpustore::net::Listener;
 use gpustore::store::manager::DEFAULT_LEASE_TIMEOUT;
 use gpustore::store::proto::MAX_REPLICAS;
-use gpustore::store::{policy_for, Cluster, Follower, Manager, ManagerState, Sai, StorageNode};
+use gpustore::store::{
+    policy_for, Cluster, Follower, Manager, ManagerState, NodeOpts, Sai, StorageNode,
+};
 use gpustore::util::{human_bytes, Rng};
 use gpustore::wal::DurabilityOpts;
 use gpustore::{Error, Result};
@@ -70,10 +73,12 @@ fn print_usage() {
         "gpustore — GPU-accelerated content-addressable storage \
          (TPDS'12 reproduction)\n\n\
          USAGE:\n  gpustore manager --listen ADDR [--replication N] [--lease-timeout SECS]\n\
+         \x20                [--serve-threads N]\n\
          \x20                [--data-dir DIR [--wal-sync MS] [--snapshot-every N]]\n\
          \x20                [--peers A,B[,..] [--advertise ADDR] [--initial-leader]]\n\
          \x20                [--follow ADDR [--peers A,B[,..]]]\n  \
-         gpustore node --listen ADDR --manager ADDR [--advertise ADDR] [--disk DIR]\n  \
+         gpustore node --listen ADDR --manager ADDR [--advertise ADDR] [--disk DIR]\n\
+         \x20             [--serve-threads N]\n  \
          gpustore write --manager ADDR [--mode fixed|cdc|none]\n\
          \x20                [--engine cpu|gpu|oracle] [--threads N]\n\
          \x20                [--inflight-mb MB] [--node-inflight N]\n\
@@ -85,7 +90,8 @@ fn print_usage() {
          gpustore ls --manager ADDR\n  \
          gpustore trace --manager ADDR --trace FILE [--seed N]\n  \
          gpustore demo [--replication N] [--lease-timeout SECS] [--data-dir DIR]\n\
-         \x20             [--hash-batch N] [--hash-linger-us US] [--hash-devices N]\n\n\
+         \x20             [--hash-batch N] [--hash-linger-us US] [--hash-devices N]\n\
+         \x20             [--serve-threads N] [--verbose]\n\n\
          Nodes register with the manager; clients discover them from it\n\
          (no --nodes flag).  `make artifacts` must have produced\n\
          artifacts/ for --engine gpu."
@@ -271,6 +277,25 @@ fn parse_lease_timeout(flags: &HashMap<String, String>) -> Result<Duration> {
     }
 }
 
+/// Parse `--serve-threads` (manager and node commands): `N >= 1` sizes
+/// the event reactor's worker pool, `0` selects the legacy
+/// thread-per-connection serve path (the benchmark baseline), absent
+/// means event mode with the built-in pool size.  Strict like the other
+/// knobs: malformed values fail loudly.
+fn parse_serve(flags: &HashMap<String, String>) -> Result<(ServeMode, usize)> {
+    match flags.get("serve-threads") {
+        None => Ok((ServeMode::default(), 0)),
+        Some(v) => match v.parse::<usize>() {
+            Ok(0) => Ok((ServeMode::Thread, 0)),
+            Ok(n) => Ok((ServeMode::Event, n)),
+            Err(_) => Err(Error::Config(format!(
+                "bad --serve-threads `{v}` (need a non-negative integer; 0 = \
+                 thread-per-connection)"
+            ))),
+        },
+    }
+}
+
 /// Parse the durability knobs: `--data-dir DIR` turns the write-ahead
 /// log on; `--wal-sync MS` (group-commit fsync interval, `0` = fsync
 /// every record) and `--snapshot-every N` refine it and therefore
@@ -350,11 +375,22 @@ fn cmd_manager(flags: &HashMap<String, String>) -> Result<()> {
         Some(o) => format!(", data dir {}", o.data_dir.display()),
         None => ", in-memory".into(),
     };
+    let (serve_mode, serve_threads) = parse_serve(flags)?;
+    let serving = match serve_mode {
+        ServeMode::Event => "event-driven",
+        ServeMode::Thread => "thread-per-conn",
+    };
     let Some(peers) = peers else {
-        let mgr = Manager::spawn_with_opts(listen, policy, lease_timeout, durability)?;
+        let state = std::sync::Arc::new(ManagerState::with_durability(
+            policy,
+            lease_timeout,
+            durability,
+        )?);
+        let mgr =
+            Manager::serve_listener_opts(Listener::bind(listen)?, state, serve_mode, serve_threads)?;
         println!(
             "metadata manager listening on {} (policy {name}, replication {replication}, \
-             lease timeout {lease_timeout:?}{durable})",
+             lease timeout {lease_timeout:?}, {serving}{durable})",
             mgr.addr()
         );
         loop {
@@ -387,11 +423,12 @@ fn cmd_manager(flags: &HashMap<String, String>) -> Result<()> {
         },
         term_dir,
     )?;
-    let mut mgr = Manager::serve(listen, state)?;
+    let mut mgr =
+        Manager::serve_listener_opts(Listener::bind(listen)?, state, serve_mode, serve_threads)?;
     mgr.start_ticker(MANAGER_TICK);
     println!(
         "quorum manager {} listening on {} (peers {}, {}policy {name}, replication \
-         {replication}, lease timeout {lease_timeout:?}{durable})",
+         {replication}, lease timeout {lease_timeout:?}, {serving}{durable})",
         advertise,
         mgr.addr(),
         peers.join(","),
@@ -469,10 +506,18 @@ fn cmd_node(flags: &HashMap<String, String>) -> Result<()> {
     // When binding a wildcard address, --advertise tells the manager
     // (and thus clients) how to reach this node.
     let advertise = flags.get("advertise").map(String::as_str);
-    let node = match flags.get("manager") {
-        Some(m) => StorageNode::spawn_advertised(listen, disk, m, advertise)?,
-        None => StorageNode::spawn_with(listen, disk)?,
-    };
+    let (serve_mode, serve_threads) = parse_serve(flags)?;
+    let node = StorageNode::spawn_opts(
+        listen,
+        NodeOpts {
+            disk_dir: disk,
+            manager: flags.get("manager").cloned(),
+            advertise: advertise.map(str::to_string),
+            serve_mode,
+            serve_threads,
+            ..NodeOpts::default()
+        },
+    )?;
     match node.node_id() {
         Some(id) => println!("storage node {id} listening on {} (joined manager)", node.addr()),
         None => println!("storage node listening on {} (standalone, no manager)", node.addr()),
@@ -625,6 +670,7 @@ fn cmd_demo(flags: &HashMap<String, String>) -> Result<()> {
     // client connected via `service_client` shares one policy.
     let mut knobs = ClientConfig::default();
     apply_hash_flags(flags, &mut knobs)?;
+    let (serve_mode, serve_threads) = parse_serve(flags)?;
     let cluster = Cluster::spawn(ClusterConfig {
         replication,
         lease_timeout,
@@ -632,6 +678,8 @@ fn cmd_demo(flags: &HashMap<String, String>) -> Result<()> {
         hash_linger_us: knobs.hash_linger_us,
         hash_devices: knobs.hash_devices,
         durability: durability.clone(),
+        serve_mode,
+        serve_threads,
         ..ClusterConfig::default()
     })?;
     let durable = match &durability {
@@ -661,6 +709,13 @@ fn cmd_demo(flags: &HashMap<String, String>) -> Result<()> {
     sai.open("demo")?.read_to_end(&mut back)?;
     assert_eq!(back, data);
     println!("read-back OK");
+    if flags.contains_key("verbose") {
+        // Per-loop serve gauges (PR 9): open connections, ready-queue
+        // depth, worker-pool utilization, frames served.
+        for (who, g) in cluster.serve_gauges() {
+            println!("  serve {who}: {}", g.snapshot());
+        }
+    }
     Ok(())
 }
 
@@ -703,6 +758,21 @@ mod tests {
         for bad in ["0", "-1", "x", "inf", "nan", "1e20"] {
             flags.insert("lease-timeout".into(), bad.into());
             assert!(parse_lease_timeout(&flags).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn parse_serve_threads_flag() {
+        let mut flags = HashMap::new();
+        assert_eq!(parse_serve(&flags).unwrap(), (ServeMode::Event, 0));
+        flags.insert("serve-threads".into(), "8".into());
+        assert_eq!(parse_serve(&flags).unwrap(), (ServeMode::Event, 8));
+        // 0 selects the legacy thread-per-connection baseline.
+        flags.insert("serve-threads".into(), "0".into());
+        assert_eq!(parse_serve(&flags).unwrap(), (ServeMode::Thread, 0));
+        for bad in ["x", "-1", "1.5", ""] {
+            flags.insert("serve-threads".into(), bad.into());
+            assert!(parse_serve(&flags).is_err(), "{bad}");
         }
     }
 

@@ -217,6 +217,87 @@ impl Histogram {
     }
 }
 
+/// Live gauges for an event-driven serve loop (PR 9): one instance per
+/// reactor, updated lock-free by the poll thread and the workers, read
+/// by `gpustore demo --verbose` and tests.  All counters are
+/// monotonically written with relaxed ordering — they are observability,
+/// not synchronization.
+#[derive(Debug, Default)]
+pub struct ServeGauges {
+    /// Connections currently registered with the poll loop.
+    pub open_conns: std::sync::atomic::AtomicU64,
+    /// Total connections accepted since the loop started.
+    pub accepted: std::sync::atomic::AtomicU64,
+    /// Connections queued for a worker right now (ready-queue depth,
+    /// summed across lanes).
+    pub ready_depth: std::sync::atomic::AtomicU64,
+    /// Workers currently inside a handler.
+    pub workers_busy: std::sync::atomic::AtomicU64,
+    /// Worker pool size (static after spawn).
+    pub workers_total: std::sync::atomic::AtomicU64,
+    /// Request frames fully served since the loop started.
+    pub frames_served: std::sync::atomic::AtomicU64,
+}
+
+/// Point-in-time copy of [`ServeGauges`], for printing.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServeSnapshot {
+    /// Connections currently open.
+    pub open_conns: u64,
+    /// Connections accepted since start.
+    pub accepted: u64,
+    /// Ready-queue depth across lanes.
+    pub ready_depth: u64,
+    /// Workers currently busy.
+    pub workers_busy: u64,
+    /// Worker pool size.
+    pub workers_total: u64,
+    /// Frames served since start.
+    pub frames_served: u64,
+}
+
+impl ServeGauges {
+    /// Read every gauge at once.
+    pub fn snapshot(&self) -> ServeSnapshot {
+        use std::sync::atomic::Ordering::Relaxed;
+        ServeSnapshot {
+            open_conns: self.open_conns.load(Relaxed),
+            accepted: self.accepted.load(Relaxed),
+            ready_depth: self.ready_depth.load(Relaxed),
+            workers_busy: self.workers_busy.load(Relaxed),
+            workers_total: self.workers_total.load(Relaxed),
+            frames_served: self.frames_served.load(Relaxed),
+        }
+    }
+}
+
+impl ServeSnapshot {
+    /// Worker pool utilization in `[0, 1]` (busy / total).
+    pub fn utilization(&self) -> f64 {
+        if self.workers_total == 0 {
+            0.0
+        } else {
+            self.workers_busy as f64 / self.workers_total as f64
+        }
+    }
+}
+
+impl std::fmt::Display for ServeSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "conns={} (accepted {}) ready={} workers={}/{} ({:.0}% busy) frames={}",
+            self.open_conns,
+            self.accepted,
+            self.ready_depth,
+            self.workers_busy,
+            self.workers_total,
+            self.utilization() * 100.0,
+            self.frames_served,
+        )
+    }
+}
+
 /// Markdown table builder used by the figure harnesses.
 #[derive(Debug, Default)]
 pub struct Table {
@@ -319,6 +400,25 @@ mod tests {
         assert!((h.mean() - 207.8).abs() < 0.1);
         assert!(h.quantile(0.5) <= 8);
         assert!(h.quantile(1.0) >= 1024);
+    }
+
+    #[test]
+    fn serve_gauges_snapshot_and_utilization() {
+        use std::sync::atomic::Ordering::Relaxed;
+        let g = ServeGauges::default();
+        g.open_conns.store(3, Relaxed);
+        g.accepted.store(7, Relaxed);
+        g.workers_busy.store(2, Relaxed);
+        g.workers_total.store(4, Relaxed);
+        g.frames_served.store(11, Relaxed);
+        let s = g.snapshot();
+        assert_eq!(s.open_conns, 3);
+        assert!((s.utilization() - 0.5).abs() < 1e-9);
+        let text = s.to_string();
+        assert!(text.contains("conns=3"), "{text}");
+        assert!(text.contains("workers=2/4"), "{text}");
+        // Empty pool never divides by zero.
+        assert_eq!(ServeSnapshot { workers_total: 0, ..s }.utilization(), 0.0);
     }
 
     #[test]

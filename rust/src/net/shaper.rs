@@ -96,13 +96,23 @@ impl Shaper {
 
     /// Block the calling thread until `bytes` may pass.
     pub fn consume(&self, bytes: u64) {
-        let wait = {
-            let now = self.epoch.elapsed().as_secs_f64();
-            let ready = self.inner.lock().unwrap().reserve(now, bytes);
-            ready - now
-        };
-        if wait > 0.0 {
-            std::thread::sleep(Duration::from_secs_f64(wait));
+        let wait = self.reserve(bytes);
+        if !wait.is_zero() {
+            std::thread::sleep(wait);
+        }
+    }
+
+    /// Non-blocking variant: claim tokens for `bytes` now and return how
+    /// long the caller must wait before sending them.  The event-driven
+    /// serve loop uses this to pace writes without parking a thread —
+    /// the wait becomes a poll timeout instead of a sleep.
+    pub fn reserve(&self, bytes: u64) -> Duration {
+        let now = self.epoch.elapsed().as_secs_f64();
+        let ready = self.inner.lock().unwrap().reserve(now, bytes);
+        if ready > now {
+            Duration::from_secs_f64(ready - now)
+        } else {
+            Duration::ZERO
         }
     }
 }
@@ -148,6 +158,16 @@ mod tests {
     fn gbps_conversion() {
         let rl = RateLimiter::from_bits_per_sec(1e9);
         assert!((rl.rate() - 1.25e8).abs() < 1.0);
+    }
+
+    #[test]
+    fn shaper_reserve_is_nonblocking() {
+        let s = Shaper::new(1_000_000.0, 1000.0);
+        let t0 = Instant::now();
+        assert!(s.reserve(1000).is_zero()); // burst covers it
+        let wait = s.reserve(100_000); // ~0.1 s owed
+        assert!(t0.elapsed().as_secs_f64() < 0.05, "reserve blocked");
+        assert!(wait.as_secs_f64() > 0.05, "wait={wait:?}");
     }
 
     #[test]

@@ -143,6 +143,12 @@ impl Listener {
         let (s, _) = self.inner.accept()?;
         Ok(Conn::new(s))
     }
+
+    /// Unwrap the raw `TcpListener` (the event-driven serve loop needs
+    /// the std handle to switch it to nonblocking accepts).
+    pub fn into_std(self) -> TcpListener {
+        self.inner
+    }
 }
 
 #[cfg(test)]

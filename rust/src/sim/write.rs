@@ -109,6 +109,14 @@ pub struct SystemSim {
     /// flush).  `0.0` — the default — models the in-memory manager and
     /// keeps every pre-durability figure bit-identical.
     pub per_commit_wal_overhead: f64,
+    /// Per-request serve-loop dispatch overhead (PR 9): the readiness
+    /// reactor's queue→worker handoff added to every manager round-trip
+    /// a file write makes (open, alloc, commit — modeled as the three
+    /// requests of a minimal session).  `0.0` — the default — models an
+    /// uncontended serve path and keeps every pre-PR-9 figure
+    /// bit-identical; benches measure the real value from
+    /// `BENCH_pr9.json` latency deltas.
+    pub per_request_serve_overhead: f64,
     /// Client data-path bandwidth: FUSE crossing + SAI write-buffer
     /// copies (B/s).  The CA-Infinite ceiling.
     pub memcpy_bps: f64,
@@ -128,6 +136,7 @@ impl Default for SystemSim {
             per_lease_overhead: 0.2e-3, // ~2 extra manager RTTs
             per_block_overhead: 15e-6,
             per_commit_wal_overhead: 0.0,
+            per_request_serve_overhead: 0.0,
             memcpy_bps: 350e6,
             cpu_system_efficiency: 0.6,
         }
@@ -206,9 +215,13 @@ impl SystemSim {
     /// per-buffer pipeline fill/drain instead
     /// ([`pipelined_secs`]).
     pub fn write_secs(&self, cfg: &WriteConfig, size: usize, blocks: usize) -> f64 {
+        // A minimal write session makes three manager round-trips
+        // (open, alloc, commit); each pays one serve-loop dispatch.
+        const MANAGER_REQUESTS_PER_FILE: f64 = 3.0;
         let overhead = self.per_file_overhead
             + self.per_lease_overhead
             + self.per_commit_wal_overhead
+            + MANAGER_REQUESTS_PER_FILE * self.per_request_serve_overhead
             + blocks as f64 * self.per_block_overhead;
         self.gated_secs(cfg, size, blocks).0 + overhead
     }
@@ -353,6 +366,30 @@ mod tests {
             assert!((d - 5e-3).abs() < 1e-12, "size {size}: delta {d}");
         }
         // And it does not perturb the hidden-hash accounting.
+        assert_eq!(
+            with.hash_hidden_secs(&c, MB64, 64),
+            without.hash_hidden_secs(&c, MB64, 64)
+        );
+    }
+
+    #[test]
+    fn serve_overhead_defaults_to_zero_and_is_additive() {
+        // The serve-loop dispatch knob is off by default, so every
+        // pre-PR-9 figure is bit-identical; turned on, it adds exactly
+        // three dispatches per file (open, alloc, commit) regardless of
+        // size or block count, and never perturbs hidden-hash
+        // accounting.
+        let without = SystemSim::default();
+        assert_eq!(without.per_request_serve_overhead, 0.0);
+        let with = SystemSim {
+            per_request_serve_overhead: 20e-6, // ~one queue handoff
+            ..SystemSim::default()
+        };
+        let c = cfg(EngineModel::Cpu { threads: 16 }, false, 0.0);
+        for (size, blocks) in [(1 << 20, 1), (MB64, 64), (MB64, 1024)] {
+            let d = with.write_secs(&c, size, blocks) - without.write_secs(&c, size, blocks);
+            assert!((d - 3.0 * 20e-6).abs() < 1e-12, "size {size}: delta {d}");
+        }
         assert_eq!(
             with.hash_hidden_secs(&c, MB64, 64),
             without.hash_hidden_secs(&c, MB64, 64)

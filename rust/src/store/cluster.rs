@@ -77,7 +77,12 @@ impl Cluster {
                     durability.map(|d| d.data_dir),
                 )?;
             }
-            managers.push(Manager::serve_listener(listener, state)?);
+            managers.push(Manager::serve_listener_opts(
+                listener,
+                state,
+                cfg.serve_mode,
+                cfg.serve_threads,
+            )?);
         }
         let nodes = (0..cfg.nodes)
             .map(|_| {
@@ -92,6 +97,8 @@ impl Cluster {
                             .shape
                             .then(|| Arc::new(Shaper::from_bits_per_sec(cfg.link_bps))),
                         reply_latency: cfg.node_rtt,
+                        serve_mode: cfg.serve_mode,
+                        serve_threads: cfg.serve_threads,
                         ..NodeOpts::default()
                     },
                 )
@@ -249,6 +256,24 @@ impl Cluster {
             bytes += by;
         }
         (blocks, bytes)
+    }
+
+    /// Every serve loop's gauges, labeled — `("manager0", ..)` per
+    /// manager, `("node3", ..)` per node.  Empty in thread mode (no
+    /// reactor, no gauges); `gpustore demo --verbose` prints these.
+    pub fn serve_gauges(&self) -> Vec<(String, Arc<crate::metrics::ServeGauges>)> {
+        let mut out = Vec::new();
+        for (i, m) in self.managers.iter().enumerate() {
+            if let Some(g) = m.serve_gauges() {
+                out.push((format!("manager{i}"), g));
+            }
+        }
+        for (i, n) in self.nodes.iter().enumerate() {
+            if let Some(g) = n.serve_gauges() {
+                out.push((format!("node{i}"), g));
+            }
+        }
+        out
     }
 
     /// Per-node (blocks, bytes), by node id.

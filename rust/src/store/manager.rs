@@ -12,7 +12,23 @@
 //! GC pool.  Lease expiry shares the manager's liveness clock, which a
 //! test-only hook ([`ManagerState::advance_clock`]) can advance so
 //! every expiry path is testable without wall-clock sleeps.
-//! Thread-per-connection over the shared protocol.
+//!
+//! **Serve architecture (PR 9).**  By default the manager serves
+//! through the event-driven reactor ([`super::reactor`]): one poll
+//! thread owns every socket and three worker lanes run the handlers —
+//! client mutations (may block on the quorum barrier), peer consensus
+//! RPCs (may block re-bootstrapping from a leader's snapshot) and
+//! never-remotely-blocking reads (snapshot/WAL fetch, heartbeats, node
+//! listings).  Separating those lanes is what makes two
+//! mutually-replicating managers deadlock-free: the read lane that
+//! serves a peer's re-bootstrap never itself waits on a remote call.
+//! The legacy thread-per-connection path is retained behind
+//! [`crate::config::ServeMode::Thread`] as the benchmark baseline.
+//! The block and lease tables are hash-prefix-sharded
+//! ([`super::shard::ShardedMap`]) so reads, stats and the apply side
+//! only contend per shard; mutations are still planned and logged under
+//! the (much smaller) `Inner` lock, keeping the WAL a single total
+//! order.
 //!
 //! **Durable control plane.**  With a [`DurabilityOpts`] attached,
 //! every state mutation is planned (validated + decided) under the
@@ -56,7 +72,11 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::proto::{Assignment, BlockMeta, BlockSpec, Msg, NodeEntry, WalEntry, MAX_REPLICAS};
+use super::reactor::{FrameHandler, Reactor, ReactorOpts, Replies};
+use super::shard::ShardedMap;
+use crate::config::ServeMode;
 use crate::hash::Digest;
+use crate::metrics::ServeGauges;
 use crate::net::{Conn, Listener};
 use crate::wal::{self, DurabilityOpts, Record, SnapBlock, SnapLease, SnapshotState, Wal};
 use crate::{Error, Result};
@@ -213,14 +233,16 @@ struct NodeSlot {
     last_beat: Instant,
 }
 
+/// The serialized core of the manager: everything that orders mutations
+/// (the WAL, the ship buffer, placement, the file table).  The hot
+/// block and lease tables moved out to [`ManagerState`]'s sharded maps
+/// in PR 9 — mutators touch them while holding this lock (preserving
+/// the single total order), but readers and stats no longer queue here.
 #[derive(Debug)]
 struct Inner {
     files: HashMap<String, FileEntry>,
-    blocks: HashMap<Digest, BlockInfo>,
     nodes: Vec<NodeSlot>,
     policy: Box<dyn PlacementPolicy>,
-    /// Live leases by id.
-    leases: HashMap<u64, Lease>,
     /// Next lease id (ids start at 1; 0 means "no lease" on the wire).
     next_lease: u64,
     /// The write-ahead log, when this manager is durable (`None` = the
@@ -321,10 +343,17 @@ impl Repl {
     }
 }
 
-/// Manager state shared across connection threads.
+/// Manager state shared across serve threads.
 #[derive(Debug)]
 pub struct ManagerState {
     inner: Mutex<Inner>,
+    /// Global (cross-file, cross-version) block bookkeeping, sharded by
+    /// digest prefix.  Mutated only while `inner` is held (WAL order);
+    /// read lock-free by stats and validation.
+    blocks: ShardedMap<Digest, BlockInfo>,
+    /// Live leases by id, sharded by id (a monotone counter, so
+    /// consecutive grants round-robin across shards).
+    leases: ShardedMap<u64, Lease>,
     /// Quorum-replication state (solo defaults when not configured).
     repl: Mutex<Repl>,
     /// A node is considered alive if it joined or heartbeated within
@@ -382,6 +411,13 @@ const SHIP_BATCH: usize = 512;
 /// Recent-record CRC window for the committed-prefix divergence checks.
 const CRC_LOG_CAP: usize = 8192;
 
+/// Default shard count for the block and lease tables.  16 spreads a
+/// uniformly-distributed digest prefix well past the worker-pool sizes
+/// in play while keeping the memory overhead of mostly-empty shards
+/// negligible.  [`ManagerState::with_shards`] overrides it (the
+/// sharded-vs-unsharded equivalence property runs at 1 vs. 16).
+const DEFAULT_SHARDS: usize = 16;
+
 /// Base election timeout: a peer that has not heard from a leader for
 /// this long (plus its stagger) campaigns on its next
 /// [`ManagerState::tick_consensus`].
@@ -422,20 +458,33 @@ impl ManagerState {
         policy: Box<dyn PlacementPolicy>,
         lease_timeout: Duration,
     ) -> ManagerState {
+        ManagerState::with_shards(policy, lease_timeout, DEFAULT_SHARDS)
+    }
+
+    /// State with an explicit shard count for the block/lease tables.
+    /// Observable behavior must not depend on `shards` (snapshots sort
+    /// their entries) — the equivalence property in
+    /// `rust/tests/properties.rs` runs the same op sequence at 1 and 16
+    /// shards and compares [`ManagerState::snapshot_state`] images.
+    pub fn with_shards(
+        policy: Box<dyn PlacementPolicy>,
+        lease_timeout: Duration,
+        shards: usize,
+    ) -> ManagerState {
         let lease_timeout = lease_timeout.max(MIN_LEASE_TIMEOUT);
         ManagerState {
             inner: Mutex::new(Inner {
                 files: HashMap::new(),
-                blocks: HashMap::new(),
                 nodes: Vec::new(),
                 policy,
-                leases: HashMap::new(),
                 next_lease: 1,
                 wal: None,
                 last_lsn: 0,
                 ship: VecDeque::new(),
                 crc_log: BTreeMap::new(),
             }),
+            blocks: ShardedMap::new(shards),
+            leases: ShardedMap::new(shards),
             repl: Mutex::new(Repl::solo()),
             heartbeat_timeout: HEARTBEAT_TIMEOUT,
             lease_timeout,
@@ -470,7 +519,7 @@ impl ManagerState {
             let g = &mut *guard;
             let now = state.now();
             if let Some(snap) = &recovery.snapshot {
-                install_snapshot_into(g, snap, now, state.lease_timeout);
+                state.install_snapshot_into(g, snap, now);
             }
             let mut freed = Vec::new();
             for (lsn, rec) in recovery.records {
@@ -492,7 +541,8 @@ impl ManagerState {
     /// bootstrap and the recovery property tests.
     pub fn snapshot_state(&self) -> SnapshotState {
         let g = self.inner.lock().unwrap();
-        snapshot_of(&g, g.last_lsn)
+        let lsn = g.last_lsn;
+        self.snapshot_of(&g, lsn)
     }
 
     /// Replace this state with a snapshot image (follower bootstrap).
@@ -507,7 +557,7 @@ impl ManagerState {
     pub fn install_snapshot(&self, snap: &SnapshotState) -> Result<()> {
         let mut guard = self.inner.lock().unwrap();
         let now = self.now();
-        install_snapshot_into(&mut guard, snap, now, self.lease_timeout);
+        self.install_snapshot_into(&mut guard, snap, now);
         if let Some(w) = guard.wal.as_mut() {
             w.reset_to(snap)?;
         }
@@ -589,12 +639,22 @@ impl ManagerState {
         *self.clock_skew.lock().unwrap() += by;
     }
 
-    /// Run the lazy lease-expiry sweep now (every handled message does
-    /// this first) and execute any resulting GC deletes before
-    /// returning.  Ops/test hook — pairs with
+    /// Run the lazy lease-expiry sweep now (every *mutating* message
+    /// does this first; read-only traffic no longer sweeps — see
+    /// [`ManagerState::handle_inner`]) and execute any resulting GC
+    /// deletes before returning.  Ops/test hook — pairs with
     /// [`ManagerState::advance_clock`].
     pub fn tick(&self) {
-        let _ = self.handle(Msg::NodeList);
+        let gc = {
+            let mut guard = self.inner.lock().unwrap();
+            let g = &mut *guard;
+            let now = self.now();
+            let mut freed = Vec::new();
+            self.expire_leases(g, now, &mut freed);
+            self.maybe_snapshot(g);
+            self.gc_batch(g, freed)
+        };
+        self.execute_gc(gc);
     }
 
     /// Handle one request message.
@@ -611,16 +671,47 @@ impl ManagerState {
         // has its stale on-node copies deleted BEFORE the reply (and
         // thus the client's re-upload) goes out.
         let (reply, gc) = self.handle_inner(msg);
-        if let Some((freed, addrs)) = gc {
-            gc_delete(&freed, &addrs);
-            let mut inflight = self.gc_inflight.lock().unwrap();
-            for (h, _) in &freed {
-                inflight.remove(h);
-            }
-            drop(inflight);
-            self.gc_done.notify_all();
-        }
+        self.execute_gc(gc);
         reply
+    }
+
+    /// Issue a GC batch's node-side deletes, then unmark the hashes and
+    /// wake allocations waiting on them.  On the quorum path this runs
+    /// only AFTER the records that freed the blocks are quorum-acked
+    /// (see [`ManagerState::handle_replicated`]): a delete must never
+    /// land for a release the group might not have committed.
+    fn execute_gc(&self, gc: Option<GcBatch>) {
+        let Some((freed, addrs)) = gc else {
+            return;
+        };
+        gc_delete(&freed, &addrs);
+        let mut inflight = self.gc_inflight.lock().unwrap();
+        for (h, _) in &freed {
+            inflight.remove(h);
+        }
+        drop(inflight);
+        self.gc_done.notify_all();
+    }
+
+    /// Suppress a GC batch whose quorum barrier failed: unmark the
+    /// hashes (so allocations stop waiting) but issue NO deletes — the
+    /// records are durable locally and may yet commit retroactively,
+    /// but this leader cannot prove it, so the node-side copies stay.
+    /// The cost is a bounded conservative leak (the copies are
+    /// unreferenced space until the hash is reallocated or the node
+    /// churns), which is the safe side of the ledger: the alternative —
+    /// deleting against an uncommitted release — destroys data a
+    /// surviving quorum still references.
+    fn abandon_gc(&self, gc: Option<GcBatch>) {
+        let Some((freed, _)) = gc else {
+            return;
+        };
+        let mut inflight = self.gc_inflight.lock().unwrap();
+        for (h, _) in &freed {
+            inflight.remove(h);
+        }
+        drop(inflight);
+        self.gc_done.notify_all();
     }
 
     /// Block until no in-flight GC batch covers any of `specs` (bounded
@@ -698,12 +789,22 @@ impl ManagerState {
         // Reborrow as a plain `&mut Inner` so field borrows split.
         let g = &mut *guard;
         let now = self.now();
-        // Lazy expiry sweep: every handled message first lapses overdue
-        // leases (claims/pins release, newly-unreferenced blocks join
-        // this message's GC batch).  No background timer — expiry is
-        // deterministic given the clock, which tests control.
+        // Lazy expiry sweep: every *mutating* message first lapses
+        // overdue leases (claims/pins release, newly-unreferenced
+        // blocks join this message's GC batch).  No background timer —
+        // expiry is deterministic given the clock, which tests control.
+        // Read-only traffic (snapshot/WAL fetch, heartbeats, node
+        // listings) skips the sweep: any replica serves those, at high
+        // rates, and a sweep there would append expiry records — and
+        // free blocks — outside the leader's quorum-gated GC path.
+        // [`ManagerState::tick`] runs the sweep on demand.
         let mut freed = Vec::new();
-        self.expire_leases(g, now, &mut freed);
+        if !matches!(
+            msg,
+            Msg::FetchSnapshot | Msg::FetchWal { .. } | Msg::Heartbeat { .. } | Msg::NodeList
+        ) {
+            self.expire_leases(g, now, &mut freed);
+        }
         let reply = match msg {
             Msg::GetBlockMap { file } => match g.files.get(&file) {
                 Some(e) => Msg::BlockMap {
@@ -740,7 +841,7 @@ impl ManagerState {
             Msg::RenewLease { lease } => {
                 // Renewals of unknown/lapsed leases are not logged —
                 // there is nothing durable to change.
-                if g.leases.contains_key(&lease) {
+                if self.leases.contains(&lease) {
                     match self.log_apply(g, Record::RenewLease { id: lease }, now, &mut freed) {
                         Ok(()) => Msg::Ok,
                         Err(e) => Msg::Err(e),
@@ -753,7 +854,7 @@ impl ManagerState {
                 // Idempotent: dropping a lapsed/consumed lease is OK (a
                 // committed writer's lease is consumed by the commit)
                 // and not logged — there is no lease to release.
-                if g.leases.contains_key(&lease) {
+                if self.leases.contains(&lease) {
                     match self.log_apply(g, Record::DropLease { id: lease }, now, &mut freed) {
                         Ok(()) => Msg::Ok,
                         Err(e) => Msg::Err(e),
@@ -805,9 +906,12 @@ impl ManagerState {
                 list.sort();
                 Msg::Files { files: list }
             }
-            Msg::FetchSnapshot => Msg::SnapshotData {
-                data: snapshot_of(g, g.last_lsn).encode(),
-            },
+            Msg::FetchSnapshot => {
+                let lsn = g.last_lsn;
+                Msg::SnapshotData {
+                    data: self.snapshot_of(g, lsn).encode(),
+                }
+            }
             Msg::FetchWal { after } => {
                 let retained = match g.ship.front() {
                     Some((front, _)) => after.saturating_add(1) >= *front,
@@ -874,7 +978,8 @@ impl ManagerState {
         if !g.wal.as_ref().is_some_and(|w| w.wants_snapshot()) {
             return;
         }
-        let snap = snapshot_of(g, g.last_lsn);
+        let lsn = g.last_lsn;
+        let snap = self.snapshot_of(g, lsn);
         if let Some(w) = g.wal.as_mut() {
             if let Err(e) = w.snapshot(&snap) {
                 eprintln!("gpustore manager: snapshot failed (log stays authoritative): {e}");
@@ -900,19 +1005,24 @@ impl ManagerState {
                 // holder to redeem.
                 let held = match lease {
                     0 => None,
-                    id => g.leases.remove(&id),
+                    id => self.leases.remove(&id),
                 };
                 for m in &blocks {
-                    let e = g.blocks.entry(m.hash).or_insert_with(|| BlockInfo {
-                        replicas: m.replicas.clone(),
-                        len: m.len,
-                        refs: 0,
-                        pending: 0,
-                        pins: 0,
-                        placed_by: String::new(),
-                    });
-                    e.refs += 1;
-                    e.pending = e.pending.saturating_sub(1);
+                    self.blocks.or_insert_mutate(
+                        &m.hash,
+                        || BlockInfo {
+                            replicas: m.replicas.clone(),
+                            len: m.len,
+                            refs: 0,
+                            pending: 0,
+                            pins: 0,
+                            placed_by: String::new(),
+                        },
+                        |e| {
+                            e.refs += 1;
+                            e.pending = e.pending.saturating_sub(1);
+                        },
+                    );
                 }
                 // Claim occurrences the commit did not consume
                 // (allocated but left out of the final map) are
@@ -927,47 +1037,45 @@ impl ManagerState {
                         match consumed.get_mut(&h) {
                             Some(n) if *n > 0 => *n -= 1,
                             _ => {
-                                if let Some(e) = g.blocks.get_mut(&h) {
+                                self.blocks.mutate(&h, |e| {
                                     e.pending = e.pending.saturating_sub(1);
-                                }
+                                });
                                 leftovers.push(h);
                             }
                         }
                     }
-                    self.sweep(g, &leftovers, freed);
+                    self.sweep(&leftovers, freed);
                 }
                 let f = g.files.entry(file).or_default();
                 f.version += 1;
                 let old = std::mem::replace(&mut f.blocks, blocks);
                 for m in &old {
-                    if let Some(e) = g.blocks.get_mut(&m.hash) {
+                    self.blocks.mutate(&m.hash, |e| {
                         e.refs = e.refs.saturating_sub(1);
-                    }
+                    });
                 }
                 // Only the old map's hashes can have newly reached zero
                 // references (the new map's all got refs += 1).
                 // Read-leased blocks have pins > 0 and survive; their
                 // deferred deletes run when the last lease drops.
                 let candidates: Vec<Digest> = old.iter().map(|m| m.hash).collect();
-                self.sweep(g, &candidates, freed);
+                self.sweep(&candidates, freed);
             }
             Record::Release { hashes } => {
                 for h in &hashes {
-                    if let Some(e) = g.blocks.get_mut(h) {
+                    self.blocks.mutate(h, |e| {
                         e.pending = e.pending.saturating_sub(1);
-                    }
+                    });
                 }
-                self.sweep(g, &hashes, freed);
+                self.sweep(&hashes, freed);
             }
             Record::OpenLease { id, tag, write, hashes } => {
                 if !write {
                     for h in &hashes {
-                        if let Some(e) = g.blocks.get_mut(h) {
-                            e.pins += 1;
-                        }
+                        self.blocks.mutate(h, |e| e.pins += 1);
                     }
                 }
-                g.leases.insert(
+                self.leases.insert(
                     id,
                     Lease {
                         tag,
@@ -979,47 +1087,43 @@ impl ManagerState {
                 g.next_lease = g.next_lease.max(id + 1);
             }
             Record::RenewLease { id } => {
-                if let Some(l) = g.leases.get_mut(&id) {
+                self.leases.mutate(&id, |l| {
                     l.expires_at = now + self.lease_timeout;
-                }
+                });
             }
             Record::DropLease { id } | Record::ExpireLease { id } => {
-                if let Some(l) = g.leases.remove(&id) {
-                    self.release_lease(g, l, freed);
+                if let Some(l) = self.leases.remove(&id) {
+                    self.release_lease(l, freed);
                 }
             }
             Record::Alloc { tag, lease, blocks } => {
                 for m in &blocks {
-                    match g.blocks.get_mut(&m.hash) {
-                        Some(e) => {
+                    self.blocks.or_insert_mutate(
+                        &m.hash,
+                        || BlockInfo {
+                            replicas: m.replicas.clone(),
+                            len: m.len,
+                            refs: 0,
+                            pending: 0,
+                            pins: 0,
+                            placed_by: tag.clone(),
+                        },
+                        |e| {
                             e.pending += 1;
                             // The planner re-homed dead replica sets at
                             // log time; for live sets it recorded the
                             // existing one, so this is a no-op there.
                             e.replicas = m.replicas.clone();
-                        }
-                        None => {
-                            g.blocks.insert(
-                                m.hash,
-                                BlockInfo {
-                                    replicas: m.replicas.clone(),
-                                    len: m.len,
-                                    refs: 0,
-                                    pending: 1,
-                                    pins: 0,
-                                    placed_by: tag.clone(),
-                                },
-                            );
-                        }
-                    }
+                        },
+                    );
                 }
                 // Record the claim occurrences against the lease and
                 // renew it (an actively-allocating writer is live).
                 if lease != 0 {
-                    if let Some(l) = g.leases.get_mut(&lease) {
+                    self.leases.mutate(&lease, |l| {
                         l.hashes.extend(blocks.iter().map(|m| m.hash));
                         l.expires_at = now + self.lease_timeout;
-                    }
+                    });
                 }
             }
             Record::NodeJoin { id, addr } => {
@@ -1057,9 +1161,9 @@ impl ManagerState {
         }
         match lease {
             0 => Ok(()),
-            id => match g.leases.get(&id) {
-                Some(l) if l.write => Ok(()),
-                Some(_) => Err(format!("commit: lease {id} is not a write lease")),
+            id => match self.leases.get_with(&id, |l| l.write) {
+                Some(true) => Ok(()),
+                Some(false) => Err(format!("commit: lease {id} is not a write lease")),
                 None => Err(format!(
                     "commit: write lease {id} lapsed and its claims were released"
                 )),
@@ -1122,12 +1226,12 @@ impl ManagerState {
     /// the crash.  Sorted ids keep the log deterministic for a given
     /// set of overdue leases.
     fn expire_leases(&self, g: &mut Inner, now: Instant, freed: &mut Vec<(Digest, Vec<u32>)>) {
-        let mut lapsed: Vec<u64> = g
-            .leases
-            .iter()
-            .filter(|(_, l)| l.expires_at <= now)
-            .map(|(id, _)| *id)
-            .collect();
+        let mut lapsed: Vec<u64> = Vec::new();
+        self.leases.for_each(|id, l| {
+            if l.expires_at <= now {
+                lapsed.push(*id);
+            }
+        });
         lapsed.sort_unstable();
         for id in lapsed {
             // Append-before-mutate: if the log rejects the record the
@@ -1143,17 +1247,17 @@ impl ManagerState {
 
     /// Return a lease's held occurrences to the pool: a write lease's
     /// claims stop pending, a read lease's pins drop — then sweep.
-    fn release_lease(&self, g: &mut Inner, l: Lease, freed: &mut Vec<(Digest, Vec<u32>)>) {
+    fn release_lease(&self, l: Lease, freed: &mut Vec<(Digest, Vec<u32>)>) {
         for h in &l.hashes {
-            if let Some(e) = g.blocks.get_mut(h) {
+            self.blocks.mutate(h, |e| {
                 if l.write {
                     e.pending = e.pending.saturating_sub(1);
                 } else {
                     e.pins = e.pins.saturating_sub(1);
                 }
-            }
+            });
         }
-        self.sweep(g, &l.hashes, freed);
+        self.sweep(&l.hashes, freed);
     }
 
     /// Collect garbage among `candidates` (the hashes whose counters
@@ -1164,17 +1268,17 @@ impl ManagerState {
     /// lock, so allocations of these hashes wait — see
     /// [`ManagerState::await_gc`]).  Deletion itself runs outside the
     /// lock, via [`ManagerState::gc_batch`].
-    fn sweep(&self, g: &mut Inner, candidates: &[Digest], freed: &mut Vec<(Digest, Vec<u32>)>) {
+    fn sweep(&self, candidates: &[Digest], freed: &mut Vec<(Digest, Vec<u32>)>) {
         let mut marked = Vec::new();
         for h in candidates {
             // Duplicate candidates are harmless: once removed, the
             // second lookup misses.
-            if let Some(b) = g.blocks.get(h) {
-                if b.refs == 0 && b.pending == 0 && b.pins == 0 {
-                    freed.push((*h, b.replicas.clone()));
-                    marked.push(*h);
-                    g.blocks.remove(h);
-                }
+            if let Some(b) = self
+                .blocks
+                .remove_if(h, |b| b.refs == 0 && b.pending == 0 && b.pins == 0)
+            {
+                freed.push((*h, b.replicas));
+                marked.push(*h);
             }
         }
         if !marked.is_empty() {
@@ -1198,7 +1302,7 @@ impl ManagerState {
     /// is not persisted, because the decided replica sets are).  The
     /// counter bumps happen in `apply` once the record is logged.
     ///
-    /// `planned` overlays in-batch decisions over `g.blocks` so a hash
+    /// `planned` overlays in-batch decisions over the block table so a hash
     /// that repeats inside one batch deduplicates against its own first
     /// occurrence, exactly as the pre-WAL mutate-as-you-go version did.
     fn plan_alloc(
@@ -1214,9 +1318,9 @@ impl ManagerState {
         // means this writer's earlier claims were already reclaimed —
         // it must re-open rather than keep streaming into a void.
         if lease != 0 {
-            match g.leases.get(&lease) {
-                Some(l) if l.write => {}
-                Some(_) => return Err(format!("alloc: lease {lease} is not a write lease")),
+            match self.leases.get_with(&lease, |l| l.write) {
+                Some(true) => {}
+                Some(false) => return Err(format!("alloc: lease {lease} is not a write lease")),
                 None => return Err(format!("alloc: write lease {lease} lapsed")),
             }
         }
@@ -1245,7 +1349,14 @@ impl ManagerState {
             let (replicas, fresh) = if let Some((replicas, dedup_ok)) = planned.get(&s.hash) {
                 (replicas.clone(), !*dedup_ok)
             } else {
-                match g.blocks.get(&s.hash) {
+                // One bounded shard-lock hold to read the entry; the
+                // placement decision runs outside it.
+                let looked = self
+                    .blocks
+                    .get_with(&s.hash, |e| {
+                        (e.replicas.clone(), e.refs > 0 || e.placed_by == file)
+                    });
+                match looked {
                     // Committed somewhere (a commit proves the transfer
                     // completed), or claimed by this same session
                     // (which is the one doing the transfer): safe to
@@ -1254,10 +1365,10 @@ impl ManagerState {
                     // re-homed and re-transferred (the writer has the
                     // bytes in hand; dedup against dead nodes would
                     // commit an unreadable file).
-                    Some(e) if e.refs > 0 || e.placed_by == file => {
-                        if e.replicas.iter().any(|r| alive.contains(r)) {
-                            planned.insert(s.hash, (e.replicas.clone(), true));
-                            (e.replicas.clone(), false)
+                    Some((known, true)) => {
+                        if known.iter().any(|r| alive.contains(r)) {
+                            planned.insert(s.hash, (known.clone(), true));
+                            (known, false)
                         } else {
                             let replicas = g.policy.place(&alive);
                             planned.insert(s.hash, (replicas.clone(), true));
@@ -1280,9 +1391,9 @@ impl ManagerState {
                     // would break that reader when the node heals.  The
                     // cost is a bounded space leak on a flapping node
                     // (ROADMAP, lease limitations).
-                    Some(e) => {
-                        let replicas = if e.replicas.iter().any(|r| alive.contains(r)) {
-                            e.replicas.clone()
+                    Some((known, false)) => {
+                        let replicas = if known.iter().any(|r| alive.contains(r)) {
+                            known
                         } else {
                             g.policy.place(&alive)
                         };
@@ -1314,9 +1425,11 @@ impl ManagerState {
     /// message; call [`ManagerState::tick`] first to fold in overdue
     /// lease expiries.
     pub fn block_stats(&self) -> BlockStats {
-        let g = self.inner.lock().unwrap();
+        // Lock-free with respect to `Inner` since PR 9: the sharded
+        // tables are read shard-by-shard, so a stats poll never stalls
+        // the plan/log path (and vice versa).
         let mut s = BlockStats::default();
-        for b in g.blocks.values() {
+        self.blocks.for_each(|_, b| {
             let copies = b.replicas.len() as u64;
             s.blocks += copies;
             s.bytes += copies * b.len as u64;
@@ -1324,14 +1437,14 @@ impl ManagerState {
             if b.pins > 0 {
                 s.pinned_blocks += 1;
             }
-        }
-        for l in g.leases.values() {
+        });
+        self.leases.for_each(|_, l| {
             if l.write {
                 s.write_leases += 1;
             } else {
                 s.read_leases += 1;
             }
-        }
+        });
         s
     }
 }
@@ -1411,9 +1524,16 @@ impl ManagerState {
             return Msg::NotLeader { hint };
         }
         let before = self.last_lsn();
-        let reply = self.handle(msg);
+        // GC fan-out is DEFERRED past the quorum barrier (PR 9, closing
+        // PR 8's known limitation): node-side `DeleteBlock`s for blocks
+        // this mutation freed must not be issued unless a majority holds
+        // the records that justify them — a leader partitioned below
+        // quorum would otherwise delete blocks its successors still
+        // consider live.
+        let (reply, gc) = self.handle_inner(msg);
         let appended = self.ship_tail_since(before);
         if appended.is_empty() {
+            self.execute_gc(gc);
             return reply;
         }
         // The quorum-commit barrier: an error here means the mutation
@@ -1423,8 +1543,14 @@ impl ManagerState {
         // across replicas, so a duplicate application cannot diverge
         // the group (see README, "Consensus & failover").
         match self.replicate_to_quorum(before, appended) {
-            Ok(()) => reply,
-            Err(e) => Msg::Err(e),
+            Ok(()) => {
+                self.execute_gc(gc);
+                reply
+            }
+            Err(e) => {
+                self.abandon_gc(gc);
+                Msg::Err(e)
+            }
         }
     }
 
@@ -2023,81 +2149,76 @@ fn validate_blocks(blocks: &[BlockMeta], registered: usize) -> Option<String> {
     None
 }
 
-/// Serialize the durable slice of the state (everything except clocks,
-/// the policy cursor and the ship buffer) into a canonical, sorted
-/// [`SnapshotState`] — sorted so images of the same history compare
-/// equal regardless of hash-map iteration order.
-fn snapshot_of(g: &Inner, lsn: u64) -> SnapshotState {
-    let mut files: Vec<(String, u64, Vec<BlockMeta>)> = g
-        .files
-        .iter()
-        .map(|(name, e)| (name.clone(), e.version, e.blocks.clone()))
-        .collect();
-    files.sort_by(|a, b| a.0.cmp(&b.0));
-    let mut blocks: Vec<SnapBlock> = g
-        .blocks
-        .iter()
-        .map(|(hash, b)| SnapBlock {
-            hash: *hash,
-            len: b.len,
-            replicas: b.replicas.clone(),
-            refs: b.refs,
-            pending: b.pending,
-            pins: b.pins,
-            placed_by: b.placed_by.clone(),
-        })
-        .collect();
-    blocks.sort_by_key(|b| b.hash);
-    let mut leases: Vec<SnapLease> = g
-        .leases
-        .iter()
-        .map(|(id, l)| SnapLease {
-            id: *id,
-            tag: l.tag.clone(),
-            write: l.write,
-            hashes: l.hashes.clone(),
-        })
-        .collect();
-    leases.sort_by_key(|l| l.id);
-    SnapshotState {
-        lsn,
-        files,
-        blocks,
-        nodes: g.nodes.iter().map(|n| n.addr.clone()).collect(),
-        leases,
-        next_lease: g.next_lease,
+impl ManagerState {
+    /// Serialize the durable slice of the state (everything except
+    /// clocks, the policy cursor and the ship buffer) into a canonical,
+    /// sorted [`SnapshotState`] — sorted so images of the same history
+    /// compare equal regardless of hash-map iteration order AND shard
+    /// count (the properties suite compares sharded to unsharded
+    /// through this).
+    fn snapshot_of(&self, g: &Inner, lsn: u64) -> SnapshotState {
+        let mut files: Vec<(String, u64, Vec<BlockMeta>)> = g
+            .files
+            .iter()
+            .map(|(name, e)| (name.clone(), e.version, e.blocks.clone()))
+            .collect();
+        files.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut blocks: Vec<SnapBlock> = Vec::new();
+        self.blocks.for_each(|hash, b| {
+            blocks.push(SnapBlock {
+                hash: *hash,
+                len: b.len,
+                replicas: b.replicas.clone(),
+                refs: b.refs,
+                pending: b.pending,
+                pins: b.pins,
+                placed_by: b.placed_by.clone(),
+            });
+        });
+        blocks.sort_by_key(|b| b.hash);
+        let mut leases: Vec<SnapLease> = Vec::new();
+        self.leases.for_each(|id, l| {
+            leases.push(SnapLease {
+                id: *id,
+                tag: l.tag.clone(),
+                write: l.write,
+                hashes: l.hashes.clone(),
+            });
+        });
+        leases.sort_by_key(|l| l.id);
+        SnapshotState {
+            lsn,
+            files,
+            blocks,
+            nodes: g.nodes.iter().map(|n| n.addr.clone()).collect(),
+            leases,
+            next_lease: g.next_lease,
+        }
     }
-}
 
-/// Rebuild the in-memory state from a snapshot image.  Clocks restart
-/// conservatively: every node is "alive" as of now (the heartbeat
-/// window re-judges it within one timeout) and every lease gets a full
-/// TTL (surviving holders renew as usual, abandoned ones lapse one
-/// window after restart — PR 3's reclamation, just delayed).
-fn install_snapshot_into(
-    g: &mut Inner,
-    snap: &SnapshotState,
-    now: Instant,
-    lease_timeout: Duration,
-) {
-    g.files = snap
-        .files
-        .iter()
-        .map(|(name, version, blocks)| {
-            (
-                name.clone(),
-                FileEntry {
-                    version: *version,
-                    blocks: blocks.clone(),
-                },
-            )
-        })
-        .collect();
-    g.blocks = snap
-        .blocks
-        .iter()
-        .map(|b| {
-            (
+    /// Rebuild the in-memory state from a snapshot image.  Clocks
+    /// restart conservatively: every node is "alive" as of now (the
+    /// heartbeat window re-judges it within one timeout) and every
+    /// lease gets a full TTL (surviving holders renew as usual,
+    /// abandoned ones lapse one window after restart — PR 3's
+    /// reclamation, just delayed).
+    fn install_snapshot_into(&self, g: &mut Inner, snap: &SnapshotState, now: Instant) {
+        g.files = snap
+            .files
+            .iter()
+            .map(|(name, version, blocks)| {
+                (
+                    name.clone(),
+                    FileEntry {
+                        version: *version,
+                        blocks: blocks.clone(),
+                    },
+                )
+            })
+            .collect();
+        self.blocks.clear();
+        for b in &snap.blocks {
+            self.blocks.insert(
                 b.hash,
                 BlockInfo {
                     replicas: b.replicas.clone(),
@@ -2107,36 +2228,33 @@ fn install_snapshot_into(
                     pins: b.pins,
                     placed_by: b.placed_by.clone(),
                 },
-            )
-        })
-        .collect();
-    g.nodes = snap
-        .nodes
-        .iter()
-        .map(|addr| NodeSlot {
-            addr: addr.clone(),
-            last_beat: now,
-        })
-        .collect();
-    g.leases = snap
-        .leases
-        .iter()
-        .map(|l| {
-            (
+            );
+        }
+        g.nodes = snap
+            .nodes
+            .iter()
+            .map(|addr| NodeSlot {
+                addr: addr.clone(),
+                last_beat: now,
+            })
+            .collect();
+        self.leases.clear();
+        for l in &snap.leases {
+            self.leases.insert(
                 l.id,
                 Lease {
                     tag: l.tag.clone(),
                     write: l.write,
                     hashes: l.hashes.clone(),
-                    expires_at: now + lease_timeout,
+                    expires_at: now + self.lease_timeout,
                 },
-            )
-        })
-        .collect();
-    g.next_lease = snap.next_lease;
-    g.last_lsn = snap.lsn;
-    g.ship.clear();
-    g.crc_log.clear();
+            );
+        }
+        g.next_lease = snap.next_lease;
+        g.last_lsn = snap.lsn;
+        g.ship.clear();
+        g.crc_log.clear();
+    }
 }
 
 /// Keep the per-lsn crc history bounded (oldest entries fall off; the
@@ -2200,12 +2318,95 @@ struct Slot {
     epoch: u64,
 }
 
+// ---- the manager's serve loop (PR 9) ----
+
+/// Message tags the reactor routes by (must match [`Msg::tag`]; the
+/// `lane_tags_match_protocol` test pins them together).
+const TAG_HEARTBEAT: u8 = 19;
+const TAG_NODE_LIST: u8 = 20;
+const TAG_FETCH_SNAPSHOT: u8 = 30;
+const TAG_FETCH_WAL: u8 = 32;
+const TAG_REQUEST_VOTE: u8 = 34;
+const TAG_REPLICATE: u8 = 36;
+
+/// Worker lanes.  Three lanes keep the pool deadlock-free under
+/// consensus: client mutations (lane 0) may block inside the quorum
+/// barrier, peer consensus traffic (lane 1) may block calling back to
+/// the leader during catch-up, and reads (lane 2) never make an
+/// outbound call — so the messages a blocked lane is WAITING ON are
+/// always served by a different lane.
+const LANE_CLIENT: usize = 0;
+const LANE_PEER: usize = 1;
+const LANE_READ: usize = 2;
+
+/// Default client-lane worker count in event mode (mirrors the node's).
+pub const DEFAULT_MANAGER_SERVE_THREADS: usize = 4;
+const PEER_LANE_WORKERS: usize = 2;
+const READ_LANE_WORKERS: usize = 2;
+
+/// [`FrameHandler`] adapter: decodes each frame into a [`Msg`], routes
+/// it to a lane by tag, resolves the serve [`Slot`] per message (so
+/// crash/restart stays visible mid-connection) and suppresses replies
+/// computed against a crashed epoch — the exact semantics of the old
+/// thread-per-connection `serve_conn`, minus the thread.
+struct ManagerService {
+    slot: Arc<Mutex<Slot>>,
+}
+
+impl FrameHandler for ManagerService {
+    fn lanes(&self) -> usize {
+        3
+    }
+
+    fn lane(&self, tag: u8) -> usize {
+        match tag {
+            TAG_REQUEST_VOTE | TAG_REPLICATE => LANE_PEER,
+            TAG_HEARTBEAT | TAG_NODE_LIST | TAG_FETCH_SNAPSHOT | TAG_FETCH_WAL => LANE_READ,
+            _ => LANE_CLIENT,
+        }
+    }
+
+    fn on_frame(&self, tag: u8, body: Vec<u8>, replies: &mut Replies) {
+        let Ok(msg) = Msg::decode(tag, &body) else {
+            replies.sever();
+            return;
+        };
+        let (state, epoch) = {
+            let slot = self.slot.lock().unwrap();
+            if !slot.up {
+                replies.sever();
+                return;
+            }
+            (slot.state.clone(), slot.epoch)
+        };
+        let reply = state.handle_replicated(msg);
+        // A crash while we were handling: the state this reply was
+        // computed against is gone.  Sever instead of answering from
+        // the dead.
+        if self.slot.lock().unwrap().epoch != epoch {
+            replies.sever();
+            return;
+        }
+        replies.frame(reply.encode());
+    }
+}
+
+/// How a [`Manager`] serves its listener.
+enum ManagerServe {
+    /// PR 9 default: the readiness reactor + worker lanes.
+    Event(Option<Reactor>),
+    /// Legacy thread-per-connection accept loop (`--serve-threads 0`).
+    Thread {
+        accept_thread: Option<JoinHandle<()>>,
+    },
+}
+
 /// A running manager server.
 pub struct Manager {
     addr: String,
     slot: Arc<Mutex<Slot>>,
     stop: Arc<AtomicBool>,
-    accept_thread: Option<JoinHandle<()>>,
+    serve: ManagerServe,
     ticker_thread: Option<JoinHandle<()>>,
 }
 
@@ -2250,8 +2451,23 @@ impl Manager {
     /// Serve an already-built state on an already-bound listener.  The
     /// multi-manager cluster spawner binds every member's listener
     /// first so the full peer address list exists before any member's
-    /// consensus state is configured.
+    /// consensus state is configured.  Serves in the PR 9 default mode
+    /// (event-driven reactor); see [`Manager::serve_listener_opts`].
     pub fn serve_listener(listener: Listener, state: Arc<ManagerState>) -> Result<Manager> {
+        Manager::serve_listener_opts(listener, state, ServeMode::default(), 0)
+    }
+
+    /// Serve with an explicit serve mode.  `serve_threads` sizes the
+    /// client-mutation worker lane in event mode (0 = the default,
+    /// [`DEFAULT_MANAGER_SERVE_THREADS`]); the peer and read lanes have
+    /// fixed small pools.  Thread mode reproduces the pre-PR-9
+    /// thread-per-connection accept loop bit-for-bit.
+    pub fn serve_listener_opts(
+        listener: Listener,
+        state: Arc<ManagerState>,
+        mode: ServeMode,
+        serve_threads: usize,
+    ) -> Result<Manager> {
         let addr = listener.local_addr()?;
         let slot = Arc::new(Mutex::new(Slot {
             state,
@@ -2259,18 +2475,51 @@ impl Manager {
             epoch: 0,
         }));
         let stop = Arc::new(AtomicBool::new(false));
-        let (sl, sp) = (slot.clone(), stop.clone());
-        let accept_thread = std::thread::Builder::new()
-            .name("mosa-manager".into())
-            .spawn(move || accept_loop(listener, sl, sp))
-            .map_err(crate::Error::Io)?;
+        let serve = match mode {
+            ServeMode::Event => {
+                let client_workers = if serve_threads == 0 {
+                    DEFAULT_MANAGER_SERVE_THREADS
+                } else {
+                    serve_threads
+                };
+                let port = addr.rsplit(':').next().unwrap_or("0");
+                let reactor = Reactor::serve(
+                    listener,
+                    Arc::new(ManagerService { slot: slot.clone() }),
+                    ReactorOpts {
+                        name: format!("mg{port}"),
+                        workers: vec![client_workers, PEER_LANE_WORKERS, READ_LANE_WORKERS],
+                        ..ReactorOpts::default()
+                    },
+                )?;
+                ManagerServe::Event(Some(reactor))
+            }
+            ServeMode::Thread => {
+                let (sl, sp) = (slot.clone(), stop.clone());
+                let accept_thread = std::thread::Builder::new()
+                    .name("mosa-manager".into())
+                    .spawn(move || accept_loop(listener, sl, sp))
+                    .map_err(crate::Error::Io)?;
+                ManagerServe::Thread {
+                    accept_thread: Some(accept_thread),
+                }
+            }
+        };
         Ok(Manager {
             addr,
             slot,
             stop,
-            accept_thread: Some(accept_thread),
+            serve,
             ticker_thread: None,
         })
+    }
+
+    /// The serve loop's gauges (event mode only; `None` in thread mode).
+    pub fn serve_gauges(&self) -> Option<Arc<ServeGauges>> {
+        match &self.serve {
+            ManagerServe::Event(Some(r)) => Some(r.gauges()),
+            _ => None,
+        }
     }
 
     /// Run [`ManagerState::tick_consensus`] every `every` until
@@ -2369,14 +2618,28 @@ impl Manager {
         if self.stop.swap(true, Ordering::SeqCst) {
             return; // already shut down
         }
-        // Dedicated poke path: connect-and-close guarantees the blocked
-        // `accept()` returns at least once after the stop flag is set.
-        // The accept loop serves that last connection regardless (a
-        // real client racing shutdown gets its call answered; the poke
-        // itself sends nothing and its serve thread exits on EOF).
-        let _ = Conn::connect(&self.addr);
-        if let Some(t) = self.accept_thread.take() {
-            let _ = t.join();
+        match &mut self.serve {
+            // Event mode wakes its poll loop through the reactor's
+            // internal wake pipe — no self-connect poke needed (PR 9
+            // retired the poke: it could race the listener teardown and
+            // it burned an ephemeral port per shutdown).
+            ManagerServe::Event(reactor) => {
+                if let Some(mut r) = reactor.take() {
+                    r.shutdown();
+                }
+            }
+            // Thread mode still pokes: connect-and-close guarantees the
+            // blocked `accept()` returns at least once after the stop
+            // flag is set.  The accept loop serves that last connection
+            // regardless (a real client racing shutdown gets its call
+            // answered; the poke itself sends nothing and its serve
+            // thread exits on EOF).
+            ManagerServe::Thread { accept_thread } => {
+                let _ = Conn::connect(&self.addr);
+                if let Some(t) = accept_thread.take() {
+                    let _ = t.join();
+                }
+            }
         }
         if let Some(t) = self.ticker_thread.take() {
             let _ = t.join();
@@ -3468,5 +3731,183 @@ mod tests {
                 blocks: vec![meta(3)]
             }
         );
+    }
+
+    // ---- event-driven serving + sharded tables (PR 9) ----
+
+    /// The lane constants must track [`Msg::tag`] — if the wire tags
+    /// move, routing consensus traffic into the read lane would
+    /// reintroduce the cross-manager deadlock the lanes exist to
+    /// prevent.
+    #[test]
+    fn lane_tags_match_protocol() {
+        assert_eq!(Msg::Heartbeat { node: 0 }.tag(), TAG_HEARTBEAT);
+        assert_eq!(Msg::NodeList.tag(), TAG_NODE_LIST);
+        assert_eq!(Msg::FetchSnapshot.tag(), TAG_FETCH_SNAPSHOT);
+        assert_eq!(Msg::FetchWal { after: 0 }.tag(), TAG_FETCH_WAL);
+        assert_eq!(
+            Msg::RequestVote {
+                term: 0,
+                candidate: String::new(),
+                last_term: 0,
+                last_lsn: 0
+            }
+            .tag(),
+            TAG_REQUEST_VOTE
+        );
+        assert_eq!(
+            Msg::Replicate {
+                term: 0,
+                leader: String::new(),
+                prev_lsn: 0,
+                commit_lsn: 0,
+                records: Vec::new()
+            }
+            .tag(),
+            TAG_REPLICATE
+        );
+        let svc = ManagerService {
+            slot: Arc::new(Mutex::new(Slot {
+                state: Arc::new(ManagerState::default()),
+                up: true,
+                epoch: 0,
+            })),
+        };
+        assert_eq!(svc.lanes(), 3);
+        assert_eq!(svc.lane(TAG_REQUEST_VOTE), LANE_PEER);
+        assert_eq!(svc.lane(TAG_REPLICATE), LANE_PEER);
+        for t in [TAG_HEARTBEAT, TAG_NODE_LIST, TAG_FETCH_SNAPSHOT, TAG_FETCH_WAL] {
+            assert_eq!(svc.lane(t), LANE_READ);
+        }
+        assert_eq!(svc.lane(Msg::NodeList.tag()), LANE_READ);
+        assert_eq!(svc.lane(Msg::ListFiles.tag()), LANE_CLIENT);
+        assert_eq!(svc.lane(Msg::CommitBlockMap { file: String::new(), lease: 0, blocks: vec![] }.tag()), LANE_CLIENT);
+    }
+
+    /// The shard count must be unobservable: the same op sequence at 1,
+    /// 16 and 64 shards yields identical snapshot images (snapshots
+    /// sort, so iteration order cannot leak through).
+    #[test]
+    fn sharded_tables_default_and_with_shards_agree() {
+        let run = |shards: usize| {
+            let s = ManagerState::with_shards(
+                Box::new(RoundRobinStripe::default()),
+                Duration::from_secs(5),
+                shards,
+            );
+            join_nodes(&s, 2);
+            let lease = open_write_lease(&s, "sess");
+            s.handle(Msg::AllocPlacement {
+                file: "sess".into(),
+                lease,
+                blocks: (0..32u8).map(|i| BlockSpec { hash: [i; 16], len: 10 }).collect(),
+            });
+            s.handle(Msg::CommitBlockMap {
+                file: "f".into(),
+                lease,
+                blocks: (0..16u8)
+                    .map(|i| BlockMeta { hash: [i; 16], len: 10, replicas: vec![(i % 2) as u32] })
+                    .collect(),
+            });
+            let Msg::LeaseGrant { lease: rl, .. } = s.handle(Msg::OpenLease {
+                file: "f".into(),
+                write: false,
+            }) else {
+                panic!()
+            };
+            assert!(rl != 0);
+            s.handle(Msg::CommitBlockMap {
+                file: "f".into(),
+                lease: 0,
+                blocks: vec![meta(200)],
+            });
+            s.snapshot_state()
+        };
+        let one = run(1);
+        assert_eq!(one, run(16));
+        assert_eq!(one, run(64));
+    }
+
+    /// Event-mode manager: serves the protocol, exposes gauges, and a
+    /// shutdown leaks no `mg{port}-` threads and needs no self-connect
+    /// poke (the listener is already closed when shutdown returns).
+    #[test]
+    fn event_manager_gauges_and_clean_shutdown() {
+        let threads_with_prefix = |prefix: &str| -> usize {
+            let mut n = 0;
+            if let Ok(tasks) = std::fs::read_dir("/proc/self/task") {
+                for t in tasks.flatten() {
+                    if let Ok(comm) = std::fs::read_to_string(t.path().join("comm")) {
+                        if comm.trim_end().starts_with(prefix) {
+                            n += 1;
+                        }
+                    }
+                }
+            }
+            n
+        };
+        let mut mgr = Manager::serve_listener_opts(
+            Listener::bind("127.0.0.1:0").unwrap(),
+            Arc::new(ManagerState::default()),
+            ServeMode::Event,
+            2,
+        )
+        .unwrap();
+        let port = mgr.addr().rsplit(':').next().unwrap().to_string();
+        let prefix = format!("mg{port}");
+        assert!(
+            threads_with_prefix(&prefix) >= 2 + 2 + 2 + 1,
+            "three worker lanes + poll thread running"
+        );
+        let mut c = Conn::connect(mgr.addr()).unwrap();
+        Msg::NodeJoin { addr: "x:1".into() }.write_to(&mut c).unwrap();
+        assert_eq!(
+            Msg::read_from(&mut c).unwrap().unwrap(),
+            Msg::NodeId { id: 0 }
+        );
+        Msg::ListFiles.write_to(&mut c).unwrap();
+        assert!(matches!(
+            Msg::read_from(&mut c).unwrap().unwrap(),
+            Msg::Files { .. }
+        ));
+        let gauges = mgr.serve_gauges().expect("event mode exposes gauges");
+        let snap = gauges.snapshot();
+        assert!(snap.open_conns >= 1, "our connection is counted");
+        assert_eq!(snap.workers_total, 2 + 2 + 2);
+        assert!(snap.frames_served >= 2);
+        drop(c);
+        mgr.shutdown();
+        mgr.shutdown(); // idempotent
+        assert_eq!(
+            threads_with_prefix(&prefix),
+            0,
+            "no serve threads leaked past shutdown"
+        );
+        assert!(
+            Conn::connect(mgr.addr()).is_err(),
+            "listener closed by the time shutdown returns"
+        );
+    }
+
+    /// `--serve-threads 0`-style fallback: the legacy accept loop still
+    /// serves, and reports no gauges.
+    #[test]
+    fn thread_mode_manager_still_serves() {
+        let mut mgr = Manager::serve_listener_opts(
+            Listener::bind("127.0.0.1:0").unwrap(),
+            Arc::new(ManagerState::default()),
+            ServeMode::Thread,
+            0,
+        )
+        .unwrap();
+        assert!(mgr.serve_gauges().is_none(), "thread mode has no reactor");
+        let mut c = Conn::connect(mgr.addr()).unwrap();
+        Msg::ListFiles.write_to(&mut c).unwrap();
+        assert_eq!(
+            Msg::read_from(&mut c).unwrap().unwrap(),
+            Msg::Files { files: vec![] }
+        );
+        drop(c);
+        mgr.shutdown();
     }
 }

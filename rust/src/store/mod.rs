@@ -54,6 +54,13 @@
 //!   (`std::io::Read`, prefetching + integrity-verified block streaming
 //!   with replica failover).
 //! * [`proto`] — the length-prefixed wire protocol shared by all three.
+//! * [`reactor`] — the event-driven serve loop (PR 9): a hand-rolled
+//!   `poll(2)` readiness reactor + fixed worker pool that multiplexes
+//!   thousands of connections over a handful of threads; both the node
+//!   and the manager serve through it by default.
+//! * [`shard`] — hash-prefix-sharded maps backing the manager's block
+//!   and lease tables (per-shard locks; the WAL stays a single total
+//!   order).
 //! * [`partition`] — deterministic in-process network partitions for
 //!   the fault-injection harness (cut/heal any manager pair).
 //! * [`cluster`] — spawn a full single-process cluster (manager + nodes)
@@ -72,8 +79,10 @@ pub mod manager;
 pub mod node;
 pub mod partition;
 pub mod proto;
+pub mod reactor;
 pub mod sai;
 pub mod session;
+pub mod shard;
 
 pub use cluster::Cluster;
 pub use duplex::DuplexClient;
@@ -82,6 +91,8 @@ pub use manager::{
     ReplicatedStripe, Role, RoundRobinStripe, DEFAULT_LEASE_TIMEOUT,
 };
 pub use node::{NodeOpts, StorageNode};
+pub use reactor::{FrameHandler, Reactor, ReactorOpts, Replies};
+pub use shard::{ShardKey, ShardedMap};
 pub use proto::{Assignment, BlockMeta, BlockSpec, Msg, NodeEntry};
 pub use sai::{Sai, WriteReport};
 pub use session::{FileReader, FileWriter};

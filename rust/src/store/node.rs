@@ -6,20 +6,27 @@
 //! spawn ([`Msg::NodeJoin`]), heartbeats it for liveness, and handles
 //! [`Msg::DeleteBlock`] so the manager can reclaim unreferenced blocks.
 //!
-//! Data-plane v2 (pipelined duplex): each connection is served by a
-//! **request-reader loop** plus a dedicated **reply-writer thread**, so
-//! the node decodes request N+1 while reply N is still draining onto
-//! the wire — the server half of the client's pipelined
-//! [`DuplexClient`](super::duplex::DuplexClient).  Blocks are stored as
-//! shared [`Arc`] payloads and `Data` replies stream straight out of
-//! the store ([`Msg::data_header`] + payload), so a get never copies
-//! the block on the node.  Two optional fidelity knobs for single-host
-//! experiments: a reply-side [`Shaper`] models the node's NIC, and
-//! `reply_latency` models the fabric round-trip a real deployment would
-//! add to every request→reply turnaround (implemented as a delay line:
-//! each reply is released `reply_latency` after its request arrived, so
-//! pipelined replies overlap their delays exactly like real in-flight
-//! packets, while a lock-step client pays the latency once per block).
+//! Serve architecture (PR 9): by default every node runs an
+//! **event-driven reactor** ([`super::reactor`]) — one poll thread owns
+//! all sockets and a fixed worker pool runs the handlers, so thousands
+//! of connections cost a handful of threads.  The pre-PR-9
+//! thread-per-connection path (request-reader loop + dedicated
+//! reply-writer thread per socket) is retained behind
+//! [`ServeMode::Thread`] as the benchmark baseline
+//! (`cargo bench --bench sessions`).  Both paths speak the identical
+//! wire protocol and preserve the pipelined
+//! [`DuplexClient`](super::duplex::DuplexClient) contract: requests on
+//! one connection are served FIFO and replies leave in request order.
+//! Blocks are stored as shared [`Arc`] payloads and `Data` replies
+//! stream straight out of the store ([`Msg::data_header`] + payload),
+//! so a get never copies the block on the node.  Two optional fidelity
+//! knobs for single-host experiments: a reply-side [`Shaper`] models
+//! the node's NIC, and `reply_latency` models the fabric round-trip a
+//! real deployment would add to every request→reply turnaround
+//! (implemented as a delay line: each reply is released `reply_latency`
+//! after its request arrived, so pipelined replies overlap their delays
+//! exactly like real in-flight packets, while a lock-step client pays
+//! the latency once per block).
 
 use std::collections::HashMap;
 use std::io::{BufReader, BufWriter, Write as _};
@@ -31,9 +38,15 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::proto::Msg;
+use super::reactor::{FrameHandler, Reactor, ReactorOpts, Replies};
+use crate::config::ServeMode;
 use crate::hash::Digest;
+use crate::metrics::ServeGauges;
 use crate::net::{Conn, Listener, Shaper};
 use crate::Result;
+
+/// Default reactor worker-pool size when `serve_threads` is 0.
+const DEFAULT_SERVE_THREADS: usize = 4;
 
 /// How often a registered node beacons the manager.
 const HEARTBEAT_INTERVAL: Duration = Duration::from_millis(250);
@@ -146,6 +159,34 @@ impl NodeState {
     }
 }
 
+/// Reactor glue: one call per request frame, single lane (node handlers
+/// never block on remote calls).
+struct NodeService {
+    state: Arc<NodeState>,
+}
+
+impl FrameHandler for NodeService {
+    fn on_frame(&self, tag: u8, body: Vec<u8>, replies: &mut Replies) {
+        let msg = match Msg::decode(tag, &body) {
+            Ok(m) => m,
+            Err(_) => {
+                // Framing/decoding violation: sever, matching the
+                // threaded loop's broken read.
+                replies.sever();
+                return;
+            }
+        };
+        match self.state.dispatch(msg) {
+            Reply::Msg(m) => replies.frame(m.encode()),
+            Reply::Data { req, data } => {
+                // Copy-free get path: the header is owned, the payload
+                // is the store's Arc sliced straight onto the wire.
+                replies.frame_with_body(Msg::data_header(req, data.len()).to_vec(), data)
+            }
+        }
+    }
+}
+
 /// Spawn-time options for a [`StorageNode`] beyond the bind address.
 #[derive(Default)]
 pub struct NodeOpts {
@@ -163,16 +204,32 @@ pub struct NodeOpts {
     /// long after its request arrived (a delay line — pipelined replies
     /// overlap their delays; a lock-step client pays it per block).
     pub reply_latency: Duration,
+    /// Serve architecture: event-driven reactor (default) or the legacy
+    /// thread-per-connection baseline.
+    pub serve_mode: ServeMode,
+    /// Reactor worker threads (`0` = built-in default); ignored in
+    /// [`ServeMode::Thread`].
+    pub serve_threads: usize,
+}
+
+/// The node's serve path: a reactor, or the legacy thread-per-conn
+/// accept loop (benchmark baseline).
+enum Serve {
+    Event(Option<Reactor>),
+    Thread {
+        stop: Arc<AtomicBool>,
+        accept_thread: Option<JoinHandle<()>>,
+        /// Live connections (for failure injection: `shutdown` severs
+        /// them).  The reactor severs its own on shutdown.
+        conns: Arc<Mutex<Vec<Conn>>>,
+    },
 }
 
 /// A running storage node server.
 pub struct StorageNode {
     addr: String,
     state: Arc<NodeState>,
-    stop: Arc<AtomicBool>,
-    accept_thread: Option<JoinHandle<()>>,
-    /// Live connections (for failure injection: `shutdown` severs them).
-    conns: Arc<Mutex<Vec<Conn>>>,
+    serve: Serve,
     /// Manager-assigned id, when registered.
     node_id: Option<u32>,
     /// Stop channel + handle of the heartbeat thread, when registered.
@@ -237,6 +294,8 @@ impl StorageNode {
             advertise,
             reply_shaper,
             reply_latency,
+            serve_mode,
+            serve_threads,
         } = opts;
         if let Some(d) = &disk_dir {
             std::fs::create_dir_all(d)?;
@@ -247,19 +306,49 @@ impl StorageNode {
             blocks: Mutex::new(HashMap::new()),
             disk_dir,
         });
-        let stop = Arc::new(AtomicBool::new(false));
-        let conns: Arc<Mutex<Vec<Conn>>> = Arc::new(Mutex::new(Vec::new()));
-        let (st, sp, cn) = (state.clone(), stop.clone(), conns.clone());
-        let accept_thread = std::thread::Builder::new()
-            .name("mosa-node".into())
-            .spawn(move || accept_loop(listener, st, sp, cn, reply_shaper, reply_latency))
-            .map_err(crate::Error::Io)?;
+        let serve = match serve_mode {
+            ServeMode::Event => {
+                let workers = if serve_threads == 0 {
+                    DEFAULT_SERVE_THREADS
+                } else {
+                    serve_threads
+                };
+                // Unique thread-name prefix per node (tests count live
+                // serve threads by it; kernel truncates at 15 bytes).
+                let port = addr.rsplit(':').next().unwrap_or("0");
+                let reactor = Reactor::serve(
+                    listener,
+                    Arc::new(NodeService {
+                        state: state.clone(),
+                    }),
+                    ReactorOpts {
+                        name: format!("nd{port}"),
+                        workers: vec![workers],
+                        reply_latency,
+                        reply_shaper,
+                    },
+                )?;
+                Serve::Event(Some(reactor))
+            }
+            ServeMode::Thread => {
+                let stop = Arc::new(AtomicBool::new(false));
+                let conns: Arc<Mutex<Vec<Conn>>> = Arc::new(Mutex::new(Vec::new()));
+                let (st, sp, cn) = (state.clone(), stop.clone(), conns.clone());
+                let accept_thread = std::thread::Builder::new()
+                    .name("mosa-node".into())
+                    .spawn(move || accept_loop(listener, st, sp, cn, reply_shaper, reply_latency))
+                    .map_err(crate::Error::Io)?;
+                Serve::Thread {
+                    stop,
+                    accept_thread: Some(accept_thread),
+                    conns,
+                }
+            }
+        };
         let mut node = StorageNode {
             addr,
             state,
-            stop,
-            accept_thread: Some(accept_thread),
-            conns,
+            serve,
             node_id: None,
             heartbeat: None,
         };
@@ -345,24 +434,47 @@ impl StorageNode {
         &self.state
     }
 
+    /// Live serve-loop gauges (None in [`ServeMode::Thread`]).
+    pub fn serve_gauges(&self) -> Option<Arc<ServeGauges>> {
+        match &self.serve {
+            Serve::Event(Some(r)) => Some(r.gauges()),
+            _ => None,
+        }
+    }
+
     /// Stop accepting and sever every live connection (failure
     /// injection: in-flight client requests observe errors, not hangs).
+    /// The reactor path wakes its poll loop through the pipe and joins
+    /// every serve thread — no self-connect poke.  Idempotent.
     pub fn shutdown(&mut self) {
-        if self.stop.swap(true, Ordering::SeqCst) {
-            return; // already shut down
-        }
         if let Some((tx, handle)) = self.heartbeat.take() {
             let _ = tx.send(()); // wake the heartbeat thread promptly
             let _ = handle.join();
         }
-        // Dedicated poke path (see Manager::shutdown): guarantees the
-        // blocked accept() returns after the stop flag is set.
-        let _ = Conn::connect(&self.addr);
-        if let Some(t) = self.accept_thread.take() {
-            let _ = t.join();
-        }
-        for c in self.conns.lock().unwrap().drain(..) {
-            c.shutdown();
+        match &mut self.serve {
+            Serve::Event(reactor) => {
+                if let Some(mut r) = reactor.take() {
+                    r.shutdown();
+                }
+            }
+            Serve::Thread {
+                stop,
+                accept_thread,
+                conns,
+            } => {
+                if stop.swap(true, Ordering::SeqCst) {
+                    return; // already shut down
+                }
+                // Dedicated poke path (legacy loop only): guarantees the
+                // blocked accept() returns after the stop flag is set.
+                let _ = Conn::connect(&self.addr);
+                if let Some(t) = accept_thread.take() {
+                    let _ = t.join();
+                }
+                for c in conns.lock().unwrap().drain(..) {
+                    c.shutdown();
+                }
+            }
         }
     }
 }
@@ -738,6 +850,76 @@ mod tests {
             dt < Duration::from_millis(16 * 30),
             "delays must overlap, not queue: {dt:?}"
         );
+    }
+
+    #[test]
+    fn thread_mode_baseline_still_serves_pipelined() {
+        // The legacy thread-per-connection path stays wire-compatible
+        // (it is the sessions bench's baseline arm).
+        let node = StorageNode::spawn_opts(
+            "127.0.0.1:0",
+            NodeOpts {
+                serve_mode: ServeMode::Thread,
+                ..NodeOpts::default()
+            },
+        )
+        .unwrap();
+        assert!(node.serve_gauges().is_none(), "no gauges in thread mode");
+        let mut c = Conn::connect(node.addr()).unwrap();
+        for i in 0..8u64 {
+            Msg::PutBlock {
+                req: i,
+                hash: [i as u8; 16],
+                data: vec![i as u8; 10],
+            }
+            .write_to(&mut c)
+            .unwrap();
+        }
+        for i in 0..8u64 {
+            assert_eq!(
+                Msg::read_from(&mut c).unwrap().unwrap(),
+                Msg::OkFor { req: i }
+            );
+        }
+    }
+
+    #[test]
+    fn event_mode_exposes_gauges_and_leaks_no_threads() {
+        let count = |prefix: &str| {
+            std::fs::read_dir("/proc/self/task")
+                .unwrap()
+                .flatten()
+                .filter(|e| {
+                    std::fs::read_to_string(e.path().join("comm"))
+                        .map(|n| n.trim_end().starts_with(prefix))
+                        .unwrap_or(false)
+                })
+                .count()
+        };
+        let mut node = StorageNode::spawn("127.0.0.1:0").unwrap();
+        let port = node.addr().rsplit(':').next().unwrap().to_string();
+        let prefix = format!("nd{port}");
+        assert!(count(&prefix) >= 2, "poll + worker threads running");
+        let mut c = Conn::connect(node.addr()).unwrap();
+        Msg::PutBlock {
+            req: 1,
+            hash: [1; 16],
+            data: vec![1; 8],
+        }
+        .write_to(&mut c)
+        .unwrap();
+        assert_eq!(
+            Msg::read_from(&mut c).unwrap().unwrap(),
+            Msg::OkFor { req: 1 }
+        );
+        let g = node.serve_gauges().expect("event mode has gauges");
+        let s = g.snapshot();
+        assert_eq!(s.open_conns, 1);
+        assert_eq!(s.frames_served, 1);
+        assert!(s.workers_total >= 1);
+        node.shutdown();
+        assert_eq!(count(&prefix), 0, "serve threads must join on shutdown");
+        node.shutdown(); // idempotent
     }
 
     #[test]

@@ -423,7 +423,10 @@ pub enum Msg {
 }
 
 impl Msg {
-    fn tag(&self) -> u8 {
+    /// Wire tag of this message (the byte after the length prefix).
+    /// Public so the event-driven serve loop can route frames to worker
+    /// lanes before decoding the payload.
+    pub fn tag(&self) -> u8 {
         match self {
             Msg::GetBlockMap { .. } => 1,
             Msg::CommitBlockMap { .. } => 2,

@@ -1,0 +1,1004 @@
+//! Event-driven serve loop (PR 9): a hand-rolled readiness reactor that
+//! multiplexes thousands of connections over a handful of threads.
+//!
+//! The pre-PR-9 node and manager spent 2+ OS threads per connection
+//! (reader + delayed-reply writer), which dies at tens of sessions —
+//! fatal for the north star's "millions of users".  GNStor (PAPERS.md)
+//! is the exemplar: a remote array serving many initiators at line rate
+//! from a small number of event-driven cores.  This module is the
+//! zero-dependency equivalent: nonblocking std TCP plus a `poll(2)`
+//! readiness loop (declared directly against libc, which std already
+//! links) driving a fixed worker pool.
+//!
+//! Architecture:
+//!
+//! - One **poll thread** owns every socket.  It accepts, reads, parses
+//!   length-prefixed frames into each connection's `pending` queue, and
+//!   flushes each connection's `outbox` back to the wire — honoring
+//!   per-reply due times (the modeled fabric RTT delay line) and the
+//!   optional bandwidth [`Shaper`] without ever parking.
+//! - A fixed pool of **workers**, partitioned into *lanes*, pops ready
+//!   connections and runs the protocol handler.  A connection is
+//!   *claimed* by at most one worker at a time and its frames are
+//!   served FIFO, so replies stay in request order — the pipelined
+//!   duplex client's ordering contract is preserved.
+//! - A **wake pipe** lets workers and `shutdown` interrupt `poll`
+//!   directly: no more self-connect "poke" connections to unblock a
+//!   blocking accept loop.
+//!
+//! Lanes exist for the manager: a consensus leader's mutation handler
+//! blocks on remote quorum acks while a follower's `Replicate` handler
+//! may block fetching the leader's snapshot — if those shared one pool
+//! with the snapshot-serving reads, two mutually-replicating managers
+//! could deadlock.  Handlers that never block remotely get their own
+//! lane, breaking the cycle ([`FrameHandler::lane`]).
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::proto::MAX_FRAME;
+use crate::metrics::ServeGauges;
+use crate::net::{Listener, Shaper};
+use crate::Result;
+
+/// Shaping granularity, matching [`crate::net::Conn`]: tokens are
+/// claimed per segment so large replies smear over time.
+const SEG: usize = 64 * 1024;
+
+/// Raw libc declarations (std links libc; declaring the three syscall
+/// wrappers we need keeps the zero-dependency constraint).
+#[allow(non_camel_case_types)]
+mod sys {
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+    pub const POLLERR: i16 = 0x008;
+    pub const POLLHUP: i16 = 0x010;
+    pub const POLLNVAL: i16 = 0x020;
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct pollfd {
+        pub fd: i32,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    extern "C" {
+        pub fn poll(fds: *mut pollfd, nfds: u64, timeout: i32) -> i32;
+        pub fn pipe(fds: *mut i32) -> i32;
+        pub fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+        pub fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+        pub fn close(fd: i32) -> i32;
+    }
+}
+
+/// Self-pipe used to interrupt `poll(2)` from workers and `shutdown`.
+struct WakePipe {
+    r: i32,
+    w: i32,
+}
+
+impl WakePipe {
+    fn new() -> Result<WakePipe> {
+        let mut fds = [0i32; 2];
+        if unsafe { sys::pipe(fds.as_mut_ptr()) } != 0 {
+            return Err(crate::Error::Other("pipe() failed".into()));
+        }
+        Ok(WakePipe {
+            r: fds[0],
+            w: fds[1],
+        })
+    }
+
+    /// Make the next (or current) `poll` call return immediately.
+    fn wake(&self) {
+        let b = [1u8];
+        unsafe { sys::write(self.w, b.as_ptr(), 1) };
+    }
+
+    /// Swallow queued wake bytes.  Called only when the read end polled
+    /// readable; reads once, so it never blocks (leftovers just make
+    /// the next poll return immediately, which is harmless).
+    fn drain(&self) {
+        let mut b = [0u8; 256];
+        unsafe { sys::read(self.r, b.as_mut_ptr(), b.len()) };
+    }
+}
+
+impl Drop for WakePipe {
+    fn drop(&mut self) {
+        unsafe {
+            sys::close(self.r);
+            sys::close(self.w);
+        }
+    }
+}
+
+/// Protocol glue between the reactor and a node/manager: one call per
+/// complete request frame.
+pub trait FrameHandler: Send + Sync + 'static {
+    /// Handle one request frame (already stripped of its length prefix)
+    /// and append any replies.
+    fn on_frame(&self, tag: u8, body: Vec<u8>, replies: &mut Replies);
+
+    /// Number of worker lanes this handler wants (default 1).
+    fn lanes(&self) -> usize {
+        1
+    }
+
+    /// Which lane serves a connection whose next pending frame has
+    /// `tag`.  Handlers that can block on *remote* calls must keep
+    /// never-blocking tags in a separate lane (see module docs).
+    fn lane(&self, _tag: u8) -> usize {
+        0
+    }
+}
+
+/// Reply sink handed to [`FrameHandler::on_frame`].  Replies inherit
+/// the frame's arrival time plus the configured reply latency as their
+/// *due* time — the same delay line the threaded node used, letting
+/// pipelined requests overlap their modeled RTTs.
+pub struct Replies {
+    due: Instant,
+    out: Vec<OutMsg>,
+    close: bool,
+}
+
+impl Replies {
+    /// Queue one encoded reply frame.
+    pub fn frame(&mut self, frame: Vec<u8>) {
+        self.out.push(OutMsg {
+            due: self.due,
+            header: frame,
+            body: None,
+        });
+    }
+
+    /// Queue a header + shared payload (the copy-free `Data` reply
+    /// path: the block's `Arc` is sliced straight onto the wire).
+    pub fn frame_with_body(&mut self, header: Vec<u8>, body: Arc<Vec<u8>>) {
+        self.out.push(OutMsg {
+            due: self.due,
+            header,
+            body: Some(body),
+        });
+    }
+
+    /// Sever this connection immediately (protocol error, or a crashed
+    /// manager slot suppressing its reply).  Queued replies are
+    /// discarded, mirroring a killed thread-per-connection handler.
+    pub fn sever(&mut self) {
+        self.close = true;
+    }
+}
+
+/// One queued reply: an owned header (usually the whole frame) plus an
+/// optional shared payload.
+struct OutMsg {
+    due: Instant,
+    header: Vec<u8>,
+    body: Option<Arc<Vec<u8>>>,
+}
+
+impl OutMsg {
+    fn total(&self) -> usize {
+        self.header.len() + self.body.as_ref().map_or(0, |b| b.len())
+    }
+
+    /// Up to `max` contiguous unwritten bytes starting at `off`.
+    fn chunk(&self, off: usize, max: usize) -> &[u8] {
+        let h = self.header.len();
+        if off < h {
+            &self.header[off..h.min(off + max)]
+        } else {
+            let b = self.body.as_ref().map_or(&[][..], |b| &b[..]);
+            let boff = off - h;
+            &b[boff..b.len().min(boff + max)]
+        }
+    }
+}
+
+/// Connection state shared between the poll thread (producer of
+/// `pending`, consumer of `outbox`) and workers (the reverse).
+struct ConnShared {
+    /// Complete request frames awaiting a worker: (arrival, tag, body).
+    pending: Mutex<VecDeque<(Instant, u8, Vec<u8>)>>,
+    /// True while some worker owns this connection's frames.  At most
+    /// one claimant at a time keeps replies in request order.
+    claimed: AtomicBool,
+    /// Replies awaiting the wire.
+    outbox: Mutex<VecDeque<OutMsg>>,
+    /// Worker asked for an immediate sever.
+    sever: AtomicBool,
+}
+
+impl ConnShared {
+    fn new() -> ConnShared {
+        ConnShared {
+            pending: Mutex::new(VecDeque::new()),
+            claimed: AtomicBool::new(false),
+            outbox: Mutex::new(VecDeque::new()),
+            sever: AtomicBool::new(false),
+        }
+    }
+}
+
+/// One worker lane: a FIFO of claimed-and-ready connections.
+#[derive(Default)]
+struct Lane {
+    q: Mutex<VecDeque<Arc<ConnShared>>>,
+    cv: Condvar,
+}
+
+/// Everything the poll thread and workers share.
+struct Core {
+    handler: Arc<dyn FrameHandler>,
+    lanes: Vec<Lane>,
+    stop: AtomicBool,
+    wake: WakePipe,
+    gauges: Arc<ServeGauges>,
+    reply_latency: Duration,
+    shaper: Option<Arc<Shaper>>,
+}
+
+impl Core {
+    /// Hand `conn` to a worker lane if it has pending frames and nobody
+    /// owns it yet.  Called by the poll thread after parsing frames and
+    /// by workers after releasing a claim (the release/recheck pair
+    /// guarantees no frame is stranded unclaimed).
+    fn dispatch(&self, conn: &Arc<ConnShared>) {
+        loop {
+            if conn.claimed.swap(true, Ordering::AcqRel) {
+                // The current owner re-checks `pending` after releasing.
+                return;
+            }
+            let tag = conn.pending.lock().unwrap().front().map(|(_, t, _)| *t);
+            match tag {
+                Some(tag) => {
+                    let lane = self.handler.lane(tag).min(self.lanes.len() - 1);
+                    self.gauges.ready_depth.fetch_add(1, Ordering::Relaxed);
+                    let l = &self.lanes[lane];
+                    l.q.lock().unwrap().push_back(conn.clone());
+                    l.cv.notify_one();
+                    return;
+                }
+                None => {
+                    conn.claimed.store(false, Ordering::Release);
+                    if conn.pending.lock().unwrap().is_empty() {
+                        return;
+                    }
+                    // A frame landed between the check and the release;
+                    // retry so it cannot be stranded.
+                }
+            }
+        }
+    }
+}
+
+/// Worker body: serve claimed connections' frames FIFO until shutdown.
+fn worker_loop(core: Arc<Core>, lane_idx: usize) {
+    let lane = &core.lanes[lane_idx];
+    loop {
+        let conn = {
+            let mut q = lane.q.lock().unwrap();
+            loop {
+                if let Some(c) = q.pop_front() {
+                    break c;
+                }
+                if core.stop.load(Ordering::Acquire) {
+                    return;
+                }
+                q = lane.cv.wait(q).unwrap();
+            }
+        };
+        core.gauges.ready_depth.fetch_sub(1, Ordering::Relaxed);
+        core.gauges.workers_busy.fetch_add(1, Ordering::Relaxed);
+        let mut served = 0u64;
+        loop {
+            let item = conn.pending.lock().unwrap().pop_front();
+            let Some((arrived, tag, body)) = item else {
+                break;
+            };
+            let mut replies = Replies {
+                due: arrived + core.reply_latency,
+                out: Vec::new(),
+                close: false,
+            };
+            core.handler.on_frame(tag, body, &mut replies);
+            if !replies.out.is_empty() {
+                conn.outbox.lock().unwrap().extend(replies.out);
+            }
+            served += 1;
+            if replies.close {
+                conn.sever.store(true, Ordering::Release);
+                break;
+            }
+        }
+        conn.claimed.store(false, Ordering::Release);
+        if served > 0 || conn.sever.load(Ordering::Acquire) {
+            core.gauges.frames_served.fetch_add(served, Ordering::Relaxed);
+            core.wake.wake();
+        }
+        if !conn.pending.lock().unwrap().is_empty() {
+            core.dispatch(&conn);
+        }
+        core.gauges.workers_busy.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Poll-thread-private per-connection state.
+struct PollConn {
+    stream: TcpStream,
+    shared: Arc<ConnShared>,
+    /// Partial inbound frame bytes.
+    inbuf: Vec<u8>,
+    /// Client half-closed its write side; serve what's queued, flush,
+    /// then close (the duplex client's graceful-teardown contract).
+    eof: bool,
+    /// Bytes of the front outbox message already written.
+    woff: usize,
+    /// Shaper-reserved bytes not yet written (carried across
+    /// `WouldBlock` so tokens are never double-claimed).
+    reserved: usize,
+    /// Earliest instant the reserved segment may hit the wire.
+    gate: Instant,
+    /// Socket returned `WouldBlock`; wait for `POLLOUT`.
+    want_pollout: bool,
+    /// Read/write error; reap on the next sweep.
+    dead: bool,
+}
+
+enum Flush {
+    /// Outbox empty.
+    Idle,
+    /// More to write, but not before this instant (due time or shaper
+    /// gate) — becomes the poll timeout.
+    WaitUntil(Instant),
+    /// Socket buffer full; `POLLOUT` registered.
+    Blocked,
+    /// Connection broke.
+    Dead,
+}
+
+/// Write as much of the outbox as due times, the shaper and the socket
+/// allow.  Runs on the poll thread only.
+fn flush_conn(pc: &mut PollConn, shaper: &Option<Arc<Shaper>>) -> Flush {
+    if pc.want_pollout {
+        return Flush::Blocked;
+    }
+    let mut ob = pc.shared.outbox.lock().unwrap();
+    loop {
+        let Some(front) = ob.front() else {
+            return Flush::Idle;
+        };
+        let now = Instant::now();
+        if front.due > now {
+            return Flush::WaitUntil(front.due);
+        }
+        let total = front.total();
+        if pc.reserved == 0 {
+            let seg = (total - pc.woff).min(SEG);
+            if seg == 0 {
+                ob.pop_front();
+                pc.woff = 0;
+                continue;
+            }
+            pc.gate = match shaper {
+                Some(sh) => now + sh.reserve(seg as u64),
+                None => now,
+            };
+            pc.reserved = seg;
+        }
+        if pc.gate > now {
+            return Flush::WaitUntil(pc.gate);
+        }
+        let chunk = front.chunk(pc.woff, pc.reserved);
+        match pc.stream.write(chunk) {
+            Ok(0) => return Flush::Dead,
+            Ok(n) => {
+                pc.woff += n;
+                pc.reserved -= n;
+                if pc.woff == total {
+                    ob.pop_front();
+                    pc.woff = 0;
+                    pc.reserved = 0;
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                pc.want_pollout = true;
+                return Flush::Blocked;
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => return Flush::Dead,
+        }
+    }
+}
+
+/// Drain readable bytes, parse complete frames into `pending`, and
+/// dispatch.  Runs on the poll thread only.
+fn read_conn(pc: &mut PollConn, buf: &mut [u8], core: &Core) {
+    loop {
+        match pc.stream.read(buf) {
+            Ok(0) => {
+                pc.eof = true;
+                break;
+            }
+            Ok(n) => {
+                pc.inbuf.extend_from_slice(&buf[..n]);
+                if n < buf.len() {
+                    break;
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => {
+                pc.dead = true;
+                return;
+            }
+        }
+    }
+    let now = Instant::now();
+    let mut consumed = 0;
+    let mut pushed = false;
+    loop {
+        let rem = &pc.inbuf[consumed..];
+        if rem.len() < 4 {
+            break;
+        }
+        let len = u32::from_le_bytes([rem[0], rem[1], rem[2], rem[3]]) as usize;
+        if len == 0 || len > MAX_FRAME + 1 {
+            pc.dead = true; // framing violation: sever, like read_from
+            break;
+        }
+        if rem.len() < 4 + len {
+            break;
+        }
+        let tag = rem[4];
+        let body = rem[5..4 + len].to_vec();
+        pc.shared
+            .pending
+            .lock()
+            .unwrap()
+            .push_back((now, tag, body));
+        pushed = true;
+        consumed += 4 + len;
+    }
+    if consumed > 0 {
+        pc.inbuf.drain(..consumed);
+    }
+    if pushed {
+        core.dispatch(&pc.shared);
+    }
+}
+
+/// The poll thread: accept, read, flush, sleep until the next due time.
+fn poll_loop(listener: TcpListener, core: Arc<Core>) {
+    let _ = listener.set_nonblocking(true);
+    let mut conns: HashMap<u64, PollConn> = HashMap::new();
+    let mut next_id: u64 = 1;
+    let mut read_buf = vec![0u8; 256 * 1024];
+    let mut pfds: Vec<sys::pollfd> = Vec::new();
+    let mut slot_ids: Vec<u64> = Vec::new();
+    loop {
+        if core.stop.load(Ordering::Acquire) {
+            break;
+        }
+        // Flush, then reap connections that are finished: severed,
+        // broken, or gracefully done (client EOF + everything served).
+        let mut next_wake: Option<Instant> = None;
+        for pc in conns.values_mut() {
+            if pc.dead || pc.shared.sever.load(Ordering::Acquire) {
+                continue;
+            }
+            match flush_conn(pc, &core.shaper) {
+                Flush::Idle | Flush::Blocked => {}
+                Flush::WaitUntil(t) => {
+                    next_wake = Some(next_wake.map_or(t, |w: Instant| w.min(t)));
+                }
+                Flush::Dead => pc.dead = true,
+            }
+        }
+        conns.retain(|_, pc| {
+            let done = pc.dead
+                || pc.shared.sever.load(Ordering::Acquire)
+                || (pc.eof
+                    && !pc.shared.claimed.load(Ordering::Acquire)
+                    && pc.shared.pending.lock().unwrap().is_empty()
+                    && pc.shared.outbox.lock().unwrap().is_empty());
+            if done {
+                core.gauges.open_conns.fetch_sub(1, Ordering::Relaxed);
+            }
+            !done
+        });
+        // Build the poll set: listener, wake pipe, then live sockets.
+        pfds.clear();
+        slot_ids.clear();
+        pfds.push(sys::pollfd {
+            fd: listener.as_raw_fd(),
+            events: sys::POLLIN,
+            revents: 0,
+        });
+        pfds.push(sys::pollfd {
+            fd: core.wake.r,
+            events: sys::POLLIN,
+            revents: 0,
+        });
+        for (&id, pc) in conns.iter() {
+            let mut ev = 0i16;
+            if !pc.eof {
+                ev |= sys::POLLIN;
+            }
+            if pc.want_pollout {
+                ev |= sys::POLLOUT;
+            }
+            pfds.push(sys::pollfd {
+                fd: pc.stream.as_raw_fd(),
+                events: ev,
+                revents: 0,
+            });
+            slot_ids.push(id);
+        }
+        let timeout = match next_wake {
+            // +1 ms so sub-millisecond remainders don't busy-spin.
+            Some(t) => (t.saturating_duration_since(Instant::now()).as_millis() as i64 + 1)
+                .min(60_000) as i32,
+            None => -1,
+        };
+        let n = unsafe { sys::poll(pfds.as_mut_ptr(), pfds.len() as u64, timeout) };
+        if n < 0 {
+            continue; // EINTR
+        }
+        if core.stop.load(Ordering::Acquire) {
+            break;
+        }
+        if pfds[1].revents & sys::POLLIN != 0 {
+            core.wake.drain();
+        }
+        if pfds[0].revents & sys::POLLIN != 0 {
+            loop {
+                match listener.accept() {
+                    Ok((s, _)) => {
+                        let _ = s.set_nonblocking(true);
+                        let _ = s.set_nodelay(true);
+                        let id = next_id;
+                        next_id += 1;
+                        conns.insert(
+                            id,
+                            PollConn {
+                                stream: s,
+                                shared: Arc::new(ConnShared::new()),
+                                inbuf: Vec::new(),
+                                eof: false,
+                                woff: 0,
+                                reserved: 0,
+                                gate: Instant::now(),
+                                want_pollout: false,
+                                dead: false,
+                            },
+                        );
+                        core.gauges.open_conns.fetch_add(1, Ordering::Relaxed);
+                        core.gauges.accepted.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => break,
+                }
+            }
+        }
+        for (slot, &id) in slot_ids.iter().enumerate() {
+            let re = pfds[slot + 2].revents;
+            if re == 0 {
+                continue;
+            }
+            let Some(pc) = conns.get_mut(&id) else {
+                continue;
+            };
+            if re & sys::POLLOUT != 0 {
+                pc.want_pollout = false;
+            }
+            if re & (sys::POLLIN | sys::POLLHUP | sys::POLLERR) != 0 && !pc.eof {
+                read_conn(pc, &mut read_buf, &core);
+            }
+            if re & sys::POLLNVAL != 0 {
+                pc.dead = true;
+            }
+        }
+    }
+    // Shutdown: dropping the listener and the sockets severs everything
+    // (kill_node / crash semantics; racing clients see a clean error).
+    drop(conns);
+    drop(listener);
+}
+
+/// Worker-pool sizing for a reactor.
+#[derive(Debug, Clone)]
+pub struct ReactorOpts {
+    /// Thread-name prefix (truncated to 15 bytes by the kernel; tests
+    /// count live threads by this prefix).
+    pub name: String,
+    /// Workers per lane; missing entries default to 2, zero entries are
+    /// clamped to 1.
+    pub workers: Vec<usize>,
+    /// Due-time delay applied to every reply (the modeled fabric RTT).
+    pub reply_latency: Duration,
+    /// Optional bandwidth shaper pacing reply bytes.
+    pub reply_shaper: Option<Arc<Shaper>>,
+}
+
+impl Default for ReactorOpts {
+    fn default() -> Self {
+        ReactorOpts {
+            name: "serve".into(),
+            workers: Vec::new(),
+            reply_latency: Duration::ZERO,
+            reply_shaper: None,
+        }
+    }
+}
+
+/// A running event loop: poll thread + worker pool bound to one
+/// listener.  Dropping (or [`Reactor::shutdown`]) wakes the poll thread
+/// through the pipe — no self-connect poke — and joins every thread.
+pub struct Reactor {
+    addr: String,
+    core: Arc<Core>,
+    poll: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Reactor {
+    /// Serve `listener` with `handler` until shutdown.
+    pub fn serve(
+        listener: Listener,
+        handler: Arc<dyn FrameHandler>,
+        opts: ReactorOpts,
+    ) -> Result<Reactor> {
+        let addr = listener.local_addr()?;
+        let listener = listener.into_std();
+        let nlanes = handler.lanes().max(1);
+        let lanes: Vec<Lane> = (0..nlanes).map(|_| Lane::default()).collect();
+        let gauges = Arc::new(ServeGauges::default());
+        let core = Arc::new(Core {
+            handler,
+            lanes,
+            stop: AtomicBool::new(false),
+            wake: WakePipe::new()?,
+            gauges,
+            reply_latency: opts.reply_latency,
+            shaper: opts.reply_shaper,
+        });
+        let mut workers = Vec::new();
+        for lane in 0..nlanes {
+            let n = opts.workers.get(lane).copied().unwrap_or(2).max(1);
+            for i in 0..n {
+                let c = core.clone();
+                workers.push(
+                    std::thread::Builder::new()
+                        .name(format!("{}-w{}{}", opts.name, lane, i))
+                        .spawn(move || worker_loop(c, lane))?,
+                );
+            }
+        }
+        core.gauges
+            .workers_total
+            .store(workers.len() as u64, Ordering::Relaxed);
+        let c = core.clone();
+        let poll = std::thread::Builder::new()
+            .name(format!("{}-poll", opts.name))
+            .spawn(move || poll_loop(listener, c))?;
+        Ok(Reactor {
+            addr,
+            core,
+            poll: Some(poll),
+            workers,
+        })
+    }
+
+    /// The bound address.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Live serve-loop gauges.
+    pub fn gauges(&self) -> Arc<ServeGauges> {
+        self.core.gauges.clone()
+    }
+
+    /// Stop serving: wakes the poll loop through the pipe (no poke
+    /// connection), severs every connection, and joins all threads.
+    /// Idempotent.
+    pub fn shutdown(&mut self) {
+        if self.core.stop.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        self.core.wake.wake();
+        for l in &self.core.lanes {
+            l.cv.notify_all();
+        }
+        if let Some(t) = self.poll.take() {
+            let _ = t.join();
+        }
+        for t in self.workers.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Reactor {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::TcpStream;
+
+    /// Echo handler: replies with the request frame verbatim; tag 99
+    /// requests a sever.
+    struct Echo;
+
+    impl FrameHandler for Echo {
+        fn on_frame(&self, tag: u8, body: Vec<u8>, replies: &mut Replies) {
+            if tag == 99 {
+                replies.sever();
+                return;
+            }
+            replies.frame(frame(tag, &body));
+        }
+    }
+
+    fn frame(tag: u8, body: &[u8]) -> Vec<u8> {
+        let mut f = Vec::with_capacity(5 + body.len());
+        f.extend_from_slice(&(body.len() as u32 + 1).to_le_bytes());
+        f.push(tag);
+        f.extend_from_slice(body);
+        f
+    }
+
+    fn read_frame(s: &mut TcpStream) -> (u8, Vec<u8>) {
+        let mut len = [0u8; 4];
+        s.read_exact(&mut len).unwrap();
+        let len = u32::from_le_bytes(len) as usize;
+        let mut p = vec![0u8; len];
+        s.read_exact(&mut p).unwrap();
+        (p[0], p[1..].to_vec())
+    }
+
+    fn spawn_echo(name: &str) -> Reactor {
+        Reactor::serve(
+            Listener::bind("127.0.0.1:0").unwrap(),
+            Arc::new(Echo),
+            ReactorOpts {
+                name: name.into(),
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    }
+
+    fn threads_with_prefix(prefix: &str) -> usize {
+        std::fs::read_dir("/proc/self/task")
+            .unwrap()
+            .flatten()
+            .filter(|e| {
+                std::fs::read_to_string(e.path().join("comm"))
+                    .map(|n| n.trim_end().starts_with(prefix))
+                    .unwrap_or(false)
+            })
+            .count()
+    }
+
+    #[test]
+    fn echo_roundtrip() {
+        let mut r = spawn_echo("rx-echo");
+        let mut s = TcpStream::connect(r.addr()).unwrap();
+        s.write_all(&frame(7, b"hello")).unwrap();
+        let (tag, body) = read_frame(&mut s);
+        assert_eq!(tag, 7);
+        assert_eq!(body, b"hello");
+        r.shutdown();
+    }
+
+    #[test]
+    fn slow_reader_partial_frames_reassemble() {
+        let mut r = spawn_echo("rx-slow");
+        let mut s = TcpStream::connect(r.addr()).unwrap();
+        // One frame dribbled in three writes across poll wakeups...
+        let f = frame(3, &[9u8; 300]);
+        s.write_all(&f[..2]).unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        s.write_all(&f[2..7]).unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        s.write_all(&f[7..]).unwrap();
+        // ...then two more pipelined in a single write.
+        let mut two = frame(4, b"a");
+        two.extend_from_slice(&frame(5, b"b"));
+        s.write_all(&two).unwrap();
+        let (t1, b1) = read_frame(&mut s);
+        assert_eq!((t1, b1.len()), (3, 300));
+        let (t2, _) = read_frame(&mut s);
+        let (t3, _) = read_frame(&mut s);
+        assert_eq!((t2, t3), (4, 5), "replies must keep request order");
+        r.shutdown();
+    }
+
+    #[test]
+    fn half_close_still_gets_replies() {
+        let mut r = spawn_echo("rx-eof");
+        let mut s = TcpStream::connect(r.addr()).unwrap();
+        for i in 0..3u8 {
+            s.write_all(&frame(10 + i, &[i])).unwrap();
+        }
+        s.shutdown(std::net::Shutdown::Write).unwrap();
+        for i in 0..3u8 {
+            let (tag, _) = read_frame(&mut s);
+            assert_eq!(tag, 10 + i);
+        }
+        // Server closes after flushing: clean EOF, not a reset.
+        let mut rest = Vec::new();
+        assert_eq!(s.read_to_end(&mut rest).unwrap(), 0);
+        r.shutdown();
+    }
+
+    #[test]
+    fn sever_drops_connection() {
+        let mut r = spawn_echo("rx-sever");
+        let mut s = TcpStream::connect(r.addr()).unwrap();
+        s.write_all(&frame(99, b"")).unwrap();
+        let mut rest = Vec::new();
+        let _ = s.read_to_end(&mut rest); // EOF or reset, never a reply
+        assert!(rest.is_empty());
+        r.shutdown();
+    }
+
+    #[test]
+    fn bad_frame_length_severs() {
+        let mut r = spawn_echo("rx-bad");
+        let mut s = TcpStream::connect(r.addr()).unwrap();
+        s.write_all(&0u32.to_le_bytes()).unwrap(); // len 0: invalid
+        let mut rest = Vec::new();
+        let _ = s.read_to_end(&mut rest);
+        assert!(rest.is_empty());
+        r.shutdown();
+    }
+
+    #[test]
+    fn connection_storm_all_served() {
+        let mut r = spawn_echo("rx-storm");
+        let n = 1000usize;
+        let mut socks = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut s = TcpStream::connect(r.addr()).unwrap();
+            s.write_all(&frame(1, &(i as u32).to_le_bytes())).unwrap();
+            socks.push(s);
+        }
+        for (i, s) in socks.iter_mut().enumerate() {
+            let (tag, body) = read_frame(s);
+            assert_eq!(tag, 1);
+            assert_eq!(u32::from_le_bytes(body.try_into().unwrap()), i as u32);
+        }
+        let g = r.gauges().snapshot();
+        assert_eq!(g.accepted, n as u64);
+        assert_eq!(g.frames_served, n as u64);
+        assert_eq!(g.open_conns, n as u64);
+        assert!(g.workers_total >= 1);
+        r.shutdown();
+    }
+
+    #[test]
+    fn shutdown_joins_every_thread_without_poke() {
+        assert_eq!(threads_with_prefix("rx-leak"), 0);
+        let mut r = spawn_echo("rx-leak");
+        assert!(threads_with_prefix("rx-leak") >= 2, "poll + workers live");
+        // Parked, idle poll loop: shutdown must wake it via the pipe
+        // (no connection is ever made here) and join everything.
+        r.shutdown();
+        assert_eq!(threads_with_prefix("rx-leak"), 0, "leaked serve threads");
+        r.shutdown(); // idempotent
+    }
+
+    #[test]
+    fn reply_latency_is_a_delay_line() {
+        let mut r = Reactor::serve(
+            Listener::bind("127.0.0.1:0").unwrap(),
+            Arc::new(Echo),
+            ReactorOpts {
+                name: "rx-delay".into(),
+                reply_latency: Duration::from_millis(40),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut s = TcpStream::connect(r.addr()).unwrap();
+        let t0 = Instant::now();
+        for i in 0..8u8 {
+            s.write_all(&frame(2, &[i])).unwrap();
+        }
+        for _ in 0..8 {
+            read_frame(&mut s);
+        }
+        let dt = t0.elapsed();
+        // Pipelined requests overlap their latencies: ~1 RTT total, not 8.
+        assert!(dt >= Duration::from_millis(35), "delay not applied: {dt:?}");
+        assert!(dt < Duration::from_millis(320), "delays serialized: {dt:?}");
+        r.shutdown();
+    }
+
+    #[test]
+    fn shaped_replies_are_paced() {
+        // 1 MB/s shaper, 200 KB of replies => ~0.2 s wall time floor
+        // (minus the burst allowance).
+        let mut r = Reactor::serve(
+            Listener::bind("127.0.0.1:0").unwrap(),
+            Arc::new(Echo),
+            ReactorOpts {
+                name: "rx-shape".into(),
+                reply_shaper: Some(Arc::new(Shaper::new(1e6, 64.0 * 1024.0))),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut s = TcpStream::connect(r.addr()).unwrap();
+        let body = vec![0u8; 100 * 1024];
+        let t0 = Instant::now();
+        s.write_all(&frame(6, &body)).unwrap();
+        s.write_all(&frame(6, &body)).unwrap();
+        read_frame(&mut s);
+        read_frame(&mut s);
+        let dt = t0.elapsed().as_secs_f64();
+        assert!(dt > 0.1, "shaper ignored: {dt}");
+        r.shutdown();
+    }
+
+    #[test]
+    fn lanes_route_by_tag() {
+        struct Laned;
+        impl FrameHandler for Laned {
+            fn lanes(&self) -> usize {
+                2
+            }
+            fn lane(&self, tag: u8) -> usize {
+                usize::from(tag >= 128)
+            }
+            fn on_frame(&self, tag: u8, _body: Vec<u8>, replies: &mut Replies) {
+                if tag < 128 {
+                    // Lane 0 stalls; lane 1 must still make progress.
+                    std::thread::sleep(Duration::from_millis(80));
+                }
+                replies.frame(frame(tag, b""));
+            }
+        }
+        let mut r = Reactor::serve(
+            Listener::bind("127.0.0.1:0").unwrap(),
+            Arc::new(Laned),
+            ReactorOpts {
+                name: "rx-lane".into(),
+                workers: vec![1, 1],
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut slow = TcpStream::connect(r.addr()).unwrap();
+        slow.write_all(&frame(1, b"")).unwrap();
+        let mut fast = TcpStream::connect(r.addr()).unwrap();
+        let t0 = Instant::now();
+        fast.write_all(&frame(200, b"")).unwrap();
+        let (tag, _) = read_frame(&mut fast);
+        assert_eq!(tag, 200);
+        assert!(
+            t0.elapsed() < Duration::from_millis(60),
+            "fast lane stuck behind slow lane"
+        );
+        read_frame(&mut slow);
+        r.shutdown();
+    }
+}

@@ -1,0 +1,255 @@
+//! Hash-prefix-sharded maps for the manager's hot tables (PR 9).
+//!
+//! The pre-PR-9 manager kept the block table and the lease table inside
+//! one big `Mutex<Inner>`: every read, stat sweep and apply serialized
+//! on it — fine for tens of sessions, fatal at thousands.  A
+//! [`ShardedMap`] splits a table into N independently-locked shards
+//! keyed by a cheap key prefix, so concurrent lookups and the apply
+//! side only contend when they actually touch the same shard.
+//!
+//! Consensus discipline: WAL ordering is *not* this module's job.  The
+//! manager still plans and logs every mutation under its (now much
+//! smaller) `Inner` lock, which keeps the log a single total order;
+//! only the read/validate and apply sides go through shards.  Observable
+//! equivalence with the unsharded tables is property-tested in
+//! `rust/tests/properties.rs` (snapshots sort their entries, so the
+//! shard count is invisible on the wire).
+
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::Mutex;
+
+/// Keys that can pick a shard without running the full hasher.
+pub trait ShardKey {
+    /// A well-distributed hint; the map takes it modulo the shard count.
+    fn shard_hint(&self) -> usize;
+}
+
+/// Content digests shard by their first byte — uniformly distributed by
+/// construction (MD5-like output).
+impl ShardKey for [u8; 16] {
+    fn shard_hint(&self) -> usize {
+        self[0] as usize
+    }
+}
+
+/// Lease ids are a monotone counter: consecutive leases land on
+/// consecutive shards (round-robin).
+impl ShardKey for u64 {
+    fn shard_hint(&self) -> usize {
+        *self as usize
+    }
+}
+
+/// A `HashMap` split over independently-locked shards.
+#[derive(Debug)]
+pub struct ShardedMap<K, V> {
+    shards: Vec<Mutex<HashMap<K, V>>>,
+}
+
+impl<K: Eq + Hash + ShardKey + Clone, V> ShardedMap<K, V> {
+    /// New map with `shards` shards (clamped to at least 1).
+    pub fn new(shards: usize) -> Self {
+        ShardedMap {
+            shards: (0..shards.max(1))
+                .map(|_| Mutex::new(HashMap::new()))
+                .collect(),
+        }
+    }
+
+    fn shard(&self, k: &K) -> &Mutex<HashMap<K, V>> {
+        &self.shards[k.shard_hint() % self.shards.len()]
+    }
+
+    /// Number of shards.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Insert, returning the displaced value.
+    pub fn insert(&self, k: K, v: V) -> Option<V> {
+        self.shard(&k).lock().unwrap().insert(k, v)
+    }
+
+    /// Remove, returning the value.
+    pub fn remove(&self, k: &K) -> Option<V> {
+        self.shard(k).lock().unwrap().remove(k)
+    }
+
+    /// Remove only if `pred` holds; returns the removed value.
+    pub fn remove_if(&self, k: &K, pred: impl FnOnce(&V) -> bool) -> Option<V> {
+        let mut s = self.shard(k).lock().unwrap();
+        if s.get(k).is_some_and(pred) {
+            s.remove(k)
+        } else {
+            None
+        }
+    }
+
+    /// Key present?
+    pub fn contains(&self, k: &K) -> bool {
+        self.shard(k).lock().unwrap().contains_key(k)
+    }
+
+    /// Read access: `f` runs under the shard lock.
+    pub fn get_with<R>(&self, k: &K, f: impl FnOnce(&V) -> R) -> Option<R> {
+        self.shard(k).lock().unwrap().get(k).map(f)
+    }
+
+    /// In-place mutation: `f` runs under the shard lock.
+    pub fn mutate<R>(&self, k: &K, f: impl FnOnce(&mut V) -> R) -> Option<R> {
+        self.shard(k).lock().unwrap().get_mut(k).map(f)
+    }
+
+    /// Mutate, inserting `default()` first if the key is absent.
+    pub fn or_insert_mutate<R>(
+        &self,
+        k: &K,
+        default: impl FnOnce() -> V,
+        f: impl FnOnce(&mut V) -> R,
+    ) -> R {
+        let mut s = self.shard(k).lock().unwrap();
+        f(s.entry(k.clone()).or_insert_with(default))
+    }
+
+    /// Visit every entry, one shard at a time.  Only consistent as a
+    /// whole when the caller holds whatever lock orders mutations (the
+    /// manager's `Inner`); lock-free callers (stats) get a live view.
+    pub fn for_each(&self, mut f: impl FnMut(&K, &V)) {
+        for s in &self.shards {
+            for (k, v) in s.lock().unwrap().iter() {
+                f(k, v);
+            }
+        }
+    }
+
+    /// Retain entries for which `f` holds, shard by shard.
+    pub fn retain(&self, mut f: impl FnMut(&K, &mut V) -> bool) {
+        for s in &self.shards {
+            s.lock().unwrap().retain(|k, v| f(k, v));
+        }
+    }
+
+    /// Total entries across shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    /// No entries?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every entry (snapshot install starts from empty).
+    pub fn clear(&self) {
+        for s in &self.shards {
+            s.lock().unwrap().clear();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn digest(b0: u8) -> [u8; 16] {
+        let mut d = [0u8; 16];
+        d[0] = b0;
+        d[15] = b0.wrapping_mul(31);
+        d
+    }
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let m: ShardedMap<[u8; 16], u32> = ShardedMap::new(16);
+        for i in 0..64u8 {
+            assert!(m.insert(digest(i), i as u32).is_none());
+        }
+        assert_eq!(m.len(), 64);
+        assert_eq!(m.get_with(&digest(7), |v| *v), Some(7));
+        assert!(m.contains(&digest(63)));
+        assert!(!m.contains(&digest(64)));
+        assert_eq!(m.remove(&digest(7)), Some(7));
+        assert_eq!(m.get_with(&digest(7), |v| *v), None);
+        assert_eq!(m.len(), 63);
+    }
+
+    #[test]
+    fn mutate_and_or_insert() {
+        let m: ShardedMap<u64, Vec<u32>> = ShardedMap::new(8);
+        assert_eq!(m.mutate(&1, |v| v.push(5)), None, "absent key untouched");
+        m.or_insert_mutate(&1, Vec::new, |v| v.push(5));
+        m.or_insert_mutate(&1, Vec::new, |v| v.push(6));
+        assert_eq!(m.get_with(&1, |v| v.clone()), Some(vec![5, 6]));
+    }
+
+    #[test]
+    fn remove_if_checks_predicate() {
+        let m: ShardedMap<u64, u32> = ShardedMap::new(4);
+        m.insert(9, 1);
+        assert_eq!(m.remove_if(&9, |v| *v == 2), None);
+        assert!(m.contains(&9));
+        assert_eq!(m.remove_if(&9, |v| *v == 1), Some(1));
+        assert!(!m.contains(&9));
+    }
+
+    #[test]
+    fn for_each_and_retain_cover_all_shards() {
+        let m: ShardedMap<u64, u64> = ShardedMap::new(5);
+        for i in 0..100u64 {
+            m.insert(i, i * 2);
+        }
+        let mut sum = 0;
+        m.for_each(|_, v| sum += *v);
+        assert_eq!(sum, (0..100u64).map(|i| i * 2).sum());
+        m.retain(|k, _| k % 2 == 0);
+        assert_eq!(m.len(), 50);
+        m.clear();
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn shard_count_is_invisible_to_contents() {
+        for shards in [1, 2, 16, 255] {
+            let m: ShardedMap<[u8; 16], u8> = ShardedMap::new(shards);
+            assert_eq!(m.shard_count(), shards);
+            for i in 0..=255u8 {
+                m.insert(digest(i), i);
+            }
+            let mut got: Vec<u8> = Vec::new();
+            m.for_each(|_, v| got.push(*v));
+            got.sort_unstable();
+            assert_eq!(got, (0..=255u8).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn zero_shards_clamped() {
+        let m: ShardedMap<u64, u8> = ShardedMap::new(0);
+        assert_eq!(m.shard_count(), 1);
+        m.insert(1, 1);
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn concurrent_shard_access_does_not_contend_fatally() {
+        use std::sync::Arc;
+        let m: Arc<ShardedMap<u64, u64>> = Arc::new(ShardedMap::new(16));
+        let threads: Vec<_> = (0..4u64)
+            .map(|t| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for i in 0..1000u64 {
+                        let k = t * 1000 + i;
+                        m.insert(k, k);
+                        assert_eq!(m.get_with(&k, |v| *v), Some(k));
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(m.len(), 4000);
+    }
+}

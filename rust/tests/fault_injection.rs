@@ -965,6 +965,63 @@ fn minority_partitioned_leader_fails_writes_loudly() {
     Hiccup::rejoin_manager(&cluster, 0);
 }
 
+/// PR-9 regression (PR-8 known limitation): GC's node-side
+/// `DeleteBlock` fan-out must not run until the WAL records that
+/// justify it are quorum-acked.  An overwrite driven through a leader
+/// stranded in the minority fails with "no quorum" — and the storage
+/// nodes must still hold every block of the committed version
+/// afterwards: the delete batch was abandoned at the failed barrier,
+/// not fired early and regretted.  The same release through the
+/// healthy majority then deletes for real.
+#[test]
+fn minority_leader_overwrite_defers_gc_deletes() {
+    let dir = TempDir::new("gc-defer");
+    let cluster = quorum_cluster(&dir);
+    let sai = client(&cluster);
+
+    // v1: 4 blocks, committed through the healthy quorum.
+    let v1 = Rng::new(99).bytes(4 * 64 * 1024);
+    sai.write_file("gc.bin", &v1).unwrap();
+    wait_until("v1 transfers", || cluster.storage_stats().0 == 4);
+    let before = cluster.storage_stats();
+
+    // Strand the leader in the minority and drive an overwrite-to-empty
+    // through it directly: releasing v1's references plans a GC batch,
+    // the quorum barrier fails — the batch must die with it.
+    Hiccup::isolate_manager(&cluster, 0);
+    let s0 = cluster.manager_at(0).state();
+    let reply = s0.handle_replicated(Msg::CommitBlockMap {
+        file: "gc.bin".into(),
+        lease: 0,
+        blocks: vec![],
+    });
+    match &reply {
+        Msg::Err(e) => assert!(e.contains("no quorum"), "unexpected error: {e}"),
+        m => panic!("minority overwrite must fail loudly, got {m:?}"),
+    }
+    assert_eq!(
+        cluster.storage_stats(),
+        before,
+        "no DeleteBlock may reach a node before the quorum barrier commits"
+    );
+
+    // The majority elects a new leader; v1 is still fully readable —
+    // the bytes really are all still on the nodes.
+    Hiccup::elect(&cluster, 1);
+    assert_eq!(sai.read_file("gc.bin").unwrap(), v1);
+
+    // The same overwrite through the healthy quorum commits, and now
+    // the deferred fan-out runs: v1's blocks leave the nodes.
+    let v2 = Rng::new(100).bytes(64 * 1024);
+    sai.write_file("gc.bin", &v2).unwrap();
+    wait_until("quorum-committed GC deletes v1's blocks", || {
+        cluster.storage_stats().0 == 1
+    });
+    assert_eq!(sai.read_file("gc.bin").unwrap(), v2);
+
+    Hiccup::rejoin_manager(&cluster, 0);
+}
+
 /// PR-7 regression (satellite 1): the old `Follower::promote` path
 /// split-brains when the primary is partitioned-but-alive — both sides
 /// serve and commit conflicting maps for the same file.  The new

@@ -1258,6 +1258,157 @@ fn prop_recovered_manager_state_equals_pre_crash() {
     }
 }
 
+/// PR-9 acceptance (sharded state equivalence): the hash-prefix-sharded
+/// block and lease tables are *observably identical* to an unsharded
+/// manager — for random interleaved mutation sequences (joins,
+/// write/read leases, allocs, commits with overwrites and their GC,
+/// renewals, drops, bogus-lease rejections), managers built with 1, 16,
+/// and 64 shards agree on `snapshot_state()` at every checkpoint and on
+/// the lock-free `block_stats()` read path at the end.  Sharding is a
+/// locking strategy, never a semantic.
+#[test]
+fn prop_sharded_tables_equivalent_to_unsharded() {
+    use std::collections::HashMap;
+    use std::time::Duration;
+
+    use gpustore::store::{policy_for, ManagerState};
+
+    for seed in 0..8u64 {
+        let states: Vec<ManagerState> = [1usize, 16, 64]
+            .iter()
+            .map(|&shards| {
+                let s = ManagerState::with_shards(
+                    policy_for(1),
+                    Duration::from_secs(30),
+                    shards,
+                );
+                // Nodes on root-reserved loopback ports: GC deletes
+                // fail fast; only metadata equality is under test.
+                for port in 1..=4 {
+                    let _ = s.handle(Msg::NodeJoin {
+                        addr: format!("127.0.0.1:{port}"),
+                    });
+                }
+                s
+            })
+            .collect();
+
+        // One PRNG drives one op script, replayed verbatim against all
+        // three managers — lease ids and placement cursors are
+        // deterministic functions of the op sequence, so equivalent
+        // implementations must produce identical replies and state.
+        let mut rng = Rng::new(0x5AAD ^ (seed << 9));
+        let mut open: Vec<(String, u64)> = Vec::new();
+        let mut session: HashMap<u64, Vec<BlockMeta>> = HashMap::new();
+        for step in 0..150 {
+            let msg = match rng.range(0, 8) {
+                0 => Msg::OpenLease {
+                    file: format!("f{}", rng.range(0, 5)),
+                    write: true,
+                },
+                1 | 2 if !open.is_empty() => {
+                    let (file, lease) = open[rng.range(0, open.len())].clone();
+                    let specs: Vec<BlockSpec> = (0..rng.range(1, 4))
+                        .map(|_| {
+                            let mut hash = [0u8; 16];
+                            rng.fill(&mut hash);
+                            BlockSpec {
+                                hash,
+                                len: rng.range(1, 65536) as u32,
+                            }
+                        })
+                        .collect();
+                    Msg::AllocPlacement {
+                        file,
+                        lease,
+                        blocks: specs,
+                    }
+                }
+                3 if !open.is_empty() => {
+                    let (file, lease) = open.swap_remove(rng.range(0, open.len()));
+                    let blocks = session.remove(&lease).unwrap_or_default();
+                    Msg::CommitBlockMap {
+                        file,
+                        lease,
+                        blocks,
+                    }
+                }
+                4 if !open.is_empty() => {
+                    let (_, lease) = open.swap_remove(rng.range(0, open.len()));
+                    session.remove(&lease);
+                    Msg::DropLease { lease }
+                }
+                5 => Msg::OpenLease {
+                    file: format!("f{}", rng.range(0, 5)),
+                    write: false,
+                },
+                6 => Msg::RenewLease {
+                    // Real lease or bogus id (rejections must match too).
+                    lease: if !open.is_empty() && rng.range(0, 2) == 0 {
+                        open[rng.range(0, open.len())].1
+                    } else {
+                        rng.range(1, 50) as u64
+                    },
+                },
+                _ => Msg::NodeJoin {
+                    addr: format!("127.0.0.1:{}", 1 + rng.range(0, 6)),
+                },
+            };
+
+            // Replay against every shard count; replies must agree.
+            let mut replies = states.iter().map(|s| s.handle(msg.clone()));
+            let first = replies.next().unwrap();
+            for (i, r) in replies.enumerate() {
+                assert_eq!(
+                    r, first,
+                    "seed={seed} step={step}: shard config {i} diverged on {msg:?}"
+                );
+            }
+            // Track the script's client-side state off the first reply.
+            match (&msg, &first) {
+                (Msg::OpenLease { file, write: true }, Msg::LeaseGrant { lease, .. }) => {
+                    open.push((file.clone(), *lease));
+                    session.insert(*lease, Vec::new());
+                }
+                (
+                    Msg::AllocPlacement { lease, blocks, .. },
+                    Msg::Placement { assignments },
+                ) => {
+                    if let Some(metas) = session.get_mut(lease) {
+                        for (s, a) in blocks.iter().zip(assignments) {
+                            metas.push(BlockMeta {
+                                hash: s.hash,
+                                len: s.len,
+                                replicas: a.replicas.clone(),
+                            });
+                        }
+                    }
+                }
+                _ => {}
+            }
+
+            if step % 30 == 29 {
+                let want = states[0].snapshot_state();
+                for (i, s) in states.iter().enumerate().skip(1) {
+                    assert_eq!(
+                        s.snapshot_state(),
+                        want,
+                        "seed={seed} step={step}: shard config {i} state diverged"
+                    );
+                }
+            }
+        }
+
+        // Final checkpoint: full state and the lock-free stats path.
+        let want = states[0].snapshot_state();
+        let want_stats = states[0].block_stats();
+        for (i, s) in states.iter().enumerate().skip(1) {
+            assert_eq!(s.snapshot_state(), want, "seed={seed}: final state {i}");
+            assert_eq!(s.block_stats(), want_stats, "seed={seed}: block_stats {i}");
+        }
+    }
+}
+
 /// PR-8 acceptance (consensus safety): under a seeded random schedule
 /// of mutations, member crashes/restarts, symmetric partitions, clock
 /// jumps, and forced elections across a 3-member manager quorum, the
