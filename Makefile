@@ -38,13 +38,15 @@ sleep-guard:
 # data-plane bench (writes BENCH_pr5.json), the shared-hash-service
 # occupancy bench (writes BENCH_pr6.json), the WAL recovery/group-commit
 # bench (writes BENCH_pr7.json), the serve-loop scalability bench
-# (writes BENCH_pr9.json) + hot-path microbenchmarks.
+# (writes BENCH_pr9.json), the self-healing erasure-coding bench
+# (writes BENCH_pr10.json) + hot-path microbenchmarks.
 bench:
 	cargo bench --bench figures
 	cargo bench --bench data_plane
 	cargo bench --bench hashsvc
 	cargo bench --bench recovery
 	cargo bench --bench sessions
+	cargo bench --bench repair
 	cargo bench --bench micro
 
 # Fast end-to-end smoke: build benches and run the runnable examples
@@ -58,4 +60,5 @@ smoke:
 
 clean:
 	cargo clean
-	rm -f BENCH_pr2.json BENCH_pr5.json BENCH_pr6.json BENCH_pr7.json BENCH_pr9.json
+	rm -f BENCH_pr2.json BENCH_pr5.json BENCH_pr6.json BENCH_pr7.json BENCH_pr9.json \
+	  BENCH_pr10.json

@@ -111,6 +111,7 @@ fn drive(state: &ManagerState, rng: &mut Rng, files: usize, tag: &str) {
                 hash,
                 len: 4096,
                 replicas: assignments[0].replicas.clone(),
+                ec: None,
             }],
         });
         assert!(matches!(commit, Msg::Ok), "commit failed: {commit:?}");

@@ -1,0 +1,176 @@
+//! Self-healing benchmark (PR 10): what erasure coding buys over
+//! replication at equal fault tolerance, and how fast one scrub pass
+//! restores full redundancy after losing a node.
+//!
+//!     cargo bench --bench repair            # full matrix
+//!     cargo bench --bench repair -- quick   # CI smoke subset
+//!
+//! Two placements at the same fault tolerance (any 2 node losses):
+//!
+//! * **ec:4,2** — 4 data + 2 parity shards per block, 1.5x storage
+//! * **rep:3**  — 3 full copies per block, 3.0x storage
+//!
+//! For each, an 8-node loopback cluster ingests the workload, one node
+//! is killed, the deterministic clock advances past the heartbeat
+//! timeout, and `scrub_once` passes run until `redundancy_report` says
+//! every block is fully redundant again.  Measured: storage overhead
+//! (stored bytes / application bytes), repair wall time, and bytes
+//! moved by the repair.
+//!
+//! Results are printed as a table and flushed to `BENCH_pr10.json` at
+//! the repo root.  CI gates on the JSON parsing and on the erasure-
+//! coded overhead coming in strictly below the replicated one.
+
+use std::time::{Duration, Instant};
+
+use gpustore::config::{ClientConfig, ClusterConfig, Placement};
+use gpustore::hashgpu::{CpuEngine, WindowHashMode};
+use gpustore::store::Cluster;
+use gpustore::util::Rng;
+
+struct CaseResult {
+    placement: &'static str,
+    nodes: usize,
+    data_bytes: u64,
+    stored_bytes: u64,
+    storage_overhead: f64,
+    repair_millis: f64,
+    repair_bytes_moved: u64,
+    scrub_passes: u32,
+}
+
+/// Ingest, kill, scrub, verify — one placement policy end to end.
+fn case(name: &'static str, placement: Placement, data_bytes: usize) -> CaseResult {
+    const NODES: usize = 8;
+    let mut cluster = Cluster::spawn(ClusterConfig {
+        nodes: NODES,
+        link_bps: 1e9,
+        shape: false,
+        replication: 1,
+        placement: Some(placement),
+        lease_timeout: Duration::from_secs(600),
+        ..ClusterConfig::default()
+    })
+    .unwrap();
+    let cfg = ClientConfig {
+        block_size: 64 * 1024,
+        write_buffer: 256 * 1024,
+        ..ClientConfig::default()
+    };
+    let engine = std::sync::Arc::new(CpuEngine::new(4, 4096, WindowHashMode::Rolling));
+    let sai = cluster.client(cfg, engine).unwrap();
+
+    let data = Rng::new(0xEC ^ data_bytes as u64).bytes(data_bytes);
+    sai.write_file("bench.bin", &data).unwrap();
+    let (_, stored_bytes) = cluster.storage_stats();
+    let storage_overhead = stored_bytes as f64 / data_bytes as f64;
+
+    // Lose one node, let the deterministic clock stale its heartbeat,
+    // and wait for the survivors' next real beat so placement sees
+    // exactly NODES - 1 live homes.
+    cluster.kill_node(1);
+    let s = cluster.manager().state();
+    s.advance_clock(Duration::from_secs(4));
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let alive = sai
+            .list_nodes()
+            .map(|nodes| nodes.iter().filter(|e| e.alive).count())
+            .unwrap_or(0);
+        if alive == NODES - 1 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "survivors never re-heartbeat");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let rep = s.redundancy_report();
+    assert!(rep.degraded > 0, "[{name}] the kill must degrade some blocks");
+    assert_eq!(rep.unreadable, 0, "[{name}] every block must stay readable");
+
+    // Time-to-restored-redundancy: unthrottled scrub passes until the
+    // redundancy report is clean again.
+    let t = Instant::now();
+    let mut repair_bytes_moved = 0u64;
+    let mut scrub_passes = 0u32;
+    loop {
+        let sr = s.scrub_once();
+        repair_bytes_moved += sr.bytes_moved;
+        scrub_passes += 1;
+        let rep = s.redundancy_report();
+        if rep.degraded == 0 && rep.unreadable == 0 {
+            break;
+        }
+        assert!(scrub_passes < 64, "[{name}] scrub failed to converge: {sr:?}");
+    }
+    let repair_millis = t.elapsed().as_secs_f64() * 1e3;
+
+    assert_eq!(
+        sai.read_file("bench.bin").unwrap(),
+        data,
+        "[{name}] repaired file must read byte-exact"
+    );
+    println!(
+        "{name:>6}: {storage_overhead:>4.2}x storage, repaired in {repair_millis:>8.2} ms \
+         ({repair_bytes_moved} bytes moved, {scrub_passes} pass(es))"
+    );
+    CaseResult {
+        placement: name,
+        nodes: NODES,
+        data_bytes: data_bytes as u64,
+        stored_bytes,
+        storage_overhead,
+        repair_millis,
+        repair_bytes_moved,
+        scrub_passes,
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| !a.starts_with('-'))
+        .collect();
+    let quick = args.iter().any(|a| a == "quick");
+    let data_bytes = if quick { 2 << 20 } else { 8 << 20 };
+
+    println!("== self-healing: ec:4,2 vs rep:3 (both survive any 2 losses) ==");
+    let ec = case("ec:4,2", Placement::Erasure { k: 4, m: 2 }, data_bytes);
+    let rep = case("rep:3", Placement::Replicated(3), data_bytes);
+
+    assert!(
+        ec.storage_overhead < rep.storage_overhead,
+        "erasure coding must store less than replication at equal fault \
+         tolerance ({:.2}x vs {:.2}x)",
+        ec.storage_overhead,
+        rep.storage_overhead
+    );
+    flush(&[ec, rep], quick);
+}
+
+fn flush(results: &[CaseResult], quick: bool) {
+    let mut out = String::from(
+        "{\n  \"bench\": \"repair\",\n  \"fault_tolerance\": \"any 2 node losses\",\n",
+    );
+    out.push_str(&format!("  \"quick\": {quick},\n  \"results\": [\n"));
+    for (i, r) in results.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"placement\": \"{}\", \"nodes\": {}, \"data_bytes\": {}, \
+             \"stored_bytes\": {}, \"storage_overhead\": {:.3}, \"repair_millis\": {:.3}, \
+             \"repair_bytes_moved\": {}, \"scrub_passes\": {}}}{}\n",
+            r.placement,
+            r.nodes,
+            r.data_bytes,
+            r.stored_bytes,
+            r.storage_overhead,
+            r.repair_millis,
+            r.repair_bytes_moved,
+            r.scrub_passes,
+            if i + 1 == results.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_pr10.json", &out) {
+        Ok(()) => println!("\nwrote BENCH_pr10.json ({} results)", results.len()),
+        Err(e) => eprintln!("could not write BENCH_pr10.json: {e}"),
+    }
+}

@@ -61,6 +61,72 @@ pub enum ServeMode {
     Thread,
 }
 
+/// How the manager places a block's bytes across storage nodes
+/// (PR 10).  Parsed from the CLI's `--placement` (`rr`, `rep:R`,
+/// `ec:K,M`); [`ClusterConfig::placement`] carries it cluster-wide.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// Classic single-copy round-robin striping (`rr`).
+    RoundRobin,
+    /// `R` whole copies per block (`rep:R`).
+    Replicated(usize),
+    /// `K` data + `M` parity shards per block, GF(256) Reed–Solomon
+    /// (`ec:K,M`) — readable from any `K`, tolerating `M` losses at
+    /// `(K+M)/K`× storage overhead.
+    Erasure { k: u8, m: u8 },
+}
+
+impl Placement {
+    /// Parse the CLI syntax: `rr`, `rep:R`, or `ec:K,M`.  Malformed or
+    /// degenerate values (zero copies/shards) fail loudly — silently
+    /// weakening a redundancy request is worse than refusing it.
+    pub fn parse(s: &str) -> crate::Result<Placement> {
+        let s = s.trim();
+        if s == "rr" {
+            return Ok(Placement::RoundRobin);
+        }
+        if let Some(r) = s.strip_prefix("rep:") {
+            let r: usize = r
+                .trim()
+                .parse()
+                .map_err(|_| crate::Error::Config(format!("bad replication factor in {s:?}")))?;
+            if r == 0 {
+                return Err(crate::Error::Config("rep:R needs R >= 1".into()));
+            }
+            return Ok(Placement::Replicated(r));
+        }
+        if let Some(km) = s.strip_prefix("ec:") {
+            let (k, m) = km.split_once(',').ok_or_else(|| {
+                crate::Error::Config(format!("ec placement needs ec:K,M (got {s:?})"))
+            })?;
+            let k: u8 = k
+                .trim()
+                .parse()
+                .map_err(|_| crate::Error::Config(format!("bad data-shard count in {s:?}")))?;
+            let m: u8 = m
+                .trim()
+                .parse()
+                .map_err(|_| crate::Error::Config(format!("bad parity-shard count in {s:?}")))?;
+            if k == 0 || m == 0 {
+                return Err(crate::Error::Config("ec:K,M needs K >= 1 and M >= 1".into()));
+            }
+            return Ok(Placement::Erasure { k, m });
+        }
+        Err(crate::Error::Config(format!(
+            "unknown placement {s:?} (expected rr, rep:R or ec:K,M)"
+        )))
+    }
+
+    /// Homes (whole copies or shards) each block occupies.
+    pub fn replication(&self) -> usize {
+        match self {
+            Placement::RoundRobin => 1,
+            Placement::Replicated(r) => *r,
+            Placement::Erasure { k, m } => *k as usize + *m as usize,
+        }
+    }
+}
+
 /// Client (SAI) configuration.
 #[derive(Debug, Clone)]
 pub struct ClientConfig {
@@ -286,6 +352,19 @@ pub struct ClusterConfig {
     /// Worker threads per serve loop (`--serve-threads`); `0` picks the
     /// built-in default.  Ignored in [`ServeMode::Thread`].
     pub serve_threads: usize,
+    /// Placement policy override (PR 10, `--placement`).  `None` (the
+    /// default) derives the policy from [`replication`](Self::replication)
+    /// as before; `Some` wins over `replication` and unlocks
+    /// [`Placement::Erasure`] placement.
+    pub placement: Option<Placement>,
+    /// How often each manager's background scrub/repair pass and
+    /// anti-entropy sweep run (PR 10, `--scrub-interval`).  `ZERO` (the
+    /// default) disables them; tests drive the passes directly through
+    /// the deterministic clock instead.
+    pub scrub_interval: Duration,
+    /// Repair-traffic budget in Mbit/s, spent per scrub window (PR 10,
+    /// `--repair-mbps`); `0.0` (the default) leaves repair unthrottled.
+    pub repair_mbps: f64,
 }
 
 impl Default for ClusterConfig {
@@ -304,6 +383,9 @@ impl Default for ClusterConfig {
             managers: 1,
             serve_mode: ServeMode::default(),
             serve_threads: 0,
+            placement: None,
+            scrub_interval: Duration::ZERO,
+            repair_mbps: 0.0,
         }
     }
 }
@@ -314,6 +396,15 @@ impl ClusterConfig {
         ClusterConfig {
             replication,
             ..Default::default()
+        }
+    }
+
+    /// Homes (copies or shards) each block occupies under the effective
+    /// placement — what must fit within `nodes`.
+    pub fn homes_per_block(&self) -> usize {
+        match self.placement {
+            Some(p) => p.replication(),
+            None => self.replication,
         }
     }
 }
@@ -393,6 +484,51 @@ mod tests {
         let c = ClusterConfig::default();
         assert_eq!(c.serve_mode, ServeMode::Event);
         assert_eq!(c.serve_threads, 0);
+    }
+
+    #[test]
+    fn placement_parses_all_three_forms() {
+        assert_eq!(Placement::parse("rr").unwrap(), Placement::RoundRobin);
+        assert_eq!(
+            Placement::parse("rep:3").unwrap(),
+            Placement::Replicated(3)
+        );
+        assert_eq!(
+            Placement::parse("ec:4,2").unwrap(),
+            Placement::Erasure { k: 4, m: 2 }
+        );
+        // Whitespace tolerated around tokens.
+        assert_eq!(
+            Placement::parse(" ec: 4 , 2 ").unwrap(),
+            Placement::Erasure { k: 4, m: 2 }
+        );
+        assert_eq!(Placement::parse("rr").unwrap().replication(), 1);
+        assert_eq!(Placement::parse("rep:3").unwrap().replication(), 3);
+        assert_eq!(Placement::parse("ec:4,2").unwrap().replication(), 6);
+    }
+
+    #[test]
+    fn malformed_placement_fails_loudly() {
+        for bad in [
+            "", "rep", "rep:", "rep:0", "rep:x", "ec", "ec:", "ec:4", "ec:4,", "ec:0,2", "ec:4,0",
+            "ec:a,b", "ec:4;2", "raid5", "rr2",
+        ] {
+            assert!(Placement::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn scrub_knobs_default_off() {
+        let c = ClusterConfig::default();
+        assert_eq!(c.placement, None);
+        assert_eq!(c.scrub_interval, Duration::ZERO);
+        assert_eq!(c.repair_mbps, 0.0);
+        assert_eq!(c.homes_per_block(), 1);
+        let c = ClusterConfig {
+            placement: Some(Placement::Erasure { k: 2, m: 1 }),
+            ..ClusterConfig::default()
+        };
+        assert_eq!(c.homes_per_block(), 3);
     }
 
     #[test]

@@ -1,0 +1,398 @@
+//! Reed–Solomon erasure coding over GF(256) (PR 10, ROADMAP open
+//! item 1).  Pure-Rust and dependency-free like the rest of the crate:
+//! log/exp tables over the conventional Reed–Solomon polynomial
+//! `0x11d`, a systematic
+//! Vandermonde-derived encode matrix, and Gauss–Jordan inversion for
+//! reconstruction.
+//!
+//! A block of `len` bytes is split into `k` data shards of
+//! `ceil(len / k)` bytes (the last one zero-padded) and extended with
+//! `m` parity shards of the same length.  The code is **systematic**:
+//! shards `0..k` are the data itself, so the healthy read path is a
+//! plain concatenation with no field arithmetic.  Any `k` of the
+//! `k + m` shards reconstruct the block byte-exact; fewer than `k`
+//! cannot (property-tested against random erasures below).
+//!
+//! The encode matrix is the (k+m)×k Vandermonde matrix over the
+//! evaluation points `0, 1, .., k+m-1` normalized by the inverse of its
+//! top k×k square.  Any k rows of a Vandermonde matrix with distinct
+//! points are linearly independent, and normalizing (multiplying every
+//! row on the right by one fixed invertible matrix) preserves that — so
+//! every k-subset of shards yields an invertible decode matrix.
+
+use std::sync::OnceLock;
+
+/// The field polynomial: x^8 + x^4 + x^3 + x^2 + 1.
+const POLY: u16 = 0x11d;
+
+/// Largest supported `k + m` (the field has 255 usable evaluation
+/// points; the wire protocol caps replica sets well below this).
+pub const MAX_SHARDS: usize = 255;
+
+struct Tables {
+    log: [u8; 256],
+    exp: [u8; 512],
+}
+
+fn tables() -> &'static Tables {
+    static TABLES: OnceLock<Tables> = OnceLock::new();
+    TABLES.get_or_init(|| {
+        let mut log = [0u8; 256];
+        let mut exp = [0u8; 512];
+        let mut x: u16 = 1;
+        for i in 0..255 {
+            exp[i] = x as u8;
+            log[x as usize] = i as u8;
+            x <<= 1;
+            if x & 0x100 != 0 {
+                x ^= POLY;
+            }
+        }
+        // Doubled exp table: mul can index log[a] + log[b] without a
+        // modular reduction.
+        for i in 255..512 {
+            exp[i] = exp[i - 255];
+        }
+        Tables { log, exp }
+    })
+}
+
+/// GF(256) multiplication.
+#[inline]
+pub fn gf_mul(a: u8, b: u8) -> u8 {
+    if a == 0 || b == 0 {
+        return 0;
+    }
+    let t = tables();
+    t.exp[t.log[a as usize] as usize + t.log[b as usize] as usize]
+}
+
+/// GF(256) multiplicative inverse (panics on 0, which has none).
+#[inline]
+pub fn gf_inv(a: u8) -> u8 {
+    assert_ne!(a, 0, "gf_inv(0)");
+    let t = tables();
+    t.exp[255 - t.log[a as usize] as usize]
+}
+
+/// GF(256) exponentiation by a small non-negative power.
+fn gf_pow(a: u8, e: usize) -> u8 {
+    if e == 0 {
+        return 1;
+    }
+    if a == 0 {
+        return 0;
+    }
+    let t = tables();
+    let le = (t.log[a as usize] as usize * e) % 255;
+    t.exp[le]
+}
+
+/// The systematic (k+m)×k encode matrix: rows `0..k` are the identity,
+/// rows `k..k+m` are the parity combinations.
+fn encode_matrix(k: usize, m: usize) -> Vec<Vec<u8>> {
+    assert!(k >= 1, "ec: k must be >= 1");
+    assert!(k + m <= MAX_SHARDS, "ec: k + m must be <= {MAX_SHARDS}");
+    // Vandermonde over distinct points 0..k+m (row i = [i^0, i^1, ..]).
+    let rows = k + m;
+    let mut v: Vec<Vec<u8>> = (0..rows)
+        .map(|i| (0..k).map(|j| gf_pow(i as u8, j)).collect())
+        .collect();
+    // Normalize by the inverse of the top square so the code is
+    // systematic; every k-row subset stays invertible.
+    let top: Vec<Vec<u8>> = v[..k].to_vec();
+    let inv = invert(top).expect("vandermonde top square is invertible");
+    for row in v.iter_mut() {
+        let old = row.clone();
+        for (j, out) in row.iter_mut().enumerate() {
+            let mut acc = 0u8;
+            for (c, &o) in old.iter().enumerate() {
+                acc ^= gf_mul(o, inv[c][j]);
+            }
+            *out = acc;
+        }
+    }
+    v
+}
+
+/// Gauss–Jordan inversion in GF(256); `None` if singular.
+fn invert(mut a: Vec<Vec<u8>>) -> Option<Vec<Vec<u8>>> {
+    let n = a.len();
+    let mut inv: Vec<Vec<u8>> = (0..n)
+        .map(|i| (0..n).map(|j| u8::from(i == j)).collect())
+        .collect();
+    for col in 0..n {
+        // Find a pivot row at or below `col`.
+        let pivot = (col..n).find(|&r| a[r][col] != 0)?;
+        a.swap(col, pivot);
+        inv.swap(col, pivot);
+        // Scale the pivot row to 1.
+        let p = gf_inv(a[col][col]);
+        for j in 0..n {
+            a[col][j] = gf_mul(a[col][j], p);
+            inv[col][j] = gf_mul(inv[col][j], p);
+        }
+        // Eliminate the column from every other row.
+        for r in 0..n {
+            if r == col || a[r][col] == 0 {
+                continue;
+            }
+            let f = a[r][col];
+            for j in 0..n {
+                let ac = gf_mul(f, a[col][j]);
+                a[r][j] ^= ac;
+                let ic = gf_mul(f, inv[col][j]);
+                inv[r][j] ^= ic;
+            }
+        }
+    }
+    Some(inv)
+}
+
+/// Shard length for a block of `len` bytes under `k` data shards.
+pub fn shard_len(len: usize, k: usize) -> usize {
+    len.div_ceil(k)
+}
+
+/// Split `data` into `k` data shards (zero-padded to equal length) and
+/// append `m` parity shards.  Returns `k + m` shards of
+/// [`shard_len`]`(data.len(), k)` bytes each.
+pub fn encode(k: usize, m: usize, data: &[u8]) -> Vec<Vec<u8>> {
+    let slen = shard_len(data.len(), k);
+    let mut shards: Vec<Vec<u8>> = Vec::with_capacity(k + m);
+    for i in 0..k {
+        let start = (i * slen).min(data.len());
+        let end = ((i + 1) * slen).min(data.len());
+        let mut s = data[start..end].to_vec();
+        s.resize(slen, 0);
+        shards.push(s);
+    }
+    let matrix = encode_matrix(k, m);
+    for row in &matrix[k..] {
+        let mut p = vec![0u8; slen];
+        for (c, coef) in row.iter().enumerate() {
+            if *coef == 0 {
+                continue;
+            }
+            for (j, b) in shards[c].iter().enumerate() {
+                p[j] ^= gf_mul(*coef, *b);
+            }
+        }
+        shards.push(p);
+    }
+    shards
+}
+
+/// Reconstruct the original `len` bytes from any `k` surviving shards.
+/// `shards[i]` is shard `i` or `None` if lost; exactly `k + m` entries.
+/// Fails loudly when fewer than `k` shards survive or a survivor has
+/// the wrong length.
+pub fn reconstruct(
+    k: usize,
+    m: usize,
+    shards: &[Option<Vec<u8>>],
+    len: usize,
+) -> Result<Vec<u8>, String> {
+    if shards.len() != k + m {
+        return Err(format!(
+            "ec: expected {} shard slots, got {}",
+            k + m,
+            shards.len()
+        ));
+    }
+    let slen = shard_len(len, k);
+    let mut have: Vec<(usize, &[u8])> = Vec::with_capacity(k);
+    for (i, s) in shards.iter().enumerate() {
+        if let Some(s) = s {
+            if s.len() != slen {
+                return Err(format!(
+                    "ec: shard {i} has {} bytes, expected {slen}",
+                    s.len()
+                ));
+            }
+            have.push((i, s));
+            if have.len() == k {
+                break;
+            }
+        }
+    }
+    if have.len() < k {
+        return Err(format!(
+            "ec: only {} of {} shards survive, need {k}",
+            shards.iter().filter(|s| s.is_some()).count(),
+            k + m
+        ));
+    }
+    // Systematic fast path: shards 0..k intact means the data needs no
+    // field arithmetic at all.
+    let mut out = Vec::with_capacity(k * slen);
+    if have.iter().enumerate().all(|(c, (i, _))| c == *i) {
+        for (_, s) in &have {
+            out.extend_from_slice(s);
+        }
+        out.truncate(len);
+        return Ok(out);
+    }
+    let matrix = encode_matrix(k, m);
+    let sub: Vec<Vec<u8>> = have.iter().map(|(i, _)| matrix[*i].clone()).collect();
+    let inv = invert(sub).ok_or_else(|| "ec: decode matrix singular".to_string())?;
+    for data_row in inv.iter().take(k) {
+        let mut shard = vec![0u8; slen];
+        for (r, coef) in data_row.iter().enumerate() {
+            if *coef == 0 {
+                continue;
+            }
+            let src = have[r].1;
+            for (j, b) in src.iter().enumerate() {
+                shard[j] ^= gf_mul(*coef, *b);
+            }
+        }
+        out.extend_from_slice(&shard);
+    }
+    out.truncate(len);
+    Ok(out)
+}
+
+/// Rebuild one missing shard (data or parity) from any `k` survivors:
+/// reconstruct the block, re-encode, and pick the requested index.  The
+/// scrub/repair loop uses this to re-home a shard onto a fresh node.
+pub fn rebuild_shard(
+    k: usize,
+    m: usize,
+    shards: &[Option<Vec<u8>>],
+    len: usize,
+    idx: usize,
+) -> Result<Vec<u8>, String> {
+    if idx >= k + m {
+        return Err(format!("ec: shard index {idx} out of range {}", k + m));
+    }
+    let data = reconstruct(k, m, shards, len)?;
+    Ok(encode(k, m, &data).swap_remove(idx))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn field_axioms_hold() {
+        // Spot-check the table construction against schoolbook GF math.
+        for a in 1..=255u8 {
+            assert_eq!(gf_mul(a, gf_inv(a)), 1, "a={a}");
+            assert_eq!(gf_mul(a, 1), a);
+            assert_eq!(gf_mul(a, 0), 0);
+        }
+        // Known inverse pair under 0x11d: 0x53 * 0x8C = 0x01 (under
+        // AES's 0x11b the pair would be 0x53/0xCA — not this field).
+        assert_eq!(gf_mul(0x53, 0x8C), 0x01);
+        // Commutativity + distributivity samples.
+        let mut rng = Rng::new(7);
+        for _ in 0..200 {
+            let (a, b, c) = (
+                rng.range(0, 256) as u8,
+                rng.range(0, 256) as u8,
+                rng.range(0, 256) as u8,
+            );
+            assert_eq!(gf_mul(a, b), gf_mul(b, a));
+            assert_eq!(gf_mul(a, b ^ c), gf_mul(a, b) ^ gf_mul(a, c));
+        }
+    }
+
+    #[test]
+    fn systematic_layout() {
+        let data: Vec<u8> = (0..100u8).collect();
+        let shards = encode(4, 2, &data);
+        assert_eq!(shards.len(), 6);
+        let slen = shard_len(data.len(), 4);
+        assert_eq!(slen, 25);
+        let cat: Vec<u8> = shards[..4].concat();
+        assert_eq!(&cat[..data.len()], &data[..]);
+        // Deterministic: same input, same shards.
+        assert_eq!(encode(4, 2, &data), shards);
+    }
+
+    /// PROPERTY: any ≤m random erasures reconstruct byte-exact, for
+    /// random (k, m), lengths (including non-divisible and tiny), and
+    /// data.
+    #[test]
+    fn prop_reconstruct_under_random_erasures() {
+        for seed in 0..60u64 {
+            let mut rng = Rng::new(0xEC ^ (seed << 4));
+            let k = rng.range(1, 7);
+            let m = rng.range(1, 5);
+            let len = rng.range(1, 5000);
+            let data = rng.bytes(len);
+            let shards = encode(k, m, &data);
+            assert_eq!(shards.len(), k + m, "seed={seed}");
+
+            let mut have: Vec<Option<Vec<u8>>> = shards.iter().cloned().map(Some).collect();
+            let erase = rng.range(0, m + 1);
+            for _ in 0..erase {
+                let i = rng.range(0, k + m);
+                have[i] = None; // may repeat: erases ≤ `erase` shards
+            }
+            let got = reconstruct(k, m, &have, len)
+                .unwrap_or_else(|e| panic!("seed={seed} k={k} m={m}: {e}"));
+            assert_eq!(got, data, "seed={seed} k={k} m={m} len={len}");
+        }
+    }
+
+    /// PROPERTY: every single missing shard (data or parity) can be
+    /// rebuilt bit-identical to the original encoding.
+    #[test]
+    fn prop_rebuild_any_single_shard() {
+        for seed in 0..20u64 {
+            let mut rng = Rng::new(0x5EC ^ seed);
+            let k = rng.range(1, 6);
+            let m = rng.range(1, 4);
+            let len = rng.range(1, 2000);
+            let data = rng.bytes(len);
+            let shards = encode(k, m, &data);
+            for lost in 0..k + m {
+                let mut have: Vec<Option<Vec<u8>>> =
+                    shards.iter().cloned().map(Some).collect();
+                have[lost] = None;
+                let rebuilt = rebuild_shard(k, m, &have, len, lost).unwrap();
+                assert_eq!(rebuilt, shards[lost], "seed={seed} lost={lost}");
+            }
+        }
+    }
+
+    /// PROPERTY: strictly more than m erasures must fail loudly, never
+    /// return wrong bytes.
+    #[test]
+    fn prop_too_many_erasures_fail() {
+        for seed in 0..20u64 {
+            let mut rng = Rng::new(0xDEAD ^ (seed << 3));
+            let k = rng.range(2, 6);
+            let m = rng.range(1, 4);
+            let len = rng.range(1, 1000);
+            let data = rng.bytes(len);
+            let shards = encode(k, m, &data);
+            let mut have: Vec<Option<Vec<u8>>> = shards.into_iter().map(Some).collect();
+            // Erase m+1 distinct shards.
+            for i in 0..m + 1 {
+                have[i * (k + m) / (m + 1)] = None;
+            }
+            let left = have.iter().filter(|s| s.is_some()).count();
+            assert!(left < k + m);
+            if left < k {
+                assert!(reconstruct(k, m, &have, len).is_err(), "seed={seed}");
+            } else {
+                // Still ≥ k survivors: must succeed exactly.
+                assert_eq!(reconstruct(k, m, &have, len).unwrap(), data);
+            }
+        }
+    }
+
+    #[test]
+    fn wrong_shard_length_rejected() {
+        let data = vec![1u8; 64];
+        let shards = encode(2, 1, &data);
+        let mut have: Vec<Option<Vec<u8>>> = shards.into_iter().map(Some).collect();
+        have[0].as_mut().unwrap().push(0);
+        assert!(reconstruct(2, 1, &have, 64).is_err());
+        assert!(reconstruct(2, 1, &have[..2], 64).is_err(), "slot count");
+    }
+}

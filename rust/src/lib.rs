@@ -37,6 +37,9 @@
 //! - [`wal`] — durable control plane: segmented CRC-framed write-ahead
 //!   log + snapshots under the manager, group-commit fsync batching,
 //!   torn-tail-tolerant recovery, and the log-shipping record format.
+//! - [`ec`] — pure-Rust GF(256) Reed–Solomon: systematic k+m shard
+//!   encoding and reconstruct-from-any-k, backing the `ec:K,M`
+//!   placement policy and the scrub/repair loop.
 //! - [`sim`] — discrete-event performance model used by the figure benches
 //!   (models the session pipeline's hash/transfer overlap).
 //! - [`workload`] — paper workload generators (different/similar/checkpoint,
@@ -45,6 +48,7 @@
 pub mod chunking;
 pub mod config;
 pub mod crystal;
+pub mod ec;
 pub mod error;
 pub mod hash;
 pub mod hashgpu;

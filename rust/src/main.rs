@@ -16,13 +16,14 @@ use std::collections::HashMap;
 use std::io::{Read as _, Write as _};
 use std::time::Duration;
 
-use gpustore::config::{CaMode, ClientConfig, ClusterConfig, HashEngineKind, ServeMode};
+use gpustore::config::{CaMode, ClientConfig, ClusterConfig, HashEngineKind, Placement, ServeMode};
 use gpustore::hashsvc::session_engine;
 use gpustore::net::Listener;
 use gpustore::store::manager::DEFAULT_LEASE_TIMEOUT;
 use gpustore::store::proto::MAX_REPLICAS;
 use gpustore::store::{
-    policy_for, Cluster, Follower, Manager, ManagerState, NodeOpts, Sai, StorageNode,
+    policy_for, Cluster, ErasureCoded, Follower, Manager, ManagerState, NodeOpts, PlacementPolicy,
+    Sai, StorageNode,
 };
 use gpustore::util::{human_bytes, Rng};
 use gpustore::wal::DurabilityOpts;
@@ -73,6 +74,8 @@ fn print_usage() {
         "gpustore — GPU-accelerated content-addressable storage \
          (TPDS'12 reproduction)\n\n\
          USAGE:\n  gpustore manager --listen ADDR [--replication N] [--lease-timeout SECS]\n\
+         \x20                [--placement rr|rep:R|ec:K,M]\n\
+         \x20                [--scrub-interval SECS [--repair-mbps MBPS]]\n\
          \x20                [--serve-threads N]\n\
          \x20                [--data-dir DIR [--wal-sync MS] [--snapshot-every N]]\n\
          \x20                [--peers A,B[,..] [--advertise ADDR] [--initial-leader]]\n\
@@ -89,7 +92,9 @@ fn print_usage() {
          gpustore verify --manager ADDR --file NAME\n  \
          gpustore ls --manager ADDR\n  \
          gpustore trace --manager ADDR --trace FILE [--seed N]\n  \
-         gpustore demo [--replication N] [--lease-timeout SECS] [--data-dir DIR]\n\
+         gpustore demo [--replication N] [--placement rr|rep:R|ec:K,M]\n\
+         \x20             [--scrub-interval SECS [--repair-mbps MBPS]]\n\
+         \x20             [--lease-timeout SECS] [--data-dir DIR]\n\
          \x20             [--hash-batch N] [--hash-linger-us US] [--hash-devices N]\n\
          \x20             [--serve-threads N] [--verbose]\n\n\
          Nodes register with the manager; clients discover them from it\n\
@@ -258,6 +263,72 @@ fn parse_replication(flags: &HashMap<String, String>) -> Result<usize> {
     }
 }
 
+/// Parse `--placement rr|rep:R|ec:K,M` (PR 10).  Absent means "derive
+/// from `--replication`" (the pre-erasure-coding behavior); present, it
+/// wins over `--replication` and is validated loudly by
+/// [`Placement::parse`].
+fn parse_placement(flags: &HashMap<String, String>) -> Result<Option<Placement>> {
+    flags
+        .get("placement")
+        .map(|v| Placement::parse(v))
+        .transpose()
+}
+
+/// The placement policy the CLI flags ask for (see
+/// [`parse_placement`]); erasure-coded shard counts are re-validated by
+/// [`ErasureCoded::new`].
+fn policy_from_flags(
+    placement: Option<Placement>,
+    replication: usize,
+) -> Result<Box<dyn PlacementPolicy>> {
+    match placement {
+        None => Ok(policy_for(replication)),
+        Some(Placement::RoundRobin) => Ok(policy_for(1)),
+        Some(Placement::Replicated(r)) => Ok(policy_for(r)),
+        Some(Placement::Erasure { k, m }) => Ok(Box::new(ErasureCoded::new(k, m)?)),
+    }
+}
+
+/// Parse the self-healing knobs (PR 10): `--scrub-interval SECS`
+/// (fractional allowed; `0` or absent disables the background
+/// scrub/repair + anti-entropy passes) and `--repair-mbps MBPS`
+/// (repair-traffic budget in Mbit/s per scrub window; `0` or absent
+/// leaves repair unthrottled).  Malformed or negative values fail
+/// loudly.
+fn parse_scrub(flags: &HashMap<String, String>) -> Result<(Duration, f64)> {
+    let interval = match flags.get("scrub-interval") {
+        None => Duration::ZERO,
+        Some(v) => match v.parse::<f64>().ok().and_then(|s| {
+            (s >= 0.0).then_some(())?;
+            Duration::try_from_secs_f64(s).ok()
+        }) {
+            Some(d) => d,
+            None => {
+                return Err(Error::Config(format!(
+                    "bad --scrub-interval `{v}` (need a non-negative number of seconds)"
+                )))
+            }
+        },
+    };
+    let mbps = match flags.get("repair-mbps") {
+        None => 0.0,
+        Some(v) => match v.parse::<f64>() {
+            Ok(m) if m >= 0.0 && m.is_finite() => m,
+            _ => {
+                return Err(Error::Config(format!(
+                    "bad --repair-mbps `{v}` (need a non-negative number of Mbit/s)"
+                )))
+            }
+        },
+    };
+    if mbps > 0.0 && interval.is_zero() {
+        return Err(Error::Config(
+            "--repair-mbps budgets the background scrub; it requires --scrub-interval".into(),
+        ));
+    }
+    Ok((interval, mbps))
+}
+
 /// Parse `--lease-timeout` (whole seconds, fractional allowed, e.g.
 /// `0.5`) as strictly as `--replication`: malformed, zero, or
 /// out-of-range fails loudly rather than silently running with a
@@ -333,6 +404,18 @@ fn parse_durability(flags: &HashMap<String, String>) -> Result<Option<Durability
     Ok(Some(opts))
 }
 
+/// Human-readable scrub summary for the manager banner lines.
+fn scrub_note(interval: Duration, mbps: f64) -> String {
+    if interval.is_zero() {
+        return String::new();
+    }
+    if mbps > 0.0 {
+        format!(", scrub every {interval:?} at {mbps} Mbit/s")
+    } else {
+        format!(", scrub every {interval:?}")
+    }
+}
+
 /// Consecutive failed polls after which a follower assumes the primary
 /// is gone and promotes itself.
 const FOLLOWER_PROMOTE_AFTER: u32 = 20;
@@ -356,6 +439,8 @@ fn parse_peers(flags: &HashMap<String, String>) -> Option<Vec<String>> {
 fn cmd_manager(flags: &HashMap<String, String>) -> Result<()> {
     let listen = flags.get("listen").map(String::as_str).unwrap_or("0.0.0.0:7070");
     let replication = parse_replication(flags)?;
+    let placement = parse_placement(flags)?;
+    let (scrub_interval, repair_mbps) = parse_scrub(flags)?;
     let lease_timeout = parse_lease_timeout(flags)?;
     let durability = parse_durability(flags)?;
     let peers = parse_peers(flags);
@@ -369,7 +454,7 @@ fn cmd_manager(flags: &HashMap<String, String>) -> Result<()> {
         }
         return cmd_follow(listen, primary, lease_timeout, peers);
     }
-    let policy = policy_for(replication);
+    let policy = policy_from_flags(placement, replication)?;
     let name = policy.name();
     let durable = match &durability {
         Some(o) => format!(", data dir {}", o.data_dir.display()),
@@ -386,12 +471,19 @@ fn cmd_manager(flags: &HashMap<String, String>) -> Result<()> {
             lease_timeout,
             durability,
         )?);
-        let mgr =
+        state.set_scrub(scrub_interval, repair_mbps);
+        let mut mgr =
             Manager::serve_listener_opts(Listener::bind(listen)?, state, serve_mode, serve_threads)?;
+        if !scrub_interval.is_zero() {
+            // The scrub/repair pass rides the consensus ticker (a
+            // solo manager's tick skips the election machinery).
+            mgr.start_ticker(MANAGER_TICK);
+        }
         println!(
             "metadata manager listening on {} (policy {name}, replication {replication}, \
-             lease timeout {lease_timeout:?}, {serving}{durable})",
-            mgr.addr()
+             lease timeout {lease_timeout:?}, {serving}{scrub}{durable})",
+            mgr.addr(),
+            scrub = scrub_note(scrub_interval, repair_mbps),
         );
         loop {
             std::thread::park();
@@ -415,6 +507,7 @@ fn cmd_manager(flags: &HashMap<String, String>) -> Result<()> {
         lease_timeout,
         durability,
     )?);
+    state.set_scrub(scrub_interval, repair_mbps);
     state.set_consensus(
         gpustore::store::ConsensusOpts {
             self_addr: advertise.clone(),
@@ -428,11 +521,12 @@ fn cmd_manager(flags: &HashMap<String, String>) -> Result<()> {
     mgr.start_ticker(MANAGER_TICK);
     println!(
         "quorum manager {} listening on {} (peers {}, {}policy {name}, replication \
-         {replication}, lease timeout {lease_timeout:?}, {serving}{durable})",
+         {replication}, lease timeout {lease_timeout:?}, {serving}{scrub}{durable})",
         advertise,
         mgr.addr(),
         peers.join(","),
         if initial_leader { "initial leader, " } else { "" },
+        scrub = scrub_note(scrub_interval, repair_mbps),
     );
     loop {
         std::thread::park();
@@ -665,6 +759,8 @@ fn cmd_demo(flags: &HashMap<String, String>) -> Result<()> {
     // Cluster::spawn validates replication against the node count.
     let replication = parse_replication(flags)?;
     let lease_timeout = parse_lease_timeout(flags)?;
+    let placement = parse_placement(flags)?;
+    let (scrub_interval, repair_mbps) = parse_scrub(flags)?;
     let durability = parse_durability(flags)?;
     // The hash-service knobs ride through the cluster config so every
     // client connected via `service_client` shares one policy.
@@ -673,6 +769,9 @@ fn cmd_demo(flags: &HashMap<String, String>) -> Result<()> {
     let (serve_mode, serve_threads) = parse_serve(flags)?;
     let cluster = Cluster::spawn(ClusterConfig {
         replication,
+        placement,
+        scrub_interval,
+        repair_mbps,
         lease_timeout,
         hash_batch: knobs.hash_batch,
         hash_linger_us: knobs.hash_linger_us,
@@ -686,11 +785,18 @@ fn cmd_demo(flags: &HashMap<String, String>) -> Result<()> {
         Some(o) => format!(", data dir {}", o.data_dir.display()),
         None => String::new(),
     };
+    let placed = match placement {
+        None => format!("replication {replication}"),
+        Some(Placement::RoundRobin) => "placement rr".into(),
+        Some(Placement::Replicated(r)) => format!("placement rep:{r}"),
+        Some(Placement::Erasure { k, m }) => format!("placement ec:{k},{m}"),
+    };
     println!(
-        "demo cluster: manager {} nodes {:?} (replication {replication}, \
-         lease timeout {lease_timeout:?}{durable})",
+        "demo cluster: manager {} nodes {:?} ({placed}, \
+         lease timeout {lease_timeout:?}{}{durable})",
         cluster.manager_addr(),
-        cluster.node_addrs()
+        cluster.node_addrs(),
+        scrub_note(scrub_interval, repair_mbps),
     );
     let sai = cluster.service_client(ClientConfig::ca_cpu_fixed(4))?;
     let data = Rng::new(1).bytes(8 << 20);
@@ -774,6 +880,69 @@ mod tests {
             flags.insert("serve-threads".into(), bad.into());
             assert!(parse_serve(&flags).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn parse_placement_flag() {
+        let mut flags = HashMap::new();
+        // Absent: derive from --replication, as before PR 10.
+        assert_eq!(parse_placement(&flags).unwrap(), None);
+        flags.insert("placement".into(), "rr".into());
+        assert_eq!(
+            parse_placement(&flags).unwrap(),
+            Some(Placement::RoundRobin)
+        );
+        flags.insert("placement".into(), "rep:3".into());
+        assert_eq!(
+            parse_placement(&flags).unwrap(),
+            Some(Placement::Replicated(3))
+        );
+        flags.insert("placement".into(), "ec:4,2".into());
+        assert_eq!(
+            parse_placement(&flags).unwrap(),
+            Some(Placement::Erasure { k: 4, m: 2 })
+        );
+        for bad in ["", "rep:0", "ec:0,2", "ec:4", "raid5", "true"] {
+            flags.insert("placement".into(), bad.into());
+            assert!(parse_placement(&flags).is_err(), "{bad:?}");
+        }
+        // The policy constructor re-validates the wire bound.
+        assert!(policy_from_flags(Some(Placement::Erasure { k: 60, m: 10 }), 1).is_err());
+        assert_eq!(
+            policy_from_flags(Some(Placement::Erasure { k: 2, m: 1 }), 1)
+                .unwrap()
+                .name(),
+            "erasure-coded"
+        );
+    }
+
+    #[test]
+    fn parse_scrub_flags() {
+        let mut flags = HashMap::new();
+        // Absent: background scrub disabled, repair unthrottled.
+        assert_eq!(parse_scrub(&flags).unwrap(), (Duration::ZERO, 0.0));
+        flags.insert("scrub-interval".into(), "1.5".into());
+        assert_eq!(
+            parse_scrub(&flags).unwrap(),
+            (Duration::from_millis(1500), 0.0)
+        );
+        flags.insert("repair-mbps".into(), "40".into());
+        assert_eq!(
+            parse_scrub(&flags).unwrap(),
+            (Duration::from_millis(1500), 40.0)
+        );
+        for bad in ["x", "-1", "nan", "inf"] {
+            let mut f = flags.clone();
+            f.insert("scrub-interval".into(), bad.into());
+            assert!(parse_scrub(&f).is_err(), "scrub-interval={bad}");
+            let mut f = flags.clone();
+            f.insert("repair-mbps".into(), bad.into());
+            assert!(parse_scrub(&f).is_err(), "repair-mbps={bad}");
+        }
+        // A repair budget without a scrub loop budgets nothing.
+        let mut f = HashMap::new();
+        f.insert("repair-mbps".into(), "40".into());
+        assert!(parse_scrub(&f).is_err());
     }
 
     #[test]

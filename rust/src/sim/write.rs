@@ -56,6 +56,13 @@ pub struct WriteConfig {
     /// ([`SystemSim::net_rtt`]) on top of its wire time; deeper
     /// pipelines amortize it away.
     pub inflight_depth: usize,
+    /// Client-side erasure-encode cost (PR 10), seconds per new byte:
+    /// the GF(256) Reed–Solomon pass every non-duplicate byte takes
+    /// before its shards can ship.  Encoding gates transfer, so it adds
+    /// serially like the other overheads.  `0.0` — the default — models
+    /// replicated/round-robin placement and keeps every pre-PR-10
+    /// figure bit-identical.
+    pub ec_encode_overhead: f64,
 }
 
 impl Default for WriteConfig {
@@ -67,6 +74,7 @@ impl Default for WriteConfig {
             similarity: 0.0,
             replication: 1,
             inflight_depth: 16,
+            ec_encode_overhead: 0.0,
         }
     }
 }
@@ -117,6 +125,12 @@ pub struct SystemSim {
     /// bit-identical; benches measure the real value from
     /// `BENCH_pr9.json` latency deltas.
     pub per_request_serve_overhead: f64,
+    /// Fixed control-plane cost per repaired copy or shard (PR 10):
+    /// the scrub loop's rehome record, placement decision and
+    /// connection setup, paid once per repair on top of the wire time
+    /// ([`SystemSim::repair_secs`]).  `0.0` by default — write-path
+    /// figures never depend on it.
+    pub per_repair_overhead: f64,
     /// Client data-path bandwidth: FUSE crossing + SAI write-buffer
     /// copies (B/s).  The CA-Infinite ceiling.
     pub memcpy_bps: f64,
@@ -137,6 +151,7 @@ impl Default for SystemSim {
             per_block_overhead: 15e-6,
             per_commit_wal_overhead: 0.0,
             per_request_serve_overhead: 0.0,
+            per_repair_overhead: 0.0,
             memcpy_bps: 350e6,
             cpu_system_efficiency: 0.6,
         }
@@ -222,8 +237,24 @@ impl SystemSim {
             + self.per_lease_overhead
             + self.per_commit_wal_overhead
             + MANAGER_REQUESTS_PER_FILE * self.per_request_serve_overhead
-            + blocks as f64 * self.per_block_overhead;
+            + blocks as f64 * self.per_block_overhead
+            + size as f64 * (1.0 - cfg.similarity) * cfg.ec_encode_overhead;
         self.gated_secs(cfg, size, blocks).0 + overhead
+    }
+
+    /// Seconds for the scrub loop to restore redundancy after losing
+    /// `repairs` copies or shards totalling `bytes` (PR 10): each
+    /// repair pays the fixed control-plane cost
+    /// ([`per_repair_overhead`](Self::per_repair_overhead)) plus wire
+    /// time at the repair budget (`repair_mbps` in Mbit/s, matching
+    /// `--repair-mbps`; `<= 0` repairs at the full link rate).
+    pub fn repair_secs(&self, repairs: usize, bytes: usize, repair_mbps: f64) -> f64 {
+        let bps = if repair_mbps > 0.0 {
+            (repair_mbps * 125_000.0).min(self.net_bps)
+        } else {
+            self.net_bps
+        };
+        repairs as f64 * self.per_repair_overhead + bytes as f64 / bps
     }
 
     /// Hash time *hidden* behind transfers for one file under `cfg` —
@@ -394,6 +425,66 @@ mod tests {
             with.hash_hidden_secs(&c, MB64, 64),
             without.hash_hidden_secs(&c, MB64, 64)
         );
+    }
+
+    #[test]
+    fn ec_encode_overhead_defaults_to_zero_and_is_additive() {
+        // Erasure encoding is a per-new-byte client cost serialized in
+        // front of transfer: off by default (every pre-PR-10 figure is
+        // bit-identical), and turned on it adds exactly
+        // `new_bytes * knob` seconds for any size and block count,
+        // never perturbing the hidden-hash accounting.
+        let base = cfg(EngineModel::Cpu { threads: 16 }, false, 0.5);
+        assert_eq!(base.ec_encode_overhead, 0.0);
+        let with = WriteConfig {
+            ec_encode_overhead: 2e-9, // ~500 MB/s GF(256) encode
+            ..base
+        };
+        let s = SystemSim::default();
+        for (size, blocks) in [(1 << 20, 1), (MB64, 64), (MB64, 1024)] {
+            let d = s.write_secs(&with, size, blocks) - s.write_secs(&base, size, blocks);
+            let want = size as f64 * (1.0 - base.similarity) * 2e-9;
+            assert!((d - want).abs() < 1e-12, "size {size}: delta {d}");
+        }
+        assert_eq!(
+            s.hash_hidden_secs(&with, MB64, 64),
+            s.hash_hidden_secs(&base, MB64, 64)
+        );
+        // Fully-deduplicated writes encode nothing.
+        let similar = WriteConfig {
+            similarity: 1.0,
+            ..with
+        };
+        let similar_base = WriteConfig {
+            similarity: 1.0,
+            ..base
+        };
+        assert_eq!(
+            s.write_secs(&similar, MB64, 64),
+            s.write_secs(&similar_base, MB64, 64)
+        );
+    }
+
+    #[test]
+    fn repair_secs_budget_and_fixed_cost() {
+        // Time-to-restored-redundancy: fixed per-repair control-plane
+        // cost plus wire time at the configured budget.
+        let s = SystemSim {
+            per_repair_overhead: 1e-3,
+            ..SystemSim::default()
+        };
+        assert_eq!(SystemSim::default().per_repair_overhead, 0.0);
+        let unthrottled = s.repair_secs(4, MB64, 0.0);
+        let want = 4.0 * 1e-3 + MB64 as f64 / s.net_bps;
+        assert!((unthrottled - want).abs() < 1e-9, "{unthrottled}");
+        // A 100 Mbit/s budget repairs at 12.5 MB/s — slower than the
+        // full link, never faster.
+        let budgeted = s.repair_secs(4, MB64, 100.0);
+        let want = 4.0 * 1e-3 + MB64 as f64 / 12.5e6;
+        assert!((budgeted - want).abs() < 1e-9, "{budgeted}");
+        assert!(budgeted > unthrottled);
+        // A budget above the link rate clamps to the link.
+        assert_eq!(s.repair_secs(4, MB64, 1e6), unthrottled);
     }
 
     #[test]

@@ -11,10 +11,10 @@
 
 use std::sync::Arc;
 
-use super::manager::{policy_for, ConsensusOpts, Manager, ManagerState};
+use super::manager::{policy_for, ConsensusOpts, ErasureCoded, Manager, ManagerState, PlacementPolicy};
 use super::node::{NodeOpts, StorageNode};
 use super::sai::Sai;
-use crate::config::{ClientConfig, ClusterConfig};
+use crate::config::{ClientConfig, ClusterConfig, Placement};
 use crate::hashgpu::HashEngine;
 use crate::net::{Listener, Shaper};
 use crate::wal::DurabilityOpts;
@@ -35,13 +35,14 @@ impl Cluster {
     /// the initial leader) and clients bootstrap from the full member
     /// list.
     pub fn spawn(cfg: ClusterConfig) -> Result<Cluster> {
-        if cfg.replication == 0 {
+        if cfg.homes_per_block() == 0 {
             return Err(Error::Config("replication must be >= 1".into()));
         }
-        if cfg.replication > cfg.nodes {
+        if cfg.homes_per_block() > cfg.nodes {
             return Err(Error::Config(format!(
-                "replication {} exceeds node count {}",
-                cfg.replication, cfg.nodes
+                "placement needs {} homes per block but the cluster has only {} nodes",
+                cfg.homes_per_block(),
+                cfg.nodes
             )));
         }
         if cfg.lease_timeout.is_zero() {
@@ -63,10 +64,11 @@ impl Cluster {
         for (i, listener) in listeners.into_iter().enumerate() {
             let durability = durability_for(&cfg, i);
             let state = Arc::new(ManagerState::with_durability(
-                policy_for(cfg.replication),
+                policy_from(&cfg)?,
                 cfg.lease_timeout,
                 durability.clone(),
             )?);
+            state.set_scrub(cfg.scrub_interval, cfg.repair_mbps);
             if cfg.managers > 1 {
                 state.set_consensus(
                     ConsensusOpts {
@@ -184,10 +186,11 @@ impl Cluster {
     pub fn restart_manager_at(&self, i: usize) -> Result<()> {
         let durability = durability_for(&self.cfg, i);
         let state = Arc::new(ManagerState::with_durability(
-            policy_for(self.cfg.replication),
+            policy_from(&self.cfg)?,
             self.cfg.lease_timeout,
             durability.clone(),
         )?);
+        state.set_scrub(self.cfg.scrub_interval, self.cfg.repair_mbps);
         if self.managers.len() > 1 {
             let addrs = self.manager_addrs();
             state.set_consensus(
@@ -286,6 +289,18 @@ impl Cluster {
                 _ => (0, 0),
             })
             .collect()
+    }
+}
+
+/// The placement policy the cluster config asks for: the explicit
+/// [`ClusterConfig::placement`] when set (PR 10), otherwise derived
+/// from the replication factor as before.
+fn policy_from(cfg: &ClusterConfig) -> Result<Box<dyn PlacementPolicy>> {
+    match cfg.placement {
+        None => Ok(policy_for(cfg.replication)),
+        Some(Placement::RoundRobin) => Ok(policy_for(1)),
+        Some(Placement::Replicated(r)) => Ok(policy_for(r)),
+        Some(Placement::Erasure { k, m }) => Ok(Box::new(ErasureCoded::new(k, m)?)),
     }
 }
 

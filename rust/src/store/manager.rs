@@ -99,6 +99,13 @@ pub trait PlacementPolicy: Send + std::fmt::Debug {
     /// Choose the replica set for one new block.  `alive` is non-empty
     /// and sorted by node id.
     fn place(&mut self, alive: &[u32]) -> Vec<u32>;
+    /// Erasure-coding descriptor `(k, m)` when this policy stores
+    /// blocks as k data + m parity shards — position `i` of a placed
+    /// replica set is then the home of shard `i`.  `None` (the
+    /// default) means whole-block copies.
+    fn ec(&self) -> Option<(u8, u8)> {
+        None
+    }
 }
 
 /// Today's behaviour as a policy: blocks round-robin across the alive
@@ -162,6 +169,67 @@ impl PlacementPolicy for ReplicatedStripe {
     }
 }
 
+/// Erasure-coded striping: every block is split into `k` data + `m`
+/// parity shards (GF(256) Reed–Solomon, [`crate::ec`]) and shard `i`
+/// lands on position `i` of the replica set — the replica list IS the
+/// shard order, which is why nothing downstream may reorder or shrink
+/// it.  Tolerates any `m` shard losses at `(k+m)/k`× storage overhead
+/// (vs. `(m+1)`× for replication at equal fault tolerance).
+#[derive(Debug)]
+pub struct ErasureCoded {
+    /// Data shards per block.
+    pub k: u8,
+    /// Parity shards per block.
+    pub m: u8,
+    next: usize,
+}
+
+impl ErasureCoded {
+    /// Policy splitting blocks into `k` data + `m` parity shards.
+    /// Shard counts are validated loudly, not clamped — silently
+    /// weakening a redundancy guarantee is worse than refusing to
+    /// start: `k >= 1`, `m >= 1`, `k + m <= MAX_REPLICAS`.
+    pub fn new(k: u8, m: u8) -> Result<ErasureCoded> {
+        if k < 1 || m < 1 {
+            return Err(Error::Manager(format!(
+                "erasure coding needs k >= 1 data and m >= 1 parity shards (got {k},{m})"
+            )));
+        }
+        if k as usize + m as usize > MAX_REPLICAS {
+            return Err(Error::Manager(format!(
+                "erasure coding k+m = {} exceeds the {MAX_REPLICAS}-home wire bound",
+                k as usize + m as usize
+            )));
+        }
+        Ok(ErasureCoded { k, m, next: 0 })
+    }
+}
+
+impl PlacementPolicy for ErasureCoded {
+    fn name(&self) -> &'static str {
+        "erasure-coded"
+    }
+
+    fn replication(&self) -> usize {
+        self.k as usize + self.m as usize
+    }
+
+    fn place(&mut self, alive: &[u32]) -> Vec<u32> {
+        // k+m DISTINCT homes from the rotating cursor.  The planner
+        // guarantees `alive.len() >= k + m` before calling (two shards
+        // on one node would silently void the coding guarantee, so a
+        // thin cluster fails the allocation loudly instead).
+        let n = self.replication();
+        let start = self.next;
+        self.next = self.next.wrapping_add(1);
+        (0..n).map(|i| alive[(start + i) % alive.len()]).collect()
+    }
+
+    fn ec(&self) -> Option<(u8, u8)> {
+        Some((self.k, self.m))
+    }
+}
+
 /// The policy implied by a replication factor: classic single-copy
 /// round-robin striping for `r == 1`, n-way [`ReplicatedStripe`]
 /// otherwise.  Single source of truth for every entry point (in-process
@@ -184,7 +252,13 @@ struct FileEntry {
 #[derive(Debug)]
 struct BlockInfo {
     /// Where the block lives (decided once, at first allocation).
+    /// Under erasure coding, position `i` holds shard `i`.
     replicas: Vec<u32>,
+    /// Erasure-coding descriptor `(k, m)` the block was STORED under
+    /// (`None` = whole-block copies).  Recorded per block, not read
+    /// from the current policy: mixed-policy histories and dedup must
+    /// decode what is actually on the nodes.
+    ec: Option<(u8, u8)>,
     /// Payload length (for stats / future rebalancing).
     len: u32,
     /// Occurrences in committed block-maps.
@@ -372,6 +446,29 @@ pub struct ManagerState {
     /// client re-uploaded after re-allocating the hash.
     gc_inflight: Mutex<HashSet<Digest>>,
     gc_done: Condvar,
+    /// Background scrub/repair configuration and last-run clock
+    /// ([`ManagerState::set_scrub`]); the cadence reads the skewable
+    /// clock, so tests drive scrub like lease expiry.
+    scrub: Mutex<ScrubState>,
+    /// Replica copies readers reported corrupt ([`Msg::ReportCorrupt`])
+    /// or anti-entropy found missing: volatile repair hints, never
+    /// logged — a restart merely loses the hint until a reader trips
+    /// over the copy again.
+    suspects: Mutex<HashSet<(Digest, u32)>>,
+}
+
+/// Scrub/repair loop knobs + clock (all behind one lock: they are read
+/// together at the top of every tick).
+#[derive(Debug, Clone, Copy)]
+struct ScrubState {
+    /// Pass cadence (ZERO = scrubbing disabled, the default).
+    interval: Duration,
+    /// Repair bandwidth budget in Mbit/s (`0.0` = unlimited): one pass
+    /// moves at most `interval × repair_mbps` of payload, so repair
+    /// traffic cannot starve foreground writes.
+    repair_mbps: f64,
+    /// When the last pass started, on the manager's skewable clock.
+    last_run: Option<Instant>,
 }
 
 impl Default for ManagerState {
@@ -491,6 +588,12 @@ impl ManagerState {
             clock_skew: Mutex::new(Duration::ZERO),
             gc_inflight: Mutex::new(HashSet::new()),
             gc_done: Condvar::new(),
+            scrub: Mutex::new(ScrubState {
+                interval: Duration::ZERO,
+                repair_mbps: 0.0,
+                last_run: None,
+            }),
+            suspects: Mutex::new(HashSet::new()),
         }
     }
 
@@ -655,6 +758,7 @@ impl ManagerState {
             self.gc_batch(g, freed)
         };
         self.execute_gc(gc);
+        self.maybe_scrub();
     }
 
     /// Handle one request message.
@@ -801,7 +905,11 @@ impl ManagerState {
         let mut freed = Vec::new();
         if !matches!(
             msg,
-            Msg::FetchSnapshot | Msg::FetchWal { .. } | Msg::Heartbeat { .. } | Msg::NodeList
+            Msg::FetchSnapshot
+                | Msg::FetchWal { .. }
+                | Msg::Heartbeat { .. }
+                | Msg::NodeList
+                | Msg::ReportCorrupt { .. }
         ) {
             self.expire_leases(g, now, &mut freed);
         }
@@ -935,6 +1043,13 @@ impl ManagerState {
                     ))
                 }
             }
+            Msg::ReportCorrupt { hash, node } => {
+                // Volatile repair hint (never logged): the next scrub
+                // pass re-verifies it against the block table before
+                // moving any bytes, so a bogus report costs nothing.
+                self.suspects.lock().unwrap().insert((hash, node));
+                Msg::Ok
+            }
             other => Msg::Err(format!("manager: unexpected message {other:?}")),
         };
         self.maybe_snapshot(g);
@@ -1012,6 +1127,7 @@ impl ManagerState {
                         &m.hash,
                         || BlockInfo {
                             replicas: m.replicas.clone(),
+                            ec: m.ec,
                             len: m.len,
                             refs: 0,
                             pending: 0,
@@ -1102,6 +1218,7 @@ impl ManagerState {
                         &m.hash,
                         || BlockInfo {
                             replicas: m.replicas.clone(),
+                            ec: m.ec,
                             len: m.len,
                             refs: 0,
                             pending: 0,
@@ -1114,6 +1231,7 @@ impl ManagerState {
                             // log time; for live sets it recorded the
                             // existing one, so this is a no-op there.
                             e.replicas = m.replicas.clone();
+                            e.ec = m.ec;
                         },
                     );
                 }
@@ -1136,6 +1254,29 @@ impl ManagerState {
                 } else if let Some(n) = g.nodes.get_mut(idx) {
                     n.addr = addr;
                     n.last_beat = now;
+                }
+            }
+            Record::Rehome { hash, replicas } => {
+                // Scrub/repair re-homing: swap the block's replica set
+                // (shard ORDER preserved — under EC, position i is
+                // still shard i; only its home moved).  A block
+                // released since the record was logged is a no-op.
+                let mut present = false;
+                self.blocks.mutate(&hash, |e| {
+                    e.replicas = replicas.clone();
+                    present = true;
+                });
+                if present {
+                    // Committed file maps carry their own replica
+                    // lists; re-point them so readers opening the
+                    // current version chase live homes.
+                    for f in g.files.values_mut() {
+                        for m in f.blocks.iter_mut() {
+                            if m.hash == hash {
+                                m.replicas = replicas.clone();
+                            }
+                        }
+                    }
                 }
             }
         }
@@ -1340,80 +1481,111 @@ impl ManagerState {
                 "no storage nodes alive".into()
             });
         }
-        // hash -> (decided replicas, dedup_ok: later occurrences in
-        // this batch may skip the transfer).
-        let mut planned: HashMap<Digest, (Vec<u32>, bool)> = HashMap::new();
+        // Erasure coding needs k+m DISTINCT homes — one node holding
+        // two shards silently voids the m-failure guarantee, so a thin
+        // cluster fails the allocation loudly instead of degrading.
+        if let Some((k, m)) = g.policy.ec() {
+            let need = k as usize + m as usize;
+            if alive.len() < need {
+                return Err(format!(
+                    "erasure coding ec:{k},{m} needs {need} distinct alive nodes, \
+                     only {} alive",
+                    alive.len()
+                ));
+            }
+        }
+        // A known replica set still serves this block if enough of its
+        // homes are alive: any one copy for replication, any k shards
+        // for erasure coding.
+        let usable = |replicas: &[u32], ec: Option<(u8, u8)>| {
+            let up = replicas.iter().filter(|r| alive.contains(r)).count();
+            match ec {
+                Some((k, _)) => up >= k as usize,
+                None => up >= 1,
+            }
+        };
+        // hash -> (decided replicas, stored coding, dedup_ok: later
+        // occurrences in this batch may skip the transfer).
+        let mut planned: HashMap<Digest, (Vec<u32>, Option<(u8, u8)>, bool)> = HashMap::new();
         let mut out = Vec::with_capacity(specs.len());
         let mut metas = Vec::with_capacity(specs.len());
         for s in specs {
-            let (replicas, fresh) = if let Some((replicas, dedup_ok)) = planned.get(&s.hash) {
-                (replicas.clone(), !*dedup_ok)
-            } else {
-                // One bounded shard-lock hold to read the entry; the
-                // placement decision runs outside it.
-                let looked = self
-                    .blocks
-                    .get_with(&s.hash, |e| {
-                        (e.replicas.clone(), e.refs > 0 || e.placed_by == file)
+            let (replicas, ec, fresh) =
+                if let Some((replicas, ec, dedup_ok)) = planned.get(&s.hash) {
+                    (replicas.clone(), *ec, !*dedup_ok)
+                } else {
+                    // One bounded shard-lock hold to read the entry; the
+                    // placement decision runs outside it.
+                    let looked = self.blocks.get_with(&s.hash, |e| {
+                        (e.replicas.clone(), e.ec, e.refs > 0 || e.placed_by == file)
                     });
-                match looked {
-                    // Committed somewhere (a commit proves the transfer
-                    // completed), or claimed by this same session
-                    // (which is the one doing the transfer): safe to
-                    // dedup — PROVIDED at least one replica is still
-                    // alive.  A known block whose replicas all died is
-                    // re-homed and re-transferred (the writer has the
-                    // bytes in hand; dedup against dead nodes would
-                    // commit an unreadable file).
-                    Some((known, true)) => {
-                        if known.iter().any(|r| alive.contains(r)) {
-                            planned.insert(s.hash, (known.clone(), true));
-                            (known, false)
-                        } else {
+                    match looked {
+                        // Committed somewhere (a commit proves the
+                        // transfer completed), or claimed by this same
+                        // session (which is the one doing the transfer):
+                        // safe to dedup — PROVIDED the stored copy is
+                        // still readable (`usable`).  The assignment
+                        // echoes the STORED coding, not the current
+                        // policy's: dedup against an ec:4,2 block from a
+                        // rep:3 cluster must read 4+2 shards, not 3
+                        // copies.  A known block that is no longer
+                        // readable is re-placed (under the CURRENT
+                        // policy/coding) and re-transferred — the writer
+                        // has the bytes in hand; dedup against dead
+                        // nodes would commit an unreadable file.
+                        Some((known, kec, true)) => {
+                            if usable(&known, kec) {
+                                planned.insert(s.hash, (known.clone(), kec, true));
+                                (known, kec, false)
+                            } else {
+                                let replicas = g.policy.place(&alive);
+                                let ec = g.policy.ec();
+                                planned.insert(s.hash, (replicas.clone(), ec, true));
+                                (replicas, ec, true)
+                            }
+                        }
+                        // Known only as ANOTHER session's uncommitted
+                        // claim: that transfer may still fail or be
+                        // abandoned, so this writer must transfer too
+                        // (puts are idempotent by key) — same homes and
+                        // coding (re-placed if unreadable), but fresh
+                        // from the caller's point of view, and every
+                        // in-batch repeat stays fresh too.
+                        //
+                        // Re-placing (here and above) deliberately does
+                        // NOT delete the old replicas' copies: those
+                        // nodes look dead, so the deletes could not land
+                        // anyway, and if a node was merely partitioned,
+                        // its surviving copy may be the only one a
+                        // pinned reader's snapshot map can still name —
+                        // eager deletion would break that reader when
+                        // the node heals.  The leak is reclaimed by the
+                        // anti-entropy sweep once the node rejoins.
+                        Some((known, kec, false)) => {
+                            let (replicas, ec) = if usable(&known, kec) {
+                                (known, kec)
+                            } else {
+                                (g.policy.place(&alive), g.policy.ec())
+                            };
+                            planned.insert(s.hash, (replicas.clone(), ec, false));
+                            (replicas, ec, true)
+                        }
+                        None => {
                             let replicas = g.policy.place(&alive);
-                            planned.insert(s.hash, (replicas.clone(), true));
-                            (replicas, true)
+                            let ec = g.policy.ec();
+                            debug_assert!(!replicas.is_empty());
+                            planned.insert(s.hash, (replicas.clone(), ec, true));
+                            (replicas, ec, true)
                         }
                     }
-                    // Known only as ANOTHER session's uncommitted
-                    // claim: that transfer may still fail or be
-                    // abandoned, so this writer must transfer too (puts
-                    // are idempotent by key) — same homes (re-homed if
-                    // all dead), but fresh from the caller's point of
-                    // view, and every in-batch repeat stays fresh too.
-                    //
-                    // Re-homing (here and above) deliberately does NOT
-                    // delete the old replicas' copies: those nodes look
-                    // dead, so the deletes could not land anyway, and
-                    // if a node was merely partitioned, its surviving
-                    // copy may be the only one a pinned reader's
-                    // snapshot map can still name — eager deletion
-                    // would break that reader when the node heals.  The
-                    // cost is a bounded space leak on a flapping node
-                    // (ROADMAP, lease limitations).
-                    Some((known, false)) => {
-                        let replicas = if known.iter().any(|r| alive.contains(r)) {
-                            known
-                        } else {
-                            g.policy.place(&alive)
-                        };
-                        planned.insert(s.hash, (replicas.clone(), false));
-                        (replicas, true)
-                    }
-                    None => {
-                        let replicas = g.policy.place(&alive);
-                        debug_assert!(!replicas.is_empty());
-                        planned.insert(s.hash, (replicas.clone(), true));
-                        (replicas, true)
-                    }
-                }
-            };
+                };
             metas.push(BlockMeta {
                 hash: s.hash,
                 len: s.len,
                 replicas: replicas.clone(),
+                ec,
             });
-            out.push(Assignment { replicas, fresh });
+            out.push(Assignment { replicas, fresh, ec });
         }
         Ok((out, metas))
     }
@@ -1913,6 +2085,9 @@ impl ManagerState {
     /// elections with [`ManagerState::advance_clock`] + explicit ticks;
     /// nothing fires between ticks.
     pub fn tick_consensus(&self) {
+        // Scrub rides the same ticker (leader-gated inside): solo
+        // managers return early below and would otherwise never scrub.
+        self.maybe_scrub();
         let (role, solo, due) = {
             let r = self.repl.lock().unwrap();
             let due = self.now().saturating_duration_since(r.last_contact) >= election_timeout(&r);
@@ -2173,6 +2348,7 @@ impl ManagerState {
                 pending: b.pending,
                 pins: b.pins,
                 placed_by: b.placed_by.clone(),
+                ec: b.ec,
             });
         });
         blocks.sort_by_key(|b| b.hash);
@@ -2222,6 +2398,7 @@ impl ManagerState {
                 b.hash,
                 BlockInfo {
                     replicas: b.replicas.clone(),
+                    ec: b.ec,
                     len: b.len,
                     refs: b.refs,
                     pending: b.pending,
@@ -2254,6 +2431,499 @@ impl ManagerState {
         g.last_lsn = snap.lsn;
         g.ship.clear();
         g.crc_log.clear();
+    }
+}
+
+// ---- background scrub/repair + anti-entropy (PR 10) ----
+
+/// Outcome of one scrub/repair pass ([`ManagerState::scrub_once`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ScrubReport {
+    /// Committed/pinned blocks examined.
+    pub scanned: u64,
+    /// Blocks found under-redundant (dead home or suspect copy).
+    pub degraded: u64,
+    /// Blocks whose full redundancy was restored this pass.
+    pub repaired: u64,
+    /// Payload bytes moved by repairs this pass.
+    pub bytes_moved: u64,
+    /// Degraded blocks left for a later pass (budget exhausted, no
+    /// healthy source, or nowhere live to put the new copy).
+    pub deferred: u64,
+}
+
+/// Outcome of one anti-entropy sweep ([`ManagerState::anti_entropy`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AntiEntropyReport {
+    /// Nodes whose inventories were fetched and reconciled.
+    pub nodes_swept: u64,
+    /// Copies held by a node that the manager no longer accounts for —
+    /// deleted (includes replicas stranded by GC batches abandoned at
+    /// a failed quorum barrier).
+    pub stale_copies: u64,
+    /// Copies the manager expects on a node that the node lacks —
+    /// marked suspect for the next scrub pass to re-create.
+    pub missing_copies: u64,
+}
+
+/// Live-redundancy summary ([`ManagerState::redundancy_report`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RedundancyReport {
+    /// Committed/pinned blocks examined.
+    pub blocks: u64,
+    /// Blocks with every home alive and no suspect copies.
+    pub fully_redundant: u64,
+    /// Blocks still readable but below their redundancy target.
+    pub degraded: u64,
+    /// Blocks with too few healthy homes left to read or rebuild.
+    pub unreadable: u64,
+}
+
+impl ManagerState {
+    /// Configure the background scrub/repair loop: run a pass every
+    /// `interval` (ZERO disables, the default) moving at most
+    /// `interval × repair_mbps` (Mbit/s) of repair payload per pass
+    /// (`0.0` = unlimited).  Takes effect at the next tick.
+    pub fn set_scrub(&self, interval: Duration, repair_mbps: f64) {
+        let mut s = self.scrub.lock().unwrap();
+        s.interval = interval;
+        s.repair_mbps = repair_mbps;
+    }
+
+    /// Run a scrub + anti-entropy pass when the configured interval
+    /// has elapsed on the manager's (skewable) clock.  Rides
+    /// [`ManagerState::tick`] and [`ManagerState::tick_consensus`];
+    /// leader-gated inside, so exactly one manager of a quorum group
+    /// repairs.
+    pub fn maybe_scrub(&self) {
+        let due = {
+            let mut s = self.scrub.lock().unwrap();
+            if s.interval.is_zero() {
+                return;
+            }
+            let now = self.now();
+            let elapsed = match s.last_run {
+                Some(t) => now.saturating_duration_since(t) >= s.interval,
+                None => true,
+            };
+            if elapsed {
+                s.last_run = Some(now);
+            }
+            elapsed
+        };
+        if due && self.is_leader() {
+            self.scrub_once();
+            self.anti_entropy();
+        }
+    }
+
+    /// One scrub/repair pass (leader/solo only — followers receive the
+    /// resulting [`Record::Rehome`]s through replication).  Detects
+    /// committed blocks that lost a home (dead node) or hold a suspect
+    /// copy, re-creates the missing copies/shards on live nodes from
+    /// the surviving ones, and publishes each new replica set through
+    /// the logged, quorum-gated [`Record::Rehome`] path.  Bytes move
+    /// outside every lock; the re-home re-validates under the lock
+    /// before logging.
+    pub fn scrub_once(&self) -> ScrubReport {
+        let mut report = ScrubReport::default();
+        if !self.is_leader() {
+            return report;
+        }
+        let (alive, addrs) = {
+            let g = self.inner.lock().unwrap();
+            let now = self.now();
+            let alive: Vec<u32> = g
+                .nodes
+                .iter()
+                .enumerate()
+                .filter(|(_, n)| {
+                    now.saturating_duration_since(n.last_beat) < self.heartbeat_timeout
+                })
+                .map(|(id, _)| id as u32)
+                .collect();
+            let addrs: Vec<String> = g.nodes.iter().map(|n| n.addr.clone()).collect();
+            (alive, addrs)
+        };
+        let cfg = *self.scrub.lock().unwrap();
+        // Per-pass byte budget from the bandwidth token bucket: one
+        // interval's worth of Mbit/s (a direct call with scrubbing
+        // disabled budgets one second's worth).
+        let window = if cfg.interval.is_zero() {
+            1.0
+        } else {
+            cfg.interval.as_secs_f64()
+        };
+        let mut budget: u64 = if cfg.repair_mbps <= 0.0 {
+            u64::MAX
+        } else {
+            (cfg.repair_mbps * 125_000.0 * window).max(1.0) as u64
+        };
+        let suspects: HashSet<(Digest, u32)> = self.suspects.lock().unwrap().clone();
+        let healthy =
+            |hash: &Digest, r: u32| alive.contains(&r) && !suspects.contains(&(*hash, r));
+        // Candidates: committed or pinned blocks with an unhealthy
+        // home.  Mid-write (pending-only) blocks are the writer's to
+        // finish — repairing them would race the transfer.
+        let mut candidates: Vec<(Digest, u32, Vec<u32>, Option<(u8, u8)>)> = Vec::new();
+        self.blocks.for_each(|hash, b| {
+            if b.refs == 0 && b.pins == 0 {
+                return;
+            }
+            report.scanned += 1;
+            if b.replicas.iter().any(|r| !healthy(hash, *r)) {
+                candidates.push((*hash, b.len, b.replicas.clone(), b.ec));
+            }
+        });
+        candidates.sort_by_key(|c| c.0); // deterministic repair order
+        report.degraded = candidates.len() as u64;
+        for (hash, len, replicas, ec) in candidates {
+            if budget == 0 {
+                report.deferred += 1;
+                continue;
+            }
+            let bad: Vec<usize> = (0..replicas.len())
+                .filter(|&i| !healthy(&hash, replicas[i]))
+                .collect();
+            // New homes: a suspect copy on a live node heals in place
+            // (the re-put overwrites it); a dead home moves to a live
+            // node not already holding part of this block.
+            let mut new_replicas = replicas.clone();
+            let mut taken: HashSet<u32> = replicas
+                .iter()
+                .copied()
+                .filter(|r| alive.contains(r))
+                .collect();
+            let mut placed = true;
+            for &i in &bad {
+                if alive.contains(&replicas[i]) {
+                    continue;
+                }
+                match alive.iter().copied().find(|n| !taken.contains(n)) {
+                    Some(fresh) => {
+                        taken.insert(fresh);
+                        new_replicas[i] = fresh;
+                    }
+                    None => {
+                        placed = false;
+                        break;
+                    }
+                }
+            }
+            if !placed {
+                report.deferred += 1;
+                continue;
+            }
+            let moved = match ec {
+                // Replication: copy from any healthy source, verified
+                // against the content address so a silently corrupt
+                // source never propagates.
+                None => {
+                    let data = (0..replicas.len())
+                        .filter(|i| !bad.contains(i))
+                        .find_map(|i| {
+                            let d = fetch_block(&addrs, replicas[i], hash)?;
+                            (crate::hash::md5(&d) == hash).then_some(d)
+                        });
+                    let Some(data) = data else {
+                        report.deferred += 1;
+                        continue;
+                    };
+                    let mut bytes = 0u64;
+                    let ok = bad.iter().all(|&i| {
+                        let put = put_block(&addrs, new_replicas[i], hash, data.clone());
+                        if put {
+                            bytes += data.len() as u64;
+                        }
+                        put
+                    });
+                    if !ok {
+                        report.deferred += 1;
+                        continue;
+                    }
+                    bytes
+                }
+                // Erasure coding: gather any k healthy shards and
+                // rebuild exactly the lost positions.
+                Some((k, m)) => {
+                    let (k, m) = (k as usize, m as usize);
+                    let slen = crate::ec::shard_len(len as usize, k);
+                    let mut shards: Vec<Option<Vec<u8>>> = vec![None; replicas.len()];
+                    let mut have = 0usize;
+                    for i in 0..replicas.len() {
+                        if have >= k {
+                            break;
+                        }
+                        if bad.contains(&i) {
+                            continue;
+                        }
+                        if let Some(s) = fetch_block(&addrs, replicas[i], hash) {
+                            if s.len() == slen {
+                                shards[i] = Some(s);
+                                have += 1;
+                            }
+                        }
+                    }
+                    if have < k || shards.len() != k + m {
+                        report.deferred += 1;
+                        continue;
+                    }
+                    let mut bytes = 0u64;
+                    let ok = bad.iter().all(|&i| {
+                        match crate::ec::rebuild_shard(k, m, &shards, len as usize, i) {
+                            Ok(shard) => {
+                                let put = put_block(&addrs, new_replicas[i], hash, shard);
+                                if put {
+                                    bytes += slen as u64;
+                                }
+                                put
+                            }
+                            Err(_) => false,
+                        }
+                    });
+                    if !ok {
+                        report.deferred += 1;
+                        continue;
+                    }
+                    bytes
+                }
+            };
+            // Publish the new homes through the same logged,
+            // quorum-gated path every other mutation takes (no-op when
+            // only in-place suspect copies were healed).
+            if new_replicas != replicas && !self.log_rehome(hash, &replicas, new_replicas) {
+                report.deferred += 1;
+                continue;
+            }
+            budget = budget.saturating_sub(moved.max(1));
+            report.bytes_moved += moved;
+            report.repaired += 1;
+            let mut sus = self.suspects.lock().unwrap();
+            for &i in &bad {
+                sus.remove(&(hash, replicas[i]));
+            }
+        }
+        report
+    }
+
+    /// Log + apply a [`Record::Rehome`] for `hash`, gated on the block
+    /// still holding `expect` (the repair moved bytes outside the
+    /// lock; a release or competing re-home in between voids the
+    /// plan), then push it through the quorum barrier.  False = not
+    /// acknowledged (the pass defers; stray copies are anti-entropy's
+    /// to reclaim).
+    fn log_rehome(&self, hash: Digest, expect: &[u32], new_replicas: Vec<u32>) -> bool {
+        let before = self.last_lsn();
+        let logged = {
+            let mut guard = self.inner.lock().unwrap();
+            let g = &mut *guard;
+            let now = self.now();
+            let unchanged = self
+                .blocks
+                .get_with(&hash, |e| e.replicas.as_slice() == expect)
+                .unwrap_or(false);
+            if !unchanged {
+                false
+            } else {
+                let mut freed = Vec::new();
+                let ok = self
+                    .log_apply(
+                        g,
+                        Record::Rehome {
+                            hash,
+                            replicas: new_replicas,
+                        },
+                        now,
+                        &mut freed,
+                    )
+                    .is_ok();
+                debug_assert!(freed.is_empty(), "rehome frees nothing");
+                ok
+            }
+        };
+        if !logged {
+            return false;
+        }
+        let appended = self.ship_tail_since(before);
+        appended.is_empty() || self.replicate_to_quorum(before, appended).is_ok()
+    }
+
+    /// One anti-entropy sweep (leader/solo only): fetch every node's
+    /// block inventory and reconcile it against the manager's block
+    /// table.  A copy the manager no longer accounts for — the hash
+    /// gone entirely (e.g. stranded by a GC batch abandoned at a
+    /// failed quorum barrier) or this node no longer among its homes
+    /// (re-homed by repair) — is deleted; a copy the manager expects
+    /// that the node lacks is marked suspect for the next scrub pass.
+    /// Metadata is never mutated: the sweep only moves the nodes
+    /// toward what the table already says.
+    pub fn anti_entropy(&self) -> AntiEntropyReport {
+        let mut report = AntiEntropyReport::default();
+        if !self.is_leader() {
+            return report;
+        }
+        let addrs: Vec<String> = {
+            let g = self.inner.lock().unwrap();
+            g.nodes.iter().map(|n| n.addr.clone()).collect()
+        };
+        for (id, addr) in addrs.iter().enumerate() {
+            let id = id as u32;
+            let Some(inventory) = list_blocks_on(addr) else {
+                continue; // unreachable: reconciled on a later pass
+            };
+            report.nodes_swept += 1;
+            let held: HashSet<Digest> = inventory.iter().copied().collect();
+            // Stale copies are decided UNDER the state lock and marked
+            // GC-in-flight before any delete goes out — the same
+            // discipline as commit-time GC, so an allocation racing
+            // this sweep waits instead of re-uploading into a pending
+            // delete.
+            let stale: Vec<Digest> = {
+                let _g = self.inner.lock().unwrap();
+                let mut inflight = self.gc_inflight.lock().unwrap();
+                inventory
+                    .into_iter()
+                    .filter(|h| {
+                        let keep = self
+                            .blocks
+                            .get_with(h, |e| e.replicas.contains(&id))
+                            .unwrap_or(false)
+                            // An in-flight GC batch already owns this
+                            // hash's deletes; don't double-claim it.
+                            || inflight.contains(h);
+                        if !keep {
+                            inflight.insert(*h);
+                        }
+                        !keep
+                    })
+                    .collect()
+            };
+            if !stale.is_empty() {
+                let freed: Vec<(Digest, Vec<u32>)> =
+                    stale.iter().map(|h| (*h, vec![id])).collect();
+                gc_delete(&freed, &addrs);
+                let mut inflight = self.gc_inflight.lock().unwrap();
+                for h in &stale {
+                    inflight.remove(h);
+                }
+                drop(inflight);
+                self.gc_done.notify_all();
+                report.stale_copies += stale.len() as u64;
+            }
+            // The reverse direction: copies the table expects here
+            // that the node lost go on the suspect list — the next
+            // scrub pass re-creates them from the surviving homes.
+            let mut missing = Vec::new();
+            self.blocks.for_each(|hash, b| {
+                if (b.refs > 0 || b.pins > 0)
+                    && b.replicas.contains(&id)
+                    && !held.contains(hash)
+                {
+                    missing.push(*hash);
+                }
+            });
+            if !missing.is_empty() {
+                report.missing_copies += missing.len() as u64;
+                let mut sus = self.suspects.lock().unwrap();
+                for h in missing {
+                    sus.insert((h, id));
+                }
+            }
+        }
+        report
+    }
+
+    /// Live-redundancy summary over committed/pinned blocks (what the
+    /// fault-injection tests and the repair bench assert on): a block
+    /// is *degraded* when any home is dead or suspect, *unreadable*
+    /// when fewer healthy homes remain than a read needs (one copy, or
+    /// k shards).
+    pub fn redundancy_report(&self) -> RedundancyReport {
+        let alive: Vec<u32> = {
+            let g = self.inner.lock().unwrap();
+            let now = self.now();
+            g.nodes
+                .iter()
+                .enumerate()
+                .filter(|(_, n)| {
+                    now.saturating_duration_since(n.last_beat) < self.heartbeat_timeout
+                })
+                .map(|(id, _)| id as u32)
+                .collect()
+        };
+        let suspects = self.suspects.lock().unwrap().clone();
+        let mut report = RedundancyReport::default();
+        self.blocks.for_each(|hash, b| {
+            if b.refs == 0 && b.pins == 0 {
+                return;
+            }
+            report.blocks += 1;
+            let up = b
+                .replicas
+                .iter()
+                .filter(|&&r| alive.contains(&r) && !suspects.contains(&(*hash, r)))
+                .count();
+            let need = match b.ec {
+                Some((k, _)) => k as usize,
+                None => 1,
+            };
+            if up < need {
+                report.unreadable += 1;
+            } else if up < b.replicas.len() {
+                report.degraded += 1;
+            } else {
+                report.fully_redundant += 1;
+            }
+        });
+        report
+    }
+}
+
+/// Fetch one block/shard copy from a node (bounded connect,
+/// content-addressed; `None` on any error — repair defers to a later
+/// pass rather than blocking).
+fn fetch_block(addrs: &[String], node: u32, hash: Digest) -> Option<Vec<u8>> {
+    let addr = addrs.get(node as usize)?;
+    let conn = Conn::connect_timeout(addr, Duration::from_secs(1)).ok()?;
+    let rc = conn.try_clone().ok()?;
+    let mut r = BufReader::new(rc);
+    let mut w = BufWriter::new(conn);
+    Msg::GetBlock { req: 0, hash }.write_to(&mut w).ok()?;
+    match Msg::read_from(&mut r).ok()?? {
+        Msg::Data { data, .. } => Some(data),
+        _ => None,
+    }
+}
+
+/// Put one repaired block/shard copy onto a node.
+fn put_block(addrs: &[String], node: u32, hash: Digest, data: Vec<u8>) -> bool {
+    let Some(addr) = addrs.get(node as usize) else {
+        return false;
+    };
+    let Ok(conn) = Conn::connect_timeout(addr, Duration::from_secs(1)) else {
+        return false;
+    };
+    let Ok(rc) = conn.try_clone() else {
+        return false;
+    };
+    let mut r = BufReader::new(rc);
+    let mut w = BufWriter::new(conn);
+    if (Msg::PutBlock { req: 0, hash, data }).write_to(&mut w).is_err() {
+        return false;
+    }
+    matches!(Msg::read_from(&mut r), Ok(Some(Msg::OkFor { .. })))
+}
+
+/// Fetch a node's full block inventory (`None` = unreachable).
+fn list_blocks_on(addr: &str) -> Option<Vec<Digest>> {
+    let conn = Conn::connect_timeout(addr, Duration::from_secs(1)).ok()?;
+    let rc = conn.try_clone().ok()?;
+    let mut r = BufReader::new(rc);
+    let mut w = BufWriter::new(conn);
+    Msg::ListBlocks.write_to(&mut w).ok()?;
+    match Msg::read_from(&mut r).ok()?? {
+        Msg::BlockList { hashes } => Some(hashes),
+        _ => None,
     }
 }
 
@@ -2879,6 +3549,7 @@ mod tests {
             hash: [i; 16],
             len: 100,
             replicas: vec![0],
+            ec: None,
         }
     }
 
@@ -2970,6 +3641,7 @@ mod tests {
             hash: [1; 16],
             len: 10,
             replicas: vec![0, 7], // node 7 does not exist
+            ec: None,
         };
         assert!(matches!(
             s.handle(Msg::CommitBlockMap {
@@ -2984,6 +3656,7 @@ mod tests {
             hash: [2; 16],
             len: 10,
             replicas: vec![],
+            ec: None,
         };
         assert!(matches!(
             s.handle(Msg::CommitBlockMap {
@@ -3062,6 +3735,7 @@ mod tests {
                 hash: [i; 16],
                 len: 10,
                 replicas: vec![picked[i as usize]],
+                ec: None,
             })
             .collect();
         s.handle(Msg::CommitBlockMap {
@@ -3092,6 +3766,177 @@ mod tests {
         let mut p = ReplicatedStripe::new(5);
         let set = p.place(&[7, 9]);
         assert_eq!(set.len(), 2);
+    }
+
+    #[test]
+    fn erasure_coded_validates_and_places_distinct_homes() {
+        assert!(ErasureCoded::new(0, 1).is_err(), "k >= 1");
+        assert!(ErasureCoded::new(1, 0).is_err(), "m >= 1");
+        assert!(
+            ErasureCoded::new(60, 10).is_err(),
+            "k + m must fit the wire bound"
+        );
+        let mut p = ErasureCoded::new(4, 2).unwrap();
+        assert_eq!(p.replication(), 6);
+        assert_eq!(p.ec(), Some((4, 2)));
+        let alive: Vec<u32> = (0..7).collect();
+        for _ in 0..10 {
+            let set = p.place(&alive);
+            assert_eq!(set.len(), 6);
+            let distinct: HashSet<u32> = set.iter().copied().collect();
+            assert_eq!(distinct.len(), 6, "one shard per node");
+        }
+    }
+
+    #[test]
+    fn alloc_under_ec_requires_k_plus_m_nodes_and_stamps_coding() {
+        let s = ManagerState::with_lease_timeout(
+            Box::new(ErasureCoded::new(2, 1).unwrap()),
+            Duration::from_secs(30),
+        );
+        join_nodes(&s, 2);
+        // 2 alive nodes cannot host 3 distinct shards: loud failure,
+        // not a silently-weakened placement.
+        let r = s.handle(Msg::AllocPlacement {
+            file: "f".into(),
+            lease: 0,
+            blocks: vec![BlockSpec { hash: [1; 16], len: 10 }],
+        });
+        assert!(matches!(r, Msg::Err(_)));
+        s.handle(Msg::NodeJoin {
+            addr: "127.0.0.1:3".into(),
+        });
+        let Msg::Placement { assignments } = s.handle(Msg::AllocPlacement {
+            file: "f".into(),
+            lease: 0,
+            blocks: vec![BlockSpec { hash: [1; 16], len: 10 }],
+        }) else {
+            panic!()
+        };
+        assert_eq!(assignments.len(), 1);
+        assert_eq!(assignments[0].ec, Some((2, 1)));
+        assert_eq!(assignments[0].replicas.len(), 3);
+        let distinct: HashSet<u32> = assignments[0].replicas.iter().copied().collect();
+        assert_eq!(distinct.len(), 3);
+    }
+
+    #[test]
+    fn dedup_returns_stored_coding_not_current_policy() {
+        // A block committed under ec:2,1 must dedup with ITS coding
+        // even when the manager's current policy is plain round-robin —
+        // the reader has to decode what is actually on the nodes.
+        let s = ManagerState::default();
+        join_nodes(&s, 3);
+        s.handle(Msg::CommitBlockMap {
+            file: "f".into(),
+            lease: 0,
+            blocks: vec![BlockMeta {
+                hash: [7; 16],
+                len: 10,
+                replicas: vec![0, 1, 2],
+                ec: Some((2, 1)),
+            }],
+        });
+        let Msg::Placement { assignments } = s.handle(Msg::AllocPlacement {
+            file: "g".into(),
+            lease: 0,
+            blocks: vec![BlockSpec { hash: [7; 16], len: 10 }],
+        }) else {
+            panic!()
+        };
+        assert!(!assignments[0].fresh, "committed block dedups");
+        assert_eq!(assignments[0].ec, Some((2, 1)), "stored coding wins");
+        assert_eq!(assignments[0].replicas, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn shipped_rehome_updates_block_and_file_maps() {
+        let s = ManagerState::default();
+        join_nodes(&s, 2);
+        s.handle(Msg::CommitBlockMap {
+            file: "f".into(),
+            lease: 0,
+            blocks: vec![meta(1)],
+        });
+        let lsn = s.last_lsn();
+        let rec = Record::Rehome {
+            hash: [1; 16],
+            replicas: vec![1],
+        };
+        s.apply_shipped(lsn + 1, &rec.encode()).unwrap();
+        let Msg::BlockMap { blocks, .. } = s.handle(Msg::GetBlockMap { file: "f".into() })
+        else {
+            panic!()
+        };
+        assert_eq!(blocks[0].replicas, vec![1], "file map re-homed");
+        let snap = s.snapshot_state();
+        assert_eq!(snap.blocks[0].replicas, vec![1], "block table re-homed");
+        // Re-homing a hash the table does not hold is a no-op (the
+        // repair raced a release) — not a panic, not a resurrection.
+        let gone = Record::Rehome {
+            hash: [9; 16],
+            replicas: vec![0],
+        };
+        s.apply_shipped(lsn + 2, &gone.encode()).unwrap();
+        assert_eq!(s.snapshot_state().blocks.len(), 1);
+    }
+
+    #[test]
+    fn redundancy_report_tracks_suspects_and_dead_nodes() {
+        let s = ManagerState::default();
+        join_nodes(&s, 2);
+        s.handle(Msg::CommitBlockMap {
+            file: "f".into(),
+            lease: 0,
+            blocks: vec![
+                BlockMeta { hash: [1; 16], len: 10, replicas: vec![0, 1], ec: None },
+                BlockMeta { hash: [2; 16], len: 10, replicas: vec![0, 1], ec: Some((1, 1)) },
+            ],
+        });
+        let r = s.redundancy_report();
+        assert_eq!((r.blocks, r.fully_redundant), (2, 2));
+        // A corruption report degrades one copy of block 1.
+        assert_eq!(
+            s.handle(Msg::ReportCorrupt { hash: [1; 16], node: 1 }),
+            Msg::Ok
+        );
+        let r = s.redundancy_report();
+        assert_eq!((r.fully_redundant, r.degraded, r.unreadable), (1, 1, 0));
+        // Node 1 misses the heartbeat window: both blocks degraded
+        // (each still readable from node 0 — one copy / k=1 shards).
+        s.advance_clock(Duration::from_secs(4));
+        s.handle(Msg::Heartbeat { node: 0 });
+        let r = s.redundancy_report();
+        assert_eq!((r.fully_redundant, r.degraded, r.unreadable), (0, 2, 0));
+        // Block 2's last healthy shard goes suspect: unreadable.
+        s.handle(Msg::ReportCorrupt { hash: [2; 16], node: 0 });
+        let r = s.redundancy_report();
+        assert_eq!((r.degraded, r.unreadable), (1, 1));
+    }
+
+    #[test]
+    fn scrub_detects_degraded_but_defers_without_sources() {
+        let s = ManagerState::default();
+        join_nodes(&s, 2);
+        s.handle(Msg::CommitBlockMap {
+            file: "f".into(),
+            lease: 0,
+            blocks: vec![BlockMeta { hash: [1; 16], len: 10, replicas: vec![0, 1], ec: None }],
+        });
+        let r = s.scrub_once();
+        assert_eq!((r.scanned, r.degraded, r.repaired), (1, 0, 0), "healthy: nothing to do");
+        // Node 1 dies.  The fixture nodes are closed loopback ports, so
+        // the repair's source fetch fails fast — the pass must defer
+        // (and leave metadata untouched), never half-repair.
+        s.advance_clock(Duration::from_secs(4));
+        s.handle(Msg::Heartbeat { node: 0 });
+        let r = s.scrub_once();
+        assert_eq!((r.degraded, r.repaired, r.deferred), (1, 0, 1));
+        let Msg::BlockMap { blocks, .. } = s.handle(Msg::GetBlockMap { file: "f".into() })
+        else {
+            panic!()
+        };
+        assert_eq!(blocks[0].replicas, vec![0, 1], "deferred repair mutates nothing");
     }
 
     #[test]
@@ -3552,8 +4397,8 @@ mod tests {
                     file: "f".into(),
                     lease,
                     blocks: vec![
-                        BlockMeta { hash: [1; 16], len: 10, replicas: vec![0] },
-                        BlockMeta { hash: [2; 16], len: 20, replicas: vec![1] },
+                        BlockMeta { hash: [1; 16], len: 10, replicas: vec![0], ec: None },
+                        BlockMeta { hash: [2; 16], len: 20, replicas: vec![1], ec: None },
                     ],
                 }),
                 Msg::Ok
@@ -3806,7 +4651,12 @@ mod tests {
                 file: "f".into(),
                 lease,
                 blocks: (0..16u8)
-                    .map(|i| BlockMeta { hash: [i; 16], len: 10, replicas: vec![(i % 2) as u32] })
+                    .map(|i| BlockMeta {
+                        hash: [i; 16],
+                        len: 10,
+                        replicas: vec![(i % 2) as u32],
+                        ec: None,
+                    })
                     .collect(),
             });
             let Msg::LeaseGrant { lease: rl, .. } = s.handle(Msg::OpenLease {

@@ -72,6 +72,17 @@
 //! [`Msg::NotLeader`], which [`Sai`] follows transparently.  See
 //! [`manager::ManagerState::set_consensus`] and the README's
 //! "Consensus & failover" section.
+//!
+//! Control-plane v6 (self-healing, PR 10): an
+//! [`ErasureCoded`](manager::ErasureCoded) placement policy stores
+//! blocks as `k` data + `m` parity shards ([`crate::ec`]) readable from
+//! any `k`; a leader-driven scrub/repair loop
+//! ([`manager::ManagerState::scrub_once`], `--scrub-interval`,
+//! `--repair-mbps`) re-creates lost copies and shards from the
+//! survivors; and an anti-entropy sweep
+//! ([`manager::ManagerState::anti_entropy`]) reconciles each node's
+//! held blocks against the metadata, deleting stranded copies and
+//! queueing missing ones for repair.
 
 pub mod cluster;
 pub mod duplex;
@@ -87,8 +98,9 @@ pub mod shard;
 pub use cluster::Cluster;
 pub use duplex::DuplexClient;
 pub use manager::{
-    policy_for, BlockStats, ConsensusOpts, Follower, Manager, ManagerState, PlacementPolicy,
-    ReplicatedStripe, Role, RoundRobinStripe, DEFAULT_LEASE_TIMEOUT,
+    policy_for, AntiEntropyReport, BlockStats, ConsensusOpts, ErasureCoded, Follower, Manager,
+    ManagerState, PlacementPolicy, RedundancyReport, ReplicatedStripe, Role, RoundRobinStripe,
+    ScrubReport, DEFAULT_LEASE_TIMEOUT,
 };
 pub use node::{NodeOpts, StorageNode};
 pub use reactor::{FrameHandler, Reactor, ReactorOpts, Replies};

@@ -154,6 +154,15 @@ impl NodeState {
                     bytes: b.values().map(|v| v.len() as u64).sum(),
                 }
             }
+            Msg::ListBlocks => {
+                // Full inventory for the manager's anti-entropy sweep.
+                // Sorted so sweeps are deterministic and two inventories
+                // of the same store compare equal.
+                let mut hashes: Vec<Digest> =
+                    self.blocks.lock().unwrap().keys().copied().collect();
+                hashes.sort_unstable();
+                Msg::BlockList { hashes }
+            }
             other => Msg::Err(format!("node: unexpected message {other:?}")),
         }
     }

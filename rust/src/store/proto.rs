@@ -47,6 +47,15 @@
 //! `Ok`/`Err`.  Manager frames — and the untagged node control messages
 //! ([`Msg::HasBlock`], [`Msg::DeleteBlock`], [`Msg::NodeStats`]), which
 //! stay strictly request/reply — are unchanged.
+//!
+//! Self-healing (tags ≥ 39): the manager's anti-entropy sweep pulls a
+//! node's full inventory ([`Msg::ListBlocks`] → [`Msg::BlockList`]) to
+//! reconcile against its block table, and readers report copies that
+//! failed verification ([`Msg::ReportCorrupt`]) so the scrub loop can
+//! re-establish redundancy.  Block metadata and placement assignments
+//! carry an optional `(k, m)` erasure-coding descriptor — `(0, 0)` on
+//! the wire means "plain replication", keeping old captures decodable
+//! in spirit while the byte layout gains two bytes per entry.
 
 use std::io::{Read, Write};
 
@@ -69,13 +78,31 @@ pub struct BlockMeta {
     pub len: u32,
     /// Ids of the storage nodes holding a copy of the block (the
     /// manager-assigned replica set; never empty in a committed map).
+    /// Under erasure coding, `replicas[i]` is the home of shard `i` —
+    /// positions are load-bearing and must never be reordered.
     pub replicas: Vec<u32>,
+    /// Erasure coding of this block (PR 10): `Some((k, m))` means each
+    /// replica holds one shard of a k-data + m-parity encoding (any k
+    /// reconstruct the block); `None` means each replica holds a full
+    /// copy.  Per-block, not cluster-global, so mixed-policy clusters
+    /// and cross-policy dedup stay correct.
+    pub ec: Option<(u8, u8)>,
 }
 
 impl BlockMeta {
     /// The preferred replica to read from (first in the set).
     pub fn primary(&self) -> Option<u32> {
         self.replicas.first().copied()
+    }
+
+    /// A plain replicated (non-erasure-coded) entry.
+    pub fn replicated(hash: Digest, len: u32, replicas: Vec<u32>) -> BlockMeta {
+        BlockMeta {
+            hash,
+            len,
+            replicas,
+            ec: None,
+        }
     }
 }
 
@@ -93,13 +120,20 @@ pub struct BlockSpec {
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Assignment {
     /// Node ids the block must be written to (fresh) or already lives
-    /// on (duplicate).
+    /// on (duplicate).  Under erasure coding `replicas[i]` is the home
+    /// of shard `i`.
     pub replicas: Vec<u32>,
     /// `true` if the manager had never seen this hash: the client must
     /// transfer the block to every replica.  `false` means the block is
     /// already stored (manager-side dedup) — CA clients skip the
     /// transfer, non-CA clients overwrite in place.
     pub fresh: bool,
+    /// Coding the client must apply: `Some((k, m))` → encode the block
+    /// into k+m shards and put shard `i` to `replicas[i]`; `None` →
+    /// put the full block to every replica.  On a dedup hit this echoes
+    /// the coding the block was *stored* under, which may differ from
+    /// the cluster's current policy.
+    pub ec: Option<(u8, u8)>,
 }
 
 /// One shipped write-ahead-log record in a [`Msg::WalRecords`] reply.
@@ -291,6 +325,10 @@ pub enum Msg {
     },
     /// Node statistics request.
     NodeStats,
+    /// Full inventory request (manager → node, anti-entropy sweep):
+    /// list every block hash the node currently holds.  Answered by
+    /// [`Msg::BlockList`].
+    ListBlocks,
 
     // ---- node -> client (data plane: tagged, pipelined) ----
     /// Block payload reply.
@@ -306,6 +344,12 @@ pub enum Msg {
         blocks: u64,
         /// Total payload bytes held.
         bytes: u64,
+    },
+    /// Inventory reply to [`Msg::ListBlocks`]: the hashes of every
+    /// block held, sorted (deterministic for tests and diffing).
+    BlockList {
+        /// Storage keys held by the node.
+        hashes: Vec<Digest>,
     },
     /// Tagged success acknowledgement (put ack on the pipelined data
     /// plane).
@@ -413,6 +457,18 @@ pub enum Msg {
         hint: String,
     },
 
+    // ---- client -> manager (scrub hints) ----
+    /// A reader found a copy whose payload failed its integrity check.
+    /// Volatile hint (never logged): the manager marks the (block,
+    /// node) pair suspect so the next scrub pass re-establishes
+    /// redundancy from the surviving copies.  Answered by [`Msg::Ok`].
+    ReportCorrupt {
+        /// The block whose copy failed verification.
+        hash: Digest,
+        /// The node that served the bad bytes.
+        node: u32,
+    },
+
     // ---- shared ----
     /// Success acknowledgement.
     Ok,
@@ -466,6 +522,9 @@ impl Msg {
             Msg::Replicate { .. } => 36,
             Msg::ReplicateAck { .. } => 37,
             Msg::NotLeader { .. } => 38,
+            Msg::ListBlocks => 39,
+            Msg::BlockList { .. } => 40,
+            Msg::ReportCorrupt { .. } => 41,
         }
     }
 
@@ -479,7 +538,12 @@ impl Msg {
                 p.extend_from_slice(&lease.to_le_bytes());
                 put_blocks(&mut p, blocks);
             }
-            Msg::ListFiles | Msg::NodeStats | Msg::NodeList | Msg::FetchSnapshot | Msg::Ok => {}
+            Msg::ListFiles
+            | Msg::NodeStats
+            | Msg::NodeList
+            | Msg::FetchSnapshot
+            | Msg::ListBlocks
+            | Msg::Ok => {}
             Msg::BlockMap { version, blocks } => {
                 p.extend_from_slice(&version.to_le_bytes());
                 put_blocks(&mut p, blocks);
@@ -505,6 +569,7 @@ impl Msg {
                 for a in assignments {
                     p.push(a.fresh as u8);
                     put_replicas(&mut p, &a.replicas);
+                    put_ec(&mut p, a.ec);
                 }
             }
             Msg::Nodes { nodes } => {
@@ -518,11 +583,15 @@ impl Msg {
             Msg::NodeJoin { addr } => put_str(&mut p, addr),
             Msg::NodeId { id } => p.extend_from_slice(&id.to_le_bytes()),
             Msg::Heartbeat { node } => p.extend_from_slice(&node.to_le_bytes()),
-            Msg::ReleaseBlocks { hashes } => {
+            Msg::ReleaseBlocks { hashes } | Msg::BlockList { hashes } => {
                 p.extend_from_slice(&(hashes.len() as u32).to_le_bytes());
                 for h in hashes {
                     p.extend_from_slice(h);
                 }
+            }
+            Msg::ReportCorrupt { hash, node } => {
+                p.extend_from_slice(hash);
+                p.extend_from_slice(&node.to_le_bytes());
             }
             Msg::PutBlock { req, hash, data } => {
                 p.extend_from_slice(&req.to_le_bytes());
@@ -694,14 +763,15 @@ impl Msg {
             }
             16 => {
                 let n = c.u32()? as usize;
-                if n > MAX_FRAME / 6 {
+                if n > MAX_FRAME / 8 {
                     return Err(Error::Proto(format!("assignment list too long: {n}")));
                 }
                 let mut assignments = Vec::with_capacity(n.min(4096));
                 for _ in 0..n {
                     let fresh = c.u8()? != 0;
                     let replicas = c.replicas()?;
-                    assignments.push(Assignment { replicas, fresh });
+                    let ec = c.ec()?;
+                    assignments.push(Assignment { replicas, fresh, ec });
                 }
                 Msg::Placement { assignments }
             }
@@ -810,6 +880,12 @@ impl Msg {
                 ok: c.u8()? != 0,
             },
             38 => Msg::NotLeader { hint: c.str()? },
+            39 => Msg::ListBlocks,
+            40 => Msg::BlockList { hashes: c.hashes()? },
+            41 => Msg::ReportCorrupt {
+                hash: c.digest()?,
+                node: c.u32()?,
+            },
             t => return Err(Error::Proto(format!("unknown tag {t}"))),
         };
         if c.i != p.len() {
@@ -913,7 +989,17 @@ pub(crate) fn put_blocks(p: &mut Vec<u8>, blocks: &[BlockMeta]) {
         p.extend_from_slice(&b.hash);
         p.extend_from_slice(&b.len.to_le_bytes());
         put_replicas(p, &b.replicas);
+        put_ec(p, b.ec);
     }
+}
+
+/// Two-byte erasure-coding descriptor: `k, m` with `(0, 0)` standing
+/// for "not coded" (plain replication) — `k == 0` with `m != 0` is
+/// meaningless and rejected on decode.
+pub(crate) fn put_ec(p: &mut Vec<u8>, ec: Option<(u8, u8)>) {
+    let (k, m) = ec.unwrap_or((0, 0));
+    p.push(k);
+    p.push(m);
 }
 
 /// A bounds-checked decode cursor over one frame's payload.  Shared
@@ -1008,9 +1094,20 @@ impl<'a> Cursor<'a> {
         Ok(out)
     }
 
+    /// The two-byte coding descriptor written by [`put_ec`].
+    pub(crate) fn ec(&mut self) -> Result<Option<(u8, u8)>> {
+        let k = self.u8()?;
+        let m = self.u8()?;
+        match (k, m) {
+            (0, 0) => Ok(None),
+            (0, m) => Err(Error::Proto(format!("bad ec code (0,{m})"))),
+            (k, m) => Ok(Some((k, m))),
+        }
+    }
+
     pub(crate) fn blocks(&mut self) -> Result<Vec<BlockMeta>> {
         let n = self.u32()? as usize;
-        if n > MAX_FRAME / 21 {
+        if n > MAX_FRAME / 23 {
             return Err(Error::Proto(format!("block list too long: {n}")));
         }
         let mut out = Vec::with_capacity(n.min(4096));
@@ -1019,6 +1116,7 @@ impl<'a> Cursor<'a> {
                 hash: self.digest()?,
                 len: self.u32()?,
                 replicas: self.replicas()?,
+                ec: self.ec()?,
             });
         }
         Ok(out)
@@ -1042,6 +1140,16 @@ mod tests {
             hash: [i; 16],
             len: 1000 + i as u32,
             replicas: vec![i as u32 % 4, (i as u32 + 1) % 4],
+            ec: None,
+        }
+    }
+
+    fn ec_meta(i: u8, k: u8, m: u8) -> BlockMeta {
+        BlockMeta {
+            hash: [i; 16],
+            len: 1000 + i as u32,
+            replicas: (0..(k + m) as u32).collect(),
+            ec: Some((k, m)),
         }
     }
 
@@ -1051,12 +1159,12 @@ mod tests {
         roundtrip(Msg::CommitBlockMap {
             file: "f".into(),
             lease: 42,
-            blocks: vec![meta(1), meta(2)],
+            blocks: vec![meta(1), meta(2), ec_meta(3, 4, 2)],
         });
         roundtrip(Msg::ListFiles);
         roundtrip(Msg::BlockMap {
             version: 7,
-            blocks: vec![meta(3)],
+            blocks: vec![meta(3), ec_meta(4, 2, 1)],
         });
         roundtrip(Msg::Files {
             files: vec![("x".into(), 1), ("y".into(), 2)],
@@ -1074,14 +1182,22 @@ mod tests {
                 Assignment {
                     replicas: vec![0, 2],
                     fresh: true,
+                    ec: None,
                 },
                 Assignment {
                     replicas: vec![1],
                     fresh: false,
+                    ec: None,
                 },
                 Assignment {
                     replicas: vec![],
                     fresh: false,
+                    ec: None,
+                },
+                Assignment {
+                    replicas: vec![0, 1, 2, 3, 4, 5],
+                    fresh: true,
+                    ec: Some((4, 2)),
                 },
             ],
         });
@@ -1233,6 +1349,30 @@ mod tests {
         roundtrip(Msg::NotLeader {
             hint: String::new(),
         });
+        roundtrip(Msg::ListBlocks);
+        roundtrip(Msg::BlockList {
+            hashes: vec![[1; 16], [2; 16]],
+        });
+        roundtrip(Msg::BlockList { hashes: vec![] });
+        roundtrip(Msg::ReportCorrupt {
+            hash: [0xCD; 16],
+            node: 3,
+        });
+    }
+
+    #[test]
+    fn rejects_parity_without_data_shards() {
+        // A coded descriptor of (0, m) with m != 0 is meaningless.
+        let mut p = Vec::new();
+        p.extend_from_slice(&8u64.to_le_bytes()); // version
+        p.extend_from_slice(&1u32.to_le_bytes()); // one block
+        p.extend_from_slice(&[0u8; 16]); // hash
+        p.extend_from_slice(&10u32.to_le_bytes()); // len
+        p.push(1); // one replica
+        p.extend_from_slice(&0u32.to_le_bytes());
+        p.push(0); // k = 0 ...
+        p.push(2); // ... but m = 2
+        assert!(Msg::decode(4, &p).is_err());
     }
 
     #[test]

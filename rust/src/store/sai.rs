@@ -40,6 +40,7 @@ use super::duplex::{closed, Block, DuplexClient};
 use super::proto::{Assignment, BlockMeta, BlockSpec, Msg};
 use super::session::{FileReader, FileWriter};
 use crate::config::{CaMode, ClientConfig};
+use crate::hash::Digest;
 use crate::hashgpu::HashEngine;
 use crate::net::{Conn, Shaper};
 use crate::{Error, Result};
@@ -89,6 +90,11 @@ pub struct WriteReport {
     /// coalescing queue (zero on dedicated engines) — the latency cost
     /// bought by `hash_linger_us` in exchange for deeper batches.
     pub hash_linger_secs: f64,
+    /// Replica/shard transfers that failed but were absorbed by the
+    /// block's redundancy budget (at least one copy — or `k` shards —
+    /// still landed; the scrub loop re-creates the rest).  Non-zero
+    /// means the committed file starts life under-redundant.
+    pub put_failures: u64,
 }
 
 impl WriteReport {
@@ -505,6 +511,15 @@ impl Sai {
         }
     }
 
+    /// Best-effort corruption report: tell the manager that `node`'s
+    /// copy (or shard) of `hash` was served but failed verification, so
+    /// the scrub loop re-creates it from the surviving copies.  Fire
+    /// and forget — the reader has already failed over; losing the
+    /// report only delays the repair until the next detection.
+    pub(super) fn report_corrupt(&self, hash: Digest, node: u32) {
+        let _ = self.manager_call(Msg::ReportCorrupt { hash, node });
+    }
+
     /// Ask the manager to place a batch of blocks for `file`, claiming
     /// them under the session's write `lease`.
     pub(super) fn alloc_placement(
@@ -610,6 +625,50 @@ impl Sai {
         // immediately — the duplex client errs eagerly.
         let mut rxs: Vec<(usize, Receiver<Result<Block>>)> = Vec::new();
         for (i, b) in blocks.iter().enumerate() {
+            if let Some((k, m)) = b.ec {
+                // Erasure-coded: a "copy" is one shard.  Ground truth
+                // is the block reconstructed from any k well-sized
+                // shards (verified by content hash), re-encoded; each
+                // held shard then either matches its expected bytes or
+                // is corrupt.  An unreconstructable block vouches for
+                // none of its shards.
+                let (k, m) = (k as usize, m as usize);
+                let n = k + m;
+                if b.replicas.len() != n {
+                    bad += b.replicas.len();
+                    continue;
+                }
+                let slen = crate::ec::shard_len(b.len as usize, k);
+                let got: Vec<Option<Vec<u8>>> = b
+                    .replicas
+                    .iter()
+                    .map(|&id| {
+                        self.node(id)
+                            .and_then(|nl| nl.get(b.hash))
+                            .and_then(|rx| rx.recv().map_err(|_| closed()).and_then(|r| r))
+                            .ok()
+                            .map(|d| d.as_ref().clone())
+                    })
+                    .collect();
+                let usable: Vec<Option<Vec<u8>>> = got
+                    .iter()
+                    .map(|s| s.clone().filter(|d| d.len() == slen))
+                    .collect();
+                match crate::ec::reconstruct(k, m, &usable, b.len as usize) {
+                    Ok(data) if self.engine.direct_hash(&data)? == b.hash => {
+                        let truth = crate::ec::encode(k, m, &data);
+                        for (s, t) in got.iter().zip(&truth) {
+                            if s.as_deref() == Some(t.as_slice()) {
+                                ok += 1;
+                            } else {
+                                bad += 1;
+                            }
+                        }
+                    }
+                    _ => bad += n,
+                }
+                continue;
+            }
             for &id in &b.replicas {
                 match self.node(id).and_then(|n| n.get(b.hash)) {
                     Ok(rx) => rxs.push((i, rx)),

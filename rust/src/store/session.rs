@@ -85,6 +85,27 @@ struct Inflight {
     ticket: DigestsTicket,
 }
 
+/// Per-block put-failure budget shared by all of one block's replica
+/// (or shard) transfers.  A redundant block's write survives losing
+/// some of its copies — all-or-nothing acking would turn any single
+/// node death into a failed write, defeating the redundancy the extra
+/// copies exist to provide.  The committed meta keeps the FULL planned
+/// replica set either way: the scrub loop re-creates whatever failed
+/// here.  `max_failures` is `replicas - 1` for replication (at least
+/// one copy must land) and `m` for `ec:k,m` (any `k` shards suffice).
+struct PutTolerance {
+    failed: AtomicU64,
+    max_failures: u64,
+}
+
+impl PutTolerance {
+    /// Record one failed copy; `true` while the block is still
+    /// recoverable (the failure is absorbed, not surfaced).
+    fn absorb(&self) -> bool {
+        self.failed.fetch_add(1, Ordering::Relaxed) < self.max_failures
+    }
+}
+
 /// Monotonic per-process counter feeding session claim tokens.
 static SESSION_SEQ: AtomicU64 = AtomicU64::new(0);
 
@@ -221,8 +242,8 @@ pub struct FileWriter<'a> {
     metas: Vec<BlockMeta>,
     /// Outstanding node-put acknowledgements, oldest first, each with
     /// the payload bytes it holds on the wire (one entry per replica
-    /// copy).
-    pending: VecDeque<(u64, Receiver<Result<()>>)>,
+    /// copy or shard) and its block's shared failure budget.
+    pending: VecDeque<(u64, Receiver<Result<()>>, Arc<PutTolerance>)>,
     /// Total unacknowledged put bytes — held at or under
     /// `ClientConfig::inflight_budget` by [`FileWriter::reclaim_to`].
     inflight_bytes: u64,
@@ -543,17 +564,50 @@ impl<'a> FileWriter<'a> {
         for ((data, digest), asg) in blocks.into_iter().zip(digests).zip(assignments) {
             let len = data.len();
             if asg.fresh || always_transfer {
-                // The payload moves into one shared allocation serving
-                // every replica — no copies on the transfer path.
-                let payload: Block = Arc::new(data);
-                for &id in &asg.replicas {
-                    let rx = self.sai.node(id)?.put(*digest, payload.clone())?;
-                    self.pending.push_back((len as u64, rx));
-                    self.inflight_bytes += len as u64;
+                match asg.ec {
+                    // Erasure coded: split into k data + m parity
+                    // shards; shard `i` goes to `replicas[i]` (the
+                    // replica list IS the shard order), all keyed by
+                    // the parent block's content hash.
+                    Some((k, m)) => {
+                        let (k, m) = (k as usize, m as usize);
+                        if asg.replicas.len() != k + m {
+                            return Err(Error::Proto(format!(
+                                "ec:{k},{m} assignment carries {} homes, need {}",
+                                asg.replicas.len(),
+                                k + m
+                            )));
+                        }
+                        let shards = crate::ec::encode(k, m, &data);
+                        let tol = Arc::new(PutTolerance {
+                            failed: AtomicU64::new(0),
+                            max_failures: m as u64,
+                        });
+                        let mut sent = 0u64;
+                        for (shard, &id) in shards.into_iter().zip(&asg.replicas) {
+                            let slen = shard.len() as u64;
+                            self.put_tolerant(id, *digest, Arc::new(shard), slen, &tol)?;
+                            sent += slen;
+                        }
+                        self.report.new_bytes += sent;
+                    }
+                    // Replicated / single copy: the payload moves into
+                    // one shared allocation serving every replica — no
+                    // copies on the transfer path.
+                    None => {
+                        let payload: Block = Arc::new(data);
+                        let tol = Arc::new(PutTolerance {
+                            failed: AtomicU64::new(0),
+                            max_failures: asg.replicas.len().saturating_sub(1) as u64,
+                        });
+                        for &id in &asg.replicas {
+                            self.put_tolerant(id, *digest, payload.clone(), len as u64, &tol)?;
+                        }
+                        self.report.new_bytes += (len * asg.replicas.len()) as u64;
+                    }
                 }
                 self.report.new_blocks += 1;
                 self.report.new_payload_bytes += len as u64;
-                self.report.new_bytes += (len * asg.replicas.len()) as u64;
                 self.report.replication = self.report.replication.max(asg.replicas.len());
             } else {
                 self.report.dup_blocks += 1;
@@ -562,9 +616,36 @@ impl<'a> FileWriter<'a> {
                 hash: *digest,
                 len: len as u32,
                 replicas: asg.replicas,
+                ec: asg.ec,
             });
         }
         self.reclaim_to(self.sai.cfg.inflight_budget as u64)
+    }
+
+    /// Issue one copy/shard put, absorbing the failure against the
+    /// block's budget when the node is unreachable (a dead link fails
+    /// here, before anything is on the wire; in-flight failures are
+    /// absorbed at ack time in [`FileWriter::reclaim_to`]).
+    fn put_tolerant(
+        &mut self,
+        id: u32,
+        digest: Digest,
+        payload: Block,
+        bytes: u64,
+        tol: &Arc<PutTolerance>,
+    ) -> Result<()> {
+        match self.sai.node(id).and_then(|n| n.put(digest, payload)) {
+            Ok(rx) => {
+                self.pending.push_back((bytes, rx, tol.clone()));
+                self.inflight_bytes += bytes;
+                Ok(())
+            }
+            Err(_) if tol.absorb() => {
+                self.report.put_failures += 1;
+                Ok(())
+            }
+            Err(e) => Err(e),
+        }
     }
 
     /// Await acks (oldest first) until at most `max_bytes` of put
@@ -581,9 +662,19 @@ impl<'a> FileWriter<'a> {
         // ack must land, even a hypothetical zero-length one the byte
         // count alone would never pop.
         while self.inflight_bytes > max_bytes || (max_bytes == 0 && !self.pending.is_empty()) {
-            let (len, rx) = self.pending.pop_front().expect("inflight accounting");
+            let (len, rx, tol) = self.pending.pop_front().expect("inflight accounting");
             self.inflight_bytes -= len;
-            rx.recv().map_err(|_| closed())??;
+            let res = rx.recv().map_err(|_| closed()).and_then(|r| r);
+            if let Err(e) = res {
+                // A failed copy is absorbed while its block's
+                // redundancy budget holds (a node died mid-write;
+                // remaining copies/shards still satisfy the floor) and
+                // fatal past it.
+                if !tol.absorb() {
+                    return Err(e);
+                }
+                self.report.put_failures += 1;
+            }
         }
         Ok(())
     }
@@ -603,7 +694,7 @@ impl Drop for FileWriter<'_> {
             // (claims a dead manager can't release lapse via lease
             // expiry once it restarts... or cost nothing if it never
             // does).
-            for (_, rx) in self.pending.drain(..) {
+            for (_, rx, _) in self.pending.drain(..) {
                 let _ = rx.recv_timeout(Duration::from_secs(5));
             }
             self.sai.drop_lease(self.lease);
@@ -767,6 +858,18 @@ impl<'a> FileReader<'a> {
             if !self.rxs.is_empty() && self.inflight_bytes + b.len as u64 > budget {
                 break;
             }
+            if b.ec.is_some() {
+                // Erasure-coded blocks need k shards gathered and
+                // decoded, not one whole copy — they take the coded
+                // path in `next_block_inner`.  A placeholder keeps the
+                // queue aligned with block order (and the budget
+                // honest about the decode working set).
+                self.rxs
+                    .push_back((u32::MAX, false, b.len as u64, std::sync::mpsc::channel().1));
+                self.inflight_bytes += b.len as u64;
+                self.next_fetch += 1;
+                continue;
+            }
             let primary = b.primary();
             let entry = b
                 .replicas
@@ -828,19 +931,108 @@ impl<'a> FileReader<'a> {
         Ok(())
     }
 
+    /// Degraded-capable erasure-coded read: gather any `k` of the
+    /// block's `k+m` shards (shard `i` lives on `replicas[i]`, keyed by
+    /// the parent block's hash), reconstruct, and verify the rebuilt
+    /// block's content hash.  Shards whose node is dead or whose copy
+    /// is the wrong size are skipped — losing up to `m` of them is the
+    /// redundancy working as designed, counted as one failover per
+    /// block, with wrong-size (served-but-bad) copies reported to the
+    /// manager for repair.  Fewer than `k` reachable shards is a hard
+    /// error.
+    fn read_coded(&mut self, meta: &BlockMeta, k: u8, m: u8) -> Result<Block> {
+        let (k, m) = (k as usize, m as usize);
+        let n = k + m;
+        if meta.replicas.len() != n {
+            return Err(Error::Node(format!(
+                "coded block carries {} homes for {n} shards",
+                meta.replicas.len()
+            )));
+        }
+        let slen = crate::ec::shard_len(meta.len as usize, k);
+        let mut shards: Vec<Option<Vec<u8>>> = vec![None; n];
+        let mut have = 0usize;
+        let mut skipped = 0usize;
+        for (i, &id) in meta.replicas.iter().enumerate() {
+            if have >= k {
+                break;
+            }
+            let got = self
+                .sai
+                .node(id)
+                .and_then(|nl| nl.get(meta.hash))
+                .and_then(|rx| rx.recv().map_err(|_| closed()).and_then(|r| r));
+            match got {
+                Ok(s) if s.len() == slen => {
+                    shards[i] = Some(s.as_ref().clone());
+                    have += 1;
+                }
+                Ok(_) => {
+                    // Served a wrong-size shard: a corrupt copy, not a
+                    // dead node — flag it for repair.
+                    self.sai.report_corrupt(meta.hash, id);
+                    skipped += 1;
+                }
+                Err(_) => skipped += 1,
+            }
+        }
+        if have < k {
+            return Err(Error::Node(format!(
+                "block {}: only {have} of the {k} shards needed are reachable \
+                 ({n} homes, {skipped} failed)",
+                self.next_read
+            )));
+        }
+        let data = crate::ec::reconstruct(k, m, &shards, meta.len as usize).map_err(Error::Node)?;
+        if self.sai.cfg.ca_mode != CaMode::None {
+            let th = self.sai.engine.direct_hash(&data)?;
+            if th != meta.hash {
+                return Err(Error::Node(
+                    "coded block failed its integrity check after reconstruction".into(),
+                ));
+            }
+        }
+        if skipped > 0 {
+            // Served degraded: shards were missing but the coding
+            // absorbed it.  One failover event per block, same meaning
+            // as the replicated path's count.
+            self.failovers += 1;
+        }
+        Ok(Arc::new(data))
+    }
+
     fn next_block_inner(&mut self) -> Result<Option<Block>> {
         if self.next_read >= self.blocks.len() {
             return Ok(None);
         }
         let (tried, rerouted, len, rx) = self.rxs.pop_front().expect("prefetch invariant");
         self.inflight_bytes -= len;
+        if let Some((k, m)) = self.blocks[self.next_read].ec {
+            drop(rx); // placeholder — no fetch was issued
+            let meta = self.blocks[self.next_read].clone();
+            let data = self.read_coded(&meta, k, m)?;
+            self.next_read += 1;
+            self.prefetch();
+            return Ok(Some(data));
+        }
         let primary = rx
             .recv()
             .map_err(|_| closed())
             .and_then(|r| r)
             .and_then(|data| {
-                self.check(&self.blocks[self.next_read], &data)?;
-                Ok(data)
+                match self.check(&self.blocks[self.next_read], &data) {
+                    Ok(()) => Ok(data),
+                    Err(e) => {
+                        // The node SERVED bytes that do not verify — a
+                        // corrupt copy, not a dead node.  Tell the
+                        // manager so the scrub loop re-creates it; this
+                        // reader meanwhile fails over.
+                        if tried != u32::MAX {
+                            self.sai.report_corrupt(self.blocks[self.next_read].hash, tried);
+                        }
+                        Err(e)
+                    }
+                }
             });
         let data = match primary {
             Ok(data) => {
@@ -861,9 +1053,16 @@ impl<'a> FileReader<'a> {
                         Ok(rx) => rx.recv().map_err(|_| closed()).and_then(|r| r),
                         Err(e) => Err(e),
                     };
-                    match res.and_then(|data| {
-                        self.check(&meta, &data)?;
-                        Ok(data)
+                    match res.and_then(|data| match self.check(&meta, &data) {
+                        Ok(()) => Ok(data),
+                        Err(e) => {
+                            // Served-but-unverifiable: flag the copy
+                            // for repair (transport failures are not
+                            // reported — liveness is the heartbeat's
+                            // job).
+                            self.sai.report_corrupt(meta.hash, id);
+                            Err(e)
+                        }
                     }) {
                         Ok(data) => {
                             found = Some(data);

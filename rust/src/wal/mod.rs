@@ -54,7 +54,7 @@ use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 use crate::hash::Digest;
-use crate::store::proto::{put_blocks, put_replicas, put_str, BlockMeta, Cursor, MAX_FRAME};
+use crate::store::proto::{put_blocks, put_ec, put_replicas, put_str, BlockMeta, Cursor, MAX_FRAME};
 use crate::{Error, Result};
 
 /// Durability knobs for a manager (`--data-dir`, `--wal-sync`,
@@ -87,8 +87,9 @@ const SEG_BYTES: u64 = 8 * 1024 * 1024;
 
 /// Magic prefix of a snapshot file.
 const SNAP_MAGIC: &[u8; 4] = b"GSNP";
-/// Snapshot format version.
-const SNAP_VERSION: u32 = 1;
+/// Snapshot format version.  v2 adds the per-block erasure-coding
+/// descriptor (two bytes per block-map entry and snapshot block).
+const SNAP_VERSION: u32 = 2;
 
 /// One typed manager mutation.  Every state change the manager makes —
 /// live or during replay — is one of these, applied through the single
@@ -154,6 +155,18 @@ pub enum Record {
         /// Address the node serves blocks on.
         addr: String,
     },
+    /// Replace a block's replica set (scrub/repair re-homed a lost or
+    /// corrupt copy onto a live node).  The new set was decided at log
+    /// time — replay installs it verbatim, like `Alloc`.  Applies to
+    /// the block table and every committed file map referencing the
+    /// block; a no-op if the block has since been released.
+    Rehome {
+        /// The repaired block.
+        hash: Digest,
+        /// The full new replica set (shard positions preserved under
+        /// erasure coding).
+        replicas: Vec<u32>,
+    },
 }
 
 impl Record {
@@ -167,6 +180,7 @@ impl Record {
             Record::ExpireLease { .. } => 6,
             Record::Alloc { .. } => 7,
             Record::NodeJoin { .. } => 8,
+            Record::Rehome { .. } => 9,
         }
     }
 
@@ -192,6 +206,10 @@ impl Record {
             Record::NodeJoin { id, addr } => {
                 p.extend_from_slice(&id.to_le_bytes());
                 put_str(&mut p, addr);
+            }
+            Record::Rehome { hash, replicas } => {
+                p.extend_from_slice(hash);
+                put_replicas(&mut p, replicas);
             }
         }
         p
@@ -226,6 +244,10 @@ impl Record {
                 id: c.u32()?,
                 addr: c.str()?,
             },
+            9 => Record::Rehome {
+                hash: c.digest()?,
+                replicas: c.replicas()?,
+            },
             t => return Err(Error::Proto(format!("wal: unknown record tag {t}"))),
         };
         c.finish(&format!("wal record {tag}"))?;
@@ -258,6 +280,9 @@ pub struct SnapBlock {
     pub pins: u64,
     /// Claim tag of the first allocator while uncommitted.
     pub placed_by: String,
+    /// Erasure coding: `Some((k, m))` → `replicas[i]` holds shard `i`;
+    /// `None` → full copies.
+    pub ec: Option<(u8, u8)>,
 }
 
 /// One live lease in a snapshot.
@@ -317,6 +342,7 @@ impl SnapshotState {
             p.extend_from_slice(&b.pending.to_le_bytes());
             p.extend_from_slice(&b.pins.to_le_bytes());
             put_str(&mut p, &b.placed_by);
+            put_ec(&mut p, b.ec);
         }
         p.extend_from_slice(&(self.nodes.len() as u32).to_le_bytes());
         for addr in &self.nodes {
@@ -360,7 +386,7 @@ impl SnapshotState {
             let v = c.u64()?;
             files.push((name, v, c.blocks()?));
         }
-        let nb = c.list_len(49, "snapshot blocks")?;
+        let nb = c.list_len(51, "snapshot blocks")?;
         let mut blocks = Vec::with_capacity(nb.min(4096));
         for _ in 0..nb {
             blocks.push(SnapBlock {
@@ -371,6 +397,7 @@ impl SnapshotState {
                 pending: c.u64()?,
                 pins: c.u64()?,
                 placed_by: c.str()?,
+                ec: c.ec()?,
             });
         }
         let nn = c.list_len(4, "snapshot nodes")?;
@@ -936,12 +963,19 @@ mod tests {
             hash: [7; 16],
             len: 123,
             replicas: vec![0, 2],
+            ec: None,
+        };
+        let coded = BlockMeta {
+            hash: [8; 16],
+            len: 4096,
+            replicas: vec![0, 1, 2, 3, 4, 5],
+            ec: Some((4, 2)),
         };
         let all = vec![
             Record::Commit {
                 file: "f".into(),
                 lease: 9,
-                blocks: vec![meta.clone()],
+                blocks: vec![meta.clone(), coded.clone()],
             },
             Record::Release {
                 hashes: vec![[1; 16], [2; 16]],
@@ -964,11 +998,19 @@ mod tests {
             Record::Alloc {
                 tag: "sess".into(),
                 lease: 0,
-                blocks: vec![meta],
+                blocks: vec![meta, coded],
             },
             Record::NodeJoin {
                 id: 3,
                 addr: "127.0.0.1:7071".into(),
+            },
+            Record::Rehome {
+                hash: [9; 16],
+                replicas: vec![2, 1, 5],
+            },
+            Record::Rehome {
+                hash: [0; 16],
+                replicas: vec![],
             },
         ];
         for r in all {
@@ -992,17 +1034,31 @@ mod tests {
                     hash: [1; 16],
                     len: 10,
                     replicas: vec![0],
+                    ec: None,
                 }],
             )],
-            blocks: vec![SnapBlock {
-                hash: [1; 16],
-                len: 10,
-                replicas: vec![0],
-                refs: 1,
-                pending: 2,
-                pins: 3,
-                placed_by: "s".into(),
-            }],
+            blocks: vec![
+                SnapBlock {
+                    hash: [1; 16],
+                    len: 10,
+                    replicas: vec![0],
+                    refs: 1,
+                    pending: 2,
+                    pins: 3,
+                    placed_by: "s".into(),
+                    ec: None,
+                },
+                SnapBlock {
+                    hash: [2; 16],
+                    len: 9000,
+                    replicas: vec![0, 1, 2],
+                    refs: 1,
+                    pending: 0,
+                    pins: 0,
+                    placed_by: String::new(),
+                    ec: Some((2, 1)),
+                },
+            ],
             nodes: vec!["a:1".into(), "b:2".into()],
             leases: vec![SnapLease {
                 id: 7,

@@ -16,7 +16,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use gpustore::config::{ClientConfig, ClusterConfig};
+use gpustore::config::{ClientConfig, ClusterConfig, Placement};
 use gpustore::hashgpu::{CpuEngine, WindowHashMode};
 use gpustore::net::Listener;
 use gpustore::store::{
@@ -1038,6 +1038,7 @@ fn blind_promotion_diverges_where_gated_promotion_refuses() {
         hash: [i; 16],
         len: 100,
         replicas: vec![0],
+        ec: None,
     };
     s.handle(Msg::CommitBlockMap {
         file: "seed".into(),
@@ -1105,4 +1106,217 @@ fn blind_promotion_diverges_where_gated_promotion_refuses() {
     Hiccup::heal("blind-f", primary.addr());
     Hiccup::heal("gated-f", primary.addr());
     Hiccup::heal(&gate_addr, primary.addr());
+}
+
+/// PR 10 (tentpole): a storage node dies with every put ack still in
+/// flight under `ec:2,1` placement.  The writer absorbs the lost shard
+/// (one failure per block is within the parity budget `m`) and COMMITS;
+/// a reader reconstructs every block byte-exact from the surviving
+/// shards (degraded reads); and one scrub pass re-encodes the lost
+/// shards onto the spare node, restoring full redundancy — all on the
+/// deterministic clock.
+#[test]
+fn ec_node_kill_mid_write_commits_reads_degraded_and_scrub_repairs() {
+    let mut cluster = Cluster::spawn(ClusterConfig {
+        nodes: 4,
+        link_bps: 1e9,
+        shape: false,
+        replication: 1,
+        placement: Some(Placement::Erasure { k: 2, m: 1 }),
+        lease_timeout: LEASE,
+        // 100 ms reply delay line: the kill lands while every ack is
+        // still in flight, so it is mid-write by construction.
+        node_rtt: Duration::from_millis(100),
+        ..ClusterConfig::default()
+    })
+    .unwrap();
+    let cfg = ClientConfig {
+        block_size: 64 * 1024,
+        write_buffer: 256 * 1024,
+        node_inflight: 16,
+        inflight_budget: 64 << 20,
+        ..ClientConfig::default()
+    };
+    let engine = Arc::new(CpuEngine::new(4, 4096, WindowHashMode::Rolling));
+    let sai = cluster.client(cfg, engine).unwrap();
+
+    // 2 MB = 32 blocks, each striped as 2 data + 1 parity shards over
+    // 3 of the 4 nodes.  Everything is enqueued before the kill.
+    let data = Rng::new(53).bytes(2 << 20);
+    let mut w = sai.create("ec.bin").unwrap();
+    w.write_all(&data).unwrap();
+    cluster.kill_node(1);
+
+    // close() drains the pipeline: each block lost at most the one
+    // shard homed on node 1 — within its parity budget — so the commit
+    // SUCCEEDS, reporting the absorbed failures.
+    let report = w.close().expect("one lost shard per block is survivable");
+    assert!(
+        report.put_failures > 0,
+        "the dead node's shards must have been absorbed, not ignored"
+    );
+
+    // Degraded read: blocks with a shard on the dead node reconstruct
+    // from any k survivors, byte-exact.
+    let mut r = sai.open("ec.bin").unwrap();
+    let mut got = Vec::new();
+    r.read_to_end(&mut got).unwrap();
+    assert_eq!(got, data, "degraded EC read must stay byte-exact");
+    assert!(
+        r.failover_count() > 0,
+        "blocks striped over the dead node must have read degraded"
+    );
+
+    // Let the manager see node 1 dead (heartbeat timeout, deterministic
+    // clock) and the survivors re-beat.
+    let s = cluster.manager().state();
+    s.advance_clock(Duration::from_secs(4));
+    wait_nodes_alive(&sai, 3);
+    let rep = s.redundancy_report();
+    assert!(rep.degraded > 0, "blocks on the dead node are under-redundant");
+    assert_eq!(rep.unreadable, 0, "k survivors keep every block readable");
+
+    // One scrub pass rebuilds every lost shard onto the spare node.
+    let sr = s.scrub_once();
+    assert!(sr.repaired > 0, "scrub must repair the degraded blocks: {sr:?}");
+    assert_eq!(sr.deferred, 0, "a spare node exists; nothing may defer: {sr:?}");
+    let rep = s.redundancy_report();
+    assert_eq!(
+        (rep.degraded, rep.unreadable, rep.fully_redundant),
+        (0, 0, rep.blocks),
+        "scrub must restore full redundancy"
+    );
+    // The repaired maps reference only live nodes, and the file still
+    // reads byte-exact (now without degradation).
+    let (_, map) = sai.get_block_map("ec.bin").unwrap();
+    assert!(
+        map.iter().all(|b| !b.replicas.contains(&1)),
+        "no committed replica may still point at the dead node"
+    );
+    assert_eq!(sai.read_file("ec.bin").unwrap(), data);
+}
+
+/// PR 10: the same node-kill-mid-write under `rep:2` replication.  The
+/// writer absorbs the lost copy (replicas - 1 failures are
+/// survivable), commits, the reader fails over to the surviving
+/// replica byte-exact, and one scrub pass re-replicates onto the spare
+/// nodes.
+#[test]
+fn replicated_node_kill_mid_write_commits_and_scrub_rereplicates() {
+    let mut cluster = Cluster::spawn(ClusterConfig {
+        nodes: 4,
+        link_bps: 1e9,
+        shape: false,
+        replication: 1,
+        placement: Some(Placement::Replicated(2)),
+        lease_timeout: LEASE,
+        node_rtt: Duration::from_millis(100),
+        ..ClusterConfig::default()
+    })
+    .unwrap();
+    let cfg = ClientConfig {
+        block_size: 64 * 1024,
+        write_buffer: 256 * 1024,
+        node_inflight: 16,
+        inflight_budget: 64 << 20,
+        ..ClientConfig::default()
+    };
+    let engine = Arc::new(CpuEngine::new(4, 4096, WindowHashMode::Rolling));
+    let sai = cluster.client(cfg, engine).unwrap();
+
+    let data = Rng::new(54).bytes(2 << 20);
+    let mut w = sai.create("rep.bin").unwrap();
+    w.write_all(&data).unwrap();
+    cluster.kill_node(1);
+
+    let report = w.close().expect("one lost copy of two is survivable");
+    assert!(report.put_failures > 0);
+
+    let mut r = sai.open("rep.bin").unwrap();
+    let mut got = Vec::new();
+    r.read_to_end(&mut got).unwrap();
+    assert_eq!(got, data, "replica failover must stay byte-exact");
+
+    let s = cluster.manager().state();
+    s.advance_clock(Duration::from_secs(4));
+    wait_nodes_alive(&sai, 3);
+    let rep = s.redundancy_report();
+    assert!(rep.degraded > 0);
+    assert_eq!(rep.unreadable, 0);
+
+    let sr = s.scrub_once();
+    assert!(sr.repaired > 0, "{sr:?}");
+    assert_eq!(sr.deferred, 0, "{sr:?}");
+    let rep = s.redundancy_report();
+    assert_eq!(
+        (rep.degraded, rep.unreadable, rep.fully_redundant),
+        (0, 0, rep.blocks)
+    );
+    let (_, map) = sai.get_block_map("rep.bin").unwrap();
+    assert!(map.iter().all(|b| !b.replicas.contains(&1)));
+    assert_eq!(sai.read_file("rep.bin").unwrap(), data);
+}
+
+/// PR 10 (satellite 1): the anti-entropy sweep reclaims the bounded
+/// leak PR 9 knowingly accepted.  A minority-stranded leader's failed
+/// overwrite abandons its GC batch (no deletes may run before the
+/// barrier commits); when that leader later wins the term back, its
+/// durable tail commits retroactively — the release is now real, but
+/// the node-side copies were never deleted.  The sweep reconciles each
+/// node's inventory against the metadata and deletes exactly those
+/// stranded copies, mutating no metadata.
+#[test]
+fn anti_entropy_reclaims_abandoned_gc_batch_leak() {
+    let dir = TempDir::new("anti-entropy");
+    let cluster = quorum_cluster(&dir);
+    let sai = client(&cluster);
+
+    // v1: 4 blocks, committed through the healthy quorum.
+    let v1 = Rng::new(101).bytes(4 * 64 * 1024);
+    sai.write_file("leak.bin", &v1).unwrap();
+    wait_until("v1 transfers", || cluster.storage_stats().0 == 4);
+    let before = cluster.storage_stats();
+
+    // Strand the leader in the minority; its overwrite-to-empty logs
+    // the release durably, fails the quorum barrier, and abandons the
+    // GC batch: no deletes.
+    Hiccup::isolate_manager(&cluster, 0);
+    let s0 = cluster.manager_at(0).state();
+    match s0.handle_replicated(Msg::CommitBlockMap {
+        file: "leak.bin".into(),
+        lease: 0,
+        blocks: vec![],
+    }) {
+        Msg::Err(e) => assert!(e.contains("no quorum"), "unexpected error: {e}"),
+        m => panic!("minority overwrite must fail loudly, got {m:?}"),
+    }
+    assert_eq!(cluster.storage_stats(), before, "abandoned batch must not delete");
+
+    // Heal and re-elect member 0: its longer durable log wins, and the
+    // heartbeat round commits the stranded release retroactively.
+    Hiccup::rejoin_manager(&cluster, 0);
+    Hiccup::elect(&cluster, 0);
+    wait_until("stranded tail commits retroactively", || {
+        cluster.tick_managers();
+        s0.commit_lsn() == s0.last_lsn()
+    });
+
+    // The leak is now manifest: metadata references nothing, yet all
+    // 4 copies still sit on the nodes.
+    assert_eq!(sai.read_file("leak.bin").unwrap(), Vec::<u8>::new());
+    assert_eq!(cluster.storage_stats(), before, "PR-9 leak: copies outlive release");
+
+    // One anti-entropy sweep reclaims exactly the stranded copies...
+    let lsn_before = s0.last_lsn();
+    let report = s0.anti_entropy();
+    assert_eq!(report.stale_copies, 4, "{report:?}");
+    assert_eq!(report.missing_copies, 0, "{report:?}");
+    assert_eq!(cluster.storage_stats().0, 0, "zero leaked copies after the sweep");
+    // ...and mutates no metadata: nothing logged, file still empty.
+    assert_eq!(s0.last_lsn(), lsn_before, "the sweep must not write metadata");
+    assert_eq!(sai.read_file("leak.bin").unwrap(), Vec::<u8>::new());
+
+    // Idempotent: a second sweep finds nothing.
+    let report = s0.anti_entropy();
+    assert_eq!((report.stale_copies, report.missing_copies), (0, 0));
 }

@@ -138,6 +138,11 @@ fn prop_proto_roundtrip() {
                     hash,
                     len: rng.next_u64() as u32,
                     replicas: (0..n_replicas).map(|_| rng.range(0, 8) as u32).collect(),
+                    ec: if rng.next_u64() % 2 == 0 {
+                        None
+                    } else {
+                        Some((1 + rng.range(0, 8) as u8, 1 + rng.range(0, 4) as u8))
+                    },
                 }
             })
             .collect();
@@ -184,6 +189,7 @@ fn prop_proto_roundtrip() {
                     .map(|b| Assignment {
                         replicas: b.replicas.clone(),
                         fresh: rng.next_u64() % 2 == 0,
+                        ec: b.ec,
                     })
                     .collect(),
             },
@@ -498,8 +504,9 @@ fn prop_proto_truncation_robustness() {
         hash: [i; 16],
         len: 64 + i as u32,
         replicas: vec![0, 1],
+        ec: None,
     };
-    // One representative per wire tag (1..=38), with non-empty payloads
+    // One representative per wire tag (1..=41), with non-empty payloads
     // wherever the message has any fields.
     let msgs = vec![
         Msg::GetBlockMap { file: "f".into() },
@@ -544,6 +551,7 @@ fn prop_proto_truncation_robustness() {
             assignments: vec![Assignment {
                 replicas: vec![0, 2],
                 fresh: true,
+                ec: Some((1, 1)),
             }],
         },
         Msg::NodeJoin { addr: "h:1".into() },
@@ -621,11 +629,19 @@ fn prop_proto_truncation_robustness() {
         Msg::NotLeader {
             hint: "10.0.0.1:7000".into(),
         },
+        Msg::ListBlocks,
+        Msg::BlockList {
+            hashes: vec![[24; 16], [25; 16]],
+        },
+        Msg::ReportCorrupt {
+            hash: [26; 16],
+            node: 3,
+        },
     ];
     // Every tag is represented exactly once.
     let mut tags: Vec<u8> = msgs.iter().map(|m| m.encode()[4]).collect();
     tags.sort_unstable();
-    assert_eq!(tags, (1..=38).collect::<Vec<u8>>(), "tag coverage");
+    assert_eq!(tags, (1..=41).collect::<Vec<u8>>(), "tag coverage");
 
     for m in &msgs {
         let frame = m.encode();
@@ -653,7 +669,7 @@ fn prop_proto_truncation_robustness() {
     // Fuzz: random payload bytes against every tag (including unknown
     // tags) must never panic.
     let mut rng = Rng::new(0xF00D);
-    for tag in 0..=39u8 {
+    for tag in 0..=42u8 {
         for _ in 0..50 {
             let n = rng.range(0, 128);
             let p = rng.bytes(n);
@@ -1203,6 +1219,7 @@ fn prop_recovered_manager_state_equals_pre_crash() {
                                 hash: s.hash,
                                 len: s.len,
                                 replicas: a.replicas.clone(),
+                                ec: a.ec,
                             });
                         }
                     }
@@ -1380,6 +1397,7 @@ fn prop_sharded_tables_equivalent_to_unsharded() {
                                 hash: s.hash,
                                 len: s.len,
                                 replicas: a.replicas.clone(),
+                                ec: a.ec,
                             });
                         }
                     }
@@ -1480,6 +1498,7 @@ fn prop_committed_prefixes_never_diverge() {
                                     hash,
                                     len: rng.range(1, 4096) as u32,
                                     replicas: vec![0],
+                                    ec: None,
                                 }],
                             }
                         }
